@@ -1,0 +1,67 @@
+//! Design-space exploration: Algorithm 1 generalizes to *any*
+//! accelerator structure (paper §4.4), so sweep PE-array shapes and
+//! scratchpad sizes around the Eyeriss point and report how GCONV-chain
+//! performance and data movement respond.
+//!
+//! Run: `cargo run --release --example accelerator_explorer`
+
+use gconv_chain::accel::configs::eyeriss;
+use gconv_chain::networks::mobilenet_block;
+use gconv_chain::report::{print_table, r2};
+use gconv_chain::sim::{simulate, ExecMode, SimOptions};
+
+fn main() {
+    let net = mobilenet_block(8, 32, 28);
+    let base = eyeriss();
+
+    // --- Sweep 1: array aspect ratio at constant 168 PEs. ---
+    let mut rows = Vec::new();
+    for (py, px) in [(4, 42), (6, 28), (12, 14), (14, 12), (28, 6), (42, 4)] {
+        let mut a = base.clone();
+        a.spatial[0].size = py;
+        a.spatial[1].size = px;
+        let r = simulate(&net, &a, SimOptions { mode: ExecMode::GconvChain, training: true });
+        rows.push(vec![
+            format!("{py}x{px}"),
+            format!("{:.3}", r.seconds * 1e3),
+            format!("{:.2e}", r.movement.gb_total()),
+            r2(r.utilization),
+        ]);
+    }
+    print_table(
+        "PE-array aspect ratio (168 PEs, MobileNet block)",
+        &["py x px", "ms/step", "GB words", "util"],
+        &rows,
+    );
+
+    // --- Sweep 2: KLS capacity (kernel reuse depth). ---
+    let mut rows = Vec::new();
+    for kls in [1usize, 16, 64, 224, 512, 1024] {
+        let mut a = base.clone();
+        a.ls.kls = kls;
+        let r = simulate(&net, &a, SimOptions { mode: ExecMode::GconvChain, training: true });
+        rows.push(vec![
+            kls.to_string(),
+            format!("{:.3}", r.seconds * 1e3),
+            format!("{:.2e}", r.movement.kernel),
+            format!("{:.2e}", r.movement.gb_total()),
+        ]);
+    }
+    print_table(
+        "KLS capacity sweep (kernel words/PE)",
+        &["KLS", "ms/step", "kernel words", "GB words"],
+        &rows,
+    );
+
+    // --- Sweep 3: input bus width (loading bound). ---
+    let mut rows = Vec::new();
+    for bw in [2usize, 4, 8, 16, 32] {
+        let mut a = base.clone();
+        a.bw.i = bw;
+        a.bw.o = bw;
+        a.bw.k = bw;
+        let r = simulate(&net, &a, SimOptions { mode: ExecMode::GconvChain, training: true });
+        rows.push(vec![bw.to_string(), format!("{:.3}", r.seconds * 1e3), r2(r.utilization)]);
+    }
+    print_table("GB bus width sweep (words/cycle)", &["bw", "ms/step", "util"], &rows);
+}

@@ -1,0 +1,69 @@
+//! Quickstart: compile a MobileNet block (Fig. 1(a)) into a GCONV chain,
+//! map it onto Eyeriss with Algorithm 1, and compare the baseline
+//! execution model against GCONV Chain.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gconv_chain::accel::configs::eyeriss;
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::mapping::{fuse_chain, map_gconv, MapMode};
+use gconv_chain::networks::mobilenet_block;
+use gconv_chain::report::{print_table, r2};
+use gconv_chain::sim::{simulate, ExecMode, SimOptions};
+
+fn main() {
+    // 1. A network in the layer IR (depthwise → BN → ReLU → pointwise →
+    //    BN → ReLU — the Fig. 1(a) block).
+    let net = mobilenet_block(8, 32, 28);
+    println!("network: {} ({} layers)", net.name, net.len());
+
+    // 2. Lower to the GCONV chain (training = FP + BP + WG) and fuse.
+    let mut chain = lower_network(&net, Mode::Training);
+    println!("\nGCONV chain before fusion: {} ops", chain.len());
+    let stats = fuse_chain(&mut chain);
+    println!(
+        "after operation fusion:    {} ops (-{:.0}%)",
+        chain.len(),
+        100.0 * stats.length_reduction()
+    );
+    for e in chain.entries().iter().take(8) {
+        println!("  [{}] {}", e.phase, e.op);
+    }
+    println!("  ...");
+
+    // 3. Map one GCONV with Algorithm 1 and show the unrolling lists
+    //    (the Fig. 9 view).
+    let accel = eyeriss();
+    let conv = &chain.entries().iter().find(|e| e.op.name.contains("conv_pw")).unwrap().op;
+    let m = map_gconv(conv, &accel, MapMode::Gconv);
+    println!("\nAlgorithm-1 mapping of `{}` on {}:", conv.name, accel.full_name);
+    for (axis, entries) in m.spatial.iter().enumerate() {
+        let list: Vec<String> =
+            entries.iter().map(|e| format!("[{},{},{}]", e.param, e.dim, e.factor)).collect();
+        println!("  spatial {}: {}", accel.spatial[axis].name, list.join(" "));
+    }
+    let list: Vec<String> =
+        m.temporal.iter().map(|e| format!("[{},{},{}]", e.param, e.dim, e.factor)).collect();
+    println!("  temporal:   {}", list.join(" "));
+    println!("  PEs occupied: {}/{}", m.occupied_pes(), accel.pes());
+
+    // 4. Simulate baseline vs GCONV Chain.
+    let rows: Vec<Vec<String>> = [ExecMode::Baseline, ExecMode::GconvChain]
+        .into_iter()
+        .map(|mode| {
+            let r = simulate(&net, &accel, SimOptions { mode, training: true });
+            vec![
+                format!("{mode:?}"),
+                format!("{:.3}", r.seconds * 1e3),
+                format!("{:.2e}", r.movement.gb_total()),
+                format!("{:.2e}", r.movement.offload),
+                r2(r.utilization),
+            ]
+        })
+        .collect();
+    print_table(
+        "MobileNet block on Eyeriss",
+        &["mode", "ms/step", "GB words", "offload words", "util"],
+        &rows,
+    );
+}

@@ -1,0 +1,76 @@
+//! Training through the GCONV chain: drive the Table-2 batch-norm
+//! FP+BP artifact over a stream of synthetic mini-batches and verify the
+//! analytic gradient invariants hold at every step — the chain's
+//! backward pass is real autodiff-grade math, not a simulator estimate.
+//!
+//! Run: `make artifacts && cargo run --release --example train_bn_gconv`
+
+use gconv_chain::prop::Rng;
+use gconv_chain::runtime::{literal_f32, to_vec_f32, Runtime};
+
+fn main() {
+    let Ok(mut rt) = Runtime::cpu("artifacts") else {
+        eprintln!("PJRT unavailable");
+        return;
+    };
+    if !rt.available("bn_train") {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+
+    let (b, c, hw) = (8usize, 32usize, 8usize);
+    let n = b * c * hw * hw;
+    let feat = c * hw * hw;
+    let dims = [b as i64, c as i64, hw as i64, hw as i64];
+    let mut rng = Rng::new(123);
+
+    println!("step | ||x||      ||gI||     max|mean|  max|var-1|  sum(gI)   <gI,O>");
+    for step in 0..10 {
+        // Synthetic data drifts over steps (scale grows) — BN must keep
+        // normalizing regardless.
+        let scale = 1.0 + step as f32 * 0.5;
+        let x: Vec<f32> = (0..n).map(|_| (rng.f64() as f32 - 0.5) * scale).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+        let out = rt
+            .execute("bn_train", &[literal_f32(&x, &dims).unwrap(), literal_f32(&g, &dims).unwrap()])
+            .unwrap();
+        let o = to_vec_f32(&out[0]).unwrap();
+        let gi = to_vec_f32(&out[1]).unwrap();
+
+        // Per-feature invariants (spot-checked on a stride of features).
+        let mut max_mean = 0f64;
+        let mut max_var = 0f64;
+        let mut max_sum = 0f64;
+        let mut max_dot = 0f64;
+        for f in (0..feat).step_by(61) {
+            let (mut m, mut v, mut s, mut d) = (0f64, 0f64, 0f64, 0f64);
+            for bi in 0..b {
+                m += o[bi * feat + f] as f64;
+                s += gi[bi * feat + f] as f64;
+                d += (gi[bi * feat + f] * o[bi * feat + f]) as f64;
+            }
+            m /= b as f64;
+            for bi in 0..b {
+                v += (o[bi * feat + f] as f64 - m).powi(2);
+            }
+            v /= b as f64;
+            max_mean = max_mean.max(m.abs());
+            max_var = max_var.max((v - 1.0).abs());
+            max_sum = max_sum.max(s.abs());
+            max_dot = max_dot.max(d.abs());
+        }
+        let norm = |v: &[f32]| (v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
+        println!(
+            "{step:>4} | {:>9.3} {:>9.3}  {:>9.2e} {:>9.2e} {:>9.2e} {:>9.2e}",
+            norm(&x),
+            norm(&gi),
+            max_mean,
+            max_var,
+            max_sum,
+            max_dot
+        );
+        assert!(max_mean < 1e-3 && max_var < 5e-2, "BN forward broke at step {step}");
+        assert!(max_sum < 1e-2 && max_dot < 1e-2, "BN backward broke at step {step}");
+    }
+    println!("\nall gradient invariants held across 10 training steps ✓");
+}

@@ -1,0 +1,79 @@
+//! Whole-life cost walk-through (paper §6.6): development cost versus
+//! update count (Fig. 20) and total cost of ownership versus years of
+//! deployment (Fig. 21), with the energy-efficiency inputs measured by
+//! the simulator rather than assumed.
+//!
+//! Run: `cargo run --release --example whole_life_cost`
+
+use gconv_chain::accel::configs::by_code;
+use gconv_chain::accel::gpu::GpuModel;
+use gconv_chain::cost::dev::{dev_cost, DevCostParams, Platform};
+use gconv_chain::cost::tco::{fig21_platforms, tco};
+use gconv_chain::networks::benchmark;
+use gconv_chain::report::print_table;
+use gconv_chain::sim::{simulate, ExecMode, SimOptions};
+
+/// MAC/J of a simulated platform, in GPU-relative units (GPU = 1).
+fn efficiency(net_code: &str, accel_code: &str, mode: ExecMode) -> f64 {
+    let net = benchmark(net_code);
+    let accel = by_code(accel_code);
+    let r = simulate(&net, &accel, SimOptions { mode, training: true });
+    // Energy model unit ≈ 1 pJ per 16-bit MAC; total work / total energy
+    // gives MAC/unit. The GPU model gives MAC/J; align units via the
+    // same 1 pJ scale.
+    let work: f64 = r.energy.compute; // = MACs × 1 unit
+    let macs_per_unit = work / r.energy.total();
+    let gpu = GpuModel::v100();
+    let gpu_macs_per_unit = gpu.macs_per_joule() * 1e-12; // 1 unit = 1 pJ
+    macs_per_unit / gpu_macs_per_unit
+}
+
+fn main() {
+    // --- Fig. 20: development cost. ---
+    let p = DevCostParams::default();
+    let mut rows = Vec::new();
+    for updates in [0usize, 2, 4, 6, 8, 10] {
+        let mut row = vec![updates.to_string()];
+        for pl in [Platform::Tip, Platform::GcCip, Platform::Lip] {
+            let (hw, sw) = dev_cost(&p, pl, updates);
+            row.push(format!("{:.0}k", (hw + sw) / 1e3));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Development cost vs updates (Fig. 20)",
+        &["updates", "TIP", "GC-CIP", "LIP"],
+        &rows,
+    );
+
+    // --- Fig. 21: TCO with simulator-measured efficiencies. ---
+    let gc = efficiency("MN", "ER", ExecMode::GconvChain);
+    let tip = efficiency("MN", "TPU", ExecMode::Baseline);
+    let lip = efficiency("MN", "DNNW", ExecMode::Baseline);
+    println!(
+        "\nmeasured energy efficiency vs GPU: GC-CIP {gc:.2}x, TIP {tip:.2}x, LIP {lip:.2}x"
+    );
+    let platforms = fig21_platforms(gc, tip, lip);
+    let mut rows = Vec::new();
+    for years in [1.0f64, 3.0, 5.0, 10.0] {
+        let mut row = vec![format!("{years:.0}y")];
+        for pf in &platforms {
+            row.push(format!("{:.1}k", tco(pf, years) / 1e3));
+        }
+        rows.push(row);
+    }
+    let headers: Vec<String> = std::iter::once("horizon".to_string())
+        .chain(platforms.iter().map(|p| p.name.to_string()))
+        .collect();
+    print_table("Total cost of ownership (Fig. 21)", &headers, &rows);
+
+    let find = |n: &str| platforms.iter().find(|p| p.name == n).unwrap();
+    for years in [3.0, 10.0] {
+        let saving = 1.0 - tco(find("GC-CIP"), years) / tco(find("TIP"), years);
+        println!(
+            "GC-CIP vs TIP saving after {years:.0} years: {:.0}% (paper: {}%)",
+            100.0 * saving,
+            if years < 5.0 { 45 } else { 65 }
+        );
+    }
+}

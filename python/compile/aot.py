@@ -1,0 +1,109 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text — not ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 serializes HloModuleProto with 64-bit instruction ids
+which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shapes the artifacts are specialized for (the rust coordinator reads
+# these from the manifest).
+BLOCK_SHAPE = dict(batch=8, channels=16, hw=14)
+BN_SHAPE = dict(batch=8, channels=32, hw=8)
+GCONV_SHAPE = dict(batch=4, in_ch=8, out_ch=16, hw=12, k=3)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def artifacts():
+    """(name, jitted fn, example arg specs, metadata) for every artifact."""
+    b, c, hw = BLOCK_SHAPE["batch"], BLOCK_SHAPE["channels"], BLOCK_SHAPE["hw"]
+    bb, bc, bhw = BN_SHAPE["batch"], BN_SHAPE["channels"], BN_SHAPE["hw"]
+    g = GCONV_SHAPE
+    return [
+        (
+            "mobilenet_block",
+            model.mobilenet_block,
+            [spec(b, c, hw, hw), spec(c, 1, 3, 3), spec(2 * c, c, 1, 1)],
+            {
+                "inputs": [[b, c, hw, hw], [c, 1, 3, 3], [2 * c, c, 1, 1]],
+                "outputs": [[b, 2 * c, hw, hw]],
+                **BLOCK_SHAPE,
+            },
+        ),
+        (
+            "bn_train",
+            model.bn_train_tuple,
+            [spec(bb, bc, bhw, bhw), spec(bb, bc, bhw, bhw)],
+            {
+                "inputs": [[bb, bc, bhw, bhw]] * 2,
+                "outputs": [[bb, bc, bhw, bhw]] * 2,
+                **BN_SHAPE,
+            },
+        ),
+        (
+            "gconv_generic",
+            model.gconv_step,
+            [
+                spec(g["batch"], g["in_ch"], g["hw"], g["hw"]),
+                spec(g["out_ch"], g["in_ch"], g["k"], g["k"]),
+            ],
+            {
+                "inputs": [
+                    [g["batch"], g["in_ch"], g["hw"], g["hw"]],
+                    [g["out_ch"], g["in_ch"], g["k"], g["k"]],
+                ],
+                "outputs": [[g["batch"], g["out_ch"], g["hw"], g["hw"]]],
+                **g,
+            },
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, specs, meta in artifacts():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""L1: the GCONV compute hot-spot as Pallas kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+spatial ASIC PE arrays, so the TPU mapping keeps its core insight —
+schedule the HBM↔on-chip traffic so overlap-reuse is exploited — but
+expresses it the TPU way: each grid step owns one `(batch, output-row)`
+tile, the `BlockSpec` index map slides a `KH`-row input stripe into VMEM
+(the scratchpad analogue of the paper's ILS, loading `stride` new rows
+per step exactly like Fig. 8(a)'s primitive), and the channel reduction
+feeds the MXU through a `dot_general` when `main/reduce` is the classic
+multiply/accumulate.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO for both the pytest
+oracle checks and the AOT artifacts; real-TPU efficiency is *estimated*
+from the BlockSpec footprint in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Operator tables mirror kernels.ref; kept tiny and static so the kernel
+# specializes at trace time (the paper's PEs select main/reduce by a
+# decoded instruction field, Fig. 11(b)).
+_PRE = {
+    None: lambda x: x,
+    "square": lambda x: x * x,
+    "relu": lambda x: jnp.maximum(x, 0),
+}
+_MAIN = {
+    "mul": lambda x, k: x * k,
+    "add": lambda x, k: x + k,
+    "sub": lambda x, k: x - k,
+    "pass": lambda x, k: x,
+}
+_POST = {
+    None: lambda y: y,
+    "relu": lambda y: jnp.maximum(y, 0),
+    "sigmoid": lambda y: 1.0 / (1.0 + jnp.exp(-y)),
+}
+
+
+def _out_size(n, ks, stride, pad):
+    return (n + 2 * pad - ks) // stride + 1
+
+
+def _gconv2d_kernel(
+    x_ref, k_ref, o_ref, *, stride, kh, kw, ow, groups, pre, main, reduce
+):
+    """One grid step: one batch sample × one output row.
+
+    x_ref: [1, C, H_pad, W_pad] sample view; the kernel slices the
+    KH-row stripe for its output row (`stride` new rows per step — the
+    Fig. 8(a) overlap primitive); k_ref: [O, Cg, KH, KW]; o_ref: [1, O, 1, OW].
+    """
+    row = pl.program_id(1)
+    xf = x_ref[0]  # [C, H_pad, W_pad]
+    stripe = jax.lax.dynamic_slice(
+        xf, (0, row * stride, 0), (xf.shape[0], kh, xf.shape[2])
+    )
+    x = _PRE[pre](stripe)  # [C, KH, W_pad]
+    k = k_ref[...]  # [O, Cg, KH, KW]
+    o, cg = k.shape[0], k.shape[1]
+    og = o // groups
+
+    fast_path = main == "mul" and reduce == "add"
+    acc = None
+    for kx in range(kw):
+        # Strided W window for this kernel column: [C, KH, OW].
+        xs = jax.lax.slice(
+            x, (0, 0, kx), (x.shape[0], kh, kx + (ow - 1) * stride + 1), (1, 1, stride)
+        )
+        if groups == 1:
+            if fast_path:
+                # MXU path: contract (C, KH) — a [O, C*KH] x [C*KH, OW]
+                # matmul per kernel column.
+                term = jnp.einsum("ckw,ock->ow", xs, k[:, :, :, kx])
+            else:
+                t = _MAIN[main](xs[None, :, :, :], k[:, :, :, kx][:, :, :, None])
+                t = jnp.broadcast_to(t, (o,) + t.shape[1:])
+                term = t.sum((1, 2)) if reduce == "add" else t.max((1, 2))
+        else:
+            # Grouped path; the depthwise case (groups == C) reduces to a
+            # per-channel multiply — the VPU path.
+            xs_g = xs.reshape(groups, cg, kh, xs.shape[2])
+            k_g = k[:, :, :, kx].reshape(groups, og, cg, kh)
+            if fast_path:
+                term = jnp.einsum("gckw,gock->gow", xs_g, k_g).reshape(o, -1)
+            else:
+                t = _MAIN[main](xs_g[:, None], k_g[..., None])
+                t = jnp.broadcast_to(t, (groups, og) + t.shape[2:])
+                red = t.sum((2, 3)) if reduce == "add" else t.max((2, 3))
+                term = red.reshape(o, -1)
+        if acc is None:
+            acc = term
+        elif reduce == "add":
+            acc = acc + term
+        else:
+            acc = jnp.maximum(acc, term)
+    o_ref[...] = acc[None, :, None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "stride",
+        "pad",
+        "groups",
+        "pre",
+        "main",
+        "reduce",
+        "post",
+        "interpret",
+    ),
+)
+def gconv2d(
+    x,
+    k,
+    *,
+    stride=1,
+    pad=0,
+    groups=1,
+    pre=None,
+    main="mul",
+    reduce="add",
+    post=None,
+    interpret=True,
+):
+    """Pallas 2-D GCONV. Shapes as `kernels.ref.gconv2d_ref`."""
+    b, c, h, w = x.shape
+    o, cg, kh, kw = k.shape
+    assert cg == c // groups
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = _out_size(h, kh, stride, pad)
+    ow = _out_size(w, kw, stride, pad)
+    w_pad = x.shape[3]
+
+    kernel = functools.partial(
+        _gconv2d_kernel,
+        stride=stride,
+        kh=kh,
+        kw=kw,
+        ow=ow,
+        groups=groups,
+        pre=pre,
+        main=main,
+        reduce=reduce,
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, oh),
+        in_specs=[
+            # Each grid step sees one sample; the KH-row stripe (the
+            # sliding ILS window) is sliced in-kernel since BlockSpec
+            # index maps step in whole blocks, not `stride` rows.
+            pl.BlockSpec((1, c, x.shape[2], w_pad), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((o, cg, kh, kw), lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o, 1, ow), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o, oh, ow), x.dtype),
+        interpret=interpret,
+    )(x, k)
+    return _POST[post](y)
+
+
+def _batch_reduce_kernel(x_ref, o_ref, *, pre, reduce, scale):
+    x = _PRE[pre](x_ref[...])
+    y = x.sum(0) if reduce == "add" else x.max(0)
+    if scale is not None:
+        y = y * scale
+    o_ref[...] = y[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pre", "reduce", "scale", "interpret")
+)
+def batch_reduce(x, *, pre=None, reduce="add", scale=None, interpret=True):
+    """Pallas B-dimension GCONV reduction (BN FP1/FP3, Table 2).
+
+    x: [B, N] -> [N]. The N axis is tiled across the grid so each VMEM
+    block holds a [B, TN] slab (kernel-covers-input in B, per Fig. 5's
+    `[Nks: Nbs]`).
+    """
+    b, n = x.shape
+    tn = n if n <= 4096 else 4096
+    while n % tn:
+        tn -= 1
+    kernel = functools.partial(_batch_reduce_kernel, pre=pre, reduce=reduce, scale=scale)
+    y = pl.pallas_call(
+        kernel,
+        grid=(n // tn,),
+        in_specs=[pl.BlockSpec((b, tn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=interpret,
+    )(x)
+    return y[0]

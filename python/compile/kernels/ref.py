@@ -1,0 +1,128 @@
+"""Pure-jnp GCONV oracle.
+
+The reference semantics of the L1 Pallas kernels, written with plain
+jax.numpy broadcasting so it is obviously correct (if slow). Pytest +
+hypothesis compare `kernels.gconv_pallas` against these functions across
+shapes, strides, paddings, operators and dtypes.
+
+The 2-D GCONV primitive covers the paper's Fig. 5 pattern:
+
+    y[b, o, i, j] = reduce_{c, ky, kx}
+        main(x[b, g(o)*Cg + c, i*s + ky, j*s + kx], k[o, c, ky, kx])
+
+with pluggable `pre` (applied to x as loaded), `main`, `reduce` and
+`post` operators (paper §3.1 "Representability"), plus `groups` for the
+grouped/depthwise C-dimension (`Ng` in GCONV terms).
+"""
+
+import jax.numpy as jnp
+
+PRE_OPS = {
+    None: lambda x: x,
+    "square": lambda x: x * x,
+    "relu": lambda x: jnp.maximum(x, 0),
+}
+
+MAIN_OPS = {
+    "mul": lambda x, k: x * k,
+    "add": lambda x, k: x + k,
+    "sub": lambda x, k: x - k,
+    "pass": lambda x, k: x,
+}
+
+REDUCE_OPS = {
+    "add": lambda t, axes: t.sum(axes),
+    "max": lambda t, axes: t.max(axes),
+}
+
+POST_OPS = {
+    None: lambda y: y,
+    "relu": lambda y: jnp.maximum(y, 0),
+    "sigmoid": lambda y: 1.0 / (1.0 + jnp.exp(-y)),
+}
+
+
+def out_size(n, ks, stride, pad):
+    """Convolution output extent along one axis."""
+    return (n + 2 * pad - ks) // stride + 1
+
+
+def gconv2d_ref(
+    x,
+    k,
+    *,
+    stride=1,
+    pad=0,
+    groups=1,
+    pre=None,
+    main="mul",
+    reduce="add",
+    post=None,
+):
+    """Reference 2-D GCONV.
+
+    x: [B, C, H, W]; k: [O, C // groups, KH, KW] -> [B, O, OH, OW].
+    """
+    b, c, h, w = x.shape
+    o, cg, kh, kw = k.shape
+    assert c % groups == 0 and o % groups == 0
+    assert cg == c // groups, f"kernel C {cg} != {c}//{groups}"
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    x = PRE_OPS[pre](x)
+    oh = out_size(h, kh, stride, pad)
+    ow = out_size(w, kw, stride, pad)
+    og = o // groups
+
+    outs = []
+    for gi in range(groups):
+        xg = x[:, gi * cg : (gi + 1) * cg]  # [B, Cg, H', W']
+        kg = k[gi * og : (gi + 1) * og]  # [Og, Cg, KH, KW]
+        # Gather all windows: [B, Cg, KH, KW, OH, OW]
+        win = jnp.stack(
+            [
+                jnp.stack(
+                    [
+                        xg[
+                            :,
+                            :,
+                            ky : ky + (oh - 1) * stride + 1 : stride,
+                            kx : kx + (ow - 1) * stride + 1 : stride,
+                        ]
+                        for kx in range(kw)
+                    ],
+                    axis=2,
+                )
+                for ky in range(kh)
+            ],
+            axis=2,
+        )
+        # win: [B, Cg, KH, KW, OH, OW]; kg -> [1, Og, Cg, KH, KW, 1, 1]
+        t = MAIN_OPS[main](
+            win[:, None], kg[None, :, :, :, :, None, None]
+        )  # [B, Og, Cg, KH, KW, OH, OW]
+        # kernel-independent mains ("pass") don't broadcast over Og.
+        t = jnp.broadcast_to(t, (t.shape[0], og) + t.shape[2:])
+        y = REDUCE_OPS[reduce](t, (2, 3, 4))
+        outs.append(y)
+    y = jnp.concatenate(outs, axis=1)
+    return POST_OPS[post](y)
+
+
+def batch_reduce_ref(x, *, pre=None, reduce="add", scale=None):
+    """Reference B-dimension GCONV reduction (BN FP1/FP3 pattern).
+
+    x: [B, ...] -> [...] ; `scale` multiplies the result (e.g. 1/B).
+    """
+    t = PRE_OPS[pre](x)
+    y = REDUCE_OPS[reduce](t, 0)
+    if scale is not None:
+        y = y * scale
+    return y
+
+
+def batchnorm_ref(x, eps=1e-5):
+    """Reference batch normalization over the batch axis (Table 2 FP)."""
+    mu = x.mean(axis=0, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=0, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)

@@ -1,0 +1,105 @@
+"""L2: the paper's compute graphs as JAX functions over the L1 kernels.
+
+Everything here exists at *build* time only: `aot.py` lowers these jitted
+functions to HLO text once, and the rust coordinator executes the
+artifacts on PJRT. The functions implement the GCONV-chain semantics
+exactly as the rust compiler lowers them (Table 2 for batch
+normalization, Fig. 6 for the MobileNet block), so the numerics of the
+whole three-layer stack can be validated end to end.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gconv_pallas import batch_reduce, gconv2d
+
+EPS = 1e-5
+
+
+def bn_fp_chain(x):
+    """Batch normalization forward as the Table-2 GCONV chain FP1–FP4.
+
+    x: [B, C, H, W]. Returns (o, t1, t2) so BP can reuse the
+    intermediates, mirroring the chain's producer/consumer links.
+    """
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    # FP1: μ = Σ_b I / Nbs — a B-dimension GCONV reduction.
+    mu = batch_reduce(flat, reduce="add", scale=1.0 / b)
+    # FP2: t1 = I − μ (element-wise GCONV, kernel = FP1 output).
+    t1 = flat - mu[None]
+    # FP3: t2 = 1/sqrt(Σ t1²/Nbs + ε) — square pre + add reduce + LUT.
+    var = batch_reduce(t1, pre="square", reduce="add", scale=1.0 / b)
+    t2 = 1.0 / jnp.sqrt(var + EPS)
+    # FP4: O = t1 × t2.
+    o = t1 * t2[None]
+    return o.reshape(x.shape), t1, t2
+
+
+def bn_bp_chain(g_out, o, t1, t2):
+    """Batch normalization backward as Table-2 BP1–BP6.
+
+    g_out: [B, C, H, W] upstream gradient; (o, t1, t2) from the FP chain.
+    """
+    b = g_out.shape[0]
+    g = g_out.reshape(b, -1)
+    o_flat = o.reshape(b, -1)
+    # BP1: t3 = Σ_b O·gO / Nbs.
+    t3 = batch_reduce(g * o_flat, reduce="add", scale=1.0 / b)
+    # BP2: t4 = O × t3.
+    t4 = o_flat * t3[None]
+    # BP3: t5 = Σ_b gO / Nbs.
+    t5 = batch_reduce(g, reduce="add", scale=1.0 / b)
+    # BP4: t6 = gO − t5.
+    t6 = g - t5[None]
+    # BP5: t7 = t6 − t4.
+    t7 = t6 - t4
+    # BP6: gI = t7 × t2.
+    gi = t7 * t2[None]
+    return gi.reshape(g_out.shape)
+
+
+def bn_train(x, g_out):
+    """One BN training step through the GCONV chain: (O, gI)."""
+    o, t1, t2 = bn_fp_chain(x)
+    gi = bn_bp_chain(g_out, o, t1, t2)
+    return o, gi
+
+
+def mobilenet_block(x, dw_w, pw_w):
+    """The Fig. 1(a) MobileNet block as its GCONV chain (Fig. 6).
+
+    x: [B, C, H, W]; dw_w: [C, 1, 3, 3]; pw_w: [2C, C, 1, 1].
+    depthwise conv → BN → ReLU → pointwise conv → BN → ReLU, with the
+    convolutions running in the L1 Pallas GCONV kernel.
+    """
+    y = gconv2d(x, dw_w, stride=1, pad=1, groups=x.shape[1])
+    y, _, _ = bn_fp_chain(y)
+    y = jnp.maximum(y, 0.0)
+    y = gconv2d(y, pw_w, stride=1, pad=0, groups=1)
+    y, _, _ = bn_fp_chain(y)
+    return (jnp.maximum(y, 0.0),)
+
+
+def mobilenet_block_ref(x, dw_w, pw_w):
+    """Pure-jnp reference of the same block (no Pallas, no chain),
+    used by pytest to validate the chain numerics."""
+    from .kernels.ref import batchnorm_ref, gconv2d_ref
+
+    y = gconv2d_ref(x, dw_w, stride=1, pad=1, groups=x.shape[1])
+    y = batchnorm_ref(y.reshape(y.shape[0], -1)).reshape(y.shape)
+    y = jnp.maximum(y, 0.0)
+    y = gconv2d_ref(y, pw_w, stride=1, pad=0, groups=1)
+    y = batchnorm_ref(y.reshape(y.shape[0], -1)).reshape(y.shape)
+    return jnp.maximum(y, 0.0)
+
+
+def gconv_step(x, k):
+    """A single general convolution for the generic artifact: the shape
+    the quickstart example drives from rust."""
+    return (gconv2d(x, k, stride=1, pad=1, groups=1),)
+
+
+def bn_train_tuple(x, g_out):
+    """Tuple-returning wrapper for AOT lowering."""
+    o, gi = bn_train(x, g_out)
+    return (o, gi)

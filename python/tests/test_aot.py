@@ -1,0 +1,63 @@
+"""AOT pipeline: the lowered HLO text must exist (after `make artifacts`),
+parse as HLO, and the lowering itself must be reproducible in-process."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lowering_produces_hlo_text():
+    lowered = jax.jit(model.gconv_step).lower(
+        jax.ShapeDtypeStruct((2, 3, 8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((4, 3, 3, 3), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # return_tuple=True: the root computation returns a tuple.
+    assert "ROOT" in text
+
+
+def test_artifact_list_is_consistent():
+    names = [a[0] for a in aot.artifacts()]
+    assert names == ["mobilenet_block", "bn_train", "gconv_generic"]
+    for _, fn, specs, meta in aot.artifacts():
+        assert len(meta["inputs"]) == len(specs)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_artifacts_on_disk_match_manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, meta in manifest.items():
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        assert "HloModule" in head
+        assert meta["inputs"], name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_lowered_block_numerics_match_eager():
+    # The artifact function evaluated through jit equals the eager chain.
+    rng = np.random.default_rng(0)
+    b, c, hw = (aot.BLOCK_SHAPE[k] for k in ("batch", "channels", "hw"))
+    x = jnp.asarray(rng.normal(size=(b, c, hw, hw)).astype(np.float32))
+    dw = jnp.asarray(rng.normal(size=(c, 1, 3, 3)).astype(np.float32))
+    pw = jnp.asarray(rng.normal(size=(2 * c, c, 1, 1)).astype(np.float32))
+    (jitted,) = jax.jit(model.mobilenet_block)(x, dw, pw)
+    (eager,) = model.mobilenet_block(x, dw, pw)
+    np.testing.assert_allclose(jitted, eager, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas GCONV kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, strides, paddings, groups, operators and
+dtypes — the core correctness signal for the kernel layer.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gconv_pallas as gp
+from compile.kernels import ref
+
+settings.register_profile("kernel", max_examples=40, deadline=None)
+settings.load_profile("kernel")
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+@st.composite
+def conv_case(draw):
+    b = draw(st.integers(1, 3))
+    c = draw(st.integers(1, 6))
+    o = draw(st.integers(1, 6))
+    k = draw(st.integers(1, 3))
+    stride = draw(st.integers(1, 2))
+    pad = draw(st.integers(0, 1))
+    # input must cover the kernel
+    hw = draw(st.integers(max(k, 3), 10))
+    return b, c, o, k, stride, pad, hw
+
+
+@given(conv_case(), st.integers(0, 2**31 - 1))
+def test_gconv2d_matches_ref(case, seed):
+    b, c, o, k, stride, pad, hw = case
+    x = rand((b, c, hw, hw), np.float32, seed)
+    w = rand((o, c, k, k), np.float32, seed + 1)
+    got = gp.gconv2d(x, w, stride=stride, pad=pad)
+    want = ref.gconv2d_ref(x, w, stride=stride, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 2), st.integers(0, 2**31 - 1))
+def test_depthwise_matches_ref(b, c, stride, seed):
+    hw = 8
+    x = rand((b, c, hw, hw), np.float32, seed)
+    w = rand((c, 1, 3, 3), np.float32, seed + 1)
+    got = gp.gconv2d(x, w, stride=stride, pad=1, groups=c)
+    want = ref.gconv2d_ref(x, w, stride=stride, pad=1, groups=c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_grouped_conv(groups):
+    x = rand((2, 4, 8, 8), np.float32, 0)
+    w = rand((8, 4 // groups, 3, 3), np.float32, 1)
+    got = gp.gconv2d(x, w, pad=1, groups=groups)
+    want = ref.gconv2d_ref(x, w, pad=1, groups=groups)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("main", ["mul", "add", "sub", "pass"])
+@pytest.mark.parametrize("reduce", ["add", "max"])
+def test_operator_generality(main, reduce):
+    # §3.1 Representability: the same kernel runs non-multiply mains and
+    # max reductions (pooling, difference patterns).
+    x = rand((2, 3, 7, 7), np.float32, 2)
+    w = rand((4, 3, 3, 3), np.float32, 3)
+    got = gp.gconv2d(x, w, main=main, reduce=reduce)
+    want = ref.gconv2d_ref(x, w, main=main, reduce=reduce)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("pre", [None, "square", "relu"])
+@pytest.mark.parametrize("post", [None, "relu", "sigmoid"])
+def test_pre_post_operators(pre, post):
+    x = rand((1, 2, 6, 6), np.float32, 4)
+    w = rand((2, 2, 3, 3), np.float32, 5)
+    got = gp.gconv2d(x, w, pre=pre, post=post)
+    want = ref.gconv2d_ref(x, w, pre=pre, post=post)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_dtypes(dtype):
+    x = rand((2, 3, 6, 6), dtype, 6)
+    w = rand((4, 3, 3, 3), dtype, 7)
+    got = gp.gconv2d(x, w, pad=1)
+    want = ref.gconv2d_ref(x, w, pad=1)
+    tol = 1e-4 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@given(
+    st.integers(1, 8),
+    st.integers(1, 300),
+    st.sampled_from([None, "square"]),
+    st.sampled_from(["add", "max"]),
+    st.integers(0, 2**31 - 1),
+)
+def test_batch_reduce_matches_ref(b, n, pre, reduce, seed):
+    x = rand((b, n), np.float32, seed)
+    scale = 1.0 / b if reduce == "add" else None
+    got = gp.batch_reduce(x, pre=pre, reduce=reduce, scale=scale)
+    want = ref.batch_reduce_ref(x, pre=pre, reduce=reduce, scale=scale)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_1x1_conv_is_channel_mix():
+    # Pointwise conv (MobileNet): GCONV with no sliding dims.
+    x = rand((2, 8, 5, 5), np.float32, 8)
+    w = rand((16, 8, 1, 1), np.float32, 9)
+    got = gp.gconv2d(x, w)
+    want = jnp.einsum("bchw,oc->bohw", x, w[:, :, 0, 0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_covering_input_is_fc():
+    # §3.1: kernel size = input size models a tensor (FC) operation.
+    x = rand((2, 4, 6, 6), np.float32, 10)
+    w = rand((10, 4, 6, 6), np.float32, 11)
+    got = gp.gconv2d(x, w)
+    assert got.shape == (2, 10, 1, 1)
+    want = jnp.einsum("bchw,ochw->bo", x, w)[:, :, None, None]
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,79 @@
+"""L2 correctness: the GCONV-chain graphs vs reference implementations.
+
+The key claims: the Table-2 batch-normalization chain computes exactly
+batch normalization (forward AND backward — BP validated against
+jax.grad of the reference), and the Fig. 6 MobileNet-block chain matches
+a plain jnp implementation of the Fig. 1(a) block.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import batchnorm_ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(4, 3, 5, 5), (8, 16, 4, 4), (2, 1, 7, 3)])
+def test_bn_fp_chain_matches_reference(shape):
+    x = rand(shape, 0)
+    o, _, _ = model.bn_fp_chain(x)
+    want = batchnorm_ref(x.reshape(shape[0], -1)).reshape(shape)
+    np.testing.assert_allclose(o, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 3, 5, 5), (8, 8, 3, 3)])
+def test_bn_bp_chain_matches_jax_grad(shape):
+    # Table 2 BP1-BP6 must equal autodiff through the reference BN.
+    x = rand(shape, 1)
+    g_out = rand(shape, 2)
+
+    def ref_fn(x):
+        return batchnorm_ref(x.reshape(shape[0], -1)).reshape(shape)
+
+    _, vjp = jax.vjp(ref_fn, x)
+    want = vjp(g_out)[0]
+    _, gi = model.bn_train(x, g_out)
+    np.testing.assert_allclose(gi, want, rtol=1e-3, atol=1e-3)
+
+
+def test_bn_output_statistics():
+    # Normalized output: zero mean, unit variance over the batch.
+    x = rand((32, 8, 4, 4), 3) * 3.0 + 1.5
+    o, _, _ = model.bn_fp_chain(x)
+    flat = np.asarray(o).reshape(32, -1)
+    np.testing.assert_allclose(flat.mean(0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(flat.var(0), 1.0, atol=1e-2)
+
+
+def test_mobilenet_block_matches_reference():
+    b, c, hw = 4, 8, 10
+    x = rand((b, c, hw, hw), 4)
+    dw = rand((c, 1, 3, 3), 5)
+    pw = rand((2 * c, c, 1, 1), 6)
+    (got,) = model.mobilenet_block(x, dw, pw)
+    want = model.mobilenet_block_ref(x, dw, pw)
+    assert got.shape == (b, 2 * c, hw, hw)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_block_output_is_nonnegative():
+    # Final ReLU.
+    x = rand((2, 4, 6, 6), 7)
+    dw = rand((4, 1, 3, 3), 8)
+    pw = rand((8, 4, 1, 1), 9)
+    (y,) = model.mobilenet_block(x, dw, pw)
+    assert float(jnp.min(y)) >= 0.0
+
+
+def test_gconv_step_shapes():
+    x = rand((4, 8, 12, 12), 10)
+    k = rand((16, 8, 3, 3), 11)
+    (y,) = model.gconv_step(x, k)
+    assert y.shape == (4, 16, 12, 12)

@@ -1,0 +1,32 @@
+//! Ablation of the two chain optimizations (§4.3): operation fusion and
+//! consistent mapping.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::report::{print_table, r2};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn main() {
+    timed("ablation", || {
+        let mut rows = Vec::new();
+        for ncode in ["AN", "DN", "MN"] {
+            let n = net(ncode);
+            let full = run(&n, "ER", ExecMode::GconvChain);
+            let nofuse = run(&n, "ER", ExecMode::GconvNoFusion);
+            let nocons = run(&n, "ER", ExecMode::GconvNoConsistent);
+            rows.push(vec![
+                ncode.to_string(),
+                r2(nofuse.seconds / full.seconds),
+                r2(nofuse.energy.movement() / full.energy.movement()),
+                format!("{} -> {}", nofuse.chain_len, full.chain_len),
+                r2(nocons.seconds / full.seconds),
+            ]);
+        }
+        print_table(
+            "Chain-optimization ablation on Eyeriss (§4.3)",
+            &["net", "fusion speedup", "fusion movement", "chain len", "consistent speedup"],
+            &rows,
+        );
+        println!("paper: fusion 1.1x perf / 1.3x movement energy, -30% chain; exchange up to 3.9x loading");
+    });
+}

@@ -1,0 +1,37 @@
+//! Fig. 12: baseline latency breakdown — where each baseline loses time
+//! (traditional-only / non-traditional-only / all-busy / offload).
+#[path = "util.rs"]
+mod util;
+use gconv_chain::report::{pct, print_table};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn main() {
+    timed("fig12", || {
+        let mut rows = Vec::new();
+        for acode in ACCELS {
+            for ncode in NETS {
+                if !evaluated(ncode, acode) {
+                    continue;
+                }
+                let n = net(ncode);
+                let r = run(&n, acode, ExecMode::Baseline);
+                let t = r.seconds.max(f64::EPSILON);
+                rows.push(vec![
+                    format!("{acode}/{ncode}"),
+                    pct(r.breakdown.all_busy / t),
+                    pct(r.breakdown.trad_only / t),
+                    pct(r.breakdown.nontrad_only / t),
+                    pct(r.breakdown.offload / t),
+                    format!("{:.1}", r.seconds * 1e3),
+                ]);
+            }
+        }
+        print_table(
+            "Baseline latency breakdown (Fig. 12)",
+            &["accel/net", "all-busy", "trad-only", "non-trad", "offload", "total ms"],
+            &rows,
+        );
+        println!("paper: TPU all-busy ~31%, DNNW ~2%; EP offload ~43% of runtime");
+    });
+}

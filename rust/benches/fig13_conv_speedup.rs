@@ -1,0 +1,34 @@
+//! Fig. 13: speedup on the convolution layers only — the GCONV mapping
+//! must be no worse than each accelerator's native dataflow.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::report::{geomean, print_table, r2};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn main() {
+    timed("fig13", || {
+        let mut rows = Vec::new();
+        let mut all = Vec::new();
+        for ncode in NETS {
+            let n = net(ncode);
+            let mut row = vec![ncode.to_string()];
+            for acode in ACCELS {
+                if !evaluated(ncode, acode) {
+                    row.push("-".into());
+                    continue;
+                }
+                let b = run(&n, acode, ExecMode::Baseline);
+                let g = run(&n, acode, ExecMode::GconvChain);
+                let s = b.conv_seconds / g.conv_seconds;
+                all.push(s);
+                row.push(r2(s));
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["net".to_string()];
+        headers.extend(ACCELS.iter().map(|s| s.to_string()));
+        print_table("Convolution-layer speedup (Fig. 13)", &headers, &rows);
+        println!("average {:.2}x (paper: >= 1x everywhere; salient on MN & NLR)", geomean(&all));
+    });
+}

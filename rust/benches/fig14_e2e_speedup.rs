@@ -1,0 +1,37 @@
+//! Fig. 14: end-to-end speedup of GCONV Chain over every baseline.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::report::{geomean, print_table, r2};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn main() {
+    timed("fig14", || {
+        let mut rows = Vec::new();
+        let mut all = Vec::new();
+        for ncode in NETS {
+            let n = net(ncode);
+            let mut row = vec![ncode.to_string()];
+            for acode in ACCELS {
+                if !evaluated(ncode, acode) {
+                    row.push("-".into());
+                    continue;
+                }
+                let b = run(&n, acode, ExecMode::Baseline);
+                let g = run(&n, acode, ExecMode::GconvChain);
+                let s = b.seconds / g.seconds;
+                all.push(s);
+                row.push(r2(s));
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["net".to_string()];
+        headers.extend(ACCELS.iter().map(|s| s.to_string()));
+        print_table("End-to-end speedup over baseline (Fig. 14)", &headers, &rows);
+        println!(
+            "average {:.2}x, max {:.2}x   (paper: avg 3.4x, max 8.2x)",
+            geomean(&all),
+            all.iter().cloned().fold(0.0f64, f64::max)
+        );
+    });
+}

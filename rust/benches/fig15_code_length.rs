@@ -1,0 +1,58 @@
+//! Fig. 15: code length (instruction count) of GC-CIP vs LIP vs TIP.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::accel::baseline::tip_instruction_count;
+use gconv_chain::accel::configs::{eyeriss, tpu};
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::isa::chain_code_length;
+use gconv_chain::mapping::{fuse_chain, map_gconv, MapMode};
+use gconv_chain::report::{print_table, r2, si};
+use util::*;
+
+fn main() {
+    timed("fig15", || {
+        let er = eyeriss();
+        let tp = tpu();
+        // One coarse TIP matrix instruction (+ its loads/store) covers a
+        // GB-resident tile of ~1e8 MACs.
+        let tile = 100_000_000;
+        let mut rows = Vec::new();
+        let mut rl = Vec::new();
+        let mut rt = Vec::new();
+        for ncode in NETS {
+            let n = net(ncode);
+            let mut chain = lower_network(&n, Mode::Training);
+            fuse_chain(&mut chain);
+            let mappings: Vec<_> =
+                chain.entries().iter().map(|e| map_gconv(&e.op, &er, MapMode::Gconv)).collect();
+            let gc = chain_code_length(&chain, &mappings);
+            // One layer-instruction per layer, occupying ~5 words at our
+            // word granularity (opcode + shape configuration fields).
+            let lip = n.len() * 5;
+            let tip: usize =
+                chain.entries().iter().map(|e| tip_instruction_count(&e.op, tile)).sum();
+            rl.push(gc as f64 / lip as f64);
+            rt.push(tip as f64 / gc as f64);
+            rows.push(vec![
+                ncode.to_string(),
+                si(gc as f64),
+                si(lip as f64),
+                si(tip as f64),
+                r2(gc as f64 / lip as f64),
+                r2(tip as f64 / gc as f64),
+            ]);
+        }
+        let _ = tp;
+        print_table(
+            "Code length (Fig. 15)",
+            &["net", "GC-CIP", "LIP", "TIP", "GC/LIP", "TIP/GC"],
+            &rows,
+        );
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!(
+            "GC-CIP/LIP avg {:.1}x (paper 5.8x); TIP/GC-CIP avg {:.1}x (paper 2.6x)",
+            avg(&rl),
+            avg(&rt)
+        );
+    });
+}

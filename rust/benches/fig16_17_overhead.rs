@@ -1,0 +1,25 @@
+//! Figs. 16/17: area and power overhead of GCONV support on Eyeriss.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::energy::overhead::{area_overhead, power_overhead, ChipBudget};
+use gconv_chain::report::{pct, print_table};
+use util::timed;
+
+fn main() {
+    timed("fig16_17", || {
+        let b = ChipBudget::eyeriss();
+        let a = area_overhead(&b);
+        let p = power_overhead(&b);
+        print_table(
+            "GCONV-support overhead on Eyeriss (Figs. 16/17)",
+            &["component", "area", "power"],
+            &[
+                vec!["storage (instr. buffers)".to_string(), pct(a.storage), pct(p.storage)],
+                vec!["compute (main/reduce PEs)".to_string(), pct(a.compute), pct(p.compute)],
+                vec!["control (decoder + FSM)".to_string(), pct(a.control), pct(p.control)],
+                vec!["TOTAL".to_string(), pct(a.total()), pct(p.total())],
+            ],
+        );
+        println!("paper: 20% area, 19% power");
+    });
+}

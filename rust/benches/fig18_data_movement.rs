@@ -1,0 +1,28 @@
+//! Fig. 18: data-movement energy (on-chip GB movement + offload/reload),
+//! normalized to the TPU baseline.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::report::{print_table, r2};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn main() {
+    timed("fig18", || {
+        let mut rows = Vec::new();
+        for ncode in ["AN", "GLN", "DN", "MN"] {
+            let n = net(ncode);
+            let norm = run(&n, "TPU", ExecMode::Baseline).energy.movement();
+            let mut row = vec![ncode.to_string()];
+            for acode in ACCELS {
+                let b = run(&n, acode, ExecMode::Baseline);
+                let g = run(&n, acode, ExecMode::GconvChain);
+                row.push(format!("{}/{}", r2(b.energy.movement() / norm), r2(g.energy.movement() / norm)));
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["net (base/GC)".to_string()];
+        headers.extend(ACCELS.iter().map(|s| s.to_string()));
+        print_table("Movement energy normalized to TPU baseline (Fig. 18)", &headers, &rows);
+        println!("paper: GC-ER 16%, GC-EP 22% of TPU; CIP baselines dominated by offload energy");
+    });
+}

@@ -1,0 +1,58 @@
+//! Fig. 19: energy efficiency (iso-power performance) of GC-CIPs vs
+//! TIP, LIP and a V100 GPU.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::accel::gpu::GpuModel;
+use gconv_chain::report::{geomean, print_table, r2};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+/// MACs per energy unit (unit ≈ 1 pJ), i.e. iso-power performance.
+fn eff(r: &gconv_chain::sim::SimResult) -> f64 {
+    r.energy.compute / r.energy.total()
+}
+
+fn main() {
+    timed("fig19", || {
+        let gpu = GpuModel::v100();
+        let gpu_eff = gpu.macs_per_joule() * 1e-12; // 1 energy unit = 1 pJ
+        let mut rows = Vec::new();
+        let (mut vs_tip, mut vs_lip, mut vs_gpu) = (vec![], vec![], vec![]);
+        for ncode in NETS {
+            let n = net(ncode);
+            let tip = eff(&run(&n, "TPU", ExecMode::Baseline));
+            let lip = if evaluated(ncode, "DNNW") {
+                eff(&run(&n, "DNNW", ExecMode::Baseline))
+            } else {
+                f64::NAN
+            };
+            let gc_er = eff(&run(&n, "ER", ExecMode::GconvChain));
+            let gc_ep = eff(&run(&n, "EP", ExecMode::GconvChain));
+            let best = gc_er.max(gc_ep);
+            vs_tip.push(best / tip);
+            if lip.is_finite() {
+                vs_lip.push(best / lip);
+            }
+            vs_gpu.push(best / gpu_eff);
+            rows.push(vec![
+                ncode.to_string(),
+                r2(gc_er / gpu_eff),
+                r2(gc_ep / gpu_eff),
+                r2(tip / gpu_eff),
+                if lip.is_finite() { r2(lip / gpu_eff) } else { "-".into() },
+                "1.00".to_string(),
+            ]);
+        }
+        print_table(
+            "Energy efficiency normalized to V100 (Fig. 19)",
+            &["net", "GC-ER", "GC-EP", "TIP", "LIP", "GPU"],
+            &rows,
+        );
+        println!(
+            "GC-CIP vs TIP avg {:.1}x (paper 2.1x), vs LIP avg {:.1}x (paper 3.0x), vs GPU avg {:.1}x (paper 4.5x)",
+            geomean(&vs_tip),
+            geomean(&vs_lip),
+            geomean(&vs_gpu)
+        );
+    });
+}

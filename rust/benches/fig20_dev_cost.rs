@@ -1,0 +1,30 @@
+//! Fig. 20: development cost (HW + SW NRE and updates).
+#[path = "util.rs"]
+mod util;
+use gconv_chain::cost::dev::{dev_cost, DevCostParams, Platform};
+use gconv_chain::report::print_table;
+use util::timed;
+
+fn main() {
+    timed("fig20", || {
+        let p = DevCostParams::default();
+        let mut rows = Vec::new();
+        for updates in 0..=10usize {
+            let mut row = vec![updates.to_string()];
+            for pl in [Platform::Tip, Platform::GcCip, Platform::Lip] {
+                let (hw, sw) = dev_cost(&p, pl, updates);
+                row.push(format!("{:.0}k (hw {:.0}k + sw {:.0}k)", (hw + sw) / 1e3, hw / 1e3, sw / 1e3));
+            }
+            rows.push(row);
+        }
+        print_table("Development cost vs updates (Fig. 20)", &["updates", "TIP", "GC-CIP", "LIP"], &rows);
+        let total = |pl, u| {
+            let (h, s) = dev_cost(&p, pl, u);
+            h + s
+        };
+        println!(
+            "TIP - GC-CIP gap after 10 updates: {:.0}k$ (paper: ~60k$)",
+            (total(Platform::Tip, 10) - total(Platform::GcCip, 10)) / 1e3
+        );
+    });
+}

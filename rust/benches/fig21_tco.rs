@@ -1,0 +1,44 @@
+//! Fig. 21: total cost of ownership over ten years, with the energy
+//! efficiencies measured by the simulator.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::accel::gpu::GpuModel;
+use gconv_chain::cost::tco::{fig21_platforms, tco};
+use gconv_chain::report::print_table;
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn eff_vs_gpu(ncode: &str, acode: &str, mode: ExecMode) -> f64 {
+    let r = run(&net(ncode), acode, mode);
+    let per_unit = r.energy.compute / r.energy.total();
+    per_unit / (GpuModel::v100().macs_per_joule() * 1e-12)
+}
+
+fn main() {
+    timed("fig21", || {
+        let gc = eff_vs_gpu("MN", "ER", ExecMode::GconvChain);
+        let tip = eff_vs_gpu("MN", "TPU", ExecMode::Baseline);
+        let lip = eff_vs_gpu("MN", "DNNW", ExecMode::Baseline);
+        let platforms = fig21_platforms(gc, tip, lip);
+        let mut rows = Vec::new();
+        for y in 0..=10usize {
+            let mut row = vec![format!("{y}")];
+            for pf in &platforms {
+                row.push(format!("{:.1}k", tco(pf, y as f64) / 1e3));
+            }
+            rows.push(row);
+        }
+        let headers: Vec<String> = std::iter::once("year".to_string())
+            .chain(platforms.iter().map(|p| p.name.to_string()))
+            .collect();
+        print_table("Total cost of ownership (Fig. 21)", &headers, &rows);
+        let find = |n: &str| platforms.iter().find(|p| p.name == n).unwrap();
+        for y in [3.0, 10.0] {
+            println!(
+                "GC-CIP saving vs TIP at {y:.0}y: {:.0}% (paper: {}%)",
+                100.0 * (1.0 - tco(find("GC-CIP"), y) / tco(find("TIP"), y)),
+                if y < 5.0 { 45 } else { 65 }
+            );
+        }
+    });
+}

@@ -1,0 +1,31 @@
+//! §Perf: wall-clock of the simulator itself — the full 7-net x 5-accel
+//! x 2-mode sweep is the repository's hot path (every figure regenerates
+//! from it). Tracked before/after in EXPERIMENTS.md §Perf.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::sim::ExecMode;
+use std::time::Instant;
+use util::*;
+
+fn main() {
+    // Warm-up (page in networks etc).
+    let _ = run(&net("AN"), "ER", ExecMode::GconvChain);
+    let t0 = Instant::now();
+    let mut cells = 0;
+    for ncode in NETS {
+        let n = net(ncode);
+        for acode in ACCELS {
+            for mode in [ExecMode::Baseline, ExecMode::GconvChain] {
+                let r = run(&n, acode, mode);
+                assert!(r.seconds > 0.0);
+                cells += 1;
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "full sweep: {cells} simulations in {:.3?} ({:.1} ms/sim)",
+        dt,
+        dt.as_secs_f64() * 1e3 / cells as f64
+    );
+}

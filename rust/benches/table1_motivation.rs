@@ -1,0 +1,60 @@
+//! Table 1: impact of non-traditional layers on modern CNN acceleration.
+#[path = "util.rs"]
+mod util;
+use gconv_chain::accel::baseline::replication_factor;
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::report::{pct, print_table, r2};
+use gconv_chain::sim::ExecMode;
+use util::*;
+
+fn main() {
+    timed("table1", || {
+        let mut rows = Vec::new();
+        for ncode in NETS {
+            let n = net(ncode);
+            let chain = lower_network(&n, Mode::Training);
+            // (a) non-traditional shares.
+            let layer_ratio = n.nodes().iter().filter(|x| !x.layer.is_traditional()).count() as f64
+                / n.len() as f64;
+            let (t, nt) = chain.work_split();
+            let comp_ratio = nt as f64 / (t + nt) as f64;
+            let foot: f64 = chain
+                .entries()
+                .iter()
+                .filter(|e| !e.traditional)
+                .map(|e| e.op.output_elements() as f64)
+                .sum::<f64>()
+                / chain.entries().iter().map(|e| e.op.output_elements() as f64).sum::<f64>();
+            // (b) inefficiencies.
+            let repl: f64 = {
+                let num: f64 = chain.entries().iter().map(|e| replication_factor(&e.op) * e.op.input_elements() as f64).sum();
+                let den: f64 = chain.entries().iter().map(|e| e.op.input_elements() as f64).sum();
+                num / den
+            };
+            let offload: f64 = chain
+                .entries()
+                .iter()
+                .filter(|e| !e.traditional)
+                .map(|e| e.op.output_elements() as f64)
+                .sum::<f64>()
+                / chain.entries().iter().map(|e| e.op.output_elements() as f64).sum::<f64>();
+            let util = run(&n, "DNNW", ExecMode::Baseline).utilization;
+            rows.push(vec![
+                ncode.to_string(),
+                pct(layer_ratio),
+                pct(comp_ratio),
+                pct(foot),
+                format!("{}x", r2(repl)),
+                pct(offload),
+                pct(util),
+            ]);
+        }
+        print_table(
+            "Non-traditional layer impact (Table 1)",
+            &["net", "layers", "comp", "data", "TIP repl", "CIP offload", "LIP util"],
+            &rows,
+        );
+        println!("paper layers: AN 24% GLN 13% DN 66% MN 62% ZFFR 29% C3D 52% CapNN 18%");
+        println!("paper repl: AN 35x GLN 6x DN 2x MN 2x ZFFR 4x C3D 6x CapNN 3x");
+    });
+}

@@ -1,0 +1,39 @@
+//! Shared bench-harness helpers (compiled into each bench via `#[path]`).
+#![allow(dead_code)]
+
+use gconv_chain::accel::configs::by_code;
+use gconv_chain::ir::Network;
+use gconv_chain::networks::benchmark;
+use gconv_chain::sim::{simulate, ExecMode, SimOptions, SimResult};
+use std::time::Instant;
+
+pub const NETS: [&str; 7] = ["AN", "GLN", "DN", "MN", "ZFFR", "C3D", "CapNN"];
+pub const ACCELS: [&str; 5] = ["TPU", "DNNW", "ER", "EP", "NLR"];
+
+/// Paper §6.1 exclusions: ZFFR/C3D/CapNN are not evaluated on DNNW and
+/// C3D not on the CIP baselines.
+pub fn evaluated(net: &str, accel: &str) -> bool {
+    if accel == "DNNW" && matches!(net, "ZFFR" | "C3D" | "CapNN") {
+        return false;
+    }
+    if net == "C3D" && matches!(accel, "ER" | "EP" | "NLR") {
+        return false;
+    }
+    true
+}
+
+pub fn run(net: &Network, accel: &str, mode: ExecMode) -> SimResult {
+    simulate(net, &by_code(accel), SimOptions { mode, training: true })
+}
+
+pub fn net(code: &str) -> Network {
+    benchmark(code)
+}
+
+/// Time a closure, printing the wall-clock the harness itself took.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("\n[bench harness: {label} regenerated in {:.2?}]", t0.elapsed());
+    out
+}

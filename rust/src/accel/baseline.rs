@@ -1,0 +1,143 @@
+//! TIP baseline: im2col lowering with input replication (paper §2.3,
+//! Fig. 1(c)).
+//!
+//! Tensor instruction processors flatten every convolution window into a
+//! matrix column and run a matrix multiply. The transformation destroys
+//! overlap-reuse: every input element is replicated into each window
+//! that covers it (the red cells of Fig. 1(c)), inflating input traffic
+//! by `Π_d Nks_d / s_d` for the sliding dims (Table 1(b) column 1
+//! measures 2×–35× across the benchmarks).
+
+use crate::gconv::op::{DimParams, GconvOp};
+use crate::ir::Dim;
+
+/// Rewrite a GCONV as the matrix operation a TIP executes.
+///
+/// All sliding-window (`Nks`,`Nopc`) dims collapse into the matmul
+/// reduction: the kernel loops move into the C dimension's `Nks`
+/// (columns of the weight matrix) and every output position becomes a
+/// row of the im2col input matrix (folded into B's `Nopc`).
+pub fn im2col_op(op: &GconvOp) -> GconvOp {
+    let mut out = op.clone();
+    let mut ks_total = 1usize; // reduction length from sliding dims
+    let mut positions = 1usize; // output positions from sliding dims
+    let mut dims: Vec<(Dim, DimParams)> = Vec::new();
+    for &(d, p) in &op.dims {
+        match d {
+            Dim::C | Dim::B => dims.push((d, p)),
+            _ => {
+                // Sliding dim: kernel extent joins the reduction, output
+                // extent joins the positions; group loops stay.
+                ks_total *= p.nks;
+                positions *= p.nopc;
+                if p.ng > 1 {
+                    dims.push((d, DimParams::g(p.ng)));
+                }
+            }
+        }
+    }
+    for (d, p) in dims.iter_mut() {
+        match d {
+            Dim::C => p.nks *= ks_total,
+            Dim::B => p.nopc *= positions,
+            _ => {}
+        }
+    }
+    if !dims.iter().any(|&(d, _)| d == Dim::C) && ks_total > 1 {
+        dims.push((Dim::C, DimParams::ks(ks_total)));
+    }
+    if !dims.iter().any(|&(d, _)| d == Dim::B) && positions > 1 {
+        dims.push((Dim::B, DimParams::opc(positions)));
+    }
+    out.dims = dims;
+    out.name = format!("{}.im2col", op.name);
+    out
+}
+
+/// Input replication factor of the im2col transform: replicated input
+/// elements / original input elements (Table 1(b) column 1).
+pub fn replication_factor(op: &GconvOp) -> f64 {
+    let original = op.input_elements() as f64;
+    let replicated = im2col_op(op).input_elements() as f64;
+    (replicated / original).max(1.0)
+}
+
+/// Does this op even have sliding windows to replicate?
+pub fn has_overlap(op: &GconvOp) -> bool {
+    op.dims.iter().any(|&(_, p)| p.overlap_reuse())
+}
+
+/// TIP control/load instruction overhead per matrix operation (§6.4:
+/// TIPs "require load instructions ... and control operations when the
+/// computation cannot be mapped to only one matrix/vector operation").
+/// Returns the instruction count the TIP needs for this op.
+pub fn tip_instruction_count(op: &GconvOp, matrix_tile: usize) -> usize {
+    let m = im2col_op(op);
+    // Matrix ops executed tile by tile: one compute + two load + one
+    // store instruction per tile.
+    let work = m.work();
+    let tiles = work.div_ceil(matrix_tile.max(1));
+    4 * tiles.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::op::{DataRef, Param};
+
+    fn conv(ks: usize, s: usize) -> GconvOp {
+        GconvOp::conv(
+            "c",
+            vec![
+                (Dim::B, DimParams::opc(4)),
+                (Dim::C, DimParams { nop: 8, nks: 3, ..Default::default() }),
+                (Dim::H, DimParams::window(16, ks, s, ks / 2)),
+                (Dim::W, DimParams::window(16, ks, s, ks / 2)),
+            ],
+            DataRef::External("x".into()),
+            DataRef::Weights("w".into()),
+        )
+    }
+
+    #[test]
+    fn im2col_preserves_work_and_outputs() {
+        let op = conv(3, 1);
+        let m = im2col_op(&op);
+        assert_eq!(op.work(), m.work());
+        assert_eq!(op.output_elements(), m.output_elements());
+    }
+
+    #[test]
+    fn replication_grows_with_kernel_and_shrinks_with_stride() {
+        // 3x3 stride 1 replicates ~9x; stride 2 about a quarter of that.
+        let r1 = replication_factor(&conv(3, 1));
+        let r2 = replication_factor(&conv(3, 2));
+        assert!(r1 > 6.0 && r1 <= 9.5, "r1 = {r1}");
+        assert!(r2 < r1 / 2.0, "r2 = {r2}");
+    }
+
+    #[test]
+    fn elementwise_has_no_replication() {
+        let ew = GconvOp {
+            name: "relu".into(),
+            dims: vec![(Dim::B, DimParams::opc(4)), (Dim::C, DimParams::opc(64))],
+            pre: crate::gconv::op::PreOp::None,
+            main: crate::gconv::op::MainOp::Pass,
+            reduce: crate::gconv::op::ReduceOp::None,
+            post: crate::gconv::op::PostOp::Lut("relu"),
+            input: DataRef::External("x".into()),
+            kernel: None,
+        };
+        assert_eq!(replication_factor(&ew), 1.0);
+        assert!(!has_overlap(&ew));
+    }
+
+    #[test]
+    fn im2col_collapses_sliding_dims() {
+        let m = im2col_op(&conv(3, 1));
+        // No H/W loops remain; C carries the 3*3*3 reduction.
+        assert_eq!(m.params(Dim::C).nks, 27);
+        assert_eq!(m.params(Dim::H).get(Param::Ks), 1);
+        assert_eq!(m.params(Dim::B).nopc, 4 * 16 * 16);
+    }
+}

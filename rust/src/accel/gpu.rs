@@ -1,0 +1,70 @@
+//! GPU comparator (NVIDIA Tesla V100) for Fig. 19 / Fig. 21.
+//!
+//! Only used as an efficiency/TCO yardstick — the paper compares
+//! iso-power performance of GC-CIPs against a V100 (up to 7.6×, 4.5×
+//! average advantage).
+
+/// A simple roofline GPU model.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// Marketing name.
+    pub name: &'static str,
+    /// Peak throughput in MAC/s (fp16 tensor-core peak counted as MACs).
+    pub peak_macs_per_s: f64,
+    /// Achieved fraction of peak on CNN training (measured utilizations
+    /// for mixed conv + element-wise workloads).
+    pub utilization: f64,
+    /// Board power in watts.
+    pub tdp_w: f64,
+    /// Street price in USD (Fig. 21 CAPEX).
+    pub price_usd: f64,
+}
+
+impl GpuModel {
+    /// Tesla V100 (SXM2 32 GB).
+    pub fn v100() -> Self {
+        GpuModel {
+            name: "V100",
+            // 125 TFLOPS tensor peak → 62.5 T MAC/s.
+            peak_macs_per_s: 62.5e12,
+            // End-to-end CNN training sustains ~20% of tensor peak
+            // (element-wise layers, BN barriers, launch overheads).
+            utilization: 0.20,
+            tdp_w: 300.0,
+            price_usd: 9_000.0,
+        }
+    }
+
+    /// Seconds to execute `work` MACs.
+    pub fn seconds(&self, work: f64) -> f64 {
+        work / (self.peak_macs_per_s * self.utilization)
+    }
+
+    /// Energy in joules for `work` MACs (busy at TDP).
+    pub fn energy_j(&self, work: f64) -> f64 {
+        self.seconds(work) * self.tdp_w
+    }
+
+    /// MACs per joule — the Fig. 19 iso-power performance metric.
+    pub fn macs_per_joule(&self) -> f64 {
+        self.peak_macs_per_s * self.utilization / self.tdp_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_sustains_tens_of_gmacs_per_joule() {
+        let g = GpuModel::v100();
+        let mpj = g.macs_per_joule();
+        assert!((1e9..1e12).contains(&mpj), "{mpj:e}");
+    }
+
+    #[test]
+    fn seconds_scale_linearly() {
+        let g = GpuModel::v100();
+        assert!((g.seconds(2e12) / g.seconds(1e12) - 2.0).abs() < 1e-12);
+    }
+}

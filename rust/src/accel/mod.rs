@@ -1,0 +1,14 @@
+//! Accelerator models: the abstract structure every mapper/model consumes
+//! (§4.4), the five Table-4 configurations, and the baseline-mode models
+//! (TIP im2col, CIP offloading, LIP pipelining) plus the host and GPU
+//! comparators.
+
+pub mod baseline;
+pub mod configs;
+pub mod gpu;
+pub mod offload;
+pub mod pipeline;
+pub mod structure;
+
+pub use configs::{all_accelerators, by_code, dnnweaver, eager_pruning, eyeriss, nlr, tpu};
+pub use structure::{AccelStructure, Category, SpatialDim};

@@ -1,0 +1,80 @@
+//! Host-offload model for CIP baselines (paper §6.2).
+//!
+//! Convolution-intended processors cannot parse non-traditional layers;
+//! the baselines ship those layers' inputs to an ARM A53 over PCIe 4.0,
+//! compute there, and reload the results. The offload can overlap
+//! on-chip computation across mini-batches (double buffering), so the
+//! chain-level latency is `max(on-chip, offload)` — which is exactly why
+//! EagerPruning, the fastest on-chip baseline, "suffers the most from
+//! offloading" (Fig. 12): its offload lane dominates.
+
+/// The offload host + link.
+#[derive(Clone, Copy, Debug)]
+pub struct OffloadHost {
+    /// Host sustained rate in ops/s (ARM A53 quad-core NEON ≈ 24 GFLOP/s).
+    pub host_ops_per_s: f64,
+    /// Effective PCIe bandwidth in words/s (PCIe 4.0 ×16 ≈ 16 GB/s
+    /// effective = 8 G words/s at 16-bit).
+    pub link_words_per_s: f64,
+    /// Per-transfer fixed latency in seconds (driver + DMA setup).
+    pub per_transfer_s: f64,
+}
+
+impl Default for OffloadHost {
+    fn default() -> Self {
+        OffloadHost {
+            host_ops_per_s: 24.0e9,
+            link_words_per_s: 8.0e9,
+            per_transfer_s: 5.0e-6,
+        }
+    }
+}
+
+/// Latency + traffic of offloading one GCONV/layer to the host.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffloadCost {
+    /// Seconds on the host + link.
+    pub seconds: f64,
+    /// Words crossing the link (both directions) — charged at the 146×
+    /// offload energy rate.
+    pub words: f64,
+}
+
+impl OffloadHost {
+    /// Cost of offloading an operation with the given footprint.
+    pub fn cost(&self, work: usize, input_words: usize, output_words: usize) -> OffloadCost {
+        let words = (input_words + output_words) as f64;
+        let transfer = words / self.link_words_per_s + 2.0 * self.per_transfer_s;
+        let compute = work as f64 / self.host_ops_per_s;
+        OffloadCost { seconds: transfer + compute, words }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_offload() {
+        // Heavy work, little data: host compute dominates.
+        let h = OffloadHost::default();
+        let c = h.cost(24_000_000_000, 1000, 1000);
+        assert!((c.seconds - 1.0).abs() < 0.01, "{}", c.seconds);
+    }
+
+    #[test]
+    fn transfer_bound_offload() {
+        // Light work, much data: the link dominates.
+        let h = OffloadHost::default();
+        let c = h.cost(1000, 4_000_000_000, 4_000_000_000);
+        assert!((c.seconds - 1.0).abs() < 0.01, "{}", c.seconds);
+        assert_eq!(c.words, 8.0e9);
+    }
+
+    #[test]
+    fn fixed_latency_floors_small_transfers() {
+        let h = OffloadHost::default();
+        let c = h.cost(0, 1, 1);
+        assert!(c.seconds >= 2.0 * h.per_transfer_s);
+    }
+}

@@ -1,0 +1,102 @@
+//! LIP two-stage pipeline model (paper §2.3 / Fig. 12).
+//!
+//! Layer-instruction processors dedicate one engine to traditional
+//! layers and one to the non-traditional rest, pipelined across inputs.
+//! Resources are partitioned once — "based on the ratio of the
+//! traditional and non-traditional computation in all the networks"
+//! (Table 1(b) column 3) — so per-network imbalance creates pipeline
+//! bubbles, and barrier layers (batch normalization reduces over the
+//! whole mini-batch) drain the pipeline entirely.
+
+/// Fixed resource split of the LIP (fraction given to the traditional
+/// stage). Derived from the average traditional-computation share across
+/// the seven benchmarks, which the 3-D/capsule networks pull down.
+pub const TRADITIONAL_SHARE: f64 = 0.7;
+
+/// Outcome of running a workload through the two-stage pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineResult {
+    /// Total seconds.
+    pub seconds: f64,
+    /// Seconds only the traditional stage is busy.
+    pub trad_only: f64,
+    /// Seconds only the non-traditional stage is busy.
+    pub nontrad_only: f64,
+    /// Seconds both stages overlap ("all-busy" in Fig. 12).
+    pub all_busy: f64,
+    /// Average PE utilization (Table 1(b) column 3).
+    pub utilization: f64,
+}
+
+/// Simulate the pipeline given per-class busy times *at full-chip speed*
+/// and the number of pipeline barriers (layers that forbid overlap).
+///
+/// `trad_s`/`nontrad_s`: time each class would take using the whole
+/// chip. The stages own `TRADITIONAL_SHARE` / `1−TRADITIONAL_SHARE` of
+/// the resources, so their stage times inflate accordingly. Barriers
+/// split the run into `barriers + 1` segments that cannot overlap.
+pub fn pipeline(trad_s: f64, nontrad_s: f64, barriers: usize) -> PipelineResult {
+    let t = trad_s / TRADITIONAL_SHARE;
+    let n = nontrad_s / (1.0 - TRADITIONAL_SHARE);
+    let segments = (barriers + 1) as f64;
+    // Within a segment the stages overlap; across barriers they drain.
+    // Per segment: max(t,n)/segments overlapped + pipeline fill/drain of
+    // the shorter stage once per segment.
+    let long = t.max(n);
+    let short = t.min(n);
+    let fill = short / segments; // fill+drain cost per barrier segment
+    let seconds = long + fill * (segments - 1.0).max(0.0) / segments;
+    let all_busy = short * (1.0 / segments).max(1.0 - barriers as f64 * 0.1).clamp(0.0, 1.0);
+    let trad_only = (t - all_busy).max(0.0);
+    let nontrad_only = (n - all_busy).max(0.0);
+    // Utilization: busy resource-seconds over total resource-seconds.
+    let utilization =
+        (trad_s + nontrad_s) / seconds.max(f64::EPSILON);
+    PipelineResult {
+        seconds,
+        trad_only,
+        nontrad_only,
+        all_busy,
+        utilization: utilization.min(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_load_high_utilization() {
+        // Work split matching the resource split → near-full utilization.
+        let r = pipeline(0.7, 0.3, 0);
+        assert!(r.utilization > 0.9, "utilization {}", r.utilization);
+    }
+
+    #[test]
+    fn imbalanced_load_starves_a_stage() {
+        // All-traditional workload leaves the non-traditional stage idle:
+        // utilization ≈ the traditional share.
+        let r = pipeline(1.0, 0.0, 0);
+        assert!(
+            (r.utilization - TRADITIONAL_SHARE).abs() < 0.05,
+            "utilization {}",
+            r.utilization
+        );
+    }
+
+    #[test]
+    fn barriers_slow_the_pipeline() {
+        let free = pipeline(0.5, 0.5, 0);
+        let barred = pipeline(0.5, 0.5, 50);
+        assert!(barred.seconds > free.seconds);
+        assert!(barred.utilization < free.utilization);
+    }
+
+    #[test]
+    fn nontraditional_heavy_network_collapses() {
+        // C3D-like: 99% non-traditional work on a 30% stage → utilization
+        // craters (Table 1(b) reports 1%-ish).
+        let r = pipeline(0.01, 0.99, 0);
+        assert!(r.utilization < 0.4, "utilization {}", r.utilization);
+    }
+}

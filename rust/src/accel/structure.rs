@@ -1,0 +1,183 @@
+//! The abstract accelerator structure the GCONV mapper consumes (§4.4).
+//!
+//! "All the accelerators manifest both the spatial and temporal unrolling
+//! dimensions. The difference lies in the number and functions of the
+//! spatial dimensions as well as the capacity and hierarchy of the
+//! memory." Each spatial dimension carries capability flags; local
+//! scratchpads that do not exist are modelled with size 1.
+
+use crate::gconv::op::Param;
+
+/// Accelerator class per the paper's taxonomy (§2.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    /// Tensor instruction processor (RISC-like, im2col).
+    Tip,
+    /// Layer instruction processor (dedicated unit per layer type).
+    Lip,
+    /// Convolution intended processor.
+    Cip,
+}
+
+impl Category {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Tip => "TIP",
+            Category::Lip => "LIP",
+            Category::Cip => "CIP",
+        }
+    }
+}
+
+/// One spatial unrolling dimension of the PE array.
+#[derive(Clone, Debug)]
+pub struct SpatialDim {
+    /// Display name (`"py"`, `"px"`, `"sub"`, …).
+    pub name: &'static str,
+    /// Number of PEs along this dimension.
+    pub size: usize,
+    /// Partial results can be reduced along this dimension (forwarding
+    /// links / adder chains) — required to spatially unroll `ks`.
+    pub reduce: bool,
+    /// This dimension participates in the overlap-reuse primitive
+    /// (row-stationary-style diagonal sharing, Fig. 8(b)).
+    pub overlap: bool,
+}
+
+/// Per-PE local scratchpad capacities in words (1 = a pipeline register,
+/// i.e. no temporal reuse at this level).
+#[derive(Clone, Copy, Debug)]
+pub struct LocalStores {
+    /// Input scratchpad (ILS).
+    pub ils: usize,
+    /// Output scratchpad (OLS).
+    pub ols: usize,
+    /// Kernel-parameter scratchpad (KLS).
+    pub kls: usize,
+}
+
+/// Global buffer capacities in words (16-bit words as in Eyeriss).
+#[derive(Clone, Copy, Debug)]
+pub struct GlobalBuffer {
+    /// Input partition.
+    pub i: usize,
+    /// Output partition.
+    pub o: usize,
+    /// Kernel-parameter partition.
+    pub k: usize,
+}
+
+/// Words per cycle between global buffer and PE array.
+#[derive(Clone, Copy, Debug)]
+pub struct Bandwidth {
+    /// Input bus.
+    pub i: usize,
+    /// Output bus.
+    pub o: usize,
+    /// Kernel-parameter bus.
+    pub k: usize,
+}
+
+/// A complete accelerator description (Table 4 row).
+#[derive(Clone, Debug)]
+pub struct AccelStructure {
+    /// Display name (`"ER"`, `"TPU"`, …).
+    pub name: &'static str,
+    /// Full name for reports.
+    pub full_name: &'static str,
+    /// Accelerator class.
+    pub category: Category,
+    /// Spatial unrolling dimensions (PE-array axes), outermost first.
+    pub spatial: Vec<SpatialDim>,
+    /// Per-PE local scratchpads.
+    pub ls: LocalStores,
+    /// Global buffer partitions.
+    pub gb: GlobalBuffer,
+    /// GB↔array bandwidths.
+    pub bw: Bandwidth,
+    /// Clock (all Table-4 accelerators run at 700 MHz, §6.2).
+    pub freq_ghz: f64,
+    /// Spatial fill priority per axis for the *GCONV* mapping
+    /// (Algorithm 1 lines 14–19; §4.4: per-accelerator priority tweaks).
+    pub spatial_priority: Vec<[Param; 4]>,
+    /// Temporal fill priority (Algorithm 1 lines 20–22).
+    pub temporal_priority: [Param; 4],
+    /// Dimensions the *baseline* dataflow restricts each spatial axis to
+    /// (None = the baseline can use any dim, as in flexible baselines).
+    pub baseline_dims: Vec<Option<Vec<crate::ir::Dim>>>,
+    /// Fraction of host-offload time the baseline can hide behind
+    /// on-chip computation (§6.3: "ER and NLR can overlap the offloading
+    /// by computation to some extent"; EP, with the highest on-chip
+    /// performance and a fully-synchronous subsystem design, hides the
+    /// least and "suffers the most from offloading").
+    pub offload_overlap: f64,
+}
+
+impl AccelStructure {
+    /// Total number of PEs.
+    pub fn pes(&self) -> usize {
+        self.spatial.iter().map(|s| s.size).product()
+    }
+
+    /// Peak MACs/s.
+    pub fn peak_macs_per_s(&self) -> f64 {
+        self.pes() as f64 * self.freq_ghz * 1e9
+    }
+
+    /// Index of the first reduce-capable spatial axis, if any.
+    pub fn reduce_axis(&self) -> Option<usize> {
+        self.spatial.iter().position(|s| s.reduce)
+    }
+
+    /// Index of the overlap-primitive spatial axis, if any.
+    pub fn overlap_axis(&self) -> Option<usize> {
+        self.spatial.iter().position(|s| s.overlap)
+    }
+
+    /// LS capacity for a store kind (`'i'`, `'o'`, `'k'`).
+    pub fn ls_cap(&self, store: char) -> usize {
+        match store {
+            'i' => self.ls.ils,
+            'o' => self.ls.ols,
+            'k' => self.ls.kls,
+            _ => panic!("unknown store {store}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs::*;
+
+    #[test]
+    fn pe_counts_match_table4() {
+        assert_eq!(tpu().pes(), 4096);
+        assert_eq!(eyeriss().pes(), 168);
+        assert_eq!(eager_pruning().pes(), 2048);
+        assert_eq!(nlr().pes(), 448);
+        assert_eq!(dnnweaver().pes(), 14 * 74);
+    }
+
+    #[test]
+    fn eyeriss_has_reduce_and_overlap_axes() {
+        let er = eyeriss();
+        assert_eq!(er.reduce_axis(), Some(0)); // py forwarding links
+        assert!(er.overlap_axis().is_some());
+    }
+
+    #[test]
+    fn tpu_has_no_overlap_primitive() {
+        assert!(tpu().overlap_axis().is_none());
+    }
+
+    #[test]
+    fn categories_match_table4() {
+        assert_eq!(tpu().category, Category::Tip);
+        assert_eq!(dnnweaver().category, Category::Lip);
+        for a in [eyeriss(), eager_pruning(), nlr()] {
+            assert_eq!(a.category, Category::Cip);
+        }
+    }
+}

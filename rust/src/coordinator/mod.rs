@@ -1,0 +1,213 @@
+//! L3 coordinator: drives GCONV-chain *numerics* through the PJRT
+//! runtime.
+//!
+//! The paper's contribution is the compiler + mapper + accelerator
+//! model, so the execution driver is deliberately thin: it owns the
+//! artifact lifecycle, batches incoming samples to the mini-batch size
+//! the artifacts were lowered for, executes the compiled chain step, and
+//! reports latency/throughput. Python is never on this path — the
+//! artifacts are AOT-compiled HLO (see [`crate::runtime`]).
+
+use crate::runtime::{literal_f32, to_vec_f32, Runtime};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A single inference/training request: one flattened sample.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Caller-assigned id.
+    pub id: u64,
+    /// Flattened sample data.
+    pub data: Vec<f32>,
+}
+
+/// A completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Flattened output.
+    pub data: Vec<f32>,
+    /// Seconds spent queued + executing.
+    pub latency_s: f64,
+}
+
+/// Run statistics of the executor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// Batches executed.
+    pub batches: usize,
+    /// Samples served.
+    pub samples: usize,
+    /// Total execution seconds.
+    pub exec_s: f64,
+    /// Mean per-sample latency.
+    pub mean_latency_s: f64,
+}
+
+impl ExecStats {
+    /// Samples per second across the run.
+    pub fn throughput(&self) -> f64 {
+        if self.exec_s == 0.0 {
+            0.0
+        } else {
+            self.samples as f64 / self.exec_s
+        }
+    }
+}
+
+/// Batching executor for one compiled chain artifact.
+///
+/// The artifact takes `(x, w...)` where `x` is `[batch, sample_len]`-
+/// reshaped input and returns a tuple whose first element is the output
+/// batch; extra weight tensors are bound once at construction.
+pub struct ChainExecutor {
+    runtime: Runtime,
+    artifact: String,
+    batch: usize,
+    sample_len: usize,
+    out_len: usize,
+    weights: Vec<xla::Literal>,
+    input_dims: Vec<i64>,
+    queue: VecDeque<(Request, Instant)>,
+    stats: ExecStats,
+    latency_acc: f64,
+}
+
+impl ChainExecutor {
+    /// Create an executor for `artifact` in `artifact_dir`.
+    ///
+    /// `input_dims` is the full batched input shape (first dim = batch);
+    /// `out_len` the per-sample output length; `weights` any additional
+    /// parameter tensors the artifact expects after the input.
+    pub fn new(
+        artifact_dir: &str,
+        artifact: &str,
+        input_dims: &[i64],
+        out_len: usize,
+        weights: Vec<xla::Literal>,
+    ) -> Result<Self> {
+        let mut runtime = Runtime::cpu(artifact_dir)?;
+        runtime.load(artifact).with_context(|| format!("loading {artifact}"))?;
+        let batch = input_dims[0] as usize;
+        let sample_len: usize =
+            input_dims[1..].iter().map(|&d| d as usize).product();
+        Ok(ChainExecutor {
+            runtime,
+            artifact: artifact.to_string(),
+            batch,
+            sample_len,
+            out_len,
+            weights,
+            input_dims: input_dims.to_vec(),
+            queue: VecDeque::new(),
+            stats: ExecStats::default(),
+            latency_acc: 0.0,
+        })
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        anyhow::ensure!(
+            req.data.len() == self.sample_len,
+            "sample length {} != expected {}",
+            req.data.len(),
+            self.sample_len
+        );
+        self.queue.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    /// Pending queue depth.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Execute one full (or padded, if `flush`) batch; returns responses
+    /// in submission order. Returns an empty vec when not enough work is
+    /// queued and `flush` is false (the dynamic-batching policy: wait
+    /// for a full batch unless flushing).
+    pub fn step(&mut self, flush: bool) -> Result<Vec<Response>> {
+        if self.queue.is_empty() || (!flush && self.queue.len() < self.batch) {
+            return Ok(Vec::new());
+        }
+        let take = self.queue.len().min(self.batch);
+        let mut batch_data = Vec::with_capacity(self.batch * self.sample_len);
+        let mut meta = Vec::with_capacity(take);
+        for _ in 0..take {
+            let (req, t0) = self.queue.pop_front().expect("non-empty");
+            batch_data.extend_from_slice(&req.data);
+            meta.push((req.id, t0));
+        }
+        // Pad the final partial batch with zeros.
+        batch_data.resize(self.batch * self.sample_len, 0.0);
+
+        let x = literal_f32(&batch_data, &self.input_dims)?;
+        let mut inputs = vec![x];
+        for w in &self.weights {
+            // Literals are cheap client-side handles; re-reshape clones.
+            inputs.push(w.reshape(&shape_of(w)?)?);
+        }
+        let t_exec = Instant::now();
+        let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+        let exec_s = t_exec.elapsed().as_secs_f64();
+        let out = to_vec_f32(&outputs[0])?;
+
+        let mut responses = Vec::with_capacity(take);
+        for (i, (id, t0)) in meta.into_iter().enumerate() {
+            let start = i * self.out_len;
+            let latency = t0.elapsed().as_secs_f64();
+            self.latency_acc += latency;
+            responses.push(Response {
+                id,
+                data: out[start..start + self.out_len].to_vec(),
+                latency_s: latency,
+            });
+        }
+        self.stats.batches += 1;
+        self.stats.samples += take;
+        self.stats.exec_s += exec_s;
+        self.stats.mean_latency_s = self.latency_acc / self.stats.samples as f64;
+        Ok(responses)
+    }
+
+    /// Drain the queue completely.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut all = Vec::new();
+        while !self.queue.is_empty() {
+            all.extend(self.step(true)?);
+        }
+        Ok(all)
+    }
+
+    /// Run statistics.
+    pub fn stats(&self) -> ExecStats {
+        self.stats
+    }
+}
+
+/// Dims of a literal's array shape.
+fn shape_of(l: &xla::Literal) -> Result<Vec<i64>> {
+    let shape = l.shape()?;
+    match shape {
+        xla::Shape::Array(a) => Ok(a.dims().to_vec()),
+        _ => anyhow::bail!("expected array literal"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_throughput() {
+        let s = ExecStats { batches: 2, samples: 8, exec_s: 2.0, mean_latency_s: 0.1 };
+        assert_eq!(s.throughput(), 4.0);
+    }
+
+    #[test]
+    fn zero_time_throughput_is_zero() {
+        assert_eq!(ExecStats::default().throughput(), 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Development-cost model (paper Fig. 20): hardware + software
+//! non-recurring engineering (NRE) plus per-update costs, as a function
+//! of the number of network-generation updates.
+//!
+//! Constants from §6.6: hardware NRE quoted at 152 k$ (TIP), 165 k$
+//! (GC-CIP) and 220 k$ (LIP) [43]; each update costs a LIP another
+//! 200 k$ of hardware design; software costs derive from engineer
+//! salary [44] at the canonical 10 lines of (shippable) code per day
+//! [45].
+
+/// Accelerator platform for the whole-life cost comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Platform {
+    /// Tensor instruction processor.
+    Tip,
+    /// GCONV-Chain-armed CIP.
+    GcCip,
+    /// Layer instruction processor.
+    Lip,
+}
+
+impl Platform {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Platform::Tip => "TIP",
+            Platform::GcCip => "GC-CIP",
+            Platform::Lip => "LIP",
+        }
+    }
+}
+
+/// Cost-model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DevCostParams {
+    /// Engineer cost per line of code: (salary $75/h × 8 h) / 10 LoC.
+    pub usd_per_loc: f64,
+    /// Hardware NRE per platform in USD (TIP, GC-CIP, LIP).
+    pub hw_nre: [f64; 3],
+    /// LIP hardware redesign per update.
+    pub lip_hw_update: f64,
+    /// Initial compiler size in LoC (TIP, GC-CIP, LIP). The TIP software
+    /// stack is the largest: explicit data loading and matrix/vector
+    /// code generation per layer (§6.4: worst code density).
+    pub sw_nre_loc: [f64; 3],
+    /// LoC to support one new layer generation (TIP, GC-CIP, LIP).
+    /// GC-CIP only adds a lowering recipe; the TIP also needs new
+    /// kernels + codegen; the LIP needs a driver for its new unit.
+    pub sw_update_loc: [f64; 3],
+}
+
+impl Default for DevCostParams {
+    fn default() -> Self {
+        DevCostParams {
+            usd_per_loc: 60.0,
+            hw_nre: [152_000.0, 165_000.0, 220_000.0],
+            lip_hw_update: 200_000.0,
+            sw_nre_loc: [2_000.0, 1_400.0, 1_000.0],
+            sw_update_loc: [100.0, 45.0, 80.0],
+        }
+    }
+}
+
+/// Cumulative development cost after `updates` network-generation
+/// updates, split `(hardware, software)`.
+pub fn dev_cost(p: &DevCostParams, platform: Platform, updates: usize) -> (f64, f64) {
+    let i = match platform {
+        Platform::Tip => 0,
+        Platform::GcCip => 1,
+        Platform::Lip => 2,
+    };
+    let mut hw = p.hw_nre[i];
+    if platform == Platform::Lip {
+        hw += p.lip_hw_update * updates as f64;
+    }
+    let sw = (p.sw_nre_loc[i] + p.sw_update_loc[i] * updates as f64) * p.usd_per_loc;
+    (hw, sw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gc_cip_hw_nre_slightly_above_tip() {
+        // §6.6: "GC-CIPs consume more in the hardware than TIPs".
+        let p = DevCostParams::default();
+        let (tip_hw, _) = dev_cost(&p, Platform::Tip, 0);
+        let (gc_hw, _) = dev_cost(&p, Platform::GcCip, 0);
+        assert!(gc_hw > tip_hw);
+        assert!(gc_hw - tip_hw < 20_000.0);
+    }
+
+    #[test]
+    fn tip_software_gap_widens_with_updates() {
+        // §6.6: "60K additional USDs ... for TIPs than GC-CIPs after ten
+        // updates" (total development cost gap).
+        let p = DevCostParams::default();
+        let total = |pl, u| {
+            let (h, s) = dev_cost(&p, pl, u);
+            h + s
+        };
+        let gap10 = total(Platform::Tip, 10) - total(Platform::GcCip, 10);
+        assert!(
+            (40_000.0..100_000.0).contains(&gap10),
+            "gap after 10 updates = {gap10}"
+        );
+        let gap0 = total(Platform::Tip, 0) - total(Platform::GcCip, 0);
+        assert!(gap10 > gap0);
+    }
+
+    #[test]
+    fn lip_updates_dominate_everything() {
+        // 200 k$ hardware redesign per update makes LIP the most
+        // expensive to keep current.
+        let p = DevCostParams::default();
+        let (lip_hw, lip_sw) = dev_cost(&p, Platform::Lip, 10);
+        let (tip_hw, tip_sw) = dev_cost(&p, Platform::Tip, 10);
+        assert!(lip_hw + lip_sw > 2.0 * (tip_hw + tip_sw));
+    }
+}

@@ -1,0 +1,8 @@
+//! Whole-life cost models (paper §6.6): development cost (Fig. 20) and
+//! total cost of ownership (Fig. 21).
+
+pub mod dev;
+pub mod tco;
+
+pub use dev::{dev_cost, DevCostParams, Platform};
+pub use tco::{tco, TcoParams};

@@ -1,0 +1,84 @@
+//! Energy model.
+//!
+//! Per-event energies are in normalized units (1 = one MAC at 16 bit),
+//! the standard relative costs of the CNN-accelerator literature
+//! (Eyeriss/EIE): a local-scratchpad access costs about the same as a
+//! MAC, a global-buffer access ~6×, and host offloading — PCIe transfer
+//! + DRAM at both ends — is charged at the paper's measured ratio:
+//! "the offloading energy consumption can be as high as 146× of the
+//! on-chip data movement" (§2.3).
+
+pub mod overhead;
+
+/// Per-event energy table (normalized units per 16-bit word / op).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyTable {
+    /// One main-operator evaluation (MAC).
+    pub mac: f64,
+    /// One local-scratchpad access.
+    pub ls: f64,
+    /// One global-buffer access.
+    pub gb: f64,
+    /// One word moved to/from the offload host (PCIe + host memory).
+    pub offload: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        // offload = 146x the on-chip (GB) movement cost, §2.3.
+        EnergyTable { mac: 1.0, ls: 1.0, gb: 6.0, offload: 6.0 * 146.0 }
+    }
+}
+
+/// Energy totals of a simulated run (normalized units).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Energy {
+    /// Main/reduce/pre/post operator evaluations.
+    pub compute: f64,
+    /// Local-scratchpad traffic.
+    pub ls: f64,
+    /// Global-buffer traffic.
+    pub gb: f64,
+    /// Offload traffic (CIP baselines only).
+    pub offload: f64,
+}
+
+impl Energy {
+    /// Total energy.
+    pub fn total(&self) -> f64 {
+        self.compute + self.ls + self.gb + self.offload
+    }
+
+    /// Movement-only energy (the Fig. 18 metric: on-chip GB movements
+    /// plus offloading/reloading; LS and compute excluded).
+    pub fn movement(&self) -> f64 {
+        self.gb + self.offload
+    }
+
+    /// Element-wise accumulate.
+    pub fn add(&mut self, other: &Energy) {
+        self.compute += other.compute;
+        self.ls += other.ls;
+        self.gb += other.gb;
+        self.offload += other.offload;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offload_ratio_matches_paper() {
+        let t = EnergyTable::default();
+        assert!((t.offload / t.gb - 146.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut e = Energy { compute: 1.0, ls: 2.0, gb: 3.0, offload: 4.0 };
+        e.add(&Energy { compute: 1.0, ls: 1.0, gb: 1.0, offload: 1.0 });
+        assert_eq!(e.total(), 14.0);
+        assert_eq!(e.movement(), 9.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! The GCONV chain: end-to-end CNN computation as a sequence of GCONVs
+//! linked by producer/consumer relations (paper §3.2).
+
+use super::op::{DataRef, GconvOp};
+use crate::ir::NodeId;
+use std::fmt;
+
+/// Propagation phase a chain entry belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Forward propagation.
+    Fp,
+    /// Backward propagation (gradients).
+    Bp,
+    /// Weight-gradient computation.
+    Wg,
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Phase::Fp => "FP",
+            Phase::Bp => "BP",
+            Phase::Wg => "WG",
+        })
+    }
+}
+
+/// A GCONV absorbed into a neighbour's `pre`/`post`/`main` operator by
+/// operation fusion (§4.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedOp {
+    /// Name of the absorbed GCONV.
+    pub name: String,
+    /// Which operator slot it landed in (`"pre"`, `"post"`, `"main"`).
+    pub slot: &'static str,
+    /// Kernel-parameter elements the host op must now additionally load
+    /// ("due to the pre/post parameter loading, the kernel parameter
+    /// movement of the global buffer has increased", §4.3).
+    pub param_elements: usize,
+}
+
+/// One GCONV on the chain plus provenance metadata.
+#[derive(Clone, Debug)]
+pub struct ChainEntry {
+    /// The operation.
+    pub op: GconvOp,
+    /// IR node this GCONV was lowered from.
+    pub source: NodeId,
+    /// Whether the source layer is traditional (paper §2.1) — drives the
+    /// CIP-offload and LIP-pipeline baseline models.
+    pub traditional: bool,
+    /// FP / BP / WG.
+    pub phase: Phase,
+    /// GCONVs fused into this one (empty before `fuse_chain`).
+    pub fused: Vec<FusedOp>,
+}
+
+impl ChainEntry {
+    /// Entry with no fusions.
+    pub fn new(op: GconvOp, source: NodeId, traditional: bool, phase: Phase) -> Self {
+        ChainEntry { op, source, traditional, phase, fused: Vec::new() }
+    }
+}
+
+/// A chain of GCONV operations in execution order.
+#[derive(Clone, Debug, Default)]
+pub struct GconvChain {
+    /// Network name this chain was generated from.
+    pub network: String,
+    entries: Vec<ChainEntry>,
+}
+
+impl GconvChain {
+    /// Empty chain for `network`.
+    pub fn new(network: &str) -> Self {
+        GconvChain { network: network.to_string(), entries: Vec::new() }
+    }
+
+    /// Append an entry; returns its chain index (usable as
+    /// [`DataRef::Gconv`] by later entries).
+    pub fn push(&mut self, entry: ChainEntry) -> usize {
+        // Validate producer references point backwards.
+        let idx = self.entries.len();
+        let check = |r: &DataRef| {
+            if let DataRef::Gconv(i) = r {
+                assert!(*i < idx, "entry {idx} references future GCONV {i}");
+            }
+        };
+        check(&entry.op.input);
+        if let Some(k) = &entry.op.kernel {
+            check(k);
+        }
+        self.entries.push(entry);
+        idx
+    }
+
+    /// All entries in order.
+    pub fn entries(&self) -> &[ChainEntry] {
+        &self.entries
+    }
+
+    /// Mutable entries (used by fusion).
+    pub fn entries_mut(&mut self) -> &mut Vec<ChainEntry> {
+        &mut self.entries
+    }
+
+    /// Chain length (the code-density metric of Fig. 15 counts these).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the chain is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total `main`-operator work across the chain.
+    pub fn total_work(&self) -> usize {
+        self.entries.iter().map(|e| e.op.work()).sum()
+    }
+
+    /// Work split `(traditional, non_traditional)` — Table 1(a) column
+    /// "non-traditional computation".
+    pub fn work_split(&self) -> (usize, usize) {
+        let mut trad = 0;
+        let mut non = 0;
+        for e in &self.entries {
+            if e.traditional {
+                trad += e.op.work();
+            } else {
+                non += e.op.work();
+            }
+        }
+        (trad, non)
+    }
+
+    /// Indices of chain entries that consume entry `i`'s output.
+    pub fn consumers(&self, i: usize) -> Vec<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.op.input == DataRef::Gconv(i) || e.op.kernel == Some(DataRef::Gconv(i))
+            })
+            .map(|(j, _)| j)
+            .collect()
+    }
+}
+
+impl fmt::Display for GconvChain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "GCONV Chain for {} ({} ops)", self.network, self.len())?;
+        for (i, e) in self.entries.iter().enumerate() {
+            writeln!(f, "  #{i:<4} [{}] {}", e.phase, e.op)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::op::{DimParams, MainOp, PostOp, PreOp, ReduceOp};
+    use crate::ir::Dim;
+
+    fn entry(name: &str, input: DataRef) -> ChainEntry {
+        ChainEntry::new(
+            GconvOp {
+                name: name.into(),
+                dims: vec![(Dim::C, DimParams::opc(4))],
+                pre: PreOp::None,
+                main: MainOp::Pass,
+                reduce: ReduceOp::None,
+                post: PostOp::None,
+                input,
+                kernel: None,
+            },
+            0,
+            true,
+            Phase::Fp,
+        )
+    }
+
+    #[test]
+    fn push_links_producers() {
+        let mut c = GconvChain::new("t");
+        let a = c.push(entry("a", DataRef::External("x".into())));
+        let b = c.push(entry("b", DataRef::Gconv(a)));
+        assert_eq!(c.consumers(a), vec![b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "future GCONV")]
+    fn forward_reference_rejected() {
+        let mut c = GconvChain::new("t");
+        c.push(entry("a", DataRef::Gconv(3)));
+    }
+
+    #[test]
+    fn work_split_partitions_total() {
+        let mut c = GconvChain::new("t");
+        c.push(entry("a", DataRef::External("x".into())));
+        let mut e = entry("b", DataRef::Gconv(0));
+        e.traditional = false;
+        c.push(e);
+        let (t, n) = c.work_split();
+        assert_eq!(t + n, c.total_work());
+        assert_eq!(t, n); // identical ops, one of each class
+    }
+}

@@ -1,0 +1,696 @@
+//! Backward-propagation lowering of each layer kind.
+//!
+//! BP GCONVs follow the same variance-pattern rules as FP (see the module
+//! docs of [`super`]): the batch-norm chain is Table 2 BP1–BP6 verbatim;
+//! convolution yields the classic pair (input gradient = correlation with
+//! the kernels flipped, weight gradient = correlation of activations with
+//! output gradients, reduced over the batch).
+
+use super::{ew_dims, ew_op, reduce_op, Lowerer};
+use crate::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+use crate::ir::{Dim, Layer, NodeId, PoolKind, Shape};
+
+impl Lowerer<'_> {
+    /// Lower the backward pass of node `id` (assumes consumers have
+    /// already deposited this node's output gradient via
+    /// [`Lowerer::accumulate_grad`] or the loss seed).
+    pub fn lower_bp(&mut self, id: NodeId) {
+        let node = self.net.node(id).clone();
+        let Some(g_out) = self.grad_of(id) else {
+            return; // dead branch (e.g. auxiliary head not trained)
+        };
+        let name = node.name.clone();
+        let out = node.output.clone();
+        let in_shapes: Vec<Shape> =
+            node.inputs.iter().map(|&i| self.net.node(i).output.clone()).collect();
+
+        match &node.layer {
+            Layer::Input { .. } => {}
+            Layer::Conv { out_channels, kernel, stride, pad, groups } => {
+                self.conv_bp(
+                    id,
+                    &name,
+                    &in_shapes[0],
+                    &out,
+                    *out_channels,
+                    (1, kernel.0, kernel.1),
+                    *stride,
+                    *pad,
+                    *groups,
+                    g_out,
+                    node.inputs[0],
+                );
+            }
+            Layer::Conv3d { out_channels, kernel, stride, pad } => {
+                self.conv_bp(
+                    id,
+                    &name,
+                    &in_shapes[0],
+                    &out,
+                    *out_channels,
+                    *kernel,
+                    *stride,
+                    *pad,
+                    1,
+                    g_out,
+                    node.inputs[0],
+                );
+            }
+            Layer::FullyConnected { out_features } => {
+                let s = &in_shapes[0];
+                let nbs = s.extent(Dim::B);
+                let feat: usize = s.elements() / nbs;
+                // dI = W^T · dO : roles of op/ks swap vs. FP.
+                let di = GconvOp::conv(
+                    &format!("{name}.BPi"),
+                    vec![
+                        (Dim::B, DimParams::opc(nbs)),
+                        (Dim::C, DimParams { nop: feat, nks: *out_features, ..Default::default() }),
+                    ],
+                    g_out.clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+                // dW = Σ_b I ⊗ dO : outer product reduced over batch.
+                let dw = GconvOp {
+                    name: format!("{name}.WG"),
+                    dims: vec![
+                        (Dim::B, DimParams::ks(nbs)),
+                        (Dim::C, DimParams::op(*out_features)),
+                        (Dim::H, DimParams::opc(feat)),
+                    ],
+                    pre: PreOp::None,
+                    main: MainOp::Mul,
+                    reduce: ReduceOp::Add,
+                    post: PostOp::None,
+                    input: self.act_of(node.inputs[0]),
+                    kernel: Some(g_out),
+                };
+                self.emit_wg(id, dw);
+            }
+            Layer::Pool { kind, kernel, stride, .. } => {
+                self.pool_bp(
+                    id,
+                    &name,
+                    &in_shapes[0],
+                    *kind,
+                    (1, *kernel, *kernel),
+                    (1, *stride, *stride),
+                    g_out,
+                    node.inputs[0],
+                );
+            }
+            Layer::Pool3d { kind, kernel, stride } => {
+                self.pool_bp(id, &name, &in_shapes[0], *kind, *kernel, *stride, g_out, node.inputs[0]);
+            }
+            Layer::GlobalAvgPool => {
+                let s = &in_shapes[0];
+                let hw = (s.extent(Dim::H) * s.extent(Dim::W)) as f32;
+                // Broadcast dO/HW back over the spatial dims.
+                let mut dims = ew_dims(s, &[]);
+                for (d, p) in dims.iter_mut() {
+                    if *d == Dim::H || *d == Dim::W {
+                        *p = DimParams::opc(s.extent(*d));
+                    }
+                }
+                let di = GconvOp {
+                    name: format!("{name}.BP"),
+                    dims,
+                    pre: PreOp::Mul(1.0 / hw),
+                    main: MainOp::Pass,
+                    reduce: ReduceOp::None,
+                    post: PostOp::None,
+                    input: g_out,
+                    kernel: None,
+                };
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::Relu => {
+                // dI = dO ⊙ 1[x > 0]; the mask is the stored activation
+                // pattern (varies everywhere).
+                let di = ew_op(
+                    &format!("{name}.BP"),
+                    &out,
+                    &out.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    g_out,
+                    Some(DataRef::External(format!("{name}.mask"))),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::Sigmoid => {
+                let di = ew_op(
+                    &format!("{name}.BP"),
+                    &out,
+                    &out.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    g_out,
+                    Some(DataRef::External(format!("{name}.dsigmoid"))),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::Softmax => {
+                // Fused with cross-entropy: dI = O − target.
+                let di = ew_op(
+                    &format!("{name}.BP"),
+                    &out,
+                    &out.dims(),
+                    PreOp::None,
+                    MainOp::Sub,
+                    PostOp::None,
+                    self.act_of(id),
+                    Some(DataRef::External("target".into())),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::Lrn { local_size } => {
+                let s = &in_shapes[0];
+                // Direct term: dO × scale^{-β} (element-wise) plus the
+                // cross-channel term: a channel-window correlation of
+                // dO·O/scale with the inputs.
+                let g1 = ew_op(
+                    &format!("{name}.BP1"),
+                    s,
+                    &s.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    g_out.clone(),
+                    Some(DataRef::External(format!("{name}.scale"))),
+                );
+                let g1 = self.emit_bp(id, g1);
+                let mut dims = ew_dims(s, &[]);
+                for (d, p) in dims.iter_mut() {
+                    if *d == Dim::C {
+                        *p = DimParams::window(s.extent(Dim::C), *local_size, 1, (local_size - 1) / 2);
+                    }
+                }
+                let g2 = GconvOp {
+                    name: format!("{name}.BP2"),
+                    dims,
+                    pre: PreOp::None,
+                    main: MainOp::Mul,
+                    reduce: ReduceOp::Add,
+                    post: PostOp::None,
+                    input: g_out,
+                    kernel: Some(DataRef::External(format!("{name}.cross"))),
+                };
+                let g2 = self.emit_bp(id, g2);
+                let di = ew_op(
+                    &format!("{name}.BP3"),
+                    s,
+                    &s.dims(),
+                    PreOp::None,
+                    MainOp::Sub,
+                    PostOp::None,
+                    g1,
+                    Some(g2),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::BatchNorm => {
+                let di = self.lower_bn_bp(id, &name, &in_shapes[0], g_out);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::Scale => {
+                // dI = dO·γ; dγ = Σ dO·I; dβ = Σ dO.
+                let s = &in_shapes[0];
+                let di = ew_op(
+                    &format!("{name}.BP"),
+                    s,
+                    &[Dim::C],
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    g_out.clone(),
+                    Some(DataRef::Weights(format!("{name}.gamma"))),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+                let reduce_dims: Vec<Dim> =
+                    s.dims().into_iter().filter(|&d| d != Dim::C).collect();
+                let dgamma = GconvOp {
+                    name: format!("{name}.WG1"),
+                    dims: s
+                        .iter()
+                        .filter(|&(_, n)| n > 1)
+                        .map(|(d, n)| {
+                            if reduce_dims.contains(&d) {
+                                (d, DimParams::ks(n))
+                            } else {
+                                (d, DimParams::opc(n))
+                            }
+                        })
+                        .collect(),
+                    pre: PreOp::None,
+                    main: MainOp::Mul,
+                    reduce: ReduceOp::Add,
+                    post: PostOp::None,
+                    input: g_out.clone(),
+                    kernel: Some(self.act_of(node.inputs[0])),
+                };
+                self.emit_wg(id, dgamma);
+                let dbeta = reduce_op(
+                    &format!("{name}.WG2"),
+                    s,
+                    &reduce_dims,
+                    PreOp::None,
+                    ReduceOp::Add,
+                    PostOp::None,
+                    g_out,
+                );
+                self.emit_wg(id, dbeta);
+            }
+            Layer::Dropout => {
+                let di = ew_op(
+                    &format!("{name}.BP"),
+                    &out,
+                    &out.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    g_out,
+                    Some(DataRef::Weights(format!("{name}.mask"))),
+                );
+                let di = self.emit_bp(id, di);
+                self.accumulate_grad(node.inputs[0], di);
+            }
+            Layer::Concat => {
+                // Slice the gradient back to each branch (pure movement).
+                for (bi, (&src, s)) in node.inputs.iter().zip(&in_shapes).enumerate() {
+                    let op = ew_op(
+                        &format!("{name}.BP{}", bi + 1),
+                        s,
+                        &[],
+                        PreOp::None,
+                        MainOp::Pass,
+                        PostOp::None,
+                        g_out.clone(),
+                        None,
+                    );
+                    let g = self.emit_bp(id, op);
+                    self.accumulate_grad(src, g);
+                }
+            }
+            Layer::Eltwise => {
+                // Gradient passes through unchanged to every operand.
+                for &src in &node.inputs {
+                    self.accumulate_grad(src, g_out.clone());
+                }
+            }
+            Layer::RoiPool { .. } | Layer::Proposal { .. } => {
+                // Max-pool style routing back through the argmax mask;
+                // proposals themselves are not differentiated (Faster
+                // R-CNN treats them as data).
+                if let Layer::RoiPool { .. } = node.layer {
+                    let s = &in_shapes[0];
+                    let di = ew_op(
+                        &format!("{name}.BP"),
+                        s,
+                        &s.dims(),
+                        PreOp::None,
+                        MainOp::Mul,
+                        PostOp::None,
+                        g_out,
+                        Some(DataRef::External(format!("{name}.argmax"))),
+                    );
+                    let di = self.emit_bp(id, di);
+                    self.accumulate_grad(node.inputs[0], di);
+                }
+            }
+            Layer::PrimaryCaps { caps_channels, vec, kernel, stride } => {
+                // Squash backward (2 element-wise GCONVs) then the
+                // convolution pair.
+                let g = self.squash_bp(id, &name, &out, g_out);
+                self.conv_bp(
+                    id,
+                    &name,
+                    &in_shapes[0],
+                    &out,
+                    caps_channels * vec,
+                    (1, *kernel, *kernel),
+                    *stride,
+                    0,
+                    1,
+                    g,
+                    node.inputs[0],
+                );
+            }
+            Layer::DigitCaps { out_caps, out_vec, routing } => {
+                let s = &in_shapes[0];
+                let in_caps =
+                    s.extent(Dim::C) * s.extent(Dim::H) * s.extent(Dim::W) * s.extent(Dim::T);
+                let in_vec = s.extent(Dim::V);
+                let nbs = s.extent(Dim::B);
+                // Routing backward: mirror of the forward iterations
+                // (squash-bp + weighted scatter per iteration).
+                let mut g = g_out;
+                for it in 0..*routing {
+                    g = self.squash_bp(id, &format!("{name}.R{it}"), &out, g);
+                    let scatter = GconvOp {
+                        name: format!("{name}.R{it}.BPs"),
+                        dims: vec![
+                            (Dim::B, DimParams::opc(nbs)),
+                            (Dim::C, DimParams { ng: in_caps, nop: *out_caps, ..Default::default() }),
+                            (Dim::V, DimParams::opc(*out_vec)),
+                        ],
+                        pre: PreOp::None,
+                        main: MainOp::Mul,
+                        reduce: ReduceOp::None,
+                        post: PostOp::None,
+                        input: g.clone(),
+                        kernel: Some(DataRef::External(format!("{name}.c{it}"))),
+                    };
+                    g = self.emit_bp(id, scatter);
+                }
+                // dU = W^T dÛ (swap op/ks on V), dW = u ⊗ dÛ.
+                let du = GconvOp::conv(
+                    &format!("{name}.BPi"),
+                    vec![
+                        (Dim::B, DimParams::opc(nbs)),
+                        (Dim::C, DimParams { ng: in_caps, nks: *out_caps, ..Default::default() }),
+                        (Dim::V, DimParams { nop: in_vec, nks: *out_vec, ..Default::default() }),
+                    ],
+                    g.clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                let du = self.emit_bp(id, du);
+                self.accumulate_grad(node.inputs[0], du);
+                let dw = GconvOp {
+                    name: format!("{name}.WG"),
+                    dims: vec![
+                        (Dim::B, DimParams::ks(nbs)),
+                        (Dim::C, DimParams { ng: in_caps, nop: *out_caps, ..Default::default() }),
+                        (Dim::V, DimParams { nop: *out_vec, nopc: in_vec, ..Default::default() }),
+                    ],
+                    pre: PreOp::None,
+                    main: MainOp::Mul,
+                    reduce: ReduceOp::Add,
+                    post: PostOp::None,
+                    input: self.act_of(node.inputs[0]),
+                    kernel: Some(g),
+                };
+                self.emit_wg(id, dw);
+            }
+        }
+    }
+
+    /// Convolution backward: input-gradient + weight-gradient GCONVs.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_bp(
+        &mut self,
+        id: NodeId,
+        name: &str,
+        input: &Shape,
+        output: &Shape,
+        out_channels: usize,
+        kernel: (usize, usize, usize),
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        g_out: DataRef,
+        src: NodeId,
+    ) {
+        let ic = input.extent(Dim::C);
+        let first_layer = matches!(self.net.node(src).layer, Layer::Input { .. });
+        // dI: "full" correlation of dO with flipped kernels; op and ks
+        // swap roles in C, the spatial windows invert (output size = Ni).
+        if !first_layer {
+            let mut dims = vec![
+                (Dim::B, DimParams::opc(input.extent(Dim::B))),
+                (
+                    Dim::C,
+                    DimParams {
+                        ng: groups,
+                        nop: ic / groups,
+                        nks: out_channels / groups,
+                        ..Default::default()
+                    },
+                ),
+            ];
+            if input.extent(Dim::T) > 1 || kernel.0 > 1 {
+                dims.push((
+                    Dim::T,
+                    DimParams::window(input.extent(Dim::T), kernel.0, 1, kernel.0.saturating_sub(1)),
+                ));
+            }
+            dims.push((
+                Dim::H,
+                DimParams::window(input.extent(Dim::H), kernel.1, 1, kernel.1.saturating_sub(1)),
+            ));
+            dims.push((
+                Dim::W,
+                DimParams::window(input.extent(Dim::W), kernel.2, 1, kernel.2.saturating_sub(1)),
+            ));
+            let di = GconvOp::conv(
+                &format!("{name}.BPi"),
+                dims,
+                g_out.clone(),
+                DataRef::Weights(name.to_string()),
+            );
+            let di = self.emit_bp(id, di);
+            self.accumulate_grad(src, di);
+        }
+        // dW: correlate stored activations with dO, reduce over batch and
+        // output positions; output extent = kernel size.
+        let mut dims = vec![
+            (Dim::B, DimParams::ks(input.extent(Dim::B))),
+            (
+                Dim::C,
+                DimParams {
+                    ng: groups,
+                    nop: out_channels / groups,
+                    nopc: ic / groups,
+                    ..Default::default()
+                },
+            ),
+        ];
+        if input.extent(Dim::T) > 1 || kernel.0 > 1 {
+            dims.push((
+                Dim::T,
+                DimParams { nopc: kernel.0, nks: output.extent(Dim::T), s: stride, ps: pad, ..Default::default() },
+            ));
+        }
+        dims.push((
+            Dim::H,
+            DimParams { nopc: kernel.1, nks: output.extent(Dim::H), s: stride, ps: pad, ..Default::default() },
+        ));
+        dims.push((
+            Dim::W,
+            DimParams { nopc: kernel.2, nks: output.extent(Dim::W), s: stride, ps: pad, ..Default::default() },
+        ));
+        let dw = GconvOp {
+            name: format!("{name}.WG"),
+            dims,
+            pre: PreOp::None,
+            main: MainOp::Mul,
+            reduce: ReduceOp::Add,
+            post: PostOp::None,
+            input: self.act_of(src),
+            kernel: Some(g_out),
+        };
+        self.emit_wg(id, dw);
+    }
+
+    /// Pooling backward.
+    #[allow(clippy::too_many_arguments)]
+    fn pool_bp(
+        &mut self,
+        id: NodeId,
+        name: &str,
+        input: &Shape,
+        kind: PoolKind,
+        kernel: (usize, usize, usize),
+        stride: (usize, usize, usize),
+        g_out: DataRef,
+        src: NodeId,
+    ) {
+        let di = match kind {
+            PoolKind::Max => {
+                // Route through the stored argmax mask.
+                ew_op(
+                    &format!("{name}.BP"),
+                    input,
+                    &input.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    g_out,
+                    Some(DataRef::External(format!("{name}.argmax"))),
+                )
+            }
+            PoolKind::Avg => {
+                // Spread dO/k over each window: a correlation of dO with a
+                // uniform kernel (kernel-less, pre-scaled).
+                let k = (kernel.0 * kernel.1 * kernel.2) as f32;
+                let mut dims = vec![
+                    (Dim::B, DimParams::opc(input.extent(Dim::B))),
+                    (Dim::C, DimParams::opc(input.extent(Dim::C))),
+                ];
+                if input.extent(Dim::T) > 1 {
+                    dims.push((
+                        Dim::T,
+                        DimParams::window(input.extent(Dim::T), kernel.0, 1, kernel.0 / stride.0),
+                    ));
+                }
+                dims.push((
+                    Dim::H,
+                    DimParams::window(input.extent(Dim::H), kernel.1, 1, kernel.1 / stride.1),
+                ));
+                dims.push((
+                    Dim::W,
+                    DimParams::window(input.extent(Dim::W), kernel.2, 1, kernel.2 / stride.2),
+                ));
+                GconvOp {
+                    name: format!("{name}.BP"),
+                    dims,
+                    pre: PreOp::Mul(1.0 / k),
+                    main: MainOp::Pass,
+                    reduce: ReduceOp::Add,
+                    post: PostOp::None,
+                    input: g_out,
+                    kernel: None,
+                }
+            }
+        };
+        let di = self.emit_bp(id, di);
+        self.accumulate_grad(src, di);
+    }
+
+    /// Batch normalization backward, exactly Table 2 BP1–BP6. Returns dI.
+    fn lower_bn_bp(&mut self, id: NodeId, name: &str, s: &Shape, g_out: DataRef) -> DataRef {
+        let nbs = s.extent(Dim::B) as f32;
+        let o = self.act_of(id); // FP4 output
+        let fp2;
+        let fp3;
+        // Recover the intra-layer FP refs by name (FP lowering pushed
+        // them in order: FP1, FP2, FP3, FP4 ending at act_of(id)).
+        if let DataRef::Gconv(fp4) = o.clone() {
+            fp2 = DataRef::Gconv(fp4 - 2);
+            fp3 = DataRef::Gconv(fp4 - 1);
+        } else {
+            fp2 = DataRef::External(format!("{name}.t1"));
+            fp3 = DataRef::External(format!("{name}.t2"));
+        }
+        let _ = fp2;
+        let non_b: Vec<Dim> = s.dims().into_iter().filter(|&d| d != Dim::B).collect();
+        // BP1: t3 = Σ_b O·gO / Nbs.
+        let bp1 = GconvOp {
+            name: format!("{name}.BP1"),
+            dims: s
+                .iter()
+                .filter(|&(_, n)| n > 1)
+                .map(|(d, n)| {
+                    if d == Dim::B {
+                        (d, DimParams::ks(n))
+                    } else {
+                        (d, DimParams::g(n))
+                    }
+                })
+                .collect(),
+            pre: PreOp::None,
+            main: MainOp::Mul,
+            reduce: ReduceOp::Add,
+            post: PostOp::Mul(1.0 / nbs),
+            input: g_out.clone(),
+            kernel: Some(o.clone()),
+        };
+        let bp1 = self.emit_bp(id, bp1);
+        // BP2: t4 = O × t3.
+        let bp2 = ew_op(
+            &format!("{name}.BP2"),
+            s,
+            &non_b,
+            PreOp::None,
+            MainOp::Mul,
+            PostOp::None,
+            o,
+            Some(bp1),
+        );
+        let bp2 = self.emit_bp(id, bp2);
+        // BP3: t5 = Σ_b gO / Nbs.
+        let bp3 = reduce_op(
+            &format!("{name}.BP3"),
+            s,
+            &[Dim::B],
+            PreOp::None,
+            ReduceOp::Add,
+            PostOp::Mul(1.0 / nbs),
+            g_out.clone(),
+        );
+        let bp3 = self.emit_bp(id, bp3);
+        // BP4: t6 = gO − t5.
+        let bp4 = ew_op(
+            &format!("{name}.BP4"),
+            s,
+            &non_b,
+            PreOp::None,
+            MainOp::Sub,
+            PostOp::None,
+            g_out,
+            Some(bp3),
+        );
+        let bp4 = self.emit_bp(id, bp4);
+        // BP5: t7 = t6 − t4.
+        let bp5 = ew_op(
+            &format!("{name}.BP5"),
+            s,
+            &s.dims(),
+            PreOp::None,
+            MainOp::Sub,
+            PostOp::None,
+            bp4,
+            Some(bp2),
+        );
+        let bp5 = self.emit_bp(id, bp5);
+        // BP6: gI = t7 × t2.
+        let bp6 = ew_op(
+            &format!("{name}.BP6"),
+            s,
+            &non_b,
+            PreOp::None,
+            MainOp::Mul,
+            PostOp::None,
+            bp5,
+            Some(fp3),
+        );
+        self.emit_bp(id, bp6)
+    }
+
+    /// Squash backward: two element-wise GCONVs (scale gradient + vector
+    /// correction).
+    fn squash_bp(&mut self, id: NodeId, name: &str, out: &Shape, g: DataRef) -> DataRef {
+        let g1 = ew_op(
+            &format!("{name}.BPsq1"),
+            out,
+            &out.dims(),
+            PreOp::None,
+            MainOp::Mul,
+            PostOp::None,
+            g,
+            Some(DataRef::External(format!("{name}.squash_scale"))),
+        );
+        let g1 = self.emit_bp(id, g1);
+        let g2 = ew_op(
+            &format!("{name}.BPsq2"),
+            out,
+            &out.dims(),
+            PreOp::None,
+            MainOp::Sub,
+            PostOp::None,
+            g1,
+            Some(DataRef::External(format!("{name}.squash_corr"))),
+        );
+        self.emit_bp(id, g2)
+    }
+}

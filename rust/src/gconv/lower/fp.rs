@@ -1,0 +1,658 @@
+//! Forward-propagation lowering of each layer kind.
+
+use super::{ew_dims, ew_op, reduce_op, Lowerer};
+use crate::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+use crate::ir::{Dim, Layer, NodeId, PoolKind, Shape};
+
+impl Lowerer<'_> {
+    /// Lower the forward pass of node `id`, recording its activation ref.
+    pub fn lower_fp(&mut self, id: NodeId) {
+        let node = self.net.node(id).clone();
+        let name = node.name.clone();
+        let out = node.output.clone();
+        let ins: Vec<DataRef> = node.inputs.iter().map(|&i| self.act_of(i)).collect();
+        let in_shapes: Vec<Shape> =
+            node.inputs.iter().map(|&i| self.net.node(i).output.clone()).collect();
+
+        let act = match &node.layer {
+            Layer::Input { .. } => DataRef::External(format!("{name}.data")),
+            Layer::Conv { out_channels, kernel, stride, pad, groups } => {
+                let s = &in_shapes[0];
+                let op = conv_gconv(
+                    &format!("{name}.fp"),
+                    s,
+                    &out,
+                    *out_channels,
+                    (1, kernel.0, kernel.1),
+                    *stride,
+                    *pad,
+                    *groups,
+                    ins[0].clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Conv3d { out_channels, kernel, stride, pad } => {
+                let s = &in_shapes[0];
+                let op = conv_gconv(
+                    &format!("{name}.fp"),
+                    s,
+                    &out,
+                    *out_channels,
+                    *kernel,
+                    *stride,
+                    *pad,
+                    1,
+                    ins[0].clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::FullyConnected { out_features } => {
+                let s = &in_shapes[0];
+                // Kernel covers the whole input in every non-batch dim.
+                let mut dims = vec![(Dim::B, DimParams::opc(s.extent(Dim::B)))];
+                for (d, n) in s.iter() {
+                    if d == Dim::B || n == 1 {
+                        continue;
+                    }
+                    let p = if d == Dim::C {
+                        DimParams { nop: *out_features, nks: n, ..Default::default() }
+                    } else {
+                        DimParams::ks(n)
+                    };
+                    dims.push((d, p));
+                }
+                let op = GconvOp::conv(
+                    &format!("{name}.fp"),
+                    dims,
+                    ins[0].clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Pool { kind, kernel, stride, pad } => {
+                let op = pool_gconv(
+                    &format!("{name}.fp"),
+                    &in_shapes[0],
+                    &out,
+                    *kind,
+                    (1, *kernel, *kernel),
+                    (1, *stride, *stride),
+                    *pad,
+                    ins[0].clone(),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Pool3d { kind, kernel, stride } => {
+                let op = pool_gconv(
+                    &format!("{name}.fp"),
+                    &in_shapes[0],
+                    &out,
+                    *kind,
+                    *kernel,
+                    *stride,
+                    0,
+                    ins[0].clone(),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::GlobalAvgPool => {
+                let s = &in_shapes[0];
+                let hw = (s.extent(Dim::H) * s.extent(Dim::W)) as f32;
+                let op = reduce_op(
+                    &format!("{name}.fp"),
+                    s,
+                    &[Dim::H, Dim::W],
+                    PreOp::None,
+                    ReduceOp::Add,
+                    PostOp::Mul(1.0 / hw),
+                    ins[0].clone(),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Relu => {
+                let op = ew_op(
+                    &format!("{name}.fp"),
+                    &out,
+                    &[],
+                    PreOp::None,
+                    MainOp::Pass,
+                    PostOp::Lut("relu"),
+                    ins[0].clone(),
+                    None,
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Sigmoid => {
+                let op = ew_op(
+                    &format!("{name}.fp"),
+                    &out,
+                    &[],
+                    PreOp::None,
+                    MainOp::Pass,
+                    PostOp::Lut("sigmoid"),
+                    ins[0].clone(),
+                    None,
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Softmax => self.lower_softmax_fp(id, &name, &out, ins[0].clone()),
+            Layer::Lrn { local_size } => {
+                let s = &in_shapes[0];
+                // G1: channel-window sum of squares, LUT to the scale
+                // (§3.1: LRN is a general convolution in C).
+                let mut dims = ew_dims(s, &[]);
+                for (d, p) in dims.iter_mut() {
+                    if *d == Dim::C {
+                        *p = DimParams::window(s.extent(Dim::C), *local_size, 1, (local_size - 1) / 2);
+                    }
+                }
+                let g1 = GconvOp {
+                    name: format!("{name}.FP1"),
+                    dims,
+                    pre: PreOp::Square,
+                    main: MainOp::Pass,
+                    reduce: ReduceOp::Add,
+                    post: PostOp::Lut("lrn_scale"),
+                    input: ins[0].clone(),
+                    kernel: None,
+                };
+                let g1 = self.emit_fp_tmp(id, g1);
+                // G2: element-wise multiply by the scale (varies everywhere).
+                let g2 = ew_op(
+                    &format!("{name}.FP2"),
+                    &out,
+                    &out.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    ins[0].clone(),
+                    Some(g1),
+                );
+                self.emit_fp(id, g2)
+            }
+            Layer::BatchNorm => self.lower_bn_fp(id, &name, &in_shapes[0], ins[0].clone()),
+            Layer::Scale => {
+                // Per-channel y = γ·x + β: kernel varies over C only.
+                let g1 = ew_op(
+                    &format!("{name}.FP1"),
+                    &out,
+                    &[Dim::C],
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    ins[0].clone(),
+                    Some(DataRef::Weights(format!("{name}.gamma"))),
+                );
+                let g1 = self.emit_fp_tmp(id, g1);
+                let g2 = ew_op(
+                    &format!("{name}.FP2"),
+                    &out,
+                    &[Dim::C],
+                    PreOp::None,
+                    MainOp::Add,
+                    PostOp::None,
+                    g1,
+                    Some(DataRef::Weights(format!("{name}.beta"))),
+                );
+                self.emit_fp(id, g2)
+            }
+            Layer::Dropout => {
+                // Training-mode dropout: multiply by the Bernoulli mask
+                // (mask varies in every dimension — no kernel reuse).
+                let op = ew_op(
+                    &format!("{name}.fp"),
+                    &out,
+                    &out.dims(),
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    ins[0].clone(),
+                    Some(DataRef::Weights(format!("{name}.mask"))),
+                );
+                self.emit_fp(id, op)
+            }
+            Layer::Concat => {
+                // One copy GCONV per branch; the last emitted stands for
+                // the concatenated activation.
+                let mut last = None;
+                for (bi, (r, s)) in ins.iter().zip(&in_shapes).enumerate() {
+                    let op = ew_op(
+                        &format!("{name}.FP{}", bi + 1),
+                        s,
+                        &[],
+                        PreOp::None,
+                        MainOp::Pass,
+                        PostOp::None,
+                        r.clone(),
+                        None,
+                    );
+                    last = Some(self.emit_fp(id, op));
+                }
+                last.expect("concat with no inputs")
+            }
+            Layer::Eltwise => {
+                // Pairwise adds (kernel = other operand, varies everywhere).
+                let mut acc = ins[0].clone();
+                for (bi, r) in ins.iter().enumerate().skip(1) {
+                    let op = ew_op(
+                        &format!("{name}.FP{bi}"),
+                        &out,
+                        &out.dims(),
+                        PreOp::None,
+                        MainOp::Add,
+                        PostOp::None,
+                        acc,
+                        Some(r.clone()),
+                    );
+                    acc = self.emit_fp(id, op);
+                }
+                acc
+            }
+            Layer::RoiPool { num_rois, output } => {
+                let s = &in_shapes[0];
+                // Each RoI max-pools an adaptive window; modelled as a
+                // pooled GCONV whose B dim carries batch × #rois.
+                let kh = (s.extent(Dim::H)).div_ceil(output.0).max(1);
+                let kw = (s.extent(Dim::W)).div_ceil(output.1).max(1);
+                let dims = vec![
+                    (Dim::B, DimParams::opc(s.extent(Dim::B) * num_rois)),
+                    (Dim::C, DimParams::opc(s.extent(Dim::C))),
+                    (Dim::H, DimParams { nopc: output.0, nks: kh, s: kh, ..Default::default() }),
+                    (Dim::W, DimParams { nopc: output.1, nks: kw, s: kw, ..Default::default() }),
+                ];
+                let op = GconvOp {
+                    name: format!("{name}.fp"),
+                    dims,
+                    pre: PreOp::None,
+                    main: MainOp::Pass,
+                    reduce: ReduceOp::Max,
+                    post: PostOp::None,
+                    input: ins[0].clone(),
+                    kernel: None,
+                };
+                self.emit_fp(id, op)
+            }
+            Layer::Proposal { .. } => {
+                // Box regression (per-anchor affine) + objectness LUT +
+                // NMS-style max over neighbourhoods; three GCONVs.
+                let g1 = ew_op(
+                    &format!("{name}.FP1"),
+                    &out,
+                    &[Dim::C],
+                    PreOp::None,
+                    MainOp::Mul,
+                    PostOp::None,
+                    ins[0].clone(),
+                    Some(DataRef::Weights(format!("{name}.anchors"))),
+                );
+                let g1 = self.emit_fp_tmp(id, g1);
+                let g2 = ew_op(
+                    &format!("{name}.FP2"),
+                    &out,
+                    &[],
+                    PreOp::None,
+                    MainOp::Pass,
+                    PostOp::Lut("sigmoid"),
+                    g1,
+                    None,
+                );
+                let g2 = self.emit_fp_tmp(id, g2);
+                // NMS approximation: max over 3x3 spatial neighbourhoods.
+                let mut dims = ew_dims(&out, &[]);
+                for (d, p) in dims.iter_mut() {
+                    if *d == Dim::H || *d == Dim::W {
+                        let n = out.extent(*d);
+                        *p = DimParams::window(n, 3.min(n), 1, if n >= 3 { 1 } else { 0 });
+                    }
+                }
+                let g3 = GconvOp {
+                    name: format!("{name}.FP3"),
+                    dims,
+                    pre: PreOp::None,
+                    main: MainOp::Pass,
+                    reduce: ReduceOp::Max,
+                    post: PostOp::None,
+                    input: g2,
+                    kernel: None,
+                };
+                self.emit_fp(id, g3)
+            }
+            Layer::PrimaryCaps { caps_channels, vec, kernel, stride } => {
+                let s = &in_shapes[0];
+                // Capsule convolution: a conv whose V dim applies `vec`
+                // kernels in parallel (pose components).
+                let mut op = conv_gconv(
+                    &format!("{name}.FP1"),
+                    s,
+                    &out,
+                    *caps_channels,
+                    (1, *kernel, *kernel),
+                    *stride,
+                    0,
+                    1,
+                    ins[0].clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                op.dims.push((Dim::V, DimParams::op(*vec)));
+                let u = self.emit_fp_tmp(id, op);
+                self.lower_squash(id, &name, &out, u, 1)
+            }
+            Layer::DigitCaps { out_caps, out_vec, routing } => {
+                let s = &in_shapes[0];
+                let in_caps = s.extent(Dim::C)
+                    * s.extent(Dim::H)
+                    * s.extent(Dim::W)
+                    * s.extent(Dim::T);
+                let in_vec = s.extent(Dim::V);
+                let nbs = s.extent(Dim::B);
+                // û_{j|i} = W_{ij} u_i : the dominant computation.
+                let pred = GconvOp::conv(
+                    &format!("{name}.FP1"),
+                    vec![
+                        (Dim::B, DimParams::opc(nbs)),
+                        (Dim::C, DimParams { ng: in_caps, nop: *out_caps, ..Default::default() }),
+                        (Dim::V, DimParams { nop: *out_vec, nks: in_vec, ..Default::default() }),
+                    ],
+                    ins[0].clone(),
+                    DataRef::Weights(name.clone()),
+                );
+                let pred = self.emit_fp_tmp(id, pred);
+                // Dynamic routing iterations.
+                let pred_shape = Shape::new(&[
+                    (Dim::B, nbs),
+                    (Dim::C, in_caps * out_caps),
+                    (Dim::V, *out_vec),
+                ]);
+                let mut v = pred.clone();
+                for it in 0..*routing {
+                    // c = softmax(b) over output capsules (2 GCONVs: exp
+                    // reduction + normalize).
+                    let logits_shape =
+                        Shape::new(&[(Dim::B, nbs), (Dim::C, in_caps * out_caps)]);
+                    let denom = reduce_op(
+                        &format!("{name}.R{it}.softmax_sum"),
+                        &logits_shape,
+                        &[Dim::C],
+                        PreOp::Lut("exp"),
+                        ReduceOp::Add,
+                        PostOp::Lut("recip"),
+                        DataRef::External(format!("{name}.b{it}")),
+                    );
+                    let denom = self.emit_fp_tmp(id, denom);
+                    let c = ew_op(
+                        &format!("{name}.R{it}.softmax_mul"),
+                        &logits_shape,
+                        &[Dim::B],
+                        PreOp::Lut("exp"),
+                        MainOp::Mul,
+                        PostOp::None,
+                        DataRef::External(format!("{name}.b{it}")),
+                        Some(denom),
+                    );
+                    let c = self.emit_fp_tmp(id, c);
+                    // s_j = Σ_i c_{ij} û_{j|i} — reduce over input capsules.
+                    let sum = GconvOp {
+                        name: format!("{name}.R{it}.agree_sum"),
+                        dims: vec![
+                            (Dim::B, DimParams::opc(nbs)),
+                            (Dim::C, DimParams { ng: *out_caps, nks: in_caps, ..Default::default() }),
+                            (Dim::V, DimParams::opc(*out_vec)),
+                        ],
+                        pre: PreOp::None,
+                        main: MainOp::Mul,
+                        reduce: ReduceOp::Add,
+                        post: PostOp::None,
+                        input: v.clone(),
+                        kernel: Some(c),
+                    };
+                    let sj = self.emit_fp_tmp(id, sum);
+                    v = self.lower_squash(id, &format!("{name}.R{it}"), &out, sj, 2);
+                    if it + 1 < *routing {
+                        // b += û·v agreement (dot over V, broadcast back).
+                        let agree = GconvOp {
+                            name: format!("{name}.R{it}.logit_upd"),
+                            dims: vec![
+                                (Dim::B, DimParams::opc(nbs)),
+                                (Dim::C, DimParams::g(in_caps * out_caps)),
+                                (Dim::V, DimParams::ks(*out_vec)),
+                            ],
+                            pre: PreOp::None,
+                            main: MainOp::Mul,
+                            reduce: ReduceOp::Add,
+                            post: PostOp::None,
+                            input: pred.clone(),
+                            kernel: Some(v.clone()),
+                        };
+                        self.emit_fp_tmp(id, agree);
+                    }
+                }
+                let _ = pred_shape;
+                v
+            }
+        };
+        self.act[id] = Some(act);
+    }
+
+    /// Softmax over channels: max, subtract+exp, sum+recip, normalize.
+    fn lower_softmax_fp(&mut self, id: NodeId, name: &str, out: &Shape, x: DataRef) -> DataRef {
+        let mx = reduce_op(
+            &format!("{name}.FP1"),
+            out,
+            &[Dim::C],
+            PreOp::None,
+            ReduceOp::Max,
+            PostOp::None,
+            x.clone(),
+        );
+        let mx = self.emit_fp_tmp(id, mx);
+        let shifted = ew_op(
+            &format!("{name}.FP2"),
+            out,
+            &non_c_dims(out),
+            PreOp::None,
+            MainOp::Sub,
+            PostOp::Lut("exp"),
+            x,
+            Some(mx),
+        );
+        let shifted = self.emit_fp_tmp(id, shifted);
+        let denom = reduce_op(
+            &format!("{name}.FP3"),
+            out,
+            &[Dim::C],
+            PreOp::None,
+            ReduceOp::Add,
+            PostOp::Lut("recip"),
+            shifted.clone(),
+        );
+        let denom = self.emit_fp_tmp(id, denom);
+        let norm = ew_op(
+            &format!("{name}.FP4"),
+            out,
+            &non_c_dims(out),
+            PreOp::None,
+            MainOp::Mul,
+            PostOp::None,
+            shifted,
+            Some(denom),
+        );
+        self.emit_fp(id, norm)
+    }
+
+    /// Batch normalization forward, exactly Table 2 FP1–FP4.
+    fn lower_bn_fp(&mut self, id: NodeId, name: &str, s: &Shape, x: DataRef) -> DataRef {
+        let nbs = s.extent(Dim::B) as f32;
+        // FP1: μ = Σ_b I / Nbs.
+        let fp1 = reduce_op(
+            &format!("{name}.FP1"),
+            s,
+            &[Dim::B],
+            PreOp::None,
+            ReduceOp::Add,
+            PostOp::Mul(1.0 / nbs),
+            x.clone(),
+        );
+        let fp1 = self.emit_fp_tmp(id, fp1);
+        // FP2: t1 = I − μ (kernel μ varies in C/H/W, reused over B).
+        let fp2 = ew_op(
+            &format!("{name}.FP2"),
+            s,
+            &non_b_dims(s),
+            PreOp::None,
+            MainOp::Sub,
+            PostOp::None,
+            x,
+            Some(fp1),
+        );
+        let fp2 = self.emit_fp_tmp(id, fp2);
+        // FP3: t2 = 1/sqrt(Σ t1²/Nbs + ε) — square pre, add reduce, LUT.
+        let fp3 = reduce_op(
+            &format!("{name}.FP3"),
+            s,
+            &[Dim::B],
+            PreOp::Square,
+            ReduceOp::Add,
+            PostOp::Lut("rsqrt_eps"),
+            fp2.clone(),
+        );
+        let fp3 = self.emit_fp_tmp(id, fp3);
+        // FP4: O = t1 × t2.
+        let fp4 = ew_op(
+            &format!("{name}.FP4"),
+            s,
+            &non_b_dims(s),
+            PreOp::None,
+            MainOp::Mul,
+            PostOp::None,
+            fp2,
+            Some(fp3),
+        );
+        self.emit_fp(id, fp4)
+    }
+
+    /// Capsule squash: ‖s‖² LUT scale + multiply. `start` numbers the
+    /// emitted FP ops for display.
+    fn lower_squash(
+        &mut self,
+        id: NodeId,
+        name: &str,
+        out: &Shape,
+        s: DataRef,
+        start: usize,
+    ) -> DataRef {
+        let norm = reduce_op(
+            &format!("{name}.FP{}", start + 1),
+            out,
+            &[Dim::V],
+            PreOp::Square,
+            ReduceOp::Add,
+            PostOp::Lut("squash_scale"),
+            s.clone(),
+        );
+        let norm = self.emit_fp_tmp(id, norm);
+        let scaled = ew_op(
+            &format!("{name}.FP{}", start + 2),
+            out,
+            &non_v_dims(out),
+            PreOp::None,
+            MainOp::Mul,
+            PostOp::None,
+            s,
+            Some(norm),
+        );
+        self.emit_fp(id, scaled)
+    }
+}
+
+/// Dims of `s` except C (where a reduction-derived kernel is constant).
+fn non_c_dims(s: &Shape) -> Vec<Dim> {
+    s.dims().into_iter().filter(|&d| d != Dim::C).collect()
+}
+
+/// Dims of `s` except B.
+fn non_b_dims(s: &Shape) -> Vec<Dim> {
+    s.dims().into_iter().filter(|&d| d != Dim::B).collect()
+}
+
+/// Dims of `s` except V.
+fn non_v_dims(s: &Shape) -> Vec<Dim> {
+    s.dims().into_iter().filter(|&d| d != Dim::V).collect()
+}
+
+/// Build the GCONV of a (grouped/3-D) convolution layer per Fig. 5.
+/// `kernel` is `(kt, kh, kw)`; `kt = 1` for 2-D convolutions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_gconv(
+    name: &str,
+    input: &Shape,
+    output: &Shape,
+    out_channels: usize,
+    kernel: (usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    x: DataRef,
+    w: DataRef,
+) -> GconvOp {
+    let ic = input.extent(Dim::C);
+    let mut dims = vec![
+        (Dim::B, DimParams::opc(input.extent(Dim::B))),
+        (
+            Dim::C,
+            DimParams {
+                ng: groups,
+                nop: out_channels / groups,
+                nks: ic / groups,
+                ..Default::default()
+            },
+        ),
+    ];
+    if input.extent(Dim::T) > 1 || kernel.0 > 1 {
+        dims.push((Dim::T, DimParams::window(output.extent(Dim::T), kernel.0, stride, pad)));
+    }
+    dims.push((Dim::H, DimParams::window(output.extent(Dim::H), kernel.1, stride, pad)));
+    dims.push((Dim::W, DimParams::window(output.extent(Dim::W), kernel.2, stride, pad)));
+    GconvOp::conv(name, dims, x, w)
+}
+
+/// Build the GCONV of a pooling layer.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pool_gconv(
+    name: &str,
+    input: &Shape,
+    output: &Shape,
+    kind: PoolKind,
+    kernel: (usize, usize, usize),
+    stride: (usize, usize, usize),
+    pad: usize,
+    x: DataRef,
+) -> GconvOp {
+    let mut dims = vec![
+        (Dim::B, DimParams::opc(input.extent(Dim::B))),
+        (Dim::C, DimParams::opc(input.extent(Dim::C))),
+    ];
+    if input.extent(Dim::T) > 1 {
+        dims.push((Dim::T, DimParams::window(output.extent(Dim::T), kernel.0, stride.0, 0)));
+    }
+    dims.push((Dim::H, DimParams::window(output.extent(Dim::H), kernel.1, stride.1, pad)));
+    dims.push((Dim::W, DimParams::window(output.extent(Dim::W), kernel.2, stride.2, pad)));
+    let (reduce, post) = match kind {
+        PoolKind::Max => (ReduceOp::Max, PostOp::None),
+        PoolKind::Avg => {
+            let k = (kernel.0 * kernel.1 * kernel.2) as f32;
+            (ReduceOp::Add, PostOp::Mul(1.0 / k))
+        }
+    };
+    GconvOp {
+        name: name.to_string(),
+        dims,
+        pre: PreOp::None,
+        main: MainOp::Pass,
+        reduce,
+        post,
+        input: x,
+        kernel: None,
+    }
+}

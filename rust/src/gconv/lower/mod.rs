@@ -1,0 +1,324 @@
+//! Layer → GCONV lowering (paper §3.2, Table 2).
+//!
+//! Every layer decomposes into a short sequence of GCONVs by matching the
+//! *variance pattern* of each tensor against the four loop parameters.
+//! For each data dimension `d`:
+//!
+//! | input varies | kernel varies | output | parameter |
+//! |---|---|---|---|
+//! | yes | yes | varies     | `Ng`  (independent groups)            |
+//! | yes | yes | reduced    | `Nks` (kernel covers the input)       |
+//! | yes | no  | varies     | `Nopc` (one-weight kernel sliding)    |
+//! | no  | yes | varies     | `Nop` (kernels applied in parallel)   |
+//! | window |  |            | `Nopc`+`Nks` with stride/padding      |
+//!
+//! This reproduces the paper's examples exactly: Fig. 5 (convolution),
+//! Table 2 (batch normalization FP1–FP4 / BP1–BP6), §3.1's LRN-as-
+//! channel-convolution observation, etc.
+
+mod bp;
+mod fp;
+
+use super::chain::{ChainEntry, GconvChain, Phase};
+use super::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+use crate::ir::{Dim, Network, NodeId, Shape};
+
+/// What to lower.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Forward pass only.
+    Inference,
+    /// Forward + backward + weight gradients (the paper evaluates
+    /// training, §6.1).
+    Training,
+}
+
+/// Lower a network into its GCONV chain.
+pub fn lower_network(net: &Network, mode: Mode) -> GconvChain {
+    let mut lw = Lowerer::new(net);
+    for node in net.nodes() {
+        lw.lower_fp(node.id);
+    }
+    if mode == Mode::Training {
+        lw.seed_output_gradients();
+        for node in net.nodes().iter().rev() {
+            lw.lower_bp(node.id);
+        }
+    }
+    lw.chain
+}
+
+/// Lowering context: tracks, per IR node, which chain entry (or external
+/// tensor) holds its activation and its gradient.
+pub(crate) struct Lowerer<'n> {
+    pub net: &'n Network,
+    pub chain: GconvChain,
+    /// Activation of each node.
+    pub act: Vec<Option<DataRef>>,
+    /// Gradient w.r.t. each node's output (populated during BP).
+    pub grad: Vec<Option<DataRef>>,
+}
+
+impl<'n> Lowerer<'n> {
+    fn new(net: &'n Network) -> Self {
+        Lowerer {
+            net,
+            chain: GconvChain::new(&net.name),
+            act: vec![None; net.len()],
+            grad: vec![None; net.len()],
+        }
+    }
+
+    /// Activation ref of node `id` (panics if not yet lowered).
+    pub fn act_of(&self, id: NodeId) -> DataRef {
+        self.act[id].clone().unwrap_or_else(|| panic!("node {id} has no activation"))
+    }
+
+    /// Push an op for `node`, record it as the node's activation.
+    pub fn emit_fp(&mut self, node: NodeId, op: GconvOp) -> DataRef {
+        let traditional = self.net.node(node).layer.is_traditional();
+        let idx = self.chain.push(ChainEntry::new(op, node, traditional, Phase::Fp));
+        DataRef::Gconv(idx)
+    }
+
+    /// Push an intermediate FP op (not the node's final activation).
+    pub fn emit_fp_tmp(&mut self, node: NodeId, op: GconvOp) -> DataRef {
+        self.emit_fp(node, op)
+    }
+
+    /// Push a BP op.
+    pub fn emit_bp(&mut self, node: NodeId, op: GconvOp) -> DataRef {
+        let traditional = self.net.node(node).layer.is_traditional();
+        let idx = self.chain.push(ChainEntry::new(op, node, traditional, Phase::Bp));
+        DataRef::Gconv(idx)
+    }
+
+    /// Push a weight-gradient op.
+    pub fn emit_wg(&mut self, node: NodeId, op: GconvOp) -> DataRef {
+        let traditional = self.net.node(node).layer.is_traditional();
+        let idx = self.chain.push(ChainEntry::new(op, node, traditional, Phase::Wg));
+        DataRef::Gconv(idx)
+    }
+
+    /// Seed `grad` at the network outputs with the loss gradient.
+    fn seed_output_gradients(&mut self) {
+        for out in self.net.outputs() {
+            self.grad[out] = Some(DataRef::External(format!("loss_grad.{out}")));
+        }
+    }
+
+    /// Gradient flowing into node `id`'s output; if several consumers
+    /// contributed, they have already been summed by `accumulate_grad`.
+    pub fn grad_of(&self, id: NodeId) -> Option<DataRef> {
+        self.grad[id].clone()
+    }
+
+    /// Record `g` as (part of) the gradient of node `id`, emitting an
+    /// element-wise accumulation GCONV when a gradient is already present
+    /// (fan-out nodes receive one contribution per consumer).
+    pub fn accumulate_grad(&mut self, id: NodeId, g: DataRef) {
+        let merged = match self.grad[id].take() {
+            None => g,
+            Some(prev) => {
+                let shape = self.net.node(id).output.clone();
+                let name = format!("{}.grad_acc", self.net.node(id).name);
+                let op = GconvOp {
+                    name,
+                    dims: ew_dims(&shape, &shape.dims()),
+                    pre: PreOp::None,
+                    main: MainOp::Add,
+                    reduce: ReduceOp::None,
+                    post: PostOp::None,
+                    input: prev,
+                    kernel: Some(g),
+                };
+                self.emit_bp(id, op)
+            }
+        };
+        self.grad[id] = Some(merged);
+    }
+}
+
+/// Dim params for an element-wise GCONV over `shape`: dimensions in
+/// `kernel_varies` become `Ng` (a distinct kernel parameter per
+/// position), the rest become `Nopc` (one-weight kernel sliding — the
+/// paper's B-dimension idiom, Fig. 5).
+pub(crate) fn ew_dims(shape: &Shape, kernel_varies: &[Dim]) -> Vec<(Dim, DimParams)> {
+    shape
+        .iter()
+        .filter(|&(_, n)| n > 1)
+        .map(|(d, n)| {
+            if kernel_varies.contains(&d) {
+                (d, DimParams::g(n))
+            } else {
+                (d, DimParams::opc(n))
+            }
+        })
+        .collect()
+}
+
+/// An element-wise GCONV (no reduction).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ew_op(
+    name: &str,
+    shape: &Shape,
+    kernel_varies: &[Dim],
+    pre: PreOp,
+    main: MainOp,
+    post: PostOp,
+    input: DataRef,
+    kernel: Option<DataRef>,
+) -> GconvOp {
+    GconvOp {
+        name: name.to_string(),
+        dims: ew_dims(shape, kernel_varies),
+        pre,
+        main,
+        reduce: ReduceOp::None,
+        post,
+        input,
+        kernel,
+    }
+}
+
+/// A kernel-less reduction over dimension `rd` of `shape` (mean/var/sum/
+/// max patterns: BN FP1/FP3, softmax denominators, global pooling).
+pub(crate) fn reduce_op(
+    name: &str,
+    shape: &Shape,
+    rd: &[Dim],
+    pre: PreOp,
+    reduce: ReduceOp,
+    post: PostOp,
+    input: DataRef,
+) -> GconvOp {
+    let dims = shape
+        .iter()
+        .filter(|&(_, n)| n > 1)
+        .map(|(d, n)| if rd.contains(&d) { (d, DimParams::ks(n)) } else { (d, DimParams::opc(n)) })
+        .collect();
+    GconvOp {
+        name: name.to_string(),
+        dims,
+        pre,
+        main: MainOp::Pass,
+        reduce,
+        post,
+        input,
+        kernel: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, PoolKind};
+
+    fn bn_net() -> Network {
+        let mut net = Network::new("bn");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(32, 16, 8, 8) }, &[]);
+        net.add("bn1", Layer::BatchNorm, &[i]);
+        net
+    }
+
+    #[test]
+    fn bn_fp_produces_four_gconvs() {
+        // Table 2: FP decomposes into FP1..FP4 (input layer adds 0).
+        let chain = lower_network(&bn_net(), Mode::Inference);
+        assert_eq!(chain.len(), 4);
+        let names: Vec<&str> =
+            chain.entries().iter().map(|e| e.op.name.rsplit('.').next().unwrap()).collect();
+        assert_eq!(names, vec!["FP1", "FP2", "FP3", "FP4"]);
+    }
+
+    #[test]
+    fn bn_training_adds_six_bp_gconvs() {
+        // Table 2: BP decomposes into BP1..BP6.
+        let chain = lower_network(&bn_net(), Mode::Training);
+        assert_eq!(chain.len(), 10);
+        assert_eq!(chain.entries().iter().filter(|e| e.phase == Phase::Bp).count(), 6);
+    }
+
+    #[test]
+    fn bn_fp1_matches_table2() {
+        // FP1: B:[Nks: Nbs], C/H/W:[Nopc], reduce add, post x 1/Nbs.
+        let chain = lower_network(&bn_net(), Mode::Inference);
+        let fp1 = &chain.entries()[0].op;
+        assert_eq!(fp1.params(Dim::B), DimParams::ks(32));
+        assert_eq!(fp1.params(Dim::C), DimParams::opc(16));
+        assert_eq!(fp1.reduce, ReduceOp::Add);
+        assert!(matches!(fp1.post, PostOp::Mul(_)));
+        assert!(fp1.kernel.is_none());
+    }
+
+    #[test]
+    fn bn_fp2_matches_table2() {
+        // FP2: B:[Nopc: Nbs], C/H/W:[Ng], main sub, kernel = FP1 output.
+        let chain = lower_network(&bn_net(), Mode::Inference);
+        let fp2 = &chain.entries()[1].op;
+        assert_eq!(fp2.params(Dim::B), DimParams::opc(32));
+        assert_eq!(fp2.params(Dim::C), DimParams::g(16));
+        assert_eq!(fp2.main, MainOp::Sub);
+        assert_eq!(fp2.kernel, Some(DataRef::Gconv(0)));
+    }
+
+    #[test]
+    fn fanout_gradients_are_accumulated() {
+        // A node consumed twice must get an accumulation GCONV in BP.
+        let mut net = Network::new("fanout");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(4, 8, 4, 4) }, &[]);
+        let r = net.add("relu", Layer::Relu, &[i]);
+        let a = net.add("b1", Layer::Relu, &[r]);
+        let b = net.add("b2", Layer::Relu, &[r]);
+        net.add("join", Layer::Eltwise, &[a, b]);
+        let chain = lower_network(&net, Mode::Training);
+        assert!(chain.entries().iter().any(|e| e.op.name.contains("grad_acc")));
+    }
+
+    #[test]
+    fn conv_layer_matches_figure5() {
+        let mut net = Network::new("conv");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(32, 3, 32, 32) }, &[]);
+        net.add(
+            "conv1",
+            Layer::Conv { out_channels: 64, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+            &[i],
+        );
+        let chain = lower_network(&net, Mode::Inference);
+        assert_eq!(chain.len(), 1);
+        let g = &chain.entries()[0].op;
+        // Fig. 5: B:[Nopc:Nbs]; C:[Ng:Ngp, Nop:Noc, Nks:Nic]; H/W windows.
+        assert_eq!(g.params(Dim::B), DimParams::opc(32));
+        assert_eq!(g.params(Dim::C), DimParams { nop: 64, nks: 3, ..Default::default() });
+        assert_eq!(g.params(Dim::H), DimParams::window(32, 3, 1, 1));
+        assert_eq!(g.main, MainOp::Mul);
+        assert_eq!(g.reduce, ReduceOp::Add);
+    }
+
+    #[test]
+    fn pooling_uses_max_reduce_without_kernel() {
+        let mut net = Network::new("pool");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(4, 8, 8, 8) }, &[]);
+        net.add("p", Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 }, &[i]);
+        let chain = lower_network(&net, Mode::Inference);
+        let g = &chain.entries()[0].op;
+        assert_eq!(g.reduce, ReduceOp::Max);
+        assert!(g.kernel.is_none());
+        assert_eq!(g.params(Dim::H), DimParams::window(4, 2, 2, 0));
+    }
+
+    #[test]
+    fn training_work_exceeds_inference_work() {
+        let mut net = Network::new("t");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(8, 3, 16, 16) }, &[]);
+        let c = net.add(
+            "conv",
+            Layer::Conv { out_channels: 8, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+            &[i],
+        );
+        net.add("relu", Layer::Relu, &[c]);
+        let inf = lower_network(&net, Mode::Inference).total_work();
+        let trn = lower_network(&net, Mode::Training).total_work();
+        assert!(trn >= 2 * inf, "training {trn} should be >= 2x inference {inf}");
+    }
+}

@@ -1,0 +1,14 @@
+//! The GCONV operation model and layer→GCONV lowering (paper §3).
+//!
+//! A GCONV is a concisely parameterized 1-D convolution scaled up to the
+//! dimensions present in the data ([`op::GconvOp`]). The [`lower`]
+//! module decomposes every CNN layer — forward and backward — into a
+//! short sequence of GCONVs, and [`chain`] threads the per-layer
+//! sequences into the end-to-end [`chain::GconvChain`].
+
+pub mod chain;
+pub mod lower;
+pub mod op;
+
+pub use chain::{ChainEntry, GconvChain};
+pub use op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};

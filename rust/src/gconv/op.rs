@@ -1,0 +1,412 @@
+//! The GCONV operation (paper §3.1).
+//!
+//! A 1-D GCONV is characterized by four loop parameters — groups `Ng`,
+//! parallel kernels `Nop`, outputs per kernel `Nopc`, kernel size `Nks` —
+//! plus stride `s` and padding `ps`. A multi-dimension GCONV duplicates
+//! the same four loops per data dimension (Fig. 4). Four operators
+//! (`pre`/`main`/`reduce`/`post`) replace the fixed multiply-accumulate
+//! of traditional convolution (§3.1 "Representability").
+
+use crate::ir::Dim;
+use std::fmt;
+
+/// The four loop parameters of one dimension of a GCONV, plus stride and
+/// padding. Defaults (paper §3.1): `ps: 0, s: 1, Ng: 1, Nop: 1, Nks: 1,
+/// Nopc: 1` — a dimension left at defaults contributes no loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DimParams {
+    /// Number of isolated groups (no inter-group reuse).
+    pub ng: usize,
+    /// Number of kernels applied in parallel (input parallel-reuse).
+    pub nop: usize,
+    /// Number of outputs per kernel (kernel parallel-reuse).
+    pub nopc: usize,
+    /// Kernel size (output parallel-reuse / reduction depth).
+    pub nks: usize,
+    /// Stride.
+    pub s: usize,
+    /// Padding.
+    pub ps: usize,
+}
+
+impl Default for DimParams {
+    fn default() -> Self {
+        DimParams { ng: 1, nop: 1, nopc: 1, nks: 1, s: 1, ps: 0 }
+    }
+}
+
+impl DimParams {
+    /// `[Ng: n]`
+    pub fn g(n: usize) -> Self {
+        DimParams { ng: n, ..Default::default() }
+    }
+    /// `[Nop: n]`
+    pub fn op(n: usize) -> Self {
+        DimParams { nop: n, ..Default::default() }
+    }
+    /// `[Nopc: n]`
+    pub fn opc(n: usize) -> Self {
+        DimParams { nopc: n, ..Default::default() }
+    }
+    /// `[Nks: n]`
+    pub fn ks(n: usize) -> Self {
+        DimParams { nks: n, ..Default::default() }
+    }
+    /// Sliding-window dimension `[Nopc: o, Nks: k, s, ps]`.
+    pub fn window(nopc: usize, nks: usize, s: usize, ps: usize) -> Self {
+        DimParams { nopc, nks, s, ps, ..Default::default() }
+    }
+
+    /// Input extent covered by this dimension, from Eq. (1) (with the
+    /// standard convolution arithmetic `Nips = (Nopc−1)·s + Nks − 2·ps`;
+    /// the paper's printing has a `+1` typo).
+    pub fn input_extent(&self) -> usize {
+        let covered = (self.nopc - 1) * self.s + self.nks;
+        // Degenerate windows (kernel larger than the padded input, which
+        // backward-pass "full" correlations can produce at tensor edges)
+        // clamp to a single input element.
+        self.ng * covered.saturating_sub(2 * self.ps).max(1)
+    }
+
+    /// Kernel parameters stored for this dimension.
+    pub fn kernel_extent(&self) -> usize {
+        self.ng * self.nop * self.nks
+    }
+
+    /// Outputs produced along this dimension.
+    pub fn output_extent(&self) -> usize {
+        self.ng * self.nop * self.nopc
+    }
+
+    /// Loop iterations (work) along this dimension.
+    pub fn work(&self) -> usize {
+        self.ng * self.nop * self.nopc * self.nks
+    }
+
+    /// Does this dimension overlap-reuse inputs? §3.1: consecutive output
+    /// windows overlap when `Nks > s` — which requires an actual sliding
+    /// window (`Nopc > 1`; a kernel covering the whole input in parallel,
+    /// like the C dimension of Fig. 5, produces a single window).
+    pub fn overlap_reuse(&self) -> bool {
+        self.nopc > 1 && self.nks > self.s && self.nks > 1
+    }
+
+    /// Is every parameter at its default (contributes no loops)?
+    pub fn is_default(&self) -> bool {
+        *self == DimParams::default()
+    }
+
+    /// Loop count of parameter `p`.
+    pub fn get(&self, p: Param) -> usize {
+        match p {
+            Param::G => self.ng,
+            Param::Op => self.nop,
+            Param::Opc => self.nopc,
+            Param::Ks => self.nks,
+        }
+    }
+}
+
+/// The four GCONV loop parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Param {
+    /// Kernel size loop.
+    Ks,
+    /// Outputs-per-kernel loop.
+    Opc,
+    /// Parallel-kernel loop.
+    Op,
+    /// Group loop.
+    G,
+}
+
+impl Param {
+    /// All parameters.
+    pub const ALL: [Param; 4] = [Param::Ks, Param::Opc, Param::Op, Param::G];
+
+    /// Short name as used in the paper's unrolling entries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Param::Ks => "ks",
+            Param::Opc => "opc",
+            Param::Op => "op",
+            Param::G => "g",
+        }
+    }
+}
+
+impl fmt::Display for Param {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Pre-processing operator applied to each input as it is loaded into the
+/// convolution engine (§3.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PreOp {
+    /// No pre-processing.
+    None,
+    /// Square each input (BN FP3).
+    Square,
+    /// Multiply by a scalar constant.
+    Mul(f32),
+    /// Look-up-table function (exp, sigmoid, …) named for reports.
+    Lut(&'static str),
+}
+
+/// Main operator between inputs and kernel parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MainOp {
+    /// Multiply (traditional convolution).
+    Mul,
+    /// Add.
+    Add,
+    /// Subtract (input − parameter).
+    Sub,
+    /// Square of the difference.
+    SquareDiff,
+    /// Logical/bitwise AND (binary networks, masks).
+    And,
+    /// Pass the input through unchanged (pooling, copies — no kernel).
+    Pass,
+    /// Compare against the parameter, keep max (maxout-style).
+    Max,
+}
+
+/// Reduction operator over the partial results within a kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// No reduction (element-wise GCONV, `Nks = 1` everywhere).
+    None,
+    /// Sum (traditional convolution).
+    Add,
+    /// Maximum (max pooling).
+    Max,
+}
+
+/// Post-processing operator applied to each output on write-back.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PostOp {
+    /// No post-processing.
+    None,
+    /// Multiply by a scalar constant (e.g. `1/Nbs` for means).
+    Mul(f32),
+    /// Look-up-table function (rsqrt, exp, relu, sigmoid, …).
+    Lut(&'static str),
+}
+
+/// Where a GCONV operand comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DataRef {
+    /// Output of a previous GCONV on the chain (by chain index).
+    Gconv(usize),
+    /// An external tensor: the network input, a layer's stored
+    /// activations (`"L12.out"`), gradients from the next layer, …
+    External(String),
+    /// Trained parameters of a layer (weights, BN γ/β, masks).
+    Weights(String),
+}
+
+impl fmt::Display for DataRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataRef::Gconv(i) => write!(f, "#{i}"),
+            DataRef::External(s) => write!(f, "{s}"),
+            DataRef::Weights(s) => write!(f, "W[{s}]"),
+        }
+    }
+}
+
+/// A multi-dimension GCONV operation.
+#[derive(Clone, Debug)]
+pub struct GconvOp {
+    /// Label for reports (e.g. `"conv1.fp"`, `"bn3.FP2"`).
+    pub name: String,
+    /// Per-dimension loop parameters in a canonical order. Dimensions not
+    /// listed are at defaults (pruned, §3.1 "Scalability").
+    pub dims: Vec<(Dim, DimParams)>,
+    /// Operators.
+    pub pre: PreOp,
+    /// Main operator.
+    pub main: MainOp,
+    /// Reduction operator.
+    pub reduce: ReduceOp,
+    /// Post operator.
+    pub post: PostOp,
+    /// Input operand.
+    pub input: DataRef,
+    /// Kernel-parameter operand (None for kernel-less ops like pooling).
+    pub kernel: Option<DataRef>,
+}
+
+impl GconvOp {
+    /// Construct with default operators (multiply/add convolution).
+    pub fn conv(name: &str, dims: Vec<(Dim, DimParams)>, input: DataRef, kernel: DataRef) -> Self {
+        GconvOp {
+            name: name.to_string(),
+            dims,
+            pre: PreOp::None,
+            main: MainOp::Mul,
+            reduce: ReduceOp::Add,
+            post: PostOp::None,
+            input,
+            kernel: Some(kernel),
+        }
+    }
+
+    /// Parameters for dimension `d` (defaults if unlisted).
+    pub fn params(&self, d: Dim) -> DimParams {
+        self.dims.iter().find(|&&(x, _)| x == d).map_or_else(DimParams::default, |&(_, p)| p)
+    }
+
+    /// Dimensions with non-default parameters.
+    pub fn active_dims(&self) -> Vec<Dim> {
+        self.dims.iter().filter(|(_, p)| !p.is_default()).map(|&(d, _)| d).collect()
+    }
+
+    /// Total loop iterations = `Π_d Π_p loops[d][p]` — the number of
+    /// `main` operations executed.
+    pub fn work(&self) -> usize {
+        self.dims.iter().map(|(_, p)| p.work()).product()
+    }
+
+    /// Total input elements touched (with overlap-reuse discounted),
+    /// `Π_d Ng·((Nopc−1)s+Nks−2ps)` per Table 3.
+    pub fn input_elements(&self) -> usize {
+        self.dims.iter().map(|(_, p)| p.input_extent()).product()
+    }
+
+    /// Total kernel parameters, `Π_d Ng·Nop·Nks`.
+    pub fn kernel_elements(&self) -> usize {
+        if self.kernel.is_none() {
+            return 0;
+        }
+        self.dims.iter().map(|(_, p)| p.kernel_extent()).product()
+    }
+
+    /// Total outputs, `Π_d Ng·Nop·Nopc`.
+    pub fn output_elements(&self) -> usize {
+        self.dims.iter().map(|(_, p)| p.output_extent()).product()
+    }
+
+    /// True when the op has no reduction — a candidate for operation
+    /// fusion into a neighbour's `pre`/`post`/`main` (paper §4.3).
+    pub fn is_fusible(&self) -> bool {
+        self.reduce == ReduceOp::None
+    }
+
+    /// Dimensions that overlap-reuse inputs, in mapping order.
+    pub fn overlap_dims(&self) -> Vec<Dim> {
+        Dim::MAPPING_ORDER
+            .iter()
+            .copied()
+            .filter(|&d| self.params(d).overlap_reuse())
+            .collect()
+    }
+}
+
+impl fmt::Display for GconvOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ", self.name)?;
+        for (d, p) in &self.dims {
+            if p.is_default() {
+                continue;
+            }
+            write!(f, "{d}[")?;
+            let mut first = true;
+            let mut field = |f: &mut fmt::Formatter<'_>, name: &str, v: usize, dft: usize| {
+                if v != dft {
+                    if !first {
+                        let _ = write!(f, " ");
+                    }
+                    first = false;
+                    let _ = write!(f, "{name}:{v}");
+                }
+                Ok::<(), fmt::Error>(())
+            };
+            field(f, "Ng", p.ng, 1)?;
+            field(f, "Nop", p.nop, 1)?;
+            field(f, "Nopc", p.nopc, 1)?;
+            field(f, "Nks", p.nks, 1)?;
+            field(f, "s", p.s, 1)?;
+            field(f, "ps", p.ps, 0)?;
+            write!(f, "] ")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_3x3() -> GconvOp {
+        // 16 kernels of 3x3x8 on a 8x10x10 input (pad 1), batch 4.
+        GconvOp::conv(
+            "conv",
+            vec![
+                (Dim::B, DimParams::opc(4)),
+                (Dim::C, DimParams { nop: 16, nks: 8, ..Default::default() }),
+                (Dim::H, DimParams::window(10, 3, 1, 1)),
+                (Dim::W, DimParams::window(10, 3, 1, 1)),
+            ],
+            DataRef::External("x".into()),
+            DataRef::Weights("w".into()),
+        )
+    }
+
+    #[test]
+    fn work_counts_macs() {
+        // 4 * (16*8) * (10*3) * (10*3) MACs.
+        assert_eq!(conv_3x3().work(), 4 * 16 * 8 * 30 * 30);
+    }
+
+    #[test]
+    fn input_extent_inverts_conv_arithmetic() {
+        // H: (10-1)*1 + 3 - 2*1 = 10 inputs.
+        assert_eq!(DimParams::window(10, 3, 1, 1).input_extent(), 10);
+        // stride-2: (5-1)*2 + 3 = 11 inputs, no pad.
+        assert_eq!(DimParams::window(5, 3, 2, 0).input_extent(), 11);
+    }
+
+    #[test]
+    fn element_counts() {
+        let g = conv_3x3();
+        assert_eq!(g.input_elements(), 4 * 8 * 10 * 10);
+        assert_eq!(g.kernel_elements(), 16 * 8 * 3 * 3);
+        assert_eq!(g.output_elements(), 4 * 16 * 10 * 10);
+    }
+
+    #[test]
+    fn overlap_dims_detect_sliding_windows() {
+        assert_eq!(conv_3x3().overlap_dims(), vec![Dim::W, Dim::H]);
+    }
+
+    #[test]
+    fn default_dims_prune() {
+        let g = conv_3x3();
+        assert_eq!(g.params(Dim::T), DimParams::default());
+        assert!(!g.active_dims().contains(&Dim::T));
+    }
+
+    #[test]
+    fn batch_dim_as_kernel_sliding() {
+        // Fig. 5: B dimension of a conv layer is [Nopc: Nbs] — one-weight
+        // kernel sliding along the batch.
+        let p = DimParams::opc(32);
+        assert_eq!(p.input_extent(), 32);
+        assert_eq!(p.output_extent(), 32);
+        assert_eq!(p.kernel_extent(), 1);
+        assert!(!p.overlap_reuse());
+    }
+
+    #[test]
+    fn reduction_dim_covers_input() {
+        // Fig. 5: C dimension has Nks = Nic (kernel covers the input).
+        let p = DimParams { nop: 16, nks: 8, ..Default::default() };
+        assert_eq!(p.input_extent(), 8);
+        assert_eq!(p.kernel_extent(), 16 * 8);
+        assert_eq!(p.output_extent(), 16);
+    }
+}

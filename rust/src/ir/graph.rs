@@ -1,0 +1,157 @@
+//! Network DAG with automatic shape inference.
+
+use super::layer::Layer;
+use super::tensor::Shape;
+
+/// Index of a node in a [`Network`].
+pub type NodeId = usize;
+
+/// A layer instance in the network DAG.
+#[derive(Clone, Debug)]
+pub struct LayerNode {
+    /// Stable identifier (index into [`Network::nodes`]).
+    pub id: NodeId,
+    /// Display name, e.g. `"conv1"`.
+    pub name: String,
+    /// The layer operation.
+    pub layer: Layer,
+    /// Producer nodes.
+    pub inputs: Vec<NodeId>,
+    /// Inferred output shape.
+    pub output: Shape,
+}
+
+/// A CNN expressed as a DAG of layers in topological order (nodes are
+/// appended after their producers, which the builder enforces).
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    /// Network name, e.g. `"AlexNet"`.
+    pub name: String,
+    nodes: Vec<LayerNode>,
+}
+
+impl Network {
+    /// Create an empty network.
+    pub fn new(name: &str) -> Self {
+        Network { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Append a layer fed by `inputs`; returns its id. Shapes are
+    /// inferred eagerly so construction fails fast on bad wiring.
+    pub fn add(&mut self, name: &str, layer: Layer, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "node {name}: input {i} not yet defined");
+        }
+        let input_shapes: Vec<&Shape> = inputs.iter().map(|&i| &self.nodes[i].output).collect();
+        let output = layer.infer_shape(&input_shapes);
+        self.nodes.push(LayerNode { id, name: name.to_string(), layer, inputs: inputs.to_vec(), output });
+        id
+    }
+
+    /// All nodes in topological order.
+    pub fn nodes(&self) -> &[LayerNode] {
+        &self.nodes
+    }
+
+    /// Node by id.
+    pub fn node(&self, id: NodeId) -> &LayerNode {
+        &self.nodes[id]
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the network has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Input shapes of a node.
+    pub fn input_shapes(&self, id: NodeId) -> Vec<&Shape> {
+        self.nodes[id].inputs.iter().map(|&i| &self.nodes[i].output).collect()
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| n.layer.param_count(&self.input_shapes(n.id)))
+            .sum()
+    }
+
+    /// Ids of nodes nothing consumes (network outputs).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        let mut consumed = vec![false; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                consumed[i] = true;
+            }
+        }
+        (0..self.nodes.len()).filter(|&i| !consumed[i]).collect()
+    }
+
+    /// Consumers of each node (inverse edges).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Dim, PoolKind};
+
+    fn tiny() -> Network {
+        let mut net = Network::new("tiny");
+        let inp = net.add("data", Layer::Input { shape: Shape::bchw(4, 3, 8, 8) }, &[]);
+        let c = net.add(
+            "conv1",
+            Layer::Conv { out_channels: 16, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+            &[inp],
+        );
+        let r = net.add("relu1", Layer::Relu, &[c]);
+        net.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 }, &[r]);
+        net
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let net = tiny();
+        assert_eq!(net.node(3).output.extent(Dim::H), 4);
+        assert_eq!(net.node(1).output.extent(Dim::C), 16);
+    }
+
+    #[test]
+    fn outputs_are_unconsumed_nodes() {
+        let net = tiny();
+        assert_eq!(net.outputs(), vec![3]);
+    }
+
+    #[test]
+    fn consumers_inverse_edges() {
+        let net = tiny();
+        assert_eq!(net.consumers()[1], vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_rejected() {
+        let mut net = Network::new("bad");
+        net.add("r", Layer::Relu, &[5]);
+    }
+
+    #[test]
+    fn param_count_sums() {
+        let net = tiny();
+        assert_eq!(net.param_count(), 3 * 3 * 3 * 16 + 16);
+    }
+}

@@ -1,0 +1,367 @@
+//! Layer definitions and shape inference.
+//!
+//! Covers the traditional layers of LeNet-era CNNs plus every
+//! non-traditional layer introduced by the paper's seven benchmarks
+//! (Table 1(a)): LRN + dropout (AlexNet), average pooling + concat
+//! (GoogLeNet), batch norm + scale (DenseNet), depthwise convolution
+//! (MobileNet), RoI pooling + proposal (Faster R-CNN), 3-D conv/pool
+//! (C3D) and primary/digit capsules (CapsNet).
+
+use super::tensor::{Dim, Shape};
+
+/// Pooling flavour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// A CNN layer. Spatial hyper-parameters follow Caffe conventions
+/// (square kernels unless noted; `pad` applied symmetrically).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    /// Network input placeholder.
+    Input { shape: Shape },
+    /// 2-D convolution. `groups == in_channels` models depthwise
+    /// convolution (MobileNet); `groups > 1` models grouped convolution
+    /// (AlexNet).
+    Conv { out_channels: usize, kernel: (usize, usize), stride: usize, pad: usize, groups: usize },
+    /// 3-D convolution over `(T, H, W)` (C3D).
+    Conv3d { out_channels: usize, kernel: (usize, usize, usize), stride: usize, pad: usize },
+    /// Fully-connected layer.
+    FullyConnected { out_features: usize },
+    /// 2-D pooling.
+    Pool { kind: PoolKind, kernel: usize, stride: usize, pad: usize },
+    /// Global average pooling over all spatial dims (GoogLeNet head).
+    GlobalAvgPool,
+    /// 3-D pooling over `(T, H, W)` (C3D).
+    Pool3d { kind: PoolKind, kernel: (usize, usize, usize), stride: (usize, usize, usize) },
+    /// Rectified linear unit.
+    Relu,
+    /// Sigmoid activation.
+    Sigmoid,
+    /// Softmax over channels.
+    Softmax,
+    /// Local response normalization (AlexNet): `local_size` window over C.
+    Lrn { local_size: usize },
+    /// Batch normalization (statistics over B×H×W per channel).
+    BatchNorm,
+    /// Per-channel affine scale + shift (Caffe `Scale`, follows BN).
+    Scale,
+    /// Dropout (training: multiply by Bernoulli mask and rescale).
+    Dropout,
+    /// Channel-wise concatenation of all inputs.
+    Concat,
+    /// Element-wise addition of all inputs (residual joins).
+    Eltwise,
+    /// RoI max-pooling (Faster R-CNN): pools `num_rois` regions to a
+    /// fixed `output` spatial size; RoI coordinates come from `Proposal`.
+    RoiPool { num_rois: usize, output: (usize, usize) },
+    /// Region proposal (Faster R-CNN): per-anchor box regression +
+    /// objectness scoring + NMS, modelled as element-wise chains.
+    Proposal { anchors: usize },
+    /// Primary capsules (CapsNet): conv into `caps × vec` channels then
+    /// squash; `vec` is the capsule pose length.
+    PrimaryCaps { caps_channels: usize, vec: usize, kernel: usize, stride: usize },
+    /// Digit capsules (CapsNet): fully-connected capsule transform with
+    /// `routing` iterations of dynamic routing.
+    DigitCaps { out_caps: usize, out_vec: usize, routing: usize },
+}
+
+impl Layer {
+    /// Human-readable kind name (used in reports and chain labels).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Input { .. } => "input",
+            Layer::Conv { groups, out_channels, .. } if groups == out_channels && *groups > 1 => "conv(grouped)",
+            Layer::Conv { .. } => "conv",
+            Layer::Conv3d { .. } => "conv3d",
+            Layer::FullyConnected { .. } => "fc",
+            Layer::Pool { .. } => "pool",
+            Layer::GlobalAvgPool => "global_avg_pool",
+            Layer::Pool3d { .. } => "pool3d",
+            Layer::Relu => "relu",
+            Layer::Sigmoid => "sigmoid",
+            Layer::Softmax => "softmax",
+            Layer::Lrn { .. } => "lrn",
+            Layer::BatchNorm => "batch_norm",
+            Layer::Scale => "scale",
+            Layer::Dropout => "dropout",
+            Layer::Concat => "concat",
+            Layer::Eltwise => "eltwise",
+            Layer::RoiPool { .. } => "roi_pool",
+            Layer::Proposal { .. } => "proposal",
+            Layer::PrimaryCaps { .. } => "primary_caps",
+            Layer::DigitCaps { .. } => "digit_caps",
+        }
+    }
+
+    /// Is this one of the *traditional* layers a convolution-intended
+    /// processor (CIP) handles on-chip (paper §2.1/§6.2: convolution,
+    /// fully-connected, max pooling, ReLU, softmax)?
+    ///
+    /// Everything else is "non-traditional" and must be offloaded by CIP
+    /// baselines. Depthwise/grouped convolution counts as non-traditional:
+    /// Table 1(a) lists `depthwise conv` as MobileNet's new layer type
+    /// (CIP dataflows cannot exploit their feature-map unrolling, Fig. 13).
+    pub fn is_traditional(&self) -> bool {
+        match self {
+            Layer::Input { .. } => true,
+            // Grouped convolution is part of the traditional definition
+            // (Fig. 2 includes Ngp); *depthwise* convolution — one group
+            // per channel — is the non-traditional MobileNet layer.
+            Layer::Conv { groups, out_channels, .. } => groups < out_channels || *groups == 1,
+            Layer::FullyConnected { .. } => true,
+            Layer::Pool { kind: PoolKind::Max, .. } => true,
+            Layer::Relu => true,
+            Layer::Softmax => true,
+            _ => false,
+        }
+    }
+
+    /// Infer the output shape from input shapes (most layers are
+    /// single-input; `Concat`/`Eltwise` take several).
+    pub fn infer_shape(&self, inputs: &[&Shape]) -> Shape {
+        let single = || -> &Shape {
+            assert_eq!(inputs.len(), 1, "{} expects one input", self.kind());
+            inputs[0]
+        };
+        match self {
+            Layer::Input { shape } => {
+                assert!(inputs.is_empty(), "input layer takes no inputs");
+                shape.clone()
+            }
+            Layer::Conv { out_channels, kernel, stride, pad, groups } => {
+                let s = single();
+                let ic = s.extent(Dim::C);
+                assert_eq!(ic % groups, 0, "channels {ic} not divisible by groups {groups}");
+                assert_eq!(out_channels % groups, 0);
+                s.with(Dim::C, *out_channels)
+                    .with(Dim::H, conv_out(s.extent(Dim::H), kernel.0, *stride, *pad))
+                    .with(Dim::W, conv_out(s.extent(Dim::W), kernel.1, *stride, *pad))
+            }
+            Layer::Conv3d { out_channels, kernel, stride, pad } => {
+                let s = single();
+                s.with(Dim::C, *out_channels)
+                    .with(Dim::T, conv_out(s.extent(Dim::T), kernel.0, *stride, *pad))
+                    .with(Dim::H, conv_out(s.extent(Dim::H), kernel.1, *stride, *pad))
+                    .with(Dim::W, conv_out(s.extent(Dim::W), kernel.2, *stride, *pad))
+            }
+            Layer::FullyConnected { out_features } => {
+                let s = single();
+                Shape::new(&[(Dim::B, s.extent(Dim::B)), (Dim::C, *out_features)])
+            }
+            Layer::Pool { kernel, stride, pad, .. } => {
+                let s = single();
+                s.with(Dim::H, pool_out(s.extent(Dim::H), *kernel, *stride, *pad))
+                    .with(Dim::W, pool_out(s.extent(Dim::W), *kernel, *stride, *pad))
+            }
+            Layer::GlobalAvgPool => {
+                let s = single();
+                s.with(Dim::H, 1).with(Dim::W, 1)
+            }
+            Layer::Pool3d { kernel, stride, .. } => {
+                let s = single();
+                s.with(Dim::T, pool_out(s.extent(Dim::T), kernel.0, stride.0, 0))
+                    .with(Dim::H, pool_out(s.extent(Dim::H), kernel.1, stride.1, 0))
+                    .with(Dim::W, pool_out(s.extent(Dim::W), kernel.2, stride.2, 0))
+            }
+            Layer::Relu
+            | Layer::Sigmoid
+            | Layer::Softmax
+            | Layer::Lrn { .. }
+            | Layer::BatchNorm
+            | Layer::Scale
+            | Layer::Dropout => single().clone(),
+            Layer::Concat => {
+                assert!(!inputs.is_empty());
+                let base = inputs[0];
+                let mut c = 0;
+                for s in inputs {
+                    assert_eq!(s.extent(Dim::H), base.extent(Dim::H), "concat H mismatch");
+                    assert_eq!(s.extent(Dim::W), base.extent(Dim::W), "concat W mismatch");
+                    c += s.extent(Dim::C);
+                }
+                base.with(Dim::C, c)
+            }
+            Layer::Eltwise => {
+                assert!(!inputs.is_empty());
+                for s in inputs {
+                    assert_eq!(*s, inputs[0], "eltwise shape mismatch");
+                }
+                inputs[0].clone()
+            }
+            Layer::RoiPool { num_rois, output } => {
+                let s = single();
+                // RoIs become the batch dimension of the pooled output
+                // (Caffe semantics: N = #rois).
+                Shape::new(&[
+                    (Dim::B, s.extent(Dim::B) * num_rois),
+                    (Dim::C, s.extent(Dim::C)),
+                    (Dim::H, output.0),
+                    (Dim::W, output.1),
+                ])
+            }
+            Layer::Proposal { anchors } => {
+                let s = single();
+                // 4 regressed coordinates per anchor per position.
+                Shape::new(&[
+                    (Dim::B, s.extent(Dim::B)),
+                    (Dim::C, anchors * 4),
+                    (Dim::H, s.extent(Dim::H)),
+                    (Dim::W, s.extent(Dim::W)),
+                ])
+            }
+            Layer::PrimaryCaps { caps_channels, vec, kernel, stride } => {
+                let s = single();
+                Shape::new(&[
+                    (Dim::B, s.extent(Dim::B)),
+                    (Dim::C, *caps_channels),
+                    (Dim::H, conv_out(s.extent(Dim::H), *kernel, *stride, 0)),
+                    (Dim::W, conv_out(s.extent(Dim::W), *kernel, *stride, 0)),
+                    (Dim::V, *vec),
+                ])
+            }
+            Layer::DigitCaps { out_caps, out_vec, .. } => {
+                let s = single();
+                Shape::new(&[(Dim::B, s.extent(Dim::B)), (Dim::C, *out_caps), (Dim::V, *out_vec)])
+            }
+        }
+    }
+
+    /// Number of trainable parameters given the input shapes.
+    pub fn param_count(&self, inputs: &[&Shape]) -> usize {
+        match self {
+            Layer::Conv { out_channels, kernel, groups, .. } => {
+                let ic = inputs[0].extent(Dim::C);
+                kernel.0 * kernel.1 * (ic / groups) * out_channels + out_channels
+            }
+            Layer::Conv3d { out_channels, kernel, .. } => {
+                let ic = inputs[0].extent(Dim::C);
+                kernel.0 * kernel.1 * kernel.2 * ic * out_channels + out_channels
+            }
+            Layer::FullyConnected { out_features } => {
+                let in_features = inputs[0].elements() / inputs[0].extent(Dim::B);
+                in_features * out_features + out_features
+            }
+            Layer::BatchNorm => 2 * inputs[0].extent(Dim::C),
+            Layer::Scale => 2 * inputs[0].extent(Dim::C),
+            Layer::PrimaryCaps { caps_channels, vec, kernel, .. } => {
+                let ic = inputs[0].extent(Dim::C);
+                kernel * kernel * ic * caps_channels * vec
+            }
+            Layer::DigitCaps { out_caps, out_vec, .. } => {
+                let s = inputs[0];
+                let in_caps =
+                    s.extent(Dim::C) * s.extent(Dim::H) * s.extent(Dim::W) * s.extent(Dim::T);
+                let in_vec = s.extent(Dim::V);
+                in_caps * in_vec * out_caps * out_vec
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// Output extent of a convolution along one axis.
+pub fn conv_out(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(input + 2 * pad >= kernel, "kernel {kernel} larger than padded input {input}+2*{pad}");
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+/// Output extent of pooling along one axis (Caffe rounds *up*).
+pub fn pool_out(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(input + 2 * pad >= kernel);
+    (input + 2 * pad - kernel).div_ceil(stride) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(c: usize, hw: usize) -> Shape {
+        Shape::bchw(32, c, hw, hw)
+    }
+
+    #[test]
+    fn conv_shape_alexnet_conv1() {
+        // AlexNet conv1: 96 kernels 11x11 stride 4 on 3x227x227.
+        let out = Layer::Conv { out_channels: 96, kernel: (11, 11), stride: 4, pad: 0, groups: 1 }
+            .infer_shape(&[&img(3, 227)]);
+        assert_eq!(out, Shape::bchw(32, 96, 55, 55));
+    }
+
+    #[test]
+    fn depthwise_conv_shape() {
+        let out = Layer::Conv { out_channels: 32, kernel: (3, 3), stride: 1, pad: 1, groups: 32 }
+            .infer_shape(&[&img(32, 112)]);
+        assert_eq!(out, Shape::bchw(32, 32, 112, 112));
+    }
+
+    #[test]
+    fn pool_rounds_up() {
+        // AlexNet pool: 3x3 stride 2 on 55x55 -> 27x27.
+        let out = Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }
+            .infer_shape(&[&img(96, 55)]);
+        assert_eq!(out.extent(Dim::H), 27);
+    }
+
+    #[test]
+    fn fc_flattens() {
+        let out =
+            Layer::FullyConnected { out_features: 4096 }.infer_shape(&[&Shape::bchw(32, 256, 6, 6)]);
+        assert_eq!(out, Shape::new(&[(Dim::B, 32), (Dim::C, 4096)]));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let a = img(64, 28);
+        let b = img(32, 28);
+        let out = Layer::Concat.infer_shape(&[&a, &b]);
+        assert_eq!(out.extent(Dim::C), 96);
+    }
+
+    #[test]
+    fn conv3d_shape() {
+        let inp = Shape::bcthw(8, 3, 16, 112, 112);
+        let out = Layer::Conv3d { out_channels: 64, kernel: (3, 3, 3), stride: 1, pad: 1 }
+            .infer_shape(&[&inp]);
+        assert_eq!(out, Shape::bcthw(8, 64, 16, 112, 112));
+    }
+
+    #[test]
+    fn primary_caps_adds_vector_dim() {
+        let inp = Shape::bchw(16, 256, 20, 20);
+        let out = Layer::PrimaryCaps { caps_channels: 32, vec: 8, kernel: 9, stride: 2 }
+            .infer_shape(&[&inp]);
+        assert_eq!(out.extent(Dim::V), 8);
+        assert_eq!(out.extent(Dim::H), 6);
+    }
+
+    #[test]
+    fn roi_pool_expands_batch() {
+        let inp = Shape::bchw(1, 256, 14, 14);
+        let out =
+            Layer::RoiPool { num_rois: 300, output: (6, 6) }.infer_shape(&[&inp]);
+        assert_eq!(out.extent(Dim::B), 300);
+        assert_eq!(out.extent(Dim::H), 6);
+    }
+
+    #[test]
+    fn traditional_classification() {
+        assert!(Layer::Relu.is_traditional());
+        assert!(Layer::Conv { out_channels: 8, kernel: (3, 3), stride: 1, pad: 1, groups: 1 }
+            .is_traditional());
+        assert!(!Layer::Conv { out_channels: 8, kernel: (3, 3), stride: 1, pad: 1, groups: 8 }
+            .is_traditional());
+        assert!(!Layer::BatchNorm.is_traditional());
+        assert!(!Layer::Pool { kind: PoolKind::Avg, kernel: 2, stride: 2, pad: 0 }.is_traditional());
+    }
+
+    #[test]
+    fn param_counts() {
+        let inp = img(3, 227);
+        let conv = Layer::Conv { out_channels: 96, kernel: (11, 11), stride: 4, pad: 0, groups: 1 };
+        assert_eq!(conv.param_count(&[&inp]), 11 * 11 * 3 * 96 + 96);
+        assert_eq!(Layer::BatchNorm.param_count(&[&img(64, 8)]), 128);
+    }
+}

@@ -1,0 +1,14 @@
+//! Layer-level network IR.
+//!
+//! Networks are expressed as DAGs of [`Layer`]s over named-dimension
+//! tensors (paper §2). This is the input to the GCONV Chain compiler
+//! (`crate::gconv::lower`), playing the role the Caffe prototxt +
+//! Pycaffe interface plays in the paper's implementation (§5).
+
+mod graph;
+mod layer;
+mod tensor;
+
+pub use graph::{LayerNode, Network, NodeId};
+pub use layer::{Layer, PoolKind};
+pub use tensor::{Dim, Shape};

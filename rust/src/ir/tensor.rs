@@ -1,0 +1,179 @@
+//! Named-dimension tensor shapes.
+//!
+//! The GCONV model (paper §3.1) treats every data dimension uniformly, so
+//! shapes carry dimension *names* — batch, channel, spatial, time (3-D
+//! CNNs), vector (capsule networks) — rather than positional axes.
+
+use std::fmt;
+
+/// A named tensor/GCONV dimension.
+///
+/// `B`/`C`/`H`/`W` are the classic four of paper Fig. 5; `T` is the time
+/// dimension of 3-D CNNs (C3D) and `V` the vector dimension of capsule
+/// networks, both of which §3.1 calls out as scale-ups of the same 1-D
+/// GCONV.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Mini-batch.
+    B,
+    /// Channel.
+    C,
+    /// Height.
+    H,
+    /// Width.
+    W,
+    /// Time (3-D convolutions).
+    T,
+    /// Vector (capsule pose components).
+    V,
+}
+
+impl Dim {
+    /// All dimensions in the canonical mapping order used by Algorithm 1
+    /// (`for d in ["W","H","C","B"]`, extended with T and V after W since
+    /// they behave like extra spatial/inner dimensions).
+    pub const MAPPING_ORDER: [Dim; 6] = [Dim::W, Dim::H, Dim::T, Dim::V, Dim::C, Dim::B];
+
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::B => "B",
+            Dim::C => "C",
+            Dim::H => "H",
+            Dim::W => "W",
+            Dim::T => "T",
+            Dim::V => "V",
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A tensor shape: an ordered list of `(dimension, extent)` pairs.
+///
+/// Absent dimensions are implicitly extent-1 (the same pruning rule GCONV
+/// applies to default-parameter loops).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<(Dim, usize)>,
+}
+
+impl Shape {
+    /// Build a shape from `(dim, extent)` pairs. Panics on duplicates or
+    /// zero extents.
+    pub fn new(dims: &[(Dim, usize)]) -> Self {
+        let mut seen = Vec::new();
+        for &(d, n) in dims {
+            assert!(n > 0, "zero extent for {d}");
+            assert!(!seen.contains(&d), "duplicate dim {d}");
+            seen.push(d);
+        }
+        Shape { dims: dims.to_vec() }
+    }
+
+    /// Classic image batch `[B, C, H, W]`.
+    pub fn bchw(b: usize, c: usize, h: usize, w: usize) -> Self {
+        Shape::new(&[(Dim::B, b), (Dim::C, c), (Dim::H, h), (Dim::W, w)])
+    }
+
+    /// Video batch `[B, C, T, H, W]`.
+    pub fn bcthw(b: usize, c: usize, t: usize, h: usize, w: usize) -> Self {
+        Shape::new(&[(Dim::B, b), (Dim::C, c), (Dim::T, t), (Dim::H, h), (Dim::W, w)])
+    }
+
+    /// Extent of `d` (1 if absent).
+    pub fn extent(&self, d: Dim) -> usize {
+        self.dims.iter().find(|&&(x, _)| x == d).map_or(1, |&(_, n)| n)
+    }
+
+    /// Iterate `(dim, extent)` pairs in declaration order.
+    pub fn iter(&self) -> impl Iterator<Item = (Dim, usize)> + '_ {
+        self.dims.iter().copied()
+    }
+
+    /// Dimensions present in this shape.
+    pub fn dims(&self) -> Vec<Dim> {
+        self.dims.iter().map(|&(d, _)| d).collect()
+    }
+
+    /// Total number of elements.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().map(|&(_, n)| n).product()
+    }
+
+    /// Copy with dimension `d` set to `n` (appended if absent, removed if
+    /// `n == 1` and you call [`Shape::pruned`] afterwards).
+    pub fn with(&self, d: Dim, n: usize) -> Self {
+        assert!(n > 0);
+        let mut dims = self.dims.clone();
+        match dims.iter_mut().find(|(x, _)| *x == d) {
+            Some(slot) => slot.1 = n,
+            None => dims.push((d, n)),
+        }
+        Shape { dims }
+    }
+
+    /// Copy without extent-1 dimensions.
+    pub fn pruned(&self) -> Self {
+        Shape { dims: self.dims.iter().copied().filter(|&(_, n)| n > 1).collect() }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, (d, n)) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}:{n}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extent_defaults_to_one() {
+        let s = Shape::bchw(4, 3, 8, 8);
+        assert_eq!(s.extent(Dim::C), 3);
+        assert_eq!(s.extent(Dim::T), 1);
+    }
+
+    #[test]
+    fn elements_is_product() {
+        assert_eq!(Shape::bchw(2, 3, 4, 5).elements(), 120);
+        assert_eq!(Shape::bcthw(1, 3, 16, 112, 112).elements(), 3 * 16 * 112 * 112);
+    }
+
+    #[test]
+    fn with_updates_or_appends() {
+        let s = Shape::bchw(1, 3, 8, 8).with(Dim::C, 16).with(Dim::T, 4);
+        assert_eq!(s.extent(Dim::C), 16);
+        assert_eq!(s.extent(Dim::T), 4);
+    }
+
+    #[test]
+    fn pruned_drops_unit_dims() {
+        let s = Shape::bchw(1, 3, 8, 1).pruned();
+        assert_eq!(s.dims(), vec![Dim::C, Dim::H]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate dim")]
+    fn duplicate_dims_rejected() {
+        Shape::new(&[(Dim::C, 2), (Dim::C, 3)]);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Shape::bchw(1, 2, 3, 4).to_string(), "[B:1, C:2, H:3, W:4]");
+    }
+}

@@ -1,0 +1,266 @@
+//! The GCONV instruction encoding (paper Fig. 11(a)).
+//!
+//! Three instruction buffers drive the GCONV-augmented accelerator:
+//!
+//! * **basic information** — stride, the four operator selectors, input
+//!   and kernel producer ids; an all-zero entry delimits ops;
+//! * **unrolling lists** — one `[dim, param, factor, argument]` entry
+//!   per unrolling-list entry (Fig. 9), per unrolling dimension,
+//!   delimited by all-zero entries;
+//! * **output address** — one entry per GCONV, allocated at run time.
+//!
+//! Instruction *counts* from this encoding are the Fig. 15 code-length
+//! metric; LIPs need a single instruction per layer and TIPs one
+//! compute + loads per matrix tile ([`crate::accel::baseline`]).
+
+use crate::gconv::chain::GconvChain;
+use crate::gconv::op::{GconvOp, MainOp, Param, PostOp, PreOp, ReduceOp};
+use crate::ir::Dim;
+use crate::mapping::unroll::{Mapping, UnrollEntry};
+
+/// One encoded instruction word (fields packed into u64).
+pub type Word = u64;
+
+/// Encoded program for one GCONV op.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GconvProgram {
+    /// Basic-information buffer entries.
+    pub basic: Vec<Word>,
+    /// Unrolling-list buffer entries.
+    pub unrolling: Vec<Word>,
+    /// Output-address buffer entries.
+    pub address: Vec<Word>,
+}
+
+impl GconvProgram {
+    /// Total instruction entries (Fig. 15 metric).
+    pub fn len(&self) -> usize {
+        self.basic.len() + self.unrolling.len() + self.address.len()
+    }
+
+    /// True if no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn dim_code(d: Dim) -> u64 {
+    match d {
+        Dim::B => 1,
+        Dim::C => 2,
+        Dim::H => 3,
+        Dim::W => 4,
+        Dim::T => 5,
+        Dim::V => 6,
+    }
+}
+
+fn dim_from(code: u64) -> Dim {
+    match code {
+        1 => Dim::B,
+        2 => Dim::C,
+        3 => Dim::H,
+        4 => Dim::W,
+        5 => Dim::T,
+        6 => Dim::V,
+        c => panic!("bad dim code {c}"),
+    }
+}
+
+fn param_code(p: Param) -> u64 {
+    match p {
+        Param::Ks => 1,
+        Param::Opc => 2,
+        Param::Op => 3,
+        Param::G => 4,
+    }
+}
+
+fn param_from(code: u64) -> Param {
+    match code {
+        1 => Param::Ks,
+        2 => Param::Opc,
+        3 => Param::Op,
+        4 => Param::G,
+        c => panic!("bad param code {c}"),
+    }
+}
+
+fn operator_words(op: &GconvOp) -> Vec<Word> {
+    // First field = operator type (1 pre, 2 main, 3 reduce, 4 post),
+    // second = function selector. Absent operators are skipped (the
+    // paper: "some GCONVs do not have pre, main, reduce or post").
+    let mut v = Vec::new();
+    let sel_pre = match op.pre {
+        PreOp::None => 0,
+        PreOp::Square => 1,
+        PreOp::Mul(_) => 2,
+        PreOp::Lut(_) => 3,
+    };
+    if sel_pre != 0 {
+        v.push(1 << 8 | sel_pre);
+    }
+    let sel_main = match op.main {
+        MainOp::Mul => 1,
+        MainOp::Add => 2,
+        MainOp::Sub => 3,
+        MainOp::SquareDiff => 4,
+        MainOp::And => 5,
+        MainOp::Pass => 6,
+        MainOp::Max => 7,
+    };
+    v.push(2 << 8 | sel_main);
+    let sel_red = match op.reduce {
+        ReduceOp::None => 0,
+        ReduceOp::Add => 1,
+        ReduceOp::Max => 2,
+    };
+    if sel_red != 0 {
+        v.push(3 << 8 | sel_red);
+    }
+    let sel_post = match op.post {
+        PostOp::None => 0,
+        PostOp::Mul(_) => 1,
+        PostOp::Lut(_) => 2,
+    };
+    if sel_post != 0 {
+        v.push(4 << 8 | sel_post);
+    }
+    v
+}
+
+/// Encode one mapped GCONV into its instruction program.
+pub fn encode(op: &GconvOp, mapping: &Mapping) -> GconvProgram {
+    let mut p = GconvProgram::default();
+    // Basic info: one stride entry per active dim + operator entries +
+    // producer-id entries + all-zero delimiter.
+    for &(d, dp) in &op.dims {
+        p.basic.push(0xA << 60 | dim_code(d) << 32 | (dp.s as u64) << 16 | dp.ps as u64);
+    }
+    p.basic.extend(operator_words(op));
+    p.basic.push(0xB << 60 | 1); // input producer id entry
+    if op.kernel.is_some() {
+        p.basic.push(0xB << 60 | 2); // kernel producer id entry
+    }
+    p.basic.push(0); // delimiter
+
+    // Unrolling lists: spatial axes then temporal, each delimited.
+    let encode_entry = |e: &UnrollEntry, arg: u64| -> Word {
+        dim_code(e.dim) << 48 | param_code(e.param) << 40 | (e.factor as u64) << 16 | arg
+    };
+    for axis in &mapping.spatial {
+        for e in axis {
+            let arg = op.params(e.dim).get(e.param) as u64;
+            p.unrolling.push(encode_entry(e, arg));
+        }
+        p.unrolling.push(0);
+    }
+    for e in &mapping.temporal {
+        let arg = op.params(e.dim).get(e.param) as u64;
+        p.unrolling.push(encode_entry(e, arg));
+    }
+    p.unrolling.push(0);
+
+    // Output address (allocated at run time; encode a placeholder slot).
+    p.address.push(0xC << 60);
+    p
+}
+
+/// Decoded unrolling entry (for verification / the state machine).
+pub fn decode_unrolling(words: &[Word]) -> Vec<Vec<UnrollEntry>> {
+    let mut lists = Vec::new();
+    let mut cur = Vec::new();
+    for &w in words {
+        if w == 0 {
+            lists.push(std::mem::take(&mut cur));
+            continue;
+        }
+        cur.push(UnrollEntry {
+            dim: dim_from(w >> 48 & 0xFF),
+            param: param_from(w >> 40 & 0xFF),
+            factor: (w >> 16 & 0xFF_FFFF) as usize,
+        });
+    }
+    if !cur.is_empty() {
+        lists.push(cur);
+    }
+    lists
+}
+
+/// Code length of a whole chain on a GC-CIP (Fig. 15).
+pub fn chain_code_length(chain: &GconvChain, mappings: &[Mapping]) -> usize {
+    chain
+        .entries()
+        .iter()
+        .zip(mappings)
+        .map(|(e, m)| encode(&e.op, m).len())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs::eyeriss;
+    use crate::gconv::op::{DataRef, DimParams};
+    use crate::mapping::unroll::{map_gconv, MapMode};
+
+    fn conv_op() -> GconvOp {
+        GconvOp::conv(
+            "c",
+            vec![
+                (Dim::B, DimParams::opc(8)),
+                (Dim::C, DimParams { nop: 16, nks: 8, ..Default::default() }),
+                (Dim::H, DimParams::window(14, 3, 1, 1)),
+                (Dim::W, DimParams::window(14, 3, 1, 1)),
+            ],
+            DataRef::External("x".into()),
+            DataRef::Weights("w".into()),
+        )
+    }
+
+    #[test]
+    fn unrolling_round_trips() {
+        let op = conv_op();
+        let m = map_gconv(&op, &eyeriss(), MapMode::Gconv);
+        let prog = encode(&op, &m);
+        let lists = decode_unrolling(&prog.unrolling);
+        // spatial axes + temporal list.
+        assert_eq!(lists.len(), m.spatial.len() + 1);
+        for (axis, decoded) in m.spatial.iter().zip(&lists) {
+            assert_eq!(axis, decoded);
+        }
+        assert_eq!(&m.temporal, lists.last().unwrap());
+    }
+
+    #[test]
+    fn kernel_less_ops_omit_kernel_producer() {
+        let pool = GconvOp {
+            kernel: None,
+            reduce: ReduceOp::Max,
+            main: MainOp::Pass,
+            ..conv_op()
+        };
+        let m = map_gconv(&pool, &eyeriss(), MapMode::Gconv);
+        let with_kernel = encode(&conv_op(), &map_gconv(&conv_op(), &eyeriss(), MapMode::Gconv));
+        let without = encode(&pool, &m);
+        assert!(without.basic.len() < with_kernel.basic.len());
+    }
+
+    #[test]
+    fn program_length_counts_all_buffers() {
+        let op = conv_op();
+        let m = map_gconv(&op, &eyeriss(), MapMode::Gconv);
+        let p = encode(&op, &m);
+        assert_eq!(p.len(), p.basic.len() + p.unrolling.len() + p.address.len());
+        assert!(p.len() > 5);
+    }
+
+    #[test]
+    fn delimiters_are_all_zero_entries() {
+        let op = conv_op();
+        let m = map_gconv(&op, &eyeriss(), MapMode::Gconv);
+        let p = encode(&op, &m);
+        assert_eq!(*p.basic.last().unwrap(), 0);
+        assert_eq!(*p.unrolling.last().unwrap(), 0);
+    }
+}

@@ -1,0 +1,52 @@
+//! # GCONV Chain
+//!
+//! Reproduction of *"Optimizing the Whole-life Cost in End-to-end CNN
+//! Acceleration"* (Zhang, Chen, Ray, Li — 2021).
+//!
+//! The library converts end-to-end CNN computation (forward and backward)
+//! into a chain of **general convolutions** (GCONV), auto-maps the chain
+//! onto a parameterized accelerator model with a single loop-unrolling
+//! algorithm (the paper's Algorithm 1), and evaluates performance, data
+//! movement, energy and whole-life cost with the analytical model of
+//! paper §4.2.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`ir`] — layer-level network IR with shape inference.
+//! * [`networks`] — the seven benchmark CNNs of the paper.
+//! * [`gconv`] — the GCONV operation model and layer→GCONV lowering.
+//! * [`accel`] — accelerator structures (Table 4) and baseline modes.
+//! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion.
+//! * [`model`] — cycles (Eq. 6) and data movement (Eq. 7–10) models.
+//! * [`energy`] — per-event energy and area/power overhead models.
+//! * [`isa`] — the GCONV instruction encoding of Fig. 11.
+//! * [`cost`] — development cost and total cost of ownership models.
+//! * [`sim`] — the top-level simulator tying everything together.
+//! * [`runtime`] — PJRT loader for AOT-compiled HLO-text artifacts.
+//! * [`coordinator`] — executes GCONV-chain numerics through the runtime.
+//! * [`report`] — table/figure printers used by benches and the CLI.
+
+
+
+
+
+pub mod accel;
+pub mod coordinator;
+pub mod cost;
+pub mod energy;
+pub mod gconv;
+pub mod ir;
+
+
+
+pub mod isa;
+pub mod mapping;
+pub mod model;
+pub mod networks;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+
+
+

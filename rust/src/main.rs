@@ -1,0 +1,137 @@
+//! `gconv-chain` CLI — compile networks to GCONV chains, simulate them
+//! on the Table-4 accelerators, and run real chain numerics through the
+//! PJRT runtime.
+
+use gconv_chain::accel::configs::{by_code, ACCEL_CODES};
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::networks::{benchmark, BENCHMARK_CODES};
+use gconv_chain::report::{print_table, r2};
+use gconv_chain::sim::{simulate, ExecMode, SimOptions};
+
+const USAGE: &str = "\
+gconv-chain — GCONV Chain compiler + simulator (paper reproduction)
+
+USAGE:
+    gconv-chain chain <NET> [--inference]    print the GCONV chain
+    gconv-chain simulate <NET> <ACCEL>       baseline vs GCONV on one pair
+    gconv-chain matrix                       Fig. 14 speedup matrix
+    gconv-chain run [ARTIFACT_DIR]           execute chain numerics (PJRT)
+
+    NET   = AN GLN DN MN ZFFR C3D CapNN
+    ACCEL = TPU DNNW ER EP NLR";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("chain") => cmd_chain(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("matrix") => cmd_matrix(),
+        Some("run") => cmd_run(&args[1..]),
+        _ => println!("{USAGE}"),
+    }
+}
+
+fn cmd_chain(args: &[String]) {
+    let Some(net_code) = args.first() else {
+        println!("{USAGE}");
+        return;
+    };
+    let mode =
+        if args.iter().any(|a| a == "--inference") { Mode::Inference } else { Mode::Training };
+    let net = benchmark(net_code);
+    let chain = lower_network(&net, mode);
+    print!("{chain}");
+    let (t, n) = chain.work_split();
+    println!(
+        "total work: {:.3e} MACs ({:.1}% non-traditional)",
+        chain.total_work() as f64,
+        100.0 * n as f64 / (t + n) as f64
+    );
+}
+
+fn cmd_simulate(args: &[String]) {
+    let (Some(net_code), Some(accel_code)) = (args.first(), args.get(1)) else {
+        println!("{USAGE}");
+        return;
+    };
+    let net = benchmark(net_code);
+    let accel = by_code(accel_code);
+    let rows: Vec<Vec<String>> = [ExecMode::Baseline, ExecMode::GconvChain]
+        .into_iter()
+        .map(|mode| {
+            let r = simulate(&net, &accel, SimOptions { mode, training: true });
+            vec![
+                format!("{mode:?}"),
+                format!("{:.3}", r.seconds * 1e3),
+                format!("{:.3e}", r.movement.gb_total()),
+                format!("{:.3e}", r.movement.offload),
+                format!("{:.3e}", r.energy.total()),
+                r2(r.utilization),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("{net_code} on {accel_code} (training step)"),
+        &["mode", "ms", "GB words", "offload words", "energy", "util"],
+        &rows,
+    );
+}
+
+fn cmd_matrix() {
+    let mut rows = Vec::new();
+    for code in BENCHMARK_CODES {
+        let net = benchmark(code);
+        let mut row = vec![code.to_string()];
+        for acode in ACCEL_CODES {
+            let accel = by_code(acode);
+            let b = simulate(&net, &accel, SimOptions { mode: ExecMode::Baseline, training: true });
+            let g =
+                simulate(&net, &accel, SimOptions { mode: ExecMode::GconvChain, training: true });
+            row.push(r2(b.seconds / g.seconds));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "End-to-end speedup of GCONV Chain over baselines (Fig. 14)",
+        &["net", "TPU", "DNNW", "ER", "EP", "NLR"],
+        &rows,
+    );
+}
+
+fn cmd_run(args: &[String]) {
+    use gconv_chain::coordinator::{ChainExecutor, Request};
+    use gconv_chain::runtime::literal_f32;
+
+    let dir = args.first().map(String::as_str).unwrap_or("artifacts");
+    let (b, c, hw) = (8usize, 16usize, 14usize);
+    let mut rng = gconv_chain::prop::Rng::new(42);
+    let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f64() as f32 - 0.5).collect() };
+    let dw = literal_f32(&rand(c * 9), &[c as i64, 1, 3, 3]).unwrap();
+    let pw = literal_f32(&rand(2 * c * c), &[2 * c as i64, c as i64, 1, 1]).unwrap();
+    let mut exec = ChainExecutor::new(
+        dir,
+        "mobilenet_block",
+        &[b as i64, c as i64, hw as i64, hw as i64],
+        2 * c * hw * hw,
+        vec![dw, pw],
+    )
+    .expect("run `make artifacts` first");
+
+    let total = 64u64;
+    for id in 0..total {
+        exec.submit(Request { id, data: rand(c * hw * hw) }).unwrap();
+    }
+    let mut served = 0;
+    while served < total as usize {
+        let out = exec.step(true).unwrap();
+        served += out.len();
+    }
+    let s = exec.stats();
+    println!(
+        "served {} samples in {} batches: {:.2} samples/s, mean latency {:.3} ms",
+        s.samples,
+        s.batches,
+        s.throughput(),
+        s.mean_latency_s * 1e3
+    );
+}

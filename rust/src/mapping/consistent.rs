@@ -1,0 +1,180 @@
+//! Consistent mapping via unrolling-loop exchange (paper §4.3, Fig. 10).
+//!
+//! The producer's output-bandwidth spatial axis determines how the
+//! intermediate tensor is laid out in the global buffer; the consumer's
+//! innermost temporal loops determine the order it wants to read it. If
+//! the two disagree, only one word can be loaded per bus cycle; after a
+//! loop exchange (which leaves Eq. (6) cycles and Eq. (10) movement
+//! untouched — products commute) the consumer streams at full width.
+
+use super::unroll::Mapping;
+use crate::ir::Dim;
+
+/// Dimension order of the producer's output format: the dims of its
+/// output-writing spatial axis (the last axis: px in Eyeriss), innermost
+/// first, followed by its temporal output loops.
+pub fn output_format(m: &Mapping) -> Vec<Dim> {
+    let mut dims = Vec::new();
+    if let Some(last_axis) = m.spatial.last() {
+        for e in last_axis {
+            if !dims.contains(&e.dim) {
+                dims.push(e.dim);
+            }
+        }
+    }
+    for e in &m.temporal {
+        if !dims.contains(&e.dim) {
+            dims.push(e.dim);
+        }
+    }
+    dims
+}
+
+/// The dimension the consumer's innermost input-touching temporal loop
+/// walks — the order it wants the intermediate data in.
+pub fn input_format(m: &Mapping) -> Option<Dim> {
+    m.temporal
+        .iter()
+        .find(|e| {
+            use crate::gconv::op::Param;
+            matches!(e.param, Param::Ks | Param::Opc | Param::G)
+        })
+        .map(|e| e.dim)
+}
+
+/// Is consumer `cons` consistent with producer `prod`?
+pub fn is_consistent(prod: &Mapping, cons: &Mapping) -> bool {
+    match (output_format(prod).first(), input_format(cons)) {
+        (Some(p), Some(c)) => *p == c,
+        // Nothing to disagree about.
+        _ => true,
+    }
+}
+
+/// Can the producer/consumer pair be made consistent by a loop exchange
+/// (§4.3)? The exchange itself happens at instruction generation and is
+/// movement-neutral — "the unrolling loop exchange does not affect the
+/// performance or data movement based on Equations (6) and (10) but
+/// significantly reduces the loading time" — so the analytical model
+/// only needs to know whether a legal exchange *exists*:
+///
+/// 1. the consumer has *some* input-touching temporal loop in the
+///    producer's leading output dimension (exchange it innermost), or
+/// 2. the producer's output axis carries the consumer's wanted dimension
+///    (exchange on the producer side).
+pub fn make_consistent(prod: &Mapping, cons: &Mapping) -> bool {
+    if is_consistent(prod, cons) {
+        return true;
+    }
+    let Some(&want) = output_format(prod).first() else {
+        return true;
+    };
+    use crate::gconv::op::Param;
+    // Consumer-side exchange opportunity.
+    if cons
+        .temporal
+        .iter()
+        .any(|e| e.dim == want && matches!(e.param, Param::Ks | Param::Opc | Param::G))
+    {
+        return true;
+    }
+    // Producer-side exchange opportunity.
+    if let Some(have) = input_format(cons) {
+        if let Some(last_axis) = prod.spatial.last() {
+            if last_axis.iter().any(|e| e.dim == have) {
+                return true;
+            }
+        }
+        if prod.temporal.iter().any(|e| e.dim == have) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Loading parallelism of a consumer given consistency: the full input
+/// bus when consistent, degraded otherwise. On Eyeriss's narrow bus the
+/// degradation reaches a single word per cycle (Fig. 10(d): "only one
+/// input is loaded into ILS per cycle"); the paper measures the
+/// consistent-mapping benefit at "up to 3.9×" (§4.3), so the penalty is
+/// capped at 4× — wider structures reorder part of the stream in the
+/// global buffer.
+pub fn load_parallelism(consistent: bool, bus_width: usize) -> f64 {
+    if consistent {
+        bus_width as f64
+    } else {
+        (bus_width as f64 / 4.0).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs::eyeriss;
+    use crate::gconv::op::{DataRef, DimParams, GconvOp};
+    use crate::mapping::unroll::{map_gconv, MapMode};
+
+    fn relu_like(n: usize) -> GconvOp {
+        GconvOp {
+            name: "relu".into(),
+            dims: vec![
+                (Dim::B, DimParams::opc(8)),
+                (Dim::C, DimParams::opc(n)),
+                (Dim::H, DimParams::opc(28)),
+                (Dim::W, DimParams::opc(28)),
+            ],
+            pre: crate::gconv::op::PreOp::None,
+            main: crate::gconv::op::MainOp::Pass,
+            reduce: crate::gconv::op::ReduceOp::None,
+            post: crate::gconv::op::PostOp::Lut("relu"),
+            input: DataRef::External("x".into()),
+            kernel: None,
+        }
+    }
+
+    fn conv_like() -> GconvOp {
+        GconvOp::conv(
+            "conv",
+            vec![
+                (Dim::B, DimParams::opc(8)),
+                (Dim::C, DimParams { nop: 32, nks: 16, ..Default::default() }),
+                (Dim::H, DimParams::window(28, 3, 1, 1)),
+                (Dim::W, DimParams::window(28, 3, 1, 1)),
+            ],
+            DataRef::Gconv(0),
+            DataRef::Weights("w".into()),
+        )
+    }
+
+    #[test]
+    fn exchange_establishes_consistency() {
+        // A conv consumer always has sliding-window temporal loops in the
+        // classic dims, so an exchange opportunity must exist whatever
+        // dimension the element-wise producer leads with.
+        let accel = eyeriss();
+        let prod = map_gconv(&relu_like(16), &accel, MapMode::Gconv);
+        let cons = map_gconv(&conv_like(), &accel, MapMode::Gconv);
+        assert!(make_consistent(&prod, &cons));
+    }
+
+    #[test]
+    fn feasibility_check_mutates_nothing() {
+        // The exchange is movement-neutral and performed at instruction
+        // generation; the analytical mappings stay untouched.
+        let accel = eyeriss();
+        let op = conv_like();
+        let prod = map_gconv(&relu_like(16), &accel, MapMode::Gconv);
+        let cons = map_gconv(&op, &accel, MapMode::Gconv);
+        let cyc_before = crate::model::cycles::compute_cycles(&op, &cons);
+        let iters_before = cons.temporal_iterations();
+        make_consistent(&prod, &cons);
+        assert_eq!(crate::model::cycles::compute_cycles(&op, &cons), cyc_before);
+        assert_eq!(cons.temporal_iterations(), iters_before);
+    }
+
+    #[test]
+    fn load_parallelism_degrades_when_inconsistent() {
+        assert_eq!(load_parallelism(true, 4), 4.0);
+        assert_eq!(load_parallelism(false, 4), 1.0);
+    }
+}

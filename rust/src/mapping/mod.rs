@@ -1,0 +1,10 @@
+//! GCONV mapping: Algorithm 1 (loop unrolling onto an accelerator),
+//! consistent mapping (loop exchange, §4.3) and operation fusion (§4.3).
+
+pub mod consistent;
+pub mod fusion;
+pub mod unroll;
+
+pub use consistent::{is_consistent, load_parallelism, make_consistent};
+pub use fusion::{fuse_chain, FusionStats};
+pub use unroll::{map_gconv, MapMode, Mapping, UnrollEntry};

@@ -1,0 +1,493 @@
+//! Algorithm 1: mapping a single GCONV onto an accelerator.
+//!
+//! The mapper unrolls the GCONV loop nest spatially (across the PE-array
+//! axes) and temporally (into the local scratchpads), producing the two
+//! unrolling lists of Fig. 9. The same engine serves both the GCONV
+//! mapping (paper priorities) and the *baseline* mapping of each
+//! accelerator's original dataflow (§4.4: "the mapping strategies
+//! provided in the original works ... just slightly changes the priority
+//! of the parameters"), which additionally pins each spatial axis to the
+//! dimensions the original dataflow understands.
+
+use crate::accel::structure::AccelStructure;
+use crate::gconv::op::{GconvOp, Param};
+use crate::ir::Dim;
+use std::collections::BTreeMap;
+
+/// `[p, d, uf]` — unrolling factor `uf` of parameter `p` in dimension
+/// `d` (one entry of Fig. 9's lists).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UnrollEntry {
+    /// Loop parameter.
+    pub param: Param,
+    /// Data dimension.
+    pub dim: Dim,
+    /// Unrolling factor (spatial) or iteration count (temporal).
+    pub factor: usize,
+}
+
+/// Result of mapping one GCONV.
+#[derive(Clone, Debug, Default)]
+pub struct Mapping {
+    /// Spatial unrolling list per accelerator axis (Fig. 9 columns).
+    pub spatial: Vec<Vec<UnrollEntry>>,
+    /// Temporal unrolling list (innermost first).
+    pub temporal: Vec<UnrollEntry>,
+    /// Stride per dimension (needed for input-tile arithmetic).
+    pub strides: BTreeMap<Dim, usize>,
+}
+
+/// Whether to use the paper's GCONV priorities or the accelerator's
+/// original (baseline) dataflow restrictions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapMode {
+    /// Full Algorithm 1 with the accelerator's GCONV priorities.
+    Gconv,
+    /// Original-dataflow baseline: spatial axes pinned to the dims the
+    /// original work unrolls; overlap primitives dedicated to H/W.
+    Baseline,
+}
+
+impl Mapping {
+    /// Product of spatial factors for parameter `p` in dimension `d`
+    /// (`SP_Pp_d` in Eq. (6)).
+    pub fn spatial_factor(&self, d: Dim, p: Param) -> usize {
+        self.spatial
+            .iter()
+            .flatten()
+            .filter(|e| e.dim == d && e.param == p)
+            .map(|e| e.factor)
+            .product()
+    }
+
+    /// Number of PEs actually occupied.
+    pub fn occupied_pes(&self) -> usize {
+        self.spatial.iter().map(|axis| axis.iter().map(|e| e.factor).product::<usize>()).product()
+    }
+
+    /// Iteration count of the temporal list (≈ Eq. (6) cycles).
+    pub fn temporal_iterations(&self) -> usize {
+        self.temporal.iter().map(|e| e.factor).product()
+    }
+}
+
+/// Remaining loop counts per (dim, param).
+#[derive(Clone, Debug)]
+struct Loops {
+    counts: BTreeMap<(Dim, Param), usize>,
+}
+
+impl Loops {
+    fn from_op(op: &GconvOp) -> Self {
+        let mut counts = BTreeMap::new();
+        for &(d, p) in &op.dims {
+            for param in Param::ALL {
+                let n = p.get(param);
+                if n > 1 {
+                    counts.insert((d, param), n);
+                }
+            }
+        }
+        Loops { counts }
+    }
+
+    fn get(&self, d: Dim, p: Param) -> usize {
+        self.counts.get(&(d, p)).copied().unwrap_or(1)
+    }
+
+    /// The paper's `unrolling` function (Algorithm 1 lines 1–5) with the
+    /// resource handled by the caller: consume up to `limit` iterations,
+    /// return the factor.
+    fn consume(&mut self, d: Dim, p: Param, limit: usize) -> usize {
+        let n = self.get(d, p);
+        let uf = n.min(limit).max(1);
+        if uf > 1 {
+            self.counts.insert((d, p), n.div_ceil(uf));
+        }
+        uf
+    }
+}
+
+/// Map one GCONV op onto `accel` (Algorithm 1).
+pub fn map_gconv(op: &GconvOp, accel: &AccelStructure, mode: MapMode) -> Mapping {
+    let mut loops = Loops::from_op(op);
+    let mut m = Mapping {
+        spatial: vec![Vec::new(); accel.spatial.len()],
+        temporal: Vec::new(),
+        strides: op.dims.iter().map(|&(d, p)| (d, p.s)).collect(),
+    };
+    let mut spatial_left: Vec<usize> = accel.spatial.iter().map(|s| s.size).collect();
+    let mut tiles = TileTracker::new(op);
+    // Temporal sub-lists: `inner` collects the LS-fill phase (Algorithm 1
+    // uses `temporal.insert`, i.e. these loops run innermost to maximize
+    // scratchpad reuse), `prim` the overlap-reuse streaming primitive,
+    // and the remaining loops are appended outermost.
+    let mut inner: Vec<UnrollEntry> = Vec::new();
+    let mut prim: Vec<UnrollEntry> = Vec::new();
+
+    // --- Lines 7–13: allocate the overlap-reuse primitives. ---
+    let overlap_dims: Vec<Dim> = match mode {
+        MapMode::Gconv => op.overlap_dims(),
+        // The baseline dedicates its primitives to the classic spatial
+        // dims (row-stationary "W or H", §4.1), whether or not the layer
+        // has overlap there.
+        MapMode::Baseline => op
+            .overlap_dims()
+            .into_iter()
+            .filter(|d| matches!(d, Dim::H | Dim::W))
+            .collect(),
+    };
+    let mut overlap_iter = overlap_dims.into_iter();
+    if let (Some(d), Some(oa)) = (overlap_iter.next(), accel.overlap_axis()) {
+        // First overlap dim: ks into the overlap axis, opc into the
+        // partner axis (Fig. 8(b)); on single-partner structures the opc
+        // half lands temporally.
+        let uf = loops.consume(d, Param::Ks, spatial_left[oa]);
+        if uf > 1 {
+            m.spatial[oa].push(UnrollEntry { param: Param::Ks, dim: d, factor: uf });
+            spatial_left[oa] /= uf;
+        }
+        let partner = (0..accel.spatial.len()).find(|&i| i != oa);
+        if let Some(pa) = partner {
+            let uf = loops.consume(d, Param::Opc, spatial_left[pa]);
+            if uf > 1 {
+                m.spatial[pa].push(UnrollEntry { param: Param::Opc, dim: d, factor: uf });
+                spatial_left[pa] /= uf;
+            }
+        }
+        // Second overlap dim: the temporal primitive (Fig. 8(a)) — ks
+        // then the *full* opc loop (Algorithm 1 line 13). The opc loop
+        // streams through the scratchpad (load `s` new inputs per step),
+        // so only the ks window counts against ILS capacity.
+        if let Some(d2) = overlap_iter.next() {
+            let limit = tiles.max_temporal_factor(accel, d2, Param::Ks, &loops);
+            let uf = loops.consume(d2, Param::Ks, limit);
+            if uf > 1 {
+                tiles.apply(d2, Param::Ks, uf);
+                prim.push(UnrollEntry { param: Param::Ks, dim: d2, factor: uf });
+            }
+            let full = loops.get(d2, Param::Opc);
+            if full > 1 {
+                let uf = loops.consume(d2, Param::Opc, full);
+                prim.push(UnrollEntry { param: Param::Opc, dim: d2, factor: uf });
+            }
+        }
+    }
+
+    // --- Lines 14–19: fill the spatial axes by priority. ---
+    for (axis, left) in spatial_left.iter_mut().enumerate() {
+        let prio = &accel.spatial_priority[axis];
+        let allowed: Option<&[Dim]> = match mode {
+            MapMode::Baseline => accel.baseline_dims[axis].as_deref(),
+            MapMode::Gconv => None,
+        };
+        for &p in prio {
+            // ks reduction needs forwarding links on this axis.
+            if p == Param::Ks && !accel.spatial[axis].reduce {
+                continue;
+            }
+            for d in Dim::MAPPING_ORDER {
+                if let Some(a) = allowed {
+                    if !a.contains(&d) {
+                        continue;
+                    }
+                }
+                if *left <= 1 {
+                    break;
+                }
+                let uf = loops.consume(d, p, *left);
+                if uf > 1 {
+                    m.spatial[axis].push(UnrollEntry { param: p, dim: d, factor: uf });
+                    *left /= uf;
+                }
+            }
+        }
+    }
+
+    // --- Lines 20–22: fill the local scratchpads temporally. These are
+    // *inserted* innermost (before the streaming primitive) so the data
+    // they pin in the scratchpads is reused across the outer sweeps. ---
+    for &p in &accel.temporal_priority {
+        for d in Dim::MAPPING_ORDER {
+            let limit = tiles.max_temporal_factor(accel, d, p, &loops);
+            if limit <= 1 {
+                continue;
+            }
+            let uf = loops.consume(d, p, limit);
+            if uf > 1 {
+                tiles.apply(d, p, uf);
+                inner.push(UnrollEntry { param: p, dim: d, factor: uf });
+            }
+        }
+    }
+
+    m.temporal.extend(inner);
+    m.temporal.extend(prim);
+
+    // --- Lines 23–25: append every remaining loop (g last). ---
+    for p in [Param::Opc, Param::Op, Param::Ks, Param::G] {
+        for d in Dim::MAPPING_ORDER {
+            let n = loops.get(d, p);
+            if n > 1 {
+                loops.consume(d, p, n);
+                m.temporal.push(UnrollEntry { param: p, dim: d, factor: n });
+            }
+        }
+    }
+    m
+}
+
+/// Tracks per-PE temporal tile sizes for the three local scratchpads.
+pub(crate) struct TileTracker {
+    /// Temporal unroll products per (dim, param).
+    tp: BTreeMap<(Dim, Param), usize>,
+    strides: BTreeMap<Dim, usize>,
+    dims: Vec<Dim>,
+}
+
+impl TileTracker {
+    pub(crate) fn new(op: &GconvOp) -> Self {
+        TileTracker {
+            tp: BTreeMap::new(),
+            strides: op.dims.iter().map(|&(d, p)| (d, p.s)).collect(),
+            dims: op.dims.iter().map(|&(d, _)| d).collect(),
+        }
+    }
+
+    fn get(&self, d: Dim, p: Param) -> usize {
+        self.tp.get(&(d, p)).copied().unwrap_or(1)
+    }
+
+    pub(crate) fn apply(&mut self, d: Dim, p: Param, uf: usize) {
+        let e = self.tp.entry((d, p)).or_insert(1);
+        *e *= uf;
+    }
+
+    /// Tile size in store `x` ∈ {'i','o','k'} if `(d, p)` were unrolled
+    /// by an extra factor `f` (Table 3 per-dimension data amounts).
+    pub(crate) fn tile_with(&self, x: char, extra: Option<(Dim, Param, usize)>) -> usize {
+        let mut total = 1usize;
+        for &d in &self.dims {
+            let g = self.boosted(d, Param::G, extra);
+            let op = self.boosted(d, Param::Op, extra);
+            let opc = self.boosted(d, Param::Opc, extra);
+            let ks = self.boosted(d, Param::Ks, extra);
+            let s = self.strides.get(&d).copied().unwrap_or(1);
+            let per_dim = match x {
+                'i' => g * (ks + s * (opc - 1)),
+                'k' => g * op * ks,
+                'o' => g * op * opc,
+                _ => panic!("unknown store {x}"),
+            };
+            total = total.saturating_mul(per_dim);
+        }
+        total
+    }
+
+    fn boosted(&self, d: Dim, p: Param, extra: Option<(Dim, Param, usize)>) -> usize {
+        let base = self.get(d, p);
+        match extra {
+            Some((ed, ep, f)) if ed == d && ep == p => base * f,
+            _ => base,
+        }
+    }
+
+    /// Largest factor for loop `(d, p)` that keeps every scratchpad the
+    /// parameter grows within capacity (Algorithm 1's temporal resource
+    /// check). Stores already over capacity no longer constrain.
+    fn max_temporal_factor(&self, accel: &AccelStructure, d: Dim, p: Param, loops: &Loops) -> usize {
+        let n = loops.get(d, p);
+        if n <= 1 {
+            return 1;
+        }
+        let grows: &[char] = match p {
+            Param::G => &['i', 'o', 'k'],
+            Param::Op => &['o', 'k'],
+            Param::Opc => &['i', 'o'],
+            Param::Ks => &['i', 'k'],
+        };
+        // Only stores that actually exist (cap > 1; §4.4 models missing
+        // scratchpads as size 1) and are still within capacity constrain
+        // the factor — data in a degenerate or already-overflowed store
+        // re-streams regardless, so growing it costs nothing extra.
+        let constraining: Vec<char> = grows
+            .iter()
+            .copied()
+            .filter(|&x| accel.ls_cap(x) > 1 && self.tile_with(x, None) <= accel.ls_cap(x))
+            .collect();
+        if constraining.is_empty() {
+            return 1;
+        }
+        // Tile growth is monotone in the factor — binary search the
+        // largest factor that still fits.
+        let fits = |f: usize| {
+            constraining.iter().all(|&x| self.tile_with(x, Some((d, p, f))) <= accel.ls_cap(x))
+        };
+        let (mut lo, mut hi) = (1usize, n);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    /// Scan a finished temporal list and return the reuse pointers
+    /// `(ilst, olst, klst)`: for each store, the last entry index such
+    /// that all entries *before* it fit in the scratchpad. The entry at
+    /// the pointer itself may exceed capacity — it is the *streaming*
+    /// loop: its data makes a single pass through the scratchpad (the
+    /// overlap primitive loads only `s` new inputs per step, Fig. 8(a)),
+    /// so it still counts as reused. Loops outside the pointer re-stream
+    /// the tile and multiply movement (Eq. (8)).
+    pub(crate) fn pointers(
+        op: &GconvOp,
+        accel: &AccelStructure,
+        temporal: &[UnrollEntry],
+    ) -> [Option<usize>; 3] {
+        let mut t = TileTracker::new(op);
+        let mut ptrs = [None, None, None];
+        for (idx, e) in temporal.iter().enumerate() {
+            // Prefix (everything before `idx`) must be resident; entry
+            // `idx` itself streams.
+            for (slot, x) in ['i', 'o', 'k'].into_iter().enumerate() {
+                if t.tile_with(x, None) <= accel.ls_cap(x) {
+                    ptrs[slot] = Some(idx);
+                }
+            }
+            t.apply(e.dim, e.param, e.factor);
+        }
+        ptrs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs::{eyeriss, nlr, tpu};
+    use crate::gconv::op::{DataRef, DimParams};
+
+    fn conv_op() -> GconvOp {
+        // A DenseNet-ish 3x3 conv: 32 kernels of 3x3x16 on 16x56x56, batch 32.
+        GconvOp::conv(
+            "conv",
+            vec![
+                (Dim::B, DimParams::opc(32)),
+                (Dim::C, DimParams { nop: 32, nks: 16, ..Default::default() }),
+                (Dim::H, DimParams::window(56, 3, 1, 1)),
+                (Dim::W, DimParams::window(56, 3, 1, 1)),
+            ],
+            DataRef::External("x".into()),
+            DataRef::Weights("w".into()),
+        )
+    }
+
+    /// Invariant: spatial factors × temporal iterations cover the nest.
+    fn covers_all_loops(op: &GconvOp, m: &Mapping) {
+        for &(d, dp) in &op.dims {
+            for p in Param::ALL {
+                let n = dp.get(p);
+                let sp = m.spatial_factor(d, p);
+                let tp: usize = m
+                    .temporal
+                    .iter()
+                    .filter(|e| e.dim == d && e.param == p)
+                    .map(|e| e.factor)
+                    .product();
+                assert!(
+                    sp * tp >= n,
+                    "loop [{d}][{p}] = {n} not covered: spatial {sp} x temporal {tp}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eyeriss_gconv_mapping_covers_loops() {
+        let op = conv_op();
+        let m = map_gconv(&op, &eyeriss(), MapMode::Gconv);
+        covers_all_loops(&op, &m);
+    }
+
+    #[test]
+    fn eyeriss_overlap_primitive_takes_ks_in_py() {
+        // Fig. 9(a): the first overlap dim's ks lands on py.
+        let op = conv_op();
+        let m = map_gconv(&op, &eyeriss(), MapMode::Gconv);
+        let py = &m.spatial[0];
+        assert_eq!(py[0].param, Param::Ks);
+        assert!(matches!(py[0].dim, Dim::W | Dim::H));
+        assert_eq!(py[0].factor, 3);
+    }
+
+    #[test]
+    fn occupied_pes_never_exceed_array() {
+        for accel in [eyeriss(), tpu(), nlr()] {
+            let m = map_gconv(&conv_op(), &accel, MapMode::Gconv);
+            assert!(m.occupied_pes() <= accel.pes(), "{}", accel.name);
+        }
+    }
+
+    #[test]
+    fn baseline_nlr_only_unrolls_channels() {
+        let m = map_gconv(&conv_op(), &nlr(), MapMode::Baseline);
+        for axis in &m.spatial {
+            for e in axis {
+                assert_eq!(e.dim, Dim::C, "NLR baseline must stay in C, got {:?}", e);
+            }
+        }
+    }
+
+    #[test]
+    fn gconv_mapping_beats_baseline_on_depthwise() {
+        // Depthwise conv: no channel reduction — NLR's baseline dataflow
+        // (C only) starves, the GCONV mapping spreads over H/W.
+        let dw = GconvOp::conv(
+            "dw",
+            vec![
+                (Dim::B, DimParams::opc(32)),
+                (Dim::C, DimParams::g(64)),
+                (Dim::H, DimParams::window(56, 3, 1, 1)),
+                (Dim::W, DimParams::window(56, 3, 1, 1)),
+            ],
+            DataRef::External("x".into()),
+            DataRef::Weights("w".into()),
+        );
+        let a = nlr();
+        let base = map_gconv(&dw, &a, MapMode::Baseline);
+        let gc = map_gconv(&dw, &a, MapMode::Gconv);
+        assert!(gc.occupied_pes() > base.occupied_pes());
+    }
+
+    #[test]
+    fn temporal_tiles_respect_scratchpads() {
+        let op = conv_op();
+        let accel = eyeriss();
+        let m = map_gconv(&op, &accel, MapMode::Gconv);
+        let ptrs = TileTracker::pointers(&op, &accel, &m.temporal);
+        // Eyeriss has a 224-word KLS: at least one temporal loop must be
+        // kernel-resident.
+        assert!(ptrs[2].is_some(), "klst should cover some temporal loops");
+    }
+
+    #[test]
+    fn elementwise_op_maps_without_panic() {
+        let ew = GconvOp {
+            name: "relu".into(),
+            dims: vec![(Dim::B, DimParams::opc(32)), (Dim::C, DimParams::opc(64))],
+            pre: crate::gconv::op::PreOp::None,
+            main: crate::gconv::op::MainOp::Pass,
+            reduce: crate::gconv::op::ReduceOp::None,
+            post: crate::gconv::op::PostOp::Lut("relu"),
+            input: DataRef::External("x".into()),
+            kernel: None,
+        };
+        for accel in crate::accel::configs::all_accelerators() {
+            let m = map_gconv(&ew, &accel, MapMode::Gconv);
+            covers_all_loops(&ew, &m);
+        }
+    }
+}

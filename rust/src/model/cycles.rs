@@ -1,0 +1,127 @@
+//! Computation-cycle model (paper Eq. (6)) plus the data-loading bound
+//! that motivates consistent mapping and operation fusion (§4.3).
+
+use super::movement::{gconv_movement, Movement};
+use crate::accel::structure::AccelStructure;
+use crate::gconv::op::{GconvOp, Param};
+use crate::mapping::unroll::Mapping;
+
+/// Cycle count of one mapped GCONV, split by bound.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleBreakdown {
+    /// Eq. (6) computation cycles.
+    pub compute: f64,
+    /// Input-loading cycles at the GB bus (after loading parallelism).
+    pub load_input: f64,
+    /// Kernel-loading cycles.
+    pub load_kernel: f64,
+    /// Output write-back cycles.
+    pub store_output: f64,
+    /// The governing total (compute and transfers are double-buffered;
+    /// the slowest lane wins).
+    pub total: f64,
+}
+
+/// Eq. (6): `Cyc = Π_d Π_p ceil(Np_d / SP_Pp_d)`.
+pub fn compute_cycles(op: &GconvOp, m: &Mapping) -> f64 {
+    let mut cyc = 1.0;
+    for &(d, dp) in &op.dims {
+        for p in Param::ALL {
+            let n = dp.get(p);
+            let sp = m.spatial_factor(d, p);
+            cyc *= (n as f64 / sp as f64).ceil();
+        }
+    }
+    cyc
+}
+
+/// Full cycle model for one mapped GCONV.
+///
+/// `load_parallelism` is the number of input words the consumer can pull
+/// per bus cycle given the producer's storage format — `bw.i` when the
+/// mapping is consistent (§4.3), degraded toward 1 when it is not.
+pub fn gconv_cycles(
+    op: &GconvOp,
+    accel: &AccelStructure,
+    m: &Mapping,
+    load_parallelism: f64,
+) -> (CycleBreakdown, Movement) {
+    let mv = gconv_movement(op, accel, m);
+    let compute = compute_cycles(op, m);
+    let load_input = mv.input / (accel.bw.i as f64).min(load_parallelism).max(1.0);
+    let load_kernel = mv.kernel / accel.bw.k as f64;
+    let store_output = mv.output / accel.bw.o as f64;
+    let total = compute.max(load_input).max(load_kernel).max(store_output);
+    (CycleBreakdown { compute, load_input, load_kernel, store_output, total }, mv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs::{all_accelerators, eyeriss};
+    use crate::gconv::op::{DataRef, DimParams};
+    use crate::ir::Dim;
+    use crate::mapping::unroll::{map_gconv, MapMode};
+
+    fn conv_op() -> GconvOp {
+        GconvOp::conv(
+            "conv",
+            vec![
+                (Dim::B, DimParams::opc(16)),
+                (Dim::C, DimParams { nop: 32, nks: 16, ..Default::default() }),
+                (Dim::H, DimParams::window(28, 3, 1, 1)),
+                (Dim::W, DimParams::window(28, 3, 1, 1)),
+            ],
+            DataRef::External("x".into()),
+            DataRef::Weights("w".into()),
+        )
+    }
+
+    #[test]
+    fn cycles_bounded_by_work_over_pes() {
+        // Perfect utilization would finish in work/PEs cycles; Eq. (6)
+        // can only be ≥ that (ceil losses), and ≤ the full loop count.
+        let op = conv_op();
+        for accel in all_accelerators() {
+            let m = map_gconv(&op, &accel, MapMode::Gconv);
+            let c = compute_cycles(&op, &m);
+            let lower = op.work() as f64 / accel.pes() as f64;
+            assert!(c >= lower * 0.99, "{}: {c} < {lower}", accel.name);
+            assert!(c <= op.work() as f64, "{}: {c} > work", accel.name);
+        }
+    }
+
+    #[test]
+    fn total_is_max_of_lanes() {
+        let op = conv_op();
+        let accel = eyeriss();
+        let m = map_gconv(&op, &accel, MapMode::Gconv);
+        let (cb, _) = gconv_cycles(&op, &accel, &m, accel.bw.i as f64);
+        assert!(cb.total >= cb.compute && cb.total >= cb.load_input);
+        assert_eq!(
+            cb.total,
+            cb.compute.max(cb.load_input).max(cb.load_kernel).max(cb.store_output)
+        );
+    }
+
+    #[test]
+    fn inconsistent_loading_slows_data_bound_ops() {
+        // An element-wise op is load-bound: parallelism 1 vs full bus
+        // width changes its total cycles.
+        let ew = GconvOp {
+            name: "relu".into(),
+            dims: vec![(Dim::B, DimParams::opc(32)), (Dim::C, DimParams::opc(4096))],
+            pre: crate::gconv::op::PreOp::None,
+            main: crate::gconv::op::MainOp::Pass,
+            reduce: crate::gconv::op::ReduceOp::None,
+            post: crate::gconv::op::PostOp::Lut("relu"),
+            input: DataRef::External("x".into()),
+            kernel: None,
+        };
+        let accel = eyeriss();
+        let m = map_gconv(&ew, &accel, MapMode::Gconv);
+        let (fast, _) = gconv_cycles(&ew, &accel, &m, accel.bw.i as f64);
+        let (slow, _) = gconv_cycles(&ew, &accel, &m, 1.0);
+        assert!(slow.total > fast.total, "slow {} vs fast {}", slow.total, fast.total);
+    }
+}

@@ -1,0 +1,8 @@
+//! The analytical performance model of paper §4.2: computation cycles
+//! (Eq. 6) and per-level data movement (Table 3, Eq. 7–10).
+
+pub mod cycles;
+pub mod movement;
+
+pub use cycles::{compute_cycles, gconv_cycles, CycleBreakdown};
+pub use movement::{gconv_movement, Movement};

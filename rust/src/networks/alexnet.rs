@@ -1,0 +1,88 @@
+//! AlexNet (Krizhevsky et al., 2012) — paper code **AN**.
+//!
+//! New layer types per Table 1(a): LRN and dropout. Uses the original
+//! two-tower grouping on conv2/4/5 (groups = 2).
+
+use crate::ir::{Layer, Network, PoolKind, Shape};
+
+/// Build AlexNet for `batch` samples of 3×227×227.
+pub fn alexnet(batch: usize) -> Network {
+    let mut n = Network::new("AlexNet");
+    let data = n.add("data", Layer::Input { shape: Shape::bchw(batch, 3, 227, 227) }, &[]);
+
+    let c1 = n.add(
+        "conv1",
+        Layer::Conv { out_channels: 96, kernel: (11, 11), stride: 4, pad: 0, groups: 1 },
+        &[data],
+    );
+    let r1 = n.add("relu1", Layer::Relu, &[c1]);
+    let l1 = n.add("norm1", Layer::Lrn { local_size: 5 }, &[r1]);
+    let p1 = n.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[l1]);
+
+    let c2 = n.add(
+        "conv2",
+        Layer::Conv { out_channels: 256, kernel: (5, 5), stride: 1, pad: 2, groups: 2 },
+        &[p1],
+    );
+    let r2 = n.add("relu2", Layer::Relu, &[c2]);
+    let l2 = n.add("norm2", Layer::Lrn { local_size: 5 }, &[r2]);
+    let p2 = n.add("pool2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[l2]);
+
+    let c3 = n.add(
+        "conv3",
+        Layer::Conv { out_channels: 384, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[p2],
+    );
+    let r3 = n.add("relu3", Layer::Relu, &[c3]);
+    let c4 = n.add(
+        "conv4",
+        Layer::Conv { out_channels: 384, kernel: (3, 3), stride: 1, pad: 1, groups: 2 },
+        &[r3],
+    );
+    let r4 = n.add("relu4", Layer::Relu, &[c4]);
+    let c5 = n.add(
+        "conv5",
+        Layer::Conv { out_channels: 256, kernel: (3, 3), stride: 1, pad: 1, groups: 2 },
+        &[r4],
+    );
+    let r5 = n.add("relu5", Layer::Relu, &[c5]);
+    let p5 = n.add("pool5", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[r5]);
+
+    let f6 = n.add("fc6", Layer::FullyConnected { out_features: 4096 }, &[p5]);
+    let r6 = n.add("relu6", Layer::Relu, &[f6]);
+    let d6 = n.add("drop6", Layer::Dropout, &[r6]);
+    let f7 = n.add("fc7", Layer::FullyConnected { out_features: 4096 }, &[d6]);
+    let r7 = n.add("relu7", Layer::Relu, &[f7]);
+    let d7 = n.add("drop7", Layer::Dropout, &[r7]);
+    let f8 = n.add("fc8", Layer::FullyConnected { out_features: 1000 }, &[d7]);
+    n.add("prob", Layer::Softmax, &[f8]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn feature_map_sizes_match_original() {
+        let net = alexnet(32);
+        let by_name = |name: &str| {
+            net.nodes().iter().find(|n| n.name == name).unwrap().output.clone()
+        };
+        assert_eq!(by_name("conv1").extent(Dim::H), 55);
+        assert_eq!(by_name("pool1").extent(Dim::H), 27);
+        assert_eq!(by_name("conv2").extent(Dim::H), 27);
+        assert_eq!(by_name("pool2").extent(Dim::H), 13);
+        assert_eq!(by_name("pool5").extent(Dim::H), 6);
+        assert_eq!(by_name("pool5").extent(Dim::C), 256);
+        assert_eq!(by_name("fc8").extent(Dim::C), 1000);
+    }
+
+    #[test]
+    fn has_lrn_and_dropout() {
+        let net = alexnet(32);
+        assert!(net.nodes().iter().any(|n| matches!(n.layer, Layer::Lrn { .. })));
+        assert!(net.nodes().iter().any(|n| matches!(n.layer, Layer::Dropout)));
+    }
+}

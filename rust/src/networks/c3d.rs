@@ -1,0 +1,97 @@
+//! C3D (Tran et al., 2015) — paper code **C3D**.
+//!
+//! New layer types per Table 1(a): 3-D convolution and 3-D pooling. Input
+//! is a 16-frame 112×112 clip; Table 1(a) reports 99% of its data
+//! footprint in non-traditional (3-D) layers.
+
+use crate::ir::{Layer, Network, PoolKind, Shape};
+
+/// Build C3D for `batch` clips of 3×16×112×112.
+pub fn c3d(batch: usize) -> Network {
+    let mut n = Network::new("C3D");
+    let data = n.add("data", Layer::Input { shape: Shape::bcthw(batch, 3, 16, 112, 112) }, &[]);
+
+    let conv3 = |out| Layer::Conv3d { out_channels: out, kernel: (3, 3, 3), stride: 1, pad: 1 };
+
+    let c1 = n.add("conv1a", conv3(64), &[data]);
+    let r1 = n.add("relu1a", Layer::Relu, &[c1]);
+    let p1 = n.add(
+        "pool1",
+        Layer::Pool3d { kind: PoolKind::Max, kernel: (1, 2, 2), stride: (1, 2, 2) },
+        &[r1],
+    );
+
+    let c2 = n.add("conv2a", conv3(128), &[p1]);
+    let r2 = n.add("relu2a", Layer::Relu, &[c2]);
+    let p2 = n.add(
+        "pool2",
+        Layer::Pool3d { kind: PoolKind::Max, kernel: (2, 2, 2), stride: (2, 2, 2) },
+        &[r2],
+    );
+
+    let c3a = n.add("conv3a", conv3(256), &[p2]);
+    let r3a = n.add("relu3a", Layer::Relu, &[c3a]);
+    let c3b = n.add("conv3b", conv3(256), &[r3a]);
+    let r3b = n.add("relu3b", Layer::Relu, &[c3b]);
+    let p3 = n.add(
+        "pool3",
+        Layer::Pool3d { kind: PoolKind::Max, kernel: (2, 2, 2), stride: (2, 2, 2) },
+        &[r3b],
+    );
+
+    let c4a = n.add("conv4a", conv3(512), &[p3]);
+    let r4a = n.add("relu4a", Layer::Relu, &[c4a]);
+    let c4b = n.add("conv4b", conv3(512), &[r4a]);
+    let r4b = n.add("relu4b", Layer::Relu, &[c4b]);
+    let p4 = n.add(
+        "pool4",
+        Layer::Pool3d { kind: PoolKind::Max, kernel: (2, 2, 2), stride: (2, 2, 2) },
+        &[r4b],
+    );
+
+    let c5a = n.add("conv5a", conv3(512), &[p4]);
+    let r5a = n.add("relu5a", Layer::Relu, &[c5a]);
+    let c5b = n.add("conv5b", conv3(512), &[r5a]);
+    let r5b = n.add("relu5b", Layer::Relu, &[c5b]);
+    let p5 = n.add(
+        "pool5",
+        Layer::Pool3d { kind: PoolKind::Max, kernel: (2, 2, 2), stride: (2, 2, 2) },
+        &[r5b],
+    );
+
+    let f6 = n.add("fc6", Layer::FullyConnected { out_features: 4096 }, &[p5]);
+    let r6 = n.add("relu6", Layer::Relu, &[f6]);
+    let d6 = n.add("drop6", Layer::Dropout, &[r6]);
+    let f7 = n.add("fc7", Layer::FullyConnected { out_features: 4096 }, &[d6]);
+    let r7 = n.add("relu7", Layer::Relu, &[f7]);
+    let d7 = n.add("drop7", Layer::Dropout, &[r7]);
+    let f8 = n.add("fc8", Layer::FullyConnected { out_features: 487 }, &[d7]);
+    n.add("prob", Layer::Softmax, &[f8]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn temporal_downsampling() {
+        let net = c3d(8);
+        let out = |name: &str| net.nodes().iter().find(|n| n.name == name).unwrap().output.clone();
+        assert_eq!(out("pool1").extent(Dim::T), 16); // (1,2,2) keeps T
+        assert_eq!(out("pool2").extent(Dim::T), 8);
+        assert_eq!(out("pool5").extent(Dim::T), 1);
+        assert_eq!(out("pool5").extent(Dim::H), 4);
+    }
+
+    #[test]
+    fn three_d_layers_are_nontraditional() {
+        let net = c3d(8);
+        for node in net.nodes() {
+            if matches!(node.layer, Layer::Conv3d { .. } | Layer::Pool3d { .. }) {
+                assert!(!node.layer.is_traditional());
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! CapsNet (Sabour et al., 2017) — paper code **CapNN**.
+//!
+//! New layer types per Table 1(a): primary and digit capsules. MNIST
+//! configuration: conv 9×9×256 → primary caps (32×8D, 9×9 s2) → digit
+//! caps (10×16D, 3 routing iterations).
+
+use crate::ir::{Layer, Network, Shape};
+
+/// Build CapsNet for `batch` 1×28×28 images.
+pub fn capsnet(batch: usize) -> Network {
+    let mut n = Network::new("CapsNet");
+    let data = n.add("data", Layer::Input { shape: Shape::bchw(batch, 1, 28, 28) }, &[]);
+    let c1 = n.add(
+        "conv1",
+        Layer::Conv { out_channels: 256, kernel: (9, 9), stride: 1, pad: 0, groups: 1 },
+        &[data],
+    );
+    let r1 = n.add("relu1", Layer::Relu, &[c1]);
+    let prim = n.add(
+        "primarycaps",
+        Layer::PrimaryCaps { caps_channels: 32, vec: 8, kernel: 9, stride: 2 },
+        &[r1],
+    );
+    n.add("digitcaps", Layer::DigitCaps { out_caps: 10, out_vec: 16, routing: 3 }, &[prim]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn capsule_shapes_match_paper() {
+        let net = capsnet(16);
+        let out = |name: &str| net.nodes().iter().find(|n| n.name == name).unwrap().output.clone();
+        // Primary caps: 32 channels of 6x6 8-D capsules.
+        let p = out("primarycaps");
+        assert_eq!(p.extent(Dim::C), 32);
+        assert_eq!(p.extent(Dim::H), 6);
+        assert_eq!(p.extent(Dim::V), 8);
+        // Digit caps: 10 16-D capsules.
+        let d = out("digitcaps");
+        assert_eq!(d.extent(Dim::C), 10);
+        assert_eq!(d.extent(Dim::V), 16);
+    }
+
+    #[test]
+    fn digitcaps_transform_dominates_params() {
+        // 1152 x 8 x 10 x 16 ≈ 1.47M transform parameters.
+        let net = capsnet(16);
+        let dc = net.nodes().iter().find(|n| n.name == "digitcaps").unwrap();
+        let params = dc.layer.param_count(&net.input_shapes(dc.id));
+        assert_eq!(params, 1152 * 8 * 10 * 16);
+    }
+}

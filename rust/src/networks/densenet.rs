@@ -1,0 +1,107 @@
+//! DenseNet-121 (Huang et al., 2017) — paper code **DN**.
+//!
+//! New layer types per Table 1(a): batch normalization and scale (the
+//! Caffe deployment splits BN into `BatchNorm` + `Scale`, which we model
+//! the same way). Every dense layer is BN→Scale→ReLU→1×1 conv →
+//! BN→Scale→ReLU→3×3 conv with growth rate 32, concatenated.
+
+use crate::ir::{Layer, Network, NodeId, PoolKind, Shape};
+
+const GROWTH: usize = 32;
+
+/// BN → Scale → ReLU → conv composite.
+fn bsrc(
+    n: &mut Network,
+    name: &str,
+    input: NodeId,
+    out_ch: usize,
+    kernel: usize,
+    pad: usize,
+) -> NodeId {
+    let bn = n.add(&format!("{name}/bn"), Layer::BatchNorm, &[input]);
+    let sc = n.add(&format!("{name}/scale"), Layer::Scale, &[bn]);
+    let re = n.add(&format!("{name}/relu"), Layer::Relu, &[sc]);
+    n.add(
+        &format!("{name}/conv"),
+        Layer::Conv { out_channels: out_ch, kernel: (kernel, kernel), stride: 1, pad, groups: 1 },
+        &[re],
+    )
+}
+
+/// One dense layer: bottleneck 1×1 (4·growth) then 3×3 (growth), concat.
+fn dense_layer(n: &mut Network, name: &str, input: NodeId) -> NodeId {
+    let b = bsrc(n, &format!("{name}/x1"), input, 4 * GROWTH, 1, 0);
+    let c = bsrc(n, &format!("{name}/x2"), b, GROWTH, 3, 1);
+    n.add(&format!("{name}/concat"), Layer::Concat, &[input, c])
+}
+
+/// Transition: BN→Scale→ReLU→1×1 conv (halve channels) → 2×2 avg pool.
+fn transition(n: &mut Network, name: &str, input: NodeId, out_ch: usize) -> NodeId {
+    let c = bsrc(n, name, input, out_ch, 1, 0);
+    n.add(
+        &format!("{name}/pool"),
+        Layer::Pool { kind: PoolKind::Avg, kernel: 2, stride: 2, pad: 0 },
+        &[c],
+    )
+}
+
+/// Build DenseNet-121 for `batch` 3×224×224 images.
+pub fn densenet121(batch: usize) -> Network {
+    let mut n = Network::new("DenseNet121");
+    let data = n.add("data", Layer::Input { shape: Shape::bchw(batch, 3, 224, 224) }, &[]);
+    let c1 = n.add(
+        "conv1",
+        Layer::Conv { out_channels: 64, kernel: (7, 7), stride: 2, pad: 3, groups: 1 },
+        &[data],
+    );
+    let bn1 = n.add("conv1/bn", Layer::BatchNorm, &[c1]);
+    let sc1 = n.add("conv1/scale", Layer::Scale, &[bn1]);
+    let r1 = n.add("conv1/relu", Layer::Relu, &[sc1]);
+    let mut x = n.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[r1]);
+
+    let mut channels = 64;
+    for (bi, layers) in [6usize, 12, 24, 16].iter().enumerate() {
+        for li in 0..*layers {
+            x = dense_layer(&mut n, &format!("block{}/layer{}", bi + 1, li + 1), x);
+            channels += GROWTH;
+        }
+        if bi < 3 {
+            channels /= 2;
+            x = transition(&mut n, &format!("transition{}", bi + 1), x, channels);
+        }
+    }
+    let bn = n.add("final/bn", Layer::BatchNorm, &[x]);
+    let sc = n.add("final/scale", Layer::Scale, &[bn]);
+    let re = n.add("final/relu", Layer::Relu, &[sc]);
+    let gap = n.add("pool_final", Layer::GlobalAvgPool, &[re]);
+    let fc = n.add("fc6", Layer::FullyConnected { out_features: 1000 }, &[gap]);
+    n.add("prob", Layer::Softmax, &[fc]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn channel_growth_follows_densenet121() {
+        let net = densenet121(32);
+        let out = |name: &str| net.nodes().iter().find(|n| n.name == name).unwrap().output.clone();
+        // After block1 (6 layers): 64 + 6*32 = 256; transition halves.
+        assert_eq!(out("block1/layer6/concat").extent(Dim::C), 256);
+        assert_eq!(out("transition1/pool").extent(Dim::C), 128);
+        // Final: 512 + 16*32 = 1024 channels at 7x7.
+        assert_eq!(out("block4/layer16/concat").extent(Dim::C), 1024);
+        assert_eq!(out("block4/layer16/concat").extent(Dim::H), 7);
+    }
+
+    #[test]
+    fn bn_scale_pairs_dominate_layer_count() {
+        // Table 1(a): 66% of DenseNet layers are non-traditional.
+        let net = densenet121(32);
+        let non_trad = net.nodes().iter().filter(|n| !n.layer.is_traditional()).count();
+        let ratio = non_trad as f64 / net.len() as f64;
+        assert!(ratio > 0.5, "non-traditional layer ratio {ratio:.2}");
+    }
+}

@@ -1,0 +1,141 @@
+//! GoogLeNet / Inception v1 (Szegedy et al., 2015) — paper code **GLN**.
+//!
+//! New layer types per Table 1(a): average pooling and concat. Auxiliary
+//! classifier heads are omitted (they are disabled at inference and the
+//! paper's training evaluation keeps the main path).
+
+use crate::ir::{Layer, Network, NodeId, PoolKind, Shape};
+
+/// Inception module: four parallel branches concatenated over channels.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    n: &mut Network,
+    name: &str,
+    input: NodeId,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    cp: usize,
+) -> NodeId {
+    // 1x1 branch.
+    let b1 = n.add(
+        &format!("{name}/1x1"),
+        Layer::Conv { out_channels: c1, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[input],
+    );
+    let b1 = n.add(&format!("{name}/relu_1x1"), Layer::Relu, &[b1]);
+    // 3x3 branch.
+    let b3r = n.add(
+        &format!("{name}/3x3_reduce"),
+        Layer::Conv { out_channels: c3r, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[input],
+    );
+    let b3r = n.add(&format!("{name}/relu_3x3_reduce"), Layer::Relu, &[b3r]);
+    let b3 = n.add(
+        &format!("{name}/3x3"),
+        Layer::Conv { out_channels: c3, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[b3r],
+    );
+    let b3 = n.add(&format!("{name}/relu_3x3"), Layer::Relu, &[b3]);
+    // 5x5 branch.
+    let b5r = n.add(
+        &format!("{name}/5x5_reduce"),
+        Layer::Conv { out_channels: c5r, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[input],
+    );
+    let b5r = n.add(&format!("{name}/relu_5x5_reduce"), Layer::Relu, &[b5r]);
+    let b5 = n.add(
+        &format!("{name}/5x5"),
+        Layer::Conv { out_channels: c5, kernel: (5, 5), stride: 1, pad: 2, groups: 1 },
+        &[b5r],
+    );
+    let b5 = n.add(&format!("{name}/relu_5x5"), Layer::Relu, &[b5]);
+    // Pool branch.
+    let bp = n.add(
+        &format!("{name}/pool"),
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 1, pad: 1 },
+        &[input],
+    );
+    let bpp = n.add(
+        &format!("{name}/pool_proj"),
+        Layer::Conv { out_channels: cp, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[bp],
+    );
+    let bpp = n.add(&format!("{name}/relu_pool_proj"), Layer::Relu, &[bpp]);
+    n.add(&format!("{name}/output"), Layer::Concat, &[b1, b3, b5, bpp])
+}
+
+/// Build GoogLeNet for `batch` 3×224×224 images.
+pub fn googlenet(batch: usize) -> Network {
+    let mut n = Network::new("GoogLeNet");
+    let data = n.add("data", Layer::Input { shape: Shape::bchw(batch, 3, 224, 224) }, &[]);
+    let c1 = n.add(
+        "conv1/7x7_s2",
+        Layer::Conv { out_channels: 64, kernel: (7, 7), stride: 2, pad: 3, groups: 1 },
+        &[data],
+    );
+    let r1 = n.add("conv1/relu", Layer::Relu, &[c1]);
+    let p1 =
+        n.add("pool1/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[r1]);
+    let l1 = n.add("pool1/norm1", Layer::Lrn { local_size: 5 }, &[p1]);
+    let c2r = n.add(
+        "conv2/3x3_reduce",
+        Layer::Conv { out_channels: 64, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[l1],
+    );
+    let c2r = n.add("conv2/relu_reduce", Layer::Relu, &[c2r]);
+    let c2 = n.add(
+        "conv2/3x3",
+        Layer::Conv { out_channels: 192, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[c2r],
+    );
+    let c2 = n.add("conv2/relu", Layer::Relu, &[c2]);
+    let l2 = n.add("conv2/norm2", Layer::Lrn { local_size: 5 }, &[c2]);
+    let p2 =
+        n.add("pool2/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[l2]);
+
+    let i3a = inception(&mut n, "inception_3a", p2, 64, 96, 128, 16, 32, 32);
+    let i3b = inception(&mut n, "inception_3b", i3a, 128, 128, 192, 32, 96, 64);
+    let p3 =
+        n.add("pool3/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[i3b]);
+    let i4a = inception(&mut n, "inception_4a", p3, 192, 96, 208, 16, 48, 64);
+    let i4b = inception(&mut n, "inception_4b", i4a, 160, 112, 224, 24, 64, 64);
+    let i4c = inception(&mut n, "inception_4c", i4b, 128, 128, 256, 24, 64, 64);
+    let i4d = inception(&mut n, "inception_4d", i4c, 112, 144, 288, 32, 64, 64);
+    let i4e = inception(&mut n, "inception_4e", i4d, 256, 160, 320, 32, 128, 128);
+    let p4 =
+        n.add("pool4/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[i4e]);
+    let i5a = inception(&mut n, "inception_5a", p4, 256, 160, 320, 32, 128, 128);
+    let i5b = inception(&mut n, "inception_5b", i5a, 384, 192, 384, 48, 128, 128);
+
+    let gap = n.add("pool5/avg", Layer::GlobalAvgPool, &[i5b]);
+    let drop = n.add("pool5/drop", Layer::Dropout, &[gap]);
+    let fc = n.add("loss3/classifier", Layer::FullyConnected { out_features: 1000 }, &[drop]);
+    n.add("prob", Layer::Softmax, &[fc]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn inception_output_channels() {
+        let net = googlenet(32);
+        let out = |name: &str| net.nodes().iter().find(|n| n.name == name).unwrap().output.clone();
+        assert_eq!(out("inception_3a/output").extent(Dim::C), 256);
+        assert_eq!(out("inception_4a/output").extent(Dim::C), 512);
+        assert_eq!(out("inception_5b/output").extent(Dim::C), 1024);
+        assert_eq!(out("inception_5b/output").extent(Dim::H), 7);
+    }
+
+    #[test]
+    fn has_avg_pool_and_concat() {
+        let net = googlenet(32);
+        assert!(net.nodes().iter().any(|n| matches!(n.layer, Layer::GlobalAvgPool)));
+        assert!(net.nodes().iter().any(|n| matches!(n.layer, Layer::Concat)));
+    }
+}

@@ -1,0 +1,85 @@
+//! MobileNet v1 (Howard et al., 2017) — paper code **MN**.
+//!
+//! New layer type per Table 1(a): depthwise convolution. Every block is
+//! the Fig. 1(a) pattern: depthwise 3×3 → BN → ReLU → pointwise 1×1 →
+//! BN → ReLU.
+
+use crate::ir::{Layer, Network, NodeId, Shape};
+
+/// Append one depthwise-separable block.
+fn block(n: &mut Network, idx: usize, input: NodeId, in_ch: usize, out_ch: usize, stride: usize) -> NodeId {
+    let dw = n.add(
+        &format!("conv{idx}_dw"),
+        Layer::Conv { out_channels: in_ch, kernel: (3, 3), stride, pad: 1, groups: in_ch },
+        &[input],
+    );
+    let bn1 = n.add(&format!("bn{idx}_dw"), Layer::BatchNorm, &[dw]);
+    let r1 = n.add(&format!("relu{idx}_dw"), Layer::Relu, &[bn1]);
+    let pw = n.add(
+        &format!("conv{idx}_pw"),
+        Layer::Conv { out_channels: out_ch, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[r1],
+    );
+    let bn2 = n.add(&format!("bn{idx}_pw"), Layer::BatchNorm, &[pw]);
+    n.add(&format!("relu{idx}_pw"), Layer::Relu, &[bn2])
+}
+
+/// Build MobileNet v1 (width multiplier 1.0) for `batch` 3×224×224 images.
+pub fn mobilenet(batch: usize) -> Network {
+    let mut n = Network::new("MobileNet");
+    let data = n.add("data", Layer::Input { shape: Shape::bchw(batch, 3, 224, 224) }, &[]);
+    let c1 = n.add(
+        "conv1",
+        Layer::Conv { out_channels: 32, kernel: (3, 3), stride: 2, pad: 1, groups: 1 },
+        &[data],
+    );
+    let bn1 = n.add("bn1", Layer::BatchNorm, &[c1]);
+    let mut x = n.add("relu1", Layer::Relu, &[bn1]);
+
+    // (in_ch, out_ch, stride) for the 13 separable blocks.
+    let cfg: [(usize, usize, usize); 13] = [
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ];
+    for (i, &(ic, oc, s)) in cfg.iter().enumerate() {
+        x = block(&mut n, i + 2, x, ic, oc, s);
+    }
+    let gap = n.add("avg_pool", Layer::GlobalAvgPool, &[x]);
+    let fc = n.add("fc", Layer::FullyConnected { out_features: 1000 }, &[gap]);
+    n.add("prob", Layer::Softmax, &[fc]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn final_feature_map_is_7x7x1024() {
+        let net = mobilenet(32);
+        let last_relu = net.nodes().iter().rev().find(|n| n.name.starts_with("relu14")).unwrap();
+        assert_eq!(last_relu.output.extent(Dim::H), 7);
+        assert_eq!(last_relu.output.extent(Dim::C), 1024);
+    }
+
+    #[test]
+    fn depthwise_layers_are_nontraditional() {
+        let net = mobilenet(32);
+        let dw = net.nodes().iter().filter(|n| n.name.ends_with("_dw") && n.name.starts_with("conv"));
+        for node in dw {
+            assert!(!node.layer.is_traditional(), "{} should be non-traditional", node.name);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! The seven benchmark CNNs of the paper (Table 1(a)).
+//!
+//! Four classification networks — AlexNet (AN), GoogLeNet (GLN),
+//! DenseNet-121 (DN), MobileNet v1 (MN) — plus Faster R-CNN with a ZFNet
+//! backbone (ZFFR), the C3D video network and CapsNet (CapNN). Layer
+//! hyper-parameters follow the original publications / Caffe prototxts.
+//!
+//! All builders take the mini-batch size; the paper trains with
+//! mini-batch 32 for the 2-D CNNs (Fig. 9 note) and smaller batches for
+//! the memory-heavy C3D/CapsNet.
+
+mod alexnet;
+mod c3d;
+mod capsnet;
+mod densenet;
+mod googlenet;
+mod mobilenet;
+mod zffr;
+
+pub use alexnet::alexnet;
+pub use c3d::c3d;
+pub use capsnet::capsnet;
+pub use densenet::densenet121;
+pub use googlenet::googlenet;
+pub use mobilenet::mobilenet;
+pub use zffr::zf_faster_rcnn;
+
+use crate::ir::Network;
+
+/// Short paper codes for the benchmarks, in Table 1(a) order.
+pub const BENCHMARK_CODES: [&str; 7] = ["AN", "GLN", "DN", "MN", "ZFFR", "C3D", "CapNN"];
+
+/// Build a benchmark by its paper code with the paper's batch sizes.
+pub fn benchmark(code: &str) -> Network {
+    match code {
+        "AN" => alexnet(32),
+        "GLN" => googlenet(32),
+        "DN" => densenet121(32),
+        "MN" => mobilenet(32),
+        "ZFFR" => zf_faster_rcnn(1),
+        "C3D" => c3d(8),
+        "CapNN" => capsnet(16),
+        other => panic!("unknown benchmark {other}"),
+    }
+}
+
+/// All seven benchmarks.
+pub fn all_benchmarks() -> Vec<Network> {
+    BENCHMARK_CODES.iter().map(|c| benchmark(c)).collect()
+}
+
+/// A small synthetic network used by tests and the quickstart example:
+/// depthwise/BN/ReLU/pointwise — one MobileNet block (Fig. 1(a)).
+pub fn mobilenet_block(batch: usize, channels: usize, hw: usize) -> Network {
+    use crate::ir::{Layer, Shape};
+    let mut net = Network::new("MobileNetBlock");
+    let input =
+        net.add("data", Layer::Input { shape: Shape::bchw(batch, channels, hw, hw) }, &[]);
+    let dw = net.add(
+        "conv_dw",
+        Layer::Conv {
+            out_channels: channels,
+            kernel: (3, 3),
+            stride: 1,
+            pad: 1,
+            groups: channels,
+        },
+        &[input],
+    );
+    let bn1 = net.add("bn_dw", Layer::BatchNorm, &[dw]);
+    let r1 = net.add("relu_dw", Layer::Relu, &[bn1]);
+    let pw = net.add(
+        "conv_pw",
+        Layer::Conv { out_channels: channels * 2, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[r1],
+    );
+    let bn2 = net.add("bn_pw", Layer::BatchNorm, &[pw]);
+    net.add("relu_pw", Layer::Relu, &[bn2]);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::lower::{lower_network, Mode};
+
+    #[test]
+    fn all_benchmarks_build() {
+        for net in all_benchmarks() {
+            assert!(!net.is_empty(), "{} is empty", net.name);
+        }
+    }
+
+    #[test]
+    fn all_benchmarks_lower_to_chains() {
+        for net in all_benchmarks() {
+            let chain = lower_network(&net, Mode::Training);
+            assert!(chain.len() >= net.len(), "{} chain too short", net.name);
+            assert!(chain.total_work() > 0);
+        }
+    }
+
+    #[test]
+    fn nontraditional_ratio_matches_table1_ordering() {
+        // Table 1(a): DN and MN have the highest non-traditional layer
+        // ratios among the classification CNNs; C3D is dominated by 3-D
+        // (non-traditional) computation.
+        let ratio = |code: &str| {
+            let chain = lower_network(&benchmark(code), Mode::Training);
+            let (t, n) = chain.work_split();
+            n as f64 / (t + n) as f64
+        };
+        let an = ratio("AN");
+        let mn = ratio("MN");
+        let c3d = ratio("C3D");
+        assert!(mn > an, "MobileNet ({mn:.3}) should be more non-traditional than AlexNet ({an:.3})");
+        assert!(c3d > 0.5, "C3D is dominated by 3-D (non-traditional) compute, got {c3d:.3}");
+    }
+
+    #[test]
+    fn alexnet_parameter_count_is_plausible() {
+        // ~61M parameters in the original AlexNet.
+        let n = alexnet(32).param_count();
+        assert!((55_000_000..70_000_000).contains(&n), "AlexNet params {n}");
+    }
+
+    #[test]
+    fn mobilenet_parameter_count_is_plausible() {
+        // ~4.2M parameters in MobileNet v1.
+        let n = mobilenet(32).param_count();
+        assert!((3_000_000..6_000_000).contains(&n), "MobileNet params {n}");
+    }
+
+    #[test]
+    fn block_helper_matches_figure_1a() {
+        let net = mobilenet_block(4, 16, 8);
+        let kinds: Vec<&str> = net.nodes().iter().map(|n| n.layer.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec!["input", "conv(grouped)", "batch_norm", "relu", "conv", "batch_norm", "relu"]
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Faster R-CNN with ZFNet backbone (Ren et al. / Zeiler & Fergus) —
+//! paper code **ZFFR**.
+//!
+//! New layer types per Table 1(a): RoI pooling and proposal. Detection
+//! networks train with batch 1 (one image, many RoIs).
+
+use crate::ir::{Layer, Network, PoolKind, Shape};
+
+/// Build ZF + Faster R-CNN for `batch` 3×600×600 images (short-side-600
+/// protocol, square for simplicity), 300 proposals.
+pub fn zf_faster_rcnn(batch: usize) -> Network {
+    let mut n = Network::new("ZF-FasterRCNN");
+    let data = n.add("data", Layer::Input { shape: Shape::bchw(batch, 3, 600, 600) }, &[]);
+
+    // ZFNet backbone (conv1..conv5).
+    let c1 = n.add(
+        "conv1",
+        Layer::Conv { out_channels: 96, kernel: (7, 7), stride: 2, pad: 3, groups: 1 },
+        &[data],
+    );
+    let r1 = n.add("relu1", Layer::Relu, &[c1]);
+    let l1 = n.add("norm1", Layer::Lrn { local_size: 3 }, &[r1]);
+    let p1 = n.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 }, &[l1]);
+
+    let c2 = n.add(
+        "conv2",
+        Layer::Conv { out_channels: 256, kernel: (5, 5), stride: 2, pad: 2, groups: 1 },
+        &[p1],
+    );
+    let r2 = n.add("relu2", Layer::Relu, &[c2]);
+    let l2 = n.add("norm2", Layer::Lrn { local_size: 3 }, &[r2]);
+    let p2 = n.add("pool2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 }, &[l2]);
+
+    let c3 = n.add(
+        "conv3",
+        Layer::Conv { out_channels: 384, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[p2],
+    );
+    let r3 = n.add("relu3", Layer::Relu, &[c3]);
+    let c4 = n.add(
+        "conv4",
+        Layer::Conv { out_channels: 384, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[r3],
+    );
+    let r4 = n.add("relu4", Layer::Relu, &[c4]);
+    let c5 = n.add(
+        "conv5",
+        Layer::Conv { out_channels: 256, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[r4],
+    );
+    let r5 = n.add("relu5", Layer::Relu, &[c5]);
+
+    // Region proposal network.
+    let rpn = n.add(
+        "rpn_conv/3x3",
+        Layer::Conv { out_channels: 256, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[r5],
+    );
+    let rpn_r = n.add("rpn_relu", Layer::Relu, &[rpn]);
+    let rpn_cls = n.add(
+        "rpn_cls_score",
+        Layer::Conv { out_channels: 18, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[rpn_r],
+    );
+    let _rpn_bbox = n.add(
+        "rpn_bbox_pred",
+        Layer::Conv { out_channels: 36, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[rpn_r],
+    );
+    let proposal = n.add("proposal", Layer::Proposal { anchors: 9 }, &[rpn_cls]);
+    let _ = proposal;
+
+    // RoI pooling on conv5 features + detection head.
+    let roi = n.add("roi_pool5", Layer::RoiPool { num_rois: 300, output: (6, 6) }, &[r5]);
+    let f6 = n.add("fc6", Layer::FullyConnected { out_features: 4096 }, &[roi]);
+    let r6 = n.add("relu6", Layer::Relu, &[f6]);
+    let d6 = n.add("drop6", Layer::Dropout, &[r6]);
+    let f7 = n.add("fc7", Layer::FullyConnected { out_features: 4096 }, &[d6]);
+    let r7 = n.add("relu7", Layer::Relu, &[f7]);
+    let d7 = n.add("drop7", Layer::Dropout, &[r7]);
+    let cls = n.add("cls_score", Layer::FullyConnected { out_features: 21 }, &[d7]);
+    let _bbox = n.add("bbox_pred", Layer::FullyConnected { out_features: 84 }, &[d7]);
+    n.add("cls_prob", Layer::Softmax, &[cls]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Dim;
+
+    #[test]
+    fn roi_pool_produces_300_rois() {
+        let net = zf_faster_rcnn(1);
+        let roi = net.nodes().iter().find(|n| n.name == "roi_pool5").unwrap();
+        assert_eq!(roi.output.extent(Dim::B), 300);
+        assert_eq!(roi.output.extent(Dim::H), 6);
+    }
+
+    #[test]
+    fn has_proposal_and_roi_layers() {
+        let net = zf_faster_rcnn(1);
+        assert!(net.nodes().iter().any(|n| matches!(n.layer, Layer::Proposal { .. })));
+        assert!(net.nodes().iter().any(|n| matches!(n.layer, Layer::RoiPool { .. })));
+    }
+}

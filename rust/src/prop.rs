@@ -1,0 +1,107 @@
+//! Minimal in-repo property-testing support (no external crates are
+//! available offline, so this stands in for `proptest`).
+//!
+//! [`Rng`] is a splitmix64/xorshift-style deterministic generator; the
+//! [`prop_check`] helper runs a closure over many generated cases and
+//! reports the seed of the first failing case so it can be replayed.
+
+/// Deterministic 64-bit PRNG (splitmix64). Good enough statistical
+/// quality for test-case generation; NOT cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi, "bad range [{lo}, {hi}]");
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.int(0, xs.len() - 1)]
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Run `f` over `cases` generated cases. On failure (panic or `Err`),
+/// panics with the offending case index + seed so it can be replayed with
+/// `Rng::new(seed)`.
+pub fn prop_check<F>(cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base_seed = 0xC0FF_EE00_D15E_A5E5u64;
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn int_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let v = rng.int(3, 17);
+            assert!((3..=17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn prop_check_reports_failure() {
+        prop_check(10, |rng| {
+            if rng.int(0, 3) == 0 { Err("boom".into()) } else { Ok(()) }
+        });
+    }
+}

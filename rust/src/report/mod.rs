@@ -1,0 +1,99 @@
+//! Table/figure printers shared by the CLI and the bench harnesses.
+
+use std::fmt::Display;
+
+/// Render an aligned text table with a title.
+pub fn print_table<H: Display, C: Display>(title: &str, headers: &[H], rows: &[Vec<C>]) {
+    let headers: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    let rows: Vec<Vec<String>> =
+        rows.iter().map(|r| r.iter().map(|c| c.to_string()).collect()).collect();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in &rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    println!("\n=== {title} ===");
+    let line: usize = widths.iter().sum::<usize>() + 3 * widths.len();
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = widths.get(i).copied().unwrap_or(8);
+            if i == 0 {
+                s.push_str(&format!("{c:<w$}"));
+            } else {
+                s.push_str(&format!(" | {c:>w$}"));
+            }
+        }
+        s
+    };
+    println!("{}", fmt_row(&headers));
+    println!("{}", "-".repeat(line));
+    for r in &rows {
+        println!("{}", fmt_row(r));
+    }
+}
+
+/// Format a float with 2 decimals (for ratio tables).
+pub fn r2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a fraction as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.0}%", 100.0 * x)
+}
+
+/// Format with SI suffix (k/M/G/T).
+pub fn si(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e12 {
+        (x / 1e12, "T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2}{suffix}")
+}
+
+/// Geometric mean of positive values (the paper's "average of 3.4x" is a
+/// ratio average).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_of_constant_is_constant() {
+        assert!((geomean(&[3.0, 3.0, 3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_balances_ratios() {
+        assert!((geomean(&[2.0, 0.5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn si_formats() {
+        assert_eq!(si(1_500_000.0), "1.50M");
+        assert_eq!(si(42.0), "42.00");
+        assert_eq!(si(2.5e12), "2.50T");
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.34), "34%");
+    }
+}

@@ -1,0 +1,121 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which call the L1
+//! Pallas kernels) to **HLO text** — the interchange format that
+//! round-trips through the `xla` crate's text parser (serialized protos
+//! from jax ≥ 0.5 carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects). This module compiles those artifacts once on the PJRT CPU
+//! client and caches the executables; Python never runs at request time.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact cache on one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Directory artifacts are loaded from.
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime rooted at `artifact_dir`.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            exes: HashMap::new(),
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Backend platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) the artifact `name` — a `<name>.hlo.txt` file in
+    /// the artifact directory.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// True if the artifact file exists on disk.
+    pub fn available(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the output
+    /// tuple elements (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = self.exes.get(name).expect("just loaded");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        Ok(lit.to_tuple().context("unpacking result tuple")?)
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Flatten a literal back to f32s.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the PJRT client directly (no artifacts
+    /// needed); the artifact round-trip is covered by the integration
+    /// test `rust/tests/aot_roundtrip.rs` once `make artifacts` has run.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu("artifacts").expect("PJRT CPU client");
+        assert!(["cpu", "host"].contains(&rt.platform().to_lowercase().as_str()));
+        assert_eq!(rt.cached(), 0);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3, 3]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_reported() {
+        let mut rt = Runtime::cpu("artifacts").unwrap();
+        assert!(!rt.available("no_such_artifact"));
+        assert!(rt.load("no_such_artifact").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: the full python-AOT → rust-PJRT path with real numerics.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Validates that the HLO-text artifacts — which embed the L1 Pallas
+//! GCONV kernels and the L2 chain graphs — compile on the rust PJRT CPU
+//! client and compute the same numbers as simple rust-side references.
+
+use gconv_chain::runtime::{literal_f32, to_vec_f32, Runtime};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Deterministic pseudo-random data (must not depend on rand crates).
+fn data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = gconv_chain::prop::Rng::new(seed);
+    (0..n).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn gconv_generic_matches_rust_reference() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (b, c, o, hw, k) = (4usize, 8usize, 16usize, 12usize, 3usize);
+    let x = data(b * c * hw * hw, 1);
+    let w = data(o * c * k * k, 2);
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let out = rt
+        .execute(
+            "gconv_generic",
+            &[
+                literal_f32(&x, &[b as i64, c as i64, hw as i64, hw as i64]).unwrap(),
+                literal_f32(&w, &[o as i64, c as i64, k as i64, k as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(got.len(), b * o * hw * hw);
+
+    // Rust-side reference: plain padded conv.
+    let pad = 1i64;
+    let idx = |bi: usize, ci: usize, y: i64, xx: i64| -> f32 {
+        if y < 0 || xx < 0 || y >= hw as i64 || xx >= hw as i64 {
+            0.0
+        } else {
+            x[((bi * c + ci) * hw + y as usize) * hw + xx as usize]
+        }
+    };
+    let mut max_err = 0f32;
+    // Spot-check a grid of output positions (full check is O(1e7) — fine
+    // but slow in debug builds).
+    for bi in 0..b {
+        for oi in (0..o).step_by(5) {
+            for y in (0..hw).step_by(3) {
+                for xx in (0..hw).step_by(3) {
+                    let mut acc = 0f32;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let w_v = w[((oi * c + ci) * k + ky) * k + kx];
+                                acc += w_v
+                                    * idx(bi, ci, y as i64 + ky as i64 - pad, xx as i64 + kx as i64 - pad);
+                            }
+                        }
+                    }
+                    let got_v = got[((bi * o + oi) * hw + y) * hw + xx];
+                    max_err = max_err.max((got_v - acc).abs());
+                }
+            }
+        }
+    }
+    assert!(max_err < 1e-3, "max abs err {max_err}");
+}
+
+#[test]
+fn bn_train_normalizes_and_backprops() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (b, c, hw) = (8usize, 32usize, 8usize);
+    let n = b * c * hw * hw;
+    let x = data(n, 3);
+    let g = data(n, 4);
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let dims = [b as i64, c as i64, hw as i64, hw as i64];
+    let out = rt
+        .execute("bn_train", &[literal_f32(&x, &dims).unwrap(), literal_f32(&g, &dims).unwrap()])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let o = to_vec_f32(&out[0]).unwrap();
+    let gi = to_vec_f32(&out[1]).unwrap();
+
+    // Forward: per-feature batch statistics must be normalized.
+    let feat = c * hw * hw;
+    for f in (0..feat).step_by(97) {
+        let mut mean = 0f64;
+        let mut var = 0f64;
+        for bi in 0..b {
+            mean += o[bi * feat + f] as f64;
+        }
+        mean /= b as f64;
+        for bi in 0..b {
+            var += (o[bi * feat + f] as f64 - mean).powi(2);
+        }
+        var /= b as f64;
+        assert!(mean.abs() < 1e-4, "feature {f} mean {mean}");
+        assert!((var - 1.0).abs() < 1e-2, "feature {f} var {var}");
+    }
+
+    // Backward invariant of BN: the gradient projects out the mean and
+    // the O-direction — per feature, Σ_b gI = 0 and Σ_b gI·O = 0.
+    for f in (0..feat).step_by(113) {
+        let mut s = 0f64;
+        let mut so = 0f64;
+        for bi in 0..b {
+            s += gi[bi * feat + f] as f64;
+            so += gi[bi * feat + f] as f64 * o[bi * feat + f] as f64;
+        }
+        assert!(s.abs() < 1e-3, "feature {f}: sum gI = {s}");
+        assert!(so.abs() < 1e-3, "feature {f}: <gI, O> = {so}");
+    }
+}
+
+#[test]
+fn mobilenet_block_runs_and_is_rectified() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (b, c, hw) = (8usize, 16usize, 14usize);
+    let x = data(b * c * hw * hw, 5);
+    let dw = data(c * 9, 6);
+    let pw = data(2 * c * c, 7);
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let out = rt
+        .execute(
+            "mobilenet_block",
+            &[
+                literal_f32(&x, &[b as i64, c as i64, hw as i64, hw as i64]).unwrap(),
+                literal_f32(&dw, &[c as i64, 1, 3, 3]).unwrap(),
+                literal_f32(&pw, &[2 * c as i64, c as i64, 1, 1]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let y = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(y.len(), b * 2 * c * hw * hw);
+    // Final ReLU: non-negative, and (with random inputs + BN) roughly
+    // half the activations are exactly zero.
+    assert!(y.iter().all(|&v| v >= 0.0));
+    let zeros = y.iter().filter(|&&v| v == 0.0).count() as f64 / y.len() as f64;
+    assert!((0.2..0.8).contains(&zeros), "zero fraction {zeros}");
+}
+
+#[test]
+fn executables_are_cached() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    rt.load("gconv_generic").unwrap();
+    rt.load("gconv_generic").unwrap();
+    assert_eq!(rt.cached(), 1);
+}

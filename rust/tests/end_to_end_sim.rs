@@ -1,0 +1,162 @@
+//! Integration tests of the whole simulator stack: the qualitative
+//! claims of the paper's evaluation must hold on the full benchmarks.
+
+use gconv_chain::accel::configs::by_code;
+use gconv_chain::networks::benchmark;
+use gconv_chain::report::geomean;
+use gconv_chain::sim::{simulate, ExecMode, SimOptions};
+
+fn sim(net: &str, accel: &str, mode: ExecMode) -> gconv_chain::sim::SimResult {
+    simulate(&benchmark(net), &by_code(accel), SimOptions { mode, training: true })
+}
+
+#[test]
+fn headline_speedup_in_paper_band() {
+    // Paper: 3.4x average, 8.2x max. Accept the right order of magnitude.
+    let cells = [
+        ("AN", "TPU"),
+        ("AN", "DNNW"),
+        ("AN", "ER"),
+        ("AN", "EP"),
+        ("AN", "NLR"),
+        ("MN", "DNNW"),
+        ("DN", "EP"),
+        ("GLN", "NLR"),
+    ];
+    let speedups: Vec<f64> = cells
+        .iter()
+        .map(|(n, a)| {
+            let b = sim(n, a, ExecMode::Baseline);
+            let g = sim(n, a, ExecMode::GconvChain);
+            b.seconds / g.seconds
+        })
+        .collect();
+    let avg = geomean(&speedups);
+    assert!((1.5..8.0).contains(&avg), "average speedup {avg:.2} out of band");
+}
+
+#[test]
+fn gconv_chain_wins_biggest_on_lip_and_ep() {
+    // Fig. 14: "The speedup of DN and MN on DNNW and EP are high because
+    // their baselines suffer the most from the pipeline bubbles and
+    // offloading."
+    for n in ["DN", "MN"] {
+        for a in ["DNNW", "EP"] {
+            let b = sim(n, a, ExecMode::Baseline);
+            let g = sim(n, a, ExecMode::GconvChain);
+            let s = b.seconds / g.seconds;
+            assert!(s > 2.0, "{n}/{a} speedup {s:.2} should be large");
+        }
+    }
+}
+
+#[test]
+fn er_and_tpu_speedups_are_modest() {
+    // Fig. 13/14: "The speedup over baseline TPU and ER are low because
+    // they explore flexible unrolling strategies."
+    for n in ["AN", "GLN", "DN"] {
+        for a in ["ER", "TPU"] {
+            let b = sim(n, a, ExecMode::Baseline);
+            let g = sim(n, a, ExecMode::GconvChain);
+            let s = b.seconds / g.seconds;
+            assert!((0.8..3.0).contains(&s), "{n}/{a} speedup {s:.2} should be modest");
+        }
+    }
+}
+
+#[test]
+fn conv_layers_no_worse_than_baseline() {
+    // Fig. 13: "In all the cases, the performance of GCONV Chain is no
+    // worse than the baselines" on convolution layers (5% tolerance for
+    // model noise).
+    for n in ["AN", "GLN", "MN"] {
+        for a in ["ER", "EP", "NLR", "DNNW"] {
+            let b = sim(n, a, ExecMode::Baseline);
+            let g = sim(n, a, ExecMode::GconvChain);
+            assert!(
+                g.conv_seconds <= b.conv_seconds * 1.05,
+                "{n}/{a}: GCONV conv time {} > baseline {}",
+                g.conv_seconds,
+                b.conv_seconds
+            );
+        }
+    }
+}
+
+#[test]
+fn depthwise_speedup_salient_on_mn() {
+    // Fig. 13: "In MN, where the feature maps unrolling in the baselines
+    // is useless for depthwise convolution, the speedup is salient" (NLR
+    // baseline only unrolls feature maps).
+    let b = sim("MN", "NLR", ExecMode::Baseline);
+    let g = sim("MN", "NLR", ExecMode::GconvChain);
+    assert!(b.conv_seconds / g.conv_seconds > 1.2);
+}
+
+#[test]
+fn offloading_eliminated_by_gconv_chain() {
+    // Benefit (2) of §1: GC-CIPs eliminate the costly offloading.
+    for n in ["AN", "DN", "MN", "CapNN"] {
+        for a in ["ER", "EP", "NLR"] {
+            let b = sim(n, a, ExecMode::Baseline);
+            let g = sim(n, a, ExecMode::GconvChain);
+            assert!(b.movement.offload > 0.0, "{n}/{a} baseline must offload");
+            assert_eq!(g.movement.offload, 0.0, "{n}/{a} GCONV must not offload");
+        }
+    }
+}
+
+#[test]
+fn gc_cip_energy_beats_tip_and_lip() {
+    // Fig. 19 ordering: GC-CIP ≥ TIP ≥ ... on energy efficiency (MAC per
+    // energy unit), network-averaged.
+    let eff = |r: &gconv_chain::sim::SimResult| r.energy.compute / r.energy.total();
+    let mut gc = Vec::new();
+    let mut tip = Vec::new();
+    let mut lip = Vec::new();
+    for n in ["AN", "GLN", "DN", "MN"] {
+        gc.push(eff(&sim(n, "ER", ExecMode::GconvChain)));
+        tip.push(eff(&sim(n, "TPU", ExecMode::Baseline)));
+        lip.push(eff(&sim(n, "DNNW", ExecMode::Baseline)));
+    }
+    assert!(geomean(&gc) > geomean(&tip), "GC-CIP must beat TIP on efficiency");
+    assert!(geomean(&gc) > geomean(&lip), "GC-CIP must beat LIP on efficiency");
+}
+
+#[test]
+fn dnnw_baseline_underutilized_on_heterogeneous_nets() {
+    // Table 1(b)/Fig. 12: the LIP pipeline utilization collapses when
+    // the traditional/non-traditional balance mismatches the partition.
+    let an = sim("AN", "DNNW", ExecMode::Baseline).utilization;
+    let mn = sim("MN", "DNNW", ExecMode::Baseline).utilization;
+    assert!(an > mn, "AN util {an:.2} should exceed MN util {mn:.2}");
+}
+
+#[test]
+fn ablations_never_beat_full_chain() {
+    for n in ["AN", "MN"] {
+        let full = sim(n, "ER", ExecMode::GconvChain);
+        let nofuse = sim(n, "ER", ExecMode::GconvNoFusion);
+        let nocons = sim(n, "ER", ExecMode::GconvNoConsistent);
+        assert!(full.seconds <= nofuse.seconds * 1.001, "{n}: fusion must not hurt");
+        assert!(full.seconds <= nocons.seconds * 1.001, "{n}: consistency must not hurt");
+        assert!(full.chain_len <= nofuse.chain_len);
+    }
+}
+
+#[test]
+fn training_dominates_inference() {
+    for n in ["AN", "MN"] {
+        let t = simulate(
+            &benchmark(n),
+            &by_code("ER"),
+            SimOptions { mode: ExecMode::GconvChain, training: true },
+        );
+        let i = simulate(
+            &benchmark(n),
+            &by_code("ER"),
+            SimOptions { mode: ExecMode::GconvChain, training: false },
+        );
+        assert!(t.seconds > 1.8 * i.seconds, "{n}: training {} vs inference {}", t.seconds, i.seconds);
+    }
+}

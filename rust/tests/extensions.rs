@@ -1,0 +1,145 @@
+//! Extension coverage beyond the paper's Table-4 set: §4.4 generality
+//! (a sixth accelerator structure), the §3.1 "real-time learning"
+//! remark (batch-1 chains prune their B loops), and failure-injection /
+//! edge-case behaviour of the coordinator.
+
+use gconv_chain::accel::configs::simba;
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::gconv::op::Param;
+use gconv_chain::ir::Dim;
+use gconv_chain::mapping::{map_gconv, MapMode};
+use gconv_chain::networks::{benchmark, mobilenet_block};
+use gconv_chain::sim::{simulate, ExecMode, SimOptions};
+
+#[test]
+fn algorithm1_generalizes_to_simba() {
+    // §4.4: a structure never seen by the mapper's design must map every
+    // benchmark without modification and keep the GCONV-chain benefits.
+    let accel = simba();
+    for code in ["AN", "MN", "CapNN"] {
+        let net = benchmark(code);
+        let base = simulate(&net, &accel, SimOptions { mode: ExecMode::Baseline, training: true });
+        let gc = simulate(&net, &accel, SimOptions { mode: ExecMode::GconvChain, training: true });
+        assert!(gc.seconds.is_finite() && gc.seconds > 0.0);
+        assert_eq!(gc.movement.offload, 0.0);
+        let s = base.seconds / gc.seconds;
+        assert!(s > 0.8, "{code} on Simba: speedup {s:.2}");
+    }
+}
+
+#[test]
+fn simba_reduce_axis_hosts_ks_loops() {
+    // The only reduce-capable axis must receive every spatial ks loop.
+    let accel = simba();
+    let chain = lower_network(&benchmark("AN"), Mode::Inference);
+    for e in chain.entries() {
+        let m = map_gconv(&e.op, &accel, MapMode::Gconv);
+        for entry in &m.spatial[0] {
+            assert_ne!(
+                entry.param,
+                Param::Ks,
+                "{}: ks spatially unrolled on a non-reduce axis",
+                e.op.name
+            );
+        }
+    }
+}
+
+#[test]
+fn realtime_learning_prunes_batch_loops() {
+    // §3.1: "we can remove the four loops in dimension B to model the
+    // real-time learning" — with batch 1 the lowered chain must carry no
+    // effective B loops.
+    let net = mobilenet_block(1, 16, 14);
+    let chain = lower_network(&net, Mode::Training);
+    for e in chain.entries() {
+        let p = e.op.params(Dim::B);
+        for param in Param::ALL {
+            assert_eq!(p.get(param), 1, "{}: B loop survived batch-1 lowering", e.op.name);
+        }
+    }
+    // And batch-32 work is ~32x the batch-1 work (BN reductions scale too).
+    let w1 = chain.total_work() as f64;
+    let w32 = lower_network(&mobilenet_block(32, 16, 14), Mode::Training).total_work() as f64;
+    let ratio = w32 / w1;
+    assert!((28.0..36.0).contains(&ratio), "work ratio {ratio:.1}");
+}
+
+#[test]
+fn coordinator_rejects_bad_samples_and_handles_partial_batches() {
+    use gconv_chain::coordinator::{ChainExecutor, Request};
+    use gconv_chain::runtime::literal_f32;
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (b, c, hw) = (8usize, 16usize, 14usize);
+    let mut rng = gconv_chain::prop::Rng::new(9);
+    let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f64() as f32 - 0.5).collect() };
+    let dw = literal_f32(&rand(c * 9), &[c as i64, 1, 3, 3]).unwrap();
+    let pw = literal_f32(&rand(2 * c * c), &[2 * c as i64, c as i64, 1, 1]).unwrap();
+    let mut exec = ChainExecutor::new(
+        "artifacts",
+        "mobilenet_block",
+        &[b as i64, c as i64, hw as i64, hw as i64],
+        2 * c * hw * hw,
+        vec![dw, pw],
+    )
+    .unwrap();
+
+    // Failure injection: wrong sample length must be rejected up front.
+    assert!(exec.submit(Request { id: 0, data: vec![0.0; 7] }).is_err());
+    assert_eq!(exec.pending(), 0);
+
+    // Partial batch: 3 samples < batch 8 — no execution without flush…
+    for id in 0..3 {
+        exec.submit(Request { id, data: rand(c * hw * hw) }).unwrap();
+    }
+    assert!(exec.step(false).unwrap().is_empty());
+    assert_eq!(exec.pending(), 3);
+    // …but a flush pads and serves all three, preserving order.
+    let out = exec.step(true).unwrap();
+    assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    assert_eq!(exec.pending(), 0);
+    assert!(out.iter().all(|r| r.data.len() == 2 * c * hw * hw));
+}
+
+#[test]
+fn runtime_rejects_wrong_arity() {
+    use gconv_chain::runtime::{literal_f32, Runtime};
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    // gconv_generic expects two inputs; give it one.
+    let x = literal_f32(&vec![0.0; 4 * 8 * 12 * 12], &[4, 8, 12, 12]).unwrap();
+    assert!(rt.execute("gconv_generic", &[x]).is_err());
+}
+
+#[test]
+fn inference_chains_skip_backward_ops() {
+    use gconv_chain::gconv::chain::Phase;
+    for code in ["AN", "MN"] {
+        let chain = lower_network(&benchmark(code), Mode::Inference);
+        assert!(chain.entries().iter().all(|e| e.phase == Phase::Fp), "{code}");
+    }
+}
+
+#[test]
+fn degenerate_single_pixel_network_simulates() {
+    // Edge case: 1x1 spatial extents everywhere.
+    use gconv_chain::ir::{Layer, Network, Shape};
+    let mut net = Network::new("tiny");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(2, 4, 1, 1) }, &[]);
+    let c = net.add(
+        "conv",
+        Layer::Conv { out_channels: 8, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[i],
+    );
+    net.add("sm", Layer::Softmax, &[c]);
+    for a in gconv_chain::accel::configs::all_accelerators() {
+        let r = simulate(&net, &a, SimOptions { mode: ExecMode::GconvChain, training: true });
+        assert!(r.seconds > 0.0 && r.seconds.is_finite(), "{}", a.name);
+    }
+}

@@ -1,0 +1,280 @@
+//! Property-based tests over the compiler/mapper/model invariants,
+//! using the in-repo generator (`gconv_chain::prop`).
+
+use gconv_chain::accel::configs::all_accelerators;
+use gconv_chain::gconv::op::{DataRef, DimParams, GconvOp, MainOp, Param, PostOp, PreOp, ReduceOp};
+use gconv_chain::ir::Dim;
+use gconv_chain::isa::{decode_unrolling, encode};
+use gconv_chain::mapping::{map_gconv, MapMode};
+use gconv_chain::model::cycles::compute_cycles;
+use gconv_chain::model::movement::gconv_movement;
+use gconv_chain::prop::{prop_check, Rng};
+
+/// Generate a random (but well-formed) GCONV op.
+fn arb_op(rng: &mut Rng) -> GconvOp {
+    let mut dims = Vec::new();
+    if rng.bool(0.8) {
+        dims.push((Dim::B, DimParams::opc(rng.int(1, 32))));
+    }
+    match rng.int(0, 2) {
+        0 => dims.push((
+            Dim::C,
+            DimParams { nop: rng.int(1, 64), nks: rng.int(1, 32), ..Default::default() },
+        )),
+        1 => dims.push((Dim::C, DimParams::g(rng.int(1, 64)))),
+        _ => dims.push((Dim::C, DimParams::opc(rng.int(1, 64)))),
+    }
+    for d in [Dim::H, Dim::W] {
+        if rng.bool(0.7) {
+            let ks = rng.int(1, 5);
+            let s = rng.int(1, 2);
+            let opc = rng.int(1, 28);
+            let ps = rng.int(0, ks / 2);
+            dims.push((d, DimParams { nopc: opc, nks: ks, s, ps, ..Default::default() }));
+        }
+    }
+    let kernel_less = rng.bool(0.3);
+    GconvOp {
+        name: "prop".into(),
+        dims,
+        pre: *rng.choose(&[PreOp::None, PreOp::Square]),
+        main: if kernel_less {
+            MainOp::Pass
+        } else {
+            *rng.choose(&[MainOp::Mul, MainOp::Add, MainOp::Sub])
+        },
+        reduce: *rng.choose(&[ReduceOp::Add, ReduceOp::Max, ReduceOp::None]),
+        post: *rng.choose(&[PostOp::None, PostOp::Lut("relu")]),
+        input: DataRef::External("x".into()),
+        kernel: if kernel_less { None } else { Some(DataRef::Weights("w".into())) },
+    }
+}
+
+#[test]
+fn mapping_covers_every_loop() {
+    // Σ spatial×temporal factors must cover each loop's full count.
+    prop_check(300, |rng| {
+        let op = arb_op(rng);
+        let accels = all_accelerators();
+        let accel = rng.choose(&accels);
+        let mode = if rng.bool(0.5) { MapMode::Gconv } else { MapMode::Baseline };
+        let m = map_gconv(&op, accel, mode);
+        for &(d, dp) in &op.dims {
+            for p in Param::ALL {
+                let n = dp.get(p);
+                let sp = m.spatial_factor(d, p);
+                let tp: usize = m
+                    .temporal
+                    .iter()
+                    .filter(|e| e.dim == d && e.param == p)
+                    .map(|e| e.factor)
+                    .product();
+                if sp * tp < n {
+                    return Err(format!(
+                        "{}: loop [{d}][{p}]={n} uncovered (sp {sp} x tp {tp}) for {op}",
+                        accel.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn occupied_pes_within_array() {
+    prop_check(300, |rng| {
+        let op = arb_op(rng);
+        let accels = all_accelerators();
+        let accel = rng.choose(&accels);
+        let m = map_gconv(&op, accel, MapMode::Gconv);
+        if m.occupied_pes() > accel.pes() {
+            return Err(format!("{} PEs > {}", m.occupied_pes(), accel.pes()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cycles_bounded_by_work_and_parallelism() {
+    // work/PEs ≤ Eq.(6) cycles ≤ work (ceil losses only raise the bound).
+    prop_check(300, |rng| {
+        let op = arb_op(rng);
+        let accels = all_accelerators();
+        let accel = rng.choose(&accels);
+        let m = map_gconv(&op, accel, MapMode::Gconv);
+        let c = compute_cycles(&op, &m);
+        let work = op.work() as f64;
+        if c < work / accel.pes() as f64 * 0.999 {
+            return Err(format!(
+                "{}: cycles {c} < work/PEs {}",
+                accel.name,
+                work / accel.pes() as f64
+            ));
+        }
+        if c > work * 1.001 {
+            return Err(format!("{}: cycles {c} > work {work}", accel.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn movement_bounded_below_by_unique_data() {
+    prop_check(300, |rng| {
+        let op = arb_op(rng);
+        let accels = all_accelerators();
+        let accel = rng.choose(&accels);
+        let m = map_gconv(&op, accel, MapMode::Gconv);
+        let mv = gconv_movement(&op, accel, &m);
+        if mv.input < op.input_elements() as f64 * 0.99 {
+            return Err(format!("input movement {} < unique {}", mv.input, op.input_elements()));
+        }
+        if mv.output < op.output_elements() as f64 * 0.99 {
+            return Err(format!(
+                "output movement {} < unique {}",
+                mv.output,
+                op.output_elements()
+            ));
+        }
+        if op.kernel.is_some() && mv.kernel < op.kernel_elements() as f64 * 0.99 {
+            return Err(format!(
+                "kernel movement {} < unique {}",
+                mv.kernel,
+                op.kernel_elements()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn isa_encoding_round_trips_unrolling_lists() {
+    prop_check(200, |rng| {
+        let op = arb_op(rng);
+        let accels = all_accelerators();
+        let accel = rng.choose(&accels);
+        let m = map_gconv(&op, accel, MapMode::Gconv);
+        let prog = encode(&op, &m);
+        let lists = decode_unrolling(&prog.unrolling);
+        if lists.len() != m.spatial.len() + 1 {
+            return Err(format!("list count {} != {}", lists.len(), m.spatial.len() + 1));
+        }
+        for (axis, decoded) in m.spatial.iter().zip(&lists) {
+            if axis != decoded {
+                return Err("spatial list mismatch".into());
+            }
+        }
+        if &m.temporal != lists.last().unwrap() {
+            return Err("temporal list mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fusion_preserves_reduce_work() {
+    // Fused chains drop only reduce-free ops; total reduce-op work is
+    // invariant and references stay backward.
+    use gconv_chain::gconv::lower::{lower_network, Mode};
+    use gconv_chain::ir::{Layer, Network, PoolKind, Shape};
+    use gconv_chain::mapping::fuse_chain;
+
+    prop_check(40, |rng| {
+        let mut net = Network::new("prop");
+        let mut prev = net.add(
+            "data",
+            Layer::Input { shape: Shape::bchw(rng.int(1, 8), rng.int(1, 8), 8, 8) },
+            &[],
+        );
+        for i in 0..rng.int(1, 5) {
+            let c = rng.int(1, 16);
+            prev = net.add(
+                &format!("conv{i}"),
+                Layer::Conv { out_channels: c, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+                &[prev],
+            );
+            match rng.int(0, 3) {
+                0 => prev = net.add(&format!("bn{i}"), Layer::BatchNorm, &[prev]),
+                1 => prev = net.add(&format!("relu{i}"), Layer::Relu, &[prev]),
+                2 => {
+                    prev = net.add(
+                        &format!("pool{i}"),
+                        Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+                        &[prev],
+                    )
+                }
+                _ => {}
+            }
+        }
+        let mut chain = lower_network(&net, Mode::Training);
+        let reduce_work_before: usize = chain
+            .entries()
+            .iter()
+            .filter(|e| e.op.reduce != ReduceOp::None)
+            .map(|e| e.op.work())
+            .sum();
+        fuse_chain(&mut chain);
+        let reduce_work_after: usize = chain
+            .entries()
+            .iter()
+            .filter(|e| e.op.reduce != ReduceOp::None)
+            .map(|e| e.op.work())
+            .sum();
+        if reduce_work_before != reduce_work_after {
+            return Err(format!("reduce work {reduce_work_before} -> {reduce_work_after}"));
+        }
+        for (i, e) in chain.entries().iter().enumerate() {
+            if let DataRef::Gconv(p) = e.op.input {
+                if p >= i {
+                    return Err(format!("entry {i} references {p}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lowering_never_panics_on_valid_stacks() {
+    use gconv_chain::gconv::lower::{lower_network, Mode};
+    use gconv_chain::ir::{Layer, Network, PoolKind, Shape};
+    prop_check(100, |rng| {
+        let mut net = Network::new("prop");
+        let mut prev = net.add(
+            "data",
+            Layer::Input { shape: Shape::bchw(rng.int(1, 4), rng.int(1, 8), 16, 16) },
+            &[],
+        );
+        for i in 0..rng.int(1, 8) {
+            let h = net.node(prev).output.extent(Dim::H);
+            prev = match rng.int(0, 4) {
+                0 => net.add(
+                    &format!("c{i}"),
+                    Layer::Conv {
+                        out_channels: rng.int(1, 16),
+                        kernel: (3, 3),
+                        stride: 1,
+                        pad: 1,
+                        groups: 1,
+                    },
+                    &[prev],
+                ),
+                1 if h >= 2 => net.add(
+                    &format!("p{i}"),
+                    Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+                    &[prev],
+                ),
+                2 => net.add(&format!("b{i}"), Layer::BatchNorm, &[prev]),
+                3 => net.add(&format!("s{i}"), Layer::Sigmoid, &[prev]),
+                _ => net.add(&format!("r{i}"), Layer::Relu, &[prev]),
+            };
+        }
+        let inf = lower_network(&net, Mode::Inference);
+        let trn = lower_network(&net, Mode::Training);
+        if trn.len() < inf.len() {
+            return Err("training chain shorter than inference".into());
+        }
+        Ok(())
+    });
+}
