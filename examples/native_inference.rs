@@ -1,0 +1,92 @@
+//! End-to-end MobileNet v1 inference on the native GCONV execution
+//! engine: lower the network to its FP GCONV chain, interpret the whole
+//! chain in pure Rust (no Python, no XLA, no artifacts), and report
+//! per-layer and total throughput.
+//!
+//! Run: `cargo run --release --example native_inference [BATCH]`
+//! (default batch 2; weights are synthesized deterministically).
+
+use gconv_chain::exec::{ChainExec, Tensor};
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::networks::mobilenet;
+use gconv_chain::report::{print_table, si};
+
+fn main() {
+    let batch: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(2);
+    let net = mobilenet(batch);
+    let chain = lower_network(&net, Mode::Inference);
+    println!(
+        "{}: {} GCONV entries, {} main ops per batch of {batch}",
+        net.name,
+        chain.len(),
+        si(chain.total_work() as f64)
+    );
+
+    let mut exec = ChainExec::new(chain);
+    exec.set_input("data.data", Tensor::rand(&[batch, 3, 224, 224], 42, 1.0));
+    let report = exec.run_last().expect("native execution failed");
+
+    // Per-layer table: one row per IR layer (chain entries grouped by
+    // the op-name prefix before the phase suffix, e.g. "bn3.FP2" → bn3).
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut cur: Option<(String, f64, usize, usize)> = None;
+    for e in &report.entries {
+        let layer = e.name.split('.').next().unwrap_or(&e.name).to_string();
+        match &mut cur {
+            Some((name, secs, work, n)) if *name == layer => {
+                *secs += e.seconds;
+                *work += e.work;
+                *n += 1;
+            }
+            _ => {
+                if let Some((name, secs, work, n)) = cur.take() {
+                    rows.push(layer_row(name, secs, work, n));
+                }
+                cur = Some((layer, e.seconds, e.work, 1));
+            }
+        }
+    }
+    if let Some((name, secs, work, n)) = cur.take() {
+        rows.push(layer_row(name, secs, work, n));
+    }
+    print_table(
+        &format!("MobileNet FP chain on the native backend (batch {batch})"),
+        &["layer", "gconvs", "main ops", "ms", "Gops/s"],
+        &rows,
+    );
+
+    let out = &report.outputs[0];
+    let probs = out.data();
+    let top = probs
+        .iter()
+        .take(1000)
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, p)| (i, *p))
+        .unwrap_or((0, 0.0));
+    println!("sample 0: argmax class {} (p = {:.4}), output volume {}", top.0, top.1, out);
+
+    let throughput = batch as f64 / report.total_s;
+    println!(
+        "total: {:.2} s wall, {} main ops, {} ops/s, {:.3} samples/s",
+        report.total_s,
+        si(report.total_work() as f64),
+        si(report.work_rate()),
+        throughput
+    );
+    assert!(
+        throughput.is_finite() && throughput > 0.0,
+        "throughput must be finite and non-zero"
+    );
+}
+
+fn layer_row(name: String, secs: f64, work: usize, n: usize) -> Vec<String> {
+    let gops = if secs > 0.0 { work as f64 / secs / 1e9 } else { 0.0 };
+    vec![
+        name,
+        n.to_string(),
+        si(work as f64),
+        format!("{:.2}", secs * 1e3),
+        format!("{gops:.2}"),
+    ]
+}

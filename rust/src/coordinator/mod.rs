@@ -1,14 +1,25 @@
-//! L3 coordinator: drives GCONV-chain *numerics* through the PJRT
-//! runtime.
+//! L3 coordinator: batches incoming requests and drives GCONV-chain
+//! *numerics* through a pluggable execution backend.
 //!
 //! The paper's contribution is the compiler + mapper + accelerator
-//! model, so the execution driver is deliberately thin: it owns the
-//! artifact lifecycle, batches incoming samples to the mini-batch size
-//! the artifacts were lowered for, executes the compiled chain step, and
-//! reports latency/throughput. Python is never on this path — the
-//! artifacts are AOT-compiled HLO (see [`crate::runtime`]).
+//! model, so the execution driver is deliberately thin: it batches
+//! incoming samples to the mini-batch size the chain was lowered for,
+//! executes one chain step per batch, and reports latency/throughput.
+//! Where the numbers come from is a [`Backend`] decision:
+//!
+//! * [`NativeBackend`] (default, pure Rust) — interprets the lowered
+//!   [`GconvChain`] directly with [`crate::exec`]; no Python, no XLA,
+//!   no artifacts.
+//! * `PjrtBackend` (cargo feature `pjrt`) — executes AOT-compiled
+//!   HLO-text artifacts on the PJRT CPU client via [`crate::runtime`].
+//!
+//! Both sit behind the same submit/step/drain API, so callers never
+//! know which engine served them.
 
-use crate::runtime::{literal_f32, to_vec_f32, Runtime};
+use crate::exec::{ChainExec, RunReport, Tensor};
+use crate::gconv::chain::GconvChain;
+use crate::gconv::lower::{lower_network, Mode};
+use crate::ir::{Layer, Network};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -57,26 +68,176 @@ impl ExecStats {
     }
 }
 
-/// Batching executor for one compiled chain artifact.
+/// An execution engine the coordinator can batch requests onto.
+///
+/// A backend owns one compiled/lowered chain, fixed at a mini-batch
+/// size; [`Backend::execute`] consumes one full batch of flattened
+/// samples (`batch() * sample_len()` values, zero-padded by the caller
+/// when flushing a partial batch) and returns `batch() * out_len()`
+/// output values in the same sample order.
+pub trait Backend {
+    /// Human-readable engine name (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+    /// Mini-batch size the chain was lowered/compiled for.
+    fn batch(&self) -> usize;
+    /// Flattened per-sample input length.
+    fn sample_len(&self) -> usize;
+    /// Flattened per-sample output length.
+    fn out_len(&self) -> usize;
+    /// Execute one full batch (takes ownership — the native backend
+    /// wraps the buffer into a tensor without copying).
+    fn execute(&mut self, batch_data: Vec<f32>) -> Result<Vec<f32>>;
+}
+
+/// Pure-Rust backend: interprets the lowered GCONV chain with
+/// [`crate::exec::ChainExec`]. Missing weights are synthesized
+/// deterministically (provide real ones with
+/// [`NativeBackend::set_weights`]).
+pub struct NativeBackend {
+    exec: ChainExec,
+    input_name: String,
+    input_dims: Vec<usize>,
+    output_entry: usize,
+    batch: usize,
+    sample_len: usize,
+    out_len: usize,
+    last_report: Option<RunReport>,
+}
+
+impl NativeBackend {
+    /// Build a backend for `chain`, reading its network input from the
+    /// external operand `input_name` with shape `input_dims`
+    /// (`input_dims[0]` is the mini-batch size). The chain's last entry
+    /// is taken as the network output; see [`NativeBackend::with_output`].
+    pub fn new(chain: GconvChain, input_name: &str, input_dims: &[usize]) -> Result<Self> {
+        anyhow::ensure!(!chain.is_empty(), "cannot execute an empty chain");
+        anyhow::ensure!(
+            !input_dims.is_empty() && input_dims.iter().all(|&d| d > 0),
+            "bad input shape {input_dims:?}"
+        );
+        // The chain must actually read this operand — otherwise
+        // submitted samples would be silently ignored in favour of
+        // synthesized data.
+        let input_ref = crate::gconv::op::DataRef::External(input_name.to_string());
+        anyhow::ensure!(
+            chain.entries().iter().any(|e| {
+                e.op.input == input_ref || e.op.kernel.as_ref() == Some(&input_ref)
+            }),
+            "no chain entry consumes external operand {input_name:?}"
+        );
+        let batch = input_dims[0];
+        let sample_len: usize = input_dims[1..].iter().product();
+        let output_entry = chain.len() - 1;
+        let out_total = chain.entries()[output_entry].op.output_elements();
+        anyhow::ensure!(
+            out_total % batch == 0,
+            "output of entry #{output_entry} ({out_total} elements) does not split into \
+             batch {batch}"
+        );
+        Ok(NativeBackend {
+            exec: ChainExec::new(chain),
+            input_name: input_name.to_string(),
+            input_dims: input_dims.to_vec(),
+            output_entry,
+            batch,
+            sample_len,
+            out_len: out_total / batch,
+            last_report: None,
+        })
+    }
+
+    /// Lower `net` for inference and build a backend for it. The input
+    /// operand name and shape are taken from the network's `Input`
+    /// layer (`"<name>.data"`, as emitted by the lowering).
+    pub fn for_network(net: &Network) -> Result<Self> {
+        let input = net
+            .nodes()
+            .iter()
+            .find(|n| matches!(n.layer, Layer::Input { .. }))
+            .context("network has no Input layer")?;
+        let dims: Vec<usize> = input.output.iter().map(|(_, n)| n).collect();
+        let name = format!("{}.data", input.name);
+        NativeBackend::new(lower_network(net, Mode::Inference), &name, &dims)
+    }
+
+    /// Use entry `i`'s output as the network output instead of the last
+    /// chain entry.
+    pub fn with_output(mut self, i: usize) -> Result<Self> {
+        anyhow::ensure!(i < self.exec.chain().len(), "entry #{i} out of range");
+        let out_total = self.exec.chain().entries()[i].op.output_elements();
+        anyhow::ensure!(
+            out_total % self.batch == 0,
+            "output of entry #{i} ({out_total} elements) does not split into batch {}",
+            self.batch
+        );
+        self.output_entry = i;
+        self.out_len = out_total / self.batch;
+        Ok(self)
+    }
+
+    /// Provide real trained parameters for a layer (by lowering name).
+    pub fn set_weights(&mut self, name: &str, t: Tensor) {
+        self.exec.set_weights(name, t);
+    }
+
+    /// Per-entry timing of the most recent batch execution.
+    pub fn last_report(&self) -> Option<&RunReport> {
+        self.last_report.as_ref()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn execute(&mut self, batch_data: Vec<f32>) -> Result<Vec<f32>> {
+        let t = Tensor::new(&self.input_dims, batch_data)?;
+        self.exec.set_input(&self.input_name, t);
+        let mut report = self.exec.run(&[self.output_entry])?;
+        let out = report.outputs.remove(0).into_data();
+        self.last_report = Some(report);
+        anyhow::ensure!(
+            out.len() == self.batch * self.out_len,
+            "backend produced {} values, expected {}",
+            out.len(),
+            self.batch * self.out_len
+        );
+        Ok(out)
+    }
+}
+
+/// PJRT backend for one compiled chain artifact (cargo feature `pjrt`).
 ///
 /// The artifact takes `(x, w...)` where `x` is `[batch, sample_len]`-
 /// reshaped input and returns a tuple whose first element is the output
 /// batch; extra weight tensors are bound once at construction.
-pub struct ChainExecutor {
-    runtime: Runtime,
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    runtime: crate::runtime::Runtime,
     artifact: String,
     batch: usize,
     sample_len: usize,
     out_len: usize,
     weights: Vec<xla::Literal>,
     input_dims: Vec<i64>,
-    queue: VecDeque<(Request, Instant)>,
-    stats: ExecStats,
-    latency_acc: f64,
 }
 
-impl ChainExecutor {
-    /// Create an executor for `artifact` in `artifact_dir`.
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Create a backend for `artifact` in `artifact_dir`.
     ///
     /// `input_dims` is the full batched input shape (first dim = batch);
     /// `out_len` the per-sample output length; `weights` any additional
@@ -88,12 +249,11 @@ impl ChainExecutor {
         out_len: usize,
         weights: Vec<xla::Literal>,
     ) -> Result<Self> {
-        let mut runtime = Runtime::cpu(artifact_dir)?;
+        let mut runtime = crate::runtime::Runtime::cpu(artifact_dir)?;
         runtime.load(artifact).with_context(|| format!("loading {artifact}"))?;
         let batch = input_dims[0] as usize;
-        let sample_len: usize =
-            input_dims[1..].iter().map(|&d| d as usize).product();
-        Ok(ChainExecutor {
+        let sample_len: usize = input_dims[1..].iter().map(|&d| d as usize).product();
+        Ok(PjrtBackend {
             runtime,
             artifact: artifact.to_string(),
             batch,
@@ -101,19 +261,118 @@ impl ChainExecutor {
             out_len,
             weights,
             input_dims: input_dims.to_vec(),
+        })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn execute(&mut self, batch_data: Vec<f32>) -> Result<Vec<f32>> {
+        let x = crate::runtime::literal_f32(&batch_data, &self.input_dims)?;
+        let mut inputs = vec![x];
+        for w in &self.weights {
+            // Literals are cheap client-side handles; re-reshape clones.
+            inputs.push(w.reshape(&shape_of(w)?)?);
+        }
+        let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+        crate::runtime::to_vec_f32(&outputs[0])
+    }
+}
+
+/// Dims of a literal's array shape.
+#[cfg(feature = "pjrt")]
+fn shape_of(l: &xla::Literal) -> Result<Vec<i64>> {
+    let shape = l.shape()?;
+    match shape {
+        xla::Shape::Array(a) => Ok(a.dims().to_vec()),
+        _ => anyhow::bail!("expected array literal"),
+    }
+}
+
+/// Batching executor over one [`Backend`].
+///
+/// Incoming [`Request`]s queue until a full mini-batch is available
+/// (or the caller flushes), then execute as one chain step.
+pub struct ChainExecutor {
+    backend: Box<dyn Backend>,
+    queue: VecDeque<(Request, Instant)>,
+    stats: ExecStats,
+    latency_acc: f64,
+}
+
+impl ChainExecutor {
+    /// Wrap an arbitrary backend.
+    pub fn with_backend(backend: Box<dyn Backend>) -> Self {
+        ChainExecutor {
+            backend,
             queue: VecDeque::new(),
             stats: ExecStats::default(),
             latency_acc: 0.0,
-        })
+        }
+    }
+
+    /// Native executor for a lowered chain (see [`NativeBackend::new`]).
+    pub fn native(chain: GconvChain, input_name: &str, input_dims: &[usize]) -> Result<Self> {
+        Ok(Self::with_backend(Box::new(NativeBackend::new(chain, input_name, input_dims)?)))
+    }
+
+    /// Native executor for a network (lowered for inference).
+    pub fn for_network(net: &Network) -> Result<Self> {
+        Ok(Self::with_backend(Box::new(NativeBackend::for_network(net)?)))
+    }
+
+    /// PJRT executor for a compiled artifact (kept signature-compatible
+    /// with the pre-`Backend` API; see [`PjrtBackend::new`]).
+    #[cfg(feature = "pjrt")]
+    pub fn new(
+        artifact_dir: &str,
+        artifact: &str,
+        input_dims: &[i64],
+        out_len: usize,
+        weights: Vec<xla::Literal>,
+    ) -> Result<Self> {
+        Ok(Self::with_backend(Box::new(PjrtBackend::new(
+            artifact_dir,
+            artifact,
+            input_dims,
+            out_len,
+            weights,
+        )?)))
+    }
+
+    /// Name of the engine serving this executor.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Flattened per-sample input length the backend expects.
+    pub fn sample_len(&self) -> usize {
+        self.backend.sample_len()
     }
 
     /// Enqueue a request.
     pub fn submit(&mut self, req: Request) -> Result<()> {
         anyhow::ensure!(
-            req.data.len() == self.sample_len,
+            req.data.len() == self.backend.sample_len(),
             "sample length {} != expected {}",
             req.data.len(),
-            self.sample_len
+            self.backend.sample_len()
         );
         self.queue.push_back((req, Instant::now()));
         Ok(())
@@ -128,12 +387,21 @@ impl ChainExecutor {
     /// in submission order. Returns an empty vec when not enough work is
     /// queued and `flush` is false (the dynamic-batching policy: wait
     /// for a full batch unless flushing).
+    ///
+    /// A flushed partial batch is zero-padded to the chain's mini-batch
+    /// size. For chains with cross-sample ops — BatchNorm reduces over
+    /// the batch dimension even in FP (the lowering computes batch
+    /// statistics, Table 2) — the padding participates in those
+    /// reductions, so a sample's result can depend on how full its
+    /// batch was; chains of purely per-sample ops are unaffected.
     pub fn step(&mut self, flush: bool) -> Result<Vec<Response>> {
-        if self.queue.is_empty() || (!flush && self.queue.len() < self.batch) {
+        let (batch, sample_len, out_len) =
+            (self.backend.batch(), self.backend.sample_len(), self.backend.out_len());
+        if self.queue.is_empty() || (!flush && self.queue.len() < batch) {
             return Ok(Vec::new());
         }
-        let take = self.queue.len().min(self.batch);
-        let mut batch_data = Vec::with_capacity(self.batch * self.sample_len);
+        let take = self.queue.len().min(batch);
+        let mut batch_data = Vec::with_capacity(batch * sample_len);
         let mut meta = Vec::with_capacity(take);
         for _ in 0..take {
             let (req, t0) = self.queue.pop_front().expect("non-empty");
@@ -141,27 +409,27 @@ impl ChainExecutor {
             meta.push((req.id, t0));
         }
         // Pad the final partial batch with zeros.
-        batch_data.resize(self.batch * self.sample_len, 0.0);
+        batch_data.resize(batch * sample_len, 0.0);
 
-        let x = literal_f32(&batch_data, &self.input_dims)?;
-        let mut inputs = vec![x];
-        for w in &self.weights {
-            // Literals are cheap client-side handles; re-reshape clones.
-            inputs.push(w.reshape(&shape_of(w)?)?);
-        }
         let t_exec = Instant::now();
-        let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+        let out = self.backend.execute(batch_data)?;
         let exec_s = t_exec.elapsed().as_secs_f64();
-        let out = to_vec_f32(&outputs[0])?;
+        anyhow::ensure!(
+            out.len() >= take * out_len,
+            "backend returned {} values for {} samples of {}",
+            out.len(),
+            take,
+            out_len
+        );
 
         let mut responses = Vec::with_capacity(take);
         for (i, (id, t0)) in meta.into_iter().enumerate() {
-            let start = i * self.out_len;
+            let start = i * out_len;
             let latency = t0.elapsed().as_secs_f64();
             self.latency_acc += latency;
             responses.push(Response {
                 id,
-                data: out[start..start + self.out_len].to_vec(),
+                data: out[start..start + out_len].to_vec(),
                 latency_s: latency,
             });
         }
@@ -187,18 +455,12 @@ impl ChainExecutor {
     }
 }
 
-/// Dims of a literal's array shape.
-fn shape_of(l: &xla::Literal) -> Result<Vec<i64>> {
-    let shape = l.shape()?;
-    match shape {
-        xla::Shape::Array(a) => Ok(a.dims().to_vec()),
-        _ => anyhow::bail!("expected array literal"),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gconv::chain::{ChainEntry, Phase};
+    use crate::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+    use crate::ir::Dim;
 
     #[test]
     fn stats_throughput() {
@@ -209,5 +471,61 @@ mod tests {
     #[test]
     fn zero_time_throughput_is_zero() {
         assert_eq!(ExecStats::default().throughput(), 0.0);
+    }
+
+    /// One batched ReLU entry: batch 2, 4 features.
+    fn relu_chain() -> GconvChain {
+        let mut c = GconvChain::new("relu");
+        c.push(ChainEntry::new(
+            GconvOp {
+                name: "relu.fp".into(),
+                dims: vec![(Dim::B, DimParams::opc(2)), (Dim::C, DimParams::opc(4))],
+                pre: PreOp::None,
+                main: MainOp::Pass,
+                reduce: ReduceOp::None,
+                post: PostOp::Lut("relu"),
+                input: DataRef::External("x".into()),
+                kernel: None,
+            },
+            0,
+            true,
+            Phase::Fp,
+        ));
+        c
+    }
+
+    #[test]
+    fn native_executor_serves_batches_in_order() {
+        let mut exec = ChainExecutor::native(relu_chain(), "x", &[2, 4]).unwrap();
+        assert_eq!(exec.backend_name(), "native");
+        for id in 0..2 {
+            let sign = if id == 0 { 1.0 } else { -1.0 };
+            exec.submit(Request { id, data: vec![sign; 4] }).unwrap();
+        }
+        let out = exec.step(false).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].data, vec![1.0; 4]);
+        assert_eq!(out[1].data, vec![0.0; 4]);
+        assert_eq!(exec.stats().samples, 2);
+    }
+
+    #[test]
+    fn native_executor_rejects_bad_sample_length() {
+        let mut exec = ChainExecutor::native(relu_chain(), "x", &[2, 4]).unwrap();
+        assert!(exec.submit(Request { id: 0, data: vec![0.0; 3] }).is_err());
+        assert_eq!(exec.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_unless_flushed() {
+        let mut exec = ChainExecutor::native(relu_chain(), "x", &[2, 4]).unwrap();
+        exec.submit(Request { id: 7, data: vec![2.0; 4] }).unwrap();
+        assert!(exec.step(false).unwrap().is_empty());
+        assert_eq!(exec.pending(), 1);
+        let out = exec.drain().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 7);
+        assert_eq!(out[0].data, vec![2.0; 4]);
+        assert_eq!(exec.pending(), 0);
     }
 }

@@ -1,0 +1,447 @@
+//! Parallel GCONV-chain scheduler: execute a whole [`GconvChain`] on the
+//! native interpreter.
+//!
+//! The chain (paper §3.2) links GCONVs by producer/consumer relations
+//! ([`DataRef::Gconv`] references point backwards by construction), so
+//! scheduling is a level-order walk of the dependency DAG:
+//!
+//! 1. every entry's *level* is `1 + max(level(deps))` — entries in the
+//!    same level have no mutual data dependencies;
+//! 2. a level's entries evaluate concurrently (rayon), and each entry's
+//!    own output elements evaluate in parallel too (nested parallelism —
+//!    rayon's work stealing balances wide levels against wide ops, which
+//!    is how independent batch slices end up on separate cores);
+//! 3. intermediate buffers are reference-counted and freed as soon as
+//!    their last consumer has run, so a full training chain never holds
+//!    more than the live frontier of activations.
+//!
+//! External operands ([`DataRef::External`] / [`DataRef::Weights`]) come
+//! from a tensor store filled by the caller. Anything missing is — by
+//! default — synthesized deterministically from the operand name (the
+//! in-repo splitmix64 generator), which makes whole-network smoke runs
+//! possible without trained checkpoints; [`ChainExec::strict`] turns
+//! that off for callers that want hard errors instead.
+
+use super::interp::eval_gconv;
+use super::tensor::Tensor;
+use crate::gconv::chain::{GconvChain, Phase};
+use crate::gconv::op::{DataRef, GconvOp};
+use anyhow::{anyhow, ensure, Context, Result};
+use rayon::prelude::*;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Timing/size record of one executed chain entry.
+#[derive(Clone, Debug)]
+pub struct EntryRun {
+    /// Chain index.
+    pub index: usize,
+    /// Op name (e.g. `"conv1.fp"`, `"bn3.FP2"`).
+    pub name: String,
+    /// FP / BP / WG.
+    pub phase: Phase,
+    /// Wall-clock seconds spent evaluating this entry.
+    pub seconds: f64,
+    /// Output elements produced.
+    pub out_elements: usize,
+    /// `main`-operator applications (the op's loop-nest work).
+    pub work: usize,
+}
+
+/// Result of one [`ChainExec::run`]: requested output tensors plus
+/// per-entry timing.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Requested outputs, parallel to the `wanted` argument of `run`.
+    pub outputs: Vec<Tensor>,
+    /// Per-entry records, sorted by chain index.
+    pub entries: Vec<EntryRun>,
+    /// End-to-end wall-clock seconds for the whole chain.
+    pub total_s: f64,
+}
+
+impl RunReport {
+    /// Total `main`-operator work across all executed entries.
+    pub fn total_work(&self) -> usize {
+        self.entries.iter().map(|e| e.work).sum()
+    }
+
+    /// `main` operations per second over the whole run.
+    pub fn work_rate(&self) -> f64 {
+        if self.total_s > 0.0 {
+            self.total_work() as f64 / self.total_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Native chain executor: owns the chain, its external-tensor store, and
+/// the precomputed level schedule.
+pub struct ChainExec {
+    chain: GconvChain,
+    externals: HashMap<DataRef, Tensor>,
+    synthesize: bool,
+    synth_seed: u64,
+    synth_scale: f32,
+    levels: Vec<Vec<usize>>,
+}
+
+impl ChainExec {
+    /// Build an executor for `chain`. Missing externals are synthesized
+    /// deterministically by default (see the module docs).
+    pub fn new(chain: GconvChain) -> Self {
+        let n = chain.len();
+        let mut level = vec![0usize; n];
+        for i in 0..n {
+            for d in deps(&chain.entries()[i].op) {
+                level[i] = level[i].max(level[d] + 1);
+            }
+        }
+        let depth = level.iter().copied().max().map_or(0, |m| m + 1);
+        let mut levels = vec![Vec::new(); depth];
+        for (i, &l) in level.iter().enumerate() {
+            levels[l].push(i);
+        }
+        ChainExec {
+            chain,
+            externals: HashMap::new(),
+            synthesize: true,
+            synth_seed: 0x6C0_17BD_600D_CAFE,
+            synth_scale: 0.1,
+            levels,
+        }
+    }
+
+    /// Override the seed/scale used to synthesize missing externals.
+    pub fn with_synthesis(mut self, seed: u64, scale: f32) -> Self {
+        self.synthesize = true;
+        self.synth_seed = seed;
+        self.synth_scale = scale;
+        self
+    }
+
+    /// Error on missing externals instead of synthesizing them.
+    pub fn strict(mut self) -> Self {
+        self.synthesize = false;
+        self
+    }
+
+    /// Provide a network input / stored activation tensor (matches
+    /// [`DataRef::External`] operands by name, e.g. `"data.data"`).
+    pub fn set_input(&mut self, name: &str, t: Tensor) {
+        self.externals.insert(DataRef::External(name.to_string()), t);
+    }
+
+    /// Provide a layer's trained parameters (matches
+    /// [`DataRef::Weights`] operands by name, e.g. `"conv1"`).
+    pub fn set_weights(&mut self, name: &str, t: Tensor) {
+        self.externals.insert(DataRef::Weights(name.to_string()), t);
+    }
+
+    /// The chain being executed.
+    pub fn chain(&self) -> &GconvChain {
+        &self.chain
+    }
+
+    /// The level schedule (entries per dependency level) — exposed for
+    /// tests and instrumentation.
+    pub fn levels(&self) -> &[Vec<usize>] {
+        &self.levels
+    }
+
+    /// Execute the chain, returning the outputs of the `wanted` entries
+    /// plus per-entry timing. Only entries the `wanted` set transitively
+    /// depends on are evaluated; buffers of entries whose last consumer
+    /// has run (and that are not in `wanted`) are dropped eagerly.
+    pub fn run(&mut self, wanted: &[usize]) -> Result<RunReport> {
+        let n = self.chain.len();
+        ensure!(n > 0, "cannot run an empty chain");
+        for &w in wanted {
+            ensure!(w < n, "wanted entry #{w} out of range (chain has {n})");
+        }
+
+        // Reverse reachability from `wanted` (deps point backwards, so
+        // one descending sweep closes the set).
+        let mut needed = vec![false; n];
+        for &w in wanted {
+            needed[w] = true;
+        }
+        for i in (0..n).rev() {
+            if needed[i] {
+                for d in deps(&self.chain.entries()[i].op) {
+                    needed[d] = true;
+                }
+            }
+        }
+        self.materialize_externals(&needed)?;
+
+        // Consumer counts restricted to the needed subgraph, plus one
+        // use per `wanted` occurrence.
+        let mut uses = vec![0usize; n];
+        for i in 0..n {
+            if needed[i] {
+                for d in deps(&self.chain.entries()[i].op) {
+                    uses[d] += 1;
+                }
+            }
+        }
+        for &w in wanted {
+            uses[w] += 1;
+        }
+        let mut buffers: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut records: Vec<EntryRun> = Vec::with_capacity(n);
+        let t_total = Instant::now();
+        for full_level in &self.levels {
+            let level: Vec<usize> = full_level.iter().copied().filter(|&i| needed[i]).collect();
+            let results: Result<Vec<(usize, Tensor, f64)>> = level
+                .par_iter()
+                .map(|&i| {
+                    let e = &self.chain.entries()[i];
+                    let input = self.operand(&e.op.input, &buffers)?;
+                    let kernel = match &e.op.kernel {
+                        Some(r) => Some(self.operand(r, &buffers)?),
+                        None => None,
+                    };
+                    let t0 = Instant::now();
+                    let out = eval_gconv(&e.op, input, kernel)
+                        .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+                    Ok((i, out, t0.elapsed().as_secs_f64()))
+                })
+                .collect();
+            for (i, out, seconds) in results? {
+                let e = &self.chain.entries()[i];
+                records.push(EntryRun {
+                    index: i,
+                    name: e.op.name.clone(),
+                    phase: e.phase,
+                    seconds,
+                    out_elements: out.elements(),
+                    work: e.op.work(),
+                });
+                if uses[i] > 0 {
+                    buffers[i] = Some(out);
+                }
+            }
+            // Free buffers whose last consumer has now run.
+            for &i in &level {
+                for d in deps(&self.chain.entries()[i].op) {
+                    uses[d] -= 1;
+                    if uses[d] == 0 {
+                        buffers[d] = None;
+                    }
+                }
+            }
+        }
+        records.sort_by_key(|r| r.index);
+        let outputs = wanted
+            .iter()
+            .map(|&w| {
+                // The `uses[w] += 1` above kept this buffer alive for the
+                // hand-off; move it out on the last occurrence, clone only
+                // when `wanted` lists the same entry again.
+                uses[w] -= 1;
+                let t = if uses[w] == 0 { buffers[w].take() } else { buffers[w].clone() };
+                t.ok_or_else(|| anyhow!("output of entry #{w} was not retained"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunReport { outputs, entries: records, total_s: t_total.elapsed().as_secs_f64() })
+    }
+
+    /// Execute the chain and return the final entry's output (the
+    /// network result of an inference-mode chain).
+    pub fn run_last(&mut self) -> Result<RunReport> {
+        ensure!(!self.chain.is_empty(), "cannot run an empty chain");
+        self.run(&[self.chain.len() - 1])
+    }
+
+    /// Look up an operand tensor for evaluation.
+    fn operand<'a>(&'a self, r: &DataRef, buffers: &'a [Option<Tensor>]) -> Result<&'a Tensor> {
+        match r {
+            DataRef::Gconv(i) => buffers[*i]
+                .as_ref()
+                .ok_or_else(|| anyhow!("producer #{i} buffer already freed or never run")),
+            other => self
+                .externals
+                .get(other)
+                .ok_or_else(|| anyhow!("external operand {other} not provided")),
+        }
+    }
+
+    /// Ensure every external operand of the `needed` entries has a
+    /// tensor, synthesizing missing ones (deterministically, keyed by
+    /// operand name) when allowed. Pruned entries are skipped: their
+    /// externals are neither required (strict mode) nor synthesized.
+    fn materialize_externals(&mut self, needed: &[bool]) -> Result<()> {
+        for i in 0..self.chain.len() {
+            if !needed[i] {
+                continue;
+            }
+            let e = &self.chain.entries()[i];
+            let mut want: Vec<(DataRef, Vec<usize>)> = Vec::new();
+            if !matches!(e.op.input, DataRef::Gconv(_)) {
+                want.push((e.op.input.clone(), e.op.input_extents()));
+            }
+            if let Some(k) = &e.op.kernel {
+                if !matches!(k, DataRef::Gconv(_)) {
+                    want.push((k.clone(), e.op.kernel_extents()));
+                }
+            }
+            for (r, mut dims) in want {
+                if self.externals.contains_key(&r) {
+                    continue;
+                }
+                ensure!(
+                    self.synthesize,
+                    "chain entry #{i} ({}) needs external operand {r}, and synthesis is off",
+                    e.op.name
+                );
+                if dims.is_empty() {
+                    dims.push(1);
+                }
+                let seed = self.synth_seed ^ fnv1a(r.to_string().as_bytes());
+                let t = Tensor::rand(&dims, seed, self.synth_scale);
+                self.externals.insert(r, t);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Chain-internal dependencies of an op (producer indices).
+fn deps(op: &GconvOp) -> Vec<usize> {
+    let mut out = Vec::with_capacity(2);
+    if let DataRef::Gconv(i) = op.input {
+        out.push(i);
+    }
+    if let Some(DataRef::Gconv(i)) = op.kernel {
+        out.push(i);
+    }
+    out
+}
+
+/// FNV-1a hash of a byte string (seeds external-tensor synthesis).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::chain::ChainEntry;
+    use crate::gconv::op::{DimParams, MainOp, PostOp, PreOp, ReduceOp};
+    use crate::ir::Dim;
+
+    fn ew(name: &str, main: MainOp, input: DataRef, kernel: Option<DataRef>) -> GconvOp {
+        GconvOp {
+            name: name.into(),
+            dims: vec![(Dim::C, DimParams::opc(4))],
+            pre: PreOp::None,
+            main,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input,
+            kernel,
+        }
+    }
+
+    fn push(c: &mut GconvChain, op: GconvOp) -> usize {
+        c.push(ChainEntry::new(op, 0, true, Phase::Fp))
+    }
+
+    fn diamond() -> GconvChain {
+        // x → a, x → b (independent), then c = a + b.
+        let mut c = GconvChain::new("diamond");
+        let x = DataRef::External("x".into());
+        let a = push(&mut c, ew("a", MainOp::Pass, x.clone(), None));
+        let b = push(&mut c, ew("b", MainOp::Pass, x, None));
+        push(&mut c, ew("c", MainOp::Add, DataRef::Gconv(a), Some(DataRef::Gconv(b))));
+        c
+    }
+
+    #[test]
+    fn levels_group_independent_entries() {
+        let exec = ChainExec::new(diamond());
+        assert_eq!(exec.levels(), &[vec![0, 1], vec![2]]);
+    }
+
+    #[test]
+    fn diamond_sums_both_branches() {
+        let mut exec = ChainExec::new(diamond());
+        exec.set_input("x", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        let report = exec.run_last().unwrap();
+        assert_eq!(report.outputs[0].data(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(report.entries.len(), 3);
+        assert!(report.total_s >= 0.0);
+        assert_eq!(report.total_work(), 12);
+    }
+
+    #[test]
+    fn strict_mode_rejects_missing_externals() {
+        let mut exec = ChainExec::new(diamond()).strict();
+        let err = exec.run_last().unwrap_err().to_string();
+        assert!(err.contains('x'), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_across_runs_and_instances() {
+        let mut e1 = ChainExec::new(diamond());
+        let mut e2 = ChainExec::new(diamond());
+        let a = e1.run_last().unwrap().outputs.remove(0);
+        let b = e1.run_last().unwrap().outputs.remove(0);
+        let c = e2.run_last().unwrap().outputs.remove(0);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        // Different seed ⇒ different data.
+        let mut e3 = ChainExec::new(diamond()).with_synthesis(99, 0.1);
+        let d = e3.run_last().unwrap().outputs.remove(0);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn wanted_outputs_are_retained_even_mid_chain() {
+        let mut exec = ChainExec::new(diamond());
+        exec.set_input("x", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        let report = exec.run(&[0, 2]).unwrap();
+        assert_eq!(report.outputs.len(), 2);
+        assert_eq!(report.outputs[0].data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(report.outputs[1].data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn unneeded_entries_are_pruned() {
+        // Asking only for entry 0 must not evaluate 1 or 2.
+        let mut exec = ChainExec::new(diamond());
+        exec.set_input("x", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        let report = exec.run(&[0]).unwrap();
+        assert_eq!(report.entries.len(), 1);
+        assert_eq!(report.entries[0].index, 0);
+        assert_eq!(report.outputs[0].data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn out_of_range_wanted_is_rejected() {
+        let mut exec = ChainExec::new(diamond());
+        assert!(exec.run(&[7]).is_err());
+    }
+
+    #[test]
+    fn shared_weights_are_synthesized_once() {
+        // Two entries reading the same Weights ref must see identical data.
+        let mut c = GconvChain::new("w");
+        let w = DataRef::Weights("shared".into());
+        push(&mut c, ew("a", MainOp::Mul, DataRef::External("x".into()), Some(w.clone())));
+        push(&mut c, ew("b", MainOp::Mul, DataRef::External("y".into()), Some(w)));
+        let mut exec = ChainExec::new(c);
+        let ones = Tensor::filled(&[4], 1.0);
+        exec.set_input("x", ones.clone());
+        exec.set_input("y", ones);
+        let report = exec.run(&[0, 1]).unwrap();
+        assert_eq!(report.outputs[0], report.outputs[1]);
+    }
+}

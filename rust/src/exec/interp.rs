@@ -1,0 +1,688 @@
+//! Native GCONV interpreter: evaluate one [`GconvOp`] by walking its
+//! multi-dimensional loop nest.
+//!
+//! Paper §3.1 defines a 1-D GCONV by four loop parameters per dimension
+//! (`Ng` groups, `Nop` parallel kernels, `Nopc` outputs per kernel,
+//! `Nks` kernel size, plus stride `s` and padding `ps`) and replaces the
+//! fixed multiply-accumulate of traditional convolution with four
+//! pluggable operators:
+//!
+//! ```text
+//! out[g, op, opc] = post( reduce_{ks} main( pre(in[g, opc·s + ks − ps]),
+//!                                           ker[g, op, ks] ) )
+//! ```
+//!
+//! A multi-dimension GCONV runs this nest in every data dimension at
+//! once (Fig. 4): an output coordinate decomposes per dimension into
+//! `(g, op, opc)`, the reduction ranges over the cartesian product of the
+//! per-dimension `Nks` loops, and input/kernel coordinates follow Eq. (1).
+//! This module is the executable ground truth for the lowering in
+//! [`crate::gconv::lower`]: conv, FC, pooling, BN, LRN, softmax and their
+//! BP/WG forms all reduce to this one evaluator.
+//!
+//! ## Index semantics
+//!
+//! Along one dimension with parameters `(ng, nop, nopc, nks, s, ps)`:
+//!
+//! * output extent `ng·nop·nopc`, kernel extent `ng·nop·nks`,
+//!   covered input extent `ng·max((nopc−1)·s + nks − 2·ps, 1)`
+//!   (Table 3 / [`DimParams::input_extent`]);
+//! * for output coordinate `(g, op, opc)` and reduction step `ks`, the
+//!   input position is `g·Nin + opc·s + ks − ps` (where `Nin` is the
+//!   per-group input extent) and the kernel position `(g·nop + op)·nks +
+//!   ks`;
+//! * positions falling outside the input are *padding*: they contribute
+//!   a zero input value under `Add`/`None` reduction and are skipped
+//!   entirely under `Max` reduction (max pooling ignores its padding).
+//!
+//! Input tensors may carry a larger extent than the covered extent along
+//! sliding-window dimensions — strided convolutions legitimately discard
+//! a tail row/column (e.g. a stride-2 3×3 conv over 224 covers only 223
+//! rows) — so binding accepts any actual extent ≥ the covered extent.
+//! Conversely, a rank-aligned input with extent **1** along a dimension
+//! whose covered extent is larger binds as a *broadcast* (stride 0):
+//! backward ops like GlobalAvgPool's BP spread one gradient value over
+//! the whole spatial extent this way. The one chain idiom that stays
+//! non-executable is max-pool BP, which routes gradients through a
+//! stored argmax mask whose operand genuinely under-covers the nest —
+//! that op is an analytical-model construct (pure data movement).
+
+use super::tensor::{row_major_strides, Tensor};
+use crate::gconv::op::{GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+use anyhow::{bail, ensure, Context, Result};
+use rayon::prelude::*;
+
+/// Epsilon used by the `"rsqrt_eps"` LUT (BN FP3 variance stabilizer).
+pub const BN_EPS: f32 = 1e-5;
+/// LRN coefficients used by the `"lrn_scale"` LUT (Krizhevsky et al.
+/// defaults): `scale = (1 + ALPHA·x)^(−BETA)` for `x = Σ window x²`.
+pub const LRN_ALPHA: f32 = 1e-4;
+/// See [`LRN_ALPHA`].
+pub const LRN_BETA: f32 = 0.75;
+
+/// True when `name` is a LUT the interpreter implements.
+pub fn lut_known(name: &str) -> bool {
+    matches!(
+        name,
+        "relu" | "sigmoid" | "exp" | "recip" | "rsqrt_eps" | "lrn_scale" | "squash_scale"
+            | "fused"
+    )
+}
+
+/// Evaluate LUT `name` at `x`. The names are the ones emitted by the
+/// lowering in [`crate::gconv::lower`]; in the paper's accelerator these
+/// are literal lookup tables (§3.1 "Representability") and may fold
+/// per-layer constants — here each gets one fixed analytic definition:
+///
+/// * `"rsqrt_eps"`: `1/√(x + ε)` with ε = [`BN_EPS`]. (Table 2 FP3 folds
+///   the `1/Nbs` variance scaling into the hardware LUT; the native
+///   definition keeps the plain form, so BN normalizes by the batch
+///   *sum* of squares — the chain's golden tests pin this semantics.)
+/// * `"lrn_scale"`: `(1 + α·x)^(−β)` with the AlexNet α/β defaults.
+/// * `"squash_scale"`: for `x = ‖s‖²`, the capsule squash scale
+///   `x/((1+x)·√(x+ε))`.
+/// * `"fused"`: identity — a placeholder slot written by operation
+///   fusion (§4.3), which is an analytical-model construct.
+///
+/// Panics on unknown names; callers validate with [`lut_known`] first
+/// (the interpreter does so at bind time).
+pub fn lut_apply(name: &str, x: f32) -> f32 {
+    match name {
+        "relu" => x.max(0.0),
+        "sigmoid" => 1.0 / (1.0 + (-x).exp()),
+        "exp" => x.exp(),
+        "recip" => x.recip(),
+        "rsqrt_eps" => 1.0 / (x + BN_EPS).sqrt(),
+        "lrn_scale" => (1.0 + LRN_ALPHA * x).powf(-LRN_BETA),
+        "squash_scale" => x / ((1.0 + x) * (x + BN_EPS).sqrt()),
+        "fused" => x,
+        other => panic!("unknown LUT {other:?}"),
+    }
+}
+
+#[inline]
+fn pre_apply(pre: PreOp, x: f32) -> f32 {
+    match pre {
+        PreOp::None => x,
+        PreOp::Square => x * x,
+        PreOp::Mul(c) => x * c,
+        PreOp::Lut(name) => lut_apply(name, x),
+    }
+}
+
+#[inline]
+fn main_apply(main: MainOp, a: f32, w: f32) -> f32 {
+    match main {
+        MainOp::Mul => a * w,
+        MainOp::Add => a + w,
+        MainOp::Sub => a - w,
+        MainOp::SquareDiff => (a - w) * (a - w),
+        MainOp::And => {
+            if a != 0.0 && w != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        MainOp::Pass => a,
+        MainOp::Max => a.max(w),
+    }
+}
+
+#[inline]
+fn post_apply(post: PostOp, x: f32) -> f32 {
+    match post {
+        PostOp::None => x,
+        PostOp::Mul(c) => x * c,
+        PostOp::Lut(name) => lut_apply(name, x),
+    }
+}
+
+/// One dimension of the bound loop nest.
+#[derive(Clone, Copy, Debug)]
+struct LoopDim {
+    nop: usize,
+    nopc: usize,
+    nks: usize,
+    s: usize,
+    ps: usize,
+    /// `nop · nopc` (outputs per group).
+    npc: usize,
+    /// Output extent `ng·nop·nopc` along this dimension.
+    out_ext: usize,
+    /// Row-major output stride.
+    out_stride: usize,
+    /// Per-group extent of the *bound* input tensor (≥ the covered
+    /// extent; sliding windows may discard a tail).
+    in_actual: usize,
+    /// Row-major input stride (over extents `ng·in_actual`).
+    in_stride: usize,
+    /// Row-major kernel stride (over extents `ng·nop·nks`).
+    ker_stride: usize,
+    /// Stride of this dimension's `ks` loop in the flattened reduction
+    /// space.
+    red_stride: usize,
+}
+
+/// A [`GconvOp`] bound to concrete input/kernel tensors: validated
+/// shapes, precomputed strides, ready to evaluate.
+struct Plan<'t> {
+    op: &'t GconvOp,
+    dims: Vec<LoopDim>,
+    out_dims: Vec<usize>,
+    out_total: usize,
+    red_total: usize,
+    xs: &'t [f32],
+    ws: Option<&'t [f32]>,
+}
+
+impl<'t> Plan<'t> {
+    fn bind(op: &'t GconvOp, input: &'t Tensor, kernel: Option<&'t Tensor>) -> Result<Self> {
+        let nd = op.dims.len();
+
+        // Expected per-dimension extents (Table 3).
+        let mut ngs = Vec::with_capacity(nd);
+        let mut group_in = Vec::with_capacity(nd); // covered per-group input
+        let mut exp_in = Vec::with_capacity(nd); // ng · group_in
+        let mut ker_ext = Vec::with_capacity(nd);
+        let mut out_ext = Vec::with_capacity(nd);
+        for &(d, p) in &op.dims {
+            ensure!(
+                p.ng >= 1 && p.nop >= 1 && p.nopc >= 1 && p.nks >= 1 && p.s >= 1,
+                "{}: dimension {d} has a zero loop parameter or stride",
+                op.name
+            );
+            // Per-group covered extent — Table 3's formula, shared with
+            // `DimParams::input_extent` (which multiplies by `ng`).
+            let covered = p.input_extent() / p.ng;
+            ngs.push(p.ng);
+            group_in.push(covered);
+            exp_in.push(p.ng * covered);
+            ker_ext.push(p.ng * p.nop * p.nks);
+            out_ext.push(p.ng * p.nop * p.nopc);
+        }
+
+        // Bind the input tensor: determine the actual per-group extent of
+        // every dimension, plus which dimensions broadcast (stride 0).
+        let expected: usize = exp_in.iter().product();
+        let mut broadcast = vec![false; nd];
+        let in_actual: Vec<usize> = if input.elements() == expected {
+            // Exact element count: reshape semantics, covered extents.
+            group_in.clone()
+        } else if input.rank() == nd
+            && input
+                .dims()
+                .iter()
+                .zip(ngs.iter().zip(&group_in))
+                .all(|(&a, (&ng, &gi))| (a % ng == 0 && a / ng >= gi) || a == 1)
+        {
+            // Rank-aligned: accept larger extents (stride-discarded
+            // tails) and extent-1 broadcasts.
+            (0..nd)
+                .map(|i| {
+                    let a = input.dims()[i];
+                    if a == 1 && exp_in[i] > 1 {
+                        broadcast[i] = true;
+                        group_in[i]
+                    } else {
+                        a / ngs[i]
+                    }
+                })
+                .collect()
+        } else {
+            // Squeezed alignment: match non-unit dimensions positionally.
+            let kept: Vec<usize> = (0..nd).filter(|&i| exp_in[i] > 1).collect();
+            let sq = input.squeezed_dims();
+            ensure!(
+                sq.len() == kept.len(),
+                "{}: input tensor {:?} does not fit expected extents {:?}",
+                op.name,
+                input.dims(),
+                exp_in
+            );
+            let mut actual = group_in.clone();
+            for (&i, &a) in kept.iter().zip(&sq) {
+                ensure!(
+                    a % ngs[i] == 0 && a / ngs[i] >= group_in[i],
+                    "{}: input extent {} under-covers dimension {} (need ≥ {})",
+                    op.name,
+                    a,
+                    op.dims[i].0,
+                    exp_in[i]
+                );
+                actual[i] = a / ngs[i];
+            }
+            actual
+        };
+        // Layout extents of the bound tensor (broadcast dims occupy one
+        // slot); strides over these, zeroed where broadcasting.
+        let in_full: Vec<usize> = (0..nd)
+            .map(|i| if broadcast[i] { 1 } else { ngs[i] * in_actual[i] })
+            .collect();
+        ensure!(
+            in_full.iter().product::<usize>() == input.elements(),
+            "{}: input has {} elements, bound extents {:?} need {}",
+            op.name,
+            input.elements(),
+            in_full,
+            in_full.iter().product::<usize>()
+        );
+
+        // Bind the kernel tensor (exact element count, no slack).
+        let need_kernel = !matches!(op.main, MainOp::Pass);
+        let ws = if need_kernel {
+            let k = kernel.with_context(|| {
+                format!("{}: main operator {:?} needs a kernel operand", op.name, op.main)
+            })?;
+            let kn: usize = ker_ext.iter().product();
+            ensure!(
+                k.elements() == kn,
+                "{}: kernel has {} elements, expected {} {:?}",
+                op.name,
+                k.elements(),
+                kn,
+                ker_ext
+            );
+            Some(k.data())
+        } else {
+            None
+        };
+
+        // Validate LUT names up front so the hot loop is infallible.
+        if let PreOp::Lut(name) = op.pre {
+            ensure!(lut_known(name), "{}: unknown pre LUT {name:?}", op.name);
+        }
+        if let PostOp::Lut(name) = op.post {
+            ensure!(lut_known(name), "{}: unknown post LUT {name:?}", op.name);
+        }
+
+        let red_total: usize = op.dims.iter().map(|&(_, p)| p.nks).product::<usize>().max(1);
+        ensure!(
+            op.reduce != ReduceOp::None || red_total == 1,
+            "{}: reduce None with a non-trivial Nks loop ({red_total} steps)",
+            op.name
+        );
+
+        let out_strides = row_major_strides(&out_ext);
+        let in_strides = row_major_strides(&in_full);
+        let ker_strides = row_major_strides(&ker_ext);
+        let nks: Vec<usize> = op.dims.iter().map(|&(_, p)| p.nks).collect();
+        let red_strides = row_major_strides(&nks);
+
+        let dims: Vec<LoopDim> = (0..nd)
+            .map(|i| {
+                let p = op.dims[i].1;
+                LoopDim {
+                    nop: p.nop,
+                    nopc: p.nopc,
+                    nks: p.nks,
+                    s: p.s,
+                    ps: p.ps,
+                    npc: p.nop * p.nopc,
+                    out_ext: out_ext[i],
+                    out_stride: out_strides[i],
+                    in_actual: in_actual[i],
+                    in_stride: if broadcast[i] { 0 } else { in_strides[i] },
+                    ker_stride: ker_strides[i],
+                    red_stride: red_strides[i],
+                }
+            })
+            .collect();
+
+        let out_total: usize = out_ext.iter().product();
+        let out_dims = if nd == 0 { vec![1] } else { out_ext };
+        Ok(Plan { op, dims, out_dims, out_total, red_total, xs: input.data(), ws })
+    }
+
+    /// Evaluate output element `o` (flat row-major index).
+    #[inline]
+    fn eval_one(&self, o: usize) -> f32 {
+        // Decompose the output coordinate per dimension.
+        const MAX_DIMS: usize = 8;
+        debug_assert!(self.dims.len() <= MAX_DIMS);
+        let mut in_base = [0usize; MAX_DIMS]; // group offset (elements)
+        let mut pos0 = [0i64; MAX_DIMS]; // window start within the group
+        let mut ker_base = [0usize; MAX_DIMS];
+        for (i, d) in self.dims.iter().enumerate() {
+            let oc = (o / d.out_stride) % d.out_ext;
+            let g = oc / d.npc;
+            let r = oc % d.npc;
+            let kop = r / d.nopc;
+            let opc = r % d.nopc;
+            in_base[i] = g * d.in_actual;
+            pos0[i] = (opc * d.s) as i64 - d.ps as i64;
+            ker_base[i] = (g * d.nop + kop) * d.nks;
+        }
+
+        let reduce = self.op.reduce;
+        let mut acc: f64 = if reduce == ReduceOp::Max { f64::NEG_INFINITY } else { 0.0 };
+        let mut any = false;
+        for r in 0..self.red_total {
+            let mut x_idx = 0usize;
+            let mut w_idx = 0usize;
+            let mut oob = false;
+            for (i, d) in self.dims.iter().enumerate() {
+                let ks = (r / d.red_stride) % d.nks;
+                let pos = pos0[i] + ks as i64;
+                if pos < 0 || pos >= d.in_actual as i64 {
+                    oob = true;
+                } else {
+                    x_idx += (in_base[i] + pos as usize) * d.in_stride;
+                }
+                w_idx += (ker_base[i] + ks) * d.ker_stride;
+            }
+            if oob && reduce == ReduceOp::Max {
+                continue; // max pooling ignores padding
+            }
+            let x = if oob { 0.0 } else { self.xs[x_idx] };
+            let a = pre_apply(self.op.pre, x);
+            let m = match self.ws {
+                Some(ws) => main_apply(self.op.main, a, ws[w_idx]),
+                None => main_apply(self.op.main, a, 0.0),
+            };
+            match reduce {
+                ReduceOp::Add => acc += m as f64,
+                ReduceOp::Max => acc = acc.max(m as f64),
+                ReduceOp::None => acc = m as f64,
+            }
+            any = true;
+        }
+        if !any {
+            acc = 0.0; // fully padded window (degenerate BP edge)
+        }
+        post_apply(self.op.post, acc as f32)
+    }
+}
+
+/// Evaluate one GCONV over concrete tensors.
+///
+/// `input` must cover the op's expected input extents (Table 3); larger
+/// extents along sliding-window dimensions are accepted (see the module
+/// docs). `kernel` is required exactly when the `main` operator consumes
+/// a kernel operand (i.e. it is not [`MainOp::Pass`]).
+///
+/// The reduction accumulates in `f64` regardless of reduce operator, so
+/// long `Add` chains (e.g. FC layers reducing over thousands of inputs)
+/// keep well below the 1e-4 tolerance the golden tests pin.
+///
+/// Output extents are `Ng·Nop·Nopc` per dimension, in the op's dimension
+/// order. Independent output elements are computed in parallel with
+/// rayon.
+pub fn eval_gconv(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<Tensor> {
+    ensure!(op.dims.len() <= 8, "{}: more than 8 dimensions", op.name);
+    let plan = Plan::bind(op, input, kernel)?;
+    if plan.out_total == 0 {
+        bail!("{}: empty output", op.name);
+    }
+    let data: Vec<f32> = (0..plan.out_total)
+        .into_par_iter()
+        .with_min_len(2048)
+        .map(|o| plan.eval_one(o))
+        .collect();
+    Tensor::new(&plan.out_dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::op::{DataRef, DimParams};
+    use crate::ir::Dim;
+
+    fn xref() -> DataRef {
+        DataRef::External("x".into())
+    }
+
+    fn wref() -> DataRef {
+        DataRef::Weights("w".into())
+    }
+
+    #[test]
+    fn identity_pass_copies_input() {
+        let op = GconvOp {
+            name: "copy".into(),
+            dims: vec![(Dim::C, DimParams::opc(4))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: xref(),
+            kernel: None,
+        };
+        let x = Tensor::new(&[4], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        let y = eval_gconv(&op, &x, None).unwrap();
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn relu_post_clamps_negatives() {
+        let op = GconvOp {
+            name: "relu".into(),
+            dims: vec![(Dim::C, DimParams::opc(4))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::Lut("relu"),
+            input: xref(),
+            kernel: None,
+        };
+        let x = Tensor::new(&[4], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        let y = eval_gconv(&op, &x, None).unwrap();
+        assert_eq!(y.data(), &[1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn one_d_sliding_window_convolves() {
+        // Nopc=3, Nks=2, s=1: y[i] = x[i]·w[0] + x[i+1]·w[1].
+        let op = GconvOp::conv(
+            "conv1d",
+            vec![(Dim::W, DimParams::window(3, 2, 1, 0))],
+            xref(),
+            wref(),
+        );
+        let x = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::new(&[2], vec![10.0, 1.0]).unwrap();
+        let y = eval_gconv(&op, &x, Some(&w)).unwrap();
+        assert_eq!(y.data(), &[12.0, 23.0, 34.0]);
+    }
+
+    #[test]
+    fn zero_padding_contributes_zero_under_add() {
+        // Nopc=3, Nks=3, s=1, ps=1 over 3 inputs, all-ones kernel:
+        // y = [x0+x1, x0+x1+x2, x1+x2].
+        let op = GconvOp::conv(
+            "pad",
+            vec![(Dim::W, DimParams::window(3, 3, 1, 1))],
+            xref(),
+            wref(),
+        );
+        let x = Tensor::new(&[3], vec![1.0, 2.0, 4.0]).unwrap();
+        let w = Tensor::filled(&[3], 1.0);
+        let y = eval_gconv(&op, &x, Some(&w)).unwrap();
+        assert_eq!(y.data(), &[3.0, 7.0, 6.0]);
+    }
+
+    #[test]
+    fn max_reduce_skips_padding() {
+        // All-negative inputs with a padded window: padding must NOT
+        // contribute a zero under Max reduction.
+        let op = GconvOp {
+            name: "maxpad".into(),
+            dims: vec![(Dim::W, DimParams::window(2, 3, 2, 1))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::Max,
+            post: PostOp::None,
+            input: xref(),
+            kernel: None,
+        };
+        let x = Tensor::new(&[3], vec![-5.0, -2.0, -7.0]).unwrap();
+        let y = eval_gconv(&op, &x, None).unwrap();
+        assert_eq!(y.data(), &[-2.0, -2.0]);
+    }
+
+    #[test]
+    fn groups_isolate_kernels_and_inputs() {
+        // Ng=2 over 4 inputs, Nks=2 kernel covering each group:
+        // y[g] = x[2g]·w[2g] + x[2g+1]·w[2g+1].
+        let op = GconvOp::conv(
+            "grouped",
+            vec![(Dim::C, DimParams { ng: 2, nks: 2, ..Default::default() })],
+            xref(),
+            wref(),
+        );
+        let x = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::new(&[4], vec![1.0, 10.0, 100.0, 1000.0]).unwrap();
+        let y = eval_gconv(&op, &x, Some(&w)).unwrap();
+        assert_eq!(y.data(), &[21.0, 4300.0]);
+    }
+
+    #[test]
+    fn nop_applies_parallel_kernels_to_shared_input() {
+        // Nop=2, Nks=3: two dot products over the same input.
+        let op = GconvOp::conv(
+            "fc",
+            vec![(Dim::C, DimParams { nop: 2, nks: 3, ..Default::default() })],
+            xref(),
+            wref(),
+        );
+        let x = Tensor::new(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let w = Tensor::new(&[2, 3], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let y = eval_gconv(&op, &x, Some(&w)).unwrap();
+        assert_eq!(y.data(), &[1.0, 6.0]);
+    }
+
+    #[test]
+    fn oversized_input_discards_tail_rows() {
+        // Stride-2 window covering 3 of 4 inputs: the 4th is never read.
+        let op = GconvOp {
+            name: "tail".into(),
+            dims: vec![(Dim::W, DimParams::window(2, 1, 2, 0))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: xref(),
+            kernel: None,
+        };
+        // Covered extent = (2-1)·2 + 1 = 3; give 4.
+        let x = Tensor::new(&[4], vec![9.0, 8.0, 7.0, 6.0]).unwrap();
+        let y = eval_gconv(&op, &x, None).unwrap();
+        assert_eq!(y.data(), &[9.0, 7.0]);
+    }
+
+    #[test]
+    fn rank_aligned_unit_extent_broadcasts() {
+        // GlobalAvgPool-BP idiom: spread one gradient value (extent 1)
+        // over the full output extent with a pre-scale.
+        let op = GconvOp {
+            name: "gapbp".into(),
+            dims: vec![(Dim::C, DimParams::opc(2)), (Dim::W, DimParams::opc(3))],
+            pre: PreOp::Mul(0.5),
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: xref(),
+            kernel: None,
+        };
+        let x = Tensor::new(&[2, 1], vec![2.0, 4.0]).unwrap();
+        let y = eval_gconv(&op, &x, None).unwrap();
+        assert_eq!(y.dims(), &[2, 3]);
+        assert_eq!(y.data(), &[1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn missing_kernel_is_rejected() {
+        let op = GconvOp::conv("needsw", vec![(Dim::C, DimParams::ks(2))], xref(), wref());
+        let x = Tensor::zeros(&[2]);
+        assert!(eval_gconv(&op, &x, None).is_err());
+    }
+
+    #[test]
+    fn wrong_kernel_size_is_rejected() {
+        let op = GconvOp::conv("badw", vec![(Dim::C, DimParams::ks(2))], xref(), wref());
+        let x = Tensor::zeros(&[2]);
+        let w = Tensor::zeros(&[3]);
+        assert!(eval_gconv(&op, &x, Some(&w)).is_err());
+    }
+
+    #[test]
+    fn under_covering_input_is_rejected() {
+        let op = GconvOp {
+            name: "short".into(),
+            dims: vec![(Dim::W, DimParams::window(4, 2, 1, 0))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: xref(),
+            kernel: None,
+        };
+        let x = Tensor::zeros(&[3]); // needs 5
+        assert!(eval_gconv(&op, &x, None).is_err());
+    }
+
+    #[test]
+    fn squared_diff_and_scalar_ops_apply() {
+        let op = GconvOp {
+            name: "sqdiff".into(),
+            dims: vec![(Dim::C, DimParams::g(3))],
+            pre: PreOp::Mul(2.0),
+            main: MainOp::SquareDiff,
+            reduce: ReduceOp::None,
+            post: PostOp::Mul(0.5),
+            input: xref(),
+            kernel: Some(wref()),
+        };
+        let x = Tensor::new(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let w = Tensor::new(&[3], vec![0.0, 4.0, 6.0]).unwrap();
+        // 0.5·(2x − w)²
+        let y = eval_gconv(&op, &x, Some(&w)).unwrap();
+        assert_eq!(y.data(), &[2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn lut_definitions_are_sane() {
+        assert_eq!(lut_apply("relu", -3.0), 0.0);
+        assert!((lut_apply("sigmoid", 0.0) - 0.5).abs() < 1e-7);
+        assert!((lut_apply("recip", 4.0) - 0.25).abs() < 1e-7);
+        assert!((lut_apply("rsqrt_eps", 1.0) - 1.0 / (1.0f32 + BN_EPS).sqrt()).abs() < 1e-7);
+        assert_eq!(lut_apply("fused", 1.25), 1.25);
+        assert!(lut_known("exp") && !lut_known("nope"));
+    }
+
+    #[test]
+    fn unknown_lut_rejected_at_bind() {
+        let op = GconvOp {
+            name: "bad".into(),
+            dims: vec![(Dim::C, DimParams::opc(2))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::Lut("warp_drive"),
+            input: xref(),
+            kernel: None,
+        };
+        assert!(eval_gconv(&op, &Tensor::zeros(&[2]), None).is_err());
+    }
+
+    #[test]
+    fn multi_dim_conv_matches_hand_computation() {
+        // 2 output channels, 1 input channel, 2×2 kernels over 3×3.
+        let op = GconvOp::conv(
+            "conv2d",
+            vec![
+                (Dim::C, DimParams { nop: 2, nks: 1, ..Default::default() }),
+                (Dim::H, DimParams::window(2, 2, 1, 0)),
+                (Dim::W, DimParams::window(2, 2, 1, 0)),
+            ],
+            xref(),
+            wref(),
+        );
+        let x = Tensor::from_fn(&[1, 3, 3], |i| (i + 1) as f32);
+        // w0 = identity-diagonal, w1 = all ones.
+        let w = Tensor::new(&[2, 2, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0]).unwrap();
+        let y = eval_gconv(&op, &x, Some(&w)).unwrap();
+        assert_eq!(y.dims(), &[2, 2, 2]);
+        assert_eq!(y.data(), &[6.0, 8.0, 12.0, 14.0, 12.0, 16.0, 24.0, 28.0]);
+    }
+}

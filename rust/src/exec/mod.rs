@@ -1,0 +1,44 @@
+//! Native GCONV execution engine: a pure-Rust, parallel interpreter for
+//! GCONV chains.
+//!
+//! The paper's thesis (§3) is that *every* CNN layer — forward and
+//! backward — reduces to a chain of general convolutions. This module is
+//! the executable ground truth for that claim inside the Rust crate
+//! itself: no Python, no XLA, no AOT artifacts.
+//!
+//! * [`tensor`] — a small owned row-major `f32` tensor.
+//! * [`interp`] — evaluates one [`crate::gconv::op::GconvOp`] by walking
+//!   its multi-dimensional `Ng`/`Nop`/`Nopc`/`Nks` loop nest (Eq. 1,
+//!   Fig. 4) and applying the four pluggable operators
+//!   `pre`/`main`/`reduce`/`post` of §3.1 — enough to cover conv, FC,
+//!   pooling, BN, LRN, softmax and their BP/WG forms produced by
+//!   [`crate::gconv::lower::lower_network`].
+//! * [`chain_exec`] — schedules a whole [`crate::gconv::GconvChain`]:
+//!   level-order over the producer/consumer DAG, independent entries and
+//!   output/batch slices in parallel via rayon, intermediate buffers
+//!   reference-counted and freed at last use.
+//!
+//! The [`crate::coordinator`] exposes this engine as the default
+//! [`crate::coordinator::Backend`] behind its batching request API; the
+//! optional PJRT/XLA path (cargo feature `pjrt`) plugs into the same
+//! trait.
+//!
+//! ```
+//! use gconv_chain::exec::{ChainExec, Tensor};
+//! use gconv_chain::gconv::lower::{lower_network, Mode};
+//! use gconv_chain::networks::mobilenet_block;
+//!
+//! let chain = lower_network(&mobilenet_block(2, 4, 6), Mode::Inference);
+//! let mut exec = ChainExec::new(chain); // weights auto-synthesized
+//! exec.set_input("data.data", Tensor::rand(&[2, 4, 6, 6], 1, 1.0));
+//! let report = exec.run_last().unwrap();
+//! assert_eq!(report.outputs[0].elements(), 2 * 8 * 6 * 6);
+//! ```
+
+pub mod chain_exec;
+pub mod interp;
+pub mod tensor;
+
+pub use chain_exec::{ChainExec, EntryRun, RunReport};
+pub use interp::{eval_gconv, lut_apply, lut_known};
+pub use tensor::Tensor;

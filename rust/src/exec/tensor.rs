@@ -1,0 +1,192 @@
+//! Owned dense `f32` tensors for the native GCONV interpreter.
+//!
+//! The interpreter works on flat row-major buffers whose extents follow
+//! the per-dimension extents of the [`crate::gconv::op::GconvOp`] being
+//! evaluated (input/kernel/output extents of Table 3), so the tensor type
+//! stays deliberately small: a shape vector plus a `Vec<f32>`. Dimension
+//! *names* live on the op, not on the tensor — the binding logic in
+//! [`super::interp`] reconciles the two.
+
+use crate::prop::Rng;
+use anyhow::{ensure, Result};
+use std::fmt;
+
+/// A dense row-major `f32` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build a tensor from extents and a flat row-major buffer.
+    pub fn new(dims: &[usize], data: Vec<f32>) -> Result<Self> {
+        ensure!(dims.iter().all(|&d| d > 0), "zero extent in shape {dims:?}");
+        let n: usize = dims.iter().product();
+        ensure!(
+            n == data.len(),
+            "shape {dims:?} holds {n} elements, buffer has {}",
+            data.len()
+        );
+        Ok(Tensor { dims: dims.to_vec(), data })
+    }
+
+    /// All-zero tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn filled(dims: &[usize], v: f32) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![v; n] }
+    }
+
+    /// Tensor whose element at flat index `i` is `f(i)`.
+    pub fn from_fn(dims: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    /// Deterministic pseudo-random tensor, uniform in `[-scale, scale]`.
+    /// Same `(dims, seed, scale)` always produces the same data (the
+    /// generator is the in-repo splitmix64, [`crate::prop::Rng`]).
+    pub fn rand(dims: &[usize], seed: u64, scale: f32) -> Self {
+        let mut rng = Rng::new(seed);
+        Tensor::from_fn(dims, |_| (rng.f64() as f32 * 2.0 - 1.0) * scale)
+    }
+
+    /// Extents, outermost first.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat row-major buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat buffer.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row-major strides (in elements) matching [`Tensor::dims`].
+    pub fn strides(&self) -> Vec<usize> {
+        row_major_strides(&self.dims)
+    }
+
+    /// Element at a full multi-index (checked).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        assert_eq!(idx.len(), self.dims.len(), "index rank mismatch");
+        let mut flat = 0;
+        for ((&i, &d), s) in idx.iter().zip(&self.dims).zip(self.strides()) {
+            assert!(i < d, "index {i} out of bounds for extent {d}");
+            flat += i * s;
+        }
+        self.data[flat]
+    }
+
+    /// Same data under new extents (element count must match).
+    pub fn reshape(self, dims: &[usize]) -> Result<Self> {
+        Tensor::new(dims, self.data)
+    }
+
+    /// Extents with size-1 dimensions dropped.
+    pub fn squeezed_dims(&self) -> Vec<usize> {
+        self.dims.iter().copied().filter(|&d| d > 1).collect()
+    }
+
+    /// Largest absolute element-wise difference against `other`
+    /// (tensors must have equal element counts; shapes may differ).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.elements(), other.elements(), "element count mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Row-major strides for a list of extents.
+pub fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * dims[i + 1];
+    }
+    strides
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?} ({} elements)", self.dims, self.elements())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::new(&[2, 0], vec![]).is_err());
+    }
+
+    #[test]
+    fn strides_are_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(row_major_strides(&[]), Vec::<usize>::new());
+        assert_eq!(row_major_strides(&[5]), vec![1]);
+    }
+
+    #[test]
+    fn at_indexes_row_major() {
+        let t = Tensor::from_fn(&[2, 3], |i| i as f32);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn rand_is_deterministic_and_bounded() {
+        let a = Tensor::rand(&[4, 4], 7, 0.5);
+        let b = Tensor::rand(&[4, 4], 7, 0.5);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|v| v.abs() <= 0.5));
+        let c = Tensor::rand(&[4, 4], 8, 0.5);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_fn(&[2, 3], |i| i as f32).reshape(&[3, 2]).unwrap();
+        assert_eq!(t.at(&[2, 1]), 5.0);
+        assert!(Tensor::zeros(&[2, 3]).reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff_finds_worst_element() {
+        let a = Tensor::new(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(&[3], vec![1.0, 2.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

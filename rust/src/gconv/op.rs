@@ -197,7 +197,7 @@ pub enum PostOp {
 }
 
 /// Where a GCONV operand comes from.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum DataRef {
     /// Output of a previous GCONV on the chain (by chain index).
     Gconv(usize),
@@ -288,6 +288,22 @@ impl GconvOp {
     /// Total outputs, `Π_d Ng·Nop·Nopc`.
     pub fn output_elements(&self) -> usize {
         self.dims.iter().map(|(_, p)| p.output_extent()).product()
+    }
+
+    /// Per-dimension input extents in dimension order (the tensor shape
+    /// the native interpreter expects; see [`DimParams::input_extent`]).
+    pub fn input_extents(&self) -> Vec<usize> {
+        self.dims.iter().map(|(_, p)| p.input_extent()).collect()
+    }
+
+    /// Per-dimension kernel extents in dimension order.
+    pub fn kernel_extents(&self) -> Vec<usize> {
+        self.dims.iter().map(|(_, p)| p.kernel_extent()).collect()
+    }
+
+    /// Per-dimension output extents in dimension order.
+    pub fn output_extents(&self) -> Vec<usize> {
+        self.dims.iter().map(|(_, p)| p.output_extent()).collect()
     }
 
     /// True when the op has no reduction — a candidate for operation

@@ -8,13 +8,16 @@
 //! onto a parameterized accelerator model with a single loop-unrolling
 //! algorithm (the paper's Algorithm 1), and evaluates performance, data
 //! movement, energy and whole-life cost with the analytical model of
-//! paper §4.2.
+//! paper §4.2. The chain is also directly *executable*: the [`exec`]
+//! engine interprets GCONV numerics in pure Rust.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`ir`] — layer-level network IR with shape inference.
 //! * [`networks`] — the seven benchmark CNNs of the paper.
 //! * [`gconv`] — the GCONV operation model and layer→GCONV lowering.
+//! * [`exec`] — native execution engine: tensor type, GCONV loop-nest
+//!   interpreter (§3.1's four operators), parallel chain scheduler.
 //! * [`accel`] — accelerator structures (Table 4) and baseline modes.
 //! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion.
 //! * [`model`] — cycles (Eq. 6) and data movement (Eq. 7–10) models.
@@ -22,31 +25,25 @@
 //! * [`isa`] — the GCONV instruction encoding of Fig. 11.
 //! * [`cost`] — development cost and total cost of ownership models.
 //! * [`sim`] — the top-level simulator tying everything together.
-//! * [`runtime`] — PJRT loader for AOT-compiled HLO-text artifacts.
-//! * [`coordinator`] — executes GCONV-chain numerics through the runtime.
+//! * [`runtime`] — PJRT loader for AOT-compiled HLO-text artifacts
+//!   (cargo feature `pjrt`).
+//! * [`coordinator`] — batches request streams onto a pluggable
+//!   execution backend (native by default, PJRT with `pjrt`).
 //! * [`report`] — table/figure printers used by benches and the CLI.
-
-
-
-
 
 pub mod accel;
 pub mod coordinator;
 pub mod cost;
 pub mod energy;
+pub mod exec;
 pub mod gconv;
 pub mod ir;
-
-
-
 pub mod isa;
 pub mod mapping;
 pub mod model;
 pub mod networks;
 pub mod prop;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
-
-
-

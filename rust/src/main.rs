@@ -1,6 +1,6 @@
 //! `gconv-chain` CLI — compile networks to GCONV chains, simulate them
-//! on the Table-4 accelerators, and run real chain numerics through the
-//! PJRT runtime.
+//! on the Table-4 accelerators, and run real chain numerics on the
+//! native execution engine.
 
 use gconv_chain::accel::configs::{by_code, ACCEL_CODES};
 use gconv_chain::gconv::lower::{lower_network, Mode};
@@ -15,7 +15,7 @@ USAGE:
     gconv-chain chain <NET> [--inference]    print the GCONV chain
     gconv-chain simulate <NET> <ACCEL>       baseline vs GCONV on one pair
     gconv-chain matrix                       Fig. 14 speedup matrix
-    gconv-chain run [ARTIFACT_DIR]           execute chain numerics (PJRT)
+    gconv-chain run [NET] [SAMPLES]          execute chain numerics (native)
 
     NET   = AN GLN DN MN ZFFR C3D CapNN
     ACCEL = TPU DNNW ER EP NLR";
@@ -100,26 +100,23 @@ fn cmd_matrix() {
 
 fn cmd_run(args: &[String]) {
     use gconv_chain::coordinator::{ChainExecutor, Request};
-    use gconv_chain::runtime::literal_f32;
+    use gconv_chain::networks::mobilenet_block;
 
-    let dir = args.first().map(String::as_str).unwrap_or("artifacts");
-    let (b, c, hw) = (8usize, 16usize, 14usize);
+    // Default workload: one MobileNet block (Fig. 1(a)); any benchmark
+    // code (AN, MN, …) runs its full inference chain instead.
+    let net = match args.first().map(String::as_str) {
+        None => mobilenet_block(8, 16, 14),
+        Some(code) => benchmark(code),
+    };
+    let total: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let mut exec = ChainExecutor::for_network(&net).expect("lowering failed");
+    let sample_len = exec.sample_len();
+    println!("executing {} on the {} backend…", net.name, exec.backend_name());
+
     let mut rng = gconv_chain::prop::Rng::new(42);
     let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f64() as f32 - 0.5).collect() };
-    let dw = literal_f32(&rand(c * 9), &[c as i64, 1, 3, 3]).unwrap();
-    let pw = literal_f32(&rand(2 * c * c), &[2 * c as i64, c as i64, 1, 1]).unwrap();
-    let mut exec = ChainExecutor::new(
-        dir,
-        "mobilenet_block",
-        &[b as i64, c as i64, hw as i64, hw as i64],
-        2 * c * hw * hw,
-        vec![dw, pw],
-    )
-    .expect("run `make artifacts` first");
-
-    let total = 64u64;
     for id in 0..total {
-        exec.submit(Request { id, data: rand(c * hw * hw) }).unwrap();
+        exec.submit(Request { id, data: rand(sample_len) }).unwrap();
     }
     let mut served = 0;
     while served < total as usize {

@@ -1,0 +1,355 @@
+//! Golden tests for the native GCONV execution engine: lowered
+//! conv / pool / BN / FC / softmax chains checked against small
+//! hand-computed fixtures, plus a property test that a lowered FP
+//! convolution matches a naive direct-convolution reference.
+//!
+//! The fixtures pin the *interpreter semantics* documented in
+//! `exec::interp` (Eq. 1 index arithmetic, zero padding under `Add`,
+//! padding-skip under `Max`, the fixed LUT definitions). For conv, FC,
+//! pooling and softmax those coincide with the textbook operators.
+
+use gconv_chain::exec::{lut_apply, ChainExec, Tensor};
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::ir::{Layer, Network, PoolKind, Shape};
+use gconv_chain::networks::mobilenet_block;
+use gconv_chain::prop::{prop_check, Rng};
+
+/// Build a one-layer network `Input(shape) → layer`, lower it for
+/// inference, and return its executor (strict: tests provide tensors).
+fn single_layer(shape: Shape, name: &str, layer: Layer) -> ChainExec {
+    let mut net = Network::new("t");
+    let i = net.add("data", Layer::Input { shape }, &[]);
+    net.add(name, layer, &[i]);
+    ChainExec::new(lower_network(&net, Mode::Inference)).strict()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length {} vs {}", got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}: element {i} differs: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn conv_golden_2x2_kernels() {
+    // 1×1×3×3 input, two 2×2 kernels, stride 1, no padding.
+    let mut exec = single_layer(
+        Shape::bchw(1, 1, 3, 3),
+        "conv1",
+        Layer::Conv { out_channels: 2, kernel: (2, 2), stride: 1, pad: 0, groups: 1 },
+    );
+    #[rustfmt::skip]
+    let x = vec![
+        1.0, 0.0, 2.0,
+        3.0, 1.0, 0.0,
+        0.0, 4.0, 1.0,
+    ];
+    exec.set_input("data.data", Tensor::new(&[1, 1, 3, 3], x).unwrap());
+    // w0 = [[1,2],[3,4]], w1 = [[-1,1],[1,-1]] (OIHW).
+    let w = vec![1.0, 2.0, 3.0, 4.0, -1.0, 1.0, 1.0, -1.0];
+    exec.set_weights("conv1", Tensor::new(&[2, 1, 2, 2], w).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_eq!(out.dims(), &[1, 2, 2, 2]);
+    #[rustfmt::skip]
+    let want = vec![
+        14.0, 7.0, 21.0, 17.0, // channel 0
+        1.0, 3.0, -6.0, 2.0,   // channel 1
+    ];
+    assert_close(out.data(), &want, 1e-6, "conv");
+}
+
+#[test]
+fn conv_golden_zero_padding() {
+    // 3×3 all-ones kernel, pad 1 on a 2×2 input: every output window
+    // covers the whole input, so all four outputs equal the input sum.
+    let mut exec = single_layer(
+        Shape::bchw(1, 1, 2, 2),
+        "conv1",
+        Layer::Conv { out_channels: 1, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+    );
+    exec.set_input("data.data", Tensor::new(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+    exec.set_weights("conv1", Tensor::filled(&[1, 1, 3, 3], 1.0));
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_close(out.data(), &[10.0; 4], 1e-6, "padded conv");
+}
+
+#[test]
+fn depthwise_conv_keeps_channels_isolated() {
+    // groups == channels: each channel sees only its own kernel.
+    let mut exec = single_layer(
+        Shape::bchw(1, 2, 2, 2),
+        "dw",
+        Layer::Conv { out_channels: 2, kernel: (1, 1), stride: 1, pad: 0, groups: 2 },
+    );
+    exec.set_input(
+        "data.data",
+        Tensor::new(&[1, 2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]).unwrap(),
+    );
+    exec.set_weights("dw", Tensor::new(&[2, 1, 1, 1], vec![10.0, -1.0]).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    let want = vec![10.0, 20.0, 30.0, 40.0, -5.0, -6.0, -7.0, -8.0];
+    assert_close(out.data(), &want, 1e-6, "depthwise conv");
+}
+
+#[test]
+fn maxpool_golden() {
+    let mut exec = single_layer(
+        Shape::bchw(1, 1, 4, 4),
+        "pool1",
+        Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+    );
+    let x: Vec<f32> = (1..=16).map(|v| v as f32).collect();
+    exec.set_input("data.data", Tensor::new(&[1, 1, 4, 4], x).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_eq!(out.dims(), &[1, 1, 2, 2]);
+    assert_close(out.data(), &[6.0, 8.0, 14.0, 16.0], 1e-6, "max pool");
+}
+
+#[test]
+fn avgpool_golden() {
+    let mut exec = single_layer(
+        Shape::bchw(1, 1, 4, 4),
+        "pool1",
+        Layer::Pool { kind: PoolKind::Avg, kernel: 2, stride: 2, pad: 0 },
+    );
+    let x: Vec<f32> = (1..=16).map(|v| v as f32).collect();
+    exec.set_input("data.data", Tensor::new(&[1, 1, 4, 4], x).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_close(out.data(), &[3.5, 5.5, 11.5, 13.5], 1e-6, "avg pool");
+}
+
+#[test]
+fn global_avg_pool_golden() {
+    let mut exec = single_layer(Shape::bchw(1, 2, 2, 2), "gap", Layer::GlobalAvgPool);
+    exec.set_input(
+        "data.data",
+        Tensor::new(&[1, 2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0]).unwrap(),
+    );
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_close(out.data(), &[2.5, 25.0], 1e-5, "global avg pool");
+}
+
+#[test]
+fn batchnorm_golden() {
+    // Batch 2, 2 channels: Table 2 FP1–FP4 with the native
+    // rsqrt_eps LUT (1/√(Σ t1² + ε); see exec::interp docs).
+    let mut exec = single_layer(Shape::bchw(2, 2, 1, 1), "bn1", Layer::BatchNorm);
+    // x[b][c]: b0 = [1, -2], b1 = [3, 4].
+    exec.set_input("data.data", Tensor::new(&[2, 2], vec![1.0, -2.0, 3.0, 4.0]).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    // Per channel: μ = [2, 1], t1 = [[-1,-3],[1,3]], Σt1² = [2, 18].
+    let t2 = [lut_apply("rsqrt_eps", 2.0), lut_apply("rsqrt_eps", 18.0)];
+    let want = vec![-1.0 * t2[0], -3.0 * t2[1], 1.0 * t2[0], 3.0 * t2[1]];
+    assert_close(out.data(), &want, 1e-6, "batch norm");
+}
+
+#[test]
+fn relu_golden() {
+    let mut exec = single_layer(Shape::bchw(1, 4, 1, 1), "relu1", Layer::Relu);
+    exec.set_input("data.data", Tensor::new(&[4], vec![-1.0, 0.5, -0.25, 2.0]).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_close(out.data(), &[0.0, 0.5, 0.0, 2.0], 1e-7, "relu");
+}
+
+#[test]
+fn fully_connected_golden() {
+    let mut exec = single_layer(
+        Shape::bchw(1, 4, 1, 1),
+        "fc",
+        Layer::FullyConnected { out_features: 3 },
+    );
+    exec.set_input("data.data", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+    #[rustfmt::skip]
+    let w = vec![
+        1.0, 0.0, 0.0, 0.0,
+        0.0, 1.0, 0.0, -1.0,
+        0.5, 0.5, 0.5, 0.5,
+    ];
+    exec.set_weights("fc", Tensor::new(&[3, 4], w).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_close(out.data(), &[1.0, -2.0, 5.0], 1e-6, "fully connected");
+}
+
+#[test]
+fn softmax_golden() {
+    // Softmax over channels, batch 2 (4-GCONV chain: max, sub+exp,
+    // sum+recip, normalize).
+    let mut exec = single_layer(Shape::bchw(2, 3, 1, 1), "sm", Layer::Softmax);
+    exec.set_input("data.data", Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    let e = [(-2.0f32).exp(), (-1.0f32).exp(), 1.0f32];
+    let z: f32 = e.iter().sum();
+    let want = vec![e[0] / z, e[1] / z, e[2] / z, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0];
+    assert_close(out.data(), &want, 1e-5, "softmax");
+}
+
+/// Naive direct (grouped) convolution with zero padding, OIHW weights.
+#[allow(clippy::too_many_arguments)]
+fn naive_conv(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    ic: usize,
+    oc: usize,
+    h: usize,
+    wd: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    g: usize,
+) -> Vec<f32> {
+    let oh = (h + 2 * p - k) / s + 1;
+    let ow = (wd + 2 * p - k) / s + 1;
+    let icg = ic / g;
+    let ocg = oc / g;
+    let mut out = vec![0.0f32; b * oc * oh * ow];
+    for bi in 0..b {
+        for o in 0..oc {
+            let go = o / ocg;
+            for y in 0..oh {
+                for xo in 0..ow {
+                    let mut acc = 0.0f64;
+                    for c in 0..icg {
+                        for kh in 0..k {
+                            for kw in 0..k {
+                                let iy = (y * s + kh) as i64 - p as i64;
+                                let ix = (xo * s + kw) as i64 - p as i64;
+                                if iy < 0 || iy >= h as i64 || ix < 0 || ix >= wd as i64 {
+                                    continue;
+                                }
+                                let xi = ((bi * ic + go * icg + c) * h + iy as usize) * wd
+                                    + ix as usize;
+                                let wi = ((o * icg + c) * k + kh) * k + kw;
+                                acc += (x[xi] * w[wi]) as f64;
+                            }
+                        }
+                    }
+                    out[((bi * oc + o) * oh + y) * ow + xo] = acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn lowered_conv_matches_naive_reference() {
+    // Property: for random small conv configurations, the lowered FP
+    // conv GCONV evaluated natively matches direct convolution ≤ 1e-4.
+    prop_check(40, |rng: &mut Rng| {
+        let b = rng.int(1, 2);
+        let k = rng.int(1, 3);
+        let s = rng.int(1, 2);
+        let p = rng.int(0, k / 2);
+        let h = rng.int(k, 6);
+        let wd = h; // square inputs (the IR lowers square windows)
+        let depthwise = rng.bool(0.3);
+        let (ic, oc, g) = if depthwise {
+            let c = rng.int(1, 4);
+            (c, c, c)
+        } else {
+            (rng.int(1, 3), rng.int(1, 4), 1)
+        };
+
+        let mut net = Network::new("prop");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(b, ic, h, wd) }, &[]);
+        net.add(
+            "conv",
+            Layer::Conv { out_channels: oc, kernel: (k, k), stride: s, pad: p, groups: g },
+            &[i],
+        );
+        let chain = lower_network(&net, Mode::Inference);
+
+        let x = Tensor::rand(&[b, ic, h, wd], rng.next_u64(), 1.0);
+        let w = Tensor::rand(&[oc, ic / g, k, k], rng.next_u64(), 1.0);
+        let want = naive_conv(x.data(), w.data(), b, ic, oc, h, wd, k, s, p, g);
+
+        let mut exec = ChainExec::new(chain).strict();
+        exec.set_input("data.data", x);
+        exec.set_weights("conv", w);
+        let got = exec
+            .run_last()
+            .map_err(|e| format!("b{b} ic{ic} oc{oc} h{h} k{k} s{s} p{p} g{g}: {e:#}"))?
+            .outputs
+            .remove(0);
+        if got.elements() != want.len() {
+            return Err(format!(
+                "b{b} ic{ic} oc{oc} h{h} k{k} s{s} p{p} g{g}: {} outputs, want {}",
+                got.elements(),
+                want.len()
+            ));
+        }
+        for (i, (a, e)) in got.data().iter().zip(&want).enumerate() {
+            if (a - e).abs() > 1e-4 {
+                return Err(format!(
+                    "b{b} ic{ic} oc{oc} h{h} k{k} s{s} p{p} g{g}: element {i}: {a} vs {e}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mobilenet_block_inference_end_to_end() {
+    // Full dw→BN→ReLU→pw→BN→ReLU block with synthesized weights: the
+    // chain must execute, produce the right output volume, and (ending
+    // in ReLU) be finite and non-negative.
+    let chain = lower_network(&mobilenet_block(2, 4, 6), Mode::Inference);
+    let mut exec = ChainExec::new(chain);
+    exec.set_input("data.data", Tensor::rand(&[2, 4, 6, 6], 11, 1.0));
+    let report = exec.run_last().unwrap();
+    let out = &report.outputs[0];
+    assert_eq!(out.elements(), 2 * 8 * 6 * 6);
+    assert!(out.data().iter().all(|v| v.is_finite() && *v >= 0.0));
+    assert_eq!(report.entries.len(), exec.chain().len());
+    assert!(report.total_work() > 0);
+}
+
+#[test]
+fn mobilenet_block_training_chain_executes() {
+    // FP + BP + WG of the block (conv/BN/ReLU backward forms) runs
+    // natively; every retained gradient is finite.
+    let chain = lower_network(&mobilenet_block(2, 4, 6), Mode::Training);
+    let n = chain.len();
+    let wanted: Vec<usize> = (0..n).collect();
+    let mut exec = ChainExec::new(chain);
+    exec.set_input("data.data", Tensor::rand(&[2, 4, 6, 6], 13, 1.0));
+    let report = exec.run(&wanted).unwrap();
+    for (i, t) in report.outputs.iter().enumerate() {
+        assert!(
+            t.data().iter().all(|v| v.is_finite()),
+            "entry #{i} produced a non-finite value"
+        );
+    }
+}
+
+#[test]
+fn small_cnn_softmax_distributions_sum_to_one() {
+    // conv → ReLU → maxpool → FC → softmax, synthesized weights: each
+    // sample's output must be a probability distribution.
+    let mut net = Network::new("small");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(2, 3, 8, 8) }, &[]);
+    let c = net.add(
+        "conv1",
+        Layer::Conv { out_channels: 4, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[i],
+    );
+    let r = net.add("relu1", Layer::Relu, &[c]);
+    let pl = net.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 }, &[r]);
+    let f = net.add("fc", Layer::FullyConnected { out_features: 5 }, &[pl]);
+    net.add("prob", Layer::Softmax, &[f]);
+
+    let mut exec = ChainExec::new(lower_network(&net, Mode::Inference));
+    exec.set_input("data.data", Tensor::rand(&[2, 3, 8, 8], 21, 1.0));
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_eq!(out.elements(), 2 * 5);
+    for row in out.data().chunks(5) {
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
+        assert!(row.iter().all(|p| (0.0..=1.0).contains(p)));
+    }
+}
