@@ -3,16 +3,79 @@
 //! chain in pure Rust (no Python, no XLA, no artifacts), and report
 //! per-layer and total throughput.
 //!
-//! Run: `cargo run --release --example native_inference [BATCH]`
-//! (default batch 2; weights are synthesized deterministically).
+//! Run: `cargo run --release --example native_inference [BATCH]
+//! [--threads N] [--bench-json]`
+//!
+//! * default: inference demo (batch 2, synthesized weights);
+//! * `--threads N`: run on a scoped rayon pool of N workers;
+//! * `--bench-json`: measure the MobileNet and AlexNet FP chains on the
+//!   naive oracle vs the fast execution tiers (batch defaults to 1) and
+//!   write `BENCH_native_exec.json` — the repo's perf trajectory
+//!   artifact, also produced by `cargo bench --bench native_exec`.
 
-use gconv_chain::exec::{ChainExec, Tensor};
+use gconv_chain::args::{take_flag, take_usize};
+use gconv_chain::exec::bench::{bench_network, write_json, NetBench};
+use gconv_chain::exec::{with_threads, ChainExec, Tensor};
 use gconv_chain::gconv::lower::{lower_network, Mode};
-use gconv_chain::networks::mobilenet;
+use gconv_chain::networks::{alexnet, mobilenet};
 use gconv_chain::report::{print_table, si};
 
+const JSON_PATH: &str = "BENCH_native_exec.json";
+
 fn main() {
-    let batch: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(2);
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let threads = take_usize(&mut args, "--threads");
+    let bench_mode = take_flag(&mut args, "--bench-json");
+    let batch_arg: Option<usize> = args.first().and_then(|a| a.parse().ok());
+    let body = move || {
+        if bench_mode {
+            run_bench_json(batch_arg.unwrap_or(1), threads);
+        } else {
+            run_inference(batch_arg.unwrap_or(2));
+        }
+    };
+    with_threads(threads, body).expect("building the rayon pool failed");
+}
+
+/// Naive-vs-fast bench over the MobileNet and AlexNet FP chains,
+/// emitted as `BENCH_native_exec.json`.
+fn run_bench_json(batch: usize, requested_threads: usize) {
+    let threads = match requested_threads {
+        0 => rayon::current_num_threads(),
+        n => n,
+    };
+    let nets = [mobilenet(batch), alexnet(batch)];
+    let mut results: Vec<NetBench> = Vec::new();
+    for net in &nets {
+        println!("benchmarking {} (batch {batch}) — naive oracle vs fast tiers…", net.name);
+        let b = bench_network(net, 2).expect("bench run failed");
+        print_net_summary(&b);
+        results.push(b);
+    }
+    write_json(JSON_PATH, &results, threads).expect("writing bench JSON failed");
+    println!("wrote {JSON_PATH} ({} networks, {threads} threads)", results.len());
+    if results.iter().any(|b| !b.bit_identical) {
+        eprintln!("FAIL: a fast path diverged from the naive oracle");
+        std::process::exit(1);
+    }
+}
+
+fn print_net_summary(b: &NetBench) {
+    println!(
+        "  {}: naive {:.2}s ({:.2} Gops/s) | fast {:.2}s ({:.2} Gops/s) | {:.1}x | bit-identical: {}",
+        b.net,
+        b.naive_s,
+        b.naive_gops(),
+        b.fast_s,
+        b.fast_gops(),
+        b.speedup(),
+        b.bit_identical
+    );
+}
+
+/// The original demo: one MobileNet FP chain on the fast tiers, with a
+/// per-layer throughput table.
+fn run_inference(batch: usize) {
     let net = mobilenet(batch);
     let chain = lower_network(&net, Mode::Inference);
     println!(

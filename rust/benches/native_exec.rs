@@ -1,0 +1,125 @@
+//! Naive-oracle vs fast-tier benchmark for the native GCONV execution
+//! engine, with a machine-readable artifact.
+//!
+//! Measures the MobileNet and AlexNet inference chains end-to-end on
+//! the naive per-element oracle and on the tiered fast paths (blocked
+//! dot/GEMM + odometer indexing + buffer pooling), checks the outputs
+//! stay bit-identical, prints per-net and per-layer tables, and writes
+//! `BENCH_native_exec.json` (CI uploads it as the repo's performance
+//! trajectory).
+//!
+//! Run:
+//!   cargo bench --bench native_exec
+//!   cargo bench --bench native_exec -- MN --threads 2 --runs 1
+//!
+//! Flags: net codes (`MN`, `AN`; default both), `--batch N` (default 1),
+//! `--runs R` fast-path repetitions keeping the best (default 2),
+//! `--threads N` scoped rayon pool, `--json PATH` output path.
+
+use gconv_chain::args::{take_string, take_usize};
+use gconv_chain::exec::bench::{bench_network, write_json, NetBench};
+use gconv_chain::exec::with_threads;
+use gconv_chain::networks::{alexnet, mobilenet};
+use gconv_chain::report::print_table;
+
+const DEFAULT_JSON: &str = "BENCH_native_exec.json";
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench` can forward a `--bench` flag; it is not ours.
+    args.retain(|a| a != "--bench");
+    let threads = take_usize(&mut args, "--threads");
+    let runs = match take_usize(&mut args, "--runs") {
+        0 => 2,
+        n => n,
+    };
+    let batch = match take_usize(&mut args, "--batch") {
+        0 => 1,
+        n => n,
+    };
+    let json_path = take_string(&mut args, "--json").unwrap_or_else(|| DEFAULT_JSON.to_string());
+    let body = move || run(&args, batch, runs, threads, &json_path);
+    if let Err(e) = with_threads(threads, body) {
+        eprintln!("bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(codes: &[String], batch: usize, runs: usize, requested: usize, json_path: &str) {
+    let threads = match requested {
+        0 => rayon::current_num_threads(),
+        n => n,
+    };
+    let mut nets = Vec::new();
+    if codes.is_empty() || codes.iter().any(|c| c == "MN") {
+        nets.push(mobilenet(batch));
+    }
+    if codes.is_empty() || codes.iter().any(|c| c == "AN") {
+        nets.push(alexnet(batch));
+    }
+    if nets.is_empty() {
+        eprintln!("no known net codes in {codes:?} (known: MN, AN)");
+        std::process::exit(2);
+    }
+
+    let mut results: Vec<NetBench> = Vec::new();
+    for net in &nets {
+        eprintln!(
+            "benchmarking {} (batch {batch}, {runs} fast run(s), {threads} threads)…",
+            net.name
+        );
+        results.push(bench_network(net, runs).expect("bench run failed"));
+    }
+
+    let rows: Vec<Vec<String>> = results.iter().map(net_row).collect();
+    let headers = [
+        "net", "entries", "Mops", "naive s", "fast s", "naive Gops/s", "fast Gops/s", "speedup",
+        "bit-id",
+    ];
+    print_table(
+        "Native exec: naive oracle vs fast tiers (end-to-end FP chain)",
+        &headers,
+        &rows,
+    );
+    for b in &results {
+        let lrows: Vec<Vec<String>> = b.layers.iter().map(layer_row).collect();
+        print_table(
+            &format!("{} per-layer (batch {})", b.net, b.batch),
+            &["layer", "gconvs", "Mops", "naive ms", "fast ms", "speedup"],
+            &lrows,
+        );
+    }
+
+    write_json(json_path, &results, threads).expect("writing bench JSON failed");
+    println!("wrote {json_path}");
+
+    if results.iter().any(|b| !b.bit_identical) {
+        eprintln!("FAIL: a fast path diverged from the naive oracle");
+        std::process::exit(1);
+    }
+}
+
+fn net_row(b: &NetBench) -> Vec<String> {
+    vec![
+        b.net.clone(),
+        b.entries.to_string(),
+        format!("{:.1}", b.work as f64 / 1e6),
+        format!("{:.3}", b.naive_s),
+        format!("{:.3}", b.fast_s),
+        format!("{:.3}", b.naive_gops()),
+        format!("{:.3}", b.fast_gops()),
+        format!("{:.2}x", b.speedup()),
+        b.bit_identical.to_string(),
+    ]
+}
+
+fn layer_row(l: &gconv_chain::exec::bench::LayerBench) -> Vec<String> {
+    vec![
+        l.layer.clone(),
+        l.gconvs.to_string(),
+        format!("{:.1}", l.work as f64 / 1e6),
+        format!("{:.2}", l.naive_s * 1e3),
+        format!("{:.2}", l.fast_s * 1e3),
+        format!("{:.2}x", l.speedup()),
+    ]
+}

@@ -1,0 +1,86 @@
+//! Tiny CLI flag helpers shared by the `gconv-chain` binary, the
+//! examples and the benches (space-separated `--flag value` style; no
+//! external argument-parsing crates are available offline).
+
+/// Remove `flag` from `args`, returning whether it was present.
+pub fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    if let Some(i) = args.iter().position(|a| a == flag) {
+        args.remove(i);
+        return true;
+    }
+    false
+}
+
+/// Remove `flag N` from `args`, returning N (0 when the flag is absent
+/// or its value is missing/malformed).
+pub fn take_usize(args: &mut Vec<String>, flag: &str) -> usize {
+    match take_string(args, flag) {
+        Some(v) => v.parse().unwrap_or(0),
+        None => 0,
+    }
+}
+
+/// Remove `flag VALUE` from `args`, returning VALUE if both were
+/// present. A trailing flag with no value is removed and yields None;
+/// a following token that is itself a flag (leading `--`) is *not*
+/// consumed as the value.
+pub fn take_string(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+        let v = args[i + 1].clone();
+        args.drain(i..=i + 1);
+        return Some(v);
+    }
+    args.remove(i);
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn take_flag_removes_only_the_flag() {
+        let mut args = argv(&["a", "--fast", "b"]);
+        assert!(take_flag(&mut args, "--fast"));
+        assert_eq!(args, argv(&["a", "b"]));
+        assert!(!take_flag(&mut args, "--fast"));
+    }
+
+    #[test]
+    fn take_usize_removes_flag_and_value() {
+        let mut args = argv(&["x", "--threads", "4", "y"]);
+        assert_eq!(take_usize(&mut args, "--threads"), 4);
+        assert_eq!(args, argv(&["x", "y"]));
+        assert_eq!(take_usize(&mut args, "--threads"), 0);
+    }
+
+    #[test]
+    fn malformed_or_missing_values_yield_zero() {
+        let mut args = argv(&["--threads", "two"]);
+        assert_eq!(take_usize(&mut args, "--threads"), 0);
+        assert!(args.is_empty());
+        let mut tail = argv(&["--threads"]);
+        assert_eq!(take_usize(&mut tail, "--threads"), 0);
+        assert!(tail.is_empty());
+    }
+
+    #[test]
+    fn flag_like_values_are_not_consumed() {
+        let mut args = argv(&["--threads", "--bench-json"]);
+        assert_eq!(take_usize(&mut args, "--threads"), 0);
+        assert_eq!(args, argv(&["--bench-json"]));
+    }
+
+    #[test]
+    fn take_string_returns_the_value() {
+        let mut args = argv(&["--json", "out.json", "MN"]);
+        assert_eq!(take_string(&mut args, "--json"), Some("out.json".into()));
+        assert_eq!(args, argv(&["MN"]));
+        assert_eq!(take_string(&mut args, "--json"), None);
+    }
+}

@@ -207,7 +207,15 @@ impl Backend for NativeBackend {
         let t = Tensor::new(&self.input_dims, batch_data)?;
         self.exec.set_input(&self.input_name, t);
         let mut report = self.exec.run(&[self.output_entry])?;
-        let out = report.outputs.remove(0).into_data();
+        // Outputs are Arc-shared with the executor; the requested entry
+        // is uniquely owned after the run, so this unwrap moves the
+        // buffer out without copying (the fallback clone only triggers
+        // if a caller-visible Arc is still alive, which `run` precludes
+        // for a single wanted entry).
+        let out = match std::sync::Arc::try_unwrap(report.outputs.remove(0)) {
+            Ok(t) => t.into_data(),
+            Err(shared) => shared.data().to_vec(),
+        };
         self.last_report = Some(report);
         anyhow::ensure!(
             out.len() == self.batch * self.out_len,

@@ -1,0 +1,284 @@
+//! Naive-vs-fast measurement harness for the native execution engine.
+//!
+//! Runs a network's inference chain twice — once forced through the
+//! naive per-element oracle, once on the tiered fast paths — and
+//! aggregates per-layer and end-to-end timings plus a bit-identity
+//! check. `rust/benches/native_exec.rs` and the `--bench-json` mode of
+//! `examples/native_inference.rs` both drive this module and emit the
+//! result as `BENCH_native_exec.json`, the repo's performance-trajectory
+//! artifact (CI uploads it on every run).
+
+use std::collections::HashMap;
+use std::fs;
+
+use anyhow::{Context, Result};
+
+use crate::gconv::lower::{lower_network, Mode};
+use crate::ir::{Layer, Network};
+
+use super::chain_exec::{ChainExec, RunReport};
+use super::tensor::Tensor;
+
+/// Per-layer aggregation of one naive-vs-fast comparison (chain entries
+/// grouped by the op-name prefix before the phase suffix, so
+/// `"bn3.FP2"` rolls up into layer `"bn3"`).
+#[derive(Clone, Debug)]
+pub struct LayerBench {
+    /// Layer name.
+    pub layer: String,
+    /// GCONV entries in the layer.
+    pub gconvs: usize,
+    /// `main` operations per chain run.
+    pub work: usize,
+    /// Seconds in the layer, naive oracle.
+    pub naive_s: f64,
+    /// Seconds in the layer, fast tiers.
+    pub fast_s: f64,
+}
+
+impl LayerBench {
+    /// Naive-to-fast speedup for this layer.
+    pub fn speedup(&self) -> f64 {
+        if self.fast_s > 0.0 {
+            self.naive_s / self.fast_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One network's end-to-end naive-vs-fast measurement.
+#[derive(Clone, Debug)]
+pub struct NetBench {
+    /// Network name (e.g. `"MobileNet"`).
+    pub net: String,
+    /// Mini-batch size of the lowered chain.
+    pub batch: usize,
+    /// GCONV entries executed.
+    pub entries: usize,
+    /// Total `main` operations per chain run.
+    pub work: usize,
+    /// End-to-end seconds, naive oracle.
+    pub naive_s: f64,
+    /// End-to-end seconds, fast tiers (best measured run).
+    pub fast_s: f64,
+    /// Whether the two paths produced bit-identical final outputs.
+    pub bit_identical: bool,
+    /// Per-layer breakdown.
+    pub layers: Vec<LayerBench>,
+}
+
+impl NetBench {
+    /// End-to-end naive-to-fast speedup.
+    pub fn speedup(&self) -> f64 {
+        if self.fast_s > 0.0 {
+            self.naive_s / self.fast_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Giga `main`-operations per second on the naive oracle.
+    pub fn naive_gops(&self) -> f64 {
+        gops(self.work, self.naive_s)
+    }
+
+    /// Giga `main`-operations per second on the fast tiers.
+    pub fn fast_gops(&self) -> f64 {
+        gops(self.work, self.fast_s)
+    }
+}
+
+fn gops(work: usize, seconds: f64) -> f64 {
+    if seconds > 0.0 {
+        work as f64 / seconds / 1e9
+    } else {
+        0.0
+    }
+}
+
+/// Input operand name and batched shape of a network's `Input` layer
+/// (the operand the lowering emits as `"<name>.data"`).
+fn input_spec(net: &Network) -> Result<(String, Vec<usize>)> {
+    let input = net
+        .nodes()
+        .iter()
+        .find(|n| matches!(n.layer, Layer::Input { .. }))
+        .context("network has no Input layer")?;
+    let dims: Vec<usize> = input.output.iter().map(|(_, n)| n).collect();
+    Ok((format!("{}.data", input.name), dims))
+}
+
+/// Lower `net` for inference and measure its FP chain end-to-end: the
+/// naive oracle once (it is the slow side), the fast tiers `fast_runs`
+/// times (the first run warms the buffer pool; the best run is kept).
+/// Both timed sides execute the *same* pruned workload (ancestors of
+/// the final entry) with buffer recycling engaged; a separate untimed
+/// pass retains every entry on both paths and feeds the all-entry
+/// differential gate. Weights are synthesized deterministically; the
+/// input is a fixed pseudo-random tensor, identical on both paths.
+pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
+    let (input_name, dims) = input_spec(net)?;
+    let x = Tensor::rand(&dims, 0xBE7C_4A11, 1.0);
+
+    let naive_chain = lower_network(net, Mode::Inference);
+    let all: Vec<usize> = (0..naive_chain.len()).collect();
+    let mut naive = ChainExec::new(naive_chain).with_naive_oracle();
+    naive.set_input(&input_name, x.clone());
+    let naive_report = naive.run_last()?;
+
+    let fast_chain = lower_network(net, Mode::Inference);
+    let mut fast = ChainExec::new(fast_chain);
+    fast.set_input(&input_name, x);
+    let mut fast_report = fast.run_last()?;
+    for _ in 1..fast_runs.max(1) {
+        let r = fast.run_last()?;
+        if r.total_s < fast_report.total_s {
+            fast_report = r;
+        }
+    }
+
+    // Untimed differential gate: *every* chain entry must match the
+    // oracle bit-for-bit, not just the final network output.
+    let dn = naive.run(&all)?;
+    let df = fast.run(&all)?;
+    let mut bit_identical = df.outputs.len() == dn.outputs.len();
+    for (a, b) in df.outputs.iter().zip(&dn.outputs) {
+        bit_identical &= a.bit_eq(b);
+    }
+    Ok(NetBench {
+        net: net.name.clone(),
+        batch: dims[0],
+        entries: fast_report.entries.len(),
+        work: fast_report.total_work(),
+        naive_s: naive_report.total_s,
+        fast_s: fast_report.total_s,
+        bit_identical,
+        layers: layer_rows(&naive_report, &fast_report),
+    })
+}
+
+/// Merge two reports of the same chain into per-layer rows (paired by
+/// chain-entry index, so differing retention sets cannot misalign).
+fn layer_rows(naive: &RunReport, fast: &RunReport) -> Vec<LayerBench> {
+    let mut naive_secs = HashMap::new();
+    for ne in &naive.entries {
+        naive_secs.insert(ne.index, ne.seconds);
+    }
+    let mut rows: Vec<LayerBench> = Vec::new();
+    for fe in &fast.entries {
+        let layer = layer_of(&fe.name);
+        let ns = naive_secs.get(&fe.index).copied().unwrap_or(0.0);
+        match rows.last_mut() {
+            Some(row) if row.layer == layer => {
+                row.gconvs += 1;
+                row.work += fe.work;
+                row.naive_s += ns;
+                row.fast_s += fe.seconds;
+            }
+            _ => rows.push(LayerBench {
+                layer,
+                gconvs: 1,
+                work: fe.work,
+                naive_s: ns,
+                fast_s: fe.seconds,
+            }),
+        }
+    }
+    rows
+}
+
+/// Layer name of a chain-entry name (`"bn3.FP2"` → `"bn3"`).
+fn layer_of(name: &str) -> String {
+    name.split('.').next().unwrap_or(name).to_string()
+}
+
+/// Render measurements as the `BENCH_native_exec.json` document.
+pub fn to_json(benches: &[NetBench], threads: usize) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"native_exec\",\n");
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str("  \"networks\": [\n");
+    for (bi, b) in benches.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"net\": \"{}\",\n", esc(&b.net)));
+        s.push_str(&format!("      \"batch\": {},\n", b.batch));
+        s.push_str(&format!("      \"entries\": {},\n", b.entries));
+        s.push_str(&format!("      \"work\": {},\n", b.work));
+        s.push_str(&format!(
+            "      \"naive\": {{\"seconds\": {:.6}, \"gops\": {:.3}}},\n",
+            b.naive_s,
+            b.naive_gops()
+        ));
+        s.push_str(&format!(
+            "      \"fast\": {{\"seconds\": {:.6}, \"gops\": {:.3}}},\n",
+            b.fast_s,
+            b.fast_gops()
+        ));
+        s.push_str(&format!("      \"speedup\": {:.3},\n", b.speedup()));
+        let bits = b.bit_identical;
+        s.push_str(&format!("      \"bit_identical\": {bits},\n"));
+        s.push_str("      \"layers\": [\n");
+        for (li, l) in b.layers.iter().enumerate() {
+            let sep = if li + 1 < b.layers.len() { "," } else { "" };
+            s.push_str(&format!(
+                "        {{\"layer\": \"{}\", \"gconvs\": {}, \"work\": {}, \
+                 \"naive_s\": {:.6}, \"fast_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                esc(&l.layer),
+                l.gconvs,
+                l.work,
+                l.naive_s,
+                l.fast_s,
+                l.speedup(),
+                sep
+            ));
+        }
+        s.push_str("      ]\n");
+        let sep = if bi + 1 < benches.len() { "," } else { "" };
+        s.push_str(&format!("    }}{sep}\n"));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+/// Write the JSON document to `path`.
+pub fn write_json(path: &str, benches: &[NetBench], threads: usize) -> Result<()> {
+    let json = to_json(benches, threads);
+    fs::write(path, json).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::networks::mobilenet_block;
+
+    #[test]
+    fn block_bench_is_bit_identical_and_json_renders() {
+        let net = mobilenet_block(2, 4, 6);
+        let b = bench_network(&net, 2).unwrap();
+        assert!(b.bit_identical, "fast paths must match the oracle");
+        assert_eq!(b.batch, 2);
+        assert!(b.entries > 0 && b.work > 0);
+        assert!(!b.layers.is_empty());
+        let gconvs: usize = b.layers.iter().map(|l| l.gconvs).sum();
+        assert_eq!(gconvs, b.entries);
+        let json = to_json(&[b], 2);
+        assert!(json.contains("\"bench\": \"native_exec\""));
+        assert!(json.contains("\"net\": \"MobileNetBlock\""));
+        assert!(json.contains("\"bit_identical\": true"));
+        assert!(json.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn esc_escapes_quotes_and_backslashes() {
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

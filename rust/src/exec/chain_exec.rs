@@ -11,9 +11,11 @@
 //!    own output elements evaluate in parallel too (nested parallelism —
 //!    rayon's work stealing balances wide levels against wide ops, which
 //!    is how independent batch slices end up on separate cores);
-//! 3. intermediate buffers are reference-counted and freed as soon as
-//!    their last consumer has run, so a full training chain never holds
-//!    more than the live frontier of activations.
+//! 3. intermediate buffers are `Arc`-shared (multi-consumer operands and
+//!    duplicated `wanted` outputs never deep-copy), reference-counted,
+//!    and recycled through a size-bucketed [`BufferPool`] as soon as
+//!    their last consumer has run — a warmed-up chain run allocates no
+//!    fresh intermediate output buffers.
 //!
 //! External operands ([`DataRef::External`] / [`DataRef::Weights`]) come
 //! from a tensor store filled by the caller. Anything missing is — by
@@ -22,14 +24,19 @@
 //! possible without trained checkpoints; [`ChainExec::strict`] turns
 //! that off for callers that want hard errors instead.
 
-use super::interp::eval_gconv;
-use super::tensor::Tensor;
-use crate::gconv::chain::{GconvChain, Phase};
-use crate::gconv::op::{DataRef, GconvOp};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::{anyhow, ensure, Context, Result};
 use rayon::prelude::*;
-use std::collections::HashMap;
-use std::time::Instant;
+
+use crate::gconv::chain::{GconvChain, Phase};
+use crate::gconv::op::{DataRef, GconvOp};
+
+use super::interp::eval_in;
+use super::pool::{BufferPool, PoolStats};
+use super::tensor::Tensor;
 
 /// Timing/size record of one executed chain entry.
 #[derive(Clone, Debug)]
@@ -53,7 +60,9 @@ pub struct EntryRun {
 #[derive(Clone, Debug)]
 pub struct RunReport {
     /// Requested outputs, parallel to the `wanted` argument of `run`.
-    pub outputs: Vec<Tensor>,
+    /// Outputs are `Arc`-shared with the executor's buffer management:
+    /// listing the same entry twice yields two pointers to one buffer.
+    pub outputs: Vec<Arc<Tensor>>,
     /// Per-entry records, sorted by chain index.
     pub entries: Vec<EntryRun>,
     /// End-to-end wall-clock seconds for the whole chain.
@@ -76,8 +85,8 @@ impl RunReport {
     }
 }
 
-/// Native chain executor: owns the chain, its external-tensor store, and
-/// the precomputed level schedule.
+/// Native chain executor: owns the chain, its external-tensor store, the
+/// precomputed level schedule, and the intermediate-buffer pool.
 pub struct ChainExec {
     chain: GconvChain,
     externals: HashMap<DataRef, Tensor>,
@@ -85,6 +94,8 @@ pub struct ChainExec {
     synth_seed: u64,
     synth_scale: f32,
     levels: Vec<Vec<usize>>,
+    pool: BufferPool,
+    force_naive: bool,
 }
 
 impl ChainExec {
@@ -110,6 +121,8 @@ impl ChainExec {
             synth_seed: 0x6C0_17BD_600D_CAFE,
             synth_scale: 0.1,
             levels,
+            pool: BufferPool::new(),
+            force_naive: false,
         }
     }
 
@@ -124,6 +137,15 @@ impl ChainExec {
     /// Error on missing externals instead of synthesizing them.
     pub fn strict(mut self) -> Self {
         self.synthesize = false;
+        self
+    }
+
+    /// Force every entry through the naive per-element oracle instead of
+    /// the fast execution tiers. Differential testing and the
+    /// `native_exec` bench baseline use this; results are bit-identical
+    /// either way.
+    pub fn with_naive_oracle(mut self) -> Self {
+        self.force_naive = true;
         self
     }
 
@@ -150,10 +172,17 @@ impl ChainExec {
         &self.levels
     }
 
+    /// Allocation counters of the intermediate-buffer pool. The
+    /// `misses` counter is the executor's intermediate allocation count:
+    /// a re-run that adds no misses allocated nothing new.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
     /// Execute the chain, returning the outputs of the `wanted` entries
     /// plus per-entry timing. Only entries the `wanted` set transitively
     /// depends on are evaluated; buffers of entries whose last consumer
-    /// has run (and that are not in `wanted`) are dropped eagerly.
+    /// has run (and that are not in `wanted`) are recycled eagerly.
     pub fn run(&mut self, wanted: &[usize]) -> Result<RunReport> {
         let n = self.chain.len();
         ensure!(n > 0, "cannot run an empty chain");
@@ -189,11 +218,16 @@ impl ChainExec {
         for &w in wanted {
             uses[w] += 1;
         }
-        let mut buffers: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut buffers: Vec<Option<Arc<Tensor>>> = (0..n).map(|_| None).collect();
         let mut records: Vec<EntryRun> = Vec::with_capacity(n);
         let t_total = Instant::now();
         for full_level in &self.levels {
-            let level: Vec<usize> = full_level.iter().copied().filter(|&i| needed[i]).collect();
+            let mut level = Vec::new();
+            for &i in full_level {
+                if needed[i] {
+                    level.push(i);
+                }
+            }
             let results: Result<Vec<(usize, Tensor, f64)>> = level
                 .par_iter()
                 .map(|&i| {
@@ -204,7 +238,8 @@ impl ChainExec {
                         None => None,
                     };
                     let t0 = Instant::now();
-                    let out = eval_gconv(&e.op, input, kernel)
+                    let pool = Some(&self.pool);
+                    let out = eval_in(&e.op, input, kernel, pool, self.force_naive)
                         .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
                     Ok((i, out, t0.elapsed().as_secs_f64()))
                 })
@@ -219,16 +254,22 @@ impl ChainExec {
                     out_elements: out.elements(),
                     work: e.op.work(),
                 });
-                if uses[i] > 0 {
-                    buffers[i] = Some(out);
-                }
+                // Every scheduled entry is wanted or has a needed
+                // consumer, so its buffer is always retained here.
+                debug_assert!(uses[i] > 0, "executed entries are consumed or wanted");
+                buffers[i] = Some(Arc::new(out));
             }
-            // Free buffers whose last consumer has now run.
+            // Free buffers whose last consumer has now run; uniquely
+            // owned ones go straight back to the pool.
             for &i in &level {
                 for d in deps(&self.chain.entries()[i].op) {
                     uses[d] -= 1;
                     if uses[d] == 0 {
-                        buffers[d] = None;
+                        if let Some(t) = buffers[d].take() {
+                            if let Ok(t) = Arc::try_unwrap(t) {
+                                self.pool.put(t.into_data());
+                            }
+                        }
                     }
                 }
             }
@@ -237,15 +278,23 @@ impl ChainExec {
         let outputs = wanted
             .iter()
             .map(|&w| {
-                // The `uses[w] += 1` above kept this buffer alive for the
-                // hand-off; move it out on the last occurrence, clone only
-                // when `wanted` lists the same entry again.
+                // The `uses[w] += 1` above kept this buffer alive for
+                // the hand-off; move the Arc out on the last occurrence
+                // and share it (pointer-equal, never a deep copy) when
+                // `wanted` lists the same entry again.
                 uses[w] -= 1;
-                let t = if uses[w] == 0 { buffers[w].take() } else { buffers[w].clone() };
+                let t = match uses[w] {
+                    0 => buffers[w].take(),
+                    _ => buffers[w].clone(),
+                };
                 t.ok_or_else(|| anyhow!("output of entry #{w} was not retained"))
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(RunReport { outputs, entries: records, total_s: t_total.elapsed().as_secs_f64() })
+        Ok(RunReport {
+            outputs,
+            entries: records,
+            total_s: t_total.elapsed().as_secs_f64(),
+        })
     }
 
     /// Execute the chain and return the final entry's output (the
@@ -256,10 +305,14 @@ impl ChainExec {
     }
 
     /// Look up an operand tensor for evaluation.
-    fn operand<'a>(&'a self, r: &DataRef, buffers: &'a [Option<Tensor>]) -> Result<&'a Tensor> {
+    fn operand<'a>(
+        &'a self,
+        r: &DataRef,
+        buffers: &'a [Option<Arc<Tensor>>],
+    ) -> Result<&'a Tensor> {
         match r {
             DataRef::Gconv(i) => buffers[*i]
-                .as_ref()
+                .as_deref()
                 .ok_or_else(|| anyhow!("producer #{i} buffer already freed or never run")),
             other => self
                 .externals
@@ -333,6 +386,7 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::gconv::chain::ChainEntry;
     use crate::gconv::op::{DimParams, MainOp, PostOp, PreOp, ReduceOp};
     use crate::ir::Dim;
@@ -360,8 +414,13 @@ mod tests {
         let x = DataRef::External("x".into());
         let a = push(&mut c, ew("a", MainOp::Pass, x.clone(), None));
         let b = push(&mut c, ew("b", MainOp::Pass, x, None));
-        push(&mut c, ew("c", MainOp::Add, DataRef::Gconv(a), Some(DataRef::Gconv(b))));
+        let (ra, rb) = (DataRef::Gconv(a), DataRef::Gconv(b));
+        push(&mut c, ew("c", MainOp::Add, ra, Some(rb)));
         c
+    }
+
+    fn x1234() -> Tensor {
+        Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
     }
 
     #[test]
@@ -373,7 +432,7 @@ mod tests {
     #[test]
     fn diamond_sums_both_branches() {
         let mut exec = ChainExec::new(diamond());
-        exec.set_input("x", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        exec.set_input("x", x1234());
         let report = exec.run_last().unwrap();
         assert_eq!(report.outputs[0].data(), &[2.0, 4.0, 6.0, 8.0]);
         assert_eq!(report.entries.len(), 3);
@@ -406,7 +465,7 @@ mod tests {
     #[test]
     fn wanted_outputs_are_retained_even_mid_chain() {
         let mut exec = ChainExec::new(diamond());
-        exec.set_input("x", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        exec.set_input("x", x1234());
         let report = exec.run(&[0, 2]).unwrap();
         assert_eq!(report.outputs.len(), 2);
         assert_eq!(report.outputs[0].data(), &[1.0, 2.0, 3.0, 4.0]);
@@ -417,7 +476,7 @@ mod tests {
     fn unneeded_entries_are_pruned() {
         // Asking only for entry 0 must not evaluate 1 or 2.
         let mut exec = ChainExec::new(diamond());
-        exec.set_input("x", Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        exec.set_input("x", x1234());
         let report = exec.run(&[0]).unwrap();
         assert_eq!(report.entries.len(), 1);
         assert_eq!(report.entries[0].index, 0);
@@ -435,13 +494,59 @@ mod tests {
         // Two entries reading the same Weights ref must see identical data.
         let mut c = GconvChain::new("w");
         let w = DataRef::Weights("shared".into());
-        push(&mut c, ew("a", MainOp::Mul, DataRef::External("x".into()), Some(w.clone())));
-        push(&mut c, ew("b", MainOp::Mul, DataRef::External("y".into()), Some(w)));
+        let x = DataRef::External("x".into());
+        let y = DataRef::External("y".into());
+        push(&mut c, ew("a", MainOp::Mul, x, Some(w.clone())));
+        push(&mut c, ew("b", MainOp::Mul, y, Some(w)));
         let mut exec = ChainExec::new(c);
         let ones = Tensor::filled(&[4], 1.0);
         exec.set_input("x", ones.clone());
         exec.set_input("y", ones);
         let report = exec.run(&[0, 1]).unwrap();
         assert_eq!(report.outputs[0], report.outputs[1]);
+    }
+
+    #[test]
+    fn duplicated_wanted_outputs_share_one_buffer() {
+        // A diamond-shaped chain with the sink requested twice: both
+        // outputs must be the *same* allocation — pointer identity, not
+        // a deep copy.
+        let mut exec = ChainExec::new(diamond());
+        exec.set_input("x", x1234());
+        let report = exec.run(&[2, 2]).unwrap();
+        let a = &report.outputs[0];
+        let b = &report.outputs[1];
+        assert!(Arc::ptr_eq(a, b), "duplicated outputs must share");
+        assert_eq!(a.data().as_ptr(), b.data().as_ptr());
+        assert_eq!(a.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn rerun_recycles_buffers_instead_of_allocating() {
+        // Allocation counter: the second run of the same chain must be
+        // served from the pool (its only fresh allocation is the final
+        // output, whose first-run buffer the caller still holds).
+        let mut exec = ChainExec::new(diamond());
+        exec.set_input("x", x1234());
+        let first = exec.run_last().unwrap();
+        let misses_first = exec.pool_stats().misses;
+        assert!(misses_first >= 3, "first run allocates per entry");
+        let second = exec.run_last().unwrap();
+        let stats = exec.pool_stats();
+        assert_eq!(stats.misses, misses_first + 1, "{stats:?}");
+        assert!(stats.hits >= 2, "{stats:?}");
+        // Recycled (stale-content) buffers must not change results.
+        assert!(first.outputs[0].bit_eq(&second.outputs[0]));
+    }
+
+    #[test]
+    fn naive_oracle_toggle_is_bit_identical() {
+        let mut fast = ChainExec::new(diamond());
+        let mut slow = ChainExec::new(diamond()).with_naive_oracle();
+        fast.set_input("x", x1234());
+        slow.set_input("x", x1234());
+        let a = fast.run_last().unwrap();
+        let b = slow.run_last().unwrap();
+        assert!(a.outputs[0].bit_eq(&b.outputs[0]));
     }
 }

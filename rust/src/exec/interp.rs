@@ -20,6 +20,13 @@
 //! [`crate::gconv::lower`]: conv, FC, pooling, BN, LRN, softmax and their
 //! BP/WG forms all reduce to this one evaluator.
 //!
+//! Binding an op to tensors produces a `Plan`; [`eval_gconv`] then picks
+//! an execution tier for the plan (see `super::kernels`): a packed-panel
+//! dot/GEMM fast path for `Mul`+`Add` reductions, an odometer-indexed
+//! generic fast path for everything else, and the naive per-element
+//! oracle (`Plan::eval_one`, reachable via [`eval_gconv_naive`]) kept
+//! for differential testing. All tiers are bit-identical.
+//!
 //! ## Index semantics
 //!
 //! Along one dimension with parameters `(ng, nop, nopc, nks, s, ps)`:
@@ -46,11 +53,16 @@
 //! non-executable is max-pool BP, which routes gradients through a
 //! stored argmax mask whose operand genuinely under-covers the nest —
 //! that op is an analytical-model construct (pure data movement).
+//!
+//! [`DimParams::input_extent`]: crate::gconv::op::DimParams::input_extent
 
-use super::tensor::{row_major_strides, Tensor};
-use crate::gconv::op::{GconvOp, MainOp, PostOp, PreOp, ReduceOp};
 use anyhow::{bail, ensure, Context, Result};
-use rayon::prelude::*;
+
+use crate::gconv::op::{GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+
+use super::kernels::{self, GEMM_MIN_REDUCTION, KernelTier};
+use super::pool::BufferPool;
+use super::tensor::{row_major_strides, Tensor};
 
 /// Epsilon used by the `"rsqrt_eps"` LUT (BN FP3 variance stabilizer).
 pub const BN_EPS: f32 = 1e-5;
@@ -60,58 +72,167 @@ pub const LRN_ALPHA: f32 = 1e-4;
 /// See [`LRN_ALPHA`].
 pub const LRN_BETA: f32 = 0.75;
 
-/// True when `name` is a LUT the interpreter implements.
+/// Most loop-nest dimensions a plan can carry (the execution tiers use
+/// fixed-size index state of this width).
+pub(super) const MAX_DIMS: usize = 8;
+
+/// A look-up-table function resolved from its lowering name. In the
+/// paper's accelerator these are literal lookup tables (§3.1
+/// "Representability") and may fold per-layer constants — here each gets
+/// one fixed analytic definition:
+///
+/// * [`LutFn::RsqrtEps`] (`"rsqrt_eps"`): `1/√(x + ε)` with ε =
+///   [`BN_EPS`]. (Table 2 FP3 folds the `1/Nbs` variance scaling into
+///   the hardware LUT; the native definition keeps the plain form, so BN
+///   normalizes by the batch *sum* of squares — the chain's golden tests
+///   pin this semantics.)
+/// * [`LutFn::LrnScale`] (`"lrn_scale"`): `(1 + α·x)^(−β)` with the
+///   AlexNet α/β defaults.
+/// * [`LutFn::SquashScale`] (`"squash_scale"`): for `x = ‖s‖²`, the
+///   capsule squash scale `x/((1+x)·√(x+ε))`.
+/// * [`LutFn::Fused`] (`"fused"`): identity — a placeholder slot written
+///   by operation fusion (§4.3), an analytical-model construct.
+///
+/// Names resolve **once at bind time** ([`LutFn::resolve`]); the hot
+/// loops only ever see the enum, so an unknown LUT name is a bind error
+/// and can never panic mid-evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LutFn {
+    /// `max(x, 0)`.
+    Relu,
+    /// `1/(1 + e^{−x})`.
+    Sigmoid,
+    /// `e^x`.
+    Exp,
+    /// `1/x`.
+    Recip,
+    /// `1/√(x + ε)`.
+    RsqrtEps,
+    /// `(1 + α·x)^{−β}`.
+    LrnScale,
+    /// `x/((1+x)·√(x+ε))`.
+    SquashScale,
+    /// Identity (operation-fusion placeholder).
+    Fused,
+}
+
+impl LutFn {
+    /// Every LUT the interpreter implements.
+    pub const ALL: [LutFn; 8] = [
+        LutFn::Relu,
+        LutFn::Sigmoid,
+        LutFn::Exp,
+        LutFn::Recip,
+        LutFn::RsqrtEps,
+        LutFn::LrnScale,
+        LutFn::SquashScale,
+        LutFn::Fused,
+    ];
+
+    /// Resolve a lowering name (as carried by [`PreOp::Lut`] /
+    /// [`PostOp::Lut`]) to its implementation, or `None` if unknown.
+    pub fn resolve(name: &str) -> Option<LutFn> {
+        match name {
+            "relu" => Some(LutFn::Relu),
+            "sigmoid" => Some(LutFn::Sigmoid),
+            "exp" => Some(LutFn::Exp),
+            "recip" => Some(LutFn::Recip),
+            "rsqrt_eps" => Some(LutFn::RsqrtEps),
+            "lrn_scale" => Some(LutFn::LrnScale),
+            "squash_scale" => Some(LutFn::SquashScale),
+            "fused" => Some(LutFn::Fused),
+            _ => None,
+        }
+    }
+
+    /// The lowering name this LUT resolves from.
+    pub fn name(self) -> &'static str {
+        match self {
+            LutFn::Relu => "relu",
+            LutFn::Sigmoid => "sigmoid",
+            LutFn::Exp => "exp",
+            LutFn::Recip => "recip",
+            LutFn::RsqrtEps => "rsqrt_eps",
+            LutFn::LrnScale => "lrn_scale",
+            LutFn::SquashScale => "squash_scale",
+            LutFn::Fused => "fused",
+        }
+    }
+
+    /// Evaluate the LUT at `x`.
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            LutFn::Relu => x.max(0.0),
+            LutFn::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            LutFn::Exp => x.exp(),
+            LutFn::Recip => x.recip(),
+            LutFn::RsqrtEps => 1.0 / (x + BN_EPS).sqrt(),
+            LutFn::LrnScale => (1.0 + LRN_ALPHA * x).powf(-LRN_BETA),
+            LutFn::SquashScale => x / ((1.0 + x) * (x + BN_EPS).sqrt()),
+            LutFn::Fused => x,
+        }
+    }
+}
+
+/// True when `name` is a LUT the interpreter implements (kept in sync
+/// with [`LutFn::resolve`] by construction — and by a unit test).
 pub fn lut_known(name: &str) -> bool {
-    matches!(
-        name,
-        "relu" | "sigmoid" | "exp" | "recip" | "rsqrt_eps" | "lrn_scale" | "squash_scale"
-            | "fused"
-    )
+    LutFn::resolve(name).is_some()
 }
 
-/// Evaluate LUT `name` at `x`. The names are the ones emitted by the
-/// lowering in [`crate::gconv::lower`]; in the paper's accelerator these
-/// are literal lookup tables (§3.1 "Representability") and may fold
-/// per-layer constants — here each gets one fixed analytic definition:
-///
-/// * `"rsqrt_eps"`: `1/√(x + ε)` with ε = [`BN_EPS`]. (Table 2 FP3 folds
-///   the `1/Nbs` variance scaling into the hardware LUT; the native
-///   definition keeps the plain form, so BN normalizes by the batch
-///   *sum* of squares — the chain's golden tests pin this semantics.)
-/// * `"lrn_scale"`: `(1 + α·x)^(−β)` with the AlexNet α/β defaults.
-/// * `"squash_scale"`: for `x = ‖s‖²`, the capsule squash scale
-///   `x/((1+x)·√(x+ε))`.
-/// * `"fused"`: identity — a placeholder slot written by operation
-///   fusion (§4.3), which is an analytical-model construct.
-///
-/// Panics on unknown names; callers validate with [`lut_known`] first
-/// (the interpreter does so at bind time).
-pub fn lut_apply(name: &str, x: f32) -> f32 {
-    match name {
-        "relu" => x.max(0.0),
-        "sigmoid" => 1.0 / (1.0 + (-x).exp()),
-        "exp" => x.exp(),
-        "recip" => x.recip(),
-        "rsqrt_eps" => 1.0 / (x + BN_EPS).sqrt(),
-        "lrn_scale" => (1.0 + LRN_ALPHA * x).powf(-LRN_BETA),
-        "squash_scale" => x / ((1.0 + x) * (x + BN_EPS).sqrt()),
-        "fused" => x,
-        other => panic!("unknown LUT {other:?}"),
+/// Evaluate LUT `name` at `x`, erroring on unknown names (the
+/// interpreter itself resolves names once at bind time and never hits
+/// the error path mid-evaluation).
+pub fn lut_apply(name: &str, x: f32) -> Result<f32> {
+    match LutFn::resolve(name) {
+        Some(f) => Ok(f.apply(x)),
+        None => bail!("unknown LUT {name:?}"),
+    }
+}
+
+/// A [`PreOp`] with its LUT name resolved at bind time.
+#[derive(Clone, Copy, Debug)]
+pub(super) enum PreEval {
+    None,
+    Square,
+    Mul(f32),
+    Lut(LutFn),
+}
+
+impl PreEval {
+    #[inline]
+    pub(super) fn apply(self, x: f32) -> f32 {
+        match self {
+            PreEval::None => x,
+            PreEval::Square => x * x,
+            PreEval::Mul(c) => x * c,
+            PreEval::Lut(f) => f.apply(x),
+        }
+    }
+}
+
+/// A [`PostOp`] with its LUT name resolved at bind time.
+#[derive(Clone, Copy, Debug)]
+pub(super) enum PostEval {
+    None,
+    Mul(f32),
+    Lut(LutFn),
+}
+
+impl PostEval {
+    #[inline]
+    pub(super) fn apply(self, x: f32) -> f32 {
+        match self {
+            PostEval::None => x,
+            PostEval::Mul(c) => x * c,
+            PostEval::Lut(f) => f.apply(x),
+        }
     }
 }
 
 #[inline]
-fn pre_apply(pre: PreOp, x: f32) -> f32 {
-    match pre {
-        PreOp::None => x,
-        PreOp::Square => x * x,
-        PreOp::Mul(c) => x * c,
-        PreOp::Lut(name) => lut_apply(name, x),
-    }
-}
-
-#[inline]
-fn main_apply(main: MainOp, a: f32, w: f32) -> f32 {
+pub(super) fn main_apply(main: MainOp, a: f32, w: f32) -> f32 {
     match main {
         MainOp::Mul => a * w,
         MainOp::Add => a + w,
@@ -129,55 +250,53 @@ fn main_apply(main: MainOp, a: f32, w: f32) -> f32 {
     }
 }
 
-#[inline]
-fn post_apply(post: PostOp, x: f32) -> f32 {
-    match post {
-        PostOp::None => x,
-        PostOp::Mul(c) => x * c,
-        PostOp::Lut(name) => lut_apply(name, x),
-    }
-}
-
 /// One dimension of the bound loop nest.
 #[derive(Clone, Copy, Debug)]
-struct LoopDim {
-    nop: usize,
-    nopc: usize,
-    nks: usize,
-    s: usize,
-    ps: usize,
+pub(super) struct LoopDim {
+    pub(super) ng: usize,
+    pub(super) nop: usize,
+    pub(super) nopc: usize,
+    pub(super) nks: usize,
+    pub(super) s: usize,
+    pub(super) ps: usize,
     /// `nop · nopc` (outputs per group).
-    npc: usize,
+    pub(super) npc: usize,
     /// Output extent `ng·nop·nopc` along this dimension.
-    out_ext: usize,
+    pub(super) out_ext: usize,
     /// Row-major output stride.
-    out_stride: usize,
+    pub(super) out_stride: usize,
     /// Per-group extent of the *bound* input tensor (≥ the covered
     /// extent; sliding windows may discard a tail).
-    in_actual: usize,
+    pub(super) in_actual: usize,
     /// Row-major input stride (over extents `ng·in_actual`).
-    in_stride: usize,
+    pub(super) in_stride: usize,
     /// Row-major kernel stride (over extents `ng·nop·nks`).
-    ker_stride: usize,
+    pub(super) ker_stride: usize,
     /// Stride of this dimension's `ks` loop in the flattened reduction
     /// space.
-    red_stride: usize,
+    pub(super) red_stride: usize,
 }
 
 /// A [`GconvOp`] bound to concrete input/kernel tensors: validated
-/// shapes, precomputed strides, ready to evaluate.
-struct Plan<'t> {
-    op: &'t GconvOp,
-    dims: Vec<LoopDim>,
-    out_dims: Vec<usize>,
-    out_total: usize,
-    red_total: usize,
-    xs: &'t [f32],
-    ws: Option<&'t [f32]>,
+/// shapes, precomputed strides, operators resolved, ready to evaluate.
+pub(super) struct Plan<'t> {
+    pub(super) op: &'t GconvOp,
+    pub(super) pre: PreEval,
+    pub(super) post: PostEval,
+    pub(super) dims: Vec<LoopDim>,
+    pub(super) out_dims: Vec<usize>,
+    pub(super) out_total: usize,
+    pub(super) red_total: usize,
+    pub(super) xs: &'t [f32],
+    pub(super) ws: Option<&'t [f32]>,
 }
 
 impl<'t> Plan<'t> {
-    fn bind(op: &'t GconvOp, input: &'t Tensor, kernel: Option<&'t Tensor>) -> Result<Self> {
+    pub(super) fn bind(
+        op: &'t GconvOp,
+        input: &'t Tensor,
+        kernel: Option<&'t Tensor>,
+    ) -> Result<Self> {
         let nd = op.dims.len();
 
         // Expected per-dimension extents (Table 3).
@@ -272,7 +391,7 @@ impl<'t> Plan<'t> {
         let need_kernel = !matches!(op.main, MainOp::Pass);
         let ws = if need_kernel {
             let k = kernel.with_context(|| {
-                format!("{}: main operator {:?} needs a kernel operand", op.name, op.main)
+                format!("{}: main {:?} needs a kernel operand", op.name, op.main)
             })?;
             let kn: usize = ker_ext.iter().product();
             ensure!(
@@ -288,15 +407,29 @@ impl<'t> Plan<'t> {
             None
         };
 
-        // Validate LUT names up front so the hot loop is infallible.
-        if let PreOp::Lut(name) = op.pre {
-            ensure!(lut_known(name), "{}: unknown pre LUT {name:?}", op.name);
-        }
-        if let PostOp::Lut(name) = op.post {
-            ensure!(lut_known(name), "{}: unknown post LUT {name:?}", op.name);
-        }
+        // Resolve the scalar operators up front so the hot loops are
+        // infallible and never string-match (unknown LUT names are bind
+        // errors, not evaluation panics).
+        let pre = match op.pre {
+            PreOp::None => PreEval::None,
+            PreOp::Square => PreEval::Square,
+            PreOp::Mul(c) => PreEval::Mul(c),
+            PreOp::Lut(name) => match LutFn::resolve(name) {
+                Some(f) => PreEval::Lut(f),
+                None => bail!("{}: unknown pre LUT {name:?}", op.name),
+            },
+        };
+        let post = match op.post {
+            PostOp::None => PostEval::None,
+            PostOp::Mul(c) => PostEval::Mul(c),
+            PostOp::Lut(name) => match LutFn::resolve(name) {
+                Some(f) => PostEval::Lut(f),
+                None => bail!("{}: unknown post LUT {name:?}", op.name),
+            },
+        };
 
-        let red_total: usize = op.dims.iter().map(|&(_, p)| p.nks).product::<usize>().max(1);
+        let nks: Vec<usize> = op.dims.iter().map(|&(_, p)| p.nks).collect();
+        let red_total = nks.iter().product::<usize>().max(1);
         ensure!(
             op.reduce != ReduceOp::None || red_total == 1,
             "{}: reduce None with a non-trivial Nks loop ({red_total} steps)",
@@ -306,13 +439,13 @@ impl<'t> Plan<'t> {
         let out_strides = row_major_strides(&out_ext);
         let in_strides = row_major_strides(&in_full);
         let ker_strides = row_major_strides(&ker_ext);
-        let nks: Vec<usize> = op.dims.iter().map(|&(_, p)| p.nks).collect();
         let red_strides = row_major_strides(&nks);
 
         let dims: Vec<LoopDim> = (0..nd)
             .map(|i| {
                 let p = op.dims[i].1;
                 LoopDim {
+                    ng: p.ng,
                     nop: p.nop,
                     nopc: p.nopc,
                     nks: p.nks,
@@ -331,14 +464,44 @@ impl<'t> Plan<'t> {
 
         let out_total: usize = out_ext.iter().product();
         let out_dims = if nd == 0 { vec![1] } else { out_ext };
-        Ok(Plan { op, dims, out_dims, out_total, red_total, xs: input.data(), ws })
+        Ok(Plan {
+            op,
+            pre,
+            post,
+            dims,
+            out_dims,
+            out_total,
+            red_total,
+            xs: input.data(),
+            ws,
+        })
     }
 
-    /// Evaluate output element `o` (flat row-major index).
+    /// Which execution tier `eval_in` picks for this plan: the dense
+    /// dot/GEMM path for `Mul`+`Add` reductions long enough to amortize
+    /// panel packing, the odometer path for every other nest, and the
+    /// naive oracle when forced (or for degenerate 0-dimension plans).
+    pub(super) fn tier(&self, force_naive: bool) -> KernelTier {
+        if force_naive || self.dims.is_empty() {
+            return KernelTier::Naive;
+        }
+        let gemm = self.op.main == MainOp::Mul
+            && self.op.reduce == ReduceOp::Add
+            && self.ws.is_some()
+            && self.red_total >= GEMM_MIN_REDUCTION;
+        if gemm {
+            return KernelTier::Gemm;
+        }
+        KernelTier::Odometer
+    }
+
+    /// Evaluate output element `o` (flat row-major index) — the naive
+    /// reference oracle: per-element div/mod coordinate decomposition
+    /// and per-step stride recomputation. The fast tiers in
+    /// `super::kernels` must match it bit-for-bit.
     #[inline]
-    fn eval_one(&self, o: usize) -> f32 {
+    pub(super) fn eval_one(&self, o: usize) -> f32 {
         // Decompose the output coordinate per dimension.
-        const MAX_DIMS: usize = 8;
         debug_assert!(self.dims.len() <= MAX_DIMS);
         let mut in_base = [0usize; MAX_DIMS]; // group offset (elements)
         let mut pos0 = [0i64; MAX_DIMS]; // window start within the group
@@ -355,7 +518,10 @@ impl<'t> Plan<'t> {
         }
 
         let reduce = self.op.reduce;
-        let mut acc: f64 = if reduce == ReduceOp::Max { f64::NEG_INFINITY } else { 0.0 };
+        let mut acc: f64 = match reduce {
+            ReduceOp::Max => f64::NEG_INFINITY,
+            _ => 0.0,
+        };
         let mut any = false;
         for r in 0..self.red_total {
             let mut x_idx = 0usize;
@@ -374,8 +540,11 @@ impl<'t> Plan<'t> {
             if oob && reduce == ReduceOp::Max {
                 continue; // max pooling ignores padding
             }
-            let x = if oob { 0.0 } else { self.xs[x_idx] };
-            let a = pre_apply(self.op.pre, x);
+            let mut x = 0.0;
+            if !oob {
+                x = self.xs[x_idx];
+            }
+            let a = self.pre.apply(x);
             let m = match self.ws {
                 Some(ws) => main_apply(self.op.main, a, ws[w_idx]),
                 None => main_apply(self.op.main, a, 0.0),
@@ -390,41 +559,84 @@ impl<'t> Plan<'t> {
         if !any {
             acc = 0.0; // fully padded window (degenerate BP edge)
         }
-        post_apply(self.op.post, acc as f32)
+        self.post.apply(acc as f32)
     }
 }
 
-/// Evaluate one GCONV over concrete tensors.
+/// Evaluate one GCONV over concrete tensors, dispatching to the fastest
+/// applicable execution tier (see `super::kernels`).
 ///
 /// `input` must cover the op's expected input extents (Table 3); larger
 /// extents along sliding-window dimensions are accepted (see the module
 /// docs). `kernel` is required exactly when the `main` operator consumes
 /// a kernel operand (i.e. it is not [`MainOp::Pass`]).
 ///
-/// The reduction accumulates in `f64` regardless of reduce operator, so
-/// long `Add` chains (e.g. FC layers reducing over thousands of inputs)
-/// keep well below the 1e-4 tolerance the golden tests pin.
+/// Every tier accumulates in `f64` in the same reduction order, so long
+/// `Add` chains (e.g. FC layers reducing over thousands of inputs) keep
+/// well below the 1e-4 tolerance the golden tests pin — and all tiers
+/// produce bit-identical results.
 ///
 /// Output extents are `Ng·Nop·Nopc` per dimension, in the op's dimension
 /// order. Independent output elements are computed in parallel with
 /// rayon.
 pub fn eval_gconv(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<Tensor> {
-    ensure!(op.dims.len() <= 8, "{}: more than 8 dimensions", op.name);
+    eval_in(op, input, kernel, None, false)
+}
+
+/// Evaluate one GCONV with the naive per-element oracle, bypassing the
+/// fast tiers. Retained for differential testing: the property tests
+/// assert the fast paths match this bit-for-bit.
+pub fn eval_gconv_naive(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<Tensor> {
+    eval_in(op, input, kernel, None, true)
+}
+
+/// Which execution tier [`eval_gconv`] would pick for this op/tensor
+/// binding (exposed for tests, benches and instrumentation).
+pub fn plan_tier(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<KernelTier> {
+    ensure!(
+        op.dims.len() <= MAX_DIMS,
+        "{}: more than {MAX_DIMS} dimensions",
+        op.name
+    );
+    let plan = Plan::bind(op, input, kernel)?;
+    Ok(plan.tier(false))
+}
+
+/// Full-control evaluation entry point: optional buffer pool for the
+/// output allocation, optional forcing of the naive oracle tier.
+pub(super) fn eval_in(
+    op: &GconvOp,
+    input: &Tensor,
+    kernel: Option<&Tensor>,
+    pool: Option<&BufferPool>,
+    force_naive: bool,
+) -> Result<Tensor> {
+    ensure!(
+        op.dims.len() <= MAX_DIMS,
+        "{}: more than {MAX_DIMS} dimensions",
+        op.name
+    );
     let plan = Plan::bind(op, input, kernel)?;
     if plan.out_total == 0 {
         bail!("{}: empty output", op.name);
     }
-    let data: Vec<f32> = (0..plan.out_total)
-        .into_par_iter()
-        .with_min_len(2048)
-        .map(|o| plan.eval_one(o))
-        .collect();
+    let mut data = match pool {
+        Some(p) => p.take(plan.out_total),
+        None => vec![0.0; plan.out_total],
+    };
+    debug_assert_eq!(data.len(), plan.out_total);
+    match plan.tier(force_naive) {
+        KernelTier::Gemm => kernels::eval_gemm(&plan, &mut data),
+        KernelTier::Odometer => kernels::eval_odometer(&plan, &mut data),
+        KernelTier::Naive => kernels::eval_naive(&plan, &mut data),
+    }
     Tensor::new(&plan.out_dims, data)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use crate::gconv::op::{DataRef, DimParams};
     use crate::ir::Dim;
 
@@ -473,12 +685,8 @@ mod tests {
     #[test]
     fn one_d_sliding_window_convolves() {
         // Nopc=3, Nks=2, s=1: y[i] = x[i]·w[0] + x[i+1]·w[1].
-        let op = GconvOp::conv(
-            "conv1d",
-            vec![(Dim::W, DimParams::window(3, 2, 1, 0))],
-            xref(),
-            wref(),
-        );
+        let dims = vec![(Dim::W, DimParams::window(3, 2, 1, 0))];
+        let op = GconvOp::conv("conv1d", dims, xref(), wref());
         let x = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         let w = Tensor::new(&[2], vec![10.0, 1.0]).unwrap();
         let y = eval_gconv(&op, &x, Some(&w)).unwrap();
@@ -489,12 +697,8 @@ mod tests {
     fn zero_padding_contributes_zero_under_add() {
         // Nopc=3, Nks=3, s=1, ps=1 over 3 inputs, all-ones kernel:
         // y = [x0+x1, x0+x1+x2, x1+x2].
-        let op = GconvOp::conv(
-            "pad",
-            vec![(Dim::W, DimParams::window(3, 3, 1, 1))],
-            xref(),
-            wref(),
-        );
+        let dims = vec![(Dim::W, DimParams::window(3, 3, 1, 1))];
+        let op = GconvOp::conv("pad", dims, xref(), wref());
         let x = Tensor::new(&[3], vec![1.0, 2.0, 4.0]).unwrap();
         let w = Tensor::filled(&[3], 1.0);
         let y = eval_gconv(&op, &x, Some(&w)).unwrap();
@@ -524,14 +728,11 @@ mod tests {
     fn groups_isolate_kernels_and_inputs() {
         // Ng=2 over 4 inputs, Nks=2 kernel covering each group:
         // y[g] = x[2g]·w[2g] + x[2g+1]·w[2g+1].
-        let op = GconvOp::conv(
-            "grouped",
-            vec![(Dim::C, DimParams { ng: 2, nks: 2, ..Default::default() })],
-            xref(),
-            wref(),
-        );
+        let dims = vec![(Dim::C, DimParams::g_ks(2, 2))];
+        let op = GconvOp::conv("grouped", dims, xref(), wref());
         let x = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
-        let w = Tensor::new(&[4], vec![1.0, 10.0, 100.0, 1000.0]).unwrap();
+        let wdata = vec![1.0, 10.0, 100.0, 1000.0];
+        let w = Tensor::new(&[4], wdata).unwrap();
         let y = eval_gconv(&op, &x, Some(&w)).unwrap();
         assert_eq!(y.data(), &[21.0, 4300.0]);
     }
@@ -539,14 +740,11 @@ mod tests {
     #[test]
     fn nop_applies_parallel_kernels_to_shared_input() {
         // Nop=2, Nks=3: two dot products over the same input.
-        let op = GconvOp::conv(
-            "fc",
-            vec![(Dim::C, DimParams { nop: 2, nks: 3, ..Default::default() })],
-            xref(),
-            wref(),
-        );
+        let dims = vec![(Dim::C, DimParams::op_ks(2, 3))];
+        let op = GconvOp::conv("fc", dims, xref(), wref());
         let x = Tensor::new(&[3], vec![1.0, 2.0, 3.0]).unwrap();
-        let w = Tensor::new(&[2, 3], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let wdata = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let w = Tensor::new(&[2, 3], wdata).unwrap();
         let y = eval_gconv(&op, &x, Some(&w)).unwrap();
         assert_eq!(y.data(), &[1.0, 6.0]);
     }
@@ -592,14 +790,16 @@ mod tests {
 
     #[test]
     fn missing_kernel_is_rejected() {
-        let op = GconvOp::conv("needsw", vec![(Dim::C, DimParams::ks(2))], xref(), wref());
+        let dims = vec![(Dim::C, DimParams::ks(2))];
+        let op = GconvOp::conv("needsw", dims, xref(), wref());
         let x = Tensor::zeros(&[2]);
         assert!(eval_gconv(&op, &x, None).is_err());
     }
 
     #[test]
     fn wrong_kernel_size_is_rejected() {
-        let op = GconvOp::conv("badw", vec![(Dim::C, DimParams::ks(2))], xref(), wref());
+        let dims = vec![(Dim::C, DimParams::ks(2))];
+        let op = GconvOp::conv("badw", dims, xref(), wref());
         let x = Tensor::zeros(&[2]);
         let w = Tensor::zeros(&[3]);
         assert!(eval_gconv(&op, &x, Some(&w)).is_err());
@@ -642,12 +842,24 @@ mod tests {
 
     #[test]
     fn lut_definitions_are_sane() {
-        assert_eq!(lut_apply("relu", -3.0), 0.0);
-        assert!((lut_apply("sigmoid", 0.0) - 0.5).abs() < 1e-7);
-        assert!((lut_apply("recip", 4.0) - 0.25).abs() < 1e-7);
-        assert!((lut_apply("rsqrt_eps", 1.0) - 1.0 / (1.0f32 + BN_EPS).sqrt()).abs() < 1e-7);
-        assert_eq!(lut_apply("fused", 1.25), 1.25);
+        assert_eq!(lut_apply("relu", -3.0).unwrap(), 0.0);
+        assert!((lut_apply("sigmoid", 0.0).unwrap() - 0.5).abs() < 1e-7);
+        assert!((lut_apply("recip", 4.0).unwrap() - 0.25).abs() < 1e-7);
+        let rsqrt = lut_apply("rsqrt_eps", 1.0).unwrap();
+        assert!((rsqrt - 1.0 / (1.0f32 + BN_EPS).sqrt()).abs() < 1e-7);
+        assert_eq!(lut_apply("fused", 1.25).unwrap(), 1.25);
         assert!(lut_known("exp") && !lut_known("nope"));
+    }
+
+    #[test]
+    fn lut_known_stays_in_sync_with_resolution() {
+        for f in LutFn::ALL {
+            assert_eq!(LutFn::resolve(f.name()), Some(f));
+            assert!(lut_known(f.name()), "{} must be known", f.name());
+            assert!(lut_apply(f.name(), 0.5).is_ok());
+        }
+        assert!(!lut_known("warp_drive"));
+        assert!(lut_apply("warp_drive", 0.5).is_err());
     }
 
     #[test]
@@ -666,21 +878,33 @@ mod tests {
     }
 
     #[test]
+    fn unknown_pre_lut_rejected_at_bind() {
+        let op = GconvOp {
+            name: "bad".into(),
+            dims: vec![(Dim::C, DimParams::opc(2))],
+            pre: PreOp::Lut("tachyon"),
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: xref(),
+            kernel: None,
+        };
+        assert!(eval_gconv(&op, &Tensor::zeros(&[2]), None).is_err());
+    }
+
+    #[test]
     fn multi_dim_conv_matches_hand_computation() {
         // 2 output channels, 1 input channel, 2×2 kernels over 3×3.
-        let op = GconvOp::conv(
-            "conv2d",
-            vec![
-                (Dim::C, DimParams { nop: 2, nks: 1, ..Default::default() }),
-                (Dim::H, DimParams::window(2, 2, 1, 0)),
-                (Dim::W, DimParams::window(2, 2, 1, 0)),
-            ],
-            xref(),
-            wref(),
-        );
+        let dims = vec![
+            (Dim::C, DimParams::op_ks(2, 1)),
+            (Dim::H, DimParams::window(2, 2, 1, 0)),
+            (Dim::W, DimParams::window(2, 2, 1, 0)),
+        ];
+        let op = GconvOp::conv("conv2d", dims, xref(), wref());
         let x = Tensor::from_fn(&[1, 3, 3], |i| (i + 1) as f32);
         // w0 = identity-diagonal, w1 = all ones.
-        let w = Tensor::new(&[2, 2, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0]).unwrap();
+        let wdata = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let w = Tensor::new(&[2, 2, 2], wdata).unwrap();
         let y = eval_gconv(&op, &x, Some(&w)).unwrap();
         assert_eq!(y.dims(), &[2, 2, 2]);
         assert_eq!(y.data(), &[6.0, 8.0, 12.0, 14.0, 12.0, 16.0, 24.0, 28.0]);

@@ -1,0 +1,572 @@
+//! Fast-path execution kernels for the native GCONV interpreter.
+//!
+//! `Plan::bind` (in `super::interp`) validates shapes and resolves the
+//! scalar operators; this module decides *how* a bound plan is
+//! evaluated. Three tiers implement the same loop nest:
+//!
+//! * [`KernelTier::Gemm`] — `Mul`+`Add` GCONVs with a non-trivial
+//!   reduction (conv, FC, WG: the chain's FLOP-dominant ops) lower to an
+//!   im2col-style packed panel and a cache-blocked dot microkernel over
+//!   contiguous `&[f32]` slices. Per group `g`, the op is the GEMM
+//!   `out[op][opc] = Σ_k wpack[g·op][k] · panel[k][opc]`: packing pays
+//!   the per-element index arithmetic once per *column* and amortizes it
+//!   over every kernel row, and the per-`k` row walk is stride-1 across
+//!   columns so the autovectorizer can chew on it.
+//! * [`KernelTier::Odometer`] — every other nest replaces the oracle's
+//!   per-element div/mod coordinate decomposition and per-step stride
+//!   recomputation with odometer-carry iteration over output
+//!   coordinates plus a precomputed reduction-step table.
+//! * [`KernelTier::Naive`] — the reference oracle (`Plan::eval_one`),
+//!   kept for differential testing and degenerate 0-dimension plans.
+//!
+//! Every tier reproduces the oracle **bit-for-bit**: the same `f32`
+//! operator applications, the same sequential `f64` accumulation, the
+//! same reduction order. The property tests in
+//! `rust/tests/native_exec.rs` pin this across randomized shapes.
+
+use rayon::prelude::*;
+
+use crate::gconv::op::ReduceOp;
+
+use super::interp::{main_apply, MAX_DIMS, Plan};
+
+/// Reduction length below which GEMM panel packing cannot amortize its
+/// per-column index arithmetic and the odometer path wins.
+pub const GEMM_MIN_REDUCTION: usize = 8;
+
+/// Output elements per parallel work item on the element-wise tiers.
+const PAR_CHUNK: usize = 2048;
+
+/// Columns per packed GEMM panel block. The panel is `red_total × NC`
+/// `f32`s — small enough to stay cache-resident while every kernel row
+/// streams over it; the `f64` accumulator tile is `NC` wide.
+const NC: usize = 64;
+
+/// How a bound plan is evaluated (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Packed-panel blocked dot/GEMM fast path.
+    Gemm,
+    /// Incremental odometer iteration (generic fast path).
+    Odometer,
+    /// Per-element reference oracle.
+    Naive,
+}
+
+/// One step of the flattened reduction: per-dimension `ks` digits plus
+/// the input/kernel offsets they contribute. `x_off` is relative to an
+/// output element's window base (which may start in the padding, so the
+/// base is signed; the sum is only used when all dims are in bounds).
+struct RedStep {
+    x_off: i64,
+    w_off: usize,
+    ks: [u32; MAX_DIMS],
+}
+
+/// The reduction-step table shared by both fast paths: one entry per
+/// flattened `Nks` step, in the oracle's row-major reduction order.
+fn red_steps(plan: &Plan) -> Vec<RedStep> {
+    let mut steps = Vec::with_capacity(plan.red_total);
+    for r in 0..plan.red_total {
+        let mut st = RedStep {
+            x_off: 0,
+            w_off: 0,
+            ks: [0; MAX_DIMS],
+        };
+        for (i, d) in plan.dims.iter().enumerate() {
+            let k = (r / d.red_stride) % d.nks;
+            st.ks[i] = k as u32;
+            st.x_off += (k * d.in_stride) as i64;
+            st.w_off += k * d.ker_stride;
+        }
+        steps.push(st);
+    }
+    steps
+}
+
+/// True when no window position of the plan can fall outside the bound
+/// input (no padding, input covers every window): the per-step bounds
+/// check can be skipped entirely.
+fn never_oob(plan: &Plan) -> bool {
+    for d in &plan.dims {
+        if d.ps != 0 || (d.nopc - 1) * d.s + d.nks > d.in_actual {
+            return false;
+        }
+    }
+    true
+}
+
+/// Per-dimension output odometer: the decomposed `(g, op, opc)` output
+/// coordinate plus the flattened window bases derived from it, advanced
+/// one output element at a time with carry — no div/mod per element,
+/// and the bases are maintained incrementally so an element-wise entry
+/// costs O(1) index work instead of a per-dimension loop.
+struct OutState {
+    g: [usize; MAX_DIMS],
+    kop: [usize; MAX_DIMS],
+    opc: [usize; MAX_DIMS],
+    in_base: [usize; MAX_DIMS],
+    pos0: [i64; MAX_DIMS],
+    ker_base: [usize; MAX_DIMS],
+    /// `Σ_i (in_base[i] + pos0[i]) · in_stride[i]` — may be negative
+    /// while the window starts in padding.
+    x_base: i64,
+    /// `Σ_i ker_base[i] · ker_stride[i]`.
+    w_base: usize,
+}
+
+impl OutState {
+    /// Decompose flat output index `o` — the oracle's div/mod split,
+    /// done once per parallel chunk instead of once per element.
+    fn seed(plan: &Plan, o: usize) -> OutState {
+        let mut st = OutState {
+            g: [0; MAX_DIMS],
+            kop: [0; MAX_DIMS],
+            opc: [0; MAX_DIMS],
+            in_base: [0; MAX_DIMS],
+            pos0: [0; MAX_DIMS],
+            ker_base: [0; MAX_DIMS],
+            x_base: 0,
+            w_base: 0,
+        };
+        for (i, d) in plan.dims.iter().enumerate() {
+            let oc = (o / d.out_stride) % d.out_ext;
+            let g = oc / d.npc;
+            let r = oc % d.npc;
+            let kop = r / d.nopc;
+            let opc = r % d.nopc;
+            st.g[i] = g;
+            st.kop[i] = kop;
+            st.opc[i] = opc;
+            st.in_base[i] = g * d.in_actual;
+            st.pos0[i] = (opc * d.s) as i64 - d.ps as i64;
+            st.ker_base[i] = (g * d.nop + kop) * d.nks;
+            st.x_base += (st.in_base[i] as i64 + st.pos0[i]) * d.in_stride as i64;
+            st.w_base += st.ker_base[i] * d.ker_stride;
+        }
+        st
+    }
+
+    /// Advance to the next output element in row-major order, updating
+    /// only the dimensions whose digits change (odometer carry) and
+    /// adjusting the flattened bases by the matching deltas.
+    fn advance(&mut self, plan: &Plan) {
+        let mut i = plan.dims.len();
+        while i > 0 {
+            i -= 1;
+            let d = &plan.dims[i];
+            self.opc[i] += 1;
+            if self.opc[i] < d.nopc {
+                self.pos0[i] += d.s as i64;
+                self.x_base += (d.s * d.in_stride) as i64;
+                return;
+            }
+            self.opc[i] = 0;
+            self.pos0[i] = -(d.ps as i64);
+            self.x_base -= ((d.nopc - 1) * d.s * d.in_stride) as i64;
+            self.kop[i] += 1;
+            if self.kop[i] < d.nop {
+                self.ker_base[i] += d.nks;
+                self.w_base += d.nks * d.ker_stride;
+                return;
+            }
+            self.kop[i] = 0;
+            self.g[i] += 1;
+            if self.g[i] < d.ng {
+                self.in_base[i] += d.in_actual;
+                self.x_base += (d.in_actual * d.in_stride) as i64;
+                // ker_base goes from (g·nop + nop−1)·nks to
+                // (g+1)·nop·nks: the combined kop-reset + group-step
+                // delta is exactly +nks.
+                self.ker_base[i] = self.g[i] * d.nop * d.nks;
+                self.w_base += d.nks * d.ker_stride;
+                return;
+            }
+            self.g[i] = 0;
+            self.x_base -= ((d.ng - 1) * d.in_actual * d.in_stride) as i64;
+            self.in_base[i] = 0;
+            // ker_base was (ng·nop − 1)·nks (last kernel of the last
+            // group) and resets to 0.
+            self.w_base -= (d.ng * d.nop - 1) * d.nks * d.ker_stride;
+            self.ker_base[i] = 0;
+            // carry into dimension i − 1
+        }
+    }
+
+    /// Flattened window base offsets of the current output element.
+    fn bases(&self) -> (i64, usize) {
+        (self.x_base, self.w_base)
+    }
+}
+
+/// Evaluate one output element from its odometer state: the oracle's
+/// reduction loop with table-resolved offsets (bit-identical results,
+/// no div/mod).
+fn eval_steps(plan: &Plan, st: &OutState, steps: &[RedStep], safe: bool) -> f32 {
+    let (x_base, w_base) = st.bases();
+    let reduce = plan.op.reduce;
+    let main = plan.op.main;
+    let mut acc: f64 = match reduce {
+        ReduceOp::Max => f64::NEG_INFINITY,
+        _ => 0.0,
+    };
+    let mut any = false;
+    for step in steps {
+        let mut oob = false;
+        if !safe {
+            for (i, d) in plan.dims.iter().enumerate() {
+                let pos = st.pos0[i] + i64::from(step.ks[i]);
+                if pos < 0 || pos >= d.in_actual as i64 {
+                    oob = true;
+                    break;
+                }
+            }
+        }
+        if oob && reduce == ReduceOp::Max {
+            continue; // max pooling ignores padding
+        }
+        let mut x = 0.0;
+        if !oob {
+            x = plan.xs[(x_base + step.x_off) as usize];
+        }
+        let a = plan.pre.apply(x);
+        let m = match plan.ws {
+            Some(ws) => main_apply(main, a, ws[w_base + step.w_off]),
+            None => main_apply(main, a, 0.0),
+        };
+        match reduce {
+            ReduceOp::Add => acc += f64::from(m),
+            ReduceOp::Max => acc = acc.max(f64::from(m)),
+            ReduceOp::None => acc = f64::from(m),
+        }
+        any = true;
+    }
+    if !any {
+        acc = 0.0; // fully padded window (degenerate BP edge)
+    }
+    plan.post.apply(acc as f32)
+}
+
+/// Generic fast path: odometer-carry iteration over output coordinates
+/// plus the precomputed reduction-step table — no per-element div/mod,
+/// no per-step stride recomputation, no string matching.
+pub(super) fn eval_odometer(plan: &Plan, out: &mut [f32]) {
+    let steps = red_steps(plan);
+    let safe = never_oob(plan);
+    let chunks = out.par_chunks_mut(PAR_CHUNK).enumerate();
+    chunks.for_each(|(ci, chunk)| {
+        let mut st = OutState::seed(plan, ci * PAR_CHUNK);
+        for slot in chunk.iter_mut() {
+            *slot = eval_steps(plan, &st, &steps, safe);
+            st.advance(plan);
+        }
+    });
+}
+
+/// Reference oracle tier: per-element `Plan::eval_one` (div/mod
+/// coordinate decomposition per output, per-step stride recomputation).
+pub(super) fn eval_naive(plan: &Plan, out: &mut [f32]) {
+    let chunks = out.par_chunks_mut(PAR_CHUNK).enumerate();
+    chunks.for_each(|(ci, chunk)| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = plan.eval_one(ci * PAR_CHUNK + j);
+        }
+    });
+}
+
+/// Raw output pointer shared across GEMM jobs. Each job writes a
+/// disjoint set of output indices (see the SAFETY note at the write
+/// site), so unsynchronized parallel writes are sound.
+struct OutPtr(*mut f32);
+
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Dense dot/GEMM fast path for `Mul`+`Add` plans with a kernel operand.
+///
+/// Kernel rows are packed once into contiguous length-`K` slices
+/// (`K = red_total`). Column blocks of at most [`NC`] outputs pack their
+/// input windows — `pre` applied, padding resolved to `pre(0)` exactly
+/// as the oracle does — into a `K × nc` panel stored `k`-major, so the
+/// inner loop `acc[c] += panel[k][c] · w[k]` is a stride-1 rank-1 update
+/// the autovectorizer handles well. Accumulation stays sequential `f64`
+/// in reduction order: results are bit-identical to the oracle while
+/// per-element index arithmetic is amortized over all kernel rows.
+pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
+    let steps = red_steps(plan);
+    let safe = never_oob(plan);
+    let k_total = plan.red_total;
+
+    // Flattened group / kernel-row / column spaces and their strides.
+    let ngs: Vec<usize> = plan.dims.iter().map(|d| d.ng).collect();
+    let nops: Vec<usize> = plan.dims.iter().map(|d| d.nop).collect();
+    let nopcs: Vec<usize> = plan.dims.iter().map(|d| d.nopc).collect();
+    let g_stride = super::tensor::row_major_strides(&ngs);
+    let r_stride = super::tensor::row_major_strides(&nops);
+    let c_stride = super::tensor::row_major_strides(&nopcs);
+    let n_groups: usize = ngs.iter().product();
+    let n_rows: usize = nops.iter().product();
+    let n_cols: usize = nopcs.iter().product();
+
+    // Pack every kernel row once: wpack[(g·n_rows + op)·K + k]. Row
+    // packing is cheap next to the GEMM itself and makes each row a
+    // contiguous slice regardless of the op's kernel layout.
+    let ws = plan.ws.expect("gemm tier requires a kernel operand");
+    let mut wpack = vec![0.0f32; n_groups * n_rows * k_total];
+    for g in 0..n_groups {
+        for op in 0..n_rows {
+            let mut w_base = 0usize;
+            for (i, d) in plan.dims.iter().enumerate() {
+                let gi = (g / g_stride[i]) % d.ng;
+                let oi = (op / r_stride[i]) % d.nop;
+                w_base += (gi * d.nop + oi) * d.nks * d.ker_stride;
+            }
+            let row = &mut wpack[(g * n_rows + op) * k_total..][..k_total];
+            for (k, step) in steps.iter().enumerate() {
+                row[k] = ws[w_base + step.w_off];
+            }
+        }
+    }
+
+    // One job per (group, column block); jobs write disjoint outputs.
+    let mut jobs = Vec::new();
+    for g in 0..n_groups {
+        let mut c0 = 0;
+        while c0 < n_cols {
+            jobs.push((g, c0));
+            c0 += NC;
+        }
+    }
+
+    let out_ptr = OutPtr(out.as_mut_ptr());
+    let par_jobs = jobs.par_iter();
+    par_jobs.for_each(|&(g, c0)| {
+        let nc = NC.min(n_cols - c0);
+
+        // Output offsets, window bases and per-dim window starts of the
+        // block's columns (the per-column index arithmetic paid once and
+        // amortized over every kernel row below).
+        let mut col_off = [0usize; NC];
+        let mut x_bases = [0i64; NC];
+        let mut pos0 = [[0i64; MAX_DIMS]; NC];
+        for c in 0..nc {
+            let col = c0 + c;
+            let mut off = 0usize;
+            let mut xb = 0i64;
+            for (i, d) in plan.dims.iter().enumerate() {
+                let gi = (g / g_stride[i]) % d.ng;
+                let oi = (col / c_stride[i]) % d.nopc;
+                let p0 = (oi * d.s) as i64 - d.ps as i64;
+                off += oi * d.out_stride;
+                xb += ((gi * d.in_actual) as i64 + p0) * d.in_stride as i64;
+                pos0[c][i] = p0;
+            }
+            col_off[c] = off;
+            x_bases[c] = xb;
+        }
+
+        // Pack the panel k-major: panel[k·nc + c] = pre(x or 0).
+        let mut panel = vec![0.0f32; k_total * nc];
+        for c in 0..nc {
+            for (k, step) in steps.iter().enumerate() {
+                let mut oob = false;
+                if !safe {
+                    for (i, d) in plan.dims.iter().enumerate() {
+                        let pos = pos0[c][i] + i64::from(step.ks[i]);
+                        if pos < 0 || pos >= d.in_actual as i64 {
+                            oob = true;
+                            break;
+                        }
+                    }
+                }
+                let mut x = 0.0;
+                if !oob {
+                    x = plan.xs[(x_bases[c] + step.x_off) as usize];
+                }
+                panel[k * nc + c] = plan.pre.apply(x);
+            }
+        }
+
+        // Every kernel row of this group streams over the panel. The
+        // row loop is itself parallel so few-column plans (FC at small
+        // batch: one group, one column) still use every core; rayon's
+        // work stealing only splits when outer jobs leave cores idle.
+        let rows = (0..n_rows).into_par_iter().with_min_len(8);
+        rows.for_each(|op| {
+            let mut row_base = 0usize;
+            for (i, d) in plan.dims.iter().enumerate() {
+                let gi = (g / g_stride[i]) % d.ng;
+                let oi = (op / r_stride[i]) % d.nop;
+                row_base += (gi * d.nop + oi) * d.nopc * d.out_stride;
+            }
+            let wrow = &wpack[(g * n_rows + op) * k_total..][..k_total];
+            let mut acc = [0.0f64; NC];
+            for (k, &w) in wrow.iter().enumerate() {
+                let prow = &panel[k * nc..k * nc + nc];
+                for (a, &p) in acc[..nc].iter_mut().zip(prow) {
+                    *a += f64::from(p * w);
+                }
+            }
+            for c in 0..nc {
+                let v = plan.post.apply(acc[c] as f32);
+                // SAFETY: output index = Σ_i ((g_i·nop_i + op_i)·nopc_i
+                // + opc_i)·out_stride_i is the row-major mixed-radix
+                // flattening of (g, op, opc) — a bijection onto
+                // 0..out_total; jobs partition the (group, column)
+                // space disjointly and row tasks within a job partition
+                // the row space, so every output index is written by
+                // exactly one task exactly once, within bounds.
+                unsafe {
+                    *out_ptr.0.add(row_base + col_off[c]) = v;
+                }
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::exec::interp::{eval_gconv, eval_gconv_naive, plan_tier};
+    use crate::exec::tensor::Tensor;
+    use crate::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp};
+    use crate::ir::Dim;
+
+    /// A conv-shaped op whose reduction (3×3 = 9 steps) takes the GEMM
+    /// tier: C[Nop:2, Nks:3] × W[window 4, ks 3, s 1, ps 1].
+    fn conv_case() -> (GconvOp, Tensor, Tensor) {
+        let dims = vec![
+            (Dim::C, DimParams::op_ks(2, 3)),
+            (Dim::W, DimParams::window(4, 3, 1, 1)),
+        ];
+        let x = DataRef::External("x".into());
+        let w = DataRef::Weights("w".into());
+        let op = GconvOp::conv("k", dims, x, w);
+        let xs = Tensor::rand(&[3, 4], 7, 1.0);
+        let ws = Tensor::rand(&[6, 3], 8, 1.0);
+        (op, xs, ws)
+    }
+
+    #[test]
+    fn conv_plan_takes_the_gemm_tier() {
+        let (op, xs, ws) = conv_case();
+        let tier = plan_tier(&op, &xs, Some(&ws)).unwrap();
+        assert_eq!(tier, KernelTier::Gemm);
+    }
+
+    #[test]
+    fn short_reductions_take_the_odometer_tier() {
+        let (mut op, xs, _ws) = conv_case();
+        op.dims[0].1 = DimParams::op_ks(2, 1); // 1×3 = 3 steps < minimum
+        let xs2 = Tensor::rand(&[1, xs.dims()[1]], 9, 1.0);
+        let ws2 = Tensor::rand(&[2, 3], 10, 1.0);
+        let tier = plan_tier(&op, &xs2, Some(&ws2)).unwrap();
+        assert_eq!(tier, KernelTier::Odometer);
+    }
+
+    #[test]
+    fn kernel_less_ops_take_the_odometer_tier() {
+        let op = GconvOp {
+            name: "pool".into(),
+            dims: vec![(Dim::W, DimParams::window(2, 2, 2, 0))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::Max,
+            post: PostOp::None,
+            input: DataRef::External("x".into()),
+            kernel: None,
+        };
+        let xs = Tensor::rand(&[4], 11, 1.0);
+        let tier = plan_tier(&op, &xs, None).unwrap();
+        assert_eq!(tier, KernelTier::Odometer);
+    }
+
+    #[test]
+    fn gemm_path_matches_oracle_bitwise() {
+        let (op, xs, ws) = conv_case();
+        let fast = eval_gconv(&op, &xs, Some(&ws)).unwrap();
+        let naive = eval_gconv_naive(&op, &xs, Some(&ws)).unwrap();
+        assert!(fast.bit_eq(&naive));
+    }
+
+    #[test]
+    fn red_steps_follow_the_oracle_order() {
+        let (op, xs, ws) = conv_case();
+        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
+        let steps = red_steps(&plan);
+        assert_eq!(steps.len(), 9);
+        assert_eq!(steps[0].ks[..2], [0, 0]);
+        assert_eq!(steps[1].ks[..2], [0, 1]);
+        assert_eq!(steps[3].ks[..2], [1, 0]);
+        assert_eq!(steps[8].ks[..2], [2, 2]);
+    }
+
+    fn assert_advance_matches_reseeding(plan: &Plan) {
+        let mut st = OutState::seed(plan, 0);
+        for o in 0..plan.out_total {
+            // `fresh` recomputes digits and bases from scratch; `st`
+            // reached the same element by incremental carries.
+            let fresh = OutState::seed(plan, o);
+            assert_eq!(st.pos0, fresh.pos0, "pos0 at output {o}");
+            assert_eq!(st.in_base, fresh.in_base, "in_base at output {o}");
+            assert_eq!(st.ker_base, fresh.ker_base, "ker_base at output {o}");
+            assert_eq!(st.bases(), fresh.bases(), "bases at output {o}");
+            st.advance(plan);
+        }
+    }
+
+    #[test]
+    fn odometer_advance_matches_reseeding() {
+        let (op, xs, ws) = conv_case();
+        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
+        assert_advance_matches_reseeding(&plan);
+    }
+
+    #[test]
+    fn odometer_advance_carries_through_groups() {
+        // Ng > 1 on both dims exercises the group-carry branch.
+        let cdim = DimParams {
+            ng: 2,
+            nop: 2,
+            nopc: 1,
+            nks: 2,
+            s: 1,
+            ps: 0,
+        };
+        let wdim = DimParams {
+            ng: 3,
+            nop: 1,
+            nopc: 2,
+            nks: 2,
+            s: 2,
+            ps: 1,
+        };
+        let dims = vec![(Dim::C, cdim), (Dim::W, wdim)];
+        let x = DataRef::External("x".into());
+        let w = DataRef::Weights("w".into());
+        let op = GconvOp::conv("grp", dims, x, w);
+        let xs = Tensor::rand(&op.input_extents(), 21, 1.0);
+        let ws = Tensor::rand(&op.kernel_extents(), 22, 1.0);
+        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
+        assert_advance_matches_reseeding(&plan);
+        let fast = eval_gconv(&op, &xs, Some(&ws)).unwrap();
+        let naive = eval_gconv_naive(&op, &xs, Some(&ws)).unwrap();
+        assert!(fast.bit_eq(&naive));
+    }
+
+    #[test]
+    fn never_oob_detects_padding() {
+        let (op, xs, ws) = conv_case();
+        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
+        assert!(!never_oob(&plan), "ps=1 window can leave the input");
+        let dims = vec![(Dim::W, DimParams::window(3, 2, 1, 0))];
+        let x = DataRef::External("x".into());
+        let w = DataRef::Weights("w".into());
+        let op2 = GconvOp::conv("nopad", dims, x, w);
+        let xs2 = Tensor::rand(&[4], 12, 1.0);
+        let ws2 = Tensor::rand(&[2], 13, 1.0);
+        let plan2 = Plan::bind(&op2, &xs2, Some(&ws2)).unwrap();
+        assert!(never_oob(&plan2));
+    }
+}

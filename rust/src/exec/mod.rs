@@ -2,21 +2,33 @@
 //! GCONV chains.
 //!
 //! The paper's thesis (§3) is that *every* CNN layer — forward and
-//! backward — reduces to a chain of general convolutions. This module is
-//! the executable ground truth for that claim inside the Rust crate
+//! backward — reduces to a chain of general convolutions, and (§5) that
+//! this one form can be processed *efficiently* end-to-end. This module
+//! is the executable ground truth for both claims inside the Rust crate
 //! itself: no Python, no XLA, no AOT artifacts.
 //!
 //! * [`tensor`] — a small owned row-major `f32` tensor.
-//! * [`interp`] — evaluates one [`crate::gconv::op::GconvOp`] by walking
-//!   its multi-dimensional `Ng`/`Nop`/`Nopc`/`Nks` loop nest (Eq. 1,
-//!   Fig. 4) and applying the four pluggable operators
+//! * [`interp`] — binds one [`crate::gconv::op::GconvOp`] to tensors
+//!   (shape validation, stride precomputation, LUT-name resolution) and
+//!   evaluates its multi-dimensional `Ng`/`Nop`/`Nopc`/`Nks` loop nest
+//!   (Eq. 1, Fig. 4) with the four pluggable operators
 //!   `pre`/`main`/`reduce`/`post` of §3.1 — enough to cover conv, FC,
 //!   pooling, BN, LRN, softmax and their BP/WG forms produced by
 //!   [`crate::gconv::lower::lower_network`].
+//! * `kernels` (internal) — the tiered executors behind [`eval_gconv`]:
+//!   a packed-panel dot/GEMM fast path for `Mul`+`Add` reductions
+//!   ([`KernelTier::Gemm`]), an odometer-indexed generic fast path
+//!   ([`KernelTier::Odometer`]), and the naive per-element oracle
+//!   ([`KernelTier::Naive`], reachable via [`eval_gconv_naive`]) kept
+//!   for differential testing. All tiers are bit-identical.
+//! * `pool` (internal impl, public [`BufferPool`]) — size-bucketed
+//!   recycling of intermediate buffers across chain levels and runs.
 //! * [`chain_exec`] — schedules a whole [`crate::gconv::GconvChain`]:
 //!   level-order over the producer/consumer DAG, independent entries and
-//!   output/batch slices in parallel via rayon, intermediate buffers
-//!   reference-counted and freed at last use.
+//!   output/batch slices in parallel via rayon, intermediates
+//!   `Arc`-shared, reference-counted and recycled at last use.
+//! * [`bench`] — the naive-vs-fast measurement harness behind
+//!   `cargo bench --bench native_exec` and `BENCH_native_exec.json`.
 //!
 //! The [`crate::coordinator`] exposes this engine as the default
 //! [`crate::coordinator::Backend`] behind its batching request API; the
@@ -35,10 +47,49 @@
 //! assert_eq!(report.outputs[0].elements(), 2 * 8 * 6 * 6);
 //! ```
 
+use anyhow::Result;
+
+pub mod bench;
 pub mod chain_exec;
 pub mod interp;
+mod kernels;
+mod pool;
 pub mod tensor;
 
 pub use chain_exec::{ChainExec, EntryRun, RunReport};
-pub use interp::{eval_gconv, lut_apply, lut_known};
+pub use interp::{eval_gconv, eval_gconv_naive, lut_apply, lut_known, plan_tier, LutFn};
+pub use kernels::{GEMM_MIN_REDUCTION, KernelTier};
+pub use pool::{BufferPool, PoolStats};
 pub use tensor::Tensor;
+
+/// Run `f` on a scoped rayon thread pool of `threads` workers
+/// (`threads == 0` keeps the process-global default pool). The CLI's and
+/// examples' `--threads` flag routes through this so bench numbers are
+/// reproducible on machines with different core counts.
+pub fn with_threads<R: Send>(threads: usize, f: impl FnOnce() -> R + Send) -> Result<R> {
+    if threads == 0 {
+        return Ok(f());
+    }
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()?;
+    Ok(pool.install(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_threads_scopes_the_pool_size() {
+        let seen = with_threads(2, rayon::current_num_threads).unwrap();
+        assert_eq!(seen, 2);
+    }
+
+    #[test]
+    fn with_threads_zero_uses_the_default_pool() {
+        let outside = rayon::current_num_threads();
+        let seen = with_threads(0, rayon::current_num_threads).unwrap();
+        assert_eq!(seen, outside);
+    }
+}

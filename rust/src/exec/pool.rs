@@ -1,0 +1,186 @@
+//! Size-bucketed recycling pool for intermediate `f32` buffers.
+//!
+//! A GCONV chain allocates one output buffer per entry per run;
+//! steady-state serving (the coordinator re-runs the same chain on every
+//! batch) would otherwise allocate and free the identical set of buffers
+//! each step. The pool shelves freed buffers by exact element count and
+//! hands them back on the next request, so a warmed-up chain run
+//! allocates no fresh intermediate *output* buffers. (The GEMM tier's
+//! per-job packing scratch is separate and short-lived.)
+//!
+//! Recycled buffers come back with **stale contents**: every execution
+//! tier writes all of its output elements exactly once, which is why
+//! [`BufferPool::take`] does not zero what it recycles (the
+//! re-execution tests in `chain_exec` pin that reuse stays
+//! bit-identical).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Bytes the default pool will shelve before dropping returned buffers.
+const DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
+
+/// Cumulative allocation counters (see [`BufferPool::stats`]). The
+/// `misses` counter is the pool's allocation count: a run that adds no
+/// misses performed no fresh intermediate allocations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served from the shelf (no allocation).
+    pub hits: usize,
+    /// `take` calls that had to allocate fresh.
+    pub misses: usize,
+    /// Buffers accepted back by `put`.
+    pub recycled: usize,
+    /// Buffers rejected by `put` because the pool was at capacity.
+    pub dropped: usize,
+}
+
+struct PoolShelf {
+    buckets: HashMap<usize, Vec<Vec<f32>>>,
+    held_bytes: usize,
+    stats: PoolStats,
+}
+
+/// A thread-safe, size-bucketed `Vec<f32>` recycler.
+pub struct BufferPool {
+    capacity_bytes: usize,
+    shelf: Mutex<PoolShelf>,
+}
+
+impl BufferPool {
+    /// Pool with the default capacity (256 MiB of shelved buffers).
+    pub fn new() -> Self {
+        BufferPool::with_capacity(DEFAULT_CAPACITY_BYTES)
+    }
+
+    /// Pool shelving at most `capacity_bytes` of returned buffers.
+    pub fn with_capacity(capacity_bytes: usize) -> Self {
+        let shelf = PoolShelf {
+            buckets: HashMap::new(),
+            held_bytes: 0,
+            stats: PoolStats::default(),
+        };
+        BufferPool {
+            capacity_bytes,
+            shelf: Mutex::new(shelf),
+        }
+    }
+
+    /// A buffer of exactly `n` elements: recycled if one is shelved
+    /// (contents stale — the caller overwrites every element), freshly
+    /// zero-initialized otherwise.
+    pub fn take(&self, n: usize) -> Vec<f32> {
+        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let shelf = &mut *guard;
+        if let Some(bucket) = shelf.buckets.get_mut(&n) {
+            if let Some(buf) = bucket.pop() {
+                shelf.held_bytes -= n * 4;
+                shelf.stats.hits += 1;
+                return buf;
+            }
+        }
+        shelf.stats.misses += 1;
+        drop(guard);
+        vec![0.0; n]
+    }
+
+    /// Return a buffer for reuse. Empty buffers and returns that would
+    /// push the pool past capacity are dropped.
+    pub fn put(&self, buf: Vec<f32>) {
+        let n = buf.len();
+        if n == 0 {
+            return;
+        }
+        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let shelf = &mut *guard;
+        if shelf.held_bytes + n * 4 > self.capacity_bytes {
+            shelf.stats.dropped += 1;
+            return;
+        }
+        shelf.held_bytes += n * 4;
+        shelf.stats.recycled += 1;
+        shelf.buckets.entry(n).or_default().push(buf);
+    }
+
+    /// Cumulative allocation counters.
+    pub fn stats(&self) -> PoolStats {
+        let guard = self.shelf.lock().expect("buffer pool poisoned");
+        guard.stats
+    }
+
+    /// Bytes currently shelved.
+    pub fn held_bytes(&self) -> usize {
+        let guard = self.shelf.lock().expect("buffer pool poisoned");
+        guard.held_bytes
+    }
+
+    /// Drop every shelved buffer (counters are kept).
+    pub fn clear(&self) {
+        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        guard.buckets.clear();
+        guard.held_bytes = 0;
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycles_exact_sizes() {
+        let pool = BufferPool::new();
+        let a = pool.take(8);
+        assert_eq!(a.len(), 8);
+        pool.put(a);
+        let b = pool.take(8);
+        assert_eq!(b.len(), 8);
+        let s = pool.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.recycled, 1);
+    }
+
+    #[test]
+    fn sizes_do_not_cross_buckets() {
+        let pool = BufferPool::new();
+        pool.put(vec![1.0; 4]);
+        let b = pool.take(5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn capacity_bounds_shelved_bytes() {
+        let pool = BufferPool::with_capacity(16);
+        pool.put(vec![0.0; 4]); // 16 bytes: fits exactly
+        pool.put(vec![0.0; 4]); // would exceed capacity: dropped
+        assert_eq!(pool.held_bytes(), 16);
+        let s = pool.stats();
+        assert_eq!(s.recycled, 1);
+        assert_eq!(s.dropped, 1);
+    }
+
+    #[test]
+    fn empty_buffers_are_ignored() {
+        let pool = BufferPool::new();
+        pool.put(Vec::new());
+        assert_eq!(pool.stats().recycled, 0);
+        assert_eq!(pool.held_bytes(), 0);
+    }
+
+    #[test]
+    fn clear_empties_the_shelf() {
+        let pool = BufferPool::new();
+        pool.put(vec![0.0; 8]);
+        pool.clear();
+        assert_eq!(pool.held_bytes(), 0);
+        assert_eq!(pool.take(8).len(), 8);
+        assert_eq!(pool.stats().hits, 0);
+    }
+}

@@ -7,9 +7,11 @@
 //! *names* live on the op, not on the tensor — the binding logic in
 //! [`super::interp`] reconciles the two.
 
-use crate::prop::Rng;
-use anyhow::{ensure, Result};
 use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use crate::prop::Rng;
 
 /// A dense row-major `f32` tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -28,25 +30,37 @@ impl Tensor {
             "shape {dims:?} holds {n} elements, buffer has {}",
             data.len()
         );
-        Ok(Tensor { dims: dims.to_vec(), data })
+        Ok(Tensor {
+            dims: dims.to_vec(),
+            data,
+        })
     }
 
     /// All-zero tensor.
     pub fn zeros(dims: &[usize]) -> Self {
         let n: usize = dims.iter().product();
-        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+        Tensor {
+            dims: dims.to_vec(),
+            data: vec![0.0; n],
+        }
     }
 
     /// Constant-filled tensor.
     pub fn filled(dims: &[usize], v: f32) -> Self {
         let n: usize = dims.iter().product();
-        Tensor { dims: dims.to_vec(), data: vec![v; n] }
+        Tensor {
+            dims: dims.to_vec(),
+            data: vec![v; n],
+        }
     }
 
     /// Tensor whose element at flat index `i` is `f(i)`.
     pub fn from_fn(dims: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
         let n: usize = dims.iter().product();
-        Tensor { dims: dims.to_vec(), data: (0..n).map(&mut f).collect() }
+        Tensor {
+            dims: dims.to_vec(),
+            data: (0..n).map(&mut f).collect(),
+        }
     }
 
     /// Deterministic pseudo-random tensor, uniform in `[-scale, scale]`.
@@ -111,6 +125,21 @@ impl Tensor {
     /// Extents with size-1 dimensions dropped.
     pub fn squeezed_dims(&self) -> Vec<usize> {
         self.dims.iter().copied().filter(|&d| d > 1).collect()
+    }
+
+    /// Exact bit-level equality: same extents and every element has the
+    /// same `f32` bit pattern (`-0.0 != 0.0`, equal NaN payloads match).
+    /// The differential tests use this to pin the fast execution paths
+    /// to the naive oracle.
+    pub fn bit_eq(&self, other: &Tensor) -> bool {
+        if self.dims != other.dims {
+            return false;
+        }
+        let mut same = true;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            same &= a.to_bits() == b.to_bits();
+        }
+        same
     }
 
     /// Largest absolute element-wise difference against `other`
@@ -178,9 +207,22 @@ mod tests {
 
     #[test]
     fn reshape_preserves_data() {
-        let t = Tensor::from_fn(&[2, 3], |i| i as f32).reshape(&[3, 2]).unwrap();
+        let t = Tensor::from_fn(&[2, 3], |i| i as f32);
+        let t = t.reshape(&[3, 2]).unwrap();
         assert_eq!(t.at(&[2, 1]), 5.0);
         assert!(Tensor::zeros(&[2, 3]).reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn bit_eq_distinguishes_signed_zero_and_shape() {
+        let a = Tensor::new(&[2], vec![0.0, 1.0]).unwrap();
+        let b = Tensor::new(&[2], vec![-0.0, 1.0]).unwrap();
+        assert!(a.bit_eq(&a.clone()));
+        assert!(!a.bit_eq(&b), "-0.0 must not bit-match 0.0");
+        let c = Tensor::new(&[1, 2], vec![0.0, 1.0]).unwrap();
+        assert!(!a.bit_eq(&c), "shape participates in bit equality");
+        let n = Tensor::filled(&[2], f32::NAN);
+        assert!(n.bit_eq(&n.clone()), "equal NaN payloads match");
     }
 
     #[test]

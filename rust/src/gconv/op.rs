@@ -56,6 +56,14 @@ impl DimParams {
     pub fn window(nopc: usize, nks: usize, s: usize, ps: usize) -> Self {
         DimParams { nopc, nks, s, ps, ..Default::default() }
     }
+    /// Fully-connected / reduction dimension `[Nop: o, Nks: k]`.
+    pub fn op_ks(nop: usize, nks: usize) -> Self {
+        DimParams { nop, nks, ..Default::default() }
+    }
+    /// Grouped reduction dimension `[Ng: g, Nks: k]`.
+    pub fn g_ks(ng: usize, nks: usize) -> Self {
+        DimParams { ng, nks, ..Default::default() }
+    }
 
     /// Input extent covered by this dimension, from Eq. (1) (with the
     /// standard convolution arithmetic `Nips = (Nopc−1)·s + Nks − 2·ps`;

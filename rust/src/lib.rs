@@ -30,8 +30,10 @@
 //! * [`coordinator`] — batches request streams onto a pluggable
 //!   execution backend (native by default, PJRT with `pjrt`).
 //! * [`report`] — table/figure printers used by benches and the CLI.
+//! * [`args`] — shared CLI flag helpers (`--threads` etc.).
 
 pub mod accel;
+pub mod args;
 pub mod coordinator;
 pub mod cost;
 pub mod energy;

@@ -17,17 +17,26 @@ USAGE:
     gconv-chain matrix                       Fig. 14 speedup matrix
     gconv-chain run [NET] [SAMPLES]          execute chain numerics (native)
 
+OPTIONS:
+    --threads N    run on a scoped rayon pool of N workers (default:
+                   one per core) — pin for reproducible bench numbers
+
     NET   = AN GLN DN MN ZFFR C3D CapNN
     ACCEL = TPU DNNW ER EP NLR";
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(String::as_str) {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let threads = gconv_chain::args::take_usize(&mut args, "--threads");
+    let dispatch = move || match args.first().map(String::as_str) {
         Some("chain") => cmd_chain(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("matrix") => cmd_matrix(),
         Some("run") => cmd_run(&args[1..]),
         _ => println!("{USAGE}"),
+    };
+    if let Err(e) = gconv_chain::exec::with_threads(threads, dispatch) {
+        eprintln!("failed to build the thread pool: {e:#}");
+        std::process::exit(2);
     }
 }
 

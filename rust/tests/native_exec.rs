@@ -1,16 +1,24 @@
-//! Golden tests for the native GCONV execution engine: lowered
-//! conv / pool / BN / FC / softmax chains checked against small
-//! hand-computed fixtures, plus a property test that a lowered FP
-//! convolution matches a naive direct-convolution reference.
+//! Golden and differential tests for the native GCONV execution engine:
+//! lowered conv / pool / BN / FC / softmax chains checked against small
+//! hand-computed fixtures; a property test that a lowered FP convolution
+//! matches a naive direct-convolution reference; and property tests that
+//! the fast execution tiers (blocked dot/GEMM, odometer indexing) match
+//! the naive per-element oracle **bit-for-bit** across randomized GCONV
+//! shapes covering stride > 1, padding, groups, broadcast operands and
+//! every `pre`/`main`/`reduce`/`post` combination the lowering emits.
 //!
 //! The fixtures pin the *interpreter semantics* documented in
 //! `exec::interp` (Eq. 1 index arithmetic, zero padding under `Add`,
 //! padding-skip under `Max`, the fixed LUT definitions). For conv, FC,
 //! pooling and softmax those coincide with the textbook operators.
 
-use gconv_chain::exec::{lut_apply, ChainExec, Tensor};
+use gconv_chain::exec::{
+    eval_gconv, eval_gconv_naive, lut_apply, plan_tier, ChainExec, KernelTier, Tensor,
+    GEMM_MIN_REDUCTION,
+};
 use gconv_chain::gconv::lower::{lower_network, Mode};
-use gconv_chain::ir::{Layer, Network, PoolKind, Shape};
+use gconv_chain::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+use gconv_chain::ir::{Dim, Layer, Network, PoolKind, Shape};
 use gconv_chain::networks::mobilenet_block;
 use gconv_chain::prop::{prop_check, Rng};
 
@@ -141,7 +149,8 @@ fn batchnorm_golden() {
     exec.set_input("data.data", Tensor::new(&[2, 2], vec![1.0, -2.0, 3.0, 4.0]).unwrap());
     let out = exec.run_last().unwrap().outputs.remove(0);
     // Per channel: μ = [2, 1], t1 = [[-1,-3],[1,3]], Σt1² = [2, 18].
-    let t2 = [lut_apply("rsqrt_eps", 2.0), lut_apply("rsqrt_eps", 18.0)];
+    let rsqrt = |x| lut_apply("rsqrt_eps", x).unwrap();
+    let t2 = [rsqrt(2.0), rsqrt(18.0)];
     let want = vec![-1.0 * t2[0], -3.0 * t2[1], 1.0 * t2[0], 3.0 * t2[1]];
     assert_close(out.data(), &want, 1e-6, "batch norm");
 }
@@ -324,6 +333,172 @@ fn mobilenet_block_training_chain_executes() {
             t.data().iter().all(|v| v.is_finite()),
             "entry #{i} produced a non-finite value"
         );
+    }
+}
+
+/// Generate a random multi-dimensional GCONV with its bound tensors:
+/// random groups, parallel kernels, window/stride/padding geometry,
+/// operator combination, plus stride-tail slack and rank-aligned
+/// broadcast operands — the full surface `Plan::bind` accepts.
+fn random_gconv(rng: &mut Rng) -> (GconvOp, Tensor, Option<Tensor>) {
+    let nd = rng.int(1, 3);
+    let dim_names = [Dim::C, Dim::H, Dim::W];
+    let mut dims = Vec::new();
+    for &d in dim_names.iter().take(nd) {
+        let ng = if rng.bool(0.25) { rng.int(2, 3) } else { 1 };
+        let nop = if rng.bool(0.35) { rng.int(2, 4) } else { 1 };
+        let nopc = rng.int(1, 5);
+        let nks = rng.int(1, 3);
+        let s = rng.int(1, 2);
+        let ps = if nks > 1 && rng.bool(0.4) { rng.int(1, nks - 1) } else { 0 };
+        dims.push((d, DimParams { ng, nop, nopc, nks, s, ps }));
+    }
+
+    // Half the cases are steered onto the GEMM tier: Mul+Add with a
+    // reduction deep enough to clear GEMM_MIN_REDUCTION.
+    let force_gemm = rng.bool(0.5);
+    if force_gemm {
+        let i = rng.int(0, nd - 1);
+        dims[i].1.nks = rng.int(GEMM_MIN_REDUCTION, GEMM_MIN_REDUCTION + 4);
+    }
+    let main = if force_gemm {
+        MainOp::Mul
+    } else {
+        *rng.choose(&[
+            MainOp::Mul,
+            MainOp::Add,
+            MainOp::Sub,
+            MainOp::SquareDiff,
+            MainOp::Max,
+            MainOp::And,
+            MainOp::Pass,
+        ])
+    };
+    let red_total: usize = dims.iter().map(|&(_, p)| p.nks).product();
+    let reduce = if force_gemm {
+        ReduceOp::Add
+    } else if red_total == 1 && rng.bool(0.4) {
+        ReduceOp::None
+    } else {
+        *rng.choose(&[ReduceOp::Add, ReduceOp::Max])
+    };
+    let pre = *rng.choose(&[
+        PreOp::None,
+        PreOp::None,
+        PreOp::Square,
+        PreOp::Mul(0.5),
+        PreOp::Lut("relu"),
+        PreOp::Lut("sigmoid"),
+    ]);
+    let post = *rng.choose(&[
+        PostOp::None,
+        PostOp::None,
+        PostOp::Mul(2.0),
+        PostOp::Lut("relu"),
+        PostOp::Lut("sigmoid"),
+        PostOp::Lut("exp"),
+    ]);
+
+    // Rank-aligned input: exact covered extents, stride-tail slack, or
+    // an extent-1 broadcast dimension.
+    let mut in_dims = Vec::new();
+    for &(_, p) in &dims {
+        let gi = p.input_extent() / p.ng;
+        let exp = p.ng * gi;
+        if exp > 1 && rng.bool(0.15) {
+            in_dims.push(1);
+        } else if p.nopc > 1 && rng.bool(0.3) {
+            in_dims.push(p.ng * (gi + rng.int(1, 2)));
+        } else {
+            in_dims.push(exp);
+        }
+    }
+
+    let needs_kernel = main != MainOp::Pass;
+    let op = GconvOp {
+        name: "prop".into(),
+        dims,
+        pre,
+        main,
+        reduce,
+        post,
+        input: DataRef::External("x".into()),
+        kernel: if needs_kernel { Some(DataRef::Weights("w".into())) } else { None },
+    };
+    let x = Tensor::rand(&in_dims, rng.next_u64(), 1.0);
+    let w = if needs_kernel {
+        Some(Tensor::rand(&op.kernel_extents(), rng.next_u64(), 1.0))
+    } else {
+        None
+    };
+    (op, x, w)
+}
+
+#[test]
+fn fast_paths_match_naive_oracle_bitwise() {
+    // Property: whatever tier `eval_gconv` dispatches to produces the
+    // *same bits* as the naive per-element oracle — same f32 operator
+    // applications, same f64 accumulation order.
+    prop_check(150, |rng| {
+        let (op, x, w) = loop {
+            let cand = random_gconv(rng);
+            if cand.0.work() <= 200_000 {
+                break cand;
+            }
+        };
+        let fast = eval_gconv(&op, &x, w.as_ref())
+            .map_err(|e| format!("fast: {op} over {:?}: {e:#}", x.dims()))?;
+        let naive = eval_gconv_naive(&op, &x, w.as_ref())
+            .map_err(|e| format!("naive: {op} over {:?}: {e:#}", x.dims()))?;
+        if !fast.bit_eq(&naive) {
+            let tier = plan_tier(&op, &x, w.as_ref()).unwrap();
+            return Err(format!(
+                "{op} (tier {tier:?}) over {:?}: max |Δ| = {:e}",
+                x.dims(),
+                fast.max_abs_diff(&naive)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lowered_conv_takes_the_gemm_tier() {
+    // A real lowered convolution (ic·kh·kw = 27 reduction steps) must
+    // dispatch onto the dense dot/GEMM fast path.
+    let mut net = Network::new("t");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(1, 3, 8, 8) }, &[]);
+    net.add(
+        "conv",
+        Layer::Conv { out_channels: 4, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[i],
+    );
+    let chain = lower_network(&net, Mode::Inference);
+    let e = &chain.entries()[chain.len() - 1];
+    let x = Tensor::rand(&e.op.input_extents(), 3, 1.0);
+    let w = Tensor::rand(&e.op.kernel_extents(), 4, 1.0);
+    assert_eq!(plan_tier(&e.op, &x, Some(&w)).unwrap(), KernelTier::Gemm);
+}
+
+#[test]
+fn training_chain_fast_vs_naive_bitwise() {
+    // The full FP+BP+WG chain of a MobileNet block exercises every
+    // lowered op form (conv/BN/ReLU forward and backward); the fast
+    // tiers must match the oracle on every retained entry.
+    let net = mobilenet_block(2, 4, 6);
+    let chain = lower_network(&net, Mode::Training);
+    let wanted: Vec<usize> = (0..chain.len()).collect();
+    let mut fast = ChainExec::new(chain);
+    let naive_chain = lower_network(&net, Mode::Training);
+    let mut naive = ChainExec::new(naive_chain).with_naive_oracle();
+    let x = Tensor::rand(&[2, 4, 6, 6], 17, 1.0);
+    fast.set_input("data.data", x.clone());
+    naive.set_input("data.data", x);
+    let rf = fast.run(&wanted).unwrap();
+    let rn = naive.run(&wanted).unwrap();
+    assert_eq!(rf.outputs.len(), rn.outputs.len());
+    for (i, (a, b)) in rf.outputs.iter().zip(&rn.outputs).enumerate() {
+        assert!(a.bit_eq(b), "entry #{i} diverged from the oracle");
     }
 }
 
