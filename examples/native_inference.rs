@@ -4,19 +4,23 @@
 //! per-layer and total throughput.
 //!
 //! Run: `cargo run --release --example native_inference [BATCH]
-//! [--threads N] [--bench-json]`
+//! [--threads N] [--fuse] [--bench-json]`
 //!
 //! * default: inference demo (batch 2, synthesized weights);
 //! * `--threads N`: run on a scoped rayon pool of N workers;
+//! * `--fuse`: rewrite the chain with executable operation fusion
+//!   (§4.3) before running — fewer entries, bit-identical outputs;
 //! * `--bench-json`: measure the MobileNet and AlexNet FP chains on the
-//!   naive oracle vs the fast execution tiers (batch defaults to 1) and
-//!   write `BENCH_native_exec.json` — the repo's perf trajectory
-//!   artifact, also produced by `cargo bench --bench native_exec`.
+//!   naive oracle vs the fast execution tiers vs the fused chain
+//!   (batch defaults to 1) and write `BENCH_native_exec.json` — the
+//!   repo's perf trajectory artifact, also produced by
+//!   `cargo bench --bench native_exec`.
 
 use gconv_chain::args::{take_flag, take_usize};
 use gconv_chain::exec::bench::{bench_network, write_json, NetBench};
 use gconv_chain::exec::{with_threads, ChainExec, Tensor};
 use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::mapping::fuse_executable;
 use gconv_chain::networks::{alexnet, mobilenet};
 use gconv_chain::report::{print_table, si};
 
@@ -26,12 +30,13 @@ fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let threads = take_usize(&mut args, "--threads");
     let bench_mode = take_flag(&mut args, "--bench-json");
+    let fuse = take_flag(&mut args, "--fuse");
     let batch_arg: Option<usize> = args.first().and_then(|a| a.parse().ok());
     let body = move || {
         if bench_mode {
             run_bench_json(batch_arg.unwrap_or(1), threads);
         } else {
-            run_inference(batch_arg.unwrap_or(2));
+            run_inference(batch_arg.unwrap_or(2), fuse);
         }
     };
     with_threads(threads, body).expect("building the rayon pool failed");
@@ -47,37 +52,61 @@ fn run_bench_json(batch: usize, requested_threads: usize) {
     let nets = [mobilenet(batch), alexnet(batch)];
     let mut results: Vec<NetBench> = Vec::new();
     for net in &nets {
-        println!("benchmarking {} (batch {batch}) — naive oracle vs fast tiers…", net.name);
+        println!(
+            "benchmarking {} (batch {batch}) — naive oracle vs fast tiers vs fused…",
+            net.name
+        );
         let b = bench_network(net, 2).expect("bench run failed");
         print_net_summary(&b);
         results.push(b);
     }
     write_json(JSON_PATH, &results, threads).expect("writing bench JSON failed");
     println!("wrote {JSON_PATH} ({} networks, {threads} threads)", results.len());
-    if results.iter().any(|b| !b.bit_identical) {
-        eprintln!("FAIL: a fast path diverged from the naive oracle");
+    if results.iter().any(|b| !b.bit_identical || !b.fused_bit_identical) {
+        eprintln!("FAIL: a fast or fused path diverged from the naive oracle");
         std::process::exit(1);
     }
 }
 
 fn print_net_summary(b: &NetBench) {
+    let speedup = match b.speedup() {
+        Some(x) => format!("{x:.1}x"),
+        None => "n/a".to_string(),
+    };
+    let fuse = match b.fusion_speedup() {
+        Some(x) => format!("{x:.2}x"),
+        None => "n/a".to_string(),
+    };
     println!(
-        "  {}: naive {:.2}s ({:.2} Gops/s) | fast {:.2}s ({:.2} Gops/s) | {:.1}x | bit-identical: {}",
+        "  {}: naive {:.2}s | fast {:.2}s ({:.2} Gops/s) | fused {:.2}s | {} | fuse {} \
+         (chain -{:.0}%) | bit-identical: {}",
         b.net,
         b.naive_s,
-        b.naive_gops(),
         b.fast_s,
         b.fast_gops(),
-        b.speedup(),
-        b.bit_identical
+        b.fused_s,
+        speedup,
+        fuse,
+        b.chain_reduction() * 100.0,
+        b.bit_identical && b.fused_bit_identical
     );
 }
 
 /// The original demo: one MobileNet FP chain on the fast tiers, with a
-/// per-layer throughput table.
-fn run_inference(batch: usize) {
+/// per-layer throughput table. With `fuse`, the chain is rewritten by
+/// executable operation fusion first.
+fn run_inference(batch: usize, fuse: bool) {
     let net = mobilenet(batch);
-    let chain = lower_network(&net, Mode::Inference);
+    let mut chain = lower_network(&net, Mode::Inference);
+    if fuse {
+        let stats = fuse_executable(&mut chain);
+        println!(
+            "operation fusion: {} → {} entries (-{:.0}%)",
+            stats.before,
+            stats.after,
+            stats.length_reduction() * 100.0
+        );
+    }
     println!(
         "{}: {} GCONV entries, {} main ops per batch of {batch}",
         net.name,

@@ -1,25 +1,28 @@
-//! Naive-oracle vs fast-tier benchmark for the native GCONV execution
-//! engine, with a machine-readable artifact.
+//! Naive-oracle vs fast-tier vs fused-chain benchmark for the native
+//! GCONV execution engine, with a machine-readable artifact.
 //!
-//! Measures the MobileNet and AlexNet inference chains end-to-end on
-//! the naive per-element oracle and on the tiered fast paths (blocked
-//! dot/GEMM + odometer indexing + buffer pooling), checks the outputs
-//! stay bit-identical, prints per-net and per-layer tables, and writes
+//! Measures benchmark inference chains end-to-end on the naive
+//! per-element oracle, on the tiered fast paths (blocked dot/GEMM +
+//! odometer indexing + buffer pooling), and on the executable-fused
+//! chain (§4.3); checks the outputs stay bit-identical on every path,
+//! prints per-net and per-layer tables, and writes
 //! `BENCH_native_exec.json` (CI uploads it as the repo's performance
 //! trajectory).
 //!
 //! Run:
 //!   cargo bench --bench native_exec
-//!   cargo bench --bench native_exec -- MN --threads 2 --runs 1
+//!   cargo bench --bench native_exec -- MN AN --threads 2 --runs 1
 //!
-//! Flags: net codes (`MN`, `AN`; default both), `--batch N` (default 1),
-//! `--runs R` fast-path repetitions keeping the best (default 2),
-//! `--threads N` scoped rayon pool, `--json PATH` output path.
+//! Flags: net codes (any of AN GLN DN MN ZFFR C3D CapNN; default
+//! MN + AN), `--batch N` (default 1), `--runs R` fast-path repetitions
+//! keeping the best (default 2), `--threads N` scoped rayon pool,
+//! `--json PATH` output path. Note: the naive oracle side makes the
+//! heavy nets (DN, GLN, C3D, ZFFR) take minutes — CI sticks to MN + AN.
 
 use gconv_chain::args::{take_string, take_usize};
 use gconv_chain::exec::bench::{bench_network, write_json, NetBench};
 use gconv_chain::exec::with_threads;
-use gconv_chain::networks::{alexnet, mobilenet};
+use gconv_chain::networks::{benchmark_with_batch, BENCHMARK_CODES};
 use gconv_chain::report::print_table;
 
 const DEFAULT_JSON: &str = "BENCH_native_exec.json";
@@ -50,34 +53,47 @@ fn run(codes: &[String], batch: usize, runs: usize, requested: usize, json_path:
         0 => rayon::current_num_threads(),
         n => n,
     };
-    let mut nets = Vec::new();
-    if codes.is_empty() || codes.iter().any(|c| c == "MN") {
-        nets.push(mobilenet(batch));
-    }
-    if codes.is_empty() || codes.iter().any(|c| c == "AN") {
-        nets.push(alexnet(batch));
-    }
-    if nets.is_empty() {
-        eprintln!("no known net codes in {codes:?} (known: MN, AN)");
-        std::process::exit(2);
-    }
+    let selected: Vec<&str> = if codes.is_empty() {
+        vec!["MN", "AN"]
+    } else {
+        let known: Vec<&str> = BENCHMARK_CODES
+            .iter()
+            .copied()
+            .filter(|c| codes.iter().any(|a| a == c))
+            .collect();
+        if known.is_empty() {
+            eprintln!("no known net codes in {codes:?} (known: {BENCHMARK_CODES:?})");
+            std::process::exit(2);
+        }
+        known
+    };
 
     let mut results: Vec<NetBench> = Vec::new();
-    for net in &nets {
+    for code in &selected {
+        let net = benchmark_with_batch(code, batch);
         eprintln!(
             "benchmarking {} (batch {batch}, {runs} fast run(s), {threads} threads)…",
             net.name
         );
-        results.push(bench_network(net, runs).expect("bench run failed"));
+        results.push(bench_network(&net, runs).expect("bench run failed"));
     }
 
     let rows: Vec<Vec<String>> = results.iter().map(net_row).collect();
     let headers = [
-        "net", "entries", "Mops", "naive s", "fast s", "naive Gops/s", "fast Gops/s", "speedup",
+        "net",
+        "entries",
+        "Mops",
+        "naive s",
+        "fast s",
+        "fused s",
+        "fast Gops/s",
+        "speedup",
+        "fuse x",
+        "Δchain",
         "bit-id",
     ];
     print_table(
-        "Native exec: naive oracle vs fast tiers (end-to-end FP chain)",
+        "Native exec: naive oracle vs fast tiers vs fused chain (end-to-end FP)",
         &headers,
         &rows,
     );
@@ -93,23 +109,32 @@ fn run(codes: &[String], batch: usize, runs: usize, requested: usize, json_path:
     write_json(json_path, &results, threads).expect("writing bench JSON failed");
     println!("wrote {json_path}");
 
-    if results.iter().any(|b| !b.bit_identical) {
-        eprintln!("FAIL: a fast path diverged from the naive oracle");
+    if results.iter().any(|b| !b.bit_identical || !b.fused_bit_identical) {
+        eprintln!("FAIL: a fast or fused path diverged from the naive oracle");
         std::process::exit(1);
+    }
+}
+
+fn ratio(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.2}x"),
+        None => "n/a".to_string(),
     }
 }
 
 fn net_row(b: &NetBench) -> Vec<String> {
     vec![
         b.net.clone(),
-        b.entries.to_string(),
+        format!("{}→{}", b.entries, b.fused_entries),
         format!("{:.1}", b.work as f64 / 1e6),
         format!("{:.3}", b.naive_s),
         format!("{:.3}", b.fast_s),
-        format!("{:.3}", b.naive_gops()),
+        format!("{:.3}", b.fused_s),
         format!("{:.3}", b.fast_gops()),
-        format!("{:.2}x", b.speedup()),
-        b.bit_identical.to_string(),
+        ratio(b.speedup()),
+        ratio(b.fusion_speedup()),
+        format!("-{:.0}%", b.chain_reduction() * 100.0),
+        (b.bit_identical && b.fused_bit_identical).to_string(),
     ]
 }
 
@@ -120,6 +145,6 @@ fn layer_row(l: &gconv_chain::exec::bench::LayerBench) -> Vec<String> {
         format!("{:.1}", l.work as f64 / 1e6),
         format!("{:.2}", l.naive_s * 1e3),
         format!("{:.2}", l.fast_s * 1e3),
-        format!("{:.2}x", l.speedup()),
+        ratio(l.speedup()),
     ]
 }

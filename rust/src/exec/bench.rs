@@ -1,12 +1,19 @@
-//! Naive-vs-fast measurement harness for the native execution engine.
+//! Naive-vs-fast and fused-vs-unfused measurement harness for the
+//! native execution engine.
 //!
-//! Runs a network's inference chain twice — once forced through the
-//! naive per-element oracle, once on the tiered fast paths — and
-//! aggregates per-layer and end-to-end timings plus a bit-identity
-//! check. `rust/benches/native_exec.rs` and the `--bench-json` mode of
+//! Runs a network's inference chain three ways — the naive per-element
+//! oracle, the tiered fast paths, and the fast paths on the chain
+//! rewritten by *executable operation fusion* (§4.3,
+//! [`crate::mapping::fuse_executable`]) — and aggregates per-layer and
+//! end-to-end timings plus bit-identity gates: the unfused fast tiers
+//! must match the oracle on every entry, and the fused chain must match
+//! the unfused final output bit-for-bit.
+//! `rust/benches/native_exec.rs` and the `--bench-json` mode of
 //! `examples/native_inference.rs` both drive this module and emit the
 //! result as `BENCH_native_exec.json`, the repo's performance-trajectory
-//! artifact (CI uploads it on every run).
+//! artifact (CI uploads it on every run). Every numeric JSON field is
+//! emitted through a finite-guard: zero-duration timings on tiny layers
+//! yield `null`, never `inf`/`NaN`.
 
 use std::collections::HashMap;
 use std::fs;
@@ -15,9 +22,22 @@ use anyhow::{Context, Result};
 
 use crate::gconv::lower::{lower_network, Mode};
 use crate::ir::{Layer, Network};
+use crate::mapping::fuse_executable;
 
 use super::chain_exec::{ChainExec, RunReport};
 use super::tensor::Tensor;
+
+/// `num / den` when both sides are positive and the ratio is finite;
+/// `None` otherwise (sub-resolution timings on tiny layers can measure
+/// exactly zero).
+fn finite_ratio(num: f64, den: f64) -> Option<f64> {
+    if num > 0.0 && den > 0.0 {
+        let r = num / den;
+        r.is_finite().then_some(r)
+    } else {
+        None
+    }
+}
 
 /// Per-layer aggregation of one naive-vs-fast comparison (chain entries
 /// grouped by the op-name prefix before the phase suffix, so
@@ -37,45 +57,56 @@ pub struct LayerBench {
 }
 
 impl LayerBench {
-    /// Naive-to-fast speedup for this layer.
-    pub fn speedup(&self) -> f64 {
-        if self.fast_s > 0.0 {
-            self.naive_s / self.fast_s
-        } else {
-            0.0
-        }
+    /// Naive-to-fast speedup for this layer; `None` when either timing
+    /// is zero or the ratio is non-finite.
+    pub fn speedup(&self) -> Option<f64> {
+        finite_ratio(self.naive_s, self.fast_s)
     }
 }
 
-/// One network's end-to-end naive-vs-fast measurement.
+/// One network's end-to-end naive-vs-fast-vs-fused measurement.
 #[derive(Clone, Debug)]
 pub struct NetBench {
     /// Network name (e.g. `"MobileNet"`).
     pub net: String,
     /// Mini-batch size of the lowered chain.
     pub batch: usize,
-    /// GCONV entries executed.
+    /// GCONV entries executed (unfused chain).
     pub entries: usize,
-    /// Total `main` operations per chain run.
+    /// Total `main` operations per unfused chain run.
     pub work: usize,
     /// End-to-end seconds, naive oracle.
     pub naive_s: f64,
     /// End-to-end seconds, fast tiers (best measured run).
     pub fast_s: f64,
-    /// Whether the two paths produced bit-identical final outputs.
+    /// GCONV entries executed on the fused chain.
+    pub fused_entries: usize,
+    /// End-to-end seconds, fused chain on the fast tiers (best run).
+    pub fused_s: f64,
+    /// Whether the unfused fast path matched the oracle bit-for-bit on
+    /// every chain entry.
     pub bit_identical: bool,
-    /// Per-layer breakdown.
+    /// Whether the fused chain's final output matched the unfused one
+    /// bit-for-bit.
+    pub fused_bit_identical: bool,
+    /// Per-layer breakdown (unfused chain).
     pub layers: Vec<LayerBench>,
 }
 
 impl NetBench {
-    /// End-to-end naive-to-fast speedup.
-    pub fn speedup(&self) -> f64 {
-        if self.fast_s > 0.0 {
-            self.naive_s / self.fast_s
-        } else {
-            0.0
-        }
+    /// End-to-end naive-to-fast speedup (`None` on zero timings).
+    pub fn speedup(&self) -> Option<f64> {
+        finite_ratio(self.naive_s, self.fast_s)
+    }
+
+    /// End-to-end fusion speedup: unfused-fast over fused-fast.
+    pub fn fusion_speedup(&self) -> Option<f64> {
+        finite_ratio(self.fast_s, self.fused_s)
+    }
+
+    /// Fractional chain-length reduction from executable fusion.
+    pub fn chain_reduction(&self) -> f64 {
+        1.0 - self.fused_entries as f64 / self.entries.max(1) as f64
     }
 
     /// Giga `main`-operations per second on the naive oracle.
@@ -86,6 +117,13 @@ impl NetBench {
     /// Giga `main`-operations per second on the fast tiers.
     pub fn fast_gops(&self) -> f64 {
         gops(self.work, self.fast_s)
+    }
+
+    /// Effective giga-ops per second of the fused chain, counted in
+    /// *unfused* work (the workload semantics are identical, fusion just
+    /// executes it in fewer ops).
+    pub fn fused_gops(&self) -> f64 {
+        gops(self.work, self.fused_s)
     }
 }
 
@@ -99,7 +137,7 @@ fn gops(work: usize, seconds: f64) -> f64 {
 
 /// Input operand name and batched shape of a network's `Input` layer
 /// (the operand the lowering emits as `"<name>.data"`).
-fn input_spec(net: &Network) -> Result<(String, Vec<usize>)> {
+pub fn input_spec(net: &Network) -> Result<(String, Vec<usize>)> {
     let input = net
         .nodes()
         .iter()
@@ -110,13 +148,14 @@ fn input_spec(net: &Network) -> Result<(String, Vec<usize>)> {
 }
 
 /// Lower `net` for inference and measure its FP chain end-to-end: the
-/// naive oracle once (it is the slow side), the fast tiers `fast_runs`
-/// times (the first run warms the buffer pool; the best run is kept).
-/// Both timed sides execute the *same* pruned workload (ancestors of
-/// the final entry) with buffer recycling engaged; a separate untimed
-/// pass retains every entry on both paths and feeds the all-entry
-/// differential gate. Weights are synthesized deterministically; the
-/// input is a fixed pseudo-random tensor, identical on both paths.
+/// naive oracle once (it is the slow side), then the fast tiers
+/// `fast_runs` times on the unfused chain and again on the
+/// executable-fused chain (the first run warms each buffer pool; the
+/// best run is kept). Gates: the unfused fast path must match the
+/// oracle on *every* retained entry, and the fused final output must
+/// match the unfused one — both bit-for-bit. Weights are synthesized
+/// deterministically; the input is a fixed pseudo-random tensor,
+/// identical on all paths.
 pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
     let (input_name, dims) = input_spec(net)?;
     let x = Tensor::rand(&dims, 0xBE7C_4A11, 1.0);
@@ -129,7 +168,7 @@ pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
 
     let fast_chain = lower_network(net, Mode::Inference);
     let mut fast = ChainExec::new(fast_chain);
-    fast.set_input(&input_name, x);
+    fast.set_input(&input_name, x.clone());
     let mut fast_report = fast.run_last()?;
     for _ in 1..fast_runs.max(1) {
         let r = fast.run_last()?;
@@ -137,6 +176,21 @@ pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
             fast_report = r;
         }
     }
+
+    // Executable fusion: shorter chain, same synthesized operands, same
+    // final numbers (the rewrite is semantics-preserving by legality).
+    let mut fused_chain = lower_network(net, Mode::Inference);
+    fuse_executable(&mut fused_chain);
+    let mut fused = ChainExec::new(fused_chain);
+    fused.set_input(&input_name, x);
+    let mut fused_report = fused.run_last()?;
+    for _ in 1..fast_runs.max(1) {
+        let r = fused.run_last()?;
+        if r.total_s < fused_report.total_s {
+            fused_report = r;
+        }
+    }
+    let fused_bit_identical = fused_report.outputs[0].bit_eq(&fast_report.outputs[0]);
 
     // Untimed differential gate: *every* chain entry must match the
     // oracle bit-for-bit, not just the final network output.
@@ -153,7 +207,10 @@ pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
         work: fast_report.total_work(),
         naive_s: naive_report.total_s,
         fast_s: fast_report.total_s,
+        fused_entries: fused_report.entries.len(),
+        fused_s: fused_report.total_s,
         bit_identical,
+        fused_bit_identical,
         layers: layer_rows(&naive_report, &fast_report),
     })
 }
@@ -193,6 +250,25 @@ fn layer_of(name: &str) -> String {
     name.split('.').next().unwrap_or(name).to_string()
 }
 
+/// A float as a JSON number with `prec` decimals, or `null` when it is
+/// not finite — the emitter-level gate against `inf`/`NaN` in the
+/// artifact.
+fn jnum(v: f64, prec: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.prec$}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// An optional ratio as a JSON number or `null`.
+fn jopt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => jnum(x, prec),
+        None => "null".to_string(),
+    }
+}
+
 /// Render measurements as the `BENCH_native_exec.json` document.
 pub fn to_json(benches: &[NetBench], threads: usize) -> String {
     let mut s = String::new();
@@ -207,16 +283,29 @@ pub fn to_json(benches: &[NetBench], threads: usize) -> String {
         s.push_str(&format!("      \"entries\": {},\n", b.entries));
         s.push_str(&format!("      \"work\": {},\n", b.work));
         s.push_str(&format!(
-            "      \"naive\": {{\"seconds\": {:.6}, \"gops\": {:.3}}},\n",
-            b.naive_s,
-            b.naive_gops()
+            "      \"naive\": {{\"seconds\": {}, \"gops\": {}}},\n",
+            jnum(b.naive_s, 6),
+            jnum(b.naive_gops(), 3)
         ));
         s.push_str(&format!(
-            "      \"fast\": {{\"seconds\": {:.6}, \"gops\": {:.3}}},\n",
-            b.fast_s,
-            b.fast_gops()
+            "      \"fast\": {{\"seconds\": {}, \"gops\": {}}},\n",
+            jnum(b.fast_s, 6),
+            jnum(b.fast_gops(), 3)
         ));
-        s.push_str(&format!("      \"speedup\": {:.3},\n", b.speedup()));
+        s.push_str(&format!(
+            "      \"fused\": {{\"seconds\": {}, \"gops\": {}, \"entries\": {}, \
+             \"speedup_vs_fast\": {}, \"bit_identical\": {}}},\n",
+            jnum(b.fused_s, 6),
+            jnum(b.fused_gops(), 3),
+            b.fused_entries,
+            jopt(b.fusion_speedup(), 3),
+            b.fused_bit_identical
+        ));
+        s.push_str(&format!(
+            "      \"chain_reduction\": {},\n",
+            jnum(b.chain_reduction(), 3)
+        ));
+        s.push_str(&format!("      \"speedup\": {},\n", jopt(b.speedup(), 3)));
         let bits = b.bit_identical;
         s.push_str(&format!("      \"bit_identical\": {bits},\n"));
         s.push_str("      \"layers\": [\n");
@@ -224,13 +313,13 @@ pub fn to_json(benches: &[NetBench], threads: usize) -> String {
             let sep = if li + 1 < b.layers.len() { "," } else { "" };
             s.push_str(&format!(
                 "        {{\"layer\": \"{}\", \"gconvs\": {}, \"work\": {}, \
-                 \"naive_s\": {:.6}, \"fast_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                 \"naive_s\": {}, \"fast_s\": {}, \"speedup\": {}}}{}\n",
                 esc(&l.layer),
                 l.gconvs,
                 l.work,
-                l.naive_s,
-                l.fast_s,
-                l.speedup(),
+                jnum(l.naive_s, 6),
+                jnum(l.fast_s, 6),
+                jopt(l.speedup(), 3),
                 sep
             ));
         }
@@ -265,6 +354,9 @@ mod tests {
         let net = mobilenet_block(2, 4, 6);
         let b = bench_network(&net, 2).unwrap();
         assert!(b.bit_identical, "fast paths must match the oracle");
+        assert!(b.fused_bit_identical, "fusion must preserve the final output");
+        assert!(b.fused_entries < b.entries, "the block's ReLUs must fuse away");
+        assert!(b.chain_reduction() > 0.0);
         assert_eq!(b.batch, 2);
         assert!(b.entries > 0 && b.work > 0);
         assert!(!b.layers.is_empty());
@@ -274,7 +366,39 @@ mod tests {
         assert!(json.contains("\"bench\": \"native_exec\""));
         assert!(json.contains("\"net\": \"MobileNetBlock\""));
         assert!(json.contains("\"bit_identical\": true"));
+        assert!(json.contains("\"fused\""));
+        assert!(json.contains("\"chain_reduction\""));
+        assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
         assert!(json.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn zero_timings_emit_null_not_inf() {
+        let b = NetBench {
+            net: "tiny".into(),
+            batch: 1,
+            entries: 1,
+            work: 10,
+            naive_s: 0.0,
+            fast_s: 0.0,
+            fused_entries: 1,
+            fused_s: 0.0,
+            bit_identical: true,
+            fused_bit_identical: true,
+            layers: vec![LayerBench {
+                layer: "l".into(),
+                gconvs: 1,
+                work: 10,
+                naive_s: 1.0,
+                fast_s: 0.0,
+            }],
+        };
+        assert_eq!(b.speedup(), None);
+        assert_eq!(b.fusion_speedup(), None);
+        assert_eq!(b.layers[0].speedup(), None);
+        let json = to_json(&[b], 1);
+        assert!(json.contains("\"speedup\": null"));
+        assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
     }
 
     #[test]

@@ -31,12 +31,30 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Context, Result};
 use rayon::prelude::*;
 
-use crate::gconv::chain::{GconvChain, Phase};
-use crate::gconv::op::{DataRef, GconvOp};
+use crate::gconv::chain::{GconvChain, Phase, SpecialOp};
+use crate::gconv::op::{DataRef, GconvOp, MainOp};
 
-use super::interp::eval_in;
+use super::interp::{bind_input, eval_in};
 use super::pool::{BufferPool, PoolStats};
+use super::special;
 use super::tensor::Tensor;
+
+/// What [`ChainExec::run`] does with the buffer-pool shelf after each
+/// run. A long-lived executor that served a large workload and then
+/// settles into smaller ones would otherwise hold the large working set
+/// forever (the shelf only grows until its byte capacity).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TrimPolicy {
+    /// Keep every shelved buffer (capacity-bounded) — the default.
+    #[default]
+    Keep,
+    /// After each run, drop the shelved buffers the run did not recycle
+    /// (high-water trim: the shelf never outgrows the working set of
+    /// the workload currently being served).
+    HighWater,
+    /// Drop every shelved buffer after each run.
+    Clear,
+}
 
 /// Timing/size record of one executed chain entry.
 #[derive(Clone, Debug)]
@@ -96,6 +114,7 @@ pub struct ChainExec {
     levels: Vec<Vec<usize>>,
     pool: BufferPool,
     force_naive: bool,
+    trim: TrimPolicy,
 }
 
 impl ChainExec {
@@ -123,7 +142,15 @@ impl ChainExec {
             levels,
             pool: BufferPool::new(),
             force_naive: false,
+            trim: TrimPolicy::Keep,
         }
+    }
+
+    /// Set the shelf-retention policy applied after each run (see
+    /// [`TrimPolicy`]; the default keeps everything, capacity-bounded).
+    pub fn with_trim(mut self, policy: TrimPolicy) -> Self {
+        self.trim = policy;
+        self
     }
 
     /// Override the seed/scale used to synthesize missing externals.
@@ -203,7 +230,12 @@ impl ChainExec {
                 }
             }
         }
+        // Shape-check every chain-internal operand up front: an
+        // under-covering operand is a bind-time error raised before any
+        // entry executes, not a failure in the middle of the chain.
+        self.validate(&needed)?;
         self.materialize_externals(&needed)?;
+        self.pool.begin_run();
 
         // Consumer counts restricted to the needed subgraph, plus one
         // use per `wanted` occurrence.
@@ -239,8 +271,11 @@ impl ChainExec {
                     };
                     let t0 = Instant::now();
                     let pool = Some(&self.pool);
-                    let out = eval_in(&e.op, input, kernel, pool, self.force_naive)
-                        .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+                    let out = match &e.special {
+                        Some(sp) => special::eval_special(&e.op, sp, input, kernel, pool),
+                        None => eval_in(&e.op, input, kernel, pool, self.force_naive),
+                    }
+                    .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
                     Ok((i, out, t0.elapsed().as_secs_f64()))
                 })
                 .collect();
@@ -290,11 +325,100 @@ impl ChainExec {
                 t.ok_or_else(|| anyhow!("output of entry #{w} was not retained"))
             })
             .collect::<Result<Vec<_>>>()?;
+        match self.trim {
+            TrimPolicy::Keep => {}
+            TrimPolicy::HighWater => self.pool.trim_stale(),
+            TrimPolicy::Clear => self.pool.trim_all(),
+        }
         Ok(RunReport {
             outputs,
             entries: records,
             total_s: t_total.elapsed().as_secs_f64(),
         })
+    }
+
+    /// Shape-check the chain-internal operands of every `needed` entry
+    /// against their producers' output extents, using the same binding
+    /// rules [`super::eval_gconv`] applies — so a chain that cannot
+    /// execute fails here, up front, with the entry named, instead of
+    /// failing mid-run after earlier levels already executed.
+    fn validate(&self, needed: &[bool]) -> Result<()> {
+        let out_dims = |p: usize| -> Vec<usize> {
+            let d = self.chain.entries()[p].op.output_extents();
+            if d.is_empty() {
+                vec![1]
+            } else {
+                d
+            }
+        };
+        for i in 0..self.chain.len() {
+            if !needed[i] {
+                continue;
+            }
+            let e = &self.chain.entries()[i];
+            let ctx = |what: &str, p: usize| {
+                format!("chain entry #{i} ({}): {what} operand from #{p}", e.op.name)
+            };
+            if let Some(sp) = &e.special {
+                // Specials bind by element count only.
+                let want_in = match sp {
+                    SpecialOp::MaxPoolBp { fwd, .. } => special::maxpool_bp_windows(fwd),
+                    SpecialOp::Concat { axis, branch_extent, .. } => {
+                        let dims = out_dims(i);
+                        ensure!(*axis < dims.len(), "{}", ctx("concat axis", i));
+                        let total: usize = dims.iter().product();
+                        total / dims[*axis] * (dims[*axis] - branch_extent)
+                    }
+                };
+                if let DataRef::Gconv(p) = &e.op.input {
+                    let got: usize = out_dims(*p).iter().product();
+                    ensure!(
+                        got == want_in,
+                        "{}: has {got} elements, expected {want_in}",
+                        ctx("input", *p)
+                    );
+                }
+                ensure!(
+                    e.op.kernel.is_some(),
+                    "chain entry #{i} ({}): special needs two operands",
+                    e.op.name
+                );
+                let want_ker = match sp {
+                    SpecialOp::MaxPoolBp { in_extents, .. } => in_extents.iter().product(),
+                    SpecialOp::Concat { axis, branch_extent, .. } => {
+                        let dims = out_dims(i);
+                        let total: usize = dims.iter().product();
+                        total / dims[*axis] * branch_extent
+                    }
+                };
+                if let Some(DataRef::Gconv(p)) = &e.op.kernel {
+                    let got: usize = out_dims(*p).iter().product();
+                    ensure!(
+                        got == want_ker,
+                        "{}: has {got} elements, expected {want_ker}",
+                        ctx("kernel", *p)
+                    );
+                }
+                continue;
+            }
+            if let DataRef::Gconv(p) = &e.op.input {
+                let dims = out_dims(*p);
+                let elements = dims.iter().product();
+                bind_input(&e.op, &dims, elements).with_context(|| ctx("input", *p))?;
+            }
+            if !matches!(e.op.main, MainOp::Pass) {
+                if let Some(DataRef::Gconv(p)) = &e.op.kernel {
+                    let got: usize = out_dims(*p).iter().product();
+                    let want = e.op.kernel_elements();
+                    ensure!(
+                        got == want,
+                        "{}: has {got} elements, expected {want}",
+                        ctx("kernel", *p)
+                    );
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Execute the chain and return the final entry's output (the
@@ -331,13 +455,33 @@ impl ChainExec {
                 continue;
             }
             let e = &self.chain.entries()[i];
+            // Per-operand extents; special entries bind their operands by
+            // their own geometry, not the op's Table-3 extents.
+            let (in_ext, ker_ext) = match &e.special {
+                Some(SpecialOp::MaxPoolBp { fwd, in_extents }) => {
+                    let windows = fwd.iter().map(|&(_, p)| p.output_extent()).collect();
+                    (windows, in_extents.clone())
+                }
+                Some(SpecialOp::Concat { axis, pre_extent, branch_extent }) => {
+                    let mut dims = e.op.output_extents();
+                    if dims.is_empty() {
+                        dims.push(1);
+                    }
+                    let mut pre_dims = dims.clone();
+                    pre_dims[*axis] = *pre_extent;
+                    let mut branch_dims = dims;
+                    branch_dims[*axis] = *branch_extent;
+                    (pre_dims, branch_dims)
+                }
+                None => (e.op.input_extents(), e.op.kernel_extents()),
+            };
             let mut want: Vec<(DataRef, Vec<usize>)> = Vec::new();
             if !matches!(e.op.input, DataRef::Gconv(_)) {
-                want.push((e.op.input.clone(), e.op.input_extents()));
+                want.push((e.op.input.clone(), in_ext));
             }
             if let Some(k) = &e.op.kernel {
                 if !matches!(k, DataRef::Gconv(_)) {
-                    want.push((k.clone(), e.op.kernel_extents()));
+                    want.push((k.clone(), ker_ext));
                 }
             }
             for (r, mut dims) in want {
@@ -537,6 +681,45 @@ mod tests {
         assert!(stats.hits >= 2, "{stats:?}");
         // Recycled (stale-content) buffers must not change results.
         assert!(first.outputs[0].bit_eq(&second.outputs[0]));
+    }
+
+    #[test]
+    fn under_covering_operand_fails_before_anything_executes() {
+        // Producer emits 2 elements, consumer expects 4: the up-front
+        // validation must name the broken entry and nothing may run.
+        let mut c = GconvChain::new("bad");
+        let x = DataRef::External("x".into());
+        let mut small = ew("small", MainOp::Pass, x, None);
+        small.dims = vec![(Dim::C, DimParams::opc(2))];
+        push(&mut c, small);
+        push(&mut c, ew("big", MainOp::Pass, DataRef::Gconv(0), None));
+        let mut exec = ChainExec::new(c);
+        let err = exec.run_last().unwrap_err().to_string();
+        assert!(err.contains("big"), "unexpected error: {err}");
+        assert_eq!(exec.pool_stats().misses, 0, "validation must precede execution");
+    }
+
+    #[test]
+    fn clear_trim_policy_empties_the_shelf_every_run() {
+        let mut exec = ChainExec::new(diamond()).with_trim(TrimPolicy::Clear);
+        exec.set_input("x", x1234());
+        exec.run_last().unwrap();
+        let s1 = exec.pool_stats();
+        assert!(s1.trimmed > 0, "{s1:?}");
+        exec.run_last().unwrap();
+        let s2 = exec.pool_stats();
+        assert_eq!(s2.hits, s1.hits, "cleared shelf cannot serve hits: {s2:?}");
+        assert!(s2.misses > s1.misses);
+    }
+
+    #[test]
+    fn high_water_trim_keeps_the_live_working_set() {
+        let mut exec = ChainExec::new(diamond()).with_trim(TrimPolicy::HighWater);
+        exec.set_input("x", x1234());
+        exec.run_last().unwrap();
+        exec.run_last().unwrap();
+        let s = exec.pool_stats();
+        assert!(s.hits >= 2, "recycled-this-run buffers must survive the trim: {s:?}");
     }
 
     #[test]

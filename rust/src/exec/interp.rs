@@ -49,16 +49,21 @@
 //! Conversely, a rank-aligned input with extent **1** along a dimension
 //! whose covered extent is larger binds as a *broadcast* (stride 0):
 //! backward ops like GlobalAvgPool's BP spread one gradient value over
-//! the whole spatial extent this way. The one chain idiom that stays
-//! non-executable is max-pool BP, which routes gradients through a
-//! stored argmax mask whose operand genuinely under-covers the nest —
-//! that op is an analytical-model construct (pure data movement).
+//! the whole spatial extent this way. Chain idioms whose operands
+//! genuinely under-cover the nest (max-pool BP's argmax routing,
+//! concatenation) are not loop nests at all: the lowering marks them as
+//! [`crate::gconv::chain::SpecialOp`] entries and `super::special`
+//! executes them with dedicated routines; any *other* under-covering
+//! operand stays a bind-time error, which the chain executor now raises
+//! up front before running anything (see [`bind_input`]).
 //!
 //! [`DimParams::input_extent`]: crate::gconv::op::DimParams::input_extent
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::gconv::op::{GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+use crate::gconv::op::{
+    GconvOp, MainOp, PostOp, PreOp, ReduceOp, ScalarStage, StageStack, MAX_FUSED_STAGES,
+};
 
 use super::kernels::{self, GEMM_MIN_REDUCTION, KernelTier};
 use super::pool::BufferPool;
@@ -90,8 +95,11 @@ pub(super) const MAX_DIMS: usize = 8;
 ///   AlexNet α/β defaults.
 /// * [`LutFn::SquashScale`] (`"squash_scale"`): for `x = ‖s‖²`, the
 ///   capsule squash scale `x/((1+x)·√(x+ε))`.
-/// * [`LutFn::Fused`] (`"fused"`): identity — a placeholder slot written
-///   by operation fusion (§4.3), an analytical-model construct.
+/// * [`LutFn::Fused`] (`"fused"`): identity — the placeholder slot the
+///   *analytical* fusion policy writes (§4.3). The executable policy
+///   ([`crate::mapping::fuse_executable`]) composes real
+///   [`StageStack`] pipelines instead, resolved to [`StackEval`] here
+///   at bind.
 ///
 /// Names resolve **once at bind time** ([`LutFn::resolve`]); the hot
 /// loops only ever see the enum, so an unknown LUT name is a bind error
@@ -191,6 +199,62 @@ pub fn lut_apply(name: &str, x: f32) -> Result<f32> {
     }
 }
 
+/// One scalar stage of a composed pipeline with its LUT resolved.
+#[derive(Clone, Copy, Debug)]
+pub(super) enum StageEval {
+    Square,
+    Mul(f32),
+    Lut(LutFn),
+}
+
+impl StageEval {
+    #[inline]
+    fn apply(self, x: f32) -> f32 {
+        match self {
+            StageEval::Square => x * x,
+            StageEval::Mul(c) => x * c,
+            StageEval::Lut(f) => f.apply(x),
+        }
+    }
+}
+
+/// A [`StageStack`] (composed by executable operation fusion, §4.3) with
+/// every LUT name resolved at bind time. Each stage applies in order as
+/// a plain `f32 → f32` map, so a fused chain reproduces the unfused
+/// chain bit-for-bit (the intermediate each erased op would have written
+/// is exactly the value flowing between stages).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct StackEval {
+    len: u8,
+    stages: [StageEval; MAX_FUSED_STAGES],
+}
+
+impl StackEval {
+    fn resolve(op_name: &str, slot: &str, stack: &StageStack) -> Result<StackEval> {
+        let mut ev = StackEval { len: 0, stages: [StageEval::Square; MAX_FUSED_STAGES] };
+        for &s in stack.as_slice() {
+            ev.stages[ev.len as usize] = match s {
+                ScalarStage::Square => StageEval::Square,
+                ScalarStage::Mul(c) => StageEval::Mul(c),
+                ScalarStage::Lut(name) => match LutFn::resolve(name) {
+                    Some(f) => StageEval::Lut(f),
+                    None => bail!("{op_name}: unknown {slot} LUT {name:?} in composed pipeline"),
+                },
+            };
+            ev.len += 1;
+        }
+        Ok(ev)
+    }
+
+    #[inline]
+    fn apply(&self, mut x: f32) -> f32 {
+        for s in &self.stages[..self.len as usize] {
+            x = s.apply(x);
+        }
+        x
+    }
+}
+
 /// A [`PreOp`] with its LUT name resolved at bind time.
 #[derive(Clone, Copy, Debug)]
 pub(super) enum PreEval {
@@ -198,6 +262,7 @@ pub(super) enum PreEval {
     Square,
     Mul(f32),
     Lut(LutFn),
+    Stack(StackEval),
 }
 
 impl PreEval {
@@ -208,6 +273,7 @@ impl PreEval {
             PreEval::Square => x * x,
             PreEval::Mul(c) => x * c,
             PreEval::Lut(f) => f.apply(x),
+            PreEval::Stack(s) => s.apply(x),
         }
     }
 }
@@ -218,6 +284,7 @@ pub(super) enum PostEval {
     None,
     Mul(f32),
     Lut(LutFn),
+    Stack(StackEval),
 }
 
 impl PostEval {
@@ -227,6 +294,7 @@ impl PostEval {
             PostEval::None => x,
             PostEval::Mul(c) => x * c,
             PostEval::Lut(f) => f.apply(x),
+            PostEval::Stack(s) => s.apply(x),
         }
     }
 }
@@ -291,6 +359,109 @@ pub(super) struct Plan<'t> {
     pub(super) ws: Option<&'t [f32]>,
 }
 
+/// Shape-only input binding: how a tensor with extents `in_dims` (and
+/// `elements` total) binds to `op`'s input slot — exact element count
+/// (reshape semantics), rank-aligned slack/broadcast, or squeezed
+/// alignment (see the module docs). Shared by [`Plan::bind`] and the
+/// chain executor's up-front operand validation, so an under-covering
+/// chain-internal operand is a bind-time error in both places, never a
+/// mid-chain evaluation failure.
+pub(super) struct InputLayout {
+    /// Actual per-group input extent per dimension.
+    pub(super) in_actual: Vec<usize>,
+    /// Dimensions bound as stride-0 broadcasts.
+    pub(super) broadcast: Vec<bool>,
+    /// Layout extents of the bound tensor (broadcast dims occupy one
+    /// slot).
+    pub(super) in_full: Vec<usize>,
+}
+
+pub(super) fn bind_input(op: &GconvOp, in_dims: &[usize], elements: usize) -> Result<InputLayout> {
+    let nd = op.dims.len();
+    let mut ngs = Vec::with_capacity(nd);
+    let mut group_in = Vec::with_capacity(nd); // covered per-group input
+    let mut exp_in = Vec::with_capacity(nd); // ng · group_in
+    for &(d, p) in &op.dims {
+        ensure!(
+            p.ng >= 1 && p.nop >= 1 && p.nopc >= 1 && p.nks >= 1 && p.s >= 1,
+            "{}: dimension {d} has a zero loop parameter or stride",
+            op.name
+        );
+        // Per-group covered extent — Table 3's formula, shared with
+        // `DimParams::input_extent` (which multiplies by `ng`).
+        let covered = p.input_extent() / p.ng;
+        ngs.push(p.ng);
+        group_in.push(covered);
+        exp_in.push(p.ng * covered);
+    }
+
+    // Determine the actual per-group extent of every dimension, plus
+    // which dimensions broadcast (stride 0).
+    let expected: usize = exp_in.iter().product();
+    let mut broadcast = vec![false; nd];
+    let in_actual: Vec<usize> = if elements == expected {
+        // Exact element count: reshape semantics, covered extents.
+        group_in.clone()
+    } else if in_dims.len() == nd
+        && in_dims
+            .iter()
+            .zip(ngs.iter().zip(&group_in))
+            .all(|(&a, (&ng, &gi))| (a % ng == 0 && a / ng >= gi) || a == 1)
+    {
+        // Rank-aligned: accept larger extents (stride-discarded
+        // tails) and extent-1 broadcasts.
+        (0..nd)
+            .map(|i| {
+                let a = in_dims[i];
+                if a == 1 && exp_in[i] > 1 {
+                    broadcast[i] = true;
+                    group_in[i]
+                } else {
+                    a / ngs[i]
+                }
+            })
+            .collect()
+    } else {
+        // Squeezed alignment: match non-unit dimensions positionally.
+        let kept: Vec<usize> = (0..nd).filter(|&i| exp_in[i] > 1).collect();
+        let sq: Vec<usize> = in_dims.iter().copied().filter(|&d| d > 1).collect();
+        ensure!(
+            sq.len() == kept.len(),
+            "{}: input tensor {:?} does not fit expected extents {:?}",
+            op.name,
+            in_dims,
+            exp_in
+        );
+        let mut actual = group_in.clone();
+        for (&i, &a) in kept.iter().zip(&sq) {
+            ensure!(
+                a % ngs[i] == 0 && a / ngs[i] >= group_in[i],
+                "{}: input extent {} under-covers dimension {} (need ≥ {})",
+                op.name,
+                a,
+                op.dims[i].0,
+                exp_in[i]
+            );
+            actual[i] = a / ngs[i];
+        }
+        actual
+    };
+    // Layout extents of the bound tensor (broadcast dims occupy one
+    // slot); strides over these, zeroed where broadcasting.
+    let in_full: Vec<usize> = (0..nd)
+        .map(|i| if broadcast[i] { 1 } else { ngs[i] * in_actual[i] })
+        .collect();
+    ensure!(
+        in_full.iter().product::<usize>() == elements,
+        "{}: input has {} elements, bound extents {:?} need {}",
+        op.name,
+        elements,
+        in_full,
+        in_full.iter().product::<usize>()
+    );
+    Ok(InputLayout { in_actual, broadcast, in_full })
+}
+
 impl<'t> Plan<'t> {
     pub(super) fn bind(
         op: &'t GconvOp,
@@ -299,93 +470,18 @@ impl<'t> Plan<'t> {
     ) -> Result<Self> {
         let nd = op.dims.len();
 
-        // Expected per-dimension extents (Table 3).
-        let mut ngs = Vec::with_capacity(nd);
-        let mut group_in = Vec::with_capacity(nd); // covered per-group input
-        let mut exp_in = Vec::with_capacity(nd); // ng · group_in
+        // Expected kernel/output extents (Table 3).
         let mut ker_ext = Vec::with_capacity(nd);
         let mut out_ext = Vec::with_capacity(nd);
-        for &(d, p) in &op.dims {
-            ensure!(
-                p.ng >= 1 && p.nop >= 1 && p.nopc >= 1 && p.nks >= 1 && p.s >= 1,
-                "{}: dimension {d} has a zero loop parameter or stride",
-                op.name
-            );
-            // Per-group covered extent — Table 3's formula, shared with
-            // `DimParams::input_extent` (which multiplies by `ng`).
-            let covered = p.input_extent() / p.ng;
-            ngs.push(p.ng);
-            group_in.push(covered);
-            exp_in.push(p.ng * covered);
+        for &(_, p) in &op.dims {
             ker_ext.push(p.ng * p.nop * p.nks);
             out_ext.push(p.ng * p.nop * p.nopc);
         }
 
-        // Bind the input tensor: determine the actual per-group extent of
-        // every dimension, plus which dimensions broadcast (stride 0).
-        let expected: usize = exp_in.iter().product();
-        let mut broadcast = vec![false; nd];
-        let in_actual: Vec<usize> = if input.elements() == expected {
-            // Exact element count: reshape semantics, covered extents.
-            group_in.clone()
-        } else if input.rank() == nd
-            && input
-                .dims()
-                .iter()
-                .zip(ngs.iter().zip(&group_in))
-                .all(|(&a, (&ng, &gi))| (a % ng == 0 && a / ng >= gi) || a == 1)
-        {
-            // Rank-aligned: accept larger extents (stride-discarded
-            // tails) and extent-1 broadcasts.
-            (0..nd)
-                .map(|i| {
-                    let a = input.dims()[i];
-                    if a == 1 && exp_in[i] > 1 {
-                        broadcast[i] = true;
-                        group_in[i]
-                    } else {
-                        a / ngs[i]
-                    }
-                })
-                .collect()
-        } else {
-            // Squeezed alignment: match non-unit dimensions positionally.
-            let kept: Vec<usize> = (0..nd).filter(|&i| exp_in[i] > 1).collect();
-            let sq = input.squeezed_dims();
-            ensure!(
-                sq.len() == kept.len(),
-                "{}: input tensor {:?} does not fit expected extents {:?}",
-                op.name,
-                input.dims(),
-                exp_in
-            );
-            let mut actual = group_in.clone();
-            for (&i, &a) in kept.iter().zip(&sq) {
-                ensure!(
-                    a % ngs[i] == 0 && a / ngs[i] >= group_in[i],
-                    "{}: input extent {} under-covers dimension {} (need ≥ {})",
-                    op.name,
-                    a,
-                    op.dims[i].0,
-                    exp_in[i]
-                );
-                actual[i] = a / ngs[i];
-            }
-            actual
-        };
-        // Layout extents of the bound tensor (broadcast dims occupy one
-        // slot); strides over these, zeroed where broadcasting.
-        let in_full: Vec<usize> = (0..nd)
-            .map(|i| if broadcast[i] { 1 } else { ngs[i] * in_actual[i] })
-            .collect();
-        ensure!(
-            in_full.iter().product::<usize>() == input.elements(),
-            "{}: input has {} elements, bound extents {:?} need {}",
-            op.name,
-            input.elements(),
-            in_full,
-            in_full.iter().product::<usize>()
-        );
+        // Bind the input tensor (shape-only logic shared with the chain
+        // executor's validation).
+        let layout = bind_input(op, input.dims(), input.elements())?;
+        let InputLayout { in_actual, broadcast, in_full } = layout;
 
         // Bind the kernel tensor (exact element count, no slack).
         let need_kernel = !matches!(op.main, MainOp::Pass);
@@ -418,6 +514,7 @@ impl<'t> Plan<'t> {
                 Some(f) => PreEval::Lut(f),
                 None => bail!("{}: unknown pre LUT {name:?}", op.name),
             },
+            PreOp::Stack(s) => PreEval::Stack(StackEval::resolve(&op.name, "pre", &s)?),
         };
         let post = match op.post {
             PostOp::None => PostEval::None,
@@ -426,6 +523,7 @@ impl<'t> Plan<'t> {
                 Some(f) => PostEval::Lut(f),
                 None => bail!("{}: unknown post LUT {name:?}", op.name),
             },
+            PostOp::Stack(s) => PostEval::Stack(StackEval::resolve(&op.name, "post", &s)?),
         };
 
         let nks: Vec<usize> = op.dims.iter().map(|&(_, p)| p.nks).collect();
@@ -871,6 +969,53 @@ mod tests {
             main: MainOp::Pass,
             reduce: ReduceOp::None,
             post: PostOp::Lut("warp_drive"),
+            input: xref(),
+            kernel: None,
+        };
+        assert!(eval_gconv(&op, &Tensor::zeros(&[2]), None).is_err());
+    }
+
+    #[test]
+    fn composed_stacks_apply_in_order() {
+        use crate::gconv::op::{ScalarStage, StageStack};
+        // post = relu ∘ (×−1): out = relu(−x·x... ) — pre Square then
+        // post stack [Mul(−1), Lut(relu)] gives relu(−x²) = 0 for all x,
+        // and [Lut(relu), Mul(−1)] gives −relu(x²) = −x².
+        let mut neg_then_relu = StageStack::empty();
+        neg_then_relu.push(ScalarStage::Mul(-1.0));
+        neg_then_relu.push(ScalarStage::Lut("relu"));
+        let mut relu_then_neg = StageStack::empty();
+        relu_then_neg.push(ScalarStage::Lut("relu"));
+        relu_then_neg.push(ScalarStage::Mul(-1.0));
+        let op = |stack| GconvOp {
+            name: "stacked".into(),
+            dims: vec![(Dim::C, DimParams::opc(3))],
+            pre: PreOp::Square,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::Stack(stack),
+            input: xref(),
+            kernel: None,
+        };
+        let x = Tensor::new(&[3], vec![1.0, -2.0, 3.0]).unwrap();
+        let a = eval_gconv(&op(neg_then_relu), &x, None).unwrap();
+        assert_eq!(a.data(), &[0.0, 0.0, 0.0]);
+        let b = eval_gconv(&op(relu_then_neg), &x, None).unwrap();
+        assert_eq!(b.data(), &[-1.0, -4.0, -9.0]);
+    }
+
+    #[test]
+    fn unknown_stack_lut_rejected_at_bind() {
+        use crate::gconv::op::{ScalarStage, StageStack};
+        let mut stack = StageStack::empty();
+        stack.push(ScalarStage::Lut("warp_drive"));
+        let op = GconvOp {
+            name: "bad".into(),
+            dims: vec![(Dim::C, DimParams::opc(2))],
+            pre: PreOp::Stack(stack),
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
             input: xref(),
             kernel: None,
         };

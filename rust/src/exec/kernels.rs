@@ -533,6 +533,7 @@ mod tests {
             nks: 2,
             s: 1,
             ps: 0,
+            pe: 0,
         };
         let wdim = DimParams {
             ng: 3,
@@ -541,6 +542,7 @@ mod tests {
             nks: 2,
             s: 2,
             ps: 1,
+            pe: 0,
         };
         let dims = vec![(Dim::C, cdim), (Dim::W, wdim)];
         let x = DataRef::External("x".into());

@@ -9,11 +9,13 @@
 //!
 //! * [`tensor`] — a small owned row-major `f32` tensor.
 //! * [`interp`] — binds one [`crate::gconv::op::GconvOp`] to tensors
-//!   (shape validation, stride precomputation, LUT-name resolution) and
-//!   evaluates its multi-dimensional `Ng`/`Nop`/`Nopc`/`Nks` loop nest
-//!   (Eq. 1, Fig. 4) with the four pluggable operators
-//!   `pre`/`main`/`reduce`/`post` of §3.1 — enough to cover conv, FC,
-//!   pooling, BN, LRN, softmax and their BP/WG forms produced by
+//!   (shape validation, stride precomputation, LUT-name resolution —
+//!   including the composed [`crate::gconv::op::StageStack`] pipelines
+//!   written by executable operation fusion, §4.3) and evaluates its
+//!   multi-dimensional `Ng`/`Nop`/`Nopc`/`Nks` loop nest (Eq. 1,
+//!   Fig. 4) with the four pluggable operators `pre`/`main`/`reduce`/
+//!   `post` of §3.1 — enough to cover conv, FC, pooling, BN, LRN,
+//!   softmax and their BP/WG forms produced by
 //!   [`crate::gconv::lower::lower_network`].
 //! * `kernels` (internal) — the tiered executors behind [`eval_gconv`]:
 //!   a packed-panel dot/GEMM fast path for `Mul`+`Add` reductions
@@ -21,14 +23,24 @@
 //!   ([`KernelTier::Odometer`]), and the naive per-element oracle
 //!   ([`KernelTier::Naive`], reachable via [`eval_gconv_naive`]) kept
 //!   for differential testing. All tiers are bit-identical.
+//! * `special` (internal) — dedicated routines for chain entries the
+//!   loop nest cannot express ([`crate::gconv::chain::SpecialOp`]):
+//!   max-pool BP argmax routing (recomputed from the saved forward
+//!   input) and channel concatenation.
 //! * `pool` (internal impl, public [`BufferPool`]) — size-bucketed
-//!   recycling of intermediate buffers across chain levels and runs.
+//!   recycling of intermediate buffers across chain levels and runs,
+//!   with run-epoch trimming behind [`TrimPolicy`].
 //! * [`chain_exec`] — schedules a whole [`crate::gconv::GconvChain`]:
 //!   level-order over the producer/consumer DAG, independent entries and
 //!   output/batch slices in parallel via rayon, intermediates
-//!   `Arc`-shared, reference-counted and recycled at last use.
-//! * [`bench`] — the naive-vs-fast measurement harness behind
-//!   `cargo bench --bench native_exec` and `BENCH_native_exec.json`.
+//!   `Arc`-shared, reference-counted and recycled at last use; every
+//!   chain-internal operand is shape-checked up front, so a chain that
+//!   cannot execute fails at bind time, not mid-run. Chains rewritten
+//!   by [`crate::mapping::fuse_executable`] run here directly and stay
+//!   bit-identical to their unfused forms.
+//! * [`bench`] — the naive-vs-fast and fused-vs-unfused measurement
+//!   harness behind `cargo bench --bench native_exec` and
+//!   `BENCH_native_exec.json`.
 //!
 //! The [`crate::coordinator`] exposes this engine as the default
 //! [`crate::coordinator::Backend`] behind its batching request API; the
@@ -54,9 +66,10 @@ pub mod chain_exec;
 pub mod interp;
 mod kernels;
 mod pool;
+mod special;
 pub mod tensor;
 
-pub use chain_exec::{ChainExec, EntryRun, RunReport};
+pub use chain_exec::{ChainExec, EntryRun, RunReport, TrimPolicy};
 pub use interp::{eval_gconv, eval_gconv_naive, lut_apply, lut_known, plan_tier, LutFn};
 pub use kernels::{GEMM_MIN_REDUCTION, KernelTier};
 pub use pool::{BufferPool, PoolStats};

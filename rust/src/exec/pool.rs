@@ -13,6 +13,13 @@
 //! [`BufferPool::take`] does not zero what it recycles (the
 //! re-execution tests in `chain_exec` pin that reuse stays
 //! bit-identical).
+//!
+//! Shelved buffers carry the *run epoch* they were last recycled in
+//! ([`BufferPool::begin_run`]); [`BufferPool::trim_stale`] drops
+//! everything older than the current epoch, which is how the executor's
+//! high-water trim policy keeps the shelf from growing monotonically
+//! when one pool serves differently-shaped workloads over its lifetime
+//! (see `chain_exec::TrimPolicy`).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -33,11 +40,16 @@ pub struct PoolStats {
     pub recycled: usize,
     /// Buffers rejected by `put` because the pool was at capacity.
     pub dropped: usize,
+    /// Buffers released by `trim_stale`/`trim_all` (the executor's
+    /// high-water / clear trim policies).
+    pub trimmed: usize,
 }
 
 struct PoolShelf {
-    buckets: HashMap<usize, Vec<Vec<f32>>>,
+    /// element count → shelved buffers tagged with their last-use epoch.
+    buckets: HashMap<usize, Vec<(u64, Vec<f32>)>>,
     held_bytes: usize,
+    epoch: u64,
     stats: PoolStats,
 }
 
@@ -58,6 +70,7 @@ impl BufferPool {
         let shelf = PoolShelf {
             buckets: HashMap::new(),
             held_bytes: 0,
+            epoch: 0,
             stats: PoolStats::default(),
         };
         BufferPool {
@@ -73,7 +86,7 @@ impl BufferPool {
         let mut guard = self.shelf.lock().expect("buffer pool poisoned");
         let shelf = &mut *guard;
         if let Some(bucket) = shelf.buckets.get_mut(&n) {
-            if let Some(buf) = bucket.pop() {
+            if let Some((_, buf)) = bucket.pop() {
                 shelf.held_bytes -= n * 4;
                 shelf.stats.hits += 1;
                 return buf;
@@ -84,8 +97,9 @@ impl BufferPool {
         vec![0.0; n]
     }
 
-    /// Return a buffer for reuse. Empty buffers and returns that would
-    /// push the pool past capacity are dropped.
+    /// Return a buffer for reuse (stamped with the current run epoch).
+    /// Empty buffers and returns that would push the pool past capacity
+    /// are dropped.
     pub fn put(&self, buf: Vec<f32>) {
         let n = buf.len();
         if n == 0 {
@@ -99,7 +113,47 @@ impl BufferPool {
         }
         shelf.held_bytes += n * 4;
         shelf.stats.recycled += 1;
-        shelf.buckets.entry(n).or_default().push(buf);
+        let epoch = shelf.epoch;
+        shelf.buckets.entry(n).or_default().push((epoch, buf));
+    }
+
+    /// Open a new run epoch: buffers recycled from now on are considered
+    /// part of the current working set by [`BufferPool::trim_stale`].
+    pub fn begin_run(&self) {
+        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        guard.epoch += 1;
+    }
+
+    /// Drop every shelved buffer that was *not* recycled in the current
+    /// epoch — the high-water trim: whatever the last run actually
+    /// cycled through stays, leftovers from earlier, differently-shaped
+    /// workloads are released.
+    pub fn trim_stale(&self) {
+        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let shelf = &mut *guard;
+        let cur = shelf.epoch;
+        let mut freed = 0usize;
+        let mut count = 0usize;
+        for (&n, bucket) in shelf.buckets.iter_mut() {
+            let before = bucket.len();
+            bucket.retain(|&(e, _)| e == cur);
+            let dropped = before - bucket.len();
+            freed += dropped * n * 4;
+            count += dropped;
+        }
+        shelf.buckets.retain(|_, b| !b.is_empty());
+        shelf.held_bytes -= freed;
+        shelf.stats.trimmed += count;
+    }
+
+    /// Drop every shelved buffer (counted as trimmed).
+    pub fn trim_all(&self) {
+        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let shelf = &mut *guard;
+        let count: usize = shelf.buckets.values().map(Vec::len).sum();
+        shelf.buckets.clear();
+        shelf.held_bytes = 0;
+        shelf.stats.trimmed += count;
     }
 
     /// Cumulative allocation counters.
@@ -114,11 +168,10 @@ impl BufferPool {
         guard.held_bytes
     }
 
-    /// Drop every shelved buffer (counters are kept).
+    /// Drop every shelved buffer (alias of [`BufferPool::trim_all`];
+    /// cumulative counters are kept).
     pub fn clear(&self) {
-        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
-        guard.buckets.clear();
-        guard.held_bytes = 0;
+        self.trim_all();
     }
 }
 
@@ -180,7 +233,29 @@ mod tests {
         pool.put(vec![0.0; 8]);
         pool.clear();
         assert_eq!(pool.held_bytes(), 0);
+        assert_eq!(pool.stats().trimmed, 1);
         assert_eq!(pool.take(8).len(), 8);
         assert_eq!(pool.stats().hits, 0);
+    }
+
+    #[test]
+    fn stale_epochs_are_trimmed_and_current_ones_kept() {
+        let pool = BufferPool::new();
+        pool.begin_run();
+        pool.put(vec![0.0; 4]); // epoch 1
+        pool.begin_run();
+        pool.put(vec![0.0; 8]); // epoch 2 (current)
+        pool.trim_stale();
+        let s = pool.stats();
+        assert_eq!(s.trimmed, 1, "{s:?}");
+        assert_eq!(pool.held_bytes(), 32, "the current-epoch buffer stays");
+        // The kept buffer still serves a hit.
+        assert_eq!(pool.take(8).len(), 8);
+        assert_eq!(pool.stats().hits, 1);
+        // A re-taken-and-re-put buffer is re-stamped to the new epoch.
+        pool.begin_run();
+        pool.put(pool.take(16)); // miss, then put at epoch 3
+        pool.trim_stale();
+        assert_eq!(pool.held_bytes(), 64);
     }
 }

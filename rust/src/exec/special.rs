@@ -1,0 +1,328 @@
+//! Native execution of [`SpecialOp`] chain entries — ops whose numerics
+//! the GCONV loop-nest interpreter cannot express because an operand
+//! genuinely under-covers the nest:
+//!
+//! * **Max-pool BP** (argmax routing): the entry's `input` operand is
+//!   the pooled-output gradient, its `kernel` operand the saved forward
+//!   input. The routine recomputes the argmax mask from the forward
+//!   input (first maximum in reduction order, padding skipped exactly
+//!   like the forward `Max` reduction) and *scatters* each window's
+//!   gradient onto the winning input element; overlapping windows
+//!   accumulate, fully-padded windows route nothing. The scatter runs
+//!   sequentially — max-pool BP is a vanishing fraction of a training
+//!   chain's work next to the conv BP/WG GEMMs.
+//! * **Concat**: copy the `input` operand then the `kernel` operand
+//!   side by side along the concatenation axis (row-major block copies).
+//!
+//! Both routines validate operand element counts and produce tensors
+//! shaped by the entry's [`GconvOp`] output extents, so consumers bind
+//! them exactly like interpreter-produced buffers.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::gconv::chain::SpecialOp;
+use crate::gconv::op::{DimParams, GconvOp};
+use crate::ir::Dim;
+
+use super::interp::MAX_DIMS;
+use super::pool::BufferPool;
+use super::tensor::{row_major_strides, Tensor};
+
+/// Number of pooled-output gradient elements a `MaxPoolBp` special
+/// expects: the product of the forward pooling geometry's output
+/// extents.
+pub(super) fn maxpool_bp_windows(fwd: &[(Dim, DimParams)]) -> usize {
+    fwd.iter().map(|&(_, p)| p.output_extent()).product()
+}
+
+/// Evaluate one special entry over concrete operand tensors.
+pub(super) fn eval_special(
+    op: &GconvOp,
+    sp: &SpecialOp,
+    input: &Tensor,
+    kernel: Option<&Tensor>,
+    pool: Option<&BufferPool>,
+) -> Result<Tensor> {
+    match sp {
+        SpecialOp::MaxPoolBp { fwd, in_extents } => {
+            let x = kernel
+                .with_context(|| format!("{}: max-pool BP needs the forward input", op.name))?;
+            eval_maxpool_bp(op, fwd, in_extents, input, x, pool)
+        }
+        SpecialOp::Concat { axis, pre_extent, branch_extent } => {
+            let b = kernel
+                .with_context(|| format!("{}: concat needs its branch operand", op.name))?;
+            eval_concat(op, *axis, *pre_extent, *branch_extent, input, b, pool)
+        }
+    }
+}
+
+/// Output extents of the entry's op (consumers bind against these).
+fn out_dims(op: &GconvOp) -> Vec<usize> {
+    let d = op.output_extents();
+    if d.is_empty() {
+        vec![1]
+    } else {
+        d
+    }
+}
+
+fn take_buffer(pool: Option<&BufferPool>, n: usize) -> Vec<f32> {
+    match pool {
+        Some(p) => p.take(n),
+        None => vec![0.0; n],
+    }
+}
+
+/// Max-pool backward: recompute the argmax per forward window from the
+/// saved forward input `x` and scatter the gradient `g` accordingly.
+fn eval_maxpool_bp(
+    op: &GconvOp,
+    fwd: &[(Dim, DimParams)],
+    in_extents: &[usize],
+    g: &Tensor,
+    x: &Tensor,
+    pool: Option<&BufferPool>,
+) -> Result<Tensor> {
+    let nd = fwd.len();
+    ensure!(nd == in_extents.len() && nd <= MAX_DIMS, "{}: bad routing geometry", op.name);
+    for &(d, p) in fwd {
+        ensure!(
+            p.ng == 1 && p.nop == 1,
+            "{}: routing dimension {d} must be a plain window",
+            op.name
+        );
+    }
+    let out_total: usize = in_extents.iter().product();
+    ensure!(
+        x.elements() == out_total,
+        "{}: forward input has {} elements, routing expects {}",
+        op.name,
+        x.elements(),
+        out_total
+    );
+    ensure!(
+        op.output_elements() == out_total,
+        "{}: op output ({}) disagrees with routing extents ({})",
+        op.name,
+        op.output_elements(),
+        out_total
+    );
+    let windows = maxpool_bp_windows(fwd);
+    ensure!(
+        g.elements() == windows,
+        "{}: gradient has {} elements, forward pooling produced {}",
+        op.name,
+        g.elements(),
+        windows
+    );
+
+    let win_ext: Vec<usize> = fwd.iter().map(|&(_, p)| p.output_extent()).collect();
+    let nks: Vec<usize> = fwd.iter().map(|&(_, p)| p.nks).collect();
+    let red: usize = nks.iter().product::<usize>().max(1);
+    let x_strides = row_major_strides(in_extents);
+    let w_strides = row_major_strides(&win_ext);
+    let red_strides = row_major_strides(&nks);
+
+    let mut data = take_buffer(pool, out_total);
+    data.fill(0.0); // recycled buffers come back stale; the scatter accumulates
+    let xs = x.data();
+    let gs = g.data();
+    for w in 0..windows {
+        let mut pos0 = [0i64; MAX_DIMS];
+        for i in 0..nd {
+            let p = fwd[i].1;
+            let oc = (w / w_strides[i]) % win_ext[i];
+            pos0[i] = (oc * p.s) as i64 - p.ps as i64;
+        }
+        // First in-bounds maximum in reduction order — ties route to the
+        // earliest element, deterministically.
+        let mut best: Option<(usize, f32)> = None;
+        for r in 0..red {
+            let mut idx = 0usize;
+            let mut oob = false;
+            for i in 0..nd {
+                let ks = (r / red_strides[i]) % nks[i];
+                let pos = pos0[i] + ks as i64;
+                if pos < 0 || pos >= in_extents[i] as i64 {
+                    oob = true;
+                    break;
+                }
+                idx += pos as usize * x_strides[i];
+            }
+            if oob {
+                continue;
+            }
+            let v = xs[idx];
+            let better = match best {
+                None => true,
+                Some((_, bv)) => v > bv,
+            };
+            if better {
+                best = Some((idx, v));
+            }
+        }
+        if let Some((idx, _)) = best {
+            data[idx] += gs[w];
+        }
+    }
+    Tensor::new(&out_dims(op), data)
+}
+
+/// Pairwise concatenation: `a` then `b` along the axis at `axis` of the
+/// op's dims (row-major block copies; every output element written
+/// exactly once, so recycled buffers need no zeroing).
+fn eval_concat(
+    op: &GconvOp,
+    axis: usize,
+    pre: usize,
+    branch: usize,
+    a: &Tensor,
+    b: &Tensor,
+    pool: Option<&BufferPool>,
+) -> Result<Tensor> {
+    let dims = out_dims(op);
+    ensure!(axis < dims.len(), "{}: concat axis {} out of range", op.name, axis);
+    ensure!(
+        dims[axis] == pre + branch,
+        "{}: axis extent {} != {} + {}",
+        op.name,
+        dims[axis],
+        pre,
+        branch
+    );
+    let outer: usize = dims[..axis].iter().product();
+    let inner: usize = dims[axis + 1..].iter().product();
+    ensure!(
+        a.elements() == outer * pre * inner,
+        "{}: prefix operand has {} elements, expected {}",
+        op.name,
+        a.elements(),
+        outer * pre * inner
+    );
+    ensure!(
+        b.elements() == outer * branch * inner,
+        "{}: branch operand has {} elements, expected {}",
+        op.name,
+        b.elements(),
+        outer * branch * inner
+    );
+    let total = outer * (pre + branch) * inner;
+    let mut data = take_buffer(pool, total);
+    debug_assert_eq!(data.len(), total);
+    let pa = a.data();
+    let pb = b.data();
+    let (pn, bn) = (pre * inner, branch * inner);
+    for o in 0..outer {
+        let dst = o * (pn + bn);
+        data[dst..dst + pn].copy_from_slice(&pa[o * pn..(o + 1) * pn]);
+        data[dst + pn..dst + pn + bn].copy_from_slice(&pb[o * bn..(o + 1) * bn]);
+    }
+    Tensor::new(&dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::op::{DataRef, MainOp, PostOp, PreOp, ReduceOp};
+
+    fn movement_op(name: &str, dims: Vec<(Dim, DimParams)>, kernel: Option<DataRef>) -> GconvOp {
+        GconvOp {
+            name: name.into(),
+            dims,
+            pre: PreOp::None,
+            main: MainOp::Mul,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: DataRef::External("g".into()),
+            kernel,
+        }
+    }
+
+    #[test]
+    fn maxpool_bp_routes_to_window_winners() {
+        // 1-D pool, k2 s2 over [1, 3, 2, 4]: winners at 1 and 3.
+        let op = movement_op(
+            "bp",
+            vec![(Dim::W, DimParams::g(4))],
+            Some(DataRef::External("x".into())),
+        );
+        let fwd = vec![(Dim::W, DimParams::window(2, 2, 2, 0))];
+        let sp = SpecialOp::MaxPoolBp { fwd, in_extents: vec![4] };
+        let g = Tensor::new(&[2], vec![10.0, 20.0]).unwrap();
+        let x = Tensor::new(&[4], vec![1.0, 3.0, 2.0, 4.0]).unwrap();
+        let out = eval_special(&op, &sp, &g, Some(&x), None).unwrap();
+        assert_eq!(out.data(), &[0.0, 10.0, 0.0, 20.0]);
+    }
+
+    #[test]
+    fn maxpool_bp_overlapping_windows_accumulate_and_ties_go_first() {
+        // k2 s1 over [5, 5, 1]: window 0 ties → first element; window 1
+        // picks index 1; gradients accumulate on shared winners.
+        let op = movement_op(
+            "bp",
+            vec![(Dim::W, DimParams::g(3))],
+            Some(DataRef::External("x".into())),
+        );
+        let fwd = vec![(Dim::W, DimParams::window(2, 2, 1, 0))];
+        let sp = SpecialOp::MaxPoolBp { fwd, in_extents: vec![3] };
+        let g = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let x = Tensor::new(&[3], vec![5.0, 5.0, 1.0]).unwrap();
+        let out = eval_special(&op, &sp, &g, Some(&x), None).unwrap();
+        assert_eq!(out.data(), &[1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_bp_skips_fully_padded_and_clipped_windows() {
+        // Ceil-mode: 3 windows of k2 s2 over 5 inputs; the last window
+        // covers only index 4 (overhang = end padding).
+        let op = movement_op(
+            "bp",
+            vec![(Dim::W, DimParams::g(5))],
+            Some(DataRef::External("x".into())),
+        );
+        let fwd = vec![(Dim::W, DimParams::window_ceil(3, 2, 2, 0, 5))];
+        let sp = SpecialOp::MaxPoolBp { fwd, in_extents: vec![5] };
+        let g = Tensor::new(&[3], vec![1.0, 2.0, 4.0]).unwrap();
+        let x = Tensor::new(&[5], vec![0.0, 9.0, 8.0, 0.0, 7.0]).unwrap();
+        let out = eval_special(&op, &sp, &g, Some(&x), None).unwrap();
+        assert_eq!(out.data(), &[0.0, 1.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn concat_copies_blocks_along_the_axis() {
+        // outer 2 (B), axis C with 2 + 1, inner 2 (W).
+        let dims = vec![
+            (Dim::B, DimParams::opc(2)),
+            (Dim::C, DimParams::opc(3)),
+            (Dim::W, DimParams::opc(2)),
+        ];
+        let op = movement_op("cat", dims, Some(DataRef::External("b".into())));
+        let sp = SpecialOp::Concat { axis: 1, pre_extent: 2, branch_extent: 1 };
+        let a = Tensor::from_fn(&[2, 2, 2], |i| i as f32);
+        let b = Tensor::new(&[2, 1, 2], vec![100.0, 101.0, 110.0, 111.0]).unwrap();
+        let out = eval_special(&op, &sp, &a, Some(&b), None).unwrap();
+        assert_eq!(out.dims(), &[2, 3, 2]);
+        #[rustfmt::skip]
+        let want = vec![
+            0.0, 1.0, 2.0, 3.0, 100.0, 101.0,
+            4.0, 5.0, 6.0, 7.0, 110.0, 111.0,
+        ];
+        assert_eq!(out.data(), &want);
+    }
+
+    #[test]
+    fn operand_count_mismatches_are_errors() {
+        let op = movement_op(
+            "bp",
+            vec![(Dim::W, DimParams::g(4))],
+            Some(DataRef::External("x".into())),
+        );
+        let fwd = vec![(Dim::W, DimParams::window(2, 2, 2, 0))];
+        let sp = SpecialOp::MaxPoolBp { fwd, in_extents: vec![4] };
+        let g = Tensor::zeros(&[3]); // forward produced 2 windows
+        let x = Tensor::zeros(&[4]);
+        assert!(eval_special(&op, &sp, &g, Some(&x), None).is_err());
+        assert!(eval_special(&op, &sp, &Tensor::zeros(&[2]), None, None).is_err());
+    }
+}

@@ -1,8 +1,8 @@
 //! The GCONV chain: end-to-end CNN computation as a sequence of GCONVs
 //! linked by producer/consumer relations (paper §3.2).
 
-use super::op::{DataRef, GconvOp};
-use crate::ir::NodeId;
+use super::op::{DataRef, DimParams, GconvOp};
+use crate::ir::{Dim, NodeId};
 use std::fmt;
 
 /// Propagation phase a chain entry belongs to.
@@ -40,6 +40,42 @@ pub struct FusedOp {
     pub param_elements: usize,
 }
 
+/// A chain entry whose numerics the GCONV loop-nest interpreter cannot
+/// express, executed by a dedicated native routine instead (see
+/// `exec::special`). The entry's [`GconvOp`] still carries the loop
+/// footprint the analytical models read (work, operand extents), so the
+/// cycle/movement/energy models are unaffected by this metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecialOp {
+    /// Max-pool backward (argmax routing): the entry's `input` operand
+    /// is the pooled-output gradient and its `kernel` operand the saved
+    /// forward input. `fwd` is the forward pooling geometry and
+    /// `in_extents` the forward-input extents, dimension for dimension.
+    /// The native engine recomputes the argmax mask from the forward
+    /// input and routes each window's gradient to the winning element
+    /// (first maximum in reduction order; fully-padded windows route
+    /// nothing).
+    MaxPoolBp {
+        /// Forward pooling loop dims (`pool_dims` of the lowering).
+        fwd: Vec<(Dim, DimParams)>,
+        /// Forward-input extent per `fwd` dimension.
+        in_extents: Vec<usize>,
+    },
+    /// One concatenation step: copy the `input` operand then the
+    /// `kernel` operand side by side along the axis at position `axis`
+    /// of the entry's dims (`pre_extent + branch_extent` equals that
+    /// axis' output extent). Multi-branch concats lower to a chain of
+    /// these pairwise steps.
+    Concat {
+        /// Index of the concatenation axis within the op's dims.
+        axis: usize,
+        /// Extent the `input` operand contributes along the axis.
+        pre_extent: usize,
+        /// Extent the `kernel` operand contributes along the axis.
+        branch_extent: usize,
+    },
+}
+
 /// One GCONV on the chain plus provenance metadata.
 #[derive(Clone, Debug)]
 pub struct ChainEntry {
@@ -54,12 +90,22 @@ pub struct ChainEntry {
     pub phase: Phase,
     /// GCONVs fused into this one (empty before `fuse_chain`).
     pub fused: Vec<FusedOp>,
+    /// Set when the entry executes through a dedicated native routine
+    /// instead of the loop-nest interpreter. Special entries never
+    /// participate in operation fusion.
+    pub special: Option<SpecialOp>,
 }
 
 impl ChainEntry {
     /// Entry with no fusions.
     pub fn new(op: GconvOp, source: NodeId, traditional: bool, phase: Phase) -> Self {
-        ChainEntry { op, source, traditional, phase, fused: Vec::new() }
+        ChainEntry { op, source, traditional, phase, fused: Vec::new(), special: None }
+    }
+
+    /// Attach a special-execution routine to the entry.
+    pub fn with_special(mut self, sp: SpecialOp) -> Self {
+        self.special = Some(sp);
+        self
     }
 }
 

@@ -6,7 +6,9 @@
 //! the kernels flipped, weight gradient = correlation of activations with
 //! output gradients, reduced over the batch).
 
+use super::fp::pool_dims;
 use super::{ew_dims, ew_op, reduce_op, Lowerer};
+use crate::gconv::chain::SpecialOp;
 use crate::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
 use crate::ir::{Dim, Layer, NodeId, PoolKind, Shape};
 
@@ -89,20 +91,33 @@ impl Lowerer<'_> {
                 };
                 self.emit_wg(id, dw);
             }
-            Layer::Pool { kind, kernel, stride, .. } => {
+            Layer::Pool { kind, kernel, stride, pad } => {
                 self.pool_bp(
                     id,
                     &name,
                     &in_shapes[0],
+                    &out,
                     *kind,
                     (1, *kernel, *kernel),
                     (1, *stride, *stride),
+                    *pad,
                     g_out,
                     node.inputs[0],
                 );
             }
             Layer::Pool3d { kind, kernel, stride } => {
-                self.pool_bp(id, &name, &in_shapes[0], *kind, *kernel, *stride, g_out, node.inputs[0]);
+                self.pool_bp(
+                    id,
+                    &name,
+                    &in_shapes[0],
+                    &out,
+                    *kind,
+                    *kernel,
+                    *stride,
+                    0,
+                    g_out,
+                    node.inputs[0],
+                );
             }
             Layer::GlobalAvgPool => {
                 let s = &in_shapes[0];
@@ -509,25 +524,40 @@ impl Lowerer<'_> {
         id: NodeId,
         name: &str,
         input: &Shape,
+        output: &Shape,
         kind: PoolKind,
         kernel: (usize, usize, usize),
         stride: (usize, usize, usize),
+        pad: usize,
         g_out: DataRef,
         src: NodeId,
     ) {
         let di = match kind {
             PoolKind::Max => {
-                // Route through the stored argmax mask.
-                ew_op(
-                    &format!("{name}.BP"),
-                    input,
-                    &input.dims(),
-                    PreOp::None,
-                    MainOp::Mul,
-                    PostOp::None,
-                    g_out,
-                    Some(DataRef::External(format!("{name}.argmax"))),
-                )
+                // Argmax routing is pure data movement whose gradient
+                // operand genuinely under-covers the loop nest, so it
+                // cannot run as a GCONV. Lower it as a *special* entry:
+                // the native engine recomputes the argmax mask from the
+                // saved forward input (the kernel operand) and routes
+                // each window's gradient to the winning element. The op
+                // keeps the analytical footprint of the old
+                // mask-multiply form (same dims, main and element
+                // counts), so the cycle/movement models are unchanged.
+                let op = GconvOp {
+                    name: format!("{name}.BP"),
+                    dims: ew_dims(input, &input.dims()),
+                    pre: PreOp::None,
+                    main: MainOp::Mul,
+                    reduce: ReduceOp::None,
+                    post: PostOp::None,
+                    input: g_out,
+                    kernel: Some(self.act_of(src)),
+                };
+                let fwd = pool_dims(input, output, kernel, stride, pad);
+                let in_extents = fwd.iter().map(|&(d, _)| input.extent(d)).collect();
+                let di = self.emit_bp_special(id, op, SpecialOp::MaxPoolBp { fwd, in_extents });
+                self.accumulate_grad(src, di);
+                return;
             }
             PoolKind::Avg => {
                 // Spread dO/k over each window: a correlation of dO with a

@@ -1,6 +1,7 @@
 //! Forward-propagation lowering of each layer kind.
 
 use super::{ew_dims, ew_op, reduce_op, Lowerer};
+use crate::gconv::chain::SpecialOp;
 use crate::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
 use crate::ir::{Dim, Layer, NodeId, PoolKind, Shape};
 
@@ -214,23 +215,56 @@ impl Lowerer<'_> {
                 self.emit_fp(id, op)
             }
             Layer::Concat => {
-                // One copy GCONV per branch; the last emitted stands for
-                // the concatenated activation.
-                let mut last = None;
-                for (bi, (r, s)) in ins.iter().zip(&in_shapes).enumerate() {
+                // Pairwise channel-concatenation steps (pure data
+                // movement, executed by a dedicated native routine):
+                // each step copies the accumulated prefix and the next
+                // branch side by side along C. A single-input concat
+                // degenerates to one copy GCONV.
+                assert!(!ins.is_empty(), "concat with no inputs");
+                if ins.len() == 1 {
                     let op = ew_op(
-                        &format!("{name}.FP{}", bi + 1),
-                        s,
+                        &format!("{name}.FP1"),
+                        &in_shapes[0],
                         &[],
                         PreOp::None,
                         MainOp::Pass,
                         PostOp::None,
-                        r.clone(),
+                        ins[0].clone(),
                         None,
                     );
-                    last = Some(self.emit_fp(id, op));
+                    self.emit_fp(id, op)
+                } else {
+                    let mut acc = ins[0].clone();
+                    let mut acc_c = in_shapes[0].extent(Dim::C);
+                    let mut acc_shape = in_shapes[0].clone();
+                    for (bi, (r, s)) in ins.iter().zip(&in_shapes).enumerate().skip(1) {
+                        let branch_c = s.extent(Dim::C);
+                        acc_shape = acc_shape.with(Dim::C, acc_c + branch_c);
+                        let dims = ew_dims(&acc_shape, &[]);
+                        let axis = dims
+                            .iter()
+                            .position(|&(d, _)| d == Dim::C)
+                            .expect("concat output has no C dimension");
+                        let op = GconvOp {
+                            name: format!("{name}.FP{bi}"),
+                            dims,
+                            pre: PreOp::None,
+                            main: MainOp::Pass,
+                            reduce: ReduceOp::None,
+                            post: PostOp::None,
+                            input: acc.clone(),
+                            kernel: Some(r.clone()),
+                        };
+                        let sp = SpecialOp::Concat {
+                            axis,
+                            pre_extent: acc_c,
+                            branch_extent: branch_c,
+                        };
+                        acc = self.emit_fp_special(id, op, sp);
+                        acc_c += branch_c;
+                    }
+                    acc
                 }
-                last.expect("concat with no inputs")
             }
             Layer::Eltwise => {
                 // Pairwise adds (kernel = other operand, varies everywhere).
@@ -254,13 +288,21 @@ impl Lowerer<'_> {
                 let s = &in_shapes[0];
                 // Each RoI max-pools an adaptive window; modelled as a
                 // pooled GCONV whose B dim carries batch × #rois.
-                let kh = (s.extent(Dim::H)).div_ceil(output.0).max(1);
-                let kw = (s.extent(Dim::W)).div_ceil(output.1).max(1);
+                // Adaptive-pool arithmetic: stride = ⌊in/out⌋ and kernel
+                // = in − (out−1)·stride, so the windows exactly tile the
+                // input (any residual overhang becomes end padding and
+                // is skipped by the Max reduction).
+                let adaptive = |inp: usize, out: usize| {
+                    let st = (inp / out).max(1);
+                    let k = inp.saturating_sub((out - 1) * st).max(1);
+                    let pe = ((out - 1) * st + k).saturating_sub(inp);
+                    DimParams { nopc: out, nks: k, s: st, pe, ..Default::default() }
+                };
                 let dims = vec![
                     (Dim::B, DimParams::opc(s.extent(Dim::B) * num_rois)),
                     (Dim::C, DimParams::opc(s.extent(Dim::C))),
-                    (Dim::H, DimParams { nopc: output.0, nks: kh, s: kh, ..Default::default() }),
-                    (Dim::W, DimParams { nopc: output.1, nks: kw, s: kw, ..Default::default() }),
+                    (Dim::H, adaptive(s.extent(Dim::H), output.0)),
+                    (Dim::W, adaptive(s.extent(Dim::W), output.1)),
                 ];
                 let op = GconvOp {
                     name: format!("{name}.fp"),
@@ -276,17 +318,36 @@ impl Lowerer<'_> {
             }
             Layer::Proposal { .. } => {
                 // Box regression (per-anchor affine) + objectness LUT +
-                // NMS-style max over neighbourhoods; three GCONVs.
-                let g1 = ew_op(
-                    &format!("{name}.FP1"),
-                    &out,
-                    &[Dim::C],
-                    PreOp::None,
-                    MainOp::Mul,
-                    PostOp::None,
-                    ins[0].clone(),
-                    Some(DataRef::Weights(format!("{name}.anchors"))),
-                );
+                // NMS-style max over neighbourhoods; three GCONVs. The
+                // regression widens C (4 coordinates per anchor vs 2
+                // scores): Ng groups of Nop parallel one-weight kernels
+                // when the widths divide, a full Nop×Nks mix otherwise.
+                let s = &in_shapes[0];
+                let icc = s.extent(Dim::C);
+                let occ = out.extent(Dim::C);
+                let (cp, red) = if occ % icc == 0 {
+                    (DimParams { ng: icc, nop: occ / icc, ..Default::default() }, ReduceOp::None)
+                } else {
+                    (DimParams { nop: occ, nks: icc, ..Default::default() }, ReduceOp::Add)
+                };
+                let mut dims = Vec::new();
+                for (d, n) in out.iter() {
+                    if d == Dim::C {
+                        dims.push((d, cp));
+                    } else if n > 1 {
+                        dims.push((d, DimParams::opc(n)));
+                    }
+                }
+                let g1 = GconvOp {
+                    name: format!("{name}.FP1"),
+                    dims,
+                    pre: PreOp::None,
+                    main: MainOp::Mul,
+                    reduce: red,
+                    post: PostOp::None,
+                    input: ins[0].clone(),
+                    kernel: Some(DataRef::Weights(format!("{name}.anchors"))),
+                };
                 let g1 = self.emit_fp_tmp(id, g1);
                 let g2 = ew_op(
                     &format!("{name}.FP2"),
@@ -392,11 +453,23 @@ impl Lowerer<'_> {
                         Some(denom),
                     );
                     let c = self.emit_fp_tmp(id, c);
-                    // s_j = Σ_i c_{ij} û_{j|i} — reduce over input capsules.
+                    // s_j = Σ_i c_{ij} û_{j|i} — reduce over input
+                    // capsules. The input is the *fixed* prediction
+                    // tensor û (reading the squashed v here under-covered
+                    // the nest from iteration 1). KNOWN APPROXIMATION:
+                    // û is laid out i-major (FP1's Ng = in_caps) while
+                    // this nest reads it j-major — the four-loop algebra
+                    // cannot transpose (groups are always outermost), so
+                    // the routing pairs c_{ij} with a permuted û element.
+                    // Loop counts, operand footprints and executability
+                    // are exact; the permutation is the same one the
+                    // seed's analytical form carried.
                     let sum = GconvOp {
                         name: format!("{name}.R{it}.agree_sum"),
                         dims: vec![
-                            (Dim::B, DimParams::opc(nbs)),
+                            // B is a group dim: the routing coefficients
+                            // c (the kernel operand) vary per sample.
+                            (Dim::B, DimParams::g(nbs)),
                             (Dim::C, DimParams { ng: *out_caps, nks: in_caps, ..Default::default() }),
                             (Dim::V, DimParams::opc(*out_vec)),
                         ],
@@ -404,18 +477,24 @@ impl Lowerer<'_> {
                         main: MainOp::Mul,
                         reduce: ReduceOp::Add,
                         post: PostOp::None,
-                        input: v.clone(),
+                        input: pred.clone(),
                         kernel: Some(c),
                     };
                     let sj = self.emit_fp_tmp(id, sum);
                     v = self.lower_squash(id, &format!("{name}.R{it}"), &out, sj, 2);
                     if it + 1 < *routing {
-                        // b += û·v agreement (dot over V, broadcast back).
+                        // b += û·v agreement (dot over V). The kernel v
+                        // varies per (sample, output capsule) only, so B
+                        // is a group dim and C splits into Ng = out_caps
+                        // groups of Nopc = in_caps kernel-sharing slots —
+                        // the kernel operand binds v's extents exactly.
+                        // Reads û j-major like agree_sum (same known
+                        // layout approximation, same work as before).
                         let agree = GconvOp {
                             name: format!("{name}.R{it}.logit_upd"),
                             dims: vec![
-                                (Dim::B, DimParams::opc(nbs)),
-                                (Dim::C, DimParams::g(in_caps * out_caps)),
+                                (Dim::B, DimParams::g(nbs)),
+                                (Dim::C, DimParams { ng: *out_caps, nopc: in_caps, ..Default::default() }),
                                 (Dim::V, DimParams::ks(*out_vec)),
                             ],
                             pre: PreOp::None,
@@ -617,6 +696,33 @@ pub(crate) fn conv_gconv(
     GconvOp::conv(name, dims, x, w)
 }
 
+/// Loop dims of a pooling layer, shared by the forward lowering and the
+/// max-pool BP routing metadata. Ceil-mode output extents (Caffe rounds
+/// up, [`crate::ir::layer::pool_out`]) make the last window overhang the
+/// input; the overhang becomes end padding (`pe`) so the covered extent
+/// matches the real input and the op binds natively.
+pub(crate) fn pool_dims(
+    input: &Shape,
+    output: &Shape,
+    kernel: (usize, usize, usize),
+    stride: (usize, usize, usize),
+    pad: usize,
+) -> Vec<(Dim, DimParams)> {
+    let mut dims = vec![
+        (Dim::B, DimParams::opc(input.extent(Dim::B))),
+        (Dim::C, DimParams::opc(input.extent(Dim::C))),
+    ];
+    let window = |d: Dim, k: usize, s: usize, ps: usize| {
+        DimParams::window_ceil(output.extent(d), k, s, ps, input.extent(d))
+    };
+    if input.extent(Dim::T) > 1 {
+        dims.push((Dim::T, window(Dim::T, kernel.0, stride.0, 0)));
+    }
+    dims.push((Dim::H, window(Dim::H, kernel.1, stride.1, pad)));
+    dims.push((Dim::W, window(Dim::W, kernel.2, stride.2, pad)));
+    dims
+}
+
 /// Build the GCONV of a pooling layer.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn pool_gconv(
@@ -629,15 +735,7 @@ pub(crate) fn pool_gconv(
     pad: usize,
     x: DataRef,
 ) -> GconvOp {
-    let mut dims = vec![
-        (Dim::B, DimParams::opc(input.extent(Dim::B))),
-        (Dim::C, DimParams::opc(input.extent(Dim::C))),
-    ];
-    if input.extent(Dim::T) > 1 {
-        dims.push((Dim::T, DimParams::window(output.extent(Dim::T), kernel.0, stride.0, 0)));
-    }
-    dims.push((Dim::H, DimParams::window(output.extent(Dim::H), kernel.1, stride.1, pad)));
-    dims.push((Dim::W, DimParams::window(output.extent(Dim::W), kernel.2, stride.2, pad)));
+    let dims = pool_dims(input, output, kernel, stride, pad);
     let (reduce, post) = match kind {
         PoolKind::Max => (ReduceOp::Max, PostOp::None),
         PoolKind::Avg => {

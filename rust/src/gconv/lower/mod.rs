@@ -19,7 +19,7 @@
 mod bp;
 mod fp;
 
-use super::chain::{ChainEntry, GconvChain, Phase};
+use super::chain::{ChainEntry, GconvChain, Phase, SpecialOp};
 use super::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
 use crate::ir::{Dim, Network, NodeId, Shape};
 
@@ -86,11 +86,25 @@ impl<'n> Lowerer<'n> {
         self.emit_fp(node, op)
     }
 
+    /// Push an FP op carrying a special-execution routine.
+    pub fn emit_fp_special(&mut self, node: NodeId, op: GconvOp, sp: SpecialOp) -> DataRef {
+        let traditional = self.net.node(node).layer.is_traditional();
+        let entry = ChainEntry::new(op, node, traditional, Phase::Fp).with_special(sp);
+        DataRef::Gconv(self.chain.push(entry))
+    }
+
     /// Push a BP op.
     pub fn emit_bp(&mut self, node: NodeId, op: GconvOp) -> DataRef {
         let traditional = self.net.node(node).layer.is_traditional();
         let idx = self.chain.push(ChainEntry::new(op, node, traditional, Phase::Bp));
         DataRef::Gconv(idx)
+    }
+
+    /// Push a BP op carrying a special-execution routine.
+    pub fn emit_bp_special(&mut self, node: NodeId, op: GconvOp, sp: SpecialOp) -> DataRef {
+        let traditional = self.net.node(node).layer.is_traditional();
+        let entry = ChainEntry::new(op, node, traditional, Phase::Bp).with_special(sp);
+        DataRef::Gconv(self.chain.push(entry))
     }
 
     /// Push a weight-gradient op.

@@ -10,5 +10,7 @@ pub mod chain;
 pub mod lower;
 pub mod op;
 
-pub use chain::{ChainEntry, GconvChain};
-pub use op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
+pub use chain::{ChainEntry, GconvChain, SpecialOp};
+pub use op::{
+    DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp, ScalarStage, StageStack,
+};

@@ -25,13 +25,20 @@ pub struct DimParams {
     pub nks: usize,
     /// Stride.
     pub s: usize,
-    /// Padding.
+    /// Padding (symmetric, both window ends).
     pub ps: usize,
+    /// Extra *end* padding beyond the symmetric `ps`. Ceil-mode pooling
+    /// (Caffe rounds output extents up) makes the last window overhang
+    /// the input; modelling the overhang as end padding keeps the
+    /// covered input extent equal to the real input so the op binds —
+    /// the native interpreter already treats out-of-range positions as
+    /// padding (zero under `Add`, skipped under `Max`).
+    pub pe: usize,
 }
 
 impl Default for DimParams {
     fn default() -> Self {
-        DimParams { ng: 1, nop: 1, nopc: 1, nks: 1, s: 1, ps: 0 }
+        DimParams { ng: 1, nop: 1, nopc: 1, nks: 1, s: 1, ps: 0, pe: 0 }
     }
 }
 
@@ -56,6 +63,14 @@ impl DimParams {
     pub fn window(nopc: usize, nks: usize, s: usize, ps: usize) -> Self {
         DimParams { nopc, nks, s, ps, ..Default::default() }
     }
+    /// Ceil-mode sliding window: like [`DimParams::window`] but clipping
+    /// the covered extent to `input` via end padding (`pe`) when the
+    /// last window overhangs (Caffe pooling rounds output extents up).
+    pub fn window_ceil(nopc: usize, nks: usize, s: usize, ps: usize, input: usize) -> Self {
+        let covered = (nopc - 1) * s + nks;
+        let pe = covered.saturating_sub(2 * ps).saturating_sub(input);
+        DimParams { nopc, nks, s, ps, pe, ..Default::default() }
+    }
     /// Fully-connected / reduction dimension `[Nop: o, Nks: k]`.
     pub fn op_ks(nop: usize, nks: usize) -> Self {
         DimParams { nop, nks, ..Default::default() }
@@ -67,13 +82,14 @@ impl DimParams {
 
     /// Input extent covered by this dimension, from Eq. (1) (with the
     /// standard convolution arithmetic `Nips = (Nopc−1)·s + Nks − 2·ps`;
-    /// the paper's printing has a `+1` typo).
+    /// the paper's printing has a `+1` typo). Ceil-mode end padding
+    /// (`pe`) shrinks the covered extent further.
     pub fn input_extent(&self) -> usize {
         let covered = (self.nopc - 1) * self.s + self.nks;
         // Degenerate windows (kernel larger than the padded input, which
         // backward-pass "full" correlations can produce at tensor edges)
         // clamp to a single input element.
-        self.ng * covered.saturating_sub(2 * self.ps).max(1)
+        self.ng * covered.saturating_sub(2 * self.ps + self.pe).max(1)
     }
 
     /// Kernel parameters stored for this dimension.
@@ -149,6 +165,82 @@ impl fmt::Display for Param {
     }
 }
 
+/// One scalar stage of a composed `pre`/`post` pipeline written by
+/// executable operation fusion (§4.3): the element-wise maps of the
+/// absorbed ops, applied in order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScalarStage {
+    /// `x²`.
+    Square,
+    /// `c·x`.
+    Mul(f32),
+    /// Look-up-table function by lowering name.
+    Lut(&'static str),
+}
+
+/// Most scalar stages a composed pipeline can hold; the fusion pass
+/// refuses to compose further rather than overflow.
+pub const MAX_FUSED_STAGES: usize = 6;
+
+/// A fixed-capacity, `Copy` pipeline of scalar stages (the slots past
+/// `len` stay at a fixed filler so derived equality is well-defined).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageStack {
+    len: u8,
+    stages: [ScalarStage; MAX_FUSED_STAGES],
+}
+
+impl StageStack {
+    /// Empty pipeline (identity).
+    pub const fn empty() -> Self {
+        StageStack { len: 0, stages: [ScalarStage::Square; MAX_FUSED_STAGES] }
+    }
+
+    /// Append a stage; returns false (leaving the stack unchanged) when
+    /// the stack is full.
+    pub fn push(&mut self, s: ScalarStage) -> bool {
+        if (self.len as usize) < MAX_FUSED_STAGES {
+            self.stages[self.len as usize] = s;
+            self.len += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Append every stage of `other`; returns false (leaving the stack
+    /// unchanged) when the combined pipeline would not fit.
+    pub fn extend(&mut self, other: &StageStack) -> bool {
+        if self.len as usize + other.len as usize > MAX_FUSED_STAGES {
+            return false;
+        }
+        for &s in other.as_slice() {
+            self.push(s);
+        }
+        true
+    }
+
+    /// The stages, in application order.
+    pub fn as_slice(&self) -> &[ScalarStage] {
+        &self.stages[..self.len as usize]
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// True when the pipeline is the identity.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for StageStack {
+    fn default() -> Self {
+        StageStack::empty()
+    }
+}
+
 /// Pre-processing operator applied to each input as it is loaded into the
 /// convolution engine (§3.1).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -161,6 +253,41 @@ pub enum PreOp {
     Mul(f32),
     /// Look-up-table function (exp, sigmoid, …) named for reports.
     Lut(&'static str),
+    /// Composed pipeline written by executable operation fusion (§4.3).
+    Stack(StageStack),
+}
+
+impl PreOp {
+    /// This operator as a scalar-stage pipeline (empty for `None`).
+    pub fn stages(self) -> StageStack {
+        let mut s = StageStack::empty();
+        match self {
+            PreOp::None => {}
+            PreOp::Square => {
+                s.push(ScalarStage::Square);
+            }
+            PreOp::Mul(c) => {
+                s.push(ScalarStage::Mul(c));
+            }
+            PreOp::Lut(n) => {
+                s.push(ScalarStage::Lut(n));
+            }
+            PreOp::Stack(st) => return st,
+        }
+        s
+    }
+
+    /// Canonical operator for a pipeline: single stages collapse back to
+    /// their dedicated variants, the empty pipeline to `None`.
+    pub fn from_stages(s: StageStack) -> PreOp {
+        match s.as_slice() {
+            [] => PreOp::None,
+            [ScalarStage::Square] => PreOp::Square,
+            [ScalarStage::Mul(c)] => PreOp::Mul(*c),
+            [ScalarStage::Lut(n)] => PreOp::Lut(n),
+            _ => PreOp::Stack(s),
+        }
+    }
 }
 
 /// Main operator between inputs and kernel parameters.
@@ -202,6 +329,37 @@ pub enum PostOp {
     Mul(f32),
     /// Look-up-table function (rsqrt, exp, relu, sigmoid, …).
     Lut(&'static str),
+    /// Composed pipeline written by executable operation fusion (§4.3).
+    Stack(StageStack),
+}
+
+impl PostOp {
+    /// This operator as a scalar-stage pipeline (empty for `None`).
+    pub fn stages(self) -> StageStack {
+        let mut s = StageStack::empty();
+        match self {
+            PostOp::None => {}
+            PostOp::Mul(c) => {
+                s.push(ScalarStage::Mul(c));
+            }
+            PostOp::Lut(n) => {
+                s.push(ScalarStage::Lut(n));
+            }
+            PostOp::Stack(st) => return st,
+        }
+        s
+    }
+
+    /// Canonical operator for a pipeline: single stages collapse back to
+    /// their dedicated variants, the empty pipeline to `None`.
+    pub fn from_stages(s: StageStack) -> PostOp {
+        match s.as_slice() {
+            [] => PostOp::None,
+            [ScalarStage::Mul(c)] => PostOp::Mul(*c),
+            [ScalarStage::Lut(n)] => PostOp::Lut(n),
+            _ => PostOp::Stack(s),
+        }
+    }
 }
 
 /// Where a GCONV operand comes from.
@@ -320,6 +478,19 @@ impl GconvOp {
         self.reduce == ReduceOp::None
     }
 
+    /// True when evaluating this op maps input element `i` straight to
+    /// output element `i` (modulo the scalar `pre`/`main`/`post` maps):
+    /// no kernel reuse (`Nop`), no reduction windows (`Nks`), no padding
+    /// and no stride subsampling. This is the indexing-legality core of
+    /// *executable* operation fusion: only such ops can be folded into a
+    /// neighbour's scalar pipeline without changing which elements the
+    /// host touches.
+    pub fn is_identity_indexed(&self) -> bool {
+        self.dims.iter().all(|&(_, p)| {
+            p.nks == 1 && p.nop == 1 && p.ps == 0 && p.pe == 0 && (p.nopc <= 1 || p.s == 1)
+        }) && self.input_elements() == self.output_elements()
+    }
+
     /// Dimensions that overlap-reuse inputs, in mapping order.
     pub fn overlap_dims(&self) -> Vec<Dim> {
         Dim::MAPPING_ORDER
@@ -355,6 +526,7 @@ impl fmt::Display for GconvOp {
             field(f, "Nks", p.nks, 1)?;
             field(f, "s", p.s, 1)?;
             field(f, "ps", p.ps, 0)?;
+            field(f, "pe", p.pe, 0)?;
             write!(f, "] ")?;
         }
         Ok(())
@@ -432,5 +604,63 @@ mod tests {
         assert_eq!(p.input_extent(), 8);
         assert_eq!(p.kernel_extent(), 16 * 8);
         assert_eq!(p.output_extent(), 16);
+    }
+
+    #[test]
+    fn ceil_mode_window_clips_to_the_input() {
+        // Caffe ceil-mode pool: 3x3 stride 2 over 28 yields 14 outputs,
+        // whose last window overhangs by one — modelled as pe = 1.
+        let p = DimParams::window_ceil(14, 3, 2, 0, 28);
+        assert_eq!(p.pe, 1);
+        assert_eq!(p.input_extent(), 28);
+        // Exact covers keep pe = 0 and the plain-window arithmetic.
+        let q = DimParams::window_ceil(27, 3, 2, 0, 55);
+        assert_eq!(q.pe, 0);
+        assert_eq!(q, DimParams::window(27, 3, 2, 0));
+    }
+
+    #[test]
+    fn stage_stacks_compose_and_collapse() {
+        let mut a = PreOp::Lut("relu").stages();
+        assert!(a.extend(&PostOp::Mul(2.0).stages()));
+        assert_eq!(a.as_slice(), &[ScalarStage::Lut("relu"), ScalarStage::Mul(2.0)]);
+        assert!(matches!(PreOp::from_stages(a), PreOp::Stack(_)));
+        // Single stages collapse back to the dedicated variants.
+        assert_eq!(PreOp::from_stages(PreOp::Square.stages()), PreOp::Square);
+        assert_eq!(PostOp::from_stages(PostOp::Lut("exp").stages()), PostOp::Lut("exp"));
+        assert_eq!(PostOp::from_stages(StageStack::empty()), PostOp::None);
+        // Overflow is refused, not truncated.
+        let mut full = StageStack::empty();
+        for _ in 0..MAX_FUSED_STAGES {
+            assert!(full.push(ScalarStage::Square));
+        }
+        assert!(!full.push(ScalarStage::Square));
+        let mut one = PreOp::Square.stages();
+        assert!(!one.extend(&full));
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn identity_indexing_detects_element_wise_ops() {
+        let copy = GconvOp {
+            name: "copy".into(),
+            dims: vec![(Dim::C, DimParams::g(4)), (Dim::W, DimParams::opc(5))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: DataRef::External("x".into()),
+            kernel: None,
+        };
+        assert!(copy.is_identity_indexed());
+        let mut windowed = copy.clone();
+        windowed.dims[1].1 = DimParams::window(5, 3, 1, 1);
+        assert!(!windowed.is_identity_indexed());
+        let mut strided = copy.clone();
+        strided.dims[1].1 = DimParams { nopc: 5, s: 2, ..Default::default() };
+        assert!(!strided.is_identity_indexed());
+        let mut replicated = copy;
+        replicated.dims[0].1 = DimParams::op(4);
+        assert!(!replicated.is_identity_indexed());
     }
 }

@@ -95,7 +95,9 @@ fn operator_words(op: &GconvOp) -> Vec<Word> {
         PreOp::None => 0,
         PreOp::Square => 1,
         PreOp::Mul(_) => 2,
-        PreOp::Lut(_) => 3,
+        // Composed fusion pipelines encode as the LUT selector: the
+        // hardware realizes them as one chained lookup table (§4.3).
+        PreOp::Lut(_) | PreOp::Stack(_) => 3,
     };
     if sel_pre != 0 {
         v.push(1 << 8 | sel_pre);
@@ -121,7 +123,7 @@ fn operator_words(op: &GconvOp) -> Vec<Word> {
     let sel_post = match op.post {
         PostOp::None => 0,
         PostOp::Mul(_) => 1,
-        PostOp::Lut(_) => 2,
+        PostOp::Lut(_) | PostOp::Stack(_) => 2,
     };
     if sel_post != 0 {
         v.push(4 << 8 | sel_post);

@@ -15,11 +15,18 @@
 //!
 //! * [`ir`] — layer-level network IR with shape inference.
 //! * [`networks`] — the seven benchmark CNNs of the paper.
-//! * [`gconv`] — the GCONV operation model and layer→GCONV lowering.
-//! * [`exec`] — native execution engine: tensor type, GCONV loop-nest
-//!   interpreter (§3.1's four operators), parallel chain scheduler.
+//! * [`gconv`] — the GCONV operation model and layer→GCONV lowering,
+//!   including the special-execution entries (max-pool BP argmax
+//!   routing, concatenation) and composed scalar pipelines written by
+//!   executable fusion.
+//! * [`exec`] — native execution engine: tensor type, tiered GCONV
+//!   loop-nest interpreter (§3.1's four operators; GEMM/odometer/naive
+//!   kernels), special-op routines, parallel chain scheduler with
+//!   up-front operand validation and buffer-pool trim policies, and
+//!   the naive-vs-fast-vs-fused bench harness.
 //! * [`accel`] — accelerator structures (Table 4) and baseline modes.
-//! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion.
+//! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion
+//!   (analytical *and* executable policies over shared legality).
 //! * [`model`] — cycles (Eq. 6) and data movement (Eq. 7–10) models.
 //! * [`energy`] — per-event energy and area/power overhead models.
 //! * [`isa`] — the GCONV instruction encoding of Fig. 11.

@@ -4,6 +4,7 @@
 
 use gconv_chain::accel::configs::{by_code, ACCEL_CODES};
 use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::mapping::fuse_executable;
 use gconv_chain::networks::{benchmark, BENCHMARK_CODES};
 use gconv_chain::report::{print_table, r2};
 use gconv_chain::sim::{simulate, ExecMode, SimOptions};
@@ -12,14 +13,16 @@ const USAGE: &str = "\
 gconv-chain — GCONV Chain compiler + simulator (paper reproduction)
 
 USAGE:
-    gconv-chain chain <NET> [--inference]    print the GCONV chain
+    gconv-chain chain <NET> [--inference] [--fuse]   print the GCONV chain
     gconv-chain simulate <NET> <ACCEL>       baseline vs GCONV on one pair
     gconv-chain matrix                       Fig. 14 speedup matrix
-    gconv-chain run [NET] [SAMPLES]          execute chain numerics (native)
+    gconv-chain run [NET] [SAMPLES] [--fuse] execute chain numerics (native)
 
 OPTIONS:
     --threads N    run on a scoped rayon pool of N workers (default:
                    one per core) — pin for reproducible bench numbers
+    --fuse         rewrite the chain with executable operation fusion
+                   (§4.3) first: fewer entries, bit-identical outputs
 
     NET   = AN GLN DN MN ZFFR C3D CapNN
     ACCEL = TPU DNNW ER EP NLR";
@@ -48,7 +51,16 @@ fn cmd_chain(args: &[String]) {
     let mode =
         if args.iter().any(|a| a == "--inference") { Mode::Inference } else { Mode::Training };
     let net = benchmark(net_code);
-    let chain = lower_network(&net, mode);
+    let mut chain = lower_network(&net, mode);
+    if args.iter().any(|a| a == "--fuse") {
+        let stats = fuse_executable(&mut chain);
+        println!(
+            "executable operation fusion: {} → {} entries (-{:.0}%)",
+            stats.before,
+            stats.after,
+            stats.length_reduction() * 100.0
+        );
+    }
     print!("{chain}");
     let (t, n) = chain.work_split();
     println!(
@@ -109,8 +121,11 @@ fn cmd_matrix() {
 
 fn cmd_run(args: &[String]) {
     use gconv_chain::coordinator::{ChainExecutor, Request};
+    use gconv_chain::exec::bench::input_spec;
     use gconv_chain::networks::mobilenet_block;
 
+    let mut args = args.to_vec();
+    let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
     // Default workload: one MobileNet block (Fig. 1(a)); any benchmark
     // code (AN, MN, …) runs its full inference chain instead.
     let net = match args.first().map(String::as_str) {
@@ -118,7 +133,18 @@ fn cmd_run(args: &[String]) {
         Some(code) => benchmark(code),
     };
     let total: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
-    let mut exec = ChainExecutor::for_network(&net).expect("lowering failed");
+    let mut chain = lower_network(&net, Mode::Inference);
+    if fuse {
+        let stats = fuse_executable(&mut chain);
+        println!(
+            "executable operation fusion: {} → {} entries (-{:.0}%)",
+            stats.before,
+            stats.after,
+            stats.length_reduction() * 100.0
+        );
+    }
+    let (input_name, dims) = input_spec(&net).expect("network has no input layer");
+    let mut exec = ChainExecutor::native(chain, &input_name, &dims).expect("lowering failed");
     let sample_len = exec.sample_len();
     println!("executing {} on the {} backend…", net.name, exec.backend_name());
 

@@ -8,9 +8,40 @@
 //! are processed exactly once on write-back, while a `pre` runs once per
 //! (replicated) load. The absorbed op's kernel parameters become
 //! `pre`/`post` parameters of the host, increasing its kernel traffic.
+//!
+//! The pass runs under one of two policies sharing the same structural
+//! walk and base legality rules (so the analytical and executable
+//! views of fusibility cannot drift):
+//!
+//! * [`FusePolicy::Analytical`] ([`fuse_chain`]) — the paper's
+//!   accounting view: any reduce-free op may be absorbed, parametric
+//!   absorbs included; the host slot is marked with the `"fused"`
+//!   placeholder LUT (identity at execution time). Used by the
+//!   simulator and the movement/cycle models.
+//! * [`FusePolicy::Executable`] ([`fuse_executable`]) — the native
+//!   engine's view: only *scalar* element-wise followers (kernel-less
+//!   `Pass` ops with identity indexing — ReLU, sigmoid, scalar scales,
+//!   copies) are absorbed, and their `pre`/`post` maps are composed
+//!   into real [`StageStack`] pipelines that
+//!   [`crate::exec::eval_gconv`] resolves to LUT handles at bind and
+//!   executes bit-identically to the unfused chain. Pure copies are
+//!   elided outright. Ops carrying a special-execution routine
+//!   ([`crate::gconv::chain::SpecialOp`]) never fuse in either policy.
+//!
+//! [`StageStack`]: crate::gconv::op::StageStack
 
-use crate::gconv::chain::{FusedOp, GconvChain};
-use crate::gconv::op::{DataRef, MainOp, PostOp, PreOp};
+use crate::exec::LutFn;
+use crate::gconv::chain::{ChainEntry, FusedOp, GconvChain};
+use crate::gconv::op::{DataRef, GconvOp, MainOp, PostOp, PreOp, ReduceOp, ScalarStage, StageStack};
+
+/// Which fusion policy [`fuse_chain_with`] applies (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusePolicy {
+    /// Paper-accounting fusion: placeholder LUTs, parametric absorbs.
+    Analytical,
+    /// Semantics-preserving fusion for the native execution engine.
+    Executable,
+}
 
 /// Statistics of one fusion pass.
 #[derive(Clone, Copy, Debug, Default)]
@@ -31,22 +62,88 @@ impl FusionStats {
     }
 }
 
-/// Can `e` be absorbed at all? It must have no reduction and at most a
-/// trivially-wide operator footprint (pre and post both free on the
-/// host side is checked at the host).
-fn fusible(chain: &GconvChain, idx: usize) -> bool {
-    let e = &chain.entries()[idx].op;
-    e.is_fusible()
+/// Base legality shared by both policies: the entry must have no
+/// reduction and no special-execution routine.
+fn absorbable(e: &ChainEntry) -> bool {
+    e.op.is_fusible() && e.special.is_none()
+}
+
+/// The scalar pipeline a kernel-less `Pass` op applies to each element
+/// (`post ∘ pre`), or `None` when the op is not a pure scalar map or a
+/// LUT in it is unknown to the native engine.
+fn scalar_pipeline(op: &GconvOp) -> Option<StageStack> {
+    if op.main != MainOp::Pass || op.kernel.is_some() || op.reduce != ReduceOp::None {
+        return None;
+    }
+    let mut s = op.pre.stages();
+    if !s.extend(&op.post.stages()) {
+        return None;
+    }
+    for &st in s.as_slice() {
+        if let ScalarStage::Lut(n) = st {
+            LutFn::resolve(n)?;
+        }
+    }
+    Some(s)
+}
+
+/// After erasing `e` (chain index `i`), its consumers bind `repl`'s
+/// output instead: same element count, but possibly different extents.
+/// Rebinding is shape-independent only when the extents match exactly or
+/// every consumer reading `e` as *input* binds by exact element count
+/// (reshape semantics; kernel operands always bind by exact count).
+fn rebind_safe(
+    chain: &GconvChain,
+    i: usize,
+    e: &GconvOp,
+    repl: &GconvOp,
+    consumers: &[usize],
+) -> bool {
+    if repl.output_extents() == e.output_extents() {
+        return true;
+    }
+    consumers.iter().all(|&c| {
+        let co = &chain.entries()[c].op;
+        co.input != DataRef::Gconv(i) || co.input_elements() == e.output_elements()
+    })
+}
+
+/// Evaluate a pipeline at `x` (`None` when a LUT is unknown).
+fn stack_value(stack: &StageStack, x: f32) -> Option<f32> {
+    let mut v = x;
+    for &s in stack.as_slice() {
+        v = match s {
+            ScalarStage::Square => v * v,
+            ScalarStage::Mul(c) => v * c,
+            ScalarStage::Lut(n) => LutFn::resolve(n)?.apply(v),
+        };
+    }
+    Some(v)
+}
+
+/// Fuse the chain in place under the analytical policy.
+pub fn fuse_chain(chain: &mut GconvChain) -> FusionStats {
+    fuse_chain_with(chain, FusePolicy::Analytical)
+}
+
+/// Fuse the chain in place under the executable policy: the rewritten
+/// chain executes on the native engine bit-identically to the original.
+pub fn fuse_executable(chain: &mut GconvChain) -> FusionStats {
+    fuse_chain_with(chain, FusePolicy::Executable)
 }
 
 /// Fuse the chain in place; returns the statistics.
 ///
-/// Strategy per fusible op `e` (single pass, greedy):
-/// 1. producer fusion into `post` — if `e.input` is a chain op whose
-///    `post` slot is free and whose output is consumed only by `e`;
-/// 2. otherwise consumer fusion into `pre` — if `e` has exactly one
-///    consumer that reads it as `input` and whose `pre` slot is free.
-pub fn fuse_chain(chain: &mut GconvChain) -> FusionStats {
+/// Strategy per absorbable op `e` (single pass, greedy):
+/// 1. (executable only) *elision* — a pure copy with identity indexing
+///    vanishes, all consumers rewired to its producer;
+/// 2. producer fusion into `post` — if `e.input` is a chain op whose
+///    output is consumed only by `e` and whose `post` slot accepts the
+///    absorb (free under the analytical policy, composable under the
+///    executable one);
+/// 3. otherwise consumer fusion into `pre` — if `e` has exactly one
+///    consumer that reads it as `input` and whose `pre` slot accepts it.
+pub fn fuse_chain_with(chain: &mut GconvChain, policy: FusePolicy) -> FusionStats {
     let before = chain.len();
     let mut words_saved = 0.0;
     let n = chain.len();
@@ -66,31 +163,89 @@ pub fn fuse_chain(chain: &mut GconvChain) -> FusionStats {
     }
 
     for i in 0..n {
-        if erased[i] || !fusible(chain, i) {
+        if erased[i] || !absorbable(&chain.entries()[i]) {
             continue;
         }
         let (op_i, consumers) = {
             let e = &chain.entries()[i];
             (e.op.clone(), cons[i].clone())
         };
+
+        // --- Executable elision of pure identity copies. ---
+        if policy == FusePolicy::Executable
+            && op_i.pre == PreOp::None
+            && op_i.post == PostOp::None
+            && op_i.main == MainOp::Pass
+            && op_i.kernel.is_none()
+            && op_i.is_identity_indexed()
+            && !consumers.is_empty()
+        {
+            if let DataRef::Gconv(p2) = op_i.input {
+                let exact = !erased[p2]
+                    && chain.entries()[p2].op.output_elements() == op_i.input_elements()
+                    && rebind_safe(chain, i, &op_i, &chain.entries()[p2].op, &consumers);
+                if exact {
+                    for &c in &consumers {
+                        let ce = &mut chain.entries_mut()[c];
+                        if ce.op.input == DataRef::Gconv(i) {
+                            ce.op.input = DataRef::Gconv(p2);
+                        }
+                        if ce.op.kernel == Some(DataRef::Gconv(i)) {
+                            ce.op.kernel = Some(DataRef::Gconv(p2));
+                        }
+                    }
+                    cons[p2].retain(|&x| x != i);
+                    cons[p2].extend(consumers.iter().copied());
+                    chain.entries_mut()[p2].fused.push(FusedOp {
+                        name: op_i.name.clone(),
+                        slot: "elided",
+                        param_elements: 0,
+                    });
+                    words_saved += (op_i.input_elements() + op_i.output_elements()) as f64;
+                    erased[i] = true;
+                    continue;
+                }
+            }
+        }
+
         // --- Try producer fusion (preferred: post runs once/output). ---
         if let DataRef::Gconv(p) = op_i.input {
-            let producer_ok = !erased[p]
+            let host_ok = !erased[p]
                 && cons[p] == vec![i]
-                && chain.entries()[p].op.post == PostOp::None
+                && chain.entries()[p].special.is_none()
                 // The producer must emit exactly the elements `e`
                 // consumes (same tensor footprint).
                 && chain.entries()[p].op.output_elements() == op_i.input_elements();
-            if producer_ok {
+            let new_post = if !host_ok {
+                None
+            } else {
+                match policy {
+                    FusePolicy::Analytical => (chain.entries()[p].op.post == PostOp::None)
+                        .then_some(PostOp::Lut("fused")),
+                    FusePolicy::Executable => {
+                        let tail_ok = i + 1 == n && ((p + 1)..i).all(|j| erased[j]);
+                        if rebind_safe(chain, i, &op_i, &chain.entries()[p].op, &consumers) {
+                            executable_post(
+                                &chain.entries()[p].op,
+                                &op_i,
+                                consumers.is_empty(),
+                                tail_ok,
+                            )
+                        } else {
+                            None
+                        }
+                    }
+                }
+            };
+            if let Some(post) = new_post {
                 let host = &mut chain.entries_mut()[p];
-                host.op.post = PostOp::Lut("fused");
+                host.op.post = post;
                 host.fused.push(FusedOp {
                     name: op_i.name.clone(),
                     slot: "post",
                     param_elements: op_i.kernel_elements(),
                 });
-                words_saved +=
-                    (op_i.input_elements() + op_i.output_elements()) as f64;
+                words_saved += (op_i.input_elements() + op_i.output_elements()) as f64;
                 // Rewire consumers of i to read p directly.
                 for &c in &consumers {
                     let ce = &mut chain.entries_mut()[c];
@@ -106,17 +261,35 @@ pub fn fuse_chain(chain: &mut GconvChain) -> FusionStats {
                 continue;
             }
         }
+
         // --- Try consumer fusion into pre. ---
         if consumers.len() == 1 {
             let c = consumers[0];
-            let consumer_ok = !erased[c]
+            let host_ok = !erased[c]
                 && chain.entries()[c].op.input == DataRef::Gconv(i)
-                && chain.entries()[c].op.pre == PreOp::None
-                // pre must be element-wise on the consumer's input
-                // stream: the fused op may not change element count.
-                && op_i.input_elements() == op_i.output_elements()
-                && matches!(op_i.main, MainOp::Pass | MainOp::Mul | MainOp::Add | MainOp::Sub);
-            if consumer_ok {
+                && chain.entries()[c].special.is_none();
+            let new_pre = if !host_ok {
+                None
+            } else {
+                match policy {
+                    FusePolicy::Analytical => {
+                        // pre must be element-wise on the consumer's
+                        // input stream: the fused op may not change
+                        // element count.
+                        let ok = chain.entries()[c].op.pre == PreOp::None
+                            && op_i.input_elements() == op_i.output_elements()
+                            && matches!(
+                                op_i.main,
+                                MainOp::Pass | MainOp::Mul | MainOp::Add | MainOp::Sub
+                            );
+                        ok.then_some(PreOp::Lut("fused"))
+                    }
+                    FusePolicy::Executable => {
+                        executable_pre(chain, &chain.entries()[c].op, &op_i, &erased)
+                    }
+                }
+            };
+            if let Some(pre) = new_pre {
                 let input_of_i = op_i.input.clone();
                 // The host now reads i's input directly.
                 if let DataRef::Gconv(src) = input_of_i {
@@ -124,15 +297,14 @@ pub fn fuse_chain(chain: &mut GconvChain) -> FusionStats {
                     cons[src].push(c);
                 }
                 let host = &mut chain.entries_mut()[c];
-                host.op.pre = PreOp::Lut("fused");
+                host.op.pre = pre;
                 host.op.input = input_of_i;
                 host.fused.push(FusedOp {
                     name: op_i.name.clone(),
                     slot: "pre",
                     param_elements: op_i.kernel_elements(),
                 });
-                words_saved +=
-                    (op_i.input_elements() + op_i.output_elements()) as f64;
+                words_saved += (op_i.input_elements() + op_i.output_elements()) as f64;
                 erased[i] = true;
             }
         }
@@ -161,10 +333,81 @@ pub fn fuse_chain(chain: &mut GconvChain) -> FusionStats {
     FusionStats { before, after: chain.len(), words_saved }
 }
 
+/// Executable producer fusion: the follower `e` folds into `host.post`
+/// when it is a pure scalar map with identity indexing and the composed
+/// pipeline fits. A consumer-less follower may only fold when erasing it
+/// leaves the host as the chain's final entry (`tail_ok`) *and* the host
+/// emits the same extents — `run_last` then returns the network output
+/// with the shape the unfused chain produced (bit-identity compares
+/// extents, not just values).
+fn executable_post(
+    host: &GconvOp,
+    e: &GconvOp,
+    no_consumers: bool,
+    tail_ok: bool,
+) -> Option<PostOp> {
+    if no_consumers && (!tail_ok || host.output_extents() != e.output_extents()) {
+        return None;
+    }
+    let pipeline = scalar_pipeline(e)?;
+    if !e.is_identity_indexed() {
+        return None;
+    }
+    let mut stack = host.post.stages();
+    if !stack.extend(&pipeline) {
+        return None;
+    }
+    Some(PostOp::from_stages(stack))
+}
+
+/// Executable consumer fusion: the producer `e` folds into `host.pre`
+/// when it is a pure scalar map with identity indexing, its own input is
+/// a chain op of exactly matching footprint (so the host re-binds it the
+/// way `e` did), the composed pipeline fits, and padding stays safe —
+/// the host either has no padded windows or the pipeline maps the
+/// padding value 0 to 0 bit-exactly.
+fn executable_pre(
+    chain: &GconvChain,
+    host: &GconvOp,
+    e: &GconvOp,
+    erased: &[bool],
+) -> Option<PreOp> {
+    let pipeline = scalar_pipeline(e)?;
+    if !e.is_identity_indexed() {
+        return None;
+    }
+    let DataRef::Gconv(p2) = e.input else {
+        return None;
+    };
+    if erased[p2] || chain.entries()[p2].op.output_elements() != e.input_elements() {
+        return None;
+    }
+    // The host re-binds p2's output in place of e's: safe only when the
+    // extents match or the host binds by exact element count.
+    let same_shape = chain.entries()[p2].op.output_extents() == e.output_extents();
+    if !same_shape && host.input_elements() != e.output_elements() {
+        return None;
+    }
+    // Bit-exact +0.0: even a −0.0 would change the padding bits the
+    // host's operators see (the differential tests compare bit patterns).
+    let pad_free = host.dims.iter().all(|&(_, p)| p.ps == 0 && p.pe == 0);
+    if !pad_free && stack_value(&pipeline, 0.0).map(f32::to_bits) != Some(0.0f32.to_bits()) {
+        return None;
+    }
+    let mut stack = pipeline;
+    if !stack.extend(&host.pre.stages()) {
+        return None;
+    }
+    Some(PreOp::from_stages(stack))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gconv::chain::Phase;
     use crate::gconv::lower::{lower_network, Mode};
+    use crate::gconv::op::DimParams;
+    use crate::ir::{Dim, Layer, Network, PoolKind, Shape};
     use crate::networks::{benchmark, mobilenet_block};
 
     #[test]
@@ -229,5 +472,165 @@ mod tests {
             .filter(|e| e.op.reduce != crate::gconv::op::ReduceOp::None)
             .count();
         assert_eq!(reduces_before, reduces_after);
+    }
+
+    #[test]
+    fn executable_fusion_composes_real_pipelines() {
+        // MobileNet block: relu.fp folds into bn FP4's post as a real
+        // relu LUT (not the analytical "fused" placeholder).
+        let mut chain = lower_network(&mobilenet_block(2, 4, 6), Mode::Inference);
+        let before = chain.len();
+        let stats = fuse_executable(&mut chain);
+        assert!(chain.len() < before, "no executable fusion happened");
+        assert_eq!(stats.after, chain.len());
+        let mut relu_posts = 0;
+        for e in chain.entries() {
+            match e.op.post {
+                PostOp::Lut("fused") => panic!("executable pass wrote a placeholder LUT"),
+                PostOp::Lut("relu") => relu_posts += 1,
+                PostOp::Stack(s) => {
+                    assert!(s.as_slice().contains(&ScalarStage::Lut("relu")));
+                    relu_posts += 1;
+                }
+                _ => {}
+            }
+            if let PreOp::Lut(n) = e.op.pre {
+                assert_ne!(n, "fused");
+            }
+        }
+        assert!(relu_posts >= 2, "both block ReLUs should fold into a post");
+    }
+
+    #[test]
+    fn special_entries_never_fuse() {
+        // A max-pool training chain: the argmax-routing special entry
+        // must survive both policies untouched.
+        let mut net = Network::new("p");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(2, 4, 8, 8) }, &[]);
+        let p = net.add(
+            "pool",
+            Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+            &[i],
+        );
+        net.add("relu", Layer::Relu, &[p]);
+        for policy in [FusePolicy::Analytical, FusePolicy::Executable] {
+            let mut chain = lower_network(&net, Mode::Training);
+            let specials = chain.entries().iter().filter(|e| e.special.is_some()).count();
+            assert!(specials > 0, "training chain should carry the BP special");
+            fuse_chain_with(&mut chain, policy);
+            let after = chain.entries().iter().filter(|e| e.special.is_some()).count();
+            assert_eq!(specials, after, "{policy:?} dropped a special entry");
+        }
+    }
+
+    #[test]
+    fn reshaping_tail_followers_do_not_fold() {
+        // A consumer-less tail copy that *reshapes* (same count, new
+        // extents) must survive: folding it would change the shape
+        // `run_last` hands back, and bit-identity compares extents.
+        use crate::gconv::chain::ChainEntry;
+        use crate::gconv::op::GconvOp;
+
+        let mut chain = GconvChain::new("t");
+        let src = GconvOp {
+            name: "src".into(),
+            dims: vec![(Dim::W, DimParams::opc(4))],
+            pre: PreOp::None,
+            main: MainOp::Mul,
+            reduce: ReduceOp::None,
+            post: PostOp::None,
+            input: DataRef::External("x".into()),
+            kernel: Some(DataRef::Weights("w".into())),
+        };
+        let reshape_tail = GconvOp {
+            name: "tail".into(),
+            dims: vec![(Dim::C, DimParams::opc(2)), (Dim::W, DimParams::opc(2))],
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::Lut("relu"),
+            input: DataRef::Gconv(0),
+            kernel: None,
+        };
+        chain.push(ChainEntry::new(src, 0, true, Phase::Fp));
+        chain.push(ChainEntry::new(reshape_tail, 0, true, Phase::Fp));
+        fuse_executable(&mut chain);
+        assert_eq!(chain.len(), 2, "a reshaping tail must not fold");
+        // The same tail with matching extents does fold.
+        let mut chain2 = GconvChain::new("t2");
+        let src2 = chain.entries()[0].op.clone();
+        let mut flat_tail = chain.entries()[1].op.clone();
+        flat_tail.dims = vec![(Dim::W, DimParams::opc(4))];
+        chain2.push(ChainEntry::new(src2, 0, true, Phase::Fp));
+        chain2.push(ChainEntry::new(flat_tail, 0, true, Phase::Fp));
+        fuse_executable(&mut chain2);
+        assert_eq!(chain2.len(), 1, "a shape-preserving tail folds");
+        assert_eq!(chain2.entries()[0].op.post, PostOp::Lut("relu"));
+    }
+
+    #[test]
+    fn padded_consumers_only_absorb_zero_preserving_pipelines() {
+        // producer(post sigmoid) → padded conv: sigmoid(0) ≠ 0 would
+        // corrupt the padding, so the executable pass must refuse; a
+        // relu producer (relu(0) = 0) must fold.
+        use crate::gconv::chain::ChainEntry;
+        use crate::gconv::op::GconvOp;
+
+        let build = |lut: &'static str| {
+            let mut chain = GconvChain::new("t");
+            let ew = GconvOp {
+                name: "act".into(),
+                dims: vec![(Dim::W, DimParams::opc(4))],
+                pre: PreOp::None,
+                main: MainOp::Pass,
+                reduce: ReduceOp::None,
+                post: PostOp::Lut(lut),
+                input: DataRef::Gconv(0),
+                kernel: None,
+            };
+            let src = GconvOp {
+                name: "src".into(),
+                dims: vec![(Dim::W, DimParams::opc(4))],
+                pre: PreOp::None,
+                main: MainOp::Mul,
+                reduce: ReduceOp::None,
+                post: PostOp::None,
+                input: DataRef::External("x".into()),
+                kernel: Some(DataRef::Weights("w".into())),
+            };
+            let conv = GconvOp::conv(
+                "conv",
+                vec![(Dim::W, DimParams::window(4, 3, 1, 1))],
+                DataRef::Gconv(1),
+                DataRef::Weights("k".into()),
+            );
+            // src has two consumers (act + a side reader) so `act`
+            // cannot producer-fuse and must try the consumer path.
+            let side = GconvOp {
+                name: "side".into(),
+                dims: vec![(Dim::W, DimParams::opc(4))],
+                pre: PreOp::None,
+                main: MainOp::Pass,
+                reduce: ReduceOp::None,
+                post: PostOp::Lut("exp"),
+                input: DataRef::Gconv(0),
+                kernel: None,
+            };
+            chain.push(ChainEntry::new(src, 0, true, Phase::Fp));
+            chain.push(ChainEntry::new(ew, 0, true, Phase::Fp));
+            chain.push(ChainEntry::new(conv, 0, true, Phase::Fp));
+            chain.push(ChainEntry::new(side, 0, true, Phase::Fp));
+            chain
+        };
+
+        let mut relu = build("relu");
+        fuse_executable(&mut relu);
+        assert_eq!(relu.len(), 3, "relu must fold into the padded conv's pre");
+        let conv = relu.entries().iter().find(|e| e.op.name == "conv").unwrap();
+        assert_eq!(conv.op.pre, PreOp::Lut("relu"));
+
+        let mut sig = build("sigmoid");
+        fuse_executable(&mut sig);
+        assert_eq!(sig.len(), 4, "sigmoid(0) != 0 must block the fold");
     }
 }

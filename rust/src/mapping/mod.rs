@@ -6,5 +6,5 @@ pub mod fusion;
 pub mod unroll;
 
 pub use consistent::{is_consistent, load_parallelism, make_consistent};
-pub use fusion::{fuse_chain, FusionStats};
+pub use fusion::{fuse_chain, fuse_chain_with, fuse_executable, FusePolicy, FusionStats};
 pub use unroll::{map_gconv, MapMode, Mapping, UnrollEntry};

@@ -100,7 +100,7 @@ impl Loops {
     /// return the factor.
     fn consume(&mut self, d: Dim, p: Param, limit: usize) -> usize {
         let n = self.get(d, p);
-        let uf = n.min(limit).max(1);
+        let uf = n.min(limit.max(1));
         if uf > 1 {
             self.counts.insert((d, p), n.div_ceil(uf));
         }
@@ -295,7 +295,13 @@ impl TileTracker {
     /// Largest factor for loop `(d, p)` that keeps every scratchpad the
     /// parameter grows within capacity (Algorithm 1's temporal resource
     /// check). Stores already over capacity no longer constrain.
-    fn max_temporal_factor(&self, accel: &AccelStructure, d: Dim, p: Param, loops: &Loops) -> usize {
+    fn max_temporal_factor(
+        &self,
+        accel: &AccelStructure,
+        d: Dim,
+        p: Param,
+        loops: &Loops,
+    ) -> usize {
         let n = loops.get(d, p);
         if n <= 1 {
             return 1;
@@ -325,7 +331,7 @@ impl TileTracker {
         };
         let (mut lo, mut hi) = (1usize, n);
         while lo < hi {
-            let mid = (lo + hi + 1) / 2;
+            let mid = (lo + hi).div_ceil(2);
             if fits(mid) {
                 lo = mid;
             } else {

@@ -17,7 +17,11 @@ pub fn alexnet(batch: usize) -> Network {
     );
     let r1 = n.add("relu1", Layer::Relu, &[c1]);
     let l1 = n.add("norm1", Layer::Lrn { local_size: 5 }, &[r1]);
-    let p1 = n.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[l1]);
+    let p1 = n.add(
+        "pool1",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[l1],
+    );
 
     let c2 = n.add(
         "conv2",
@@ -26,7 +30,11 @@ pub fn alexnet(batch: usize) -> Network {
     );
     let r2 = n.add("relu2", Layer::Relu, &[c2]);
     let l2 = n.add("norm2", Layer::Lrn { local_size: 5 }, &[r2]);
-    let p2 = n.add("pool2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[l2]);
+    let p2 = n.add(
+        "pool2",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[l2],
+    );
 
     let c3 = n.add(
         "conv3",
@@ -46,7 +54,11 @@ pub fn alexnet(batch: usize) -> Network {
         &[r4],
     );
     let r5 = n.add("relu5", Layer::Relu, &[c5]);
-    let p5 = n.add("pool5", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[r5]);
+    let p5 = n.add(
+        "pool5",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[r5],
+    );
 
     let f6 = n.add("fc6", Layer::FullyConnected { out_features: 4096 }, &[p5]);
     let r6 = n.add("relu6", Layer::Relu, &[f6]);

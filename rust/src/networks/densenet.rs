@@ -57,7 +57,11 @@ pub fn densenet121(batch: usize) -> Network {
     let bn1 = n.add("conv1/bn", Layer::BatchNorm, &[c1]);
     let sc1 = n.add("conv1/scale", Layer::Scale, &[bn1]);
     let r1 = n.add("conv1/relu", Layer::Relu, &[sc1]);
-    let mut x = n.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[r1]);
+    let mut x = n.add(
+        "pool1",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[r1],
+    );
 
     let mut channels = 64;
     for (bi, layers) in [6usize, 12, 24, 16].iter().enumerate() {

@@ -77,8 +77,11 @@ pub fn googlenet(batch: usize) -> Network {
         &[data],
     );
     let r1 = n.add("conv1/relu", Layer::Relu, &[c1]);
-    let p1 =
-        n.add("pool1/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[r1]);
+    let p1 = n.add(
+        "pool1/3x3_s2",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[r1],
+    );
     let l1 = n.add("pool1/norm1", Layer::Lrn { local_size: 5 }, &[p1]);
     let c2r = n.add(
         "conv2/3x3_reduce",
@@ -93,20 +96,29 @@ pub fn googlenet(batch: usize) -> Network {
     );
     let c2 = n.add("conv2/relu", Layer::Relu, &[c2]);
     let l2 = n.add("conv2/norm2", Layer::Lrn { local_size: 5 }, &[c2]);
-    let p2 =
-        n.add("pool2/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[l2]);
+    let p2 = n.add(
+        "pool2/3x3_s2",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[l2],
+    );
 
     let i3a = inception(&mut n, "inception_3a", p2, 64, 96, 128, 16, 32, 32);
     let i3b = inception(&mut n, "inception_3b", i3a, 128, 128, 192, 32, 96, 64);
-    let p3 =
-        n.add("pool3/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[i3b]);
+    let p3 = n.add(
+        "pool3/3x3_s2",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[i3b],
+    );
     let i4a = inception(&mut n, "inception_4a", p3, 192, 96, 208, 16, 48, 64);
     let i4b = inception(&mut n, "inception_4b", i4a, 160, 112, 224, 24, 64, 64);
     let i4c = inception(&mut n, "inception_4c", i4b, 128, 128, 256, 24, 64, 64);
     let i4d = inception(&mut n, "inception_4d", i4c, 112, 144, 288, 32, 64, 64);
     let i4e = inception(&mut n, "inception_4e", i4d, 256, 160, 320, 32, 128, 128);
-    let p4 =
-        n.add("pool4/3x3_s2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 }, &[i4e]);
+    let p4 = n.add(
+        "pool4/3x3_s2",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 0 },
+        &[i4e],
+    );
     let i5a = inception(&mut n, "inception_5a", p4, 256, 160, 320, 32, 128, 128);
     let i5b = inception(&mut n, "inception_5b", i5a, 384, 192, 384, 48, 128, 128);
 

@@ -77,7 +77,10 @@ mod tests {
     #[test]
     fn depthwise_layers_are_nontraditional() {
         let net = mobilenet(32);
-        let dw = net.nodes().iter().filter(|n| n.name.ends_with("_dw") && n.name.starts_with("conv"));
+        let dw = net
+            .nodes()
+            .iter()
+            .filter(|n| n.name.ends_with("_dw") && n.name.starts_with("conv"));
         for node in dw {
             assert!(!node.layer.is_traditional(), "{} should be non-traditional", node.name);
         }

@@ -32,14 +32,27 @@ pub const BENCHMARK_CODES: [&str; 7] = ["AN", "GLN", "DN", "MN", "ZFFR", "C3D", 
 
 /// Build a benchmark by its paper code with the paper's batch sizes.
 pub fn benchmark(code: &str) -> Network {
+    let batch = match code {
+        "ZFFR" => 1,
+        "C3D" => 8,
+        "CapNN" => 16,
+        _ => 32,
+    };
+    benchmark_with_batch(code, batch)
+}
+
+/// Build a benchmark by its paper code at an explicit mini-batch size
+/// (native-execution smokes and benches run the full topologies at
+/// batch 1 to keep wall-clock sane).
+pub fn benchmark_with_batch(code: &str, batch: usize) -> Network {
     match code {
-        "AN" => alexnet(32),
-        "GLN" => googlenet(32),
-        "DN" => densenet121(32),
-        "MN" => mobilenet(32),
-        "ZFFR" => zf_faster_rcnn(1),
-        "C3D" => c3d(8),
-        "CapNN" => capsnet(16),
+        "AN" => alexnet(batch),
+        "GLN" => googlenet(batch),
+        "DN" => densenet121(batch),
+        "MN" => mobilenet(batch),
+        "ZFFR" => zf_faster_rcnn(batch),
+        "C3D" => c3d(batch),
+        "CapNN" => capsnet(batch),
         other => panic!("unknown benchmark {other}"),
     }
 }
@@ -113,7 +126,10 @@ mod tests {
         let an = ratio("AN");
         let mn = ratio("MN");
         let c3d = ratio("C3D");
-        assert!(mn > an, "MobileNet ({mn:.3}) should be more non-traditional than AlexNet ({an:.3})");
+        assert!(
+            mn > an,
+            "MobileNet ({mn:.3}) should be more non-traditional than AlexNet ({an:.3})"
+        );
         assert!(c3d > 0.5, "C3D is dominated by 3-D (non-traditional) compute, got {c3d:.3}");
     }
 

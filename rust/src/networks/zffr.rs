@@ -20,7 +20,11 @@ pub fn zf_faster_rcnn(batch: usize) -> Network {
     );
     let r1 = n.add("relu1", Layer::Relu, &[c1]);
     let l1 = n.add("norm1", Layer::Lrn { local_size: 3 }, &[r1]);
-    let p1 = n.add("pool1", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 }, &[l1]);
+    let p1 = n.add(
+        "pool1",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 },
+        &[l1],
+    );
 
     let c2 = n.add(
         "conv2",
@@ -29,7 +33,11 @@ pub fn zf_faster_rcnn(batch: usize) -> Network {
     );
     let r2 = n.add("relu2", Layer::Relu, &[c2]);
     let l2 = n.add("norm2", Layer::Lrn { local_size: 3 }, &[r2]);
-    let p2 = n.add("pool2", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 }, &[l2]);
+    let p2 = n.add(
+        "pool2",
+        Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 },
+        &[l2],
+    );
 
     let c3 = n.add(
         "conv3",

@@ -12,14 +12,17 @@
 //! padding-skip under `Max`, the fixed LUT definitions). For conv, FC,
 //! pooling and softmax those coincide with the textbook operators.
 
+use gconv_chain::exec::bench::input_spec;
 use gconv_chain::exec::{
     eval_gconv, eval_gconv_naive, lut_apply, plan_tier, ChainExec, KernelTier, Tensor,
     GEMM_MIN_REDUCTION,
 };
+use gconv_chain::gconv::chain::{ChainEntry, GconvChain, Phase};
 use gconv_chain::gconv::lower::{lower_network, Mode};
 use gconv_chain::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
 use gconv_chain::ir::{Dim, Layer, Network, PoolKind, Shape};
-use gconv_chain::networks::mobilenet_block;
+use gconv_chain::mapping::fuse_executable;
+use gconv_chain::networks::{benchmark_with_batch, mobilenet_block, BENCHMARK_CODES};
 use gconv_chain::prop::{prop_check, Rng};
 
 /// Build a one-layer network `Input(shape) → layer`, lower it for
@@ -351,7 +354,7 @@ fn random_gconv(rng: &mut Rng) -> (GconvOp, Tensor, Option<Tensor>) {
         let nks = rng.int(1, 3);
         let s = rng.int(1, 2);
         let ps = if nks > 1 && rng.bool(0.4) { rng.int(1, nks - 1) } else { 0 };
-        dims.push((d, DimParams { ng, nop, nopc, nks, s, ps }));
+        dims.push((d, DimParams { ng, nop, nopc, nks, s, ps, ..Default::default() }));
     }
 
     // Half the cases are steered onto the GEMM tier: Mul+Add with a
@@ -499,6 +502,302 @@ fn training_chain_fast_vs_naive_bitwise() {
     assert_eq!(rf.outputs.len(), rn.outputs.len());
     for (i, (a, b)) in rf.outputs.iter().zip(&rn.outputs).enumerate() {
         assert!(a.bit_eq(b), "entry #{i} diverged from the oracle");
+    }
+}
+
+/// Build a random chain of one arbitrary host op followed by a run of
+/// element-wise followers (every fusible `pre`/`main`/`reduce`/`post`
+/// combination: scalar LUTs, scales, squares, pure copies) and an
+/// optional padded windowed consumer, plus an optional second reader of
+/// the host (which forces the consumer-fusion path instead of
+/// producer fusion). Exercises compose-into-post, compose-into-pre,
+/// elision and the refuse paths of `fuse_executable`.
+fn random_fusible_chain(rng: &mut Rng) -> GconvChain {
+    let mut chain = GconvChain::new("fuseprop");
+    let push = |chain: &mut GconvChain, op: GconvOp| -> usize {
+        chain.push(ChainEntry::new(op, 0, true, Phase::Fp))
+    };
+
+    // Host op: a couple of dims with modest extents, random operators.
+    let nd = rng.int(1, 2);
+    let dim_names = [Dim::C, Dim::W];
+    let mut dims = Vec::new();
+    for &d in dim_names.iter().take(nd) {
+        let ng = if rng.bool(0.25) { rng.int(2, 3) } else { 1 };
+        let nop = if rng.bool(0.3) { rng.int(2, 3) } else { 1 };
+        let nopc = rng.int(1, 4);
+        let nks = rng.int(1, 3);
+        let ps = if nks > 1 && rng.bool(0.3) { 1 } else { 0 };
+        dims.push((d, DimParams { ng, nop, nopc, nks, s: 1, ps, ..Default::default() }));
+    }
+    let red: usize = dims.iter().map(|&(_, p)| p.nks).product();
+    let host = GconvOp {
+        name: "host".into(),
+        dims,
+        pre: *rng.choose(&[PreOp::None, PreOp::Square, PreOp::Mul(0.5)]),
+        main: *rng.choose(&[MainOp::Mul, MainOp::Add, MainOp::Max]),
+        reduce: if red == 1 { ReduceOp::None } else { *rng.choose(&[ReduceOp::Add, ReduceOp::Max]) },
+        post: *rng.choose(&[PostOp::None, PostOp::Mul(2.0), PostOp::Lut("sigmoid")]),
+        input: DataRef::External("x".into()),
+        kernel: Some(DataRef::Weights("w".into())),
+    };
+    let out_dims: Vec<(Dim, usize)> = host
+        .dims
+        .iter()
+        .zip(host.output_extents())
+        .map(|(&(d, _), e)| (d, e))
+        .collect();
+    let mut last = push(&mut chain, host);
+
+    // Optional second reader of the host blocks producer fusion of the
+    // first follower, steering it onto the consumer-fusion path.
+    if rng.bool(0.3) {
+        let spy = GconvOp {
+            name: "spy".into(),
+            dims: out_dims.iter().map(|&(d, e)| (d, DimParams::opc(e))).collect(),
+            pre: PreOp::None,
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: PostOp::Lut("exp"),
+            input: DataRef::Gconv(0),
+            kernel: None,
+        };
+        push(&mut chain, spy);
+    }
+
+    // Element-wise followers.
+    for fi in 0..rng.int(1, 3) {
+        let follower = GconvOp {
+            name: format!("f{fi}"),
+            dims: out_dims
+                .iter()
+                .map(|&(d, e)| {
+                    if rng.bool(0.5) {
+                        (d, DimParams::g(e))
+                    } else {
+                        (d, DimParams::opc(e))
+                    }
+                })
+                .collect(),
+            pre: *rng.choose(&[PreOp::None, PreOp::None, PreOp::Square, PreOp::Lut("relu")]),
+            main: MainOp::Pass,
+            reduce: ReduceOp::None,
+            post: *rng.choose(&[
+                PostOp::None,
+                PostOp::None,
+                PostOp::Mul(2.0),
+                PostOp::Lut("relu"),
+                PostOp::Lut("sigmoid"),
+            ]),
+            input: DataRef::Gconv(last),
+            kernel: None,
+        };
+        last = push(&mut chain, follower);
+    }
+
+    // Optional windowed consumer (padded half the time): composes the
+    // final follower into its pre when the padding rules allow.
+    if rng.bool(0.7) {
+        if let Some(&(d, e)) = out_dims.iter().find(|&&(_, e)| e >= 2) {
+            let nks = rng.int(1, 2.min(e));
+            let ps = if nks > 1 && rng.bool(0.5) { 1 } else { 0 };
+            let nopc = e + 2 * ps - nks + 1;
+            let mut dims = vec![(d, DimParams::window(nopc, nks, 1, ps))];
+            for &(d2, e2) in &out_dims {
+                if d2 != d {
+                    dims.push((d2, DimParams::opc(e2)));
+                }
+            }
+            dims.sort_by_key(|&(d, _)| out_dims.iter().position(|&(x, _)| x == d));
+            let consumer = GconvOp {
+                name: "sink".into(),
+                dims,
+                pre: *rng.choose(&[PreOp::None, PreOp::Mul(0.5)]),
+                main: MainOp::Mul,
+                reduce: ReduceOp::Add,
+                post: PostOp::None,
+                input: DataRef::Gconv(last),
+                kernel: Some(DataRef::Weights("wc".into())),
+            };
+            push(&mut chain, consumer);
+        }
+    }
+    chain
+}
+
+#[test]
+fn fused_chains_match_the_unfused_naive_oracle_bitwise() {
+    // Property: `fuse_executable` preserves the final output bit-for-bit
+    // against the *unfused chain on the naive oracle*, across random
+    // fusible op combinations (compose-into-post, compose-into-pre,
+    // elision, stack overflow refusal, padded-consumer zero rules).
+    prop_check(120, |rng: &mut Rng| {
+        let unfused = random_fusible_chain(rng);
+        let mut fused = unfused.clone();
+        let stats = fuse_executable(&mut fused);
+        if stats.after > stats.before {
+            return Err("fusion grew the chain".into());
+        }
+        let x_dims: Vec<usize> = unfused.entries()[0].op.input_extents();
+        let x = Tensor::rand(&x_dims, rng.next_u64(), 1.0);
+        let mut slow = ChainExec::new(unfused).with_naive_oracle();
+        slow.set_input("x", x.clone());
+        let mut fast = ChainExec::new(fused);
+        fast.set_input("x", x);
+        let a = slow.run_last().map_err(|e| format!("unfused: {e:#}"))?;
+        let b = fast.run_last().map_err(|e| format!("fused: {e:#}"))?;
+        if !a.outputs[0].bit_eq(&b.outputs[0]) {
+            return Err(format!(
+                "fused output diverged (chain {} → {}): max |Δ| = {:e}",
+                stats.before,
+                stats.after,
+                a.outputs[0].max_abs_diff(&b.outputs[0])
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn maxpool_bp_routes_gradient_to_the_window_winner() {
+    // Single max-pool layer, training mode: the BP entry recomputes the
+    // argmax from the forward input and routes the loss gradient there.
+    let mut net = Network::new("t");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(1, 1, 2, 2) }, &[]);
+    net.add("pool", Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 }, &[i]);
+    let chain = lower_network(&net, Mode::Training);
+    let bp = chain
+        .entries()
+        .iter()
+        .position(|e| e.special.is_some())
+        .expect("training chain must carry the argmax-routing special");
+    let mut exec = ChainExec::new(chain).strict();
+    exec.set_input("data.data", Tensor::new(&[1, 1, 2, 2], vec![1.0, 3.0, 2.0, 4.0]).unwrap());
+    exec.set_input("loss_grad.1", Tensor::new(&[1, 1, 1, 1], vec![10.0]).unwrap());
+    let out = exec.run(&[bp]).unwrap().outputs.remove(0);
+    assert_eq!(out.data(), &[0.0, 0.0, 0.0, 10.0]);
+}
+
+#[test]
+fn mobilenet_training_chain_with_maxpool_executes_end_to_end() {
+    // A MobileNet-style block with a ceil-mode max pool between the
+    // depthwise and pointwise stages: the full FP+BP+WG chain must run
+    // natively (the pool BP routes through the recomputed argmax) and
+    // every retained tensor must be finite.
+    let mut net = Network::new("MobileNetPoolBlock");
+    let input = net.add("data", Layer::Input { shape: Shape::bchw(2, 4, 8, 8) }, &[]);
+    let dw = net.add(
+        "conv_dw",
+        Layer::Conv { out_channels: 4, kernel: (3, 3), stride: 1, pad: 1, groups: 4 },
+        &[input],
+    );
+    let bn1 = net.add("bn_dw", Layer::BatchNorm, &[dw]);
+    let r1 = net.add("relu_dw", Layer::Relu, &[bn1]);
+    // 3x3 stride-2 pad-1 over 8 → ceil-mode output 5 (last window clips).
+    let pool =
+        net.add("pool", Layer::Pool { kind: PoolKind::Max, kernel: 3, stride: 2, pad: 1 }, &[r1]);
+    let pw = net.add(
+        "conv_pw",
+        Layer::Conv { out_channels: 8, kernel: (1, 1), stride: 1, pad: 0, groups: 1 },
+        &[pool],
+    );
+    let bn2 = net.add("bn_pw", Layer::BatchNorm, &[pw]);
+    net.add("relu_pw", Layer::Relu, &[bn2]);
+
+    let chain = lower_network(&net, Mode::Training);
+    assert!(
+        chain.entries().iter().any(|e| e.special.is_some()),
+        "training chain must carry the max-pool BP special"
+    );
+    let n = chain.len();
+    let wanted: Vec<usize> = (0..n).collect();
+    let mut exec = ChainExec::new(chain);
+    exec.set_input("data.data", Tensor::rand(&[2, 4, 8, 8], 23, 1.0));
+    let report = exec.run(&wanted).unwrap();
+    assert_eq!(report.entries.len(), n);
+    for (i, t) in report.outputs.iter().enumerate() {
+        assert!(
+            t.data().iter().all(|v| v.is_finite()),
+            "entry #{i} produced a non-finite value"
+        );
+    }
+}
+
+#[test]
+fn ceil_mode_pool_clips_overhanging_windows() {
+    // 2x2 stride-2 pool over 5x5 (Caffe rounds the output up to 3x3):
+    // the edge windows clip to the input instead of failing to bind.
+    let mut exec = single_layer(
+        Shape::bchw(1, 1, 5, 5),
+        "pool1",
+        Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+    );
+    let x: Vec<f32> = (1..=25).map(|v| v as f32).collect();
+    exec.set_input("data.data", Tensor::new(&[1, 1, 5, 5], x).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_eq!(out.dims(), &[1, 1, 3, 3]);
+    let want = vec![7.0, 9.0, 10.0, 17.0, 19.0, 20.0, 22.0, 24.0, 25.0];
+    assert_close(out.data(), &want, 1e-6, "ceil-mode max pool");
+}
+
+#[test]
+fn concat_chain_stacks_branches_along_channels() {
+    // concat([x, relu(x)]) over C: the special concat entry produces
+    // the two blocks side by side.
+    let mut net = Network::new("cat");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(1, 2, 2, 2) }, &[]);
+    let r = net.add("relu", Layer::Relu, &[i]);
+    net.add("cat", Layer::Concat, &[i, r]);
+    let chain = lower_network(&net, Mode::Inference);
+    assert!(chain.entries().iter().any(|e| e.special.is_some()));
+    let mut exec = ChainExec::new(chain).strict();
+    let xs = vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0, 4.0, -4.0];
+    exec.set_input("data.data", Tensor::new(&[1, 2, 2, 2], xs.clone()).unwrap());
+    let out = exec.run_last().unwrap().outputs.remove(0);
+    assert_eq!(out.elements(), 16);
+    let mut want = xs.clone();
+    want.extend(xs.iter().map(|v| v.max(0.0)));
+    assert_close(out.data(), &want, 1e-7, "channel concat");
+}
+
+/// Run one benchmark's FP chain on the fast tiers; returns the final
+/// output and the number of entries executed.
+fn run_fp_chain(net: &Network, fuse: bool) -> (Tensor, usize) {
+    let mut chain = lower_network(net, Mode::Inference);
+    if fuse {
+        fuse_executable(&mut chain);
+    }
+    let mut exec = ChainExec::new(chain);
+    let (name, dims) = input_spec(net).unwrap();
+    exec.set_input(&name, Tensor::rand(&dims, 0xF00D, 1.0));
+    let mut report = exec.run_last().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+    let out = std::sync::Arc::try_unwrap(report.outputs.remove(0)).expect("sole owner");
+    (out, report.entries.len())
+}
+
+fn assert_fused_matches_unfused(code: &str) {
+    let net = benchmark_with_batch(code, 1);
+    let (plain, n_plain) = run_fp_chain(&net, false);
+    let (fused, n_fused) = run_fp_chain(&net, true);
+    assert!(n_fused < n_plain, "{code}: fusion did not shorten ({n_plain} → {n_fused})");
+    assert!(plain.bit_eq(&fused), "{code}: fused output diverged");
+    assert!(plain.data().iter().all(|v| v.is_finite()), "{code}: non-finite output");
+}
+
+#[test]
+fn mobilenet_and_alexnet_fp_chains_run_fused_and_unfused() {
+    // Tier-1 smoke over the two CI-bench networks at batch 1; the other
+    // five run in the release-mode `--ignored` smoke below.
+    for code in ["MN", "AN"] {
+        assert_fused_matches_unfused(code);
+    }
+}
+
+#[test]
+#[ignore = "minutes of debug-mode compute; CI runs it in release via `cargo test --release -- --ignored`"]
+fn all_seven_benchmark_fp_chains_run_fused_and_unfused() {
+    for code in BENCHMARK_CODES {
+        assert_fused_matches_unfused(code);
     }
 }
 
