@@ -4,7 +4,7 @@
 //! per-layer and total throughput.
 //!
 //! Run: `cargo run --release --example native_inference [BATCH]
-//! [--threads N] [--fuse] [--bench-json]`
+//! [--threads N] [--fuse] [--bench-json] [--serve-json]`
 //!
 //! * default: inference demo (batch 2, synthesized weights);
 //! * `--threads N`: run on a scoped rayon pool of N workers;
@@ -14,10 +14,14 @@
 //!   naive oracle vs the fast execution tiers vs the fused chain
 //!   (batch defaults to 1) and write `BENCH_native_exec.json` — the
 //!   repo's perf trajectory artifact, also produced by
-//!   `cargo bench --bench native_exec`.
+//!   `cargo bench --bench native_exec`;
+//! * `--serve-json`: measure steady-state MobileNet serving (fresh
+//!   executor per request vs one reused session vs the engine) and
+//!   write `BENCH_serve.json` (requests/sec, p50/p99 latency,
+//!   bind-amortization ratio).
 
 use gconv_chain::args::{take_flag, take_usize};
-use gconv_chain::exec::bench::{bench_network, write_json, NetBench};
+use gconv_chain::exec::bench::{bench_network, bench_serve, write_json, write_serve_json, NetBench};
 use gconv_chain::exec::{with_threads, ChainExec, Tensor};
 use gconv_chain::gconv::lower::{lower_network, Mode};
 use gconv_chain::mapping::fuse_executable;
@@ -25,21 +29,62 @@ use gconv_chain::networks::{alexnet, mobilenet};
 use gconv_chain::report::{print_table, si};
 
 const JSON_PATH: &str = "BENCH_native_exec.json";
+const SERVE_JSON_PATH: &str = "BENCH_serve.json";
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let threads = take_usize(&mut args, "--threads");
     let bench_mode = take_flag(&mut args, "--bench-json");
+    let serve_mode = take_flag(&mut args, "--serve-json");
     let fuse = take_flag(&mut args, "--fuse");
     let batch_arg: Option<usize> = args.first().and_then(|a| a.parse().ok());
     let body = move || {
-        if bench_mode {
+        if serve_mode {
+            run_serve_json(threads);
+        } else if bench_mode {
             run_bench_json(batch_arg.unwrap_or(1), threads);
         } else {
             run_inference(batch_arg.unwrap_or(2), fuse);
         }
     };
     with_threads(threads, body).expect("building the rayon pool failed");
+}
+
+/// Steady-state serving bench over the MobileNet FP chain at batch 1,
+/// emitted as `BENCH_serve.json`.
+fn run_serve_json(requested_threads: usize) {
+    let threads = match requested_threads {
+        0 => rayon::current_num_threads(),
+        n => n,
+    };
+    println!("serve bench: MN, 8 requests — per-request vs session vs engine…");
+    let b = bench_serve("MN", 8, 4).expect("serve bench failed");
+    println!(
+        "  {}: per-request {:.2} req/s | session {:.2} req/s (p50 {:.2} ms, p99 {:.2} ms) | \
+         engine {:.2} req/s | speedup {} | bind amortization {} | bit-identical: {}",
+        b.net,
+        b.per_request_rps(),
+        b.session_rps(),
+        b.p50_s * 1e3,
+        b.p99_s * 1e3,
+        b.engine_rps(),
+        match b.speedup() {
+            Some(x) => format!("{x:.2}x"),
+            None => "n/a".to_string(),
+        },
+        match b.bind_amortization() {
+            Some(x) => format!("{x:.0}x"),
+            None => "n/a".to_string(),
+        },
+        b.bit_identical
+    );
+    let ok = b.bit_identical;
+    write_serve_json(SERVE_JSON_PATH, &[b], threads).expect("writing serve JSON failed");
+    println!("wrote {SERVE_JSON_PATH}");
+    if !ok {
+        eprintln!("FAIL: a serving path diverged from the per-request outputs");
+        std::process::exit(1);
+    }
 }
 
 /// Naive-vs-fast bench over the MobileNet and AlexNet FP chains,

@@ -12,20 +12,33 @@
 //! Run:
 //!   cargo bench --bench native_exec
 //!   cargo bench --bench native_exec -- MN AN --threads 2 --runs 1
+//!   cargo bench --bench native_exec -- MN --serve --requests 16
 //!
 //! Flags: net codes (any of AN GLN DN MN ZFFR C3D CapNN; default
 //! MN + AN), `--batch N` (default 1), `--runs R` fast-path repetitions
 //! keeping the best (default 2), `--threads N` scoped rayon pool,
 //! `--json PATH` output path. Note: the naive oracle side makes the
 //! heavy nets (DN, GLN, C3D, ZFFR) take minutes — CI sticks to MN + AN.
+//!
+//! `--serve` switches to the serving benchmark instead: each selected
+//! network's batch-1 FP chain is driven request-by-request through a
+//! fresh `ChainExec` (the one-shot calling convention), one reused
+//! `Session`, and the coalescing `Engine`; the report
+//! (`BENCH_serve.json`) carries requests/sec, p50/p99 latency and the
+//! bind-amortization ratio, gated on bit-identical outputs.
+//! `--requests N` (default 16) and `--max-batch N` (default 4) size
+//! the request stream.
 
-use gconv_chain::args::{take_string, take_usize};
-use gconv_chain::exec::bench::{bench_network, write_json, NetBench};
+use gconv_chain::args::{take_flag, take_string, take_usize};
+use gconv_chain::exec::bench::{
+    bench_network, bench_serve, write_json, write_serve_json, NetBench, ServeBench,
+};
 use gconv_chain::exec::with_threads;
 use gconv_chain::networks::{benchmark_with_batch, BENCHMARK_CODES};
 use gconv_chain::report::print_table;
 
 const DEFAULT_JSON: &str = "BENCH_native_exec.json";
+const DEFAULT_SERVE_JSON: &str = "BENCH_serve.json";
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,12 +53,98 @@ fn main() {
         0 => 1,
         n => n,
     };
-    let json_path = take_string(&mut args, "--json").unwrap_or_else(|| DEFAULT_JSON.to_string());
-    let body = move || run(&args, batch, runs, threads, &json_path);
+    let serve = take_flag(&mut args, "--serve");
+    let requests = match take_usize(&mut args, "--requests") {
+        0 => 16,
+        n => n,
+    };
+    let max_batch = match take_usize(&mut args, "--max-batch") {
+        0 => 4,
+        n => n,
+    };
+    let default_json = if serve { DEFAULT_SERVE_JSON } else { DEFAULT_JSON };
+    let json_path = take_string(&mut args, "--json").unwrap_or_else(|| default_json.to_string());
+    let body = move || {
+        if serve {
+            run_serve(&args, requests, max_batch, threads, &json_path);
+        } else {
+            run(&args, batch, runs, threads, &json_path);
+        }
+    };
     if let Err(e) = with_threads(threads, body) {
         eprintln!("bench failed: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Net codes from the CLI arguments (default MN + AN).
+fn select_codes(codes: &[String]) -> Vec<&'static str> {
+    if codes.is_empty() {
+        return vec!["MN", "AN"];
+    }
+    let known: Vec<&str> = BENCHMARK_CODES
+        .iter()
+        .copied()
+        .filter(|c| codes.iter().any(|a| a == c))
+        .collect();
+    if known.is_empty() {
+        eprintln!("no known net codes in {codes:?} (known: {BENCHMARK_CODES:?})");
+        std::process::exit(2);
+    }
+    known
+}
+
+fn run_serve(codes: &[String], requests: usize, max_batch: usize, requested: usize, json: &str) {
+    let threads = match requested {
+        0 => rayon::current_num_threads(),
+        n => n,
+    };
+    let mut results: Vec<ServeBench> = Vec::new();
+    for code in select_codes(codes) {
+        eprintln!(
+            "serve-benchmarking {code} (batch 1, {requests} requests, micro-batch ≤ \
+             {max_batch}, {threads} threads)…"
+        );
+        results.push(bench_serve(code, requests, max_batch).expect("serve bench failed"));
+    }
+    let rows: Vec<Vec<String>> = results.iter().map(serve_row).collect();
+    print_table(
+        "Serve: fresh executor per request vs bind-once session vs engine (batch 1)",
+        &[
+            "net",
+            "reqs",
+            "per-req r/s",
+            "session r/s",
+            "engine r/s",
+            "p50 ms",
+            "p99 ms",
+            "speedup",
+            "bind amort",
+            "bit-id",
+        ],
+        &rows,
+    );
+    write_serve_json(json, &results, threads).expect("writing serve JSON failed");
+    println!("wrote {json}");
+    if results.iter().any(|b| !b.bit_identical) {
+        eprintln!("FAIL: a serving path diverged from the per-request outputs");
+        std::process::exit(1);
+    }
+}
+
+fn serve_row(b: &ServeBench) -> Vec<String> {
+    vec![
+        b.net.clone(),
+        b.requests.to_string(),
+        format!("{:.2}", b.per_request_rps()),
+        format!("{:.2}", b.session_rps()),
+        format!("{:.2}", b.engine_rps()),
+        format!("{:.2}", b.p50_s * 1e3),
+        format!("{:.2}", b.p99_s * 1e3),
+        ratio(b.speedup()),
+        ratio(b.bind_amortization()),
+        b.bit_identical.to_string(),
+    ]
 }
 
 fn run(codes: &[String], batch: usize, runs: usize, requested: usize, json_path: &str) {
@@ -53,20 +152,7 @@ fn run(codes: &[String], batch: usize, runs: usize, requested: usize, json_path:
         0 => rayon::current_num_threads(),
         n => n,
     };
-    let selected: Vec<&str> = if codes.is_empty() {
-        vec!["MN", "AN"]
-    } else {
-        let known: Vec<&str> = BENCHMARK_CODES
-            .iter()
-            .copied()
-            .filter(|c| codes.iter().any(|a| a == c))
-            .collect();
-        if known.is_empty() {
-            eprintln!("no known net codes in {codes:?} (known: {BENCHMARK_CODES:?})");
-            std::process::exit(2);
-        }
-        known
-    };
+    let selected = select_codes(codes);
 
     let mut results: Vec<NetBench> = Vec::new();
     for code in &selected {

@@ -16,7 +16,7 @@
 //! Both sit behind the same submit/step/drain API, so callers never
 //! know which engine served them.
 
-use crate::exec::{ChainExec, RunReport, Tensor};
+use crate::exec::{RunReport, Session, Tensor};
 use crate::gconv::chain::GconvChain;
 use crate::gconv::lower::{lower_network, Mode};
 use crate::ir::{Layer, Network};
@@ -89,15 +89,16 @@ pub trait Backend {
     fn execute(&mut self, batch_data: Vec<f32>) -> Result<Vec<f32>>;
 }
 
-/// Pure-Rust backend: interprets the lowered GCONV chain with
-/// [`crate::exec::ChainExec`]. Missing weights are synthesized
-/// deterministically (provide real ones with
-/// [`NativeBackend::set_weights`]).
+/// Pure-Rust backend: serves the lowered GCONV chain through a
+/// bind-once/run-many [`crate::exec::Session`] — operand validation,
+/// reachability and every entry's plan binding happen once at
+/// construction, and each batch execution only runs the pre-bound
+/// chain. Missing weights are synthesized deterministically (provide
+/// real ones with [`NativeBackend::set_weights`]).
 pub struct NativeBackend {
-    exec: ChainExec,
+    session: Session,
     input_name: String,
     input_dims: Vec<usize>,
-    output_entry: usize,
     batch: usize,
     sample_len: usize,
     out_len: usize,
@@ -134,11 +135,17 @@ impl NativeBackend {
             "output of entry #{output_entry} ({out_total} elements) does not split into \
              batch {batch}"
         );
+        // Freeze the serving session: the zero placeholder fixes the
+        // input extents every request must match, and every entry's
+        // plan binds now, not per batch.
+        let session = Session::builder(chain)
+            .wanted(&[output_entry])
+            .input(input_name, Tensor::zeros(input_dims))
+            .build()?;
         Ok(NativeBackend {
-            exec: ChainExec::new(chain),
+            session,
             input_name: input_name.to_string(),
             input_dims: input_dims.to_vec(),
-            output_entry,
             batch,
             sample_len,
             out_len: out_total / batch,
@@ -160,24 +167,28 @@ impl NativeBackend {
         NativeBackend::new(lower_network(net, Mode::Inference), &name, &dims)
     }
 
-    /// Use entry `i`'s output as the network output instead of the last
-    /// chain entry.
+    /// Use entry `i`'s output as the network output instead of the
+    /// last chain entry. The session is rebuilt around the new wanted
+    /// set (the pre-computed schedule depends on it), keeping every
+    /// operand tensor — including weights provided via
+    /// [`NativeBackend::set_weights`] — intact.
     pub fn with_output(mut self, i: usize) -> Result<Self> {
-        anyhow::ensure!(i < self.exec.chain().len(), "entry #{i} out of range");
-        let out_total = self.exec.chain().entries()[i].op.output_elements();
+        anyhow::ensure!(i < self.session.chain().len(), "entry #{i} out of range");
+        let out_total = self.session.chain().entries()[i].op.output_elements();
         anyhow::ensure!(
             out_total % self.batch == 0,
             "output of entry #{i} ({out_total} elements) does not split into batch {}",
             self.batch
         );
-        self.output_entry = i;
+        self.session = self.session.with_wanted(&[i])?;
         self.out_len = out_total / self.batch;
         Ok(self)
     }
 
     /// Provide real trained parameters for a layer (by lowering name).
-    pub fn set_weights(&mut self, name: &str, t: Tensor) {
-        self.exec.set_weights(name, t);
+    /// The element count must match the bound layout.
+    pub fn set_weights(&mut self, name: &str, t: Tensor) -> Result<()> {
+        self.session.set_weights(name, t)
     }
 
     /// Per-entry timing of the most recent batch execution.
@@ -205,9 +216,9 @@ impl Backend for NativeBackend {
 
     fn execute(&mut self, batch_data: Vec<f32>) -> Result<Vec<f32>> {
         let t = Tensor::new(&self.input_dims, batch_data)?;
-        self.exec.set_input(&self.input_name, t);
-        let mut report = self.exec.run(&[self.output_entry])?;
-        // Outputs are Arc-shared with the executor; the requested entry
+        self.session.set_input(&self.input_name, t)?;
+        let mut report = self.session.run()?;
+        // Outputs are Arc-shared with the session; the requested entry
         // is uniquely owned after the run, so this unwrap moves the
         // buffer out without copying (the fallback clone only triggers
         // if a caller-visible Arc is still alive, which `run` precludes

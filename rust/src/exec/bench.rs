@@ -17,14 +17,17 @@
 
 use std::collections::HashMap;
 use std::fs;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::gconv::lower::{lower_network, Mode};
 use crate::ir::{Layer, Network};
 use crate::mapping::fuse_executable;
+use crate::networks::benchmark_with_batch;
 
 use super::chain_exec::{ChainExec, RunReport};
+use super::serve::{Engine, Session};
 use super::tensor::Tensor;
 
 /// `num / den` when both sides are positive and the ratio is finite;
@@ -250,6 +253,218 @@ fn layer_of(name: &str) -> String {
     name.split('.').next().unwrap_or(name).to_string()
 }
 
+
+/// One network's serve-mode measurement: the same request stream
+/// through (a) a fresh [`ChainExec`] per request — the one-shot calling
+/// convention a deployment without sessions pays, re-synthesizing,
+/// re-validating and re-binding everything per request — (b) one
+/// reused [`Session`], and (c) the [`Engine`] with its chain cache and
+/// coalescing queue.
+#[derive(Clone, Debug)]
+pub struct ServeBench {
+    /// Network code.
+    pub net: String,
+    /// Requests served on each path.
+    pub requests: usize,
+    /// Total seconds, fresh `ChainExec` per request.
+    pub per_request_s: f64,
+    /// `Plan` binds performed by the per-request path.
+    pub per_request_binds: usize,
+    /// Total seconds, one warmed session.
+    pub session_s: f64,
+    /// `Plan` binds performed by the session (all at construction).
+    pub session_binds: usize,
+    /// Median per-request session latency (seconds).
+    pub p50_s: f64,
+    /// 99th-percentile per-request session latency (seconds).
+    pub p99_s: f64,
+    /// Total seconds through the engine (queue + cache + coalescing).
+    pub engine_s: f64,
+    /// Micro-batches the engine executed.
+    pub engine_batches: usize,
+    /// Whether session and engine outputs matched the per-request
+    /// outputs bit-for-bit on every request.
+    pub bit_identical: bool,
+}
+
+impl ServeBench {
+    /// Requests per second, per-request path.
+    pub fn per_request_rps(&self) -> f64 {
+        rps(self.requests, self.per_request_s)
+    }
+
+    /// Requests per second, session path.
+    pub fn session_rps(&self) -> f64 {
+        rps(self.requests, self.session_s)
+    }
+
+    /// Requests per second, engine path.
+    pub fn engine_rps(&self) -> f64 {
+        rps(self.requests, self.engine_s)
+    }
+
+    /// Steady-state throughput of session reuse over the per-request
+    /// calling convention.
+    pub fn speedup(&self) -> Option<f64> {
+        finite_ratio(self.per_request_s, self.session_s)
+    }
+
+    /// How many binds the one-shot path paid per bind the session
+    /// paid: `requests × entries` versus one construction's worth.
+    pub fn bind_amortization(&self) -> Option<f64> {
+        finite_ratio(self.per_request_binds as f64, self.session_binds as f64)
+    }
+}
+
+fn rps(requests: usize, seconds: f64) -> f64 {
+    if seconds > 0.0 {
+        requests as f64 / seconds
+    } else {
+        0.0
+    }
+}
+
+/// Measure steady-state serving of `code`'s FP chain at batch 1 (see
+/// [`ServeBench`]). All three paths see the same deterministic request
+/// stream and synthesized weights; outputs are gated bit-identical.
+pub fn bench_serve(code: &str, requests: usize, max_batch: usize) -> Result<ServeBench> {
+    ensure!(requests > 0, "serve bench needs at least one request");
+    let net = benchmark_with_batch(code, 1);
+    let (input_name, dims) = input_spec(&net)?;
+    let chain = lower_network(&net, Mode::Inference);
+    let inputs: Vec<Tensor> = (0..requests)
+        .map(|i| Tensor::rand(&dims, 0x5E21_BEEF ^ i as u64, 1.0))
+        .collect();
+
+    // (a) per-request: construct, synthesize, validate, bind, run —
+    // every request.
+    let mut per_outputs: Vec<Tensor> = Vec::with_capacity(requests);
+    let mut per_request_binds = 0usize;
+    let t0 = Instant::now();
+    for x in &inputs {
+        let mut exec = ChainExec::new(chain.clone());
+        exec.set_input(&input_name, x.clone());
+        let mut report = exec.run_last()?;
+        per_request_binds += exec.bind_calls();
+        let out = report.outputs.remove(0);
+        per_outputs.push((*out).clone());
+    }
+    let per_request_s = t0.elapsed().as_secs_f64();
+
+    // (b) session: bind once, run many. One warm-up run fills the
+    // buffer pool; the timed loop is the steady state.
+    let mut session = Session::builder(chain)
+        .input(&input_name, Tensor::zeros(&dims))
+        .build()?;
+    session.set_input(&input_name, inputs[0].clone())?;
+    let warm = session.run()?;
+    session.recycle(warm);
+    let mut bit_identical = true;
+    let mut latencies = Vec::with_capacity(requests);
+    let t1 = Instant::now();
+    for (i, x) in inputs.iter().enumerate() {
+        let t = Instant::now();
+        session.set_input(&input_name, x.clone())?;
+        let mut report = session.run()?;
+        latencies.push(t.elapsed().as_secs_f64());
+        let out = report.outputs.remove(0);
+        bit_identical &= out.bit_eq(&per_outputs[i]);
+        session.recycle_outputs(vec![out]);
+    }
+    let session_s = t1.elapsed().as_secs_f64();
+    let session_binds = session.stats().plan_binds;
+    latencies.sort_by(f64::total_cmp);
+    let p50_s = latencies[requests / 2];
+    let p99_s = latencies[(requests * 99 / 100).min(requests - 1)];
+
+    // (c) engine: same stream through the queue/cache front end. The
+    // one-time costs (network resolution, the batch-2 coalescing
+    // probe, lazy session construction) are warmed up outside the
+    // timed window, symmetric with the session leg above.
+    let mut engine = Engine::new(max_batch);
+    engine.submit(code, u64::MAX, inputs[0].data().to_vec())?;
+    ensure!(engine.drain()?.len() == 1, "engine warm-up dropped its request");
+    let warm_batches = engine.stats().batches;
+    let t2 = Instant::now();
+    for (i, x) in inputs.iter().enumerate() {
+        engine.submit(code, i as u64, x.data().to_vec())?;
+    }
+    let mut responses = engine.drain()?;
+    let engine_s = t2.elapsed().as_secs_f64();
+    responses.sort_by_key(|r| r.id);
+    ensure!(responses.len() == requests, "engine dropped requests");
+    for (i, r) in responses.iter().enumerate() {
+        let want = per_outputs[i].data();
+        bit_identical &= r.data.len() == want.len()
+            && r.data.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+
+    Ok(ServeBench {
+        net: net.name.clone(),
+        requests,
+        per_request_s,
+        per_request_binds,
+        session_s,
+        session_binds,
+        p50_s,
+        p99_s,
+        engine_s,
+        engine_batches: engine.stats().batches - warm_batches,
+        bit_identical,
+    })
+}
+
+/// Render serve measurements as the `BENCH_serve.json` document.
+pub fn serve_to_json(benches: &[ServeBench], threads: usize) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve\",\n");
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str("  \"networks\": [\n");
+    for (bi, b) in benches.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"net\": \"{}\",\n", esc(&b.net)));
+        s.push_str(&format!("      \"requests\": {},\n", b.requests));
+        s.push_str(&format!(
+            "      \"per_request\": {{\"seconds\": {}, \"rps\": {}, \"binds\": {}}},\n",
+            jnum(b.per_request_s, 6),
+            jnum(b.per_request_rps(), 3),
+            b.per_request_binds
+        ));
+        s.push_str(&format!(
+            "      \"session\": {{\"seconds\": {}, \"rps\": {}, \"binds\": {}, \
+             \"p50_ms\": {}, \"p99_ms\": {}}},\n",
+            jnum(b.session_s, 6),
+            jnum(b.session_rps(), 3),
+            b.session_binds,
+            jnum(b.p50_s * 1e3, 4),
+            jnum(b.p99_s * 1e3, 4)
+        ));
+        s.push_str(&format!(
+            "      \"engine\": {{\"seconds\": {}, \"rps\": {}, \"batches\": {}}},\n",
+            jnum(b.engine_s, 6),
+            jnum(b.engine_rps(), 3),
+            b.engine_batches
+        ));
+        s.push_str(&format!("      \"speedup\": {},\n", jopt(b.speedup(), 3)));
+        s.push_str(&format!(
+            "      \"bind_amortization\": {},\n",
+            jopt(b.bind_amortization(), 3)
+        ));
+        s.push_str(&format!("      \"bit_identical\": {}\n", b.bit_identical));
+        let sep = if bi + 1 < benches.len() { "," } else { "" };
+        s.push_str(&format!("    }}{sep}\n"));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+/// Write the serve JSON document to `path`.
+pub fn write_serve_json(path: &str, benches: &[ServeBench], threads: usize) -> Result<()> {
+    fs::write(path, serve_to_json(benches, threads)).with_context(|| format!("writing {path}"))
+}
+
 /// A float as a JSON number with `prec` decimals, or `null` when it is
 /// not finite — the emitter-level gate against `inf`/`NaN` in the
 /// artifact.
@@ -404,5 +619,43 @@ mod tests {
     #[test]
     fn esc_escapes_quotes_and_backslashes() {
         assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+    }
+
+    #[test]
+    fn serve_json_renders_synthetic_rows() {
+        let b = ServeBench {
+            net: "tiny".into(),
+            requests: 4,
+            per_request_s: 2.0,
+            per_request_binds: 40,
+            session_s: 1.0,
+            session_binds: 10,
+            p50_s: 0.25,
+            p99_s: 0.5,
+            engine_s: 1.5,
+            engine_batches: 4,
+            bit_identical: true,
+        };
+        assert_eq!(b.speedup(), Some(2.0));
+        assert_eq!(b.bind_amortization(), Some(4.0));
+        assert_eq!(b.session_rps(), 4.0);
+        let json = serve_to_json(&[b], 2);
+        assert!(json.contains("\"bench\": \"serve\""));
+        assert!(json.contains("\"bind_amortization\": 4.000"));
+        assert!(json.contains("\"p50_ms\": 250.0000"));
+        assert!(json.contains("\"bit_identical\": true"));
+        assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
+    }
+
+    #[test]
+    #[ignore = "full MobileNet serve loop; CI runs it in release via `-- --ignored`"]
+    fn serve_bench_mobilenet_is_bit_identical_and_amortizes_binds() {
+        let b = bench_serve("MN", 4, 4).unwrap();
+        assert!(b.bit_identical, "session/engine outputs must match per-request");
+        assert!(b.session_binds > 0);
+        assert_eq!(b.per_request_binds, b.requests * b.session_binds);
+        assert_eq!(b.bind_amortization(), Some(b.requests as f64));
+        let json = serve_to_json(&[b], 0);
+        assert!(json.contains("\"bench\": \"serve\""));
     }
 }

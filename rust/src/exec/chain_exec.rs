@@ -25,6 +25,7 @@
 //! that off for callers that want hard errors instead.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,10 +35,18 @@ use rayon::prelude::*;
 use crate::gconv::chain::{GconvChain, Phase, SpecialOp};
 use crate::gconv::op::{DataRef, GconvOp, MainOp};
 
-use super::interp::{bind_input, eval_in};
+use super::interp::{bind_input, eval_counted};
 use super::pool::{BufferPool, PoolStats};
 use super::special;
 use super::tensor::Tensor;
+
+/// Default seed for deterministic synthesis of missing externals —
+/// shared with the serving layer so a [`super::serve::Session`] and a
+/// [`ChainExec`] over the same chain see identical synthesized weights
+/// (the cross-engine conformance suite depends on this).
+pub(super) const SYNTH_SEED: u64 = 0x6C0_17BD_600D_CAFE;
+/// Default scale for synthesized externals.
+pub(super) const SYNTH_SCALE: f32 = 0.1;
 
 /// What [`ChainExec::run`] does with the buffer-pool shelf after each
 /// run. A long-lived executor that served a large workload and then
@@ -107,7 +116,7 @@ impl RunReport {
 /// precomputed level schedule, and the intermediate-buffer pool.
 pub struct ChainExec {
     chain: GconvChain,
-    externals: HashMap<DataRef, Tensor>,
+    externals: HashMap<DataRef, Arc<Tensor>>,
     synthesize: bool,
     synth_seed: u64,
     synth_scale: f32,
@@ -115,34 +124,29 @@ pub struct ChainExec {
     pool: BufferPool,
     force_naive: bool,
     trim: TrimPolicy,
+    /// `BoundPlan::bind` calls attributed to this executor — the
+    /// one-shot calling convention binds every entry's plan on every
+    /// run; the serve bench reads this to report how much of that work
+    /// session reuse amortizes away.
+    bind_calls: AtomicUsize,
 }
 
 impl ChainExec {
     /// Build an executor for `chain`. Missing externals are synthesized
     /// deterministically by default (see the module docs).
     pub fn new(chain: GconvChain) -> Self {
-        let n = chain.len();
-        let mut level = vec![0usize; n];
-        for i in 0..n {
-            for d in deps(&chain.entries()[i].op) {
-                level[i] = level[i].max(level[d] + 1);
-            }
-        }
-        let depth = level.iter().copied().max().map_or(0, |m| m + 1);
-        let mut levels = vec![Vec::new(); depth];
-        for (i, &l) in level.iter().enumerate() {
-            levels[l].push(i);
-        }
+        let levels = build_levels(&chain);
         ChainExec {
             chain,
             externals: HashMap::new(),
             synthesize: true,
-            synth_seed: 0x6C0_17BD_600D_CAFE,
-            synth_scale: 0.1,
+            synth_seed: SYNTH_SEED,
+            synth_scale: SYNTH_SCALE,
             levels,
             pool: BufferPool::new(),
             force_naive: false,
             trim: TrimPolicy::Keep,
+            bind_calls: AtomicUsize::new(0),
         }
     }
 
@@ -179,13 +183,13 @@ impl ChainExec {
     /// Provide a network input / stored activation tensor (matches
     /// [`DataRef::External`] operands by name, e.g. `"data.data"`).
     pub fn set_input(&mut self, name: &str, t: Tensor) {
-        self.externals.insert(DataRef::External(name.to_string()), t);
+        self.externals.insert(DataRef::External(name.to_string()), Arc::new(t));
     }
 
     /// Provide a layer's trained parameters (matches
     /// [`DataRef::Weights`] operands by name, e.g. `"conv1"`).
     pub fn set_weights(&mut self, name: &str, t: Tensor) {
-        self.externals.insert(DataRef::Weights(name.to_string()), t);
+        self.externals.insert(DataRef::Weights(name.to_string()), Arc::new(t));
     }
 
     /// The chain being executed.
@@ -206,6 +210,14 @@ impl ChainExec {
         self.pool.stats()
     }
 
+    /// Cumulative `Plan` binds this executor has performed. The one-shot
+    /// calling convention re-binds every needed entry on every run —
+    /// compare with [`super::serve::SessionStats::plan_binds`], which
+    /// stays flat after construction.
+    pub fn bind_calls(&self) -> usize {
+        self.bind_calls.load(Ordering::Relaxed)
+    }
+
     /// Execute the chain, returning the outputs of the `wanted` entries
     /// plus per-entry timing. Only entries the `wanted` set transitively
     /// depends on are evaluated; buffers of entries whose last consumer
@@ -219,37 +231,24 @@ impl ChainExec {
 
         // Reverse reachability from `wanted` (deps point backwards, so
         // one descending sweep closes the set).
-        let mut needed = vec![false; n];
-        for &w in wanted {
-            needed[w] = true;
-        }
-        for i in (0..n).rev() {
-            if needed[i] {
-                for d in deps(&self.chain.entries()[i].op) {
-                    needed[d] = true;
-                }
-            }
-        }
+        let needed = reachable(&self.chain, wanted);
         // Shape-check every chain-internal operand up front: an
         // under-covering operand is a bind-time error raised before any
         // entry executes, not a failure in the middle of the chain.
-        self.validate(&needed)?;
-        self.materialize_externals(&needed)?;
+        validate_chain(&self.chain, &needed)?;
+        materialize_externals(
+            &self.chain,
+            &needed,
+            &mut self.externals,
+            self.synthesize,
+            self.synth_seed,
+            self.synth_scale,
+        )?;
         self.pool.begin_run();
 
         // Consumer counts restricted to the needed subgraph, plus one
         // use per `wanted` occurrence.
-        let mut uses = vec![0usize; n];
-        for i in 0..n {
-            if needed[i] {
-                for d in deps(&self.chain.entries()[i].op) {
-                    uses[d] += 1;
-                }
-            }
-        }
-        for &w in wanted {
-            uses[w] += 1;
-        }
+        let mut uses = use_counts(&self.chain, &needed, wanted);
         let mut buffers: Vec<Option<Arc<Tensor>>> = (0..n).map(|_| None).collect();
         let mut records: Vec<EntryRun> = Vec::with_capacity(n);
         let t_total = Instant::now();
@@ -273,7 +272,14 @@ impl ChainExec {
                     let pool = Some(&self.pool);
                     let out = match &e.special {
                         Some(sp) => special::eval_special(&e.op, sp, input, kernel, pool),
-                        None => eval_in(&e.op, input, kernel, pool, self.force_naive),
+                        None => eval_counted(
+                            &e.op,
+                            input,
+                            kernel,
+                            pool,
+                            self.force_naive,
+                            Some(&self.bind_calls),
+                        ),
                     }
                     .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
                     Ok((i, out, t0.elapsed().as_secs_f64()))
@@ -310,21 +316,7 @@ impl ChainExec {
             }
         }
         records.sort_by_key(|r| r.index);
-        let outputs = wanted
-            .iter()
-            .map(|&w| {
-                // The `uses[w] += 1` above kept this buffer alive for
-                // the hand-off; move the Arc out on the last occurrence
-                // and share it (pointer-equal, never a deep copy) when
-                // `wanted` lists the same entry again.
-                uses[w] -= 1;
-                let t = match uses[w] {
-                    0 => buffers[w].take(),
-                    _ => buffers[w].clone(),
-                };
-                t.ok_or_else(|| anyhow!("output of entry #{w} was not retained"))
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let outputs = collect_outputs(wanted, &mut uses, &mut buffers)?;
         match self.trim {
             TrimPolicy::Keep => {}
             TrimPolicy::HighWater => self.pool.trim_stale(),
@@ -335,90 +327,6 @@ impl ChainExec {
             entries: records,
             total_s: t_total.elapsed().as_secs_f64(),
         })
-    }
-
-    /// Shape-check the chain-internal operands of every `needed` entry
-    /// against their producers' output extents, using the same binding
-    /// rules [`super::eval_gconv`] applies — so a chain that cannot
-    /// execute fails here, up front, with the entry named, instead of
-    /// failing mid-run after earlier levels already executed.
-    fn validate(&self, needed: &[bool]) -> Result<()> {
-        let out_dims = |p: usize| -> Vec<usize> {
-            let d = self.chain.entries()[p].op.output_extents();
-            if d.is_empty() {
-                vec![1]
-            } else {
-                d
-            }
-        };
-        for i in 0..self.chain.len() {
-            if !needed[i] {
-                continue;
-            }
-            let e = &self.chain.entries()[i];
-            let ctx = |what: &str, p: usize| {
-                format!("chain entry #{i} ({}): {what} operand from #{p}", e.op.name)
-            };
-            if let Some(sp) = &e.special {
-                // Specials bind by element count only.
-                let want_in = match sp {
-                    SpecialOp::MaxPoolBp { fwd, .. } => special::maxpool_bp_windows(fwd),
-                    SpecialOp::Concat { axis, branch_extent, .. } => {
-                        let dims = out_dims(i);
-                        ensure!(*axis < dims.len(), "{}", ctx("concat axis", i));
-                        let total: usize = dims.iter().product();
-                        total / dims[*axis] * (dims[*axis] - branch_extent)
-                    }
-                };
-                if let DataRef::Gconv(p) = &e.op.input {
-                    let got: usize = out_dims(*p).iter().product();
-                    ensure!(
-                        got == want_in,
-                        "{}: has {got} elements, expected {want_in}",
-                        ctx("input", *p)
-                    );
-                }
-                ensure!(
-                    e.op.kernel.is_some(),
-                    "chain entry #{i} ({}): special needs two operands",
-                    e.op.name
-                );
-                let want_ker = match sp {
-                    SpecialOp::MaxPoolBp { in_extents, .. } => in_extents.iter().product(),
-                    SpecialOp::Concat { axis, branch_extent, .. } => {
-                        let dims = out_dims(i);
-                        let total: usize = dims.iter().product();
-                        total / dims[*axis] * branch_extent
-                    }
-                };
-                if let Some(DataRef::Gconv(p)) = &e.op.kernel {
-                    let got: usize = out_dims(*p).iter().product();
-                    ensure!(
-                        got == want_ker,
-                        "{}: has {got} elements, expected {want_ker}",
-                        ctx("kernel", *p)
-                    );
-                }
-                continue;
-            }
-            if let DataRef::Gconv(p) = &e.op.input {
-                let dims = out_dims(*p);
-                let elements = dims.iter().product();
-                bind_input(&e.op, &dims, elements).with_context(|| ctx("input", *p))?;
-            }
-            if !matches!(e.op.main, MainOp::Pass) {
-                if let Some(DataRef::Gconv(p)) = &e.op.kernel {
-                    let got: usize = out_dims(*p).iter().product();
-                    let want = e.op.kernel_elements();
-                    ensure!(
-                        got == want,
-                        "{}: has {got} elements, expected {want}",
-                        ctx("kernel", *p)
-                    );
-                }
-            }
-        }
-        Ok(())
     }
 
     /// Execute the chain and return the final entry's output (the
@@ -441,72 +349,259 @@ impl ChainExec {
             other => self
                 .externals
                 .get(other)
+                .map(Arc::as_ref)
                 .ok_or_else(|| anyhow!("external operand {other} not provided")),
         }
     }
+}
 
-    /// Ensure every external operand of the `needed` entries has a
-    /// tensor, synthesizing missing ones (deterministically, keyed by
-    /// operand name) when allowed. Pruned entries are skipped: their
-    /// externals are neither required (strict mode) nor synthesized.
-    fn materialize_externals(&mut self, needed: &[bool]) -> Result<()> {
-        for i in 0..self.chain.len() {
-            if !needed[i] {
-                continue;
-            }
-            let e = &self.chain.entries()[i];
-            // Per-operand extents; special entries bind their operands by
-            // their own geometry, not the op's Table-3 extents.
-            let (in_ext, ker_ext) = match &e.special {
-                Some(SpecialOp::MaxPoolBp { fwd, in_extents }) => {
-                    let windows = fwd.iter().map(|&(_, p)| p.output_extent()).collect();
-                    (windows, in_extents.clone())
+/// Shape-check the chain-internal operands of every `needed` entry
+/// against their producers' output extents, using the same binding
+/// rules [`super::eval_gconv`] applies — so a chain that cannot
+/// execute fails here, up front, with the entry named, instead of
+/// failing mid-run after earlier levels already executed. Shared by
+/// [`ChainExec::run`] (per call) and the serving layer (once at
+/// session construction).
+pub(super) fn validate_chain(chain: &GconvChain, needed: &[bool]) -> Result<()> {
+    let out_dims = |p: usize| -> Vec<usize> {
+        let d = chain.entries()[p].op.output_extents();
+        if d.is_empty() {
+            vec![1]
+        } else {
+            d
+        }
+    };
+    for i in 0..chain.len() {
+        if !needed[i] {
+            continue;
+        }
+        let e = &chain.entries()[i];
+        let ctx = |what: &str, p: usize| {
+            format!("chain entry #{i} ({}): {what} operand from #{p}", e.op.name)
+        };
+        if let Some(sp) = &e.special {
+            // Specials bind by element count only.
+            let want_in = match sp {
+                SpecialOp::MaxPoolBp { fwd, .. } => special::maxpool_bp_windows(fwd),
+                SpecialOp::Concat { axis, branch_extent, .. } => {
+                    let dims = out_dims(i);
+                    ensure!(*axis < dims.len(), "{}", ctx("concat axis", i));
+                    let total: usize = dims.iter().product();
+                    total / dims[*axis] * (dims[*axis] - branch_extent)
                 }
-                Some(SpecialOp::Concat { axis, pre_extent, branch_extent }) => {
-                    let mut dims = e.op.output_extents();
-                    if dims.is_empty() {
-                        dims.push(1);
-                    }
-                    let mut pre_dims = dims.clone();
-                    pre_dims[*axis] = *pre_extent;
-                    let mut branch_dims = dims;
-                    branch_dims[*axis] = *branch_extent;
-                    (pre_dims, branch_dims)
-                }
-                None => (e.op.input_extents(), e.op.kernel_extents()),
             };
-            let mut want: Vec<(DataRef, Vec<usize>)> = Vec::new();
-            if !matches!(e.op.input, DataRef::Gconv(_)) {
-                want.push((e.op.input.clone(), in_ext));
-            }
-            if let Some(k) = &e.op.kernel {
-                if !matches!(k, DataRef::Gconv(_)) {
-                    want.push((k.clone(), ker_ext));
-                }
-            }
-            for (r, mut dims) in want {
-                if self.externals.contains_key(&r) {
-                    continue;
-                }
+            if let DataRef::Gconv(p) = &e.op.input {
+                let got: usize = out_dims(*p).iter().product();
                 ensure!(
-                    self.synthesize,
-                    "chain entry #{i} ({}) needs external operand {r}, and synthesis is off",
-                    e.op.name
+                    got == want_in,
+                    "{}: has {got} elements, expected {want_in}",
+                    ctx("input", *p)
                 );
+            }
+            ensure!(
+                e.op.kernel.is_some(),
+                "chain entry #{i} ({}): special needs two operands",
+                e.op.name
+            );
+            let want_ker = match sp {
+                SpecialOp::MaxPoolBp { in_extents, .. } => in_extents.iter().product(),
+                SpecialOp::Concat { axis, branch_extent, .. } => {
+                    let dims = out_dims(i);
+                    let total: usize = dims.iter().product();
+                    total / dims[*axis] * branch_extent
+                }
+            };
+            if let Some(DataRef::Gconv(p)) = &e.op.kernel {
+                let got: usize = out_dims(*p).iter().product();
+                ensure!(
+                    got == want_ker,
+                    "{}: has {got} elements, expected {want_ker}",
+                    ctx("kernel", *p)
+                );
+            }
+            continue;
+        }
+        if let DataRef::Gconv(p) = &e.op.input {
+            let dims = out_dims(*p);
+            let elements = dims.iter().product();
+            bind_input(&e.op, &dims, elements).with_context(|| ctx("input", *p))?;
+        }
+        if !matches!(e.op.main, MainOp::Pass) {
+            if let Some(DataRef::Gconv(p)) = &e.op.kernel {
+                let got: usize = out_dims(*p).iter().product();
+                let want = e.op.kernel_elements();
+                ensure!(
+                    got == want,
+                    "{}: has {got} elements, expected {want}",
+                    ctx("kernel", *p)
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Every external operand of the `needed` entries with the extents a
+/// synthesized stand-in would take: `(entry index, operand ref,
+/// extents)`, in chain order, duplicates included (the first
+/// occurrence of a ref defines its synthesized shape). Shared by
+/// [`materialize_externals`] and the serving layer's batch-independence
+/// probe, which needs the shapes without generating any data.
+pub(super) fn external_specs(
+    chain: &GconvChain,
+    needed: &[bool],
+) -> Vec<(usize, DataRef, Vec<usize>)> {
+    let mut specs = Vec::new();
+    for i in 0..chain.len() {
+        if !needed[i] {
+            continue;
+        }
+        let e = &chain.entries()[i];
+        // Per-operand extents; special entries bind their operands by
+        // their own geometry, not the op's Table-3 extents.
+        let (in_ext, ker_ext) = match &e.special {
+            Some(SpecialOp::MaxPoolBp { fwd, in_extents }) => {
+                let windows = fwd.iter().map(|&(_, p)| p.output_extent()).collect();
+                (windows, in_extents.clone())
+            }
+            Some(SpecialOp::Concat { axis, pre_extent, branch_extent }) => {
+                let mut dims = e.op.output_extents();
                 if dims.is_empty() {
                     dims.push(1);
                 }
-                let seed = self.synth_seed ^ fnv1a(r.to_string().as_bytes());
-                let t = Tensor::rand(&dims, seed, self.synth_scale);
-                self.externals.insert(r, t);
+                let mut pre_dims = dims.clone();
+                pre_dims[*axis] = *pre_extent;
+                let mut branch_dims = dims;
+                branch_dims[*axis] = *branch_extent;
+                (pre_dims, branch_dims)
+            }
+            None => (e.op.input_extents(), e.op.kernel_extents()),
+        };
+        if !matches!(e.op.input, DataRef::Gconv(_)) {
+            specs.push((i, e.op.input.clone(), in_ext));
+        }
+        if let Some(k) = &e.op.kernel {
+            if !matches!(k, DataRef::Gconv(_)) {
+                specs.push((i, k.clone(), ker_ext));
             }
         }
-        Ok(())
     }
+    specs
+}
+
+/// Ensure every external operand of the `needed` entries has a tensor,
+/// synthesizing missing ones (deterministically, keyed by operand name)
+/// when allowed. Pruned entries are skipped: their externals are
+/// neither required (strict mode) nor synthesized. Tensors are
+/// `Arc`-shared so the serving layer can hand the same weight buffers
+/// to many sessions without copying.
+pub(super) fn materialize_externals(
+    chain: &GconvChain,
+    needed: &[bool],
+    externals: &mut HashMap<DataRef, Arc<Tensor>>,
+    synthesize: bool,
+    synth_seed: u64,
+    synth_scale: f32,
+) -> Result<()> {
+    for (i, r, mut dims) in external_specs(chain, needed) {
+        if externals.contains_key(&r) {
+            continue;
+        }
+        ensure!(
+            synthesize,
+            "chain entry #{i} ({}) needs external operand {r}, and synthesis is off",
+            chain.entries()[i].op.name
+        );
+        if dims.is_empty() {
+            dims.push(1);
+        }
+        let seed = synth_seed ^ fnv1a(r.to_string().as_bytes());
+        let t = Tensor::rand(&dims, seed, synth_scale);
+        externals.insert(r, Arc::new(t));
+    }
+    Ok(())
+}
+
+/// Reverse reachability of the `wanted` entries: deps point backwards,
+/// so one descending sweep closes the set.
+pub(super) fn reachable(chain: &GconvChain, wanted: &[usize]) -> Vec<bool> {
+    let n = chain.len();
+    let mut needed = vec![false; n];
+    for &w in wanted {
+        needed[w] = true;
+    }
+    for i in (0..n).rev() {
+        if needed[i] {
+            for d in deps(&chain.entries()[i].op) {
+                needed[d] = true;
+            }
+        }
+    }
+    needed
+}
+
+/// Level schedule of a chain: every entry's level is `1 + max(level of
+/// its deps)`; entries in one level have no mutual data dependencies
+/// and evaluate concurrently.
+pub(super) fn build_levels(chain: &GconvChain) -> Vec<Vec<usize>> {
+    let n = chain.len();
+    let mut level = vec![0usize; n];
+    for i in 0..n {
+        for d in deps(&chain.entries()[i].op) {
+            level[i] = level[i].max(level[d] + 1);
+        }
+    }
+    let depth = level.iter().copied().max().map_or(0, |m| m + 1);
+    let mut levels = vec![Vec::new(); depth];
+    for (i, &l) in level.iter().enumerate() {
+        levels[l].push(i);
+    }
+    levels
+}
+
+/// Consumer counts restricted to the needed subgraph, plus one use per
+/// `wanted` occurrence (which keeps requested buffers alive for the
+/// hand-off to the caller).
+pub(super) fn use_counts(chain: &GconvChain, needed: &[bool], wanted: &[usize]) -> Vec<usize> {
+    let n = chain.len();
+    let mut uses = vec![0usize; n];
+    for i in 0..n {
+        if needed[i] {
+            for d in deps(&chain.entries()[i].op) {
+                uses[d] += 1;
+            }
+        }
+    }
+    for &w in wanted {
+        uses[w] += 1;
+    }
+    uses
+}
+
+/// Move the requested output buffers out of the executor's buffer
+/// table: the extra `wanted` use kept each alive; the Arc moves out on
+/// its last occurrence and is shared (pointer-equal, never a deep copy)
+/// when `wanted` lists the same entry again.
+pub(super) fn collect_outputs(
+    wanted: &[usize],
+    uses: &mut [usize],
+    buffers: &mut [Option<Arc<Tensor>>],
+) -> Result<Vec<Arc<Tensor>>> {
+    wanted
+        .iter()
+        .map(|&w| {
+            uses[w] -= 1;
+            let t = match uses[w] {
+                0 => buffers[w].take(),
+                _ => buffers[w].clone(),
+            };
+            t.ok_or_else(|| anyhow!("output of entry #{w} was not retained"))
+        })
+        .collect()
 }
 
 /// Chain-internal dependencies of an op (producer indices).
-fn deps(op: &GconvOp) -> Vec<usize> {
+pub(super) fn deps(op: &GconvOp) -> Vec<usize> {
     let mut out = Vec::with_capacity(2);
     if let DataRef::Gconv(i) = op.input {
         out.push(i);

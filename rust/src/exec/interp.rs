@@ -20,12 +20,17 @@
 //! [`crate::gconv::lower`]: conv, FC, pooling, BN, LRN, softmax and their
 //! BP/WG forms all reduce to this one evaluator.
 //!
-//! Binding an op to tensors produces a `Plan`; [`eval_gconv`] then picks
-//! an execution tier for the plan (see `super::kernels`): a packed-panel
-//! dot/GEMM fast path for `Mul`+`Add` reductions, an odometer-indexed
-//! generic fast path for everything else, and the naive per-element
-//! oracle (`Plan::eval_one`, reachable via [`eval_gconv_naive`]) kept
-//! for differential testing. All tiers are bit-identical.
+//! Binding an op to an input layout produces an owned `BoundPlan`
+//! (validated shapes, precomputed strides, LUT names resolved, execution
+//! tier chosen); evaluation pairs a bound plan with concrete operand
+//! slices and dispatches to a tier (see `super::kernels`): a
+//! packed-panel dot/GEMM fast path for `Mul`+`Add` reductions, an
+//! odometer-indexed generic fast path for everything else, and the naive
+//! per-element oracle (`Plan::eval_one`, reachable via
+//! [`eval_gconv_naive`]) kept for differential testing. All tiers are
+//! bit-identical. Because a `BoundPlan` owns no tensor data, the serving
+//! layer ([`super::serve`]) binds each chain entry once and re-runs the
+//! stored plans against fresh buffers on every request.
 //!
 //! ## Index semantics
 //!
@@ -58,6 +63,8 @@
 //! up front before running anything (see [`bind_input`]).
 //!
 //! [`DimParams::input_extent`]: crate::gconv::op::DimParams::input_extent
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -345,16 +352,40 @@ pub(super) struct LoopDim {
     pub(super) red_stride: usize,
 }
 
-/// A [`GconvOp`] bound to concrete input/kernel tensors: validated
-/// shapes, precomputed strides, operators resolved, ready to evaluate.
-pub(super) struct Plan<'t> {
-    pub(super) op: &'t GconvOp,
+/// A [`GconvOp`] bound to a concrete *input layout*: validated shapes,
+/// precomputed strides, scalar operators resolved, execution tier
+/// chosen. A `BoundPlan` owns no tensor data, so it outlives the call
+/// that created it — the serving layer ([`super::serve::Session`])
+/// binds every chain entry once at construction and re-runs the stored
+/// plans against fresh buffers on every request, paying the shape
+/// validation, LUT resolution and stride precomputation exactly once.
+/// [`Plan`] is the per-call view pairing a bound plan with the operand
+/// slices of one evaluation.
+pub(super) struct BoundPlan {
+    /// Op name, kept for error messages.
+    pub(super) name: String,
+    pub(super) main: MainOp,
+    pub(super) reduce: ReduceOp,
     pub(super) pre: PreEval,
     pub(super) post: PostEval,
     pub(super) dims: Vec<LoopDim>,
     pub(super) out_dims: Vec<usize>,
     pub(super) out_total: usize,
     pub(super) red_total: usize,
+    /// Element count the bound input layout requires.
+    pub(super) in_elements: usize,
+    /// Required kernel element count (0 when `main` is `Pass` — the
+    /// kernel operand, if any, is ignored then).
+    pub(super) ker_elements: usize,
+    /// Execution tier, fixed at bind time (a pure shape/operator
+    /// property).
+    tier: KernelTier,
+}
+
+/// Per-call view of a bound plan plus the operand slices of this
+/// evaluation — what the execution tiers in `super::kernels` consume.
+pub(super) struct Plan<'t> {
+    pub(super) bound: &'t BoundPlan,
     pub(super) xs: &'t [f32],
     pub(super) ws: Option<&'t [f32]>,
 }
@@ -362,7 +393,7 @@ pub(super) struct Plan<'t> {
 /// Shape-only input binding: how a tensor with extents `in_dims` (and
 /// `elements` total) binds to `op`'s input slot — exact element count
 /// (reshape semantics), rank-aligned slack/broadcast, or squeezed
-/// alignment (see the module docs). Shared by [`Plan::bind`] and the
+/// alignment (see the module docs). Shared by [`BoundPlan::bind`] and the
 /// chain executor's up-front operand validation, so an under-covering
 /// chain-internal operand is a bind-time error in both places, never a
 /// mid-chain evaluation failure.
@@ -462,12 +493,26 @@ pub(super) fn bind_input(op: &GconvOp, in_dims: &[usize], elements: usize) -> Re
     Ok(InputLayout { in_actual, broadcast, in_full })
 }
 
-impl<'t> Plan<'t> {
+impl BoundPlan {
+    /// Bind `op` to an input of extents `in_dims` (`in_elements`
+    /// total). Every call is counted into `binds` when one is given —
+    /// the per-executor bind counters behind the serve bench's
+    /// bind-amortization ratio and the "a session never rebinds after
+    /// construction" test both hang off this.
     pub(super) fn bind(
-        op: &'t GconvOp,
-        input: &'t Tensor,
-        kernel: Option<&'t Tensor>,
+        op: &GconvOp,
+        in_dims: &[usize],
+        in_elements: usize,
+        binds: Option<&AtomicUsize>,
     ) -> Result<Self> {
+        if let Some(c) = binds {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        ensure!(
+            op.dims.len() <= MAX_DIMS,
+            "{}: more than {MAX_DIMS} dimensions",
+            op.name
+        );
         let nd = op.dims.len();
 
         // Expected kernel/output extents (Table 3).
@@ -478,30 +523,16 @@ impl<'t> Plan<'t> {
             out_ext.push(p.ng * p.nop * p.nopc);
         }
 
-        // Bind the input tensor (shape-only logic shared with the chain
+        // Bind the input layout (shape-only logic shared with the chain
         // executor's validation).
-        let layout = bind_input(op, input.dims(), input.elements())?;
+        let layout = bind_input(op, in_dims, in_elements)?;
         let InputLayout { in_actual, broadcast, in_full } = layout;
+        debug_assert_eq!(in_full.iter().product::<usize>(), in_elements);
 
-        // Bind the kernel tensor (exact element count, no slack).
+        // Kernel requirement (exact element count, checked against the
+        // concrete tensor per call by [`BoundPlan::check_operands`]).
         let need_kernel = !matches!(op.main, MainOp::Pass);
-        let ws = if need_kernel {
-            let k = kernel.with_context(|| {
-                format!("{}: main {:?} needs a kernel operand", op.name, op.main)
-            })?;
-            let kn: usize = ker_ext.iter().product();
-            ensure!(
-                k.elements() == kn,
-                "{}: kernel has {} elements, expected {} {:?}",
-                op.name,
-                k.elements(),
-                kn,
-                ker_ext
-            );
-            Some(k.data())
-        } else {
-            None
-        };
+        let ker_elements: usize = if need_kernel { ker_ext.iter().product() } else { 0 };
 
         // Resolve the scalar operators up front so the hot loops are
         // infallible and never string-match (unknown LUT names are bind
@@ -562,49 +593,88 @@ impl<'t> Plan<'t> {
 
         let out_total: usize = out_ext.iter().product();
         let out_dims = if nd == 0 { vec![1] } else { out_ext };
-        Ok(Plan {
-            op,
+        // Tier selection is a pure shape/operator property: the dense
+        // dot/GEMM path for `Mul`+`Add` reductions long enough to
+        // amortize panel packing, the odometer path for every other
+        // nest, the naive oracle for degenerate 0-dimension plans.
+        let tier = if nd == 0 {
+            KernelTier::Naive
+        } else if op.main == MainOp::Mul
+            && op.reduce == ReduceOp::Add
+            && ker_elements > 0
+            && red_total >= GEMM_MIN_REDUCTION
+        {
+            KernelTier::Gemm
+        } else {
+            KernelTier::Odometer
+        };
+        Ok(BoundPlan {
+            name: op.name.clone(),
+            main: op.main,
+            reduce: op.reduce,
             pre,
             post,
             dims,
             out_dims,
             out_total,
             red_total,
-            xs: input.data(),
-            ws,
+            in_elements,
+            ker_elements,
+            tier,
         })
     }
 
-    /// Which execution tier `eval_in` picks for this plan: the dense
-    /// dot/GEMM path for `Mul`+`Add` reductions long enough to amortize
-    /// panel packing, the odometer path for every other nest, and the
-    /// naive oracle when forced (or for degenerate 0-dimension plans).
+    /// Which execution tier evaluation picks for this plan.
     pub(super) fn tier(&self, force_naive: bool) -> KernelTier {
-        if force_naive || self.dims.is_empty() {
-            return KernelTier::Naive;
+        if force_naive {
+            KernelTier::Naive
+        } else {
+            self.tier
         }
-        let gemm = self.op.main == MainOp::Mul
-            && self.op.reduce == ReduceOp::Add
-            && self.ws.is_some()
-            && self.red_total >= GEMM_MIN_REDUCTION;
-        if gemm {
-            return KernelTier::Gemm;
-        }
-        KernelTier::Odometer
     }
 
+    /// Check concrete operand tensors against the bound layout. Only
+    /// element counts are compared — the expensive shape work happened
+    /// once at bind time, which is what makes a stored plan cheap to
+    /// re-run against fresh buffers.
+    pub(super) fn check_operands(&self, input: &Tensor, kernel: Option<&Tensor>) -> Result<()> {
+        ensure!(
+            input.elements() == self.in_elements,
+            "{}: input has {} elements, the bound layout needs {}",
+            self.name,
+            input.elements(),
+            self.in_elements
+        );
+        if self.ker_elements > 0 {
+            let k = kernel.with_context(|| {
+                format!("{}: main {:?} needs a kernel operand", self.name, self.main)
+            })?;
+            ensure!(
+                k.elements() == self.ker_elements,
+                "{}: kernel has {} elements, expected {}",
+                self.name,
+                k.elements(),
+                self.ker_elements
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Plan<'_> {
     /// Evaluate output element `o` (flat row-major index) — the naive
     /// reference oracle: per-element div/mod coordinate decomposition
     /// and per-step stride recomputation. The fast tiers in
     /// `super::kernels` must match it bit-for-bit.
     #[inline]
     pub(super) fn eval_one(&self, o: usize) -> f32 {
+        let bound = self.bound;
         // Decompose the output coordinate per dimension.
-        debug_assert!(self.dims.len() <= MAX_DIMS);
+        debug_assert!(bound.dims.len() <= MAX_DIMS);
         let mut in_base = [0usize; MAX_DIMS]; // group offset (elements)
         let mut pos0 = [0i64; MAX_DIMS]; // window start within the group
         let mut ker_base = [0usize; MAX_DIMS];
-        for (i, d) in self.dims.iter().enumerate() {
+        for (i, d) in bound.dims.iter().enumerate() {
             let oc = (o / d.out_stride) % d.out_ext;
             let g = oc / d.npc;
             let r = oc % d.npc;
@@ -615,17 +685,17 @@ impl<'t> Plan<'t> {
             ker_base[i] = (g * d.nop + kop) * d.nks;
         }
 
-        let reduce = self.op.reduce;
+        let reduce = bound.reduce;
         let mut acc: f64 = match reduce {
             ReduceOp::Max => f64::NEG_INFINITY,
             _ => 0.0,
         };
         let mut any = false;
-        for r in 0..self.red_total {
+        for r in 0..bound.red_total {
             let mut x_idx = 0usize;
             let mut w_idx = 0usize;
             let mut oob = false;
-            for (i, d) in self.dims.iter().enumerate() {
+            for (i, d) in bound.dims.iter().enumerate() {
                 let ks = (r / d.red_stride) % d.nks;
                 let pos = pos0[i] + ks as i64;
                 if pos < 0 || pos >= d.in_actual as i64 {
@@ -642,10 +712,10 @@ impl<'t> Plan<'t> {
             if !oob {
                 x = self.xs[x_idx];
             }
-            let a = self.pre.apply(x);
+            let a = bound.pre.apply(x);
             let m = match self.ws {
-                Some(ws) => main_apply(self.op.main, a, ws[w_idx]),
-                None => main_apply(self.op.main, a, 0.0),
+                Some(ws) => main_apply(bound.main, a, ws[w_idx]),
+                None => main_apply(bound.main, a, 0.0),
             };
             match reduce {
                 ReduceOp::Add => acc += m as f64,
@@ -657,7 +727,7 @@ impl<'t> Plan<'t> {
         if !any {
             acc = 0.0; // fully padded window (degenerate BP edge)
         }
-        self.post.apply(acc as f32)
+        bound.post.apply(acc as f32)
     }
 }
 
@@ -691,13 +761,9 @@ pub fn eval_gconv_naive(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -
 /// Which execution tier [`eval_gconv`] would pick for this op/tensor
 /// binding (exposed for tests, benches and instrumentation).
 pub fn plan_tier(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<KernelTier> {
-    ensure!(
-        op.dims.len() <= MAX_DIMS,
-        "{}: more than {MAX_DIMS} dimensions",
-        op.name
-    );
-    let plan = Plan::bind(op, input, kernel)?;
-    Ok(plan.tier(false))
+    let bound = BoundPlan::bind(op, input.dims(), input.elements(), None)?;
+    bound.check_operands(input, kernel)?;
+    Ok(bound.tier(false))
 }
 
 /// Full-control evaluation entry point: optional buffer pool for the
@@ -709,26 +775,58 @@ pub(super) fn eval_in(
     pool: Option<&BufferPool>,
     force_naive: bool,
 ) -> Result<Tensor> {
-    ensure!(
-        op.dims.len() <= MAX_DIMS,
-        "{}: more than {MAX_DIMS} dimensions",
-        op.name
-    );
-    let plan = Plan::bind(op, input, kernel)?;
-    if plan.out_total == 0 {
-        bail!("{}: empty output", op.name);
+    eval_counted(op, input, kernel, pool, force_naive, None)
+}
+
+/// [`eval_in`] with an attributed bind counter: the one-shot path binds
+/// a fresh plan on every call, and the chain executor counts those
+/// binds so the serve bench can report how much of that work a
+/// [`super::serve::Session`] amortizes away.
+pub(super) fn eval_counted(
+    op: &GconvOp,
+    input: &Tensor,
+    kernel: Option<&Tensor>,
+    pool: Option<&BufferPool>,
+    force_naive: bool,
+    binds: Option<&AtomicUsize>,
+) -> Result<Tensor> {
+    let bound = BoundPlan::bind(op, input.dims(), input.elements(), binds)?;
+    eval_bound(&bound, input, kernel, pool, force_naive)
+}
+
+/// Evaluate a *pre-bound* plan against concrete operand tensors: the
+/// bind-once/run-many half of the calling convention. No shape
+/// analysis, no LUT resolution, no stride computation — only an
+/// element-count check, an output buffer (pooled when available) and
+/// the tier dispatch.
+pub(super) fn eval_bound(
+    bound: &BoundPlan,
+    input: &Tensor,
+    kernel: Option<&Tensor>,
+    pool: Option<&BufferPool>,
+    force_naive: bool,
+) -> Result<Tensor> {
+    bound.check_operands(input, kernel)?;
+    if bound.out_total == 0 {
+        bail!("{}: empty output", bound.name);
     }
     let mut data = match pool {
-        Some(p) => p.take(plan.out_total),
-        None => vec![0.0; plan.out_total],
+        Some(p) => p.take(bound.out_total),
+        None => vec![0.0; bound.out_total],
     };
-    debug_assert_eq!(data.len(), plan.out_total);
-    match plan.tier(force_naive) {
+    debug_assert_eq!(data.len(), bound.out_total);
+    let ws = if bound.ker_elements > 0 {
+        kernel.map(|k| k.data())
+    } else {
+        None
+    };
+    let plan = Plan { bound, xs: input.data(), ws };
+    match bound.tier(force_naive) {
         KernelTier::Gemm => kernels::eval_gemm(&plan, &mut data),
         KernelTier::Odometer => kernels::eval_odometer(&plan, &mut data),
         KernelTier::Naive => kernels::eval_naive(&plan, &mut data),
     }
-    Tensor::new(&plan.out_dims, data)
+    Tensor::new(&bound.out_dims, data)
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Fast-path execution kernels for the native GCONV interpreter.
 //!
-//! `Plan::bind` (in `super::interp`) validates shapes and resolves the
-//! scalar operators; this module decides *how* a bound plan is
+//! `BoundPlan::bind` (in `super::interp`) validates shapes and resolves
+//! the scalar operators once; this module decides *how* a bound plan is
 //! evaluated. Three tiers implement the same loop nest:
 //!
 //! * [`KernelTier::Gemm`] — `Mul`+`Add` GCONVs with a non-trivial
@@ -28,7 +28,7 @@ use rayon::prelude::*;
 
 use crate::gconv::op::ReduceOp;
 
-use super::interp::{main_apply, MAX_DIMS, Plan};
+use super::interp::{main_apply, BoundPlan, Plan, MAX_DIMS};
 
 /// Reduction length below which GEMM panel packing cannot amortize its
 /// per-column index arithmetic and the odometer path wins.
@@ -65,7 +65,7 @@ struct RedStep {
 
 /// The reduction-step table shared by both fast paths: one entry per
 /// flattened `Nks` step, in the oracle's row-major reduction order.
-fn red_steps(plan: &Plan) -> Vec<RedStep> {
+fn red_steps(plan: &BoundPlan) -> Vec<RedStep> {
     let mut steps = Vec::with_capacity(plan.red_total);
     for r in 0..plan.red_total {
         let mut st = RedStep {
@@ -87,7 +87,7 @@ fn red_steps(plan: &Plan) -> Vec<RedStep> {
 /// True when no window position of the plan can fall outside the bound
 /// input (no padding, input covers every window): the per-step bounds
 /// check can be skipped entirely.
-fn never_oob(plan: &Plan) -> bool {
+fn never_oob(plan: &BoundPlan) -> bool {
     for d in &plan.dims {
         if d.ps != 0 || (d.nopc - 1) * d.s + d.nks > d.in_actual {
             return false;
@@ -118,7 +118,7 @@ struct OutState {
 impl OutState {
     /// Decompose flat output index `o` — the oracle's div/mod split,
     /// done once per parallel chunk instead of once per element.
-    fn seed(plan: &Plan, o: usize) -> OutState {
+    fn seed(plan: &BoundPlan, o: usize) -> OutState {
         let mut st = OutState {
             g: [0; MAX_DIMS],
             kop: [0; MAX_DIMS],
@@ -150,7 +150,7 @@ impl OutState {
     /// Advance to the next output element in row-major order, updating
     /// only the dimensions whose digits change (odometer carry) and
     /// adjusting the flattened bases by the matching deltas.
-    fn advance(&mut self, plan: &Plan) {
+    fn advance(&mut self, plan: &BoundPlan) {
         let mut i = plan.dims.len();
         while i > 0 {
             i -= 1;
@@ -204,8 +204,8 @@ impl OutState {
 /// no div/mod).
 fn eval_steps(plan: &Plan, st: &OutState, steps: &[RedStep], safe: bool) -> f32 {
     let (x_base, w_base) = st.bases();
-    let reduce = plan.op.reduce;
-    let main = plan.op.main;
+    let reduce = plan.bound.reduce;
+    let main = plan.bound.main;
     let mut acc: f64 = match reduce {
         ReduceOp::Max => f64::NEG_INFINITY,
         _ => 0.0,
@@ -214,7 +214,7 @@ fn eval_steps(plan: &Plan, st: &OutState, steps: &[RedStep], safe: bool) -> f32 
     for step in steps {
         let mut oob = false;
         if !safe {
-            for (i, d) in plan.dims.iter().enumerate() {
+            for (i, d) in plan.bound.dims.iter().enumerate() {
                 let pos = st.pos0[i] + i64::from(step.ks[i]);
                 if pos < 0 || pos >= d.in_actual as i64 {
                     oob = true;
@@ -229,7 +229,7 @@ fn eval_steps(plan: &Plan, st: &OutState, steps: &[RedStep], safe: bool) -> f32 
         if !oob {
             x = plan.xs[(x_base + step.x_off) as usize];
         }
-        let a = plan.pre.apply(x);
+        let a = plan.bound.pre.apply(x);
         let m = match plan.ws {
             Some(ws) => main_apply(main, a, ws[w_base + step.w_off]),
             None => main_apply(main, a, 0.0),
@@ -244,21 +244,21 @@ fn eval_steps(plan: &Plan, st: &OutState, steps: &[RedStep], safe: bool) -> f32 
     if !any {
         acc = 0.0; // fully padded window (degenerate BP edge)
     }
-    plan.post.apply(acc as f32)
+    plan.bound.post.apply(acc as f32)
 }
 
 /// Generic fast path: odometer-carry iteration over output coordinates
 /// plus the precomputed reduction-step table — no per-element div/mod,
 /// no per-step stride recomputation, no string matching.
 pub(super) fn eval_odometer(plan: &Plan, out: &mut [f32]) {
-    let steps = red_steps(plan);
-    let safe = never_oob(plan);
+    let steps = red_steps(plan.bound);
+    let safe = never_oob(plan.bound);
     let chunks = out.par_chunks_mut(PAR_CHUNK).enumerate();
     chunks.for_each(|(ci, chunk)| {
-        let mut st = OutState::seed(plan, ci * PAR_CHUNK);
+        let mut st = OutState::seed(plan.bound, ci * PAR_CHUNK);
         for slot in chunk.iter_mut() {
             *slot = eval_steps(plan, &st, &steps, safe);
-            st.advance(plan);
+            st.advance(plan.bound);
         }
     });
 }
@@ -293,14 +293,15 @@ unsafe impl Sync for OutPtr {}
 /// in reduction order: results are bit-identical to the oracle while
 /// per-element index arithmetic is amortized over all kernel rows.
 pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
-    let steps = red_steps(plan);
-    let safe = never_oob(plan);
-    let k_total = plan.red_total;
+    let steps = red_steps(plan.bound);
+    let safe = never_oob(plan.bound);
+    let k_total = plan.bound.red_total;
 
     // Flattened group / kernel-row / column spaces and their strides.
-    let ngs: Vec<usize> = plan.dims.iter().map(|d| d.ng).collect();
-    let nops: Vec<usize> = plan.dims.iter().map(|d| d.nop).collect();
-    let nopcs: Vec<usize> = plan.dims.iter().map(|d| d.nopc).collect();
+    let dims = &plan.bound.dims;
+    let ngs: Vec<usize> = dims.iter().map(|d| d.ng).collect();
+    let nops: Vec<usize> = dims.iter().map(|d| d.nop).collect();
+    let nopcs: Vec<usize> = dims.iter().map(|d| d.nopc).collect();
     let g_stride = super::tensor::row_major_strides(&ngs);
     let r_stride = super::tensor::row_major_strides(&nops);
     let c_stride = super::tensor::row_major_strides(&nopcs);
@@ -316,7 +317,7 @@ pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
     for g in 0..n_groups {
         for op in 0..n_rows {
             let mut w_base = 0usize;
-            for (i, d) in plan.dims.iter().enumerate() {
+            for (i, d) in dims.iter().enumerate() {
                 let gi = (g / g_stride[i]) % d.ng;
                 let oi = (op / r_stride[i]) % d.nop;
                 w_base += (gi * d.nop + oi) * d.nks * d.ker_stride;
@@ -353,7 +354,7 @@ pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
             let col = c0 + c;
             let mut off = 0usize;
             let mut xb = 0i64;
-            for (i, d) in plan.dims.iter().enumerate() {
+            for (i, d) in dims.iter().enumerate() {
                 let gi = (g / g_stride[i]) % d.ng;
                 let oi = (col / c_stride[i]) % d.nopc;
                 let p0 = (oi * d.s) as i64 - d.ps as i64;
@@ -371,7 +372,7 @@ pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
             for (k, step) in steps.iter().enumerate() {
                 let mut oob = false;
                 if !safe {
-                    for (i, d) in plan.dims.iter().enumerate() {
+                    for (i, d) in dims.iter().enumerate() {
                         let pos = pos0[c][i] + i64::from(step.ks[i]);
                         if pos < 0 || pos >= d.in_actual as i64 {
                             oob = true;
@@ -383,7 +384,7 @@ pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
                 if !oob {
                     x = plan.xs[(x_bases[c] + step.x_off) as usize];
                 }
-                panel[k * nc + c] = plan.pre.apply(x);
+                panel[k * nc + c] = plan.bound.pre.apply(x);
             }
         }
 
@@ -394,7 +395,7 @@ pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
         let rows = (0..n_rows).into_par_iter().with_min_len(8);
         rows.for_each(|op| {
             let mut row_base = 0usize;
-            for (i, d) in plan.dims.iter().enumerate() {
+            for (i, d) in dims.iter().enumerate() {
                 let gi = (g / g_stride[i]) % d.ng;
                 let oi = (op / r_stride[i]) % d.nop;
                 row_base += (gi * d.nop + oi) * d.nopc * d.out_stride;
@@ -408,7 +409,7 @@ pub(super) fn eval_gemm(plan: &Plan, out: &mut [f32]) {
                 }
             }
             for c in 0..nc {
-                let v = plan.post.apply(acc[c] as f32);
+                let v = plan.bound.post.apply(acc[c] as f32);
                 // SAFETY: output index = Σ_i ((g_i·nop_i + op_i)·nopc_i
                 // + opc_i)·out_stride_i is the row-major mixed-radix
                 // flattening of (g, op, opc) — a bijection onto
@@ -490,10 +491,16 @@ mod tests {
         assert!(fast.bit_eq(&naive));
     }
 
+    /// Bind a plan to the input's layout (the tests never need data to
+    /// inspect the bound geometry).
+    fn bind(op: &GconvOp, xs: &Tensor) -> BoundPlan {
+        BoundPlan::bind(op, xs.dims(), xs.elements(), None).unwrap()
+    }
+
     #[test]
     fn red_steps_follow_the_oracle_order() {
-        let (op, xs, ws) = conv_case();
-        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
+        let (op, xs, _ws) = conv_case();
+        let plan = bind(&op, &xs);
         let steps = red_steps(&plan);
         assert_eq!(steps.len(), 9);
         assert_eq!(steps[0].ks[..2], [0, 0]);
@@ -502,7 +509,7 @@ mod tests {
         assert_eq!(steps[8].ks[..2], [2, 2]);
     }
 
-    fn assert_advance_matches_reseeding(plan: &Plan) {
+    fn assert_advance_matches_reseeding(plan: &BoundPlan) {
         let mut st = OutState::seed(plan, 0);
         for o in 0..plan.out_total {
             // `fresh` recomputes digits and bases from scratch; `st`
@@ -518,9 +525,8 @@ mod tests {
 
     #[test]
     fn odometer_advance_matches_reseeding() {
-        let (op, xs, ws) = conv_case();
-        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
-        assert_advance_matches_reseeding(&plan);
+        let (op, xs, _ws) = conv_case();
+        assert_advance_matches_reseeding(&bind(&op, &xs));
     }
 
     #[test]
@@ -550,8 +556,7 @@ mod tests {
         let op = GconvOp::conv("grp", dims, x, w);
         let xs = Tensor::rand(&op.input_extents(), 21, 1.0);
         let ws = Tensor::rand(&op.kernel_extents(), 22, 1.0);
-        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
-        assert_advance_matches_reseeding(&plan);
+        assert_advance_matches_reseeding(&bind(&op, &xs));
         let fast = eval_gconv(&op, &xs, Some(&ws)).unwrap();
         let naive = eval_gconv_naive(&op, &xs, Some(&ws)).unwrap();
         assert!(fast.bit_eq(&naive));
@@ -559,16 +564,13 @@ mod tests {
 
     #[test]
     fn never_oob_detects_padding() {
-        let (op, xs, ws) = conv_case();
-        let plan = Plan::bind(&op, &xs, Some(&ws)).unwrap();
-        assert!(!never_oob(&plan), "ps=1 window can leave the input");
+        let (op, xs, _ws) = conv_case();
+        assert!(!never_oob(&bind(&op, &xs)), "ps=1 window can leave the input");
         let dims = vec![(Dim::W, DimParams::window(3, 2, 1, 0))];
         let x = DataRef::External("x".into());
         let w = DataRef::Weights("w".into());
         let op2 = GconvOp::conv("nopad", dims, x, w);
         let xs2 = Tensor::rand(&[4], 12, 1.0);
-        let ws2 = Tensor::rand(&[2], 13, 1.0);
-        let plan2 = Plan::bind(&op2, &xs2, Some(&ws2)).unwrap();
-        assert!(never_oob(&plan2));
+        assert!(never_oob(&bind(&op2, &xs2)));
     }
 }

@@ -30,6 +30,14 @@
 //! * `pool` (internal impl, public [`BufferPool`]) — size-bucketed
 //!   recycling of intermediate buffers across chain levels and runs,
 //!   with run-epoch trimming behind [`TrimPolicy`].
+//! * [`serve`] — bind-once/run-many serving: [`Session`] freezes a
+//!   chain at fixed operand shapes (operand validation, reachability,
+//!   level schedule and every entry's plan bound once at construction,
+//!   zero rebinds per request) and [`Engine`] adds a chain cache keyed
+//!   by (network, batch, fuse) with `Arc`-shared weights plus a queue
+//!   that coalesces compatible single-sample requests into micro-batch
+//!   runs — bit-identical to per-sample execution, gated on a
+//!   cross-sample-coupling probe.
 //! * [`chain_exec`] — schedules a whole [`crate::gconv::GconvChain`]:
 //!   level-order over the producer/consumer DAG, independent entries and
 //!   output/batch slices in parallel via rayon, intermediates
@@ -66,6 +74,7 @@ pub mod chain_exec;
 pub mod interp;
 mod kernels;
 mod pool;
+pub mod serve;
 mod special;
 pub mod tensor;
 
@@ -73,6 +82,9 @@ pub use chain_exec::{ChainExec, EntryRun, RunReport, TrimPolicy};
 pub use interp::{eval_gconv, eval_gconv_naive, lut_apply, lut_known, plan_tier, LutFn};
 pub use kernels::{GEMM_MIN_REDUCTION, KernelTier};
 pub use pool::{BufferPool, PoolStats};
+pub use serve::{
+    ChainKey, Engine, EngineResponse, EngineStats, Session, SessionBuilder, SessionStats,
+};
 pub use tensor::Tensor;
 
 /// Run `f` on a scoped rayon thread pool of `threads` workers

@@ -20,6 +20,13 @@
 //! high-water trim policy keeps the shelf from growing monotonically
 //! when one pool serves differently-shaped workloads over its lifetime
 //! (see `chain_exec::TrimPolicy`).
+//!
+//! The pool is `Sync` and every method takes `&self`, so one pool can
+//! back many executors: the serving layer (`super::serve`) shares one
+//! `Arc<BufferPool>` across all of an engine's sessions — sessions of
+//! different batch sizes recycle each other's buffers, and a
+//! high-water-trimming session releases a larger, no-longer-served
+//! session's shelf instead of holding it forever.
 
 use std::collections::HashMap;
 use std::sync::Mutex;

@@ -1,0 +1,1165 @@
+//! Bind-once/run-many serving for GCONV chains.
+//!
+//! The paper's whole-life-cost argument (§5–§6) is that one GCONV
+//! engine amortizes across every workload a user ever runs. For a
+//! deployment serving sustained traffic that means the per-request cost
+//! must shrink to the numerics themselves: the one-shot
+//! [`ChainExec::run`] re-validates operands, re-computes reachability
+//! and re-binds every entry's `Plan` on each call, which is pure
+//! overhead once the chain and its operand shapes are fixed. This
+//! module hoists all of that to construction time:
+//!
+//! * [`Session`] — a lowered (optionally fused) chain frozen at fixed
+//!   operand shapes. Construction computes the needed set, the level
+//!   schedule and the use counts for its `wanted` entries, validates
+//!   every chain-internal operand, materializes (or synthesizes)
+//!   externals, and **pre-binds an owned plan for every entry** (shape
+//!   validation, LUT resolution, stride precomputation, tier choice —
+//!   see `super::interp::BoundPlan`). [`Session::run`] then executes
+//!   the stored plans against fresh buffers: zero `Plan` binds after
+//!   construction, pinned by the bind counter in [`SessionStats`].
+//!   Special entries (argmax routing, concat) are validated up front
+//!   the same way and dispatch straight to their dedicated routines.
+//!   Sessions can share one [`BufferPool`] (and, via `Arc`, their
+//!   weight tensors), and [`Session::recycle`] returns delivered
+//!   output buffers, so steady-state serving allocates nothing.
+//! * [`Engine`] — a serving frontend holding a chain cache keyed by
+//!   [`ChainKey`] (network code, batch size, fuse flag). Sessions are
+//!   lowered/fused/bound lazily on first use and share weight tensors
+//!   across batch sizes via `Arc`. A request queue coalesces compatible
+//!   single-sample requests into micro-batch runs and splits the
+//!   responses back out — bit-identical to per-sample runs, which is
+//!   only claimed (and tested) for chains with no cross-sample
+//!   coupling; chains with batch statistics (BatchNorm) or
+//!   batch-shaped externals are detected and served per-sample.
+//!
+//! [`ChainExec::run`]: super::chain_exec::ChainExec::run
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+use rayon::prelude::*;
+
+use crate::gconv::chain::{GconvChain, SpecialOp};
+use crate::gconv::lower::{lower_network, Mode};
+use crate::gconv::op::DataRef;
+use crate::ir::{Dim, Network};
+use crate::mapping::fuse_executable;
+use crate::networks::{benchmark_with_batch, BENCHMARK_CODES};
+
+use super::bench::input_spec;
+use super::chain_exec::{
+    build_levels, collect_outputs, deps, external_specs, materialize_externals, reachable,
+    use_counts, validate_chain, EntryRun, RunReport, TrimPolicy, SYNTH_SCALE, SYNTH_SEED,
+};
+use super::interp::{eval_bound, BoundPlan};
+use super::pool::{BufferPool, PoolStats};
+use super::special;
+use super::tensor::Tensor;
+
+/// Counters of one [`Session`]. `plan_binds` is incremented by every
+/// `Plan` bind performed on the session's behalf — all of them happen
+/// during construction, and the conformance tests assert the counter
+/// stays flat across [`Session::run`] calls.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionStats {
+    /// Entries the session schedules per run (the needed set).
+    pub entries: usize,
+    /// `Plan::bind` calls performed for this session. Fixed at
+    /// construction; [`Session::run`] never adds to it.
+    pub plan_binds: usize,
+    /// Completed [`Session::run`] calls.
+    pub runs: usize,
+    /// Allocation counters of the session's buffer pool (shared
+    /// counters when the pool is shared between sessions).
+    pub pool: PoolStats,
+}
+
+/// Configures and builds a [`Session`]. Shapes freeze at
+/// [`SessionBuilder::build`]: every external operand either comes from
+/// the builder or is synthesized deterministically, and the plans bind
+/// against those extents.
+pub struct SessionBuilder {
+    chain: GconvChain,
+    wanted: Option<Vec<usize>>,
+    externals: HashMap<DataRef, Arc<Tensor>>,
+    synthesize: bool,
+    synth_seed: u64,
+    synth_scale: f32,
+    force_naive: bool,
+    trim: TrimPolicy,
+    pool: Option<Arc<BufferPool>>,
+}
+
+impl SessionBuilder {
+    fn new(chain: GconvChain) -> Self {
+        SessionBuilder {
+            chain,
+            wanted: None,
+            externals: HashMap::new(),
+            synthesize: true,
+            synth_seed: SYNTH_SEED,
+            synth_scale: SYNTH_SCALE,
+            force_naive: false,
+            trim: TrimPolicy::Keep,
+            pool: None,
+        }
+    }
+
+    /// Entries whose outputs every run returns (default: the last
+    /// chain entry). Order and duplicates are preserved, exactly like
+    /// the `wanted` argument of `ChainExec::run`.
+    pub fn wanted(mut self, wanted: &[usize]) -> Self {
+        self.wanted = Some(wanted.to_vec());
+        self
+    }
+
+    /// Provide the network input tensor the session binds its input
+    /// shape against (replaceable per run via [`Session::set_input`]
+    /// with the same extents).
+    pub fn input(mut self, name: &str, t: Tensor) -> Self {
+        self.externals.insert(DataRef::External(name.to_string()), Arc::new(t));
+        self
+    }
+
+    /// Provide a layer's trained parameters.
+    pub fn weights(mut self, name: &str, t: Tensor) -> Self {
+        self.externals.insert(DataRef::Weights(name.to_string()), Arc::new(t));
+        self
+    }
+
+    /// Share an operand tensor with other sessions (no copy — this is
+    /// how the [`Engine`] hands one weight set to every batch size).
+    pub fn shared(mut self, r: DataRef, t: Arc<Tensor>) -> Self {
+        self.externals.insert(r, t);
+        self
+    }
+
+    /// Error on missing externals instead of synthesizing them.
+    pub fn strict(mut self) -> Self {
+        self.synthesize = false;
+        self
+    }
+
+    /// Override the seed/scale used to synthesize missing externals.
+    pub fn synthesis(mut self, seed: u64, scale: f32) -> Self {
+        self.synthesize = true;
+        self.synth_seed = seed;
+        self.synth_scale = scale;
+        self
+    }
+
+    /// Force every entry through the naive per-element oracle (the
+    /// conformance suite's session-reuse-vs-oracle leg).
+    pub fn naive_oracle(mut self) -> Self {
+        self.force_naive = true;
+        self
+    }
+
+    /// Shelf-retention policy applied after each run.
+    pub fn trim(mut self, policy: TrimPolicy) -> Self {
+        self.trim = policy;
+        self
+    }
+
+    /// Use a shared buffer pool instead of a private one — sessions of
+    /// different shapes can then recycle each other's buffers, and the
+    /// `HighWater` trim keeps the shelf at the live working set.
+    pub fn pool(mut self, pool: Arc<BufferPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Validate, materialize and pre-bind: everything `ChainExec::run`
+    /// redoes per call happens exactly once, here.
+    pub fn build(self) -> Result<Session> {
+        let chain = self.chain;
+        ensure!(!chain.is_empty(), "cannot build a session over an empty chain");
+        let n = chain.len();
+        let wanted = self.wanted.unwrap_or_else(|| vec![n - 1]);
+        ensure!(!wanted.is_empty(), "session needs at least one wanted entry");
+        for &w in &wanted {
+            ensure!(w < n, "wanted entry #{w} out of range (chain has {n})");
+        }
+        let needed = reachable(&chain, &wanted);
+        validate_chain(&chain, &needed)?;
+        let mut externals = self.externals;
+        materialize_externals(
+            &chain,
+            &needed,
+            &mut externals,
+            self.synthesize,
+            self.synth_seed,
+            self.synth_scale,
+        )?;
+
+        // Level schedule restricted to the needed set, and the per-run
+        // use counts both computed once.
+        let levels: Vec<Vec<usize>> = build_levels(&chain)
+            .into_iter()
+            .map(|l| l.into_iter().filter(|&i| needed[i]).collect::<Vec<_>>())
+            .filter(|l: &Vec<usize>| !l.is_empty())
+            .collect();
+        let base_uses = use_counts(&chain, &needed, &wanted);
+
+        // Pre-bind every needed loop-nest entry against its operand
+        // extents; every bind is counted. Special entries were
+        // validated by `validate_chain` and need no plan.
+        let binds = AtomicUsize::new(0);
+        let operand_shape = |r: &DataRef| -> Result<(Vec<usize>, usize)> {
+            match r {
+                DataRef::Gconv(p) => {
+                    let mut d = chain.entries()[*p].op.output_extents();
+                    if d.is_empty() {
+                        d.push(1);
+                    }
+                    let elems = d.iter().product();
+                    Ok((d, elems))
+                }
+                other => {
+                    let t = externals
+                        .get(other)
+                        .ok_or_else(|| anyhow!("external operand {other} not provided"))?;
+                    Ok((t.dims().to_vec(), t.elements()))
+                }
+            }
+        };
+        let mut plans: Vec<Option<BoundPlan>> = Vec::with_capacity(n);
+        let mut input_like: Vec<DataRef> = Vec::new();
+        for (i, e) in chain.entries().iter().enumerate() {
+            if !needed[i] || e.special.is_some() {
+                plans.push(None);
+                continue;
+            }
+            let (in_dims, in_elems) = operand_shape(&e.op.input)
+                .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+            let bp = BoundPlan::bind(&e.op, &in_dims, in_elems, Some(&binds))
+                .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+            if bp.ker_elements > 0 {
+                let k = e.op.kernel.as_ref().with_context(|| {
+                    format!("chain entry #{i} ({}) needs a kernel operand", e.op.name)
+                })?;
+                let (_, got) = operand_shape(k)
+                    .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+                ensure!(
+                    got == bp.ker_elements,
+                    "chain entry #{i} ({}): kernel operand has {got} elements, expected {}",
+                    e.op.name,
+                    bp.ker_elements
+                );
+            }
+            if !matches!(e.op.input, DataRef::Gconv(_)) {
+                input_like.push(e.op.input.clone());
+            }
+            plans.push(Some(bp));
+        }
+
+        let entries = needed.iter().filter(|&&x| x).count();
+        Ok(Session {
+            chain,
+            externals,
+            wanted,
+            levels,
+            base_uses,
+            plans,
+            input_like,
+            pool: self.pool.unwrap_or_else(|| Arc::new(BufferPool::new())),
+            trim: self.trim,
+            force_naive: self.force_naive,
+            binds,
+            runs: 0,
+            entries,
+        })
+    }
+}
+
+/// A chain frozen for serving: operand shapes fixed, schedule and use
+/// counts precomputed, every entry's `Plan` pre-bound. `run` executes
+/// the stored plans against fresh buffers — see the module docs.
+pub struct Session {
+    chain: GconvChain,
+    externals: HashMap<DataRef, Arc<Tensor>>,
+    wanted: Vec<usize>,
+    levels: Vec<Vec<usize>>,
+    base_uses: Vec<usize>,
+    plans: Vec<Option<BoundPlan>>,
+    /// External refs bound as loop-nest *inputs*: their extents shape
+    /// the bound plans, so replacements must match dims exactly (kernel
+    /// operands bind by element count only).
+    input_like: Vec<DataRef>,
+    pool: Arc<BufferPool>,
+    trim: TrimPolicy,
+    force_naive: bool,
+    binds: AtomicUsize,
+    runs: usize,
+    entries: usize,
+}
+
+impl Session {
+    /// Start configuring a session over `chain`.
+    pub fn builder(chain: GconvChain) -> SessionBuilder {
+        SessionBuilder::new(chain)
+    }
+
+    /// Session over `chain` with defaults: last entry wanted, missing
+    /// externals synthesized deterministically, private buffer pool.
+    pub fn new(chain: GconvChain) -> Result<Session> {
+        SessionBuilder::new(chain).build()
+    }
+
+    /// The chain being served.
+    pub fn chain(&self) -> &GconvChain {
+        &self.chain
+    }
+
+    /// Replace the network input for subsequent runs. The extents must
+    /// match the tensor the session was built with — plans are bound to
+    /// those shapes; build a new session to serve a different shape.
+    pub fn set_input(&mut self, name: &str, t: Tensor) -> Result<()> {
+        self.set_external(DataRef::External(name.to_string()), Arc::new(t))
+    }
+
+    /// Replace a layer's parameters (element count must match the
+    /// bound layout).
+    pub fn set_weights(&mut self, name: &str, t: Tensor) -> Result<()> {
+        self.set_external(DataRef::Weights(name.to_string()), Arc::new(t))
+    }
+
+    fn set_external(&mut self, r: DataRef, t: Arc<Tensor>) -> Result<()> {
+        let old = self
+            .externals
+            .get(&r)
+            .ok_or_else(|| anyhow!("session does not read operand {r}"))?;
+        ensure!(
+            old.elements() == t.elements(),
+            "operand {r} was bound with {} elements, replacement has {}",
+            old.elements(),
+            t.elements()
+        );
+        if self.input_like.contains(&r) {
+            ensure!(
+                old.dims() == t.dims(),
+                "input operand {r} was bound with extents {:?}, replacement has {:?} — \
+                 build a new session to serve a different shape",
+                old.dims(),
+                t.dims()
+            );
+        }
+        self.externals.insert(r, t);
+        Ok(())
+    }
+
+    /// Execute one request over the pre-bound chain. Performs **zero**
+    /// `Plan` binds, no operand re-validation and no reachability work;
+    /// with a warmed pool (and outputs returned via
+    /// [`Session::recycle`]) it allocates nothing either.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.pool.begin_run();
+        let n = self.chain.len();
+        let mut uses = self.base_uses.clone();
+        let mut buffers: Vec<Option<Arc<Tensor>>> = (0..n).map(|_| None).collect();
+        let mut records: Vec<EntryRun> = Vec::with_capacity(self.entries);
+        let t_total = Instant::now();
+        for level in &self.levels {
+            let results: Result<Vec<(usize, Tensor, f64)>> = level
+                .par_iter()
+                .map(|&i| {
+                    let e = &self.chain.entries()[i];
+                    let input = self.operand(&e.op.input, &buffers)?;
+                    let kernel = match &e.op.kernel {
+                        Some(r) => Some(self.operand(r, &buffers)?),
+                        None => None,
+                    };
+                    let t0 = Instant::now();
+                    let pool = Some(self.pool.as_ref());
+                    let out = match &e.special {
+                        Some(sp) => special::eval_special(&e.op, sp, input, kernel, pool),
+                        None => {
+                            let bp = self.plans[i].as_ref().expect("needed entries pre-bind");
+                            eval_bound(bp, input, kernel, pool, self.force_naive)
+                        }
+                    }
+                    .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+                    Ok((i, out, t0.elapsed().as_secs_f64()))
+                })
+                .collect();
+            for (i, out, seconds) in results? {
+                let e = &self.chain.entries()[i];
+                records.push(EntryRun {
+                    index: i,
+                    name: e.op.name.clone(),
+                    phase: e.phase,
+                    seconds,
+                    out_elements: out.elements(),
+                    work: e.op.work(),
+                });
+                debug_assert!(uses[i] > 0, "executed entries are consumed or wanted");
+                buffers[i] = Some(Arc::new(out));
+            }
+            for &i in level {
+                for d in deps(&self.chain.entries()[i].op) {
+                    uses[d] -= 1;
+                    if uses[d] == 0 {
+                        if let Some(t) = buffers[d].take() {
+                            if let Ok(t) = Arc::try_unwrap(t) {
+                                self.pool.put(t.into_data());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        records.sort_by_key(|r| r.index);
+        let outputs = collect_outputs(&self.wanted, &mut uses, &mut buffers)?;
+        match self.trim {
+            TrimPolicy::Keep => {}
+            TrimPolicy::HighWater => self.pool.trim_stale(),
+            TrimPolicy::Clear => self.pool.trim_all(),
+        }
+        self.runs += 1;
+        Ok(RunReport {
+            outputs,
+            entries: records,
+            total_s: t_total.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Rebuild this session around a different `wanted` set, keeping
+    /// its chain, operand tensors (including weights provided after
+    /// the original build), pool and configuration. The schedule and
+    /// plans are specific to the wanted set, so this is a fresh
+    /// construction (it re-binds) — not a per-run cost.
+    pub fn with_wanted(self, wanted: &[usize]) -> Result<Session> {
+        let mut builder = SessionBuilder::new(self.chain)
+            .wanted(wanted)
+            .trim(self.trim)
+            .pool(self.pool);
+        if self.force_naive {
+            builder = builder.naive_oracle();
+        }
+        builder.externals = self.externals;
+        builder.build()
+    }
+
+    /// Return a delivered report's output buffers to the pool (only
+    /// uniquely-owned ones — buffers the caller still shares stay
+    /// alive). With this, a steady-state serve loop performs no
+    /// allocations at all from run 2 on.
+    pub fn recycle(&mut self, report: RunReport) {
+        self.recycle_outputs(report.outputs);
+    }
+
+    /// [`Session::recycle`] for bare output tensors.
+    pub fn recycle_outputs(&mut self, outputs: Vec<Arc<Tensor>>) {
+        for t in outputs {
+            if let Ok(t) = Arc::try_unwrap(t) {
+                self.pool.put(t.into_data());
+            }
+        }
+    }
+
+    /// Session counters (see [`SessionStats`]).
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            entries: self.entries,
+            plan_binds: self.binds.load(Ordering::Relaxed),
+            runs: self.runs,
+            pool: self.pool.stats(),
+        }
+    }
+
+    /// Look up an operand tensor for evaluation.
+    fn operand<'a>(
+        &'a self,
+        r: &DataRef,
+        buffers: &'a [Option<Arc<Tensor>>],
+    ) -> Result<&'a Tensor> {
+        match r {
+            DataRef::Gconv(i) => buffers[*i]
+                .as_deref()
+                .ok_or_else(|| anyhow!("producer #{i} buffer already freed or never run")),
+            other => self
+                .externals
+                .get(other)
+                .map(|t| &**t)
+                .ok_or_else(|| anyhow!("external operand {other} not provided")),
+        }
+    }
+}
+
+/// Chain-cache key: one [`Session`] exists per (network code, batch
+/// size, fuse flag) triple, built lazily on first use.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ChainKey {
+    /// Network code (a benchmark code or a registered builder name).
+    pub net: String,
+    /// Micro-batch size the chain was lowered for.
+    pub batch: usize,
+    /// Whether executable operation fusion rewrote the chain.
+    pub fused: bool,
+}
+
+/// Engine counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Requests served.
+    pub requests: usize,
+    /// Micro-batch runs executed.
+    pub batches: usize,
+    /// Requests that rode in a coalesced batch (size > 1).
+    pub coalesced: usize,
+    /// Sessions lowered/fused/bound into the cache.
+    pub sessions_built: usize,
+    /// Requests served by an already-cached session.
+    pub cache_hits: usize,
+    /// Seconds spent executing micro-batches.
+    pub exec_s: f64,
+}
+
+impl EngineStats {
+    /// Requests per second over the executed batches.
+    pub fn throughput(&self) -> f64 {
+        if self.exec_s > 0.0 {
+            self.requests as f64 / self.exec_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One queued single-sample request.
+struct Pending {
+    id: u64,
+    net: String,
+    data: Vec<f32>,
+    t0: Instant,
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct EngineResponse {
+    /// Caller-assigned id.
+    pub id: u64,
+    /// Flattened per-sample output.
+    pub data: Vec<f32>,
+    /// Seconds from submit to response.
+    pub latency_s: f64,
+    /// Size of the micro-batch that served this request.
+    pub batch: usize,
+}
+
+/// Per-network serving metadata, resolved once per code.
+#[derive(Clone)]
+struct NetEntry {
+    input_name: String,
+    sample_dims: Vec<usize>,
+    sample_len: usize,
+    out_len: usize,
+    /// Whether micro-batching N samples is bit-identical to N separate
+    /// batch-1 runs (no cross-sample coupling, batch-independent
+    /// externals, batch-major output) — the coalescing gate.
+    per_sample: bool,
+    /// Weight tensors shared across every session of this network
+    /// (batch-independent by the `per_sample` probe, or only ever used
+    /// at batch 1 otherwise).
+    weights: HashMap<DataRef, Arc<Tensor>>,
+}
+
+type NetBuilder = Box<dyn Fn(usize) -> Network>;
+
+/// Serving frontend over the session layer: a lazily-filled chain
+/// cache (see [`ChainKey`]), `Arc`-shared weights, and a queue that
+/// coalesces compatible single-sample requests into micro-batch
+/// [`Session`] runs — see the module docs.
+pub struct Engine {
+    max_batch: usize,
+    fuse: bool,
+    trim: TrimPolicy,
+    builders: HashMap<String, NetBuilder>,
+    nets: HashMap<String, NetEntry>,
+    sessions: HashMap<ChainKey, Session>,
+    pool: Arc<BufferPool>,
+    queue: VecDeque<Pending>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    /// Engine coalescing at most `max_batch` requests per run. The
+    /// seven benchmark codes resolve automatically; other networks need
+    /// [`Engine::register`].
+    pub fn new(max_batch: usize) -> Engine {
+        Engine {
+            max_batch: max_batch.max(1),
+            fuse: false,
+            trim: TrimPolicy::Keep,
+            builders: HashMap::new(),
+            nets: HashMap::new(),
+            sessions: HashMap::new(),
+            pool: Arc::new(BufferPool::new()),
+            queue: VecDeque::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Rewrite every lowered chain with executable operation fusion.
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
+    /// Shelf-retention policy of the shared buffer pool.
+    pub fn with_trim(mut self, trim: TrimPolicy) -> Self {
+        self.trim = trim;
+        self
+    }
+
+    /// Register a network builder under `code`. `build(batch)` must
+    /// return the network lowered-to-be at that mini-batch size.
+    pub fn register<F>(&mut self, code: &str, build: F)
+    where
+        F: Fn(usize) -> Network + 'static,
+    {
+        self.builders.insert(code.to_string(), Box::new(build));
+    }
+
+    /// Enqueue one single-sample request for network `code`.
+    pub fn submit(&mut self, code: &str, id: u64, data: Vec<f32>) -> Result<()> {
+        self.resolve_net(code)?;
+        let info = &self.nets[code];
+        ensure!(
+            data.len() == info.sample_len,
+            "sample for {code} has {} values, expected {}",
+            data.len(),
+            info.sample_len
+        );
+        self.queue.push_back(Pending {
+            id,
+            net: code.to_string(),
+            data,
+            t0: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// Pending queue depth.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve one micro-batch: the front request plus up to
+    /// `max_batch − 1` queued requests for the same network (queue
+    /// order preserved). Without `flush`, waits until a full batch of
+    /// compatible requests is queued. Networks the coalescing gate
+    /// rejects are served one sample at a time.
+    pub fn step(&mut self, flush: bool) -> Result<Vec<EngineResponse>> {
+        let Some(front) = self.queue.front() else {
+            return Ok(Vec::new());
+        };
+        let code = front.net.clone();
+        let cap = if self.nets[&code].per_sample { self.max_batch } else { 1 };
+        let picked: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.net == code)
+            .map(|(i, _)| i)
+            .take(cap)
+            .collect();
+        if !flush && picked.len() < cap {
+            return Ok(Vec::new());
+        }
+        let mut group: Vec<Pending> = Vec::with_capacity(picked.len());
+        for &i in picked.iter().rev() {
+            group.push(self.queue.remove(i).expect("picked index in range"));
+        }
+        group.reverse();
+        self.run_group(&code, group)
+    }
+
+    /// Serve until the queue is empty.
+    pub fn drain(&mut self) -> Result<Vec<EngineResponse>> {
+        let mut all = Vec::new();
+        while !self.queue.is_empty() {
+            all.extend(self.step(true)?);
+        }
+        Ok(all)
+    }
+
+    /// Engine counters.
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Allocation counters of the shared buffer pool.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Resolve serving metadata for `code` (benchmark codes register
+    /// themselves): input spec and per-sample output length from the
+    /// batch-1 lowering, the coalescing gate from a batch-2 probe, and
+    /// the shared weight set materialized once.
+    fn resolve_net(&mut self, code: &str) -> Result<()> {
+        if self.nets.contains_key(code) {
+            return Ok(());
+        }
+        if !self.builders.contains_key(code) {
+            ensure!(
+                BENCHMARK_CODES.contains(&code),
+                "unknown network {code:?}: register a builder or use a benchmark code"
+            );
+            let owned = code.to_string();
+            self.builders
+                .insert(owned.clone(), Box::new(move |b| benchmark_with_batch(&owned, b)));
+        }
+        let build = &self.builders[code];
+        let net1 = build(1);
+        let (input_name, dims) = input_spec(&net1)?;
+        ensure!(
+            dims.first() == Some(&1),
+            "{code}: builder ignored the batch argument (input shape {dims:?})"
+        );
+        let lower = |net: &Network, fuse: bool| {
+            let mut chain = lower_network(net, Mode::Inference);
+            if fuse {
+                fuse_executable(&mut chain);
+            }
+            chain
+        };
+        let chain1 = lower(&net1, self.fuse);
+        ensure!(!chain1.is_empty(), "{code}: empty inference chain");
+        let out_len = chain1.entries()[chain1.len() - 1].op.output_elements();
+
+        // Coalescing gate, probed on a batch-2 lowering: every entry
+        // must carry the batch as a plain `g`/`opc` dimension (no
+        // cross-sample reduction or kernel replication), the output
+        // must be batch-major, and every external operand must be
+        // batch-independent (a dropout mask or batch-shaped table would
+        // otherwise change per-sample numerics with the batch size).
+        let chain2 = lower(&build(2), self.fuse);
+        let input_ref = DataRef::External(input_name.clone());
+        let specs1 = external_extent_map(&chain1);
+        let specs2 = external_extent_map(&chain2);
+        let externals_batch_free = specs1.len() == specs2.len()
+            && specs1
+                .iter()
+                .all(|(r, n)| *r == input_ref || specs2.get(r) == Some(n));
+        let per_sample = externals_batch_free && chain_is_per_sample(&chain2, 2);
+
+        let mut ext1 = seeded_externals(&chain1, &input_name, &dims)?;
+        ext1.remove(&input_ref);
+        let weights: HashMap<DataRef, Arc<Tensor>> = ext1
+            .into_iter()
+            .filter(|(r, _)| matches!(r, DataRef::Weights(_)))
+            .collect();
+        self.nets.insert(
+            code.to_string(),
+            NetEntry {
+                input_name,
+                sample_dims: dims[1..].to_vec(),
+                sample_len: dims[1..].iter().product(),
+                out_len,
+                per_sample,
+                weights,
+            },
+        );
+        Ok(())
+    }
+
+    /// Get or lazily build the session for `key`.
+    fn ensure_session(&mut self, key: &ChainKey, info: &NetEntry) -> Result<()> {
+        if self.sessions.contains_key(key) {
+            return Ok(());
+        }
+        let build = &self.builders[&key.net];
+        let net = build(key.batch);
+        let mut chain = lower_network(&net, Mode::Inference);
+        if key.fused {
+            fuse_executable(&mut chain);
+        }
+        let mut dims = vec![key.batch];
+        dims.extend_from_slice(&info.sample_dims);
+        let mut builder = Session::builder(chain)
+            .input(&info.input_name, Tensor::zeros(&dims))
+            .trim(self.trim)
+            .pool(self.pool.clone());
+        for (r, t) in &info.weights {
+            builder = builder.shared(r.clone(), t.clone());
+        }
+        let session = builder
+            .build()
+            .with_context(|| format!("building session for {key:?}"))?;
+        self.sessions.insert(key.clone(), session);
+        self.stats.sessions_built += 1;
+        Ok(())
+    }
+
+    /// Run one coalesced group through its session and split the
+    /// responses back out (order preserved).
+    fn run_group(&mut self, code: &str, group: Vec<Pending>) -> Result<Vec<EngineResponse>> {
+        let batch = group.len();
+        let info = self.nets[code].clone();
+        let key = ChainKey { net: code.to_string(), batch, fused: self.fuse };
+        let cached = self.sessions.contains_key(&key);
+        self.ensure_session(&key, &info)?;
+        if cached {
+            self.stats.cache_hits += batch;
+        }
+
+        let mut data = Vec::with_capacity(batch * info.sample_len);
+        for p in &group {
+            data.extend_from_slice(&p.data);
+        }
+        let mut dims = vec![batch];
+        dims.extend_from_slice(&info.sample_dims);
+        let input = Tensor::new(&dims, data)?;
+
+        let t_exec = Instant::now();
+        let session = self.sessions.get_mut(&key).expect("just ensured");
+        session.set_input(&info.input_name, input)?;
+        let report = session.run()?;
+        let exec_s = t_exec.elapsed().as_secs_f64();
+
+        let out = &report.outputs[0];
+        ensure!(
+            out.elements() == batch * info.out_len,
+            "{code}: batch {batch} produced {} values, expected {}",
+            out.elements(),
+            batch * info.out_len
+        );
+        let mut responses = Vec::with_capacity(batch);
+        for (i, p) in group.into_iter().enumerate() {
+            let start = i * info.out_len;
+            responses.push(EngineResponse {
+                id: p.id,
+                data: out.data()[start..start + info.out_len].to_vec(),
+                latency_s: p.t0.elapsed().as_secs_f64(),
+                batch,
+            });
+        }
+        session.recycle(report);
+        self.stats.requests += batch;
+        self.stats.batches += 1;
+        if batch > 1 {
+            self.stats.coalesced += batch;
+        }
+        self.stats.exec_s += exec_s;
+        Ok(responses)
+    }
+}
+
+/// Deterministically synthesized externals of a chain (the input
+/// provided explicitly so its shape is the real batched shape, not the
+/// covered extents).
+fn seeded_externals(
+    chain: &GconvChain,
+    input_name: &str,
+    input_dims: &[usize],
+) -> Result<HashMap<DataRef, Arc<Tensor>>> {
+    let wanted = [chain.len() - 1];
+    let needed = reachable(chain, &wanted);
+    let mut ext: HashMap<DataRef, Arc<Tensor>> = HashMap::new();
+    ext.insert(
+        DataRef::External(input_name.to_string()),
+        Arc::new(Tensor::zeros(input_dims)),
+    );
+    materialize_externals(chain, &needed, &mut ext, true, SYNTH_SEED, SYNTH_SCALE)?;
+    Ok(ext)
+}
+
+/// First-seen element count of every external operand a chain would
+/// synthesize — the shapes of [`seeded_externals`] without generating
+/// any data (the batch-independence probe only compares counts).
+fn external_extent_map(chain: &GconvChain) -> HashMap<DataRef, usize> {
+    let wanted = [chain.len() - 1];
+    let needed = reachable(chain, &wanted);
+    let mut map = HashMap::new();
+    for (_, r, dims) in external_specs(chain, &needed) {
+        map.entry(r).or_insert_with(|| dims.iter().product::<usize>());
+    }
+    map
+}
+
+/// True when a chain lowered at `batch` has no cross-sample coupling:
+/// every entry carries `Dim::B` as a plain `g`/`opc` loop of extent
+/// `batch` (no batch reduction, no kernel replication over the batch),
+/// the final output is batch-major, and no entry routes through a
+/// max-pool-BP special (whose windows could span samples). Under these
+/// conditions every output element of sample `i` depends only on
+/// sample `i`'s input and the shared weights, with identical reduction
+/// order — so micro-batching is bit-identical to per-sample runs.
+fn chain_is_per_sample(chain: &GconvChain, batch: usize) -> bool {
+    let batch_major = match chain.entries().last() {
+        Some(e) => matches!(e.op.dims.first(), Some(&(Dim::B, _))),
+        None => false,
+    };
+    batch_major
+        && chain.entries().iter().all(|e| {
+            if matches!(e.special, Some(SpecialOp::MaxPoolBp { .. })) {
+                return false;
+            }
+            e.op.dims.iter().any(|&(d, p)| {
+                d == Dim::B && p.nks == 1 && p.nop == 1 && p.ng * p.nopc == batch
+            })
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::exec::ChainExec;
+    use crate::ir::{Layer, Shape};
+    use crate::networks::mobilenet_block;
+
+    fn block_chain() -> GconvChain {
+        lower_network(&mobilenet_block(2, 4, 6), Mode::Inference)
+    }
+
+    fn block_input() -> Tensor {
+        Tensor::rand(&[2, 4, 6, 6], 31, 1.0)
+    }
+
+    /// A small per-sample network (conv → ReLU → FC: no batch
+    /// statistics) the engine is allowed to coalesce.
+    fn per_sample_net(batch: usize) -> Network {
+        let mut net = Network::new("psnet");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(batch, 2, 4, 4) }, &[]);
+        let c = net.add(
+            "conv",
+            Layer::Conv { out_channels: 3, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+            &[i],
+        );
+        let r = net.add("relu", Layer::Relu, &[c]);
+        net.add("fc", Layer::FullyConnected { out_features: 5 }, &[r]);
+        net
+    }
+
+    #[test]
+    fn session_matches_chain_exec_bitwise() {
+        let mut exec = ChainExec::new(block_chain());
+        exec.set_input("data.data", block_input());
+        let want = exec.run_last().unwrap();
+
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let got = session.run().unwrap();
+        assert!(want.outputs[0].bit_eq(&got.outputs[0]));
+        // Reuse stays bit-identical (stale pooled buffers, same plans).
+        let again = session.run().unwrap();
+        assert!(want.outputs[0].bit_eq(&again.outputs[0]));
+    }
+
+    #[test]
+    fn session_never_rebinds_after_construction() {
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let built = session.stats();
+        assert!(built.plan_binds > 0, "construction pre-binds every entry");
+        assert_eq!(built.plan_binds, built.entries, "one bind per needed entry");
+        for _ in 0..3 {
+            let report = session.run().unwrap();
+            session.recycle(report);
+        }
+        let after = session.stats();
+        assert_eq!(after.plan_binds, built.plan_binds, "run() must never bind");
+        assert_eq!(after.runs, 3);
+
+        // The one-shot executor, by contrast, rebinds every run.
+        let mut exec = ChainExec::new(block_chain());
+        exec.set_input("data.data", block_input());
+        exec.run_last().unwrap();
+        let one = exec.bind_calls();
+        exec.run_last().unwrap();
+        assert_eq!(exec.bind_calls(), 2 * one, "one-shot path rebinds per run");
+    }
+
+    #[test]
+    fn session_rerun_allocates_nothing() {
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let r1 = session.run().unwrap();
+        session.recycle(r1);
+        let after_warmup = session.stats().pool;
+        for k in 2..=4 {
+            let r = session.run().unwrap();
+            session.recycle(r);
+            let s = session.stats().pool;
+            assert_eq!(
+                s.misses, after_warmup.misses,
+                "run {k} allocated fresh buffers: {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn high_water_trim_releases_a_larger_sessions_buffers() {
+        let pool = Arc::new(BufferPool::new());
+        let big_chain = lower_network(&mobilenet_block(4, 8, 12), Mode::Inference);
+        let mut big = Session::builder(big_chain)
+            .input("data.data", Tensor::rand(&[4, 8, 12, 12], 5, 1.0))
+            .pool(pool.clone())
+            .build()
+            .unwrap();
+        let r = big.run().unwrap();
+        big.recycle(r);
+        drop(big);
+        let shelved_after_big = pool.held_bytes();
+        assert!(shelved_after_big > 0, "big session must shelve buffers");
+
+        let mut small = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .pool(pool.clone())
+            .trim(TrimPolicy::HighWater)
+            .build()
+            .unwrap();
+        let r = small.run().unwrap();
+        small.recycle(r);
+        let s = pool.stats();
+        assert!(s.trimmed > 0, "high-water trim must drop the stale big shelf: {s:?}");
+        assert!(pool.held_bytes() < shelved_after_big);
+        // The small session's own working set survives and serves hits.
+        let before = pool.stats().hits;
+        let r = small.run().unwrap();
+        small.recycle(r);
+        assert!(pool.stats().hits > before);
+    }
+
+    #[test]
+    fn set_input_rejects_shape_changes_and_unknown_operands() {
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        // Same extents: fine.
+        session.set_input("data.data", Tensor::rand(&[2, 4, 6, 6], 9, 1.0)).unwrap();
+        // Different extents with the same element count: rejected for
+        // a loop-nest input.
+        let err = session
+            .set_input("data.data", Tensor::rand(&[4, 2, 6, 6], 9, 1.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("extents"), "unexpected error: {err}");
+        // Different element count: rejected.
+        assert!(session.set_input("data.data", Tensor::zeros(&[2, 4, 6, 5])).is_err());
+        // Operand the session never read: rejected.
+        assert!(session.set_input("nope", Tensor::zeros(&[1])).is_err());
+    }
+
+    #[test]
+    fn session_strict_mode_requires_externals() {
+        let err = Session::builder(block_chain()).strict().build();
+        assert!(err.is_err(), "strict session with no tensors must fail to build");
+    }
+
+    #[test]
+    fn session_wanted_set_matches_chain_exec() {
+        let chain = block_chain();
+        let wanted: Vec<usize> = (0..chain.len()).collect();
+        let mut exec = ChainExec::new(block_chain());
+        exec.set_input("data.data", block_input());
+        let want = exec.run(&wanted).unwrap();
+
+        let mut session = Session::builder(chain)
+            .wanted(&wanted)
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let got = session.run().unwrap();
+        assert_eq!(got.outputs.len(), want.outputs.len());
+        for (a, b) in got.outputs.iter().zip(&want.outputs) {
+            assert!(a.bit_eq(b));
+        }
+    }
+
+    #[test]
+    fn engine_coalesces_per_sample_requests_bit_identically() {
+        let mut engine = Engine::new(4);
+        engine.register("ps", per_sample_net);
+        let samples: Vec<Vec<f32>> = (0..4)
+            .map(|i| Tensor::rand(&[2 * 4 * 4], 100 + i, 1.0).into_data())
+            .collect();
+        for (i, s) in samples.iter().enumerate() {
+            engine.submit("ps", i as u64, s.clone()).unwrap();
+        }
+        let mut responses = engine.drain().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 4);
+        assert_eq!(engine.stats().batches, 1, "per-sample net must coalesce");
+        assert!(responses.iter().all(|r| r.batch == 4));
+
+        // Reference: each sample through its own batch-1 session.
+        for (i, s) in samples.iter().enumerate() {
+            let mut session = Session::builder(lower_network(&per_sample_net(1), Mode::Inference))
+                .input("data.data", Tensor::new(&[1, 2, 4, 4], s.clone()).unwrap())
+                .build()
+                .unwrap();
+            let want = session.run().unwrap();
+            let got = &responses[i].data;
+            assert_eq!(got.len(), want.outputs[0].elements());
+            let same = got
+                .iter()
+                .zip(want.outputs[0].data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "coalesced sample {i} diverged from its batch-1 run");
+        }
+    }
+
+    #[test]
+    fn engine_refuses_to_coalesce_batch_statistics() {
+        // mobilenet_block carries BatchNorm: batch statistics couple
+        // samples, so the engine must serve it one sample at a time.
+        let mut engine = Engine::new(4);
+        engine.register("bn", |b| mobilenet_block(b, 4, 6));
+        for i in 0..3 {
+            let x = Tensor::rand(&[4 * 6 * 6], 7 + i, 1.0).into_data();
+            engine.submit("bn", i, x).unwrap();
+        }
+        let responses = engine.drain().unwrap();
+        assert_eq!(responses.len(), 3);
+        assert!(responses.iter().all(|r| r.batch == 1));
+        assert_eq!(engine.stats().batches, 3);
+        assert_eq!(engine.stats().coalesced, 0);
+        // All three rode the same cached batch-1 session.
+        assert_eq!(engine.stats().sessions_built, 1);
+        assert_eq!(engine.stats().cache_hits, 2);
+    }
+
+    #[test]
+    fn engine_waits_for_a_full_batch_unless_flushed() {
+        let mut engine = Engine::new(3);
+        engine.register("ps", per_sample_net);
+        engine.submit("ps", 0, vec![0.5; 32]).unwrap();
+        assert!(engine.step(false).unwrap().is_empty());
+        assert_eq!(engine.pending(), 1);
+        let out = engine.step(true).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(engine.pending(), 0);
+    }
+
+    #[test]
+    fn engine_rejects_bad_sample_lengths_and_unknown_codes() {
+        let mut engine = Engine::new(2);
+        engine.register("ps", per_sample_net);
+        assert!(engine.submit("ps", 0, vec![0.0; 3]).is_err());
+        assert!(engine.submit("no-such-net", 0, vec![0.0; 3]).is_err());
+        assert_eq!(engine.pending(), 0);
+    }
+
+    #[test]
+    fn per_sample_probe_accepts_conv_and_rejects_bn() {
+        let ps = lower_network(&per_sample_net(2), Mode::Inference);
+        assert!(chain_is_per_sample(&ps, 2));
+        let bn = lower_network(&mobilenet_block(2, 4, 6), Mode::Inference);
+        assert!(!chain_is_per_sample(&bn, 2));
+    }
+}

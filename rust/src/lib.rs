@@ -22,8 +22,10 @@
 //! * [`exec`] — native execution engine: tensor type, tiered GCONV
 //!   loop-nest interpreter (§3.1's four operators; GEMM/odometer/naive
 //!   kernels), special-op routines, parallel chain scheduler with
-//!   up-front operand validation and buffer-pool trim policies, and
-//!   the naive-vs-fast-vs-fused bench harness.
+//!   up-front operand validation and buffer-pool trim policies,
+//!   bind-once/run-many serving (`exec::serve`: pre-bound `Session`s,
+//!   the chain-caching and request-coalescing `Engine`), and the
+//!   naive-vs-fast-vs-fused + serve bench harnesses.
 //! * [`accel`] — accelerator structures (Table 4) and baseline modes.
 //! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion
 //!   (analytical *and* executable policies over shared legality).

@@ -17,12 +17,16 @@ USAGE:
     gconv-chain simulate <NET> <ACCEL>       baseline vs GCONV on one pair
     gconv-chain matrix                       Fig. 14 speedup matrix
     gconv-chain run [NET] [SAMPLES] [--fuse] execute chain numerics (native)
+    gconv-chain serve [NET] [REQUESTS] [--fuse] [--max-batch N]
+                                             bind-once/run-many serving demo
 
 OPTIONS:
     --threads N    run on a scoped rayon pool of N workers (default:
                    one per core) — pin for reproducible bench numbers
     --fuse         rewrite the chain with executable operation fusion
                    (§4.3) first: fewer entries, bit-identical outputs
+    --max-batch N  serve: coalesce up to N single-sample requests into
+                   one micro-batch session run (default 8)
 
     NET   = AN GLN DN MN ZFFR C3D CapNN
     ACCEL = TPU DNNW ER EP NLR";
@@ -35,6 +39,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("matrix") => cmd_matrix(),
         Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         _ => println!("{USAGE}"),
     };
     if let Err(e) = gconv_chain::exec::with_threads(threads, dispatch) {
@@ -165,5 +170,53 @@ fn cmd_run(args: &[String]) {
         s.batches,
         s.throughput(),
         s.mean_latency_s * 1e3
+    );
+}
+
+fn cmd_serve(args: &[String]) {
+    use gconv_chain::exec::serve::Engine;
+    use gconv_chain::exec::Tensor;
+
+    let mut args = args.to_vec();
+    let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
+    let max_batch = match gconv_chain::args::take_usize(&mut args, "--max-batch") {
+        0 => 8,
+        n => n,
+    };
+    let code = args.first().map(String::as_str).unwrap_or("MN").to_string();
+    let total: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
+
+    let net = benchmark(&code);
+    let (input_name, dims) = gconv_chain::exec::bench::input_spec(&net)
+        .expect("network has no input layer");
+    let sample_len: usize = dims[1..].iter().product();
+    println!(
+        "serving {code} ({input_name}, {sample_len} values/sample): {total} requests, \
+         micro-batches of up to {max_batch}, fuse={fuse}…"
+    );
+
+    let mut engine = Engine::new(max_batch).with_fuse(fuse);
+    let mut sample_dims = dims.clone();
+    sample_dims[0] = 1;
+    for id in 0..total {
+        let x = Tensor::rand(&sample_dims, 0xD15_C0 ^ id, 1.0);
+        engine.submit(&code, id, x.into_data()).expect("submit failed");
+    }
+    let responses = engine.drain().expect("serving failed");
+    let s = engine.stats();
+    let mut latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+    latencies.sort_by(f64::total_cmp);
+    let pct = |p: usize| latencies[(latencies.len() * p / 100).min(latencies.len() - 1)];
+    println!(
+        "served {} requests in {} micro-batches ({} coalesced, {} sessions built, \
+         {} cache hits): {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        s.requests,
+        s.batches,
+        s.coalesced,
+        s.sessions_built,
+        s.cache_hits,
+        s.throughput(),
+        pct(50) * 1e3,
+        pct(99) * 1e3
     );
 }

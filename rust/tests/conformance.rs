@@ -1,0 +1,331 @@
+//! Cross-engine conformance suite: one table-driven harness that runs
+//! benchmark FP chains through every engine path — the naive
+//! per-element oracle, the tiered fast paths, the executable-fused
+//! chain, and bind-once/run-many session reuse — and pins all of them
+//! **bit-identical**. This replaces the earlier scattered pairwise
+//! checks (fast-vs-naive here, fused-vs-unfused there) with a single
+//! matrix; any new engine path gets added to [`run_path`] and is
+//! covered everywhere at once.
+//!
+//! On top of the matrix, tiny fixed-seed golden digests are kept under
+//! `rust/tests/goldens/` (first-k output words + an FNV-1a hash of the
+//! full output bit pattern). The matrix only proves the paths agree
+//! *with each other*; the committed digest catches a silent semantic
+//! change that moves every path at once — something no differential
+//! test can see. A golden file without a digest (the committed
+//! bootstrap state) is populated in place and reported, so the gate
+//! arms as soon as a populated file is committed; with a digest
+//! present the comparison is strict and `UPDATE_GOLDENS=1` is the only
+//! way to move it.
+//!
+//! The seven-network matrix needs the naive oracle on the heavy nets
+//! and runs `#[ignore]`d in debug; CI executes it in release. The
+//! tier-1 (debug) half covers the full four-path matrix on small
+//! chains plus the three fast paths and golden digests of MN + AN.
+
+use std::env;
+use std::fs;
+use std::path::PathBuf;
+
+use gconv_chain::exec::bench::input_spec;
+use gconv_chain::exec::serve::{Engine, Session};
+use gconv_chain::exec::{ChainExec, Tensor};
+use gconv_chain::gconv::chain::GconvChain;
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::ir::{Layer, Network, PoolKind, Shape};
+use gconv_chain::mapping::fuse_executable;
+use gconv_chain::networks::{benchmark_with_batch, mobilenet_block, BENCHMARK_CODES};
+use gconv_chain::prop::prop_check;
+
+/// Input seed of every conformance run (the golden digests pin the
+/// outputs for exactly this seed, batch 1 and synthesized weights).
+const INPUT_SEED: u64 = 0xC0F_FEE5;
+
+/// One engine path of the matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Path {
+    /// `ChainExec` forced onto the per-element oracle.
+    Naive,
+    /// `ChainExec` on the tiered fast paths.
+    Fast,
+    /// `ChainExec` on the executable-fused chain.
+    Fused,
+    /// A `Session` run twice — the *second* (buffer-recycling,
+    /// zero-bind) run is the compared output, so the matrix also pins
+    /// that reuse never drifts.
+    Session,
+}
+
+const ALL_PATHS: [Path; 4] = [Path::Naive, Path::Fast, Path::Fused, Path::Session];
+const FAST_PATHS: [Path; 3] = [Path::Fast, Path::Fused, Path::Session];
+
+/// Run one network's FP chain through `path` and return the final
+/// output tensor.
+fn run_path(net: &Network, path: Path) -> Tensor {
+    let (input_name, dims) = input_spec(net).unwrap();
+    let x = Tensor::rand(&dims, INPUT_SEED, 1.0);
+    let mut chain = lower_network(net, Mode::Inference);
+    if path == Path::Fused {
+        fuse_executable(&mut chain);
+    }
+    match path {
+        Path::Session => {
+            let mut session = Session::builder(chain)
+                .input(&input_name, x)
+                .build()
+                .unwrap_or_else(|e| panic!("{}: session build: {e:#}", net.name));
+            let binds = session.stats().plan_binds;
+            let first = session.run().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+            session.recycle(first);
+            let mut second = session.run().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+            assert_eq!(
+                session.stats().plan_binds,
+                binds,
+                "{}: session reuse must not rebind plans",
+                net.name
+            );
+            (*second.outputs.remove(0)).clone()
+        }
+        _ => {
+            let mut exec = ChainExec::new(chain);
+            if path == Path::Naive {
+                exec = exec.with_naive_oracle();
+            }
+            exec.set_input(&input_name, x);
+            let mut report =
+                exec.run_last().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+            (*report.outputs.remove(0)).clone()
+        }
+    }
+}
+
+/// Run the matrix row for `net`: every path's final output must match
+/// the first path's bit-for-bit, and executable fusion must actually
+/// shorten the chain (otherwise the Fused leg degenerates into a
+/// trivial unfused-vs-unfused comparison). Returns the reference
+/// output.
+fn assert_matrix(net: &Network, paths: &[Path]) -> Tensor {
+    let unfused_len = lower_network(net, Mode::Inference).len();
+    let mut fused_chain = lower_network(net, Mode::Inference);
+    fuse_executable(&mut fused_chain);
+    assert!(
+        fused_chain.len() < unfused_len,
+        "{}: executable fusion did not shorten the chain ({unfused_len} -> {})",
+        net.name,
+        fused_chain.len()
+    );
+    let reference = run_path(net, paths[0]);
+    for &path in &paths[1..] {
+        let out = run_path(net, path);
+        assert!(
+            reference.bit_eq(&out),
+            "{}: engine path {path:?} diverged bitwise from {:?} (max |Δ| = {:e})",
+            net.name,
+            paths[0],
+            reference.max_abs_diff(&out)
+        );
+    }
+    reference
+}
+
+/// FNV-1a over a byte string.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Render the digest document for one output tensor.
+fn render_golden(code: &str, out: &Tensor) -> String {
+    let mut bytes = Vec::with_capacity(out.elements() * 4);
+    for v in out.data() {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let head: Vec<String> =
+        out.data().iter().take(8).map(|v| format!("{:08x}", v.to_bits())).collect();
+    format!(
+        "# gconv golden digest v1 — {code} inference chain, batch 1, input seed \
+         {INPUT_SEED:#x}, synthesized weights (default seed), fast-path output.\n\
+         # All engine paths are pinned bit-identical to this digest by \
+         tests/conformance.rs.\n\
+         # Regenerate (semantic changes only): UPDATE_GOLDENS=1 cargo test --release \
+         --test conformance -- --ignored\n\
+         elements {}\nfnv64 {:016x}\nhead {}\n",
+        out.elements(),
+        fnv1a64(&bytes),
+        head.join(" ")
+    )
+}
+
+/// Compare `out` against the committed digest of `code`, or populate a
+/// digest-less (bootstrap-state) golden file in place.
+fn check_golden(code: &str, out: &Tensor) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens");
+    let path = dir.join(format!("{code}.golden"));
+    let current = render_golden(code, out);
+    let committed = fs::read_to_string(&path).unwrap_or_default();
+    let update = env::var_os("UPDATE_GOLDENS").is_some();
+    let digest_only =
+        |s: &str| s.lines().filter(|l| !l.starts_with('#')).collect::<Vec<_>>().join("\n");
+    if committed.lines().any(|l| l.starts_with("fnv64 ")) && !update {
+        assert_eq!(
+            digest_only(&committed),
+            digest_only(&current),
+            "{code}: engine output drifted from the committed golden digest \
+             (rust/tests/goldens/{code}.golden). Every engine path moved together — \
+             this is a semantic change no differential test can see. If intended, \
+             regenerate with UPDATE_GOLDENS=1 and commit the new digest."
+        );
+    } else {
+        fs::create_dir_all(&dir).ok();
+        fs::write(&path, &current)
+            .unwrap_or_else(|e| panic!("{code}: cannot populate golden file: {e}"));
+        eprintln!(
+            "golden {code}: digest populated — commit rust/tests/goldens/{code}.golden \
+             to arm the drift gate"
+        );
+    }
+}
+
+/// A small conv→ReLU→pool→FC→softmax classifier (per-sample ops only).
+fn small_classifier(batch: usize) -> Network {
+    let mut net = Network::new("small");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(batch, 3, 8, 8) }, &[]);
+    let c = net.add(
+        "conv1",
+        Layer::Conv { out_channels: 4, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[i],
+    );
+    let r = net.add("relu1", Layer::Relu, &[c]);
+    let p = net.add(
+        "pool1",
+        Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+        &[r],
+    );
+    let f = net.add("fc", Layer::FullyConnected { out_features: 5 }, &[p]);
+    net.add("prob", Layer::Softmax, &[f]);
+    net
+}
+
+#[test]
+fn conformance_matrix_small_chains_all_four_paths() {
+    // Full 4-path matrix (including the naive oracle) on chains cheap
+    // enough for debug mode: a BN-bearing MobileNet block and a
+    // conv/pool/FC/softmax classifier.
+    assert_matrix(&mobilenet_block(2, 4, 6), &ALL_PATHS);
+    assert_matrix(&small_classifier(2), &ALL_PATHS);
+}
+
+#[test]
+fn conformance_matrix_mn_an_with_goldens() {
+    // Tier-1 half of the benchmark matrix: MobileNet + AlexNet at
+    // batch 1 through the three fast paths (the naive oracle on the
+    // full nets runs in the release `--ignored` matrix below), plus
+    // the committed golden digests.
+    for code in ["MN", "AN"] {
+        let net = benchmark_with_batch(code, 1);
+        let reference = assert_matrix(&net, &FAST_PATHS);
+        check_golden(code, &reference);
+    }
+}
+
+#[test]
+#[ignore = "naive oracle over the heavy nets takes minutes in debug; CI runs it in \
+            release via `cargo test --release -- --ignored`"]
+fn conformance_matrix_all_seven_networks_all_four_paths() {
+    for code in BENCHMARK_CODES {
+        let net = benchmark_with_batch(code, 1);
+        let reference = assert_matrix(&net, &ALL_PATHS);
+        check_golden(code, &reference);
+    }
+}
+
+#[test]
+fn engine_coalescing_is_invariant_over_batching() {
+    // Property: N single-sample requests coalesced by the Engine into
+    // one micro-batch produce bit-identical per-sample outputs to N
+    // independent batch-1 Session runs, across randomized per-sample
+    // networks (conv/ReLU/pool/FC — no batch statistics), shapes,
+    // seeds and the fuse flag.
+    prop_check(10, |rng| {
+        let c = rng.int(1, 3);
+        let hw = rng.int(4, 6);
+        let oc = rng.int(1, 4);
+        let k = rng.int(1, 3);
+        let pad = rng.int(0, k - 1).min(1);
+        let features = rng.int(2, 5);
+        let with_pool = rng.bool(0.5);
+        let fuse = rng.bool(0.5);
+        let build = move |batch: usize| -> Network {
+            let mut net = Network::new("prop-serve");
+            let i = net.add("data", Layer::Input { shape: Shape::bchw(batch, c, hw, hw) }, &[]);
+            let conv = net.add(
+                "conv",
+                Layer::Conv { out_channels: oc, kernel: (k, k), stride: 1, pad, groups: 1 },
+                &[i],
+            );
+            let mut last = net.add("relu", Layer::Relu, &[conv]);
+            if with_pool {
+                last = net.add(
+                    "pool",
+                    Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+                    &[last],
+                );
+            }
+            net.add("fc", Layer::FullyConnected { out_features: features }, &[last]);
+            net
+        };
+
+        let n = rng.int(2, 4);
+        let sample_len = c * hw * hw;
+        let samples: Vec<Vec<f32>> = (0..n)
+            .map(|_| Tensor::rand(&[sample_len], rng.next_u64(), 1.0).into_data())
+            .collect();
+
+        let mut engine = Engine::new(n).with_fuse(fuse);
+        engine.register("prop", build);
+        for (i, s) in samples.iter().enumerate() {
+            engine.submit("prop", i as u64, s.clone()).map_err(|e| format!("submit: {e:#}"))?;
+        }
+        let mut responses = engine.drain().map_err(|e| format!("drain: {e:#}"))?;
+        responses.sort_by_key(|r| r.id);
+        if responses.len() != n {
+            return Err(format!("{} responses for {n} requests", responses.len()));
+        }
+        if responses.iter().any(|r| r.batch != n) {
+            return Err(format!(
+                "per-sample net must coalesce into one batch of {n} (got sizes {:?})",
+                responses.iter().map(|r| r.batch).collect::<Vec<_>>()
+            ));
+        }
+
+        for (i, s) in samples.iter().enumerate() {
+            let mut chain: GconvChain = lower_network(&build(1), Mode::Inference);
+            if fuse {
+                fuse_executable(&mut chain);
+            }
+            let mut session = Session::builder(chain)
+                .input("data.data", Tensor::new(&[1, c, hw, hw], s.clone()).unwrap())
+                .build()
+                .map_err(|e| format!("session build: {e:#}"))?;
+            let want = session.run().map_err(|e| format!("session run: {e:#}"))?;
+            let wd = want.outputs[0].data();
+            let got = &responses[i].data;
+            if got.len() != wd.len() {
+                return Err(format!("sample {i}: {} values, want {}", got.len(), wd.len()));
+            }
+            for (j, (a, b)) in got.iter().zip(wd).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "c{c} hw{hw} oc{oc} k{k} pad{pad} pool{with_pool} fuse{fuse} n{n}: \
+                         sample {i} element {j}: coalesced {a} vs batch-1 {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

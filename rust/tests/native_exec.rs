@@ -12,7 +12,6 @@
 //! padding-skip under `Max`, the fixed LUT definitions). For conv, FC,
 //! pooling and softmax those coincide with the textbook operators.
 
-use gconv_chain::exec::bench::input_spec;
 use gconv_chain::exec::{
     eval_gconv, eval_gconv_naive, lut_apply, plan_tier, ChainExec, KernelTier, Tensor,
     GEMM_MIN_REDUCTION,
@@ -22,7 +21,7 @@ use gconv_chain::gconv::lower::{lower_network, Mode};
 use gconv_chain::gconv::op::{DataRef, DimParams, GconvOp, MainOp, PostOp, PreOp, ReduceOp};
 use gconv_chain::ir::{Dim, Layer, Network, PoolKind, Shape};
 use gconv_chain::mapping::fuse_executable;
-use gconv_chain::networks::{benchmark_with_batch, mobilenet_block, BENCHMARK_CODES};
+use gconv_chain::networks::mobilenet_block;
 use gconv_chain::prop::{prop_check, Rng};
 
 /// Build a one-layer network `Input(shape) → layer`, lower it for
@@ -760,46 +759,12 @@ fn concat_chain_stacks_branches_along_channels() {
     assert_close(out.data(), &want, 1e-7, "channel concat");
 }
 
-/// Run one benchmark's FP chain on the fast tiers; returns the final
-/// output and the number of entries executed.
-fn run_fp_chain(net: &Network, fuse: bool) -> (Tensor, usize) {
-    let mut chain = lower_network(net, Mode::Inference);
-    if fuse {
-        fuse_executable(&mut chain);
-    }
-    let mut exec = ChainExec::new(chain);
-    let (name, dims) = input_spec(net).unwrap();
-    exec.set_input(&name, Tensor::rand(&dims, 0xF00D, 1.0));
-    let mut report = exec.run_last().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
-    let out = std::sync::Arc::try_unwrap(report.outputs.remove(0)).expect("sole owner");
-    (out, report.entries.len())
-}
-
-fn assert_fused_matches_unfused(code: &str) {
-    let net = benchmark_with_batch(code, 1);
-    let (plain, n_plain) = run_fp_chain(&net, false);
-    let (fused, n_fused) = run_fp_chain(&net, true);
-    assert!(n_fused < n_plain, "{code}: fusion did not shorten ({n_plain} → {n_fused})");
-    assert!(plain.bit_eq(&fused), "{code}: fused output diverged");
-    assert!(plain.data().iter().all(|v| v.is_finite()), "{code}: non-finite output");
-}
-
-#[test]
-fn mobilenet_and_alexnet_fp_chains_run_fused_and_unfused() {
-    // Tier-1 smoke over the two CI-bench networks at batch 1; the other
-    // five run in the release-mode `--ignored` smoke below.
-    for code in ["MN", "AN"] {
-        assert_fused_matches_unfused(code);
-    }
-}
-
-#[test]
-#[ignore = "minutes of debug-mode compute; CI runs it in release via `cargo test --release -- --ignored`"]
-fn all_seven_benchmark_fp_chains_run_fused_and_unfused() {
-    for code in BENCHMARK_CODES {
-        assert_fused_matches_unfused(code);
-    }
-}
+// NOTE: the former fused-vs-unfused benchmark smokes
+// (`mobilenet_and_alexnet_fp_chains_run_fused_and_unfused` and the
+// all-seven `--ignored` variant) moved into the cross-engine
+// conformance matrix in `tests/conformance.rs`, which pins {naive,
+// fast, fused, session-reuse} bit-identical in one table and checks
+// the committed golden digests on top.
 
 #[test]
 fn small_cnn_softmax_distributions_sum_to_one() {
