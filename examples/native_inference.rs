@@ -4,9 +4,12 @@
 //! per-layer and total throughput.
 //!
 //! Run: `cargo run --release --example native_inference [BATCH]
-//! [--threads N] [--fuse] [--bench-json] [--serve-json]`
+//! [--threads N] [--fuse] [--model SPEC.json] [--bench-json]
+//! [--serve-json]`
 //!
-//! * default: inference demo (batch 2, synthesized weights);
+//! * default: inference demo (batch 2, synthesized weights); with
+//!   `--model PATH` the demo runs a spec-imported network instead of
+//!   MobileNet;
 //! * `--threads N`: run on a scoped rayon pool of N workers;
 //! * `--fuse`: rewrite the chain with executable operation fusion
 //!   (§4.3) before running — fewer entries, bit-identical outputs;
@@ -20,10 +23,13 @@
 //!   write `BENCH_serve.json` (requests/sec, p50/p99 latency,
 //!   bind-amortization ratio).
 
-use gconv_chain::args::{take_flag, take_usize};
-use gconv_chain::exec::bench::{bench_network, bench_serve, write_json, write_serve_json, NetBench};
+use gconv_chain::args::{take_flag, take_required_string, take_usize};
+use gconv_chain::exec::bench::{
+    bench_network, bench_serve, input_spec, write_json, write_serve_json, NetBench,
+};
 use gconv_chain::exec::{with_threads, ChainExec, Tensor};
 use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::ir::Network;
 use gconv_chain::mapping::fuse_executable;
 use gconv_chain::networks::{alexnet, mobilenet};
 use gconv_chain::report::{print_table, si};
@@ -37,14 +43,24 @@ fn main() {
     let bench_mode = take_flag(&mut args, "--bench-json");
     let serve_mode = take_flag(&mut args, "--serve-json");
     let fuse = take_flag(&mut args, "--fuse");
+    let model = take_required_string(&mut args, "--model").unwrap_or_else(|e| {
+        eprintln!("{e} (a spec-file path)");
+        std::process::exit(2);
+    });
     let batch_arg: Option<usize> = args.first().and_then(|a| a.parse().ok());
     let body = move || {
-        if serve_mode {
-            run_serve_json(threads);
-        } else if bench_mode {
-            run_bench_json(batch_arg.unwrap_or(1), threads);
+        if serve_mode || bench_mode {
+            if model.is_some() {
+                eprintln!("--model is only supported for the inference demo");
+                std::process::exit(2);
+            }
+            if serve_mode {
+                run_serve_json(threads);
+            } else {
+                run_bench_json(batch_arg.unwrap_or(1), threads);
+            }
         } else {
-            run_inference(batch_arg.unwrap_or(2), fuse);
+            run_inference(batch_arg.unwrap_or(2), fuse, model.as_deref());
         }
     };
     with_threads(threads, body).expect("building the rayon pool failed");
@@ -137,11 +153,21 @@ fn print_net_summary(b: &NetBench) {
     );
 }
 
-/// The original demo: one MobileNet FP chain on the fast tiers, with a
-/// per-layer throughput table. With `fuse`, the chain is rewritten by
-/// executable operation fusion first.
-fn run_inference(batch: usize, fuse: bool) {
-    let net = mobilenet(batch);
+/// The original demo: one FP chain on the fast tiers, with a per-layer
+/// throughput table. Default network: MobileNet; `--model PATH` runs a
+/// spec-imported network instead (batch overridden to the CLI batch).
+/// With `fuse`, the chain is rewritten by executable operation fusion
+/// first.
+fn run_inference(batch: usize, fuse: bool, model: Option<&str>) {
+    let net: Network = match model {
+        Some(path) => {
+            let spec = gconv_chain::frontend::load_spec(std::path::Path::new(path))
+                .expect("loading the model spec failed");
+            gconv_chain::frontend::build_with_batch(&spec, Some(batch))
+                .expect("building the model spec failed")
+        }
+        None => mobilenet(batch),
+    };
     let mut chain = lower_network(&net, Mode::Inference);
     if fuse {
         let stats = fuse_executable(&mut chain);
@@ -160,7 +186,8 @@ fn run_inference(batch: usize, fuse: bool) {
     );
 
     let mut exec = ChainExec::new(chain);
-    exec.set_input("data.data", Tensor::rand(&[batch, 3, 224, 224], 42, 1.0));
+    let (input_name, dims) = input_spec(&net).expect("network has no input layer");
+    exec.set_input(&input_name, Tensor::rand(&dims, 42, 1.0));
     let report = exec.run_last().expect("native execution failed");
 
     // Per-layer table: one row per IR layer (chain entries grouped by
@@ -187,7 +214,7 @@ fn run_inference(batch: usize, fuse: bool) {
         rows.push(layer_row(name, secs, work, n));
     }
     print_table(
-        &format!("MobileNet FP chain on the native backend (batch {batch})"),
+        &format!("{} FP chain on the native backend (batch {batch})", net.name),
         &["layer", "gconvs", "main ops", "ms", "Gops/s"],
         &rows,
     );

@@ -15,7 +15,8 @@
 //!   cargo bench --bench native_exec -- MN --serve --requests 16
 //!
 //! Flags: net codes (any of AN GLN DN MN ZFFR C3D CapNN; default
-//! MN + AN), `--batch N` (default 1), `--runs R` fast-path repetitions
+//! MN + AN), `--model PATH` to bench an imported spec-file network
+//! instead, `--batch N` (default 1), `--runs R` fast-path repetitions
 //! keeping the best (default 2), `--threads N` scoped rayon pool,
 //! `--json PATH` output path. Note: the naive oracle side makes the
 //! heavy nets (DN, GLN, C3D, ZFFR) take minutes — CI sticks to MN + AN.
@@ -29,7 +30,7 @@
 //! `--requests N` (default 16) and `--max-batch N` (default 4) size
 //! the request stream.
 
-use gconv_chain::args::{take_flag, take_string, take_usize};
+use gconv_chain::args::{take_flag, take_required_string, take_string, take_usize};
 use gconv_chain::exec::bench::{
     bench_network, bench_serve, write_json, write_serve_json, NetBench, ServeBench,
 };
@@ -62,13 +63,21 @@ fn main() {
         0 => 4,
         n => n,
     };
+    let model = take_required_string(&mut args, "--model").unwrap_or_else(|e| {
+        eprintln!("{e} (a spec-file path)");
+        std::process::exit(2);
+    });
     let default_json = if serve { DEFAULT_SERVE_JSON } else { DEFAULT_JSON };
     let json_path = take_string(&mut args, "--json").unwrap_or_else(|| default_json.to_string());
     let body = move || {
         if serve {
+            if model.is_some() {
+                eprintln!("--model is only supported for the naive-vs-fast bench (not --serve)");
+                std::process::exit(2);
+            }
             run_serve(&args, requests, max_batch, threads, &json_path);
         } else {
-            run(&args, batch, runs, threads, &json_path);
+            run(&args, batch, runs, threads, &json_path, model.as_deref());
         }
     };
     if let Err(e) = with_threads(threads, body) {
@@ -147,21 +156,41 @@ fn serve_row(b: &ServeBench) -> Vec<String> {
     ]
 }
 
-fn run(codes: &[String], batch: usize, runs: usize, requested: usize, json_path: &str) {
+fn run(
+    codes: &[String],
+    batch: usize,
+    runs: usize,
+    requested: usize,
+    json_path: &str,
+    model: Option<&str>,
+) {
     let threads = match requested {
         0 => rayon::current_num_threads(),
         n => n,
     };
-    let selected = select_codes(codes);
+    // `--model PATH` benchmarks the imported spec *instead of* the
+    // default code set (explicit codes still add their builders).
+    let mut nets: Vec<gconv_chain::ir::Network> = Vec::new();
+    if let Some(path) = model {
+        let spec = gconv_chain::frontend::load_spec(std::path::Path::new(path))
+            .expect("loading the model spec failed");
+        let net = gconv_chain::frontend::build_with_batch(&spec, Some(batch))
+            .expect("building the model spec failed");
+        nets.push(net);
+    }
+    if model.is_none() || !codes.is_empty() {
+        for code in select_codes(codes) {
+            nets.push(benchmark_with_batch(code, batch));
+        }
+    }
 
     let mut results: Vec<NetBench> = Vec::new();
-    for code in &selected {
-        let net = benchmark_with_batch(code, batch);
+    for net in &nets {
         eprintln!(
             "benchmarking {} (batch {batch}, {runs} fast run(s), {threads} threads)…",
             net.name
         );
-        results.push(bench_network(&net, runs).expect("bench run failed"));
+        results.push(bench_network(net, runs).expect("bench run failed"));
     }
 
     let rows: Vec<Vec<String>> = results.iter().map(net_row).collect();

@@ -20,6 +20,21 @@ pub fn take_usize(args: &mut Vec<String>, flag: &str) -> usize {
     }
 }
 
+/// [`take_string`], but a present flag with a missing value is an
+/// error instead of a silent `None` (for flags like `--model PATH`
+/// where falling back to a default would mislead).
+pub fn take_required_string(
+    args: &mut Vec<String>,
+    flag: &str,
+) -> Result<Option<String>, String> {
+    let had_flag = args.iter().any(|a| a == flag);
+    match take_string(args, flag) {
+        Some(v) => Ok(Some(v)),
+        None if had_flag => Err(format!("{flag} needs a value")),
+        None => Ok(None),
+    }
+}
+
 /// Remove `flag VALUE` from `args`, returning VALUE if both were
 /// present. A trailing flag with no value is removed and yields None;
 /// a following token that is itself a flag (leading `--`) is *not*
@@ -74,6 +89,18 @@ mod tests {
         let mut args = argv(&["--threads", "--bench-json"]);
         assert_eq!(take_usize(&mut args, "--threads"), 0);
         assert_eq!(args, argv(&["--bench-json"]));
+    }
+
+    #[test]
+    fn take_required_string_errors_on_missing_values() {
+        let mut args = argv(&["--model", "a.json"]);
+        assert_eq!(take_required_string(&mut args, "--model"), Ok(Some("a.json".into())));
+        assert_eq!(take_required_string(&mut args, "--model"), Ok(None));
+        let mut args = argv(&["--model"]);
+        assert!(take_required_string(&mut args, "--model").is_err());
+        let mut args = argv(&["--model", "--fuse"]);
+        assert!(take_required_string(&mut args, "--model").is_err());
+        assert_eq!(args, argv(&["--fuse"]));
     }
 
     #[test]

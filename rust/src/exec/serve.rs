@@ -40,9 +40,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use rayon::prelude::*;
 
+use crate::frontend::{build_with_batch, ModelSpec};
 use crate::gconv::chain::{GconvChain, SpecialOp};
 use crate::gconv::lower::{lower_network, Mode};
 use crate::gconv::op::DataRef;
@@ -625,6 +626,24 @@ impl Engine {
         self.builders.insert(code.to_string(), Box::new(build));
     }
 
+    /// Register an imported model spec: requests for `spec.name` are
+    /// served by relowering the spec at each micro-batch size (the
+    /// input's `B` extent is rewritten; everything else re-infers). The
+    /// spec is validated at batches 1 and 2 up front — the sizes the
+    /// per-sample probe needs — so a malformed spec fails here, with
+    /// context, instead of inside the serving loop. Returns the code.
+    pub fn register_spec(&mut self, spec: ModelSpec) -> Result<String> {
+        let code = spec.name.clone();
+        for b in [1usize, 2] {
+            build_with_batch(&spec, Some(b))
+                .with_context(|| format!("validating model spec {code:?} at batch {b}"))?;
+        }
+        self.register(&code, move |b| {
+            build_with_batch(&spec, Some(b)).expect("spec validated at registration")
+        });
+        Ok(code)
+    }
+
     /// Enqueue one single-sample request for network `code`.
     pub fn submit(&mut self, code: &str, id: u64, data: Vec<f32>) -> Result<()> {
         self.resolve_net(code)?;
@@ -707,10 +726,17 @@ impl Engine {
             return Ok(());
         }
         if !self.builders.contains_key(code) {
-            ensure!(
-                BENCHMARK_CODES.contains(&code),
-                "unknown network {code:?}: register a builder or use a benchmark code"
-            );
+            if !BENCHMARK_CODES.contains(&code) {
+                let mut known: Vec<&str> = self.builders.keys().map(String::as_str).collect();
+                known.sort_unstable();
+                bail!(
+                    "unknown network {code:?}: registered codes are [{}], benchmark codes \
+                     are {} — use Engine::register or Engine::register_spec for custom \
+                     models",
+                    known.join(", "),
+                    BENCHMARK_CODES.join(", ")
+                );
+            }
             let owned = code.to_string();
             self.builders
                 .insert(owned.clone(), Box::new(move |b| benchmark_with_batch(&owned, b)));
@@ -1151,8 +1177,42 @@ mod tests {
         let mut engine = Engine::new(2);
         engine.register("ps", per_sample_net);
         assert!(engine.submit("ps", 0, vec![0.0; 3]).is_err());
-        assert!(engine.submit("no-such-net", 0, vec![0.0; 3]).is_err());
+        let err = engine.submit("no-such-net", 0, vec![0.0; 3]).unwrap_err().to_string();
+        assert!(err.contains("register_spec") && err.contains("[ps]"), "{err}");
         assert_eq!(engine.pending(), 0);
+    }
+
+    #[test]
+    fn engine_serves_registered_specs_bit_identically_to_sessions() {
+        // The spec describes the same conv → ReLU → FC classifier as
+        // `per_sample_net`, so the engine must coalesce it and match a
+        // direct Session run bit-for-bit.
+        let spec = crate::frontend::export_network(&per_sample_net(1));
+        let mut engine = Engine::new(2);
+        let code = engine.register_spec(spec).unwrap();
+        assert_eq!(code, "psnet");
+        let samples: Vec<Vec<f32>> = (0..2)
+            .map(|i| Tensor::rand(&[2 * 4 * 4], 40 + i, 1.0).into_data())
+            .collect();
+        for (i, s) in samples.iter().enumerate() {
+            engine.submit(&code, i as u64, s.clone()).unwrap();
+        }
+        let mut responses = engine.drain().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert!(responses.iter().all(|r| r.batch == 2), "spec net must coalesce");
+        for (i, s) in samples.iter().enumerate() {
+            let mut session = Session::builder(lower_network(&per_sample_net(1), Mode::Inference))
+                .input("data.data", Tensor::new(&[1, 2, 4, 4], s.clone()).unwrap())
+                .build()
+                .unwrap();
+            let want = session.run().unwrap();
+            let same = responses[i]
+                .data
+                .iter()
+                .zip(want.outputs[0].data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "spec-served sample {i} diverged from its session run");
+        }
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Spec → [`Network`] construction.
+//!
+//! Walks the layer list in order, resolves producer names (omitted
+//! `inputs` default to the previous layer, so linear chains need no
+//! wiring), runs the [inference pass](super::infer) on every layer, and
+//! unifies declared partial outputs — so a malformed spec yields a
+//! targeted error naming the offending layer, never a panic. The
+//! resulting network flows through the existing `lower_network` →
+//! `ChainExec` / `Session` path unchanged.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::infer::{check_layer, layer_from_spec, unify_output};
+use super::spec::ModelSpec;
+use crate::ir::{Dim, Layer, Network, NodeId, Shape};
+
+/// Build the network a spec describes, at its baked-in batch size.
+pub fn build_network(spec: &ModelSpec) -> Result<Network> {
+    build_with_batch(spec, None)
+}
+
+/// Build the network a spec describes. With `Some(b)`, every input
+/// layer's `B` extent is overridden to `b` (specs bake a default batch;
+/// the serving engine relowers at the micro-batch size). Inputs without
+/// a `B` dimension are left untouched.
+pub fn build_with_batch(spec: &ModelSpec, batch: Option<usize>) -> Result<Network> {
+    ensure!(!spec.name.is_empty(), "model spec has an empty \"name\"");
+    ensure!(!spec.layers.is_empty(), "model spec {:?} has no layers", spec.name);
+    if let Some(b) = batch {
+        ensure!(b > 0, "model spec {:?}: batch override must be positive", spec.name);
+    }
+    let mut net = Network::new(&spec.name);
+    let mut ids: HashMap<&str, NodeId> = HashMap::with_capacity(spec.layers.len());
+    let mut prev: Option<NodeId> = None;
+    let mut saw_input = false;
+    for ls in &spec.layers {
+        ensure!(
+            !ids.contains_key(ls.name.as_str()),
+            "layer {:?} is defined twice",
+            ls.name
+        );
+        let mut layer = layer_from_spec(ls)?;
+        if let Layer::Input { shape } = &mut layer {
+            saw_input = true;
+            if let (Some(b), true) = (batch, shape.dims().contains(&Dim::B)) {
+                *shape = shape.with(Dim::B, b);
+            }
+        }
+        let input_ids = resolve_inputs(ls, &layer, &ids, prev)?;
+        let in_shapes: Vec<&Shape> =
+            input_ids.iter().map(|&i| &net.node(i).output).collect();
+        let out = check_layer(&ls.name, &layer, &in_shapes)?;
+        unify_output(&ls.name, &out, &ls.output)?;
+        let id = net.add(&ls.name, layer, &input_ids);
+        ids.insert(ls.name.as_str(), id);
+        prev = Some(id);
+    }
+    ensure!(
+        saw_input,
+        "model spec {:?} has no \"input\" layer (every network needs one)",
+        spec.name
+    );
+    Ok(net)
+}
+
+/// Producer node ids for one layer: explicit names resolve against
+/// already-built layers (specs are topological, so a forward or unknown
+/// name is a dangling input); omitted `inputs` default to the previous
+/// layer.
+fn resolve_inputs(
+    ls: &super::spec::LayerSpec,
+    layer: &Layer,
+    ids: &HashMap<&str, NodeId>,
+    prev: Option<NodeId>,
+) -> Result<Vec<NodeId>> {
+    if matches!(layer, Layer::Input { .. }) {
+        if let Some(names) = &ls.inputs {
+            ensure!(names.is_empty(), "layer {:?}: input layers take no inputs", ls.name);
+        }
+        return Ok(Vec::new());
+    }
+    match &ls.inputs {
+        Some(names) => {
+            let mut out = Vec::with_capacity(names.len());
+            for n in names {
+                let id = ids.get(n.as_str()).with_context(|| {
+                    format!(
+                        "layer {:?}: input {n:?} does not name an earlier layer \
+                         (specs are topological — producers must come first)",
+                        ls.name
+                    )
+                })?;
+                out.push(*id);
+            }
+            Ok(out)
+        }
+        None => match prev {
+            Some(id) => Ok(vec![id]),
+            None => bail!(
+                "layer {:?}: \"inputs\" omitted but there is no previous layer to \
+                 default to",
+                ls.name
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::lower::{lower_network, Mode};
+
+    fn spec_of(layers: &str) -> ModelSpec {
+        let doc = format!(
+            "{{\"format\": \"gconv-chain-model\", \"version\": 1, \"name\": \"t\", \
+             \"layers\": [{layers}]}}"
+        );
+        ModelSpec::parse_json(&doc).unwrap()
+    }
+
+    const LINEAR: &str = r#"
+        {"name": "data", "kind": "input", "shape": [["B", 2], ["C", 3], ["H", 8], ["W", 8]]},
+        {"name": "conv1", "kind": "conv", "kernel": 3, "pad": 1, "output": {"C": 4}},
+        {"name": "relu1", "kind": "relu"},
+        {"name": "pool1", "kind": "pool", "kernel": 2},
+        {"name": "fc", "kind": "fc", "out_features": 5},
+        {"name": "prob", "kind": "softmax"}"#;
+
+    #[test]
+    fn linear_chain_defaults_to_previous_layer() {
+        let net = build_network(&spec_of(LINEAR)).unwrap();
+        assert_eq!(net.len(), 6);
+        assert_eq!(net.node(2).inputs, vec![1]);
+        assert_eq!(net.node(1).output.extent(Dim::C), 4, "out_channels from declared C");
+        assert_eq!(net.node(3).output.extent(Dim::H), 4);
+        // The spec-built network lowers through the standard path.
+        let chain = lower_network(&net, Mode::Inference);
+        assert!(chain.len() >= net.len() - 1);
+    }
+
+    #[test]
+    fn batch_override_rewrites_input_b() {
+        let net = build_with_batch(&spec_of(LINEAR), Some(7)).unwrap();
+        assert_eq!(net.node(0).output.extent(Dim::B), 7);
+        assert_eq!(net.node(5).output.extent(Dim::B), 7);
+    }
+
+    #[test]
+    fn dangling_input_is_reported() {
+        let layers = r#"
+            {"name": "data", "kind": "input", "shape": [["B", 1], ["C", 2], ["H", 4], ["W", 4]]},
+            {"name": "r", "kind": "relu", "inputs": ["nope"]}"#;
+        let err = build_network(&spec_of(layers)).unwrap_err().to_string();
+        assert!(err.contains("\"r\"") && err.contains("\"nope\""), "{err}");
+    }
+
+    #[test]
+    fn duplicate_names_and_missing_input_layer_are_reported() {
+        let layers = r#"
+            {"name": "data", "kind": "input", "shape": [["B", 1], ["C", 2], ["H", 4], ["W", 4]]},
+            {"name": "data", "kind": "relu"}"#;
+        let err = build_network(&spec_of(layers)).unwrap_err().to_string();
+        assert!(err.contains("defined twice"), "{err}");
+
+        let layers = r#"{"name": "r", "kind": "relu", "inputs": []}"#;
+        let err = build_network(&spec_of(layers)).unwrap_err().to_string();
+        assert!(err.contains("one input"), "{err}");
+    }
+
+    #[test]
+    fn branching_by_name_works() {
+        let layers = r#"
+            {"name": "data", "kind": "input", "shape": [["B", 1], ["C", 2], ["H", 4], ["W", 4]]},
+            {"name": "a", "kind": "relu", "inputs": ["data"]},
+            {"name": "b", "kind": "sigmoid", "inputs": ["data"]},
+            {"name": "j", "kind": "eltwise", "inputs": ["a", "b"]},
+            {"name": "cat", "kind": "concat", "inputs": ["a", "b", "j"]}"#;
+        let net = build_network(&spec_of(layers)).unwrap();
+        assert_eq!(net.node(4).inputs, vec![1, 2, 3]);
+        assert_eq!(net.node(4).output.extent(Dim::C), 6);
+    }
+
+    #[test]
+    fn shape_unification_failure_names_layer_and_dim() {
+        let layers = r#"
+            {"name": "data", "kind": "input", "shape": [["B", 1], ["C", 2], ["H", 4], ["W", 4]]},
+            {"name": "c", "kind": "conv", "out_channels": 4, "kernel": 3, "output": {"H": 4}}"#;
+        let err = build_network(&spec_of(layers)).unwrap_err().to_string();
+        assert!(err.contains("\"c\"") && err.contains("H = 4") && err.contains("H = 2"), "{err}");
+    }
+}

@@ -1,0 +1,171 @@
+//! [`Network`] → spec export.
+//!
+//! Produces the *canonical* spec form: explicit `inputs` for every
+//! layer, every attribute written out (no reliance on defaults), no
+//! declared outputs. The seven benchmark builders are exported to
+//! bundled files under `rust/specs/`, which the round-trip tests pin as
+//! the conformance oracle: `build(parse(file))` must equal the builder
+//! network node-for-node, and `export(builder)` must equal
+//! `parse(file)` — so the spec reader, the exporter and the bundled
+//! files can only move together.
+
+use super::spec::{Attr, LayerSpec, ModelSpec};
+use crate::ir::{Layer, Network, PoolKind};
+
+/// Export `net` as a canonical model spec.
+pub fn export_network(net: &Network) -> ModelSpec {
+    let layers = net.nodes().iter().map(|node| export_layer(net, node)).collect();
+    ModelSpec { name: net.name.clone(), layers }
+}
+
+/// Canonical JSON text of `net`'s spec (what the bundled files hold).
+pub fn export_json(net: &Network) -> String {
+    export_network(net).to_json()
+}
+
+fn export_layer(net: &Network, node: &crate::ir::LayerNode) -> LayerSpec {
+    let mut ls = LayerSpec::new(&node.name, kind_name(&node.layer));
+    ls.inputs = Some(node.inputs.iter().map(|&i| net.node(i).name.clone()).collect());
+    match &node.layer {
+        Layer::Input { shape } => ls.shape = shape.iter().collect(),
+        Layer::Conv { out_channels, kernel, stride, pad, groups } => {
+            int(&mut ls, "out_channels", *out_channels);
+            int(&mut ls, "stride", *stride);
+            int(&mut ls, "pad", *pad);
+            int(&mut ls, "groups", *groups);
+            list(&mut ls, "kernel", &[kernel.0, kernel.1]);
+        }
+        Layer::Conv3d { out_channels, kernel, stride, pad } => {
+            int(&mut ls, "out_channels", *out_channels);
+            int(&mut ls, "stride", *stride);
+            int(&mut ls, "pad", *pad);
+            list(&mut ls, "kernel", &[kernel.0, kernel.1, kernel.2]);
+        }
+        Layer::FullyConnected { out_features } => int(&mut ls, "out_features", *out_features),
+        Layer::Pool { kind, kernel, stride, pad } => {
+            int(&mut ls, "kernel", *kernel);
+            int(&mut ls, "stride", *stride);
+            int(&mut ls, "pad", *pad);
+            pool(&mut ls, *kind);
+        }
+        Layer::Pool3d { kind, kernel, stride } => {
+            list(&mut ls, "kernel", &[kernel.0, kernel.1, kernel.2]);
+            list(&mut ls, "stride", &[stride.0, stride.1, stride.2]);
+            pool(&mut ls, *kind);
+        }
+        Layer::Lrn { local_size } => int(&mut ls, "local_size", *local_size),
+        Layer::RoiPool { num_rois, output } => {
+            int(&mut ls, "num_rois", *num_rois);
+            list(&mut ls, "output_size", &[output.0, output.1]);
+        }
+        Layer::Proposal { anchors } => int(&mut ls, "anchors", *anchors),
+        Layer::PrimaryCaps { caps_channels, vec, kernel, stride } => {
+            int(&mut ls, "caps_channels", *caps_channels);
+            int(&mut ls, "vec", *vec);
+            int(&mut ls, "kernel", *kernel);
+            int(&mut ls, "stride", *stride);
+        }
+        Layer::DigitCaps { out_caps, out_vec, routing } => {
+            int(&mut ls, "out_caps", *out_caps);
+            int(&mut ls, "out_vec", *out_vec);
+            int(&mut ls, "routing", *routing);
+        }
+        Layer::GlobalAvgPool
+        | Layer::Relu
+        | Layer::Sigmoid
+        | Layer::Softmax
+        | Layer::BatchNorm
+        | Layer::Scale
+        | Layer::Dropout
+        | Layer::Concat
+        | Layer::Eltwise => {}
+    }
+    ls
+}
+
+fn int(ls: &mut LayerSpec, key: &str, v: usize) {
+    ls.attrs.insert(key.to_string(), Attr::Int(v as i64));
+}
+
+fn list(ls: &mut LayerSpec, key: &str, values: &[usize]) {
+    let xs = values.iter().map(|&v| v as i64).collect();
+    ls.attrs.insert(key.to_string(), Attr::List(xs));
+}
+
+fn pool(ls: &mut LayerSpec, kind: PoolKind) {
+    let name = match kind {
+        PoolKind::Max => "max",
+        PoolKind::Avg => "avg",
+    };
+    ls.attrs.insert("pool".to_string(), Attr::Str(name.to_string()));
+}
+
+/// Spec-vocabulary kind of an IR layer (stable, unlike
+/// [`Layer::kind`], which renames depthwise convolutions for reports).
+fn kind_name(layer: &Layer) -> &'static str {
+    match layer {
+        Layer::Input { .. } => "input",
+        Layer::Conv { .. } => "conv",
+        Layer::Conv3d { .. } => "conv3d",
+        Layer::FullyConnected { .. } => "fc",
+        Layer::Pool { .. } => "pool",
+        Layer::GlobalAvgPool => "global_avg_pool",
+        Layer::Pool3d { .. } => "pool3d",
+        Layer::Relu => "relu",
+        Layer::Sigmoid => "sigmoid",
+        Layer::Softmax => "softmax",
+        Layer::Lrn { .. } => "lrn",
+        Layer::BatchNorm => "batch_norm",
+        Layer::Scale => "scale",
+        Layer::Dropout => "dropout",
+        Layer::Concat => "concat",
+        Layer::Eltwise => "eltwise",
+        Layer::RoiPool { .. } => "roi_pool",
+        Layer::Proposal { .. } => "proposal",
+        Layer::PrimaryCaps { .. } => "primary_caps",
+        Layer::DigitCaps { .. } => "digit_caps",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::build::build_network;
+    use crate::ir::Dim;
+    use crate::networks::mobilenet_block;
+
+    #[test]
+    fn export_import_round_trips_the_block_helper() {
+        let net = mobilenet_block(4, 16, 8);
+        let spec = export_network(&net);
+        assert_eq!(spec.name, "MobileNetBlock");
+        assert_eq!(spec.layers.len(), net.len());
+        assert_eq!(spec.layers[1].kind, "conv");
+        assert_eq!(spec.layers[1].attrs["groups"], Attr::Int(16));
+
+        let again = build_network(&spec).unwrap();
+        assert_eq!(again.len(), net.len());
+        for (a, b) in again.nodes().iter().zip(net.nodes()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.output, b.output);
+        }
+    }
+
+    #[test]
+    fn exported_json_parses_back_to_the_same_spec() {
+        let net = mobilenet_block(2, 4, 6);
+        let spec = export_network(&net);
+        let parsed = ModelSpec::parse_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, parsed);
+    }
+
+    #[test]
+    fn input_shape_preserves_dimension_order() {
+        let net = mobilenet_block(2, 4, 6);
+        let spec = export_network(&net);
+        let dims: Vec<Dim> = spec.layers[0].shape.iter().map(|&(d, _)| d).collect();
+        assert_eq!(dims, vec![Dim::B, Dim::C, Dim::H, Dim::W]);
+    }
+}

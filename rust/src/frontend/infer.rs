@@ -1,0 +1,531 @@
+//! Analyser-style parameter + shape inference over model specs.
+//!
+//! Mirrors the rule-based analyser idiom of tract: every layer kind
+//! contributes (a) *parameter rules* — which attributes exist, their
+//! defaults, and how omitted ones are derived from declared facts
+//! (e.g. a conv's `out_channels` from a declared output `C`) — and
+//! (b) *shape rules* — panic-free preconditions plus the output shape,
+//! unified against any declared partial output. Failures carry
+//! layer-name + field context instead of the `assert!`s the
+//! builder-facing [`crate::ir::Layer::infer_shape`] uses, so a
+//! malformed spec file is a diagnosable error, never a panic.
+
+use anyhow::{bail, ensure, Result};
+
+use super::spec::{Attr, LayerSpec};
+use crate::ir::{Dim, Layer, PoolKind, Shape};
+
+/// Layer kinds the spec format understands, in spec vocabulary.
+pub const KINDS: [&str; 20] = [
+    "input",
+    "conv",
+    "conv3d",
+    "fc",
+    "pool",
+    "pool3d",
+    "global_avg_pool",
+    "relu",
+    "sigmoid",
+    "softmax",
+    "lrn",
+    "batch_norm",
+    "scale",
+    "dropout",
+    "concat",
+    "eltwise",
+    "roi_pool",
+    "proposal",
+    "primary_caps",
+    "digit_caps",
+];
+
+/// Attribute accessors scoped to one layer, so every error carries
+/// `layer 'name' (kind)` context.
+struct Attrs<'a> {
+    ls: &'a LayerSpec,
+}
+
+impl Attrs<'_> {
+    fn ctx(&self) -> String {
+        format!("layer {:?} ({})", self.ls.name, self.ls.kind)
+    }
+
+    /// Positive integer attribute, if present.
+    fn opt(&self, key: &str) -> Result<Option<usize>> {
+        match self.ls.attrs.get(key) {
+            None => Ok(None),
+            Some(Attr::Int(n)) if *n > 0 => Ok(Some(*n as usize)),
+            Some(Attr::Int(n)) => bail!("{}: {key} = {n} must be positive", self.ctx()),
+            Some(other) => bail!("{}: {key} = {other} must be a positive integer", self.ctx()),
+        }
+    }
+
+    /// Non-negative integer attribute with a default (paddings).
+    fn non_negative(&self, key: &str, default: usize) -> Result<usize> {
+        match self.ls.attrs.get(key) {
+            None => Ok(default),
+            Some(Attr::Int(n)) if *n >= 0 => Ok(*n as usize),
+            Some(other) => {
+                bail!("{}: {key} = {other} must be a non-negative integer", self.ctx())
+            }
+        }
+    }
+
+    /// Positive integer attribute with a default.
+    fn or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.opt(key)?.unwrap_or(default))
+    }
+
+    /// Required positive integer attribute.
+    fn require(&self, key: &str) -> Result<usize> {
+        self.opt(key)?
+            .ok_or_else(|| anyhow::anyhow!("{}: missing required field {key:?}", self.ctx()))
+    }
+
+    /// Integer or N-list attribute broadcast to exactly `n` values
+    /// (`"kernel": 3` ≡ `"kernel": [3, 3]` for a 2-D layer).
+    fn tuple(&self, key: &str, n: usize) -> Result<Option<Vec<usize>>> {
+        let values = match self.ls.attrs.get(key) {
+            None => return Ok(None),
+            Some(Attr::Int(v)) => vec![*v; n],
+            Some(Attr::List(xs)) => {
+                ensure!(
+                    xs.len() == n,
+                    "{}: {key} must hold {n} values, found {}",
+                    self.ctx(),
+                    xs.len()
+                );
+                xs.clone()
+            }
+            Some(other) => {
+                bail!("{}: {key} = {other} must be an integer or a {n}-list", self.ctx())
+            }
+        };
+        ensure!(
+            values.iter().all(|&v| v > 0),
+            "{}: every {key} value must be positive, found {values:?}",
+            self.ctx()
+        );
+        Ok(Some(values.iter().map(|&v| v as usize).collect()))
+    }
+
+    fn require_tuple(&self, key: &str, n: usize) -> Result<Vec<usize>> {
+        self.tuple(key, n)?
+            .ok_or_else(|| anyhow::anyhow!("{}: missing required field {key:?}", self.ctx()))
+    }
+
+    /// The declared output extent of `d`, if any (the derivation source
+    /// for omitted `out_channels`/`out_features`).
+    fn declared(&self, d: Dim) -> Option<usize> {
+        self.ls.output.iter().find(|&&(x, _)| x == d).map(|&(_, n)| n)
+    }
+
+    /// `out_channels`-style attribute: explicit, or derived from a
+    /// declared output dimension.
+    fn channels_like(&self, key: &str, from: Dim) -> Result<usize> {
+        if let Some(n) = self.opt(key)? {
+            return Ok(n);
+        }
+        self.declared(from).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: missing field {key:?} and no declared \"output\" {from} to infer it from",
+                self.ctx()
+            )
+        })
+    }
+
+    /// Pooling flavour attribute (`"pool": "max" | "avg"`).
+    fn pool_kind(&self) -> Result<PoolKind> {
+        match self.ls.attrs.get("pool") {
+            None => Ok(PoolKind::Max),
+            Some(Attr::Str(s)) if s == "max" => Ok(PoolKind::Max),
+            Some(Attr::Str(s)) if s == "avg" => Ok(PoolKind::Avg),
+            Some(other) => bail!("{}: pool = {other} must be \"max\" or \"avg\"", self.ctx()),
+        }
+    }
+
+    /// Reject attribute keys the kind does not define (typo guard).
+    fn allow_only(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.ls.attrs.keys() {
+            ensure!(
+                allowed.contains(&key.as_str()),
+                "{}: unknown field {key:?} (this kind takes {allowed:?})",
+                self.ctx()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Build the [`Layer`] a spec layer describes, applying defaults and
+/// deriving omitted attributes from declared facts. Shape-dependent
+/// validation happens later in [`check_layer`].
+pub fn layer_from_spec(ls: &LayerSpec) -> Result<Layer> {
+    let a = Attrs { ls };
+    // `shape` is reserved for input layers; anywhere else it would be
+    // silently ignored, so reject it like any other stray field.
+    ensure!(
+        ls.kind == "input" || ls.shape.is_empty(),
+        "{}: \"shape\" only applies to input layers (declare expectations via \"output\")",
+        a.ctx()
+    );
+    match ls.kind.as_str() {
+        "input" => {
+            a.allow_only(&[])?;
+            ensure!(
+                !ls.shape.is_empty(),
+                "{}: input layers need a \"shape\" of [dim, extent] pairs",
+                a.ctx()
+            );
+            Ok(Layer::Input { shape: Shape::new(&ls.shape) })
+        }
+        "conv" => {
+            a.allow_only(&["out_channels", "kernel", "stride", "pad", "groups"])?;
+            let k = a.require_tuple("kernel", 2)?;
+            Ok(Layer::Conv {
+                out_channels: a.channels_like("out_channels", Dim::C)?,
+                kernel: (k[0], k[1]),
+                stride: a.or("stride", 1)?,
+                pad: a.non_negative("pad", 0)?,
+                groups: a.or("groups", 1)?,
+            })
+        }
+        "conv3d" => {
+            a.allow_only(&["out_channels", "kernel", "stride", "pad"])?;
+            let k = a.require_tuple("kernel", 3)?;
+            Ok(Layer::Conv3d {
+                out_channels: a.channels_like("out_channels", Dim::C)?,
+                kernel: (k[0], k[1], k[2]),
+                stride: a.or("stride", 1)?,
+                pad: a.non_negative("pad", 0)?,
+            })
+        }
+        "fc" => {
+            a.allow_only(&["out_features"])?;
+            Ok(Layer::FullyConnected {
+                out_features: a.channels_like("out_features", Dim::C)?,
+            })
+        }
+        "pool" => {
+            a.allow_only(&["pool", "kernel", "stride", "pad"])?;
+            let kernel = a.require("kernel")?;
+            Ok(Layer::Pool {
+                kind: a.pool_kind()?,
+                kernel,
+                stride: a.or("stride", kernel)?,
+                pad: a.non_negative("pad", 0)?,
+            })
+        }
+        "pool3d" => {
+            a.allow_only(&["pool", "kernel", "stride"])?;
+            let k = a.require_tuple("kernel", 3)?;
+            let s = a.tuple("stride", 3)?.unwrap_or_else(|| k.clone());
+            Ok(Layer::Pool3d {
+                kind: a.pool_kind()?,
+                kernel: (k[0], k[1], k[2]),
+                stride: (s[0], s[1], s[2]),
+            })
+        }
+        "global_avg_pool" => {
+            a.allow_only(&[])?;
+            Ok(Layer::GlobalAvgPool)
+        }
+        "relu" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Relu)
+        }
+        "sigmoid" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Sigmoid)
+        }
+        "softmax" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Softmax)
+        }
+        "lrn" => {
+            a.allow_only(&["local_size"])?;
+            let local_size = a.or("local_size", 5)?;
+            ensure!(
+                local_size % 2 == 1,
+                "{}: local_size = {local_size} must be odd (the GCONV lowering centres \
+                 the window over the channel axis)",
+                a.ctx()
+            );
+            Ok(Layer::Lrn { local_size })
+        }
+        "batch_norm" => {
+            a.allow_only(&[])?;
+            Ok(Layer::BatchNorm)
+        }
+        "scale" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Scale)
+        }
+        "dropout" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Dropout)
+        }
+        "concat" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Concat)
+        }
+        "eltwise" => {
+            a.allow_only(&[])?;
+            Ok(Layer::Eltwise)
+        }
+        "roi_pool" => {
+            a.allow_only(&["num_rois", "output_size"])?;
+            let out = a.require_tuple("output_size", 2)?;
+            Ok(Layer::RoiPool { num_rois: a.require("num_rois")?, output: (out[0], out[1]) })
+        }
+        "proposal" => {
+            a.allow_only(&["anchors"])?;
+            Ok(Layer::Proposal { anchors: a.require("anchors")? })
+        }
+        "primary_caps" => {
+            a.allow_only(&["caps_channels", "vec", "kernel", "stride"])?;
+            Ok(Layer::PrimaryCaps {
+                caps_channels: a.require("caps_channels")?,
+                vec: a.require("vec")?,
+                kernel: a.require("kernel")?,
+                stride: a.or("stride", 1)?,
+            })
+        }
+        "digit_caps" => {
+            a.allow_only(&["out_caps", "out_vec", "routing"])?;
+            Ok(Layer::DigitCaps {
+                out_caps: a.require("out_caps")?,
+                out_vec: a.require("out_vec")?,
+                routing: a.or("routing", 3)?,
+            })
+        }
+        other => bail!(
+            "layer {:?}: unknown kind {other:?} (known kinds: {})",
+            ls.name,
+            KINDS.join(", ")
+        ),
+    }
+}
+
+/// One conv/pool axis must fit its padded input.
+fn check_window(name: &str, axis: Dim, input: usize, kernel: usize, pad: usize) -> Result<()> {
+    ensure!(
+        input + 2 * pad >= kernel,
+        "layer {name:?}: {axis} kernel {kernel} exceeds the padded input \
+         ({input} + 2·{pad})"
+    );
+    Ok(())
+}
+
+/// Panic-free shape inference: validate every precondition
+/// [`Layer::infer_shape`] asserts, then return the inferred output
+/// shape. After this succeeds, `infer_shape` cannot panic.
+pub fn check_layer(name: &str, layer: &Layer, inputs: &[&Shape]) -> Result<Shape> {
+    let arity_one = || -> Result<&Shape> {
+        ensure!(
+            inputs.len() == 1,
+            "layer {name:?}: {} expects exactly one input, found {}",
+            layer.kind(),
+            inputs.len()
+        );
+        Ok(inputs[0])
+    };
+    match layer {
+        Layer::Input { shape } => {
+            ensure!(inputs.is_empty(), "layer {name:?}: input layers take no inputs");
+            ensure!(
+                shape.iter().all(|(_, n)| n > 0),
+                "layer {name:?}: every input extent must be positive"
+            );
+        }
+        Layer::Conv { out_channels, kernel, pad, groups, .. } => {
+            let s = arity_one()?;
+            let ic = s.extent(Dim::C);
+            ensure!(
+                ic % groups == 0,
+                "layer {name:?}: input channels {ic} not divisible by groups {groups}"
+            );
+            ensure!(
+                out_channels % groups == 0,
+                "layer {name:?}: out_channels {out_channels} not divisible by groups {groups}"
+            );
+            check_window(name, Dim::H, s.extent(Dim::H), kernel.0, *pad)?;
+            check_window(name, Dim::W, s.extent(Dim::W), kernel.1, *pad)?;
+        }
+        Layer::Conv3d { kernel, pad, .. } => {
+            let s = arity_one()?;
+            check_window(name, Dim::T, s.extent(Dim::T), kernel.0, *pad)?;
+            check_window(name, Dim::H, s.extent(Dim::H), kernel.1, *pad)?;
+            check_window(name, Dim::W, s.extent(Dim::W), kernel.2, *pad)?;
+        }
+        Layer::Pool { kernel, pad, .. } => {
+            let s = arity_one()?;
+            check_window(name, Dim::H, s.extent(Dim::H), *kernel, *pad)?;
+            check_window(name, Dim::W, s.extent(Dim::W), *kernel, *pad)?;
+        }
+        Layer::Pool3d { kernel, .. } => {
+            let s = arity_one()?;
+            check_window(name, Dim::T, s.extent(Dim::T), kernel.0, 0)?;
+            check_window(name, Dim::H, s.extent(Dim::H), kernel.1, 0)?;
+            check_window(name, Dim::W, s.extent(Dim::W), kernel.2, 0)?;
+        }
+        Layer::Concat => {
+            ensure!(!inputs.is_empty(), "layer {name:?}: concat needs at least one input");
+            let base = inputs[0];
+            for (i, s) in inputs.iter().enumerate() {
+                for d in [Dim::B, Dim::H, Dim::W, Dim::T, Dim::V] {
+                    ensure!(
+                        s.extent(d) == base.extent(d),
+                        "layer {name:?}: concat input #{i} disagrees on {d} \
+                         ({} vs {})",
+                        s.extent(d),
+                        base.extent(d)
+                    );
+                }
+            }
+        }
+        Layer::Eltwise => {
+            ensure!(!inputs.is_empty(), "layer {name:?}: eltwise needs at least one input");
+            for (i, s) in inputs.iter().enumerate() {
+                ensure!(
+                    **s == *inputs[0],
+                    "layer {name:?}: eltwise input #{i} shape {s} differs from {}",
+                    inputs[0]
+                );
+            }
+        }
+        Layer::PrimaryCaps { kernel, .. } => {
+            let s = arity_one()?;
+            check_window(name, Dim::H, s.extent(Dim::H), *kernel, 0)?;
+            check_window(name, Dim::W, s.extent(Dim::W), *kernel, 0)?;
+        }
+        // Element-wise and head layers only need the arity check.
+        _ => {
+            arity_one()?;
+        }
+    }
+    Ok(layer.infer_shape(inputs))
+}
+
+/// Unify the inferred output shape with the declared partial one.
+pub fn unify_output(name: &str, inferred: &Shape, declared: &[(Dim, usize)]) -> Result<()> {
+    for &(d, n) in declared {
+        ensure!(
+            inferred.extent(d) == n,
+            "layer {name:?}: declared output {d} = {n}, but inference produced {d} = {} \
+             (full inferred shape {inferred})",
+            inferred.extent(d)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::spec::ModelSpec;
+
+    fn layer_of(json: &str) -> Result<Layer> {
+        let doc = format!(
+            "{{\"format\": \"gconv-chain-model\", \"version\": 1, \"name\": \"t\", \
+             \"layers\": [{json}]}}"
+        );
+        let spec = ModelSpec::parse_json(&doc)?;
+        layer_from_spec(&spec.layers[0])
+    }
+
+    #[test]
+    fn conv_defaults_and_square_kernel() {
+        let l = layer_of(r#"{"name": "c", "kind": "conv", "out_channels": 8, "kernel": 3}"#)
+            .unwrap();
+        assert_eq!(
+            l,
+            Layer::Conv { out_channels: 8, kernel: (3, 3), stride: 1, pad: 0, groups: 1 }
+        );
+    }
+
+    #[test]
+    fn conv_out_channels_derive_from_declared_output() {
+        let l = layer_of(
+            r#"{"name": "c", "kind": "conv", "kernel": [5, 3], "output": {"C": 12}}"#,
+        )
+        .unwrap();
+        let want =
+            Layer::Conv { out_channels: 12, kernel: (5, 3), stride: 1, pad: 0, groups: 1 };
+        assert_eq!(l, want);
+    }
+
+    #[test]
+    fn missing_required_fields_are_named() {
+        let err = layer_of(r#"{"name": "c", "kind": "conv", "kernel": 3}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"c\"") && err.contains("out_channels"), "{err}");
+        let err = layer_of(r#"{"name": "p", "kind": "pool"}"#).unwrap_err().to_string();
+        assert!(err.contains("\"p\"") && err.contains("\"kernel\""), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_and_unknown_field_are_named() {
+        let err = layer_of(r#"{"name": "x", "kind": "swish"}"#).unwrap_err().to_string();
+        assert!(err.contains("unknown kind \"swish\""), "{err}");
+        let err = layer_of(r#"{"name": "c", "kind": "conv", "kernal": 3, "out_channels": 4}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown field \"kernal\""), "{err}");
+    }
+
+    #[test]
+    fn pool_stride_defaults_to_kernel() {
+        let l = layer_of(r#"{"name": "p", "kind": "pool", "kernel": 2}"#).unwrap();
+        assert_eq!(l, Layer::Pool { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 });
+        let l = layer_of(
+            r#"{"name": "p", "kind": "pool", "pool": "avg", "kernel": 3, "stride": 2, "pad": 1}"#,
+        )
+        .unwrap();
+        assert_eq!(l, Layer::Pool { kind: PoolKind::Avg, kernel: 3, stride: 2, pad: 1 });
+    }
+
+    #[test]
+    fn shape_on_non_input_layers_is_rejected() {
+        let err = layer_of(
+            r#"{"name": "c", "kind": "conv", "out_channels": 4, "kernel": 3,
+                "shape": [["C", 16]]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("\"c\"") && err.contains("input layers"), "{err}");
+    }
+
+    #[test]
+    fn lrn_rejects_even_windows() {
+        let err = layer_of(r#"{"name": "n", "kind": "lrn", "local_size": 4}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("odd"), "{err}");
+    }
+
+    #[test]
+    fn check_layer_reports_oversized_kernels() {
+        let conv = Layer::Conv { out_channels: 4, kernel: (9, 9), stride: 1, pad: 0, groups: 1 };
+        let s = Shape::bchw(1, 3, 8, 8);
+        let err = check_layer("c1", &conv, &[&s]).unwrap_err().to_string();
+        assert!(err.contains("\"c1\"") && err.contains("kernel 9"), "{err}");
+    }
+
+    #[test]
+    fn check_layer_reports_group_mismatches() {
+        let conv = Layer::Conv { out_channels: 4, kernel: (3, 3), stride: 1, pad: 1, groups: 3 };
+        let s = Shape::bchw(1, 4, 8, 8);
+        let err = check_layer("c1", &conv, &[&s]).unwrap_err().to_string();
+        assert!(err.contains("not divisible by groups 3"), "{err}");
+    }
+
+    #[test]
+    fn unify_reports_dim_and_values() {
+        let inferred = Shape::bchw(1, 16, 8, 8);
+        let err = unify_output("c1", &inferred, &[(Dim::C, 12)]).unwrap_err().to_string();
+        assert!(err.contains("declared output C = 12") && err.contains("C = 16"), "{err}");
+        unify_output("c1", &inferred, &[(Dim::C, 16), (Dim::H, 8)]).unwrap();
+    }
+}

@@ -1,0 +1,119 @@
+//! Model frontend: declarative spec files → executable networks.
+//!
+//! The paper's whole-life-cost argument (§2, §6) rests on the
+//! *generality* of the GCONV Chain: one accelerator stack should absorb
+//! "all kinds of existing and emerging layers" without per-network
+//! engineering. This module makes that real for the repo: instead of a
+//! hand-written Rust builder per network, any CNN can be described as a
+//! versioned JSON spec file and lowered through the unchanged
+//! `lower_network` → `ChainExec` / `Session` path.
+//!
+//! * [`json`] — a small self-contained JSON reader/writer (no parsing
+//!   crates exist in the offline dependency set).
+//! * [`spec`] — the versioned spec format ([`ModelSpec`]): layer list,
+//!   attributes, optional declared partial outputs.
+//! * [`infer`] — analyser-style parameter + shape inference:
+//!   defaults, derivation of omitted attributes from declared facts,
+//!   panic-free shape validation, and declared-vs-inferred unification
+//!   with layer-name + field context on every failure.
+//! * [`build`] — spec → [`crate::ir::Network`] construction (with an
+//!   optional batch override for the serving engine).
+//! * [`export`] — network → canonical spec. The seven benchmark
+//!   builders are exported into bundled files under `rust/specs/`, the
+//!   round-trip conformance oracle.
+//!
+//! Entry points: [`load_spec`] / [`ModelSpec::parse_json`] to read,
+//! [`build_network`] / [`build_with_batch`] to construct,
+//! [`export_network`] to write, [`discover_specs`] to enumerate the
+//! bundled spec directory (`rust/specs/`, overridable via
+//! `GCONV_SPEC_DIR`). `networks::resolve` and
+//! `exec::serve::Engine::register_spec` wire specs into the CLI and
+//! the serving engine.
+
+pub mod build;
+pub mod export;
+pub mod infer;
+pub mod json;
+pub mod spec;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+pub use build::{build_network, build_with_batch};
+pub use export::{export_json, export_network};
+pub use spec::{Attr, LayerSpec, ModelSpec};
+
+/// Directory holding the bundled spec files. Resolution order: the
+/// `GCONV_SPEC_DIR` environment variable, `rust/specs` (repo root as
+/// cwd), `specs` (package root as cwd — what cargo test/bench use), and
+/// finally the compile-time package path (works wherever the source
+/// tree still exists).
+pub fn spec_dir() -> PathBuf {
+    if let Some(dir) = std::env::var_os("GCONV_SPEC_DIR") {
+        return PathBuf::from(dir);
+    }
+    for candidate in ["rust/specs", "specs"] {
+        let p = PathBuf::from(candidate);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("specs")
+}
+
+/// Bundled `.json` spec files, sorted by file name (empty when the spec
+/// directory does not exist).
+pub fn discover_specs() -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(spec_dir()) else {
+        return Vec::new();
+    };
+    let mut files: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    files
+}
+
+/// Load one spec file.
+pub fn load_spec(path: &Path) -> Result<ModelSpec> {
+    ModelSpec::load(path)
+}
+
+/// Resolve a user-supplied name to a spec file: a direct path to an
+/// existing file wins, else `<spec_dir>/<name>.json`. The single
+/// lookup rule every entry point (CLI run/serve, `networks::resolve`)
+/// shares.
+pub fn find_spec(name: &str) -> Option<PathBuf> {
+    let direct = PathBuf::from(name);
+    if direct.is_file() {
+        return Some(direct);
+    }
+    let bundled = spec_dir().join(format!("{name}.json"));
+    bundled.is_file().then_some(bundled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_dir_resolves_to_an_existing_directory() {
+        // In-tree runs always find the bundled directory via one of the
+        // fallbacks (cargo sets cwd to the workspace or package root).
+        assert!(spec_dir().is_dir(), "spec dir {:?} missing", spec_dir());
+    }
+
+    #[test]
+    fn discovery_finds_the_bundled_benchmark_specs() {
+        let stems: Vec<String> = discover_specs()
+            .iter()
+            .filter_map(|p| p.file_stem().map(|s| s.to_string_lossy().into_owned()))
+            .collect();
+        for code in crate::networks::BENCHMARK_CODES {
+            assert!(stems.iter().any(|s| s == code), "no bundled spec for {code}: {stems:?}");
+        }
+    }
+}

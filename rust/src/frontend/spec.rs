@@ -1,0 +1,382 @@
+//! The versioned model-spec format.
+//!
+//! A spec file is a JSON document describing a CNN as a list of layers:
+//!
+//! ```json
+//! {
+//!   "format": "gconv-chain-model",
+//!   "version": 1,
+//!   "name": "TinyCNN",
+//!   "layers": [
+//!     {"name": "data", "kind": "input", "inputs": [],
+//!      "shape": [["B", 1], ["C", 3], ["H", 16], ["W", 16]]},
+//!     {"name": "conv1", "kind": "conv", "kernel": 3, "pad": 1,
+//!      "output": {"C": 8}},
+//!     {"name": "relu1", "kind": "relu"}
+//!   ]
+//! }
+//! ```
+//!
+//! Reserved layer keys are `name`, `kind`, `inputs`, `shape` and
+//! `output`; every other key is a layer attribute (integer, list of
+//! integers, or string). `inputs` may be omitted — the layer then
+//! consumes the previous layer, so linear chains need no explicit
+//! wiring. `output` declares a *partial* output shape that the
+//! [inference pass](super::infer) unifies with the propagated shapes:
+//! derivable attributes (a conv's `out_channels`, an `fc`'s
+//! `out_features`) may be omitted when `output` pins the corresponding
+//! dimension, and any declared dimension that contradicts the inferred
+//! shape is reported with layer-name + field context.
+//!
+//! This module is the data model + (de)serialization; shape/parameter
+//! inference lives in [`super::infer`] and graph construction in
+//! [`super::build`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::json::{parse, Json};
+use crate::ir::Dim;
+
+/// Document format marker every spec file must carry.
+pub const FORMAT: &str = "gconv-chain-model";
+
+/// The spec version this build reads and writes.
+pub const VERSION: i64 = 1;
+
+/// One layer attribute value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Attr {
+    /// An integer, e.g. `"stride": 2`.
+    Int(i64),
+    /// A list of integers, e.g. `"kernel": [3, 3]`.
+    List(Vec<i64>),
+    /// A string, e.g. `"pool": "max"`.
+    Str(String),
+}
+
+impl fmt::Display for Attr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Attr::Int(n) => write!(f, "{n}"),
+            Attr::List(xs) => write!(f, "{xs:?}"),
+            Attr::Str(s) => write!(f, "{s:?}"),
+        }
+    }
+}
+
+/// One layer of a model spec.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerSpec {
+    /// Unique layer name (graph node id and weight-tensor key).
+    pub name: String,
+    /// Layer kind, e.g. `"conv"` — see [`super::infer`] for the set.
+    pub kind: String,
+    /// Producer layer names. `None` = the previous layer in the list.
+    pub inputs: Option<Vec<String>>,
+    /// Input-layer shape as ordered `(dim, extent)` pairs (empty for
+    /// every other kind).
+    pub shape: Vec<(Dim, usize)>,
+    /// Declared partial output shape, unified against the inferred one.
+    pub output: Vec<(Dim, usize)>,
+    /// Kind-specific attributes (alphabetical when serialized).
+    pub attrs: BTreeMap<String, Attr>,
+}
+
+impl LayerSpec {
+    /// New layer with just a name and kind.
+    pub fn new(name: &str, kind: &str) -> Self {
+        LayerSpec { name: name.to_string(), kind: kind.to_string(), ..Default::default() }
+    }
+
+    /// Canonical one-line JSON rendering of this layer.
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("kind".into(), Json::Str(self.kind.clone())),
+        ];
+        if let Some(inputs) = &self.inputs {
+            let items = inputs.iter().map(|s| Json::Str(s.clone())).collect();
+            pairs.push(("inputs".into(), Json::Arr(items)));
+        }
+        if !self.shape.is_empty() {
+            let items = self
+                .shape
+                .iter()
+                .map(|&(d, n)| {
+                    Json::Arr(vec![Json::Str(d.name().to_string()), Json::Num(n as f64)])
+                })
+                .collect();
+            pairs.push(("shape".into(), Json::Arr(items)));
+        }
+        for (key, attr) in &self.attrs {
+            let v = match attr {
+                Attr::Int(n) => Json::Num(*n as f64),
+                Attr::List(xs) => Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect()),
+                Attr::Str(s) => Json::Str(s.clone()),
+            };
+            pairs.push((key.clone(), v));
+        }
+        if !self.output.is_empty() {
+            let items = self
+                .output
+                .iter()
+                .map(|&(d, n)| (d.name().to_string(), Json::Num(n as f64)))
+                .collect();
+            pairs.push(("output".into(), Json::Obj(items)));
+        }
+        Json::Obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let Some(members) = j.as_obj() else {
+            bail!("each layer must be a JSON object, found {}", j.kind());
+        };
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("layer is missing a \"name\" string")?
+            .to_string();
+        ensure!(!name.is_empty(), "layer has an empty \"name\"");
+        let lctx = |msg: String| format!("layer {name:?}: {msg}");
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .with_context(|| lctx("missing a \"kind\" string".into()))?
+            .to_string();
+        let mut spec = LayerSpec::new(&name, &kind);
+        for (key, val) in members {
+            match key.as_str() {
+                "name" | "kind" => {}
+                "inputs" => {
+                    let items = val
+                        .as_arr()
+                        .with_context(|| lctx("\"inputs\" must be an array of strings".into()))?;
+                    let mut inputs = Vec::with_capacity(items.len());
+                    for item in items {
+                        let s = item.as_str().with_context(|| {
+                            lctx("\"inputs\" must be an array of strings".into())
+                        })?;
+                        inputs.push(s.to_string());
+                    }
+                    spec.inputs = Some(inputs);
+                }
+                "shape" => spec.shape = parse_shape_pairs(&name, val)?,
+                "output" => spec.output = parse_output_decl(&name, val)?,
+                attr_key => {
+                    let attr = parse_attr(val).with_context(|| {
+                        lctx(format!(
+                            "field {attr_key:?} must be an integer, a list of integers, \
+                             or a string"
+                        ))
+                    })?;
+                    spec.attrs.insert(attr_key.to_string(), attr);
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// A whole model spec: name + layer list (topological order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelSpec {
+    /// Model name — doubles as the serving code under
+    /// `Engine::register_spec`.
+    pub name: String,
+    /// Layers in topological order (producers before consumers).
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Parse a spec from JSON text.
+    pub fn parse_json(text: &str) -> Result<ModelSpec> {
+        let doc = parse(text).context("invalid JSON")?;
+        let format = doc.get("format").and_then(Json::as_str).unwrap_or("");
+        ensure!(
+            format == FORMAT,
+            "not a model spec: expected \"format\": {FORMAT:?}, found {format:?}"
+        );
+        let version = doc.get("version").and_then(Json::as_i64).unwrap_or(0);
+        ensure!(
+            version == VERSION,
+            "unsupported spec version {version} (this build reads version {VERSION})"
+        );
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .context("spec is missing a \"name\" string")?
+            .to_string();
+        let layers = doc
+            .get("layers")
+            .and_then(Json::as_arr)
+            .context("spec is missing a \"layers\" array")?;
+        let mut spec = ModelSpec { name, layers: Vec::with_capacity(layers.len()) };
+        for layer in layers {
+            spec.layers.push(LayerSpec::from_json(layer)?);
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec file (with the path in error context).
+    pub fn load(path: &Path) -> Result<ModelSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec file {}", path.display()))?;
+        ModelSpec::parse_json(&text)
+            .with_context(|| format!("parsing spec file {}", path.display()))
+    }
+
+    /// Canonical JSON rendering: document header on separate lines, one
+    /// compact line per layer. [`ModelSpec::parse_json`] of the result
+    /// is equal to `self`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"format\": \"{FORMAT}\",\n"));
+        out.push_str(&format!("  \"version\": {VERSION},\n"));
+        let mut name = String::new();
+        Json::Str(self.name.clone()).write_compact(&mut name);
+        out.push_str(&format!("  \"name\": {name},\n"));
+        out.push_str("  \"layers\": [\n");
+        for (i, layer) in self.layers.iter().enumerate() {
+            out.push_str("    ");
+            layer.to_json().write_compact(&mut out);
+            out.push_str(if i + 1 < self.layers.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Parse a dimension name (`"B"`, `"C"`, `"H"`, `"W"`, `"T"`, `"V"`).
+pub fn parse_dim(name: &str, s: &str) -> Result<Dim> {
+    match s {
+        "B" => Ok(Dim::B),
+        "C" => Ok(Dim::C),
+        "H" => Ok(Dim::H),
+        "W" => Ok(Dim::W),
+        "T" => Ok(Dim::T),
+        "V" => Ok(Dim::V),
+        other => bail!("layer {name:?}: unknown dimension {other:?} (expected B/C/H/W/T/V)"),
+    }
+}
+
+/// `"shape": [["B", 32], ["C", 3], …]` — ordered, positive, unique.
+fn parse_shape_pairs(name: &str, val: &Json) -> Result<Vec<(Dim, usize)>> {
+    let items = val
+        .as_arr()
+        .with_context(|| format!("layer {name:?}: \"shape\" must be a [[dim, extent], …] array"))?;
+    let mut pairs = Vec::with_capacity(items.len());
+    for item in items {
+        let pair = item.as_arr().unwrap_or(&[]);
+        let (Some(d), Some(n)) = (
+            pair.first().and_then(Json::as_str),
+            pair.get(1).and_then(Json::as_i64),
+        ) else {
+            bail!("layer {name:?}: each \"shape\" entry must be a [dim, extent] pair");
+        };
+        let dim = parse_dim(name, d)?;
+        ensure!(n > 0, "layer {name:?}: shape extent {dim} = {n} must be positive");
+        ensure!(
+            pairs.iter().all(|&(x, _)| x != dim),
+            "layer {name:?}: duplicate shape dimension {dim}"
+        );
+        pairs.push((dim, n as usize));
+    }
+    Ok(pairs)
+}
+
+/// `"output": {"C": 96, "H": 55}` — a partial declared output shape.
+fn parse_output_decl(name: &str, val: &Json) -> Result<Vec<(Dim, usize)>> {
+    let members = val
+        .as_obj()
+        .with_context(|| format!("layer {name:?}: \"output\" must be a {{dim: extent}} object"))?;
+    let mut pairs = Vec::with_capacity(members.len());
+    for (key, v) in members {
+        let dim = parse_dim(name, key)?;
+        let n = v.as_i64().unwrap_or(0);
+        ensure!(n > 0, "layer {name:?}: declared output {dim} must be a positive integer");
+        pairs.push((dim, n as usize));
+    }
+    Ok(pairs)
+}
+
+fn parse_attr(val: &Json) -> Result<Attr> {
+    match val {
+        Json::Num(_) => Ok(Attr::Int(val.as_i64().context("not an integer")?)),
+        Json::Str(s) => Ok(Attr::Str(s.clone())),
+        Json::Arr(items) => {
+            let mut xs = Vec::with_capacity(items.len());
+            for item in items {
+                xs.push(item.as_i64().context("not an integer")?);
+            }
+            Ok(Attr::List(xs))
+        }
+        other => bail!("unsupported value type {}", other.kind()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"{
+      "format": "gconv-chain-model",
+      "version": 1,
+      "name": "t",
+      "layers": [
+        {"name": "data", "kind": "input", "inputs": [],
+         "shape": [["B", 2], ["C", 3], ["H", 8], ["W", 8]]},
+        {"name": "conv1", "kind": "conv", "kernel": [3, 3], "pad": 1, "output": {"C": 4}},
+        {"name": "relu1", "kind": "relu"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_layers_defaults_and_decls() {
+        let spec = ModelSpec::parse_json(TINY).unwrap();
+        assert_eq!(spec.name, "t");
+        assert_eq!(spec.layers.len(), 3);
+        assert_eq!(spec.layers[0].inputs, Some(vec![]));
+        assert_eq!(spec.layers[0].shape[1], (Dim::C, 3));
+        assert_eq!(spec.layers[1].inputs, None, "omitted inputs default to previous");
+        assert_eq!(spec.layers[1].attrs["kernel"], Attr::List(vec![3, 3]));
+        assert_eq!(spec.layers[1].output, vec![(Dim::C, 4)]);
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let spec = ModelSpec::parse_json(TINY).unwrap();
+        let again = ModelSpec::parse_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, again);
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let bad = TINY.replace("\"version\": 1", "\"version\": 2");
+        let err = ModelSpec::parse_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "{err}");
+        let bad = TINY.replace("gconv-chain-model", "something-else");
+        assert!(ModelSpec::parse_json(&bad).is_err());
+    }
+
+    #[test]
+    fn shape_errors_name_the_layer() {
+        let bad = TINY.replace("[\"B\", 2]", "[\"B\", 0]");
+        let err = ModelSpec::parse_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("\"data\"") && err.contains("positive"), "{err}");
+        let bad = TINY.replace("[\"H\", 8]", "[\"Q\", 8]");
+        let err = ModelSpec::parse_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown dimension"), "{err}");
+    }
+
+    #[test]
+    fn attr_type_errors_are_targeted() {
+        let bad = TINY.replace("\"pad\": 1", "\"pad\": true");
+        let err = format!("{:#}", ModelSpec::parse_json(&bad).unwrap_err());
+        assert!(err.contains("\"conv1\"") && err.contains("\"pad\""), "{err}");
+    }
+}

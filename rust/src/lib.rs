@@ -14,7 +14,14 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`ir`] — layer-level network IR with shape inference.
-//! * [`networks`] — the seven benchmark CNNs of the paper.
+//! * [`networks`] — the seven benchmark CNNs of the paper, plus
+//!   spec-backed resolution (`networks::resolve`) so imported models
+//!   and builder networks share every downstream path.
+//! * [`frontend`] — model frontend: versioned JSON spec files with
+//!   analyser-style shape/parameter inference (`frontend::spec` /
+//!   `infer` / `build`), a network exporter (`frontend::export`) whose
+//!   bundled `rust/specs/` files are the round-trip conformance
+//!   oracle, and a self-contained JSON layer (`frontend::json`).
 //! * [`gconv`] — the GCONV operation model and layer→GCONV lowering,
 //!   including the special-execution entries (max-pool BP argmax
 //!   routing, concatenation) and composed scalar pipelines written by
@@ -47,6 +54,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod energy;
 pub mod exec;
+pub mod frontend;
 pub mod gconv;
 pub mod ir;
 pub mod isa;

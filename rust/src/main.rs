@@ -1,11 +1,16 @@
 //! `gconv-chain` CLI — compile networks to GCONV chains, simulate them
 //! on the Table-4 accelerators, and run real chain numerics on the
-//! native execution engine.
+//! native execution engine. Networks come from the seven benchmark
+//! builders *or* from model spec files (`--model path/to/spec.json`,
+//! or any bundled spec name under `rust/specs/`).
 
+use anyhow::{Context, Result};
 use gconv_chain::accel::configs::{by_code, ACCEL_CODES};
+use gconv_chain::frontend;
 use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::ir::Network;
 use gconv_chain::mapping::fuse_executable;
-use gconv_chain::networks::{benchmark, BENCHMARK_CODES};
+use gconv_chain::networks::{resolve, resolve_with_batch, BENCHMARK_CODES};
 use gconv_chain::report::{print_table, r2};
 use gconv_chain::sim::{simulate, ExecMode, SimOptions};
 
@@ -19,8 +24,11 @@ USAGE:
     gconv-chain run [NET] [SAMPLES] [--fuse] execute chain numerics (native)
     gconv-chain serve [NET] [REQUESTS] [--fuse] [--max-batch N]
                                              bind-once/run-many serving demo
+    gconv-chain specs                        list + validate bundled model specs
 
 OPTIONS:
+    --model PATH   import the network from a model spec file instead of
+                   a benchmark code (works for chain/simulate/run/serve)
     --threads N    run on a scoped rayon pool of N workers (default:
                    one per core) — pin for reproducible bench numbers
     --fuse         rewrite the chain with executable operation fusion
@@ -28,34 +36,91 @@ OPTIONS:
     --max-batch N  serve: coalesce up to N single-sample requests into
                    one micro-batch session run (default 8)
 
-    NET   = AN GLN DN MN ZFFR C3D CapNN
+    NET   = AN GLN DN MN ZFFR C3D CapNN, a bundled spec name, or (with
+            --model) a spec file path
     ACCEL = TPU DNNW ER EP NLR";
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let threads = gconv_chain::args::take_usize(&mut args, "--threads");
-    let dispatch = move || match args.first().map(String::as_str) {
-        Some("chain") => cmd_chain(&args[1..]),
-        Some("simulate") => cmd_simulate(&args[1..]),
-        Some("matrix") => cmd_matrix(),
-        Some("run") => cmd_run(&args[1..]),
-        Some("serve") => cmd_serve(&args[1..]),
-        _ => println!("{USAGE}"),
+    let dispatch = move || -> Result<()> {
+        match args.first().map(String::as_str) {
+            Some("chain") => cmd_chain(&args[1..]),
+            Some("simulate") => cmd_simulate(&args[1..]),
+            Some("matrix") => cmd_matrix(),
+            Some("run") => cmd_run(&args[1..]),
+            Some("serve") => cmd_serve(&args[1..]),
+            Some("specs") => cmd_specs(),
+            _ => {
+                println!("{USAGE}");
+                Ok(())
+            }
+        }
     };
-    if let Err(e) = gconv_chain::exec::with_threads(threads, dispatch) {
-        eprintln!("failed to build the thread pool: {e:#}");
-        std::process::exit(2);
+    match gconv_chain::exec::with_threads(threads, dispatch) {
+        Err(e) => {
+            eprintln!("failed to build the thread pool: {e:#}");
+            std::process::exit(2);
+        }
+        Ok(Err(e)) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+        Ok(Ok(())) => {}
     }
 }
 
-fn cmd_chain(args: &[String]) {
-    let Some(net_code) = args.first() else {
-        println!("{USAGE}");
-        return;
+/// The numeric positional left after NET/`--model` consumption
+/// (SAMPLES / REQUESTS). A leftover non-numeric argument is an error
+/// rather than a silently-applied default.
+fn count_arg(args: &[String], default: u64, what: &str) -> Result<u64> {
+    match args.first() {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("unexpected argument {s:?} (expected a {what} count)")),
+    }
+}
+
+/// The spec a `--model PATH` flag names, loaded (but not built).
+/// `--model` with a missing value is an error, not a silent fallback
+/// to the default network.
+fn take_spec(args: &mut Vec<String>) -> Result<Option<frontend::ModelSpec>> {
+    let taken = gconv_chain::args::take_required_string(args, "--model")
+        .map_err(|e| anyhow::anyhow!("{e} (a spec-file path)"))?;
+    match taken {
+        Some(path) => Ok(Some(frontend::load_spec(std::path::Path::new(&path))?)),
+        None => Ok(None),
+    }
+}
+
+/// The network a `--model PATH` flag names, built at the spec's baked
+/// batch size. `None` when the flag is absent.
+fn take_model(args: &mut Vec<String>) -> Result<Option<Network>> {
+    match take_spec(args)? {
+        Some(spec) => {
+            let name = spec.name.clone();
+            let net = frontend::build_network(&spec)
+                .with_context(|| format!("building network {name:?} from --model spec"))?;
+            Ok(Some(net))
+        }
+        None => Ok(None),
+    }
+}
+
+fn cmd_chain(args: &[String]) -> Result<()> {
+    let mut args = args.to_vec();
+    let model = take_model(&mut args)?;
+    let net = match (model, args.first()) {
+        (Some(net), _) => net,
+        (None, Some(code)) => resolve(code)?,
+        (None, None) => {
+            println!("{USAGE}");
+            return Ok(());
+        }
     };
     let mode =
         if args.iter().any(|a| a == "--inference") { Mode::Inference } else { Mode::Training };
-    let net = benchmark(net_code);
     let mut chain = lower_network(&net, mode);
     if args.iter().any(|a| a == "--fuse") {
         let stats = fuse_executable(&mut chain);
@@ -73,15 +138,30 @@ fn cmd_chain(args: &[String]) {
         chain.total_work() as f64,
         100.0 * n as f64 / (t + n) as f64
     );
+    Ok(())
 }
 
-fn cmd_simulate(args: &[String]) {
-    let (Some(net_code), Some(accel_code)) = (args.first(), args.get(1)) else {
-        println!("{USAGE}");
-        return;
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let mut args = args.to_vec();
+    let model = take_model(&mut args)?;
+    // With --model the accelerator is the only positional argument;
+    // otherwise the layout is `simulate <NET> <ACCEL>`.
+    let (net, label, accel_arg) = match (model, args.first()) {
+        (Some(net), accel) => {
+            let label = net.name.clone();
+            (net, label, accel.cloned())
+        }
+        (None, Some(code)) => (resolve(code)?, code.clone(), args.get(1).cloned()),
+        (None, None) => {
+            println!("{USAGE}");
+            return Ok(());
+        }
     };
-    let net = benchmark(net_code);
-    let accel = by_code(accel_code);
+    let Some(accel_code) = accel_arg else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let accel = by_code(&accel_code);
     let rows: Vec<Vec<String>> = [ExecMode::Baseline, ExecMode::GconvChain]
         .into_iter()
         .map(|mode| {
@@ -97,16 +177,17 @@ fn cmd_simulate(args: &[String]) {
         })
         .collect();
     print_table(
-        &format!("{net_code} on {accel_code} (training step)"),
+        &format!("{label} on {accel_code} (training step)"),
         &["mode", "ms", "GB words", "offload words", "energy", "util"],
         &rows,
     );
+    Ok(())
 }
 
-fn cmd_matrix() {
+fn cmd_matrix() -> Result<()> {
     let mut rows = Vec::new();
     for code in BENCHMARK_CODES {
-        let net = benchmark(code);
+        let net = resolve(code)?;
         let mut row = vec![code.to_string()];
         for acode in ACCEL_CODES {
             let accel = by_code(acode);
@@ -122,22 +203,31 @@ fn cmd_matrix() {
         &["net", "TPU", "DNNW", "ER", "EP", "NLR"],
         &rows,
     );
+    Ok(())
 }
 
-fn cmd_run(args: &[String]) {
+fn cmd_run(args: &[String]) -> Result<()> {
     use gconv_chain::coordinator::{ChainExecutor, Request};
     use gconv_chain::exec::bench::input_spec;
     use gconv_chain::networks::mobilenet_block;
 
     let mut args = args.to_vec();
     let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
+    let model = take_model(&mut args)?;
     // Default workload: one MobileNet block (Fig. 1(a)); any benchmark
-    // code (AN, MN, …) runs its full inference chain instead.
-    let net = match args.first().map(String::as_str) {
-        None => mobilenet_block(8, 16, 14),
-        Some(code) => benchmark(code),
+    // code, bundled spec name or `--model` spec file runs its full
+    // inference chain instead. The NET positional is consumed so
+    // SAMPLES is always the next argument.
+    let code = args.first().cloned();
+    let net = match (model, code) {
+        (Some(net), _) => net,
+        (None, None) => mobilenet_block(8, 16, 14),
+        (None, Some(code)) => {
+            args.remove(0);
+            resolve(&code)?
+        }
     };
-    let total: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let total = count_arg(&args, 64, "SAMPLES")?;
     let mut chain = lower_network(&net, Mode::Inference);
     if fuse {
         let stats = fuse_executable(&mut chain);
@@ -148,19 +238,19 @@ fn cmd_run(args: &[String]) {
             stats.length_reduction() * 100.0
         );
     }
-    let (input_name, dims) = input_spec(&net).expect("network has no input layer");
-    let mut exec = ChainExecutor::native(chain, &input_name, &dims).expect("lowering failed");
+    let (input_name, dims) = input_spec(&net)?;
+    let mut exec = ChainExecutor::native(chain, &input_name, &dims).context("lowering failed")?;
     let sample_len = exec.sample_len();
     println!("executing {} on the {} backend…", net.name, exec.backend_name());
 
     let mut rng = gconv_chain::prop::Rng::new(42);
     let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f64() as f32 - 0.5).collect() };
     for id in 0..total {
-        exec.submit(Request { id, data: rand(sample_len) }).unwrap();
+        exec.submit(Request { id, data: rand(sample_len) })?;
     }
     let mut served = 0;
     while served < total as usize {
-        let out = exec.step(true).unwrap();
+        let out = exec.step(true)?;
         served += out.len();
     }
     let s = exec.stats();
@@ -171,11 +261,11 @@ fn cmd_run(args: &[String]) {
         s.throughput(),
         s.mean_latency_s * 1e3
     );
+    Ok(())
 }
 
-fn cmd_serve(args: &[String]) {
+fn cmd_serve(args: &[String]) -> Result<()> {
     use gconv_chain::exec::serve::Engine;
-    use gconv_chain::exec::Tensor;
 
     let mut args = args.to_vec();
     let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
@@ -183,26 +273,66 @@ fn cmd_serve(args: &[String]) {
         0 => 8,
         n => n,
     };
-    let code = args.first().map(String::as_str).unwrap_or("MN").to_string();
-    let total: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
+    let mut engine = Engine::new(max_batch).with_fuse(fuse);
+    // The served network: a `--model` spec, a benchmark code, a spec
+    // file path, or a bundled spec stem (default MN). Specs register
+    // with the engine so it can relower at every micro-batch size;
+    // requests go to the spec's model name.
+    let spec = match take_spec(&mut args)? {
+        Some(spec) => spec,
+        None => {
+            let code = match args.first().cloned() {
+                Some(c) => {
+                    args.remove(0);
+                    c
+                }
+                None => "MN".to_string(),
+            };
+            if BENCHMARK_CODES.contains(&code.as_str()) {
+                let net1 = resolve_with_batch(&code, Some(1))?;
+                serve_requests(&mut engine, args, code, net1, max_batch, fuse)?;
+                return Ok(());
+            }
+            let Some(path) = frontend::find_spec(&code) else {
+                return Err(gconv_chain::networks::unknown_network(&code));
+            };
+            frontend::load_spec(&path)?
+        }
+    };
+    let net1 = frontend::build_with_batch(&spec, Some(1))
+        .with_context(|| format!("building network {:?}", spec.name))?;
+    let code = engine.register_spec(spec)?;
+    serve_requests(&mut engine, args, code, net1, max_batch, fuse)?;
+    Ok(())
+}
 
-    let net = benchmark(&code);
-    let (input_name, dims) = gconv_chain::exec::bench::input_spec(&net)
-        .expect("network has no input layer");
+/// Submit and drain `REQUESTS` single-sample requests for `code`
+/// through the engine, then print the latency/throughput summary.
+fn serve_requests(
+    engine: &mut gconv_chain::exec::serve::Engine,
+    args: Vec<String>,
+    code: String,
+    net1: Network,
+    max_batch: usize,
+    fuse: bool,
+) -> Result<()> {
+    use gconv_chain::exec::Tensor;
+    let total = count_arg(&args, 32, "REQUESTS")?.max(1);
+
+    let (input_name, dims) = gconv_chain::exec::bench::input_spec(&net1)?;
     let sample_len: usize = dims[1..].iter().product();
     println!(
         "serving {code} ({input_name}, {sample_len} values/sample): {total} requests, \
          micro-batches of up to {max_batch}, fuse={fuse}…"
     );
 
-    let mut engine = Engine::new(max_batch).with_fuse(fuse);
     let mut sample_dims = dims.clone();
     sample_dims[0] = 1;
     for id in 0..total {
         let x = Tensor::rand(&sample_dims, 0xD15_C0 ^ id, 1.0);
-        engine.submit(&code, id, x.into_data()).expect("submit failed");
+        engine.submit(&code, id, x.into_data())?;
     }
-    let responses = engine.drain().expect("serving failed");
+    let responses = engine.drain()?;
     let s = engine.stats();
     let mut latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
     latencies.sort_by(f64::total_cmp);
@@ -219,4 +349,45 @@ fn cmd_serve(args: &[String]) {
         pct(50) * 1e3,
         pct(99) * 1e3
     );
+    Ok(())
+}
+
+/// List every bundled spec file, import + lower each one, and fail
+/// (non-zero exit) if any is invalid — the CI spec-validation gate.
+fn cmd_specs() -> Result<()> {
+    let dir = frontend::spec_dir();
+    let files = frontend::discover_specs();
+    if files.is_empty() {
+        println!("no .json spec files found under {}", dir.display());
+        return Ok(());
+    }
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut failures = 0usize;
+    for path in &files {
+        let stem = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        match frontend::load_spec(path).and_then(|s| frontend::build_network(&s)) {
+            Ok(net) => {
+                let chain = lower_network(&net, Mode::Inference);
+                rows.push(vec![
+                    stem,
+                    net.name.clone(),
+                    net.len().to_string(),
+                    chain.len().to_string(),
+                    format!("{:.3e}", chain.total_work() as f64),
+                ]);
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("{}: {e:#}", path.display());
+                rows.push(vec![stem, "IMPORT FAILED".into(), "-".into(), "-".into(), "-".into()]);
+            }
+        }
+    }
+    print_table(
+        &format!("Bundled model specs ({})", dir.display()),
+        &["spec", "network", "layers", "chain ops", "FP work"],
+        &rows,
+    );
+    anyhow::ensure!(failures == 0, "{failures} spec file(s) failed to import");
+    Ok(())
 }

@@ -25,27 +25,47 @@ pub use googlenet::googlenet;
 pub use mobilenet::mobilenet;
 pub use zffr::zf_faster_rcnn;
 
+use anyhow::{anyhow, Context, Result};
+
+use crate::frontend;
 use crate::ir::Network;
 
 /// Short paper codes for the benchmarks, in Table 1(a) order.
 pub const BENCHMARK_CODES: [&str; 7] = ["AN", "GLN", "DN", "MN", "ZFFR", "C3D", "CapNN"];
 
-/// Build a benchmark by its paper code with the paper's batch sizes.
-pub fn benchmark(code: &str) -> Network {
-    let batch = match code {
+/// The paper's mini-batch size for a benchmark code (Fig. 9 note: 32
+/// for the 2-D classification CNNs, smaller for the memory-heavy ones).
+pub fn paper_batch(code: &str) -> usize {
+    match code {
         "ZFFR" => 1,
         "C3D" => 8,
         "CapNN" => 16,
         _ => 32,
-    };
-    benchmark_with_batch(code, batch)
+    }
+}
+
+/// Build a benchmark by its paper code with the paper's batch sizes.
+pub fn benchmark(code: &str) -> Network {
+    try_benchmark(code).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`benchmark`], returning a named error for unknown codes.
+pub fn try_benchmark(code: &str) -> Result<Network> {
+    try_benchmark_with_batch(code, paper_batch(code))
 }
 
 /// Build a benchmark by its paper code at an explicit mini-batch size
 /// (native-execution smokes and benches run the full topologies at
 /// batch 1 to keep wall-clock sane).
 pub fn benchmark_with_batch(code: &str, batch: usize) -> Network {
-    match code {
+    try_benchmark_with_batch(code, batch).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`benchmark_with_batch`], returning a named error for unknown
+/// codes: the error lists the benchmark codes and the discovered
+/// bundled spec files instead of panicking on a typo.
+pub fn try_benchmark_with_batch(code: &str, batch: usize) -> Result<Network> {
+    Ok(match code {
         "AN" => alexnet(batch),
         "GLN" => googlenet(batch),
         "DN" => densenet121(batch),
@@ -53,8 +73,49 @@ pub fn benchmark_with_batch(code: &str, batch: usize) -> Network {
         "ZFFR" => zf_faster_rcnn(batch),
         "C3D" => c3d(batch),
         "CapNN" => capsnet(batch),
-        other => panic!("unknown benchmark {other}"),
+        other => return Err(unknown_network(other)),
+    })
+}
+
+/// The `unknown network` error: names the typo'd code and lists what
+/// *would* resolve — benchmark codes plus every bundled spec file.
+/// Public so other entry points (CLI serve) can fail the same way.
+pub fn unknown_network(name: &str) -> anyhow::Error {
+    let stems: Vec<String> = frontend::discover_specs()
+        .iter()
+        .filter_map(|p| p.file_stem().map(|s| s.to_string_lossy().into_owned()))
+        .collect();
+    let specs = if stems.is_empty() {
+        String::new()
+    } else {
+        format!("; spec files in {}: {}", frontend::spec_dir().display(), stems.join(", "))
+    };
+    anyhow!(
+        "unknown network {name:?}: benchmark codes are {}{specs}; \
+         a path to a .json model spec also works",
+        BENCHMARK_CODES.join(", ")
+    )
+}
+
+/// Resolve a network by benchmark code, spec-file path, or bundled
+/// spec name (a file stem under the spec directory), at the paper /
+/// spec-default batch size.
+pub fn resolve(name: &str) -> Result<Network> {
+    resolve_with_batch(name, None)
+}
+
+/// [`resolve`] with an optional batch override (benchmark builders are
+/// invoked at that batch; spec inputs get their `B` extent rewritten).
+pub fn resolve_with_batch(name: &str, batch: Option<usize>) -> Result<Network> {
+    if BENCHMARK_CODES.contains(&name) {
+        return try_benchmark_with_batch(name, batch.unwrap_or_else(|| paper_batch(name)));
     }
+    let Some(path) = frontend::find_spec(name) else {
+        return Err(unknown_network(name));
+    };
+    let spec = frontend::load_spec(&path)?;
+    frontend::build_with_batch(&spec, batch)
+        .with_context(|| format!("building network from {}", path.display()))
 }
 
 /// All seven benchmarks.
@@ -145,6 +206,19 @@ mod tests {
         // ~4.2M parameters in MobileNet v1.
         let n = mobilenet(32).param_count();
         assert!((3_000_000..6_000_000).contains(&n), "MobileNet params {n}");
+    }
+
+    #[test]
+    fn unknown_codes_yield_named_errors_listing_alternatives() {
+        let err = try_benchmark("MOBILENET").unwrap_err().to_string();
+        assert!(err.contains("unknown network \"MOBILENET\""), "{err}");
+        assert!(err.contains("AN, GLN, DN, MN, ZFFR, C3D, CapNN"), "{err}");
+    }
+
+    #[test]
+    fn resolve_handles_codes_and_rejects_typos() {
+        assert_eq!(resolve_with_batch("MN", Some(1)).unwrap().name, "MobileNet");
+        assert!(resolve("MNN").is_err());
     }
 
     #[test]

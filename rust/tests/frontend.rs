@@ -1,0 +1,353 @@
+//! Frontend conformance: bundled specs vs builders, spec-file
+//! execution, and targeted inference failures.
+//!
+//! The bundled files under `rust/specs/` are the round-trip oracle for
+//! the model frontend:
+//!
+//! * `parse(file)` must equal `export(builder)` attribute-for-attribute
+//!   — the exporter, the importer and the committed files can only
+//!   move together (regenerate intentionally with `UPDATE_SPECS=1`);
+//! * `build(parse(file))` must equal the builder network node-for-node
+//!   and lower to a structurally identical GCONV chain;
+//! * spec-built networks must execute **bit-identically** to their
+//!   builder twins (MN + AN in tier-1, all seven in the release
+//!   `--ignored` run);
+//! * a custom CNN that exists only as a spec file (`tinycnn.json`)
+//!   must run bit-identically across every engine path — {naive
+//!   oracle, fast tiers, fused chain, session reuse} — and through the
+//!   serving engine;
+//! * malformed specs must produce targeted errors naming the offending
+//!   layer, never panics.
+
+use std::fs;
+
+use gconv_chain::exec::bench::input_spec;
+use gconv_chain::exec::serve::{Engine, Session};
+use gconv_chain::exec::{ChainExec, Tensor};
+use gconv_chain::frontend::{
+    build_network, build_with_batch, discover_specs, export_json, export_network, load_spec,
+    spec_dir, ModelSpec,
+};
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::ir::Network;
+use gconv_chain::mapping::fuse_executable;
+use gconv_chain::networks::{benchmark_with_batch, paper_batch, BENCHMARK_CODES};
+
+/// Input seed shared by the execution legs.
+const SEED: u64 = 0x5EED_F11E;
+
+/// The two networks' nodes must agree on everything observable.
+fn assert_same_network(code: &str, built: &Network, want: &Network) {
+    assert_eq!(built.name, want.name, "{code}: network name");
+    assert_eq!(built.len(), want.len(), "{code}: node count");
+    for (a, b) in built.nodes().iter().zip(want.nodes()) {
+        assert_eq!(a.name, b.name, "{code}: node #{} name", b.id);
+        assert_eq!(a.layer, b.layer, "{code}: layer {:?}", b.name);
+        assert_eq!(a.inputs, b.inputs, "{code}: wiring of {:?}", b.name);
+        assert_eq!(a.output, b.output, "{code}: output shape of {:?}", b.name);
+    }
+}
+
+/// The two specs must agree layer-for-layer (targeted failure output —
+/// a whole-spec `assert_eq!` would dump hundreds of layers).
+fn assert_same_spec(code: &str, parsed: &ModelSpec, exported: &ModelSpec) {
+    assert_eq!(parsed.name, exported.name, "{code}: spec name");
+    assert_eq!(parsed.layers.len(), exported.layers.len(), "{code}: layer count");
+    for (a, b) in parsed.layers.iter().zip(&exported.layers) {
+        assert_eq!(
+            a, b,
+            "{code}: bundled spec layer {:?} differs from the exporter — if the \
+             builder changed intentionally, regenerate with UPDATE_SPECS=1",
+            b.name
+        );
+    }
+}
+
+/// Builder-vs-spec structural identity for one benchmark code.
+fn check_round_trip(code: &str) {
+    let builder_net = benchmark_with_batch(code, paper_batch(code));
+    let path = spec_dir().join(format!("{code}.json"));
+    if std::env::var_os("UPDATE_SPECS").is_some() {
+        fs::write(&path, export_json(&builder_net))
+            .unwrap_or_else(|e| panic!("{code}: cannot rewrite {}: {e}", path.display()));
+        eprintln!("spec {code}: regenerated {}", path.display());
+        return;
+    }
+    let parsed = load_spec(&path).unwrap_or_else(|e| panic!("{code}: {e:#}"));
+    assert_same_spec(code, &parsed, &export_network(&builder_net));
+
+    let built = build_network(&parsed).unwrap_or_else(|e| panic!("{code}: {e:#}"));
+    assert_same_network(code, &built, &builder_net);
+
+    // Identical networks must lower to identical chains, in both modes.
+    for mode in [Mode::Inference, Mode::Training] {
+        let a = lower_network(&built, mode);
+        let b = lower_network(&builder_net, mode);
+        assert_eq!(a.len(), b.len(), "{code}: chain length ({mode:?})");
+        assert_eq!(a.total_work(), b.total_work(), "{code}: chain work ({mode:?})");
+        assert_eq!(format!("{a}"), format!("{b}"), "{code}: chain structure ({mode:?})");
+    }
+}
+
+#[test]
+fn bundled_specs_round_trip_all_seven_builders() {
+    for code in BENCHMARK_CODES {
+        check_round_trip(code);
+    }
+}
+
+/// Run `net`'s inference chain on the fast tiers and return the final
+/// output.
+fn run_fast(net: &Network) -> Tensor {
+    let (input_name, dims) = input_spec(net).unwrap();
+    let mut exec = ChainExec::new(lower_network(net, Mode::Inference));
+    exec.set_input(&input_name, Tensor::rand(&dims, SEED, 1.0));
+    let mut report = exec.run_last().unwrap_or_else(|e| panic!("{}: {e:#}", net.name));
+    (*report.outputs.remove(0)).clone()
+}
+
+fn assert_spec_executes_like_builder(code: &str) {
+    let builder_net = benchmark_with_batch(code, 1);
+    let spec = export_network(&builder_net);
+    let built = build_network(&spec).unwrap_or_else(|e| panic!("{code}: {e:#}"));
+    let want = run_fast(&builder_net);
+    let got = run_fast(&built);
+    assert!(
+        want.bit_eq(&got),
+        "{code}: spec-imported network diverged bitwise from the builder \
+         (max |Δ| = {:e})",
+        want.max_abs_diff(&got)
+    );
+}
+
+#[test]
+fn spec_networks_execute_bit_identically_mn_an() {
+    for code in ["MN", "AN"] {
+        assert_spec_executes_like_builder(code);
+    }
+}
+
+#[test]
+#[ignore = "full-size numerics over the heavy nets; CI runs this in release via \
+            `cargo test --release -- --ignored`"]
+fn spec_networks_execute_bit_identically_all_seven() {
+    for code in BENCHMARK_CODES {
+        assert_spec_executes_like_builder(code);
+    }
+}
+
+#[test]
+fn all_bundled_specs_import_and_lower() {
+    let files = discover_specs();
+    assert!(!files.is_empty(), "no bundled specs under {:?}", spec_dir());
+    for path in files {
+        let net = load_spec(&path)
+            .and_then(|s| build_network(&s))
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let chain = lower_network(&net, Mode::Inference);
+        assert!(!chain.is_empty(), "{}: empty chain", path.display());
+    }
+}
+
+#[test]
+fn batch_override_matches_builder_at_that_batch() {
+    let spec = load_spec(&spec_dir().join("MN.json")).unwrap();
+    let built = build_with_batch(&spec, Some(4)).unwrap();
+    assert_same_network("MN@4", &built, &benchmark_with_batch("MN", 4));
+}
+
+/// The custom spec-only CNN: every engine path bit-identical, fusion
+/// actually shortens the chain, and the serving engine coalesces it to
+/// the same bits as a direct session run.
+#[test]
+fn custom_spec_runs_identically_on_every_engine_path() {
+    let spec = load_spec(&spec_dir().join("tinycnn.json")).unwrap();
+    let net = build_network(&spec).unwrap();
+    assert_eq!(net.name, "TinyCNN");
+    let (input_name, dims) = input_spec(&net).unwrap();
+    let x = Tensor::rand(&dims, SEED, 1.0);
+
+    let run_exec = |fuse: bool, naive: bool| -> Tensor {
+        let mut chain = lower_network(&net, Mode::Inference);
+        if fuse {
+            let stats = fuse_executable(&mut chain);
+            assert!(stats.after < stats.before, "fusion must shorten the chain");
+        }
+        let mut exec = ChainExec::new(chain);
+        if naive {
+            exec = exec.with_naive_oracle();
+        }
+        exec.set_input(&input_name, x.clone());
+        (*exec.run_last().unwrap().outputs.remove(0)).clone()
+    };
+    let reference = run_exec(false, true);
+    for (fuse, naive) in [(false, false), (true, false)] {
+        let out = run_exec(fuse, naive);
+        assert!(
+            reference.bit_eq(&out),
+            "fuse={fuse}: diverged from the naive oracle (max |Δ| = {:e})",
+            reference.max_abs_diff(&out)
+        );
+    }
+    // Session path, second (reuse) run compared.
+    let mut session = Session::builder(lower_network(&net, Mode::Inference))
+        .input(&input_name, x.clone())
+        .build()
+        .unwrap();
+    let first = session.run().unwrap();
+    session.recycle(first);
+    let second = session.run().unwrap();
+    assert!(reference.bit_eq(&second.outputs[0]), "session reuse diverged");
+
+    // Serving engine: single-sample requests, coalesced micro-batch.
+    let mut engine = Engine::new(2);
+    let code = engine.register_spec(spec).unwrap();
+    let sample: Vec<f32> = x.data().to_vec();
+    engine.submit(&code, 0, sample.clone()).unwrap();
+    engine.submit(&code, 1, sample).unwrap();
+    let mut responses = engine.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 2);
+    for r in &responses {
+        assert_eq!(r.batch, 2, "TinyCNN is per-sample and must coalesce");
+        let same = r
+            .data
+            .iter()
+            .zip(reference.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "engine-served output diverged from the direct runs");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Inference-failure coverage: every malformed spec yields a targeted
+// error naming the offending layer — no panics.
+// ---------------------------------------------------------------------
+
+fn parse_doc(layers: &str) -> Result<ModelSpec, anyhow::Error> {
+    let doc = format!(
+        "{{\"format\": \"gconv-chain-model\", \"version\": 1, \"name\": \"bad\", \
+         \"layers\": [{layers}]}}"
+    );
+    ModelSpec::parse_json(&doc)
+}
+
+/// Parse + build, returning the full error chain as text.
+fn build_err(layers: &str) -> String {
+    let spec = match parse_doc(layers) {
+        Ok(spec) => spec,
+        Err(e) => return format!("{e:#}"),
+    };
+    match build_network(&spec) {
+        Ok(_) => panic!("malformed spec built successfully: {layers}"),
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+const DATA: &str =
+    r#"{"name": "data", "kind": "input", "shape": [["B", 1], ["C", 4], ["H", 8], ["W", 8]]}"#;
+
+#[test]
+fn shape_mismatch_names_layer_and_dimension() {
+    let err = build_err(&format!(
+        "{DATA}, {}",
+        r#"{"name": "c1", "kind": "conv", "kernel": 3, "pad": 1, "output": {"C": 8, "H": 9}}"#
+    ));
+    assert!(err.contains("\"c1\"") && err.contains("H = 9") && err.contains("H = 8"), "{err}");
+}
+
+#[test]
+fn dangling_input_names_both_layers() {
+    let err = build_err(&format!(
+        "{DATA}, {}",
+        r#"{"name": "r", "kind": "relu", "inputs": ["missing"]}"#
+    ));
+    assert!(err.contains("\"r\"") && err.contains("\"missing\""), "{err}");
+}
+
+#[test]
+fn unknown_layer_kind_is_reported_with_known_kinds() {
+    let err = build_err(&format!("{DATA}, {}", r#"{"name": "x", "kind": "swish"}"#));
+    assert!(err.contains("\"x\"") && err.contains("unknown kind \"swish\""), "{err}");
+    assert!(err.contains("conv"), "error should list known kinds: {err}");
+}
+
+#[test]
+fn missing_required_field_is_reported() {
+    let err = build_err(&format!("{DATA}, {}", r#"{"name": "c1", "kind": "conv"}"#));
+    assert!(err.contains("\"c1\"") && err.contains("\"kernel\""), "{err}");
+}
+
+#[test]
+fn oversized_kernel_is_reported_against_the_padded_input() {
+    let err = build_err(&format!(
+        "{DATA}, {}",
+        r#"{"name": "c1", "kind": "conv", "out_channels": 8, "kernel": 11}"#
+    ));
+    assert!(err.contains("\"c1\"") && err.contains("kernel 11"), "{err}");
+}
+
+#[test]
+fn group_divisibility_is_reported() {
+    let err = build_err(&format!(
+        "{DATA}, {}",
+        r#"{"name": "c1", "kind": "conv", "out_channels": 8, "kernel": 3, "pad": 1, "groups": 3}"#
+    ));
+    assert!(err.contains("\"c1\"") && err.contains("groups 3"), "{err}");
+}
+
+#[test]
+fn concat_shape_disagreement_is_reported() {
+    let err = build_err(&format!(
+        "{DATA}, {}, {}, {}",
+        r#"{"name": "a", "kind": "pool", "kernel": 2, "inputs": ["data"]}"#,
+        r#"{"name": "b", "kind": "relu", "inputs": ["data"]}"#,
+        r#"{"name": "cat", "kind": "concat", "inputs": ["a", "b"]}"#
+    ));
+    assert!(err.contains("\"cat\"") && err.contains("disagrees on H"), "{err}");
+}
+
+#[test]
+fn eltwise_shape_disagreement_is_reported() {
+    let err = build_err(&format!(
+        "{DATA}, {}, {}",
+        r#"{"name": "c1", "kind": "conv", "out_channels": 8, "kernel": 3, "pad": 1}"#,
+        r#"{"name": "j", "kind": "eltwise", "inputs": ["data", "c1"]}"#
+    ));
+    assert!(err.contains("\"j\"") && err.contains("eltwise"), "{err}");
+}
+
+#[test]
+fn spec_without_input_layer_is_rejected() {
+    let err = build_err(r#"{"name": "r", "kind": "relu", "inputs": ["r"]}"#);
+    assert!(err.contains("\"r\""), "{err}");
+}
+
+#[test]
+fn unknown_attribute_is_rejected() {
+    let err = build_err(&format!(
+        "{DATA}, {}",
+        r#"{"name": "c1", "kind": "conv", "out_channels": 8, "kernel": 3, "striide": 2}"#
+    ));
+    assert!(err.contains("\"c1\"") && err.contains("\"striide\""), "{err}");
+}
+
+#[test]
+fn wrong_version_is_rejected() {
+    let doc = r#"{"format": "gconv-chain-model", "version": 9, "name": "x", "layers": []}"#;
+    let err = ModelSpec::parse_json(doc).unwrap_err().to_string();
+    assert!(err.contains("version 9"), "{err}");
+}
+
+#[test]
+fn resolve_finds_bundled_specs_by_stem_and_path() {
+    // `tinycnn` is not a benchmark code; it resolves via the spec dir.
+    let net = gconv_chain::networks::resolve("tinycnn").unwrap();
+    assert_eq!(net.name, "TinyCNN");
+    let path = spec_dir().join("tinycnn.json");
+    let net = gconv_chain::networks::resolve(path.to_str().unwrap()).unwrap();
+    assert_eq!(net.name, "TinyCNN");
+    // And typos list what would have worked.
+    let err = gconv_chain::networks::resolve("tinycn").unwrap_err().to_string();
+    assert!(err.contains("tinycnn"), "{err}");
+}
