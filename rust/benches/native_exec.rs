@@ -28,7 +28,10 @@
 //! (`BENCH_serve.json`) carries requests/sec, p50/p99 latency and the
 //! bind-amortization ratio, gated on bit-identical outputs.
 //! `--requests N` (default 16) and `--max-batch N` (default 4) size
-//! the request stream.
+//! the request stream; `--clients C` (default 2, `0` to skip) adds a
+//! concurrent-load leg driving the same stream over loopback TCP
+//! through `gconv_chain::server`, reporting wire rps, p50/p99 latency,
+//! the coalescing rate, and `BUSY` backpressure rejections.
 
 use gconv_chain::args::{take_flag, take_required_string, take_string, take_usize};
 use gconv_chain::exec::bench::{
@@ -63,6 +66,13 @@ fn main() {
         0 => 4,
         n => n,
     };
+    let clients = match take_string(&mut args, "--clients") {
+        None => 2,
+        Some(v) => v.parse::<usize>().unwrap_or_else(|_| {
+            eprintln!("--clients expects a number, got {v:?}");
+            std::process::exit(2);
+        }),
+    };
     let model = take_required_string(&mut args, "--model").unwrap_or_else(|e| {
         eprintln!("{e} (a spec-file path)");
         std::process::exit(2);
@@ -75,7 +85,7 @@ fn main() {
                 eprintln!("--model is only supported for the naive-vs-fast bench (not --serve)");
                 std::process::exit(2);
             }
-            run_serve(&args, requests, max_batch, threads, &json_path);
+            run_serve(&args, requests, max_batch, clients, threads, &json_path);
         } else {
             run(&args, batch, runs, threads, &json_path, model.as_deref());
         }
@@ -103,7 +113,14 @@ fn select_codes(codes: &[String]) -> Vec<&'static str> {
     known
 }
 
-fn run_serve(codes: &[String], requests: usize, max_batch: usize, requested: usize, json: &str) {
+fn run_serve(
+    codes: &[String],
+    requests: usize,
+    max_batch: usize,
+    clients: usize,
+    requested: usize,
+    json: &str,
+) {
     let threads = match requested {
         0 => rayon::current_num_threads(),
         n => n,
@@ -112,9 +129,9 @@ fn run_serve(codes: &[String], requests: usize, max_batch: usize, requested: usi
     for code in select_codes(codes) {
         eprintln!(
             "serve-benchmarking {code} (batch 1, {requests} requests, micro-batch ≤ \
-             {max_batch}, {threads} threads)…"
+             {max_batch}, {clients} load client(s), {threads} threads)…"
         );
-        results.push(bench_serve(code, requests, max_batch).expect("serve bench failed"));
+        results.push(bench_serve(code, requests, max_batch, clients).expect("serve bench failed"));
     }
     let rows: Vec<Vec<String>> = results.iter().map(serve_row).collect();
     print_table(
@@ -129,13 +146,19 @@ fn run_serve(codes: &[String], requests: usize, max_batch: usize, requested: usi
             "p99 ms",
             "speedup",
             "bind amort",
+            "load r/s",
+            "load p99",
+            "busy",
             "bit-id",
         ],
         &rows,
     );
     write_serve_json(json, &results, threads).expect("writing serve JSON failed");
     println!("wrote {json}");
-    if results.iter().any(|b| !b.bit_identical) {
+    let wire_diverged = results
+        .iter()
+        .any(|b| !b.bit_identical || !b.load.as_ref().is_none_or(|l| l.bit_identical));
+    if wire_diverged {
         eprintln!("FAIL: a serving path diverged from the per-request outputs");
         std::process::exit(1);
     }
@@ -152,7 +175,19 @@ fn serve_row(b: &ServeBench) -> Vec<String> {
         format!("{:.2}", b.p99_s * 1e3),
         ratio(b.speedup()),
         ratio(b.bind_amortization()),
-        b.bit_identical.to_string(),
+        match &b.load {
+            Some(l) => format!("{:.2}", l.rps()),
+            None => "n/a".to_string(),
+        },
+        match &b.load {
+            Some(l) => format!("{:.2}", l.p99_s * 1e3),
+            None => "n/a".to_string(),
+        },
+        match &b.load {
+            Some(l) => l.busy_rejections.to_string(),
+            None => "n/a".to_string(),
+        },
+        (b.bit_identical && b.load.as_ref().is_none_or(|l| l.bit_identical)).to_string(),
     ]
 }
 

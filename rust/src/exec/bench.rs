@@ -17,14 +17,15 @@
 
 use std::collections::HashMap;
 use std::fs;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::gconv::lower::{lower_network, Mode};
 use crate::ir::{Layer, Network};
 use crate::mapping::fuse_executable;
 use crate::networks::benchmark_with_batch;
+use crate::server::{self, Client, ServerConfig};
 
 use super::chain_exec::{ChainExec, RunReport};
 use super::serve::{Engine, Session};
@@ -285,6 +286,51 @@ pub struct ServeBench {
     /// Whether session and engine outputs matched the per-request
     /// outputs bit-for-bit on every request.
     pub bit_identical: bool,
+    /// The network-serving leg: the same request stream again, but
+    /// over loopback TCP from concurrent clients (`None` when the
+    /// load leg was skipped with `clients == 0`).
+    pub load: Option<LoadBench>,
+}
+
+/// Concurrent-load measurement over the TCP serving front
+/// ([`crate::server::serve`]): `clients` connections on loopback send
+/// the bench request stream through the bounded scheduler queue and
+/// the engine driver, retrying `BUSY` rejections.
+#[derive(Clone, Debug)]
+pub struct LoadBench {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests completed across all clients.
+    pub requests: usize,
+    /// `BUSY` rejections absorbed (and retried) by the clients.
+    pub busy_rejections: u64,
+    /// Wall seconds from first connect to last response.
+    pub seconds: f64,
+    /// Median end-to-end request latency (seconds, over the wire).
+    pub p50_s: f64,
+    /// 99th-percentile end-to-end request latency (seconds).
+    pub p99_s: f64,
+    /// Requests that rode a coalesced micro-batch (size > 1).
+    pub coalesced: usize,
+    /// Micro-batches the server's engine executed.
+    pub batches: usize,
+    /// High-water mark of the bounded submission queue.
+    pub max_queue_depth: usize,
+    /// Whether every wire response matched the per-request path
+    /// bit-for-bit.
+    pub bit_identical: bool,
+}
+
+impl LoadBench {
+    /// Requests per second across all clients.
+    pub fn rps(&self) -> f64 {
+        rps(self.requests, self.seconds)
+    }
+
+    /// Fraction of requests that rode a coalesced micro-batch.
+    pub fn coalescing_rate(&self) -> Option<f64> {
+        finite_ratio(self.coalesced as f64, self.requests as f64)
+    }
 }
 
 impl ServeBench {
@@ -325,9 +371,16 @@ fn rps(requests: usize, seconds: f64) -> f64 {
 }
 
 /// Measure steady-state serving of `code`'s FP chain at batch 1 (see
-/// [`ServeBench`]). All three paths see the same deterministic request
+/// [`ServeBench`]). All paths see the same deterministic request
 /// stream and synthesized weights; outputs are gated bit-identical.
-pub fn bench_serve(code: &str, requests: usize, max_batch: usize) -> Result<ServeBench> {
+/// With `clients > 0` a fourth leg drives the stream over loopback TCP
+/// from that many concurrent connections (see [`LoadBench`]).
+pub fn bench_serve(
+    code: &str,
+    requests: usize,
+    max_batch: usize,
+    clients: usize,
+) -> Result<ServeBench> {
     ensure!(requests > 0, "serve bench needs at least one request");
     let net = benchmark_with_batch(code, 1);
     let (input_name, dims) = input_spec(&net)?;
@@ -399,6 +452,14 @@ pub fn bench_serve(code: &str, requests: usize, max_batch: usize) -> Result<Serv
             && r.data.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
     }
 
+    // (d) network serving: the same stream once more, over loopback
+    // TCP from concurrent client connections.
+    let load = if clients > 0 {
+        Some(bench_load(code, clients, &inputs, &dims, &per_outputs, max_batch)?)
+    } else {
+        None
+    };
+
     Ok(ServeBench {
         net: net.name.clone(),
         requests,
@@ -410,6 +471,95 @@ pub fn bench_serve(code: &str, requests: usize, max_batch: usize) -> Result<Serv
         p99_s,
         engine_s,
         engine_batches: engine.stats().batches - warm_batches,
+        bit_identical,
+        load,
+    })
+}
+
+/// The multi-client load leg of [`bench_serve`]: serve a fresh engine
+/// on an ephemeral loopback port, fan the request stream across
+/// `clients` concurrent connections (`BUSY` rejections are retried),
+/// and pin every wire response bit-identical to the per-request path.
+fn bench_load(
+    code: &str,
+    clients: usize,
+    inputs: &[Tensor],
+    dims: &[usize],
+    reference: &[Tensor],
+    max_batch: usize,
+) -> Result<LoadBench> {
+    let requests = inputs.len();
+    let mut engine = Engine::new(max_batch);
+    // Warm the chain cache so the timed window measures serving, not
+    // one-time lowering — symmetric with the session and engine legs.
+    engine.submit(code, u64::MAX, inputs[0].data().to_vec())?;
+    ensure!(engine.drain()?.len() == 1, "load warm-up dropped its request");
+    let warm = engine.stats();
+    let config = ServerConfig {
+        queue_depth: max_batch.max(clients),
+        ..ServerConfig::default()
+    };
+    let handle = server::serve("127.0.0.1:0", engine, config)?;
+    let addr = handle.addr().to_string();
+    let sample_dims = &dims[1..];
+    let t0 = Instant::now();
+    let joined = std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let addr = addr.clone();
+            workers.push(scope.spawn(move || -> Result<(Vec<(usize, Vec<f32>, f64)>, u32)> {
+                let mut client = Client::connect_retry(&addr, Duration::from_secs(10))?;
+                let mut done = Vec::new();
+                let mut busy_total = 0u32;
+                for i in (c..requests).step_by(clients) {
+                    let t = Instant::now();
+                    let (out, busy) = client.infer_retry_busy(
+                        code,
+                        sample_dims,
+                        inputs[i].data(),
+                        10_000,
+                        Duration::from_millis(1),
+                    )?;
+                    done.push((i, out, t.elapsed().as_secs_f64()));
+                    busy_total += busy;
+                }
+                Ok((done, busy_total))
+            }));
+        }
+        workers
+            .into_iter()
+            .map(|w| w.join().map_err(|_| anyhow!("load client thread panicked"))?)
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let seconds = t0.elapsed().as_secs_f64();
+    let report = handle.shutdown()?;
+
+    let mut bit_identical = true;
+    let mut latencies = Vec::with_capacity(requests);
+    let mut served = 0usize;
+    let mut busy_rejections = 0u64;
+    for (done, busy) in joined {
+        busy_rejections += u64::from(busy);
+        for (i, out, lat) in done {
+            served += 1;
+            latencies.push(lat);
+            let want = reference[i].data();
+            bit_identical &= out.len() == want.len()
+                && out.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+        }
+    }
+    ensure!(served == requests, "load leg completed {served} of {requests} requests");
+    latencies.sort_by(f64::total_cmp);
+    Ok(LoadBench {
+        clients,
+        requests,
+        busy_rejections,
+        seconds,
+        p50_s: latencies[requests / 2],
+        p99_s: latencies[(requests * 99 / 100).min(requests - 1)],
+        coalesced: report.engine.coalesced.saturating_sub(warm.coalesced),
+        batches: report.engine.batches.saturating_sub(warm.batches),
+        max_queue_depth: report.max_queue_depth,
         bit_identical,
     })
 }
@@ -446,6 +596,29 @@ pub fn serve_to_json(benches: &[ServeBench], threads: usize) -> String {
             jnum(b.engine_rps(), 3),
             b.engine_batches
         ));
+        match &b.load {
+            None => s.push_str("      \"load\": null,\n"),
+            Some(l) => {
+                s.push_str(&format!(
+                    "      \"load\": {{\"clients\": {}, \"requests\": {}, \"seconds\": {}, \
+                     \"rps\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"batches\": {}, \
+                     \"coalesced\": {}, \"coalescing_rate\": {}, \"busy_rejected\": {}, \
+                     \"max_queue_depth\": {}, \"bit_identical\": {}}},\n",
+                    l.clients,
+                    l.requests,
+                    jnum(l.seconds, 6),
+                    jnum(l.rps(), 3),
+                    jnum(l.p50_s * 1e3, 4),
+                    jnum(l.p99_s * 1e3, 4),
+                    l.batches,
+                    l.coalesced,
+                    jopt(l.coalescing_rate(), 4),
+                    l.busy_rejections,
+                    l.max_queue_depth,
+                    l.bit_identical
+                ));
+            }
+        }
         s.push_str(&format!("      \"speedup\": {},\n", jopt(b.speedup(), 3)));
         s.push_str(&format!(
             "      \"bind_amortization\": {},\n",
@@ -635,27 +808,53 @@ mod tests {
             engine_s: 1.5,
             engine_batches: 4,
             bit_identical: true,
+            load: None,
         };
         assert_eq!(b.speedup(), Some(2.0));
         assert_eq!(b.bind_amortization(), Some(4.0));
         assert_eq!(b.session_rps(), 4.0);
-        let json = serve_to_json(&[b], 2);
+        let json = serve_to_json(&[b.clone()], 2);
         assert!(json.contains("\"bench\": \"serve\""));
         assert!(json.contains("\"bind_amortization\": 4.000"));
         assert!(json.contains("\"p50_ms\": 250.0000"));
         assert!(json.contains("\"bit_identical\": true"));
+        assert!(json.contains("\"load\": null"));
+        assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
+
+        let mut b = b;
+        b.load = Some(LoadBench {
+            clients: 3,
+            requests: 4,
+            busy_rejections: 2,
+            seconds: 2.0,
+            p50_s: 0.25,
+            p99_s: 0.5,
+            coalesced: 2,
+            batches: 3,
+            max_queue_depth: 3,
+            bit_identical: true,
+        });
+        let json = serve_to_json(&[b], 2);
+        assert!(json.contains("\"load\": {\"clients\": 3"));
+        assert!(json.contains("\"coalescing_rate\": 0.5000"));
+        assert!(json.contains("\"busy_rejected\": 2"));
+        assert!(json.contains("\"max_queue_depth\": 3"));
         assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
     }
 
     #[test]
     #[ignore = "full MobileNet serve loop; CI runs it in release via `-- --ignored`"]
     fn serve_bench_mobilenet_is_bit_identical_and_amortizes_binds() {
-        let b = bench_serve("MN", 4, 4).unwrap();
+        let b = bench_serve("MN", 4, 4, 2).unwrap();
         assert!(b.bit_identical, "session/engine outputs must match per-request");
         assert!(b.session_binds > 0);
         assert_eq!(b.per_request_binds, b.requests * b.session_binds);
         assert_eq!(b.bind_amortization(), Some(b.requests as f64));
+        let load = b.load.as_ref().expect("load leg requested");
+        assert!(load.bit_identical, "wire outputs must match per-request");
+        assert_eq!(load.requests, b.requests);
         let json = serve_to_json(&[b], 0);
         assert!(json.contains("\"bench\": \"serve\""));
+        assert!(json.contains("\"load\": {\"clients\": 2"));
     }
 }

@@ -84,6 +84,7 @@ pub use kernels::{GEMM_MIN_REDUCTION, KernelTier};
 pub use pool::{BufferPool, PoolStats};
 pub use serve::{
     ChainKey, Engine, EngineResponse, EngineStats, Session, SessionBuilder, SessionStats,
+    SubmitError,
 };
 pub use tensor::Tensor;
 

@@ -36,11 +36,12 @@
 //! [`ChainExec::run`]: super::chain_exec::ChainExec::run
 
 use std::collections::{HashMap, VecDeque};
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 use rayon::prelude::*;
 
 use crate::frontend::{build_with_batch, ModelSpec};
@@ -569,7 +570,52 @@ struct NetEntry {
     weights: HashMap<DataRef, Arc<Tensor>>,
 }
 
-type NetBuilder = Box<dyn Fn(usize) -> Network>;
+type NetBuilder = Box<dyn Fn(usize) -> Network + Send>;
+
+/// Named request-rejection errors of [`Engine::submit`], surfaced at
+/// submit time — not deferred to bind inside [`Engine::step`] — so
+/// callers (the serving front's scheduler in particular) can map them
+/// to structured wire errors by downcasting the returned
+/// `anyhow::Error`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No builder, spec, or benchmark code matches the request.
+    UnknownModel {
+        /// The code the request asked for.
+        code: String,
+        /// Registered codes at rejection time (sorted).
+        registered: Vec<String>,
+    },
+    /// The flat sample payload does not match the model's input shape.
+    ShapeMismatch {
+        /// The code the request asked for.
+        code: String,
+        /// Elements the request carried.
+        got: usize,
+        /// Elements the registered input shape requires.
+        want: usize,
+    },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownModel { code, registered } => write!(
+                f,
+                "unknown network {code:?}: registered codes are [{}], benchmark codes \
+                 are {} — use Engine::register or Engine::register_spec for custom \
+                 models",
+                registered.join(", "),
+                BENCHMARK_CODES.join(", ")
+            ),
+            SubmitError::ShapeMismatch { code, got, want } => {
+                write!(f, "sample for {code} has {got} values, expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Serving frontend over the session layer: a lazily-filled chain
 /// cache (see [`ChainKey`]), `Arc`-shared weights, and a queue that
@@ -621,7 +667,7 @@ impl Engine {
     /// return the network lowered-to-be at that mini-batch size.
     pub fn register<F>(&mut self, code: &str, build: F)
     where
-        F: Fn(usize) -> Network + 'static,
+        F: Fn(usize) -> Network + Send + 'static,
     {
         self.builders.insert(code.to_string(), Box::new(build));
     }
@@ -648,12 +694,14 @@ impl Engine {
     pub fn submit(&mut self, code: &str, id: u64, data: Vec<f32>) -> Result<()> {
         self.resolve_net(code)?;
         let info = &self.nets[code];
-        ensure!(
-            data.len() == info.sample_len,
-            "sample for {code} has {} values, expected {}",
-            data.len(),
-            info.sample_len
-        );
+        if data.len() != info.sample_len {
+            return Err(SubmitError::ShapeMismatch {
+                code: code.to_string(),
+                got: data.len(),
+                want: info.sample_len,
+            }
+            .into());
+        }
         self.queue.push_back(Pending {
             id,
             net: code.to_string(),
@@ -727,15 +775,13 @@ impl Engine {
         }
         if !self.builders.contains_key(code) {
             if !BENCHMARK_CODES.contains(&code) {
-                let mut known: Vec<&str> = self.builders.keys().map(String::as_str).collect();
+                let mut known: Vec<String> = self.builders.keys().cloned().collect();
                 known.sort_unstable();
-                bail!(
-                    "unknown network {code:?}: registered codes are [{}], benchmark codes \
-                     are {} — use Engine::register or Engine::register_spec for custom \
-                     models",
-                    known.join(", "),
-                    BENCHMARK_CODES.join(", ")
-                );
+                return Err(SubmitError::UnknownModel {
+                    code: code.to_string(),
+                    registered: known,
+                }
+                .into());
             }
             let owned = code.to_string();
             self.builders
@@ -1180,6 +1226,43 @@ mod tests {
         let err = engine.submit("no-such-net", 0, vec![0.0; 3]).unwrap_err().to_string();
         assert!(err.contains("register_spec") && err.contains("[ps]"), "{err}");
         assert_eq!(engine.pending(), 0);
+    }
+
+    #[test]
+    fn engine_submit_errors_are_named_and_downcastable() {
+        // The serving front maps rejections to wire error codes by
+        // downcasting, so the error type — not just its text — is API.
+        let mut engine = Engine::new(2);
+        engine.register("ps", per_sample_net);
+        let err = engine.submit("ps", 0, vec![0.0; 3]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SubmitError>(),
+            Some(&SubmitError::ShapeMismatch { code: "ps".into(), got: 3, want: 32 })
+        );
+        assert!(err.to_string().contains("has 3 values, expected 32"), "{err}");
+        let err = engine.submit("no-such-net", 0, vec![0.0; 32]).unwrap_err();
+        match err.downcast_ref::<SubmitError>() {
+            Some(SubmitError::UnknownModel { code, registered }) => {
+                assert_eq!(code, "no-such-net");
+                assert_eq!(registered, &["ps".to_string()]);
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        // Rejected submissions never reach the queue.
+        assert_eq!(engine.pending(), 0);
+        // A well-formed submit still works after the rejections.
+        engine.submit("ps", 1, vec![0.5; 32]).unwrap();
+        assert_eq!(engine.pending(), 1);
+    }
+
+    #[test]
+    fn engine_throughput_guards_zero_duration_and_zero_requests() {
+        let stats = EngineStats::default();
+        assert_eq!(stats.throughput(), 0.0);
+        let stats = EngineStats { requests: 5, exec_s: 0.0, ..EngineStats::default() };
+        assert_eq!(stats.throughput(), 0.0);
+        let stats = EngineStats { requests: 10, exec_s: 2.0, ..EngineStats::default() };
+        assert_eq!(stats.throughput(), 5.0);
     }
 
     #[test]

@@ -43,6 +43,10 @@
 //! * [`sim`] — the top-level simulator tying everything together.
 //! * [`runtime`] — PJRT loader for AOT-compiled HLO-text artifacts
 //!   (cargo feature `pjrt`).
+//! * [`server`] — TCP serving front over `exec::serve::Engine`:
+//!   length-prefixed binary protocol with hard frame caps, bounded
+//!   submission queue with `BUSY` backpressure, per-connection read
+//!   deadlines, graceful drain on shutdown, and a blocking client.
 //! * [`coordinator`] — batches request streams onto a pluggable
 //!   execution backend (native by default, PJRT with `pjrt`).
 //! * [`report`] — table/figure printers used by benches and the CLI.
@@ -65,4 +69,5 @@ pub mod prop;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod sim;

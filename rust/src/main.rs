@@ -24,6 +24,11 @@ USAGE:
     gconv-chain run [NET] [SAMPLES] [--fuse] execute chain numerics (native)
     gconv-chain serve [NET] [REQUESTS] [--fuse] [--max-batch N]
                                              bind-once/run-many serving demo
+    gconv-chain serve NET --listen ADDR [--max-requests N]
+                                             TCP serving front over the engine
+    gconv-chain client ADDR [NET] [REQUESTS] drive a TCP serving front; verify
+                                             responses bit-identical to a local
+                                             in-process engine
     gconv-chain specs                        list + validate bundled model specs
 
 OPTIONS:
@@ -35,6 +40,11 @@ OPTIONS:
                    (§4.3) first: fewer entries, bit-identical outputs
     --max-batch N  serve: coalesce up to N single-sample requests into
                    one micro-batch session run (default 8)
+    --listen ADDR  serve: bind a TCP serving front (e.g. 127.0.0.1:4461)
+                   instead of running the in-process demo stream
+    --max-requests N
+                   with --listen: serve N requests, then shut down
+                   gracefully (smoke-test mode; default: run until killed)
 
     NET   = AN GLN DN MN ZFFR C3D CapNN, a bundled spec name, or (with
             --model) a spec file path
@@ -50,6 +60,7 @@ fn main() {
             Some("matrix") => cmd_matrix(),
             Some("run") => cmd_run(&args[1..]),
             Some("serve") => cmd_serve(&args[1..]),
+            Some("client") => cmd_client(&args[1..]),
             Some("specs") => cmd_specs(),
             _ => {
                 println!("{USAGE}");
@@ -264,15 +275,31 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// How `serve` should run: the in-process demo stream, or a TCP
+/// serving front bound to `listen`.
+struct ServeOpts {
+    max_batch: usize,
+    fuse: bool,
+    listen: Option<String>,
+    max_requests: Option<u64>,
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     use gconv_chain::exec::serve::Engine;
 
     let mut args = args.to_vec();
     let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
+    let listen = gconv_chain::args::take_required_string(&mut args, "--listen")
+        .map_err(|e| anyhow::anyhow!("{e} (an ADDR:PORT to bind)"))?;
+    let max_requests = match gconv_chain::args::take_usize(&mut args, "--max-requests") {
+        0 => None,
+        n => Some(n as u64),
+    };
     let max_batch = match gconv_chain::args::take_usize(&mut args, "--max-batch") {
         0 => 8,
         n => n,
     };
+    let opts = ServeOpts { max_batch, fuse, listen, max_requests };
     let mut engine = Engine::new(max_batch).with_fuse(fuse);
     // The served network: a `--model` spec, a benchmark code, a spec
     // file path, or a bundled spec stem (default MN). Specs register
@@ -290,8 +317,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             };
             if BENCHMARK_CODES.contains(&code.as_str()) {
                 let net1 = resolve_with_batch(&code, Some(1))?;
-                serve_requests(&mut engine, args, code, net1, max_batch, fuse)?;
-                return Ok(());
+                return serve_dispatch(engine, args, code, net1, opts);
             }
             let Some(path) = frontend::find_spec(&code) else {
                 return Err(gconv_chain::networks::unknown_network(&code));
@@ -302,7 +328,167 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let net1 = frontend::build_with_batch(&spec, Some(1))
         .with_context(|| format!("building network {:?}", spec.name))?;
     let code = engine.register_spec(spec)?;
-    serve_requests(&mut engine, args, code, net1, max_batch, fuse)?;
+    serve_dispatch(engine, args, code, net1, opts)
+}
+
+/// Route `serve` to the in-process demo stream or, with `--listen`,
+/// the TCP serving front.
+fn serve_dispatch(
+    mut engine: gconv_chain::exec::serve::Engine,
+    args: Vec<String>,
+    code: String,
+    net1: Network,
+    opts: ServeOpts,
+) -> Result<()> {
+    match opts.listen {
+        Some(addr) => serve_network(engine, args, code, addr, opts.max_requests),
+        None => serve_requests(&mut engine, args, code, net1, opts.max_batch, opts.fuse),
+    }
+}
+
+/// Bind the TCP serving front on `addr` and run until shutdown
+/// (`--max-requests` or an external kill), then print the report.
+fn serve_network(
+    engine: gconv_chain::exec::serve::Engine,
+    args: Vec<String>,
+    code: String,
+    addr: String,
+    max_requests: Option<u64>,
+) -> Result<()> {
+    use gconv_chain::server::{serve, ServerConfig};
+
+    if let Some(extra) = args.first() {
+        anyhow::bail!("unexpected argument {extra:?} with --listen (requests come over TCP)");
+    }
+    let config = ServerConfig { max_requests, ..ServerConfig::default() };
+    let handle = serve(&addr, engine, config)?;
+    match max_requests {
+        Some(n) => println!("serving {code} on {} for {n} request(s)…", handle.addr()),
+        None => println!("serving {code} on {} (kill the process to stop)…", handle.addr()),
+    }
+    let report = handle.wait()?;
+    println!(
+        "served {} request(s) ({} busy-rejected, {} error(s), {} timeout(s), {} malformed, \
+         {} slow client(s)); {} connection(s) accepted ({} refused), peak queue depth {}",
+        report.served,
+        report.rejected_busy,
+        report.errored,
+        report.timeouts,
+        report.malformed,
+        report.slow_clients,
+        report.conns_accepted,
+        report.conns_rejected,
+        report.max_queue_depth
+    );
+    let e = report.engine;
+    println!(
+        "engine: {} micro-batch(es), {} coalesced, {} session(s) built, {} cache hit(s), \
+         {:.2} req/s steady-state",
+        e.batches,
+        e.coalesced,
+        e.sessions_built,
+        e.cache_hits,
+        e.throughput()
+    );
+    Ok(())
+}
+
+/// `client ADDR [NET] [REQUESTS]`: send deterministic single-sample
+/// requests to a serving front and pin every response bit-identical to
+/// a local in-process engine over the same synthesized weights.
+fn cmd_client(args: &[String]) -> Result<()> {
+    use gconv_chain::exec::serve::Engine;
+    use gconv_chain::exec::Tensor;
+    use gconv_chain::server::Client;
+    use std::time::{Duration, Instant};
+
+    let mut args = args.to_vec();
+    let Some(addr) = args.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    args.remove(0);
+    // The NET positional (default MN); a bare number is REQUESTS.
+    let code = match args.first() {
+        Some(c) if c.parse::<u64>().is_err() => {
+            let c = c.clone();
+            args.remove(0);
+            c
+        }
+        _ => "MN".to_string(),
+    };
+    let total = count_arg(&args, 8, "REQUESTS")?.max(1);
+
+    // Local reference: the same engine the server runs, over the same
+    // deterministically synthesized weights.
+    let mut engine = Engine::new(1);
+    let net1 = if BENCHMARK_CODES.contains(&code.as_str()) {
+        resolve_with_batch(&code, Some(1))?
+    } else {
+        let Some(path) = frontend::find_spec(&code) else {
+            return Err(gconv_chain::networks::unknown_network(&code));
+        };
+        let spec = frontend::load_spec(&path)?;
+        let net1 = frontend::build_with_batch(&spec, Some(1))
+            .with_context(|| format!("building network {:?}", spec.name))?;
+        engine.register_spec(spec)?;
+        net1
+    };
+    let (input_name, dims) = gconv_chain::exec::bench::input_spec(&net1)?;
+    let mut sample_dims = dims.clone();
+    sample_dims[0] = 1;
+    let inputs: Vec<Vec<f32>> = (0..total)
+        .map(|id| Tensor::rand(&sample_dims, 0xC11E_47 ^ id, 1.0).into_data())
+        .collect();
+    for (id, x) in inputs.iter().enumerate() {
+        engine.submit(&code, id as u64, x.clone())?;
+    }
+    let mut reference = engine.drain()?;
+    reference.sort_by_key(|r| r.id);
+    anyhow::ensure!(reference.len() == inputs.len(), "reference engine dropped requests");
+
+    println!(
+        "sending {total} request(s) for {code} ({input_name}, {} values/sample) to {addr}…",
+        sample_dims[1..].iter().product::<usize>()
+    );
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(10))?;
+    client.set_timeouts(Duration::from_secs(60), Duration::from_secs(10))?;
+    let mut latencies: Vec<f64> = Vec::with_capacity(inputs.len());
+    let mut busy_total: u64 = 0;
+    let t0 = Instant::now();
+    for (i, x) in inputs.iter().enumerate() {
+        let t = Instant::now();
+        let (out, busy) = client.infer_retry_busy(
+            &code,
+            &sample_dims[1..],
+            x,
+            1000,
+            Duration::from_millis(2),
+        )?;
+        latencies.push(t.elapsed().as_secs_f64());
+        busy_total += u64::from(busy);
+        let want = reference[i].data.as_slice();
+        let identical = out.len() == want.len()
+            && out.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+        anyhow::ensure!(identical, "response {i} diverged from the in-process engine");
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    latencies.sort_by(f64::total_cmp);
+    let pct = |p: usize| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            latencies[(latencies.len() * p / 100).min(latencies.len() - 1)]
+        }
+    };
+    let rps = if seconds > 0.0 { inputs.len() as f64 / seconds } else { 0.0 };
+    println!(
+        "{} response(s) bit-identical to the in-process engine: {rps:.2} req/s, \
+         p50 {:.2} ms, p99 {:.2} ms, {busy_total} BUSY retry(ies)",
+        inputs.len(),
+        pct(50) * 1e3,
+        pct(99) * 1e3
+    );
     Ok(())
 }
 
@@ -336,7 +522,15 @@ fn serve_requests(
     let s = engine.stats();
     let mut latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
     latencies.sort_by(f64::total_cmp);
-    let pct = |p: usize| latencies[(latencies.len() * p / 100).min(latencies.len() - 1)];
+    // Guard the percentile/throughput math: an empty response set (or
+    // zero-duration clock) must print zeros, not panic or divide.
+    let pct = |p: usize| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            latencies[(latencies.len() * p / 100).min(latencies.len() - 1)]
+        }
+    };
     println!(
         "served {} requests in {} micro-batches ({} coalesced, {} sessions built, \
          {} cache hits): {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",

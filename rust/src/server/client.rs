@@ -1,0 +1,107 @@
+//! Blocking client for the serving protocol.
+//!
+//! One [`Client`] wraps one TCP connection and issues requests
+//! sequentially: write a request frame, read one response frame.
+//! [`Client::infer_retry_busy`] layers the retry discipline the
+//! backpressure design expects — a `BUSY` rejection means "the bounded
+//! queue is full right now", so the client backs off and resends, and
+//! reports how many rejections it absorbed.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{read_response, write_request, ErrorCode, Response};
+
+/// A connected protocol client.
+pub struct Client {
+    stream: TcpStream,
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr} resolved to no address"))
+}
+
+impl Client {
+    /// Connect with a timeout.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Client> {
+        let sock = resolve(addr)?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream })
+    }
+
+    /// Connect, retrying while the server comes up (for smoke tests
+    /// that race the listener's bind).
+    pub fn connect_retry(addr: &str, total: Duration) -> Result<Client> {
+        let deadline = Instant::now() + total;
+        loop {
+            match Client::connect(addr, Duration::from_secs(1)) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!("server at {addr} never came up")));
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+
+    /// Bound how long a single request may block on the socket.
+    pub fn set_timeouts(&mut self, read: Duration, write: Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(read)).context("setting the read timeout")?;
+        self.stream.set_write_timeout(Some(write)).context("setting the write timeout")?;
+        Ok(())
+    }
+
+    /// Send one request and read one response frame (which may be a
+    /// structured error).
+    pub fn request(&mut self, model: &str, dims: &[usize], data: &[f32]) -> Result<Response> {
+        write_request(&mut self.stream, model, dims, data)
+            .map_err(|e| anyhow!("sending request: {e}"))?;
+        read_response(&mut self.stream).map_err(|e| anyhow!("reading response: {e}"))
+    }
+
+    /// Send one request and return the output payload, treating any
+    /// error frame as failure.
+    pub fn infer(&mut self, model: &str, dims: &[usize], data: &[f32]) -> Result<Vec<f32>> {
+        match self.request(model, dims, data)? {
+            Response::Output { data, .. } => Ok(data),
+            Response::Error { code, message } => {
+                bail!("server error {}: {message}", code.name())
+            }
+        }
+    }
+
+    /// Send one request, retrying `BUSY` rejections with a fixed
+    /// backoff. Returns the output and how many `BUSY` responses were
+    /// absorbed along the way.
+    pub fn infer_retry_busy(
+        &mut self,
+        model: &str,
+        dims: &[usize],
+        data: &[f32],
+        retries: u32,
+        backoff: Duration,
+    ) -> Result<(Vec<f32>, u32)> {
+        let mut busy = 0;
+        loop {
+            match self.request(model, dims, data)? {
+                Response::Output { data, .. } => return Ok((data, busy)),
+                Response::Error { code: ErrorCode::Busy, .. } if busy < retries => {
+                    busy += 1;
+                    std::thread::sleep(backoff);
+                }
+                Response::Error { code, message } => {
+                    bail!("server error {}: {message}", code.name())
+                }
+            }
+        }
+    }
+}

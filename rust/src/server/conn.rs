@@ -1,0 +1,189 @@
+//! Per-connection reader/writer.
+//!
+//! Each accepted connection gets one thread running [`handle_conn`].
+//! The read side alternates between a short *poll* timeout on the
+//! first header byte (so the thread notices shutdown while idle) and a
+//! hard per-frame deadline once a frame has started — a client that
+//! sends half a header and stalls holds the thread for at most
+//! `frame_deadline`, then is dropped as a slow client. Mid-frame
+//! disconnects and malformed bytes never propagate past this module:
+//! the connection is answered (best-effort) with a structured error
+//! frame and closed, and the listener thread keeps accepting.
+
+use std::io::{ErrorKind, Read};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::protocol::{
+    parse_frame_header, parse_request, write_response, ErrorCode, ProtoError, Response, HEADER_LEN,
+};
+use super::scheduler::{Counters, SchedulerHandle};
+
+/// How often an idle connection re-checks the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Per-connection limits, copied out of the server config.
+#[derive(Clone, Copy, Debug)]
+pub struct ConnConfig {
+    /// Once a frame's first byte arrives, the rest of the frame must
+    /// arrive within this long or the client is dropped as slow.
+    pub frame_deadline: Duration,
+    /// Socket write timeout for response frames.
+    pub write_timeout: Duration,
+    /// How long a connection waits for the engine's reply before
+    /// answering `TIMEOUT`.
+    pub request_timeout: Duration,
+}
+
+/// Why the read side stopped mid-connection.
+enum ReadStop {
+    /// Peer closed the socket (clean or mid-frame).
+    Disconnected,
+    /// Frame started but did not complete within the deadline.
+    SlowClient,
+    /// Bytes violated the protocol; framing is lost.
+    Proto(ProtoError),
+    /// Transport error.
+    Io,
+}
+
+enum ReadOutcome {
+    /// Poll tick expired with no bytes — re-check shutdown and retry.
+    Idle,
+    /// One complete frame body.
+    Frame(Vec<u8>),
+}
+
+/// Read exactly `buf.len()` bytes with an absolute deadline, using the
+/// socket read timeout to bound each blocking read.
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<(), ReadStop> {
+    let mut off = 0;
+    while off < buf.len() {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(ReadStop::SlowClient);
+        }
+        stream.set_read_timeout(Some(deadline - now)).map_err(|_| ReadStop::Io)?;
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return Err(ReadStop::Disconnected),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Err(ReadStop::SlowClient);
+            }
+            Err(_) => return Err(ReadStop::Io),
+        }
+    }
+    Ok(())
+}
+
+/// Wait up to one poll tick for the next frame; once its first byte
+/// arrives, read the whole frame under the per-frame deadline.
+fn poll_frame(stream: &mut TcpStream, cfg: &ConnConfig) -> Result<ReadOutcome, ReadStop> {
+    stream.set_read_timeout(Some(POLL_INTERVAL)).map_err(|_| ReadStop::Io)?;
+    let mut header = [0u8; HEADER_LEN];
+    match stream.read(&mut header[..1]) {
+        Ok(0) => return Err(ReadStop::Disconnected),
+        Ok(_) => {}
+        Err(e) if e.kind() == ErrorKind::Interrupted => return Ok(ReadOutcome::Idle),
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            return Ok(ReadOutcome::Idle);
+        }
+        Err(_) => return Err(ReadStop::Io),
+    }
+    let deadline = Instant::now() + cfg.frame_deadline;
+    read_exact_deadline(stream, &mut header[1..], deadline)?;
+    let body_len = parse_frame_header(&header).map_err(ReadStop::Proto)?;
+    let mut body = vec![0u8; body_len as usize];
+    read_exact_deadline(stream, &mut body, deadline)?;
+    Ok(ReadOutcome::Frame(body))
+}
+
+fn send_error(stream: &mut TcpStream, code: ErrorCode, message: String) -> bool {
+    let resp = Response::Error { code, message };
+    write_response(stream, &resp).is_ok()
+}
+
+/// Serve one connection until the peer disconnects, a fatal read error
+/// occurs, or the server shuts down.
+pub fn handle_conn(
+    mut stream: TcpStream,
+    peer: SocketAddr,
+    sched: SchedulerHandle,
+    cfg: ConnConfig,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    let _ = peer; // retained for thread naming by the caller
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            let _ = send_error(
+                &mut stream,
+                ErrorCode::ShuttingDown,
+                "server is shutting down".into(),
+            );
+            break;
+        }
+        let body = match poll_frame(&mut stream, &cfg) {
+            Ok(ReadOutcome::Idle) => continue,
+            Ok(ReadOutcome::Frame(body)) => body,
+            Err(ReadStop::Disconnected) => break,
+            Err(ReadStop::SlowClient) => {
+                counters.slow_clients.fetch_add(1, Ordering::Relaxed);
+                let _ = send_error(
+                    &mut stream,
+                    ErrorCode::Timeout,
+                    "frame not completed within the read deadline".into(),
+                );
+                break;
+            }
+            Err(ReadStop::Proto(e)) => {
+                // Framing is unrecoverable after a bad header: answer
+                // once, then close.
+                counters.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = send_error(&mut stream, e.code, e.msg);
+                break;
+            }
+            Err(ReadStop::Io) => break,
+        };
+        // A complete-but-invalid body keeps its framing, so the
+        // connection stays usable after the error response.
+        let request = match parse_request(&body) {
+            Ok(req) => req,
+            Err(e) => {
+                counters.malformed.fetch_add(1, Ordering::Relaxed);
+                if send_error(&mut stream, e.code, e.msg) {
+                    continue;
+                }
+                break;
+            }
+        };
+        let response = match sched.submit(&request.model, request.data) {
+            Err((code, message)) => Response::Error { code, message },
+            Ok(reply) => match reply.recv_timeout(cfg.request_timeout) {
+                Ok(Ok(data)) => Response::Output { dims: vec![data.len()], data },
+                Ok(Err((code, message))) => Response::Error { code, message },
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                    Response::Error {
+                        code: ErrorCode::Timeout,
+                        message: "request timed out waiting for the engine".into(),
+                    }
+                }
+            },
+        };
+        if write_response(&mut stream, &response).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}

@@ -1,0 +1,242 @@
+//! Accept loop, connection cap, and graceful shutdown.
+//!
+//! [`serve`] binds a `TcpListener`, starts the scheduler's engine
+//! driver thread, and spawns one accept thread. Each accepted
+//! connection gets its own thread (capped at
+//! [`ServerConfig::max_conns`]; overflow connections are answered with
+//! a `BUSY` error frame and closed). Shutdown is graceful by
+//! construction: the accept thread stops accepting, joins every
+//! connection thread, and drops its scheduler handle — at which point
+//! the driver drains whatever the bounded queue still holds (the last
+//! micro-batches) and exits, returning the engine for a final stats
+//! report.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::exec::serve::{Engine, EngineStats};
+
+use super::conn::{handle_conn, ConnConfig};
+use super::protocol::{write_response, ErrorCode, Response};
+use super::scheduler::{self, Counters};
+
+/// Tunables of the serving front. Every limit is a hard bound — the
+/// server never buffers past `queue_depth` or threads past
+/// `max_conns`.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Concurrent connection cap; overflow is answered `BUSY`.
+    pub max_conns: usize,
+    /// Bounded submission queue depth (the backpressure point).
+    pub queue_depth: usize,
+    /// Per-model in-flight admission cap.
+    pub per_model_inflight: usize,
+    /// Mid-frame read deadline (slow-client bound).
+    pub read_timeout: Duration,
+    /// Socket write timeout for responses.
+    pub write_timeout: Duration,
+    /// How long a request may wait for the engine before `TIMEOUT`.
+    pub request_timeout: Duration,
+    /// Serve this many requests, then shut down gracefully (used by
+    /// smoke tests and `--max-requests`); `None` serves forever.
+    pub max_requests: Option<u64>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_conns: 64,
+            queue_depth: 64,
+            per_model_inflight: 64,
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            request_timeout: Duration::from_secs(30),
+            max_requests: None,
+        }
+    }
+}
+
+/// Final tally of one server run.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerReport {
+    /// Requests answered with an output frame.
+    pub served: u64,
+    /// Submissions rejected with `BUSY` backpressure.
+    pub rejected_busy: u64,
+    /// Requests answered with a non-`BUSY` error frame.
+    pub errored: u64,
+    /// Requests that timed out waiting for the engine.
+    pub timeouts: u64,
+    /// Frames refused as malformed/oversized.
+    pub malformed: u64,
+    /// Connections dropped for blowing the mid-frame read deadline.
+    pub slow_clients: u64,
+    /// Connections accepted.
+    pub conns_accepted: u64,
+    /// Connections refused at the connection cap.
+    pub conns_rejected: u64,
+    /// High-water mark of the bounded queue.
+    pub max_queue_depth: usize,
+    /// The engine's own counters (batches, coalescing, exec time).
+    pub engine: EngineStats,
+}
+
+/// A running server. Dropping the handle does *not* stop the server —
+/// call [`ServerHandle::shutdown`] or [`ServerHandle::wait`].
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: JoinHandle<()>,
+    driver: JoinHandle<Engine>,
+    counters: Arc<Counters>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown, then wait for the drain to finish.
+    pub fn shutdown(self) -> Result<ServerReport> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.join()
+    }
+
+    /// Wait for the server to stop on its own (`max_requests`, or an
+    /// external `shutdown` flag flip).
+    pub fn wait(self) -> Result<ServerReport> {
+        self.join()
+    }
+
+    fn join(self) -> Result<ServerReport> {
+        self.accept.join().map_err(|_| anyhow!("server accept thread panicked"))?;
+        let engine = self.driver.join().map_err(|_| anyhow!("engine driver thread panicked"))?;
+        let c = &self.counters;
+        Ok(ServerReport {
+            served: c.completed.load(Ordering::Relaxed),
+            rejected_busy: c.rejected_busy.load(Ordering::Relaxed),
+            errored: c.errored.load(Ordering::Relaxed),
+            timeouts: c.timeouts.load(Ordering::Relaxed),
+            malformed: c.malformed.load(Ordering::Relaxed),
+            slow_clients: c.slow_clients.load(Ordering::Relaxed),
+            conns_accepted: c.conns_accepted.load(Ordering::Relaxed),
+            conns_rejected: c.conns_rejected.load(Ordering::Relaxed),
+            max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed),
+            engine: engine.stats(),
+        })
+    }
+}
+
+/// Bind `addr` and serve `engine` until shutdown. Returns immediately
+/// with a handle; the accept loop, connection threads, and engine
+/// driver all run in the background.
+pub fn serve(addr: &str, engine: Engine, config: ServerConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr().context("resolving bound address")?;
+    listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+
+    let counters = Arc::new(Counters::default());
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (sched, driver) = scheduler::start(
+        engine,
+        config.queue_depth,
+        config.per_model_inflight,
+        counters.clone(),
+    )
+    .context("spawning the engine driver thread")?;
+
+    let accept_shutdown = shutdown.clone();
+    let accept_counters = counters.clone();
+    let accept = std::thread::Builder::new()
+        .name("gconv-serve-accept".into())
+        .spawn(move || {
+            accept_loop(listener, sched, config, accept_shutdown, accept_counters);
+        })
+        .context("spawning the accept thread")?;
+
+    Ok(ServerHandle { addr: local, shutdown, accept, driver, counters })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    sched: scheduler::SchedulerHandle,
+    config: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    let conn_cfg = ConnConfig {
+        frame_deadline: config.read_timeout,
+        write_timeout: config.write_timeout,
+        request_timeout: config.request_timeout,
+    };
+    let mut conns: HashMap<u64, JoinHandle<()>> = HashMap::new();
+    let mut next_conn: u64 = 0;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Some(cap) = config.max_requests {
+            if counters.completed.load(Ordering::Relaxed) >= cap {
+                shutdown.store(true, Ordering::SeqCst);
+                break;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                conns.retain(|_, h| !h.is_finished());
+                if conns.len() >= config.max_conns {
+                    counters.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    refuse(stream, config);
+                    continue;
+                }
+                counters.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                let id = next_conn;
+                next_conn += 1;
+                let sched = sched.clone();
+                let shutdown = shutdown.clone();
+                let counters = counters.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("gconv-serve-conn-{id}"))
+                    .spawn(move || {
+                        handle_conn(stream, peer, sched, conn_cfg, shutdown, counters);
+                    });
+                match spawned {
+                    Ok(handle) => {
+                        conns.insert(id, handle);
+                    }
+                    Err(_) => counters.conns_rejected.fetch_add(1, Ordering::Relaxed),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    // Graceful drain: stop accepting, join every connection thread
+    // (each notices the shutdown flag within one poll tick), then drop
+    // the last scheduler handle so the driver finishes the queue.
+    shutdown.store(true, Ordering::SeqCst);
+    drop(sched);
+    for (_, handle) in conns {
+        let _ = handle.join();
+    }
+}
+
+/// Answer an over-cap connection with `BUSY` and close it.
+fn refuse(mut stream: TcpStream, config: ServerConfig) {
+    let _ = stream.set_write_timeout(Some(config.write_timeout));
+    let resp = Response::Error {
+        code: ErrorCode::Busy,
+        message: "connection cap reached — retry later".into(),
+    };
+    let _ = write_response(&mut stream, &resp);
+}

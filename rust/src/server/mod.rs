@@ -1,0 +1,36 @@
+//! Network serving front: a TCP request/response server over the
+//! bind-once/run-many [`crate::exec::serve::Engine`].
+//!
+//! The paper's whole-life-cost argument (§2, §6) wants one GCONV
+//! engine serving *every* workload end-to-end; this module gives the
+//! engine a wire. std::net + threads only — the crate's dependency
+//! discipline (anyhow + rayon, no async runtime) holds here too.
+//!
+//! * [`protocol`] — versioned length-prefixed binary frames with hard
+//!   caps on frame size, name length, and rank, so a malformed header
+//!   can never trigger a huge allocation.
+//! * `conn` — per-connection reader/writer threads with poll-tick
+//!   shutdown checks, mid-frame read deadlines (slow-client defense),
+//!   and structured error replies.
+//! * `scheduler` — a bounded submission queue bridging connection
+//!   threads to the single engine driver thread; per-model admission
+//!   control and queue-depth backpressure reject with `BUSY` rather
+//!   than buffering unboundedly.
+//! * `listener` — accept loop with a connection cap and graceful
+//!   shutdown that drains in-flight micro-batches before closing.
+//! * [`client`] — blocking client with `BUSY`-retry discipline, used
+//!   by the CLI `client` subcommand, the load benchmark, and tests.
+//!
+//! Responses are bit-identical to in-process `Engine::submit`/`drain`
+//! for the same inputs: the server adds routing, never arithmetic.
+
+pub mod client;
+mod conn;
+mod listener;
+pub mod protocol;
+mod scheduler;
+
+pub use client::Client;
+pub use listener::{serve, ServerConfig, ServerHandle, ServerReport};
+pub use protocol::{ErrorCode, Request, Response};
+pub use scheduler::Counters;

@@ -1,0 +1,696 @@
+//! Versioned length-prefixed binary frame protocol of the TCP serving
+//! front.
+//!
+//! Every frame is `MAGIC (4 bytes) ++ body_len (u32 LE) ++ body`, and
+//! every body starts with `version (u16 LE) ++ kind (u8)`. The three
+//! kinds:
+//!
+//! | kind | body after the common prefix |
+//! | --- | --- |
+//! | request (1) | `name_len: u16`, `name: UTF-8`, `batch: u16` (must be 1 in v1), `ndims: u8`, `dims: ndims × u32`, `payload: ∏dims × f32` |
+//! | output (2) | `ndims: u8`, `dims: ndims × u32`, `payload: ∏dims × f32` |
+//! | error (3) | `code: u16` (see [`ErrorCode`]), `msg_len: u16`, `msg: UTF-8` |
+//!
+//! All integers and floats are little-endian. The hard caps
+//! ([`MAX_BODY_BYTES`], [`MAX_NAME_LEN`], [`MAX_DIMS`],
+//! [`MAX_ERROR_MSG`]) are enforced *before* any allocation sized by a
+//! wire field, so a malformed or hostile header can never trigger a
+//! huge allocation: a reader refuses the frame at the 8-byte prefix.
+//! Parsing is total — every violation maps to a structured
+//! [`ProtoError`] carrying the [`ErrorCode`] the server sends back.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Leading bytes of every frame (`b"GCS1"` — GCONV chain serve, v1
+/// framing).
+pub const MAGIC: [u8; 4] = *b"GCS1";
+/// Protocol version carried in every frame body.
+pub const VERSION: u16 = 1;
+/// Bytes of the fixed frame prefix: magic + body length.
+pub const HEADER_LEN: usize = 8;
+/// Hard cap on a frame body (64 MiB). A `body_len` above this is
+/// refused before any buffer is allocated.
+pub const MAX_BODY_BYTES: u32 = 1 << 26;
+/// Hard cap on the model-name field.
+pub const MAX_NAME_LEN: usize = 64;
+/// Hard cap on the tensor rank a request or response may carry.
+pub const MAX_DIMS: usize = 8;
+/// Error messages are truncated to this many bytes on the wire.
+pub const MAX_ERROR_MSG: usize = 256;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_OUTPUT: u8 = 2;
+const KIND_ERROR: u8 = 3;
+
+/// Structured error codes of the error-response frame. The numeric
+/// wire value is stable protocol surface; names are for humans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame violated the protocol (bad magic, bad version, field
+    /// inconsistency). The server closes the connection when framing
+    /// itself is lost (bad magic), and keeps it otherwise.
+    Malformed = 1,
+    /// A length field exceeded its hard cap.
+    TooLarge = 2,
+    /// The request named a model the engine does not serve.
+    UnknownModel = 3,
+    /// The payload element count does not match the model's input.
+    BadShape = 4,
+    /// Backpressure: the submission queue or the per-model in-flight
+    /// cap is full. Retry later; nothing was enqueued.
+    Busy = 5,
+    /// The server is draining and accepts no new work.
+    ShuttingDown = 6,
+    /// The engine failed internally while serving the request.
+    Internal = 7,
+    /// A deadline expired (mid-frame read, or the in-engine wait).
+    Timeout = 8,
+}
+
+impl ErrorCode {
+    /// The on-wire `u16` value.
+    pub fn wire(self) -> u16 {
+        self as u16
+    }
+
+    /// Decode a wire value.
+    pub fn from_wire(v: u16) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::Malformed),
+            2 => Some(ErrorCode::TooLarge),
+            3 => Some(ErrorCode::UnknownModel),
+            4 => Some(ErrorCode::BadShape),
+            5 => Some(ErrorCode::Busy),
+            6 => Some(ErrorCode::ShuttingDown),
+            7 => Some(ErrorCode::Internal),
+            8 => Some(ErrorCode::Timeout),
+            _ => None,
+        }
+    }
+
+    /// Stable upper-case name (`BUSY`, `BAD_SHAPE`, …).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "MALFORMED",
+            ErrorCode::TooLarge => "TOO_LARGE",
+            ErrorCode::UnknownModel => "UNKNOWN_MODEL",
+            ErrorCode::BadShape => "BAD_SHAPE",
+            ErrorCode::Busy => "BUSY",
+            ErrorCode::ShuttingDown => "SHUTTING_DOWN",
+            ErrorCode::Internal => "INTERNAL",
+            ErrorCode::Timeout => "TIMEOUT",
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A protocol violation: the [`ErrorCode`] the server reports plus a
+/// human-readable detail message.
+#[derive(Clone, Debug)]
+pub struct ProtoError {
+    /// Structured code (always `Malformed` or `TooLarge` for parse
+    /// failures).
+    pub code: ErrorCode,
+    /// Detail for logs and error frames.
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn malformed(msg: impl Into<String>) -> ProtoError {
+        ProtoError { code: ErrorCode::Malformed, msg: msg.into() }
+    }
+
+    fn too_large(msg: impl Into<String>) -> ProtoError {
+        ProtoError { code: ErrorCode::TooLarge, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Failure of a blocking frame read/write: either the transport broke
+/// or the peer violated the protocol.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The underlying socket/stream failed (includes timeouts and
+    /// mid-frame EOF as `UnexpectedEof`).
+    Io(std::io::Error),
+    /// The bytes arrived but violated the protocol.
+    Proto(ProtoError),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "transport error: {e}"),
+            FrameError::Proto(p) => write!(f, "protocol error: {p}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+impl From<ProtoError> for FrameError {
+    fn from(e: ProtoError) -> FrameError {
+        FrameError::Proto(e)
+    }
+}
+
+/// A decoded inference request: model name, per-sample extents, and
+/// the flattened `f32` payload (`data.len() == dims.iter().product()`,
+/// enforced at parse).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Model the request targets (benchmark code, registered builder,
+    /// or registered spec name).
+    pub model: String,
+    /// Extents of the sample tensor (batch is a separate header field,
+    /// fixed to 1 in protocol v1).
+    pub dims: Vec<usize>,
+    /// Row-major payload.
+    pub data: Vec<f32>,
+}
+
+/// A decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// The inference output (dims is `[elements]` — the engine returns
+    /// flat per-sample outputs).
+    Output {
+        /// Extents of the returned tensor.
+        dims: Vec<usize>,
+        /// Row-major payload.
+        data: Vec<f32>,
+    },
+    /// A structured failure; the connection stays open unless framing
+    /// itself was lost.
+    Error {
+        /// What failed.
+        code: ErrorCode,
+        /// Detail (truncated to [`MAX_ERROR_MSG`] on the wire).
+        message: String,
+    },
+}
+
+// ---------------------------------------------------------------- read
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ProtoError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| ProtoError::malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(ProtoError::malformed(format!(
+                "truncated body: {what} needs {n} bytes at offset {}, body has {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, ProtoError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, ProtoError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ProtoError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>, ProtoError> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| ProtoError::too_large(format!("{what}: element count overflows")))?;
+        let b = self.take(bytes, what)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn done(&self, what: &str) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::malformed(format!(
+                "{what}: {} trailing bytes after the declared fields",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn check_version(r: &mut Reader<'_>) -> Result<(), ProtoError> {
+    let v = r.u16("version")?;
+    if v != VERSION {
+        return Err(ProtoError::malformed(format!(
+            "unsupported protocol version {v} (this server speaks {VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+fn parse_dims(r: &mut Reader<'_>) -> Result<(Vec<usize>, usize), ProtoError> {
+    let ndims = r.u8("ndims")? as usize;
+    if ndims == 0 || ndims > MAX_DIMS {
+        return Err(ProtoError::malformed(format!(
+            "tensor rank {ndims} outside 1..={MAX_DIMS}"
+        )));
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    let mut elems: usize = 1;
+    for i in 0..ndims {
+        let d = r.u32(&format!("dim {i}"))? as usize;
+        if d == 0 {
+            return Err(ProtoError::malformed(format!("dim {i} is zero")));
+        }
+        elems = elems
+            .checked_mul(d)
+            .filter(|&e| e <= MAX_BODY_BYTES as usize / 4)
+            .ok_or_else(|| {
+                ProtoError::too_large(format!(
+                    "payload of shape {dims:?}×{d} exceeds the {MAX_BODY_BYTES}-byte frame cap"
+                ))
+            })?;
+        dims.push(d);
+    }
+    Ok((dims, elems))
+}
+
+/// Validate an 8-byte frame prefix, returning the body length.
+pub fn parse_frame_header(header: &[u8; HEADER_LEN]) -> Result<u32, ProtoError> {
+    if header[..4] != MAGIC {
+        return Err(ProtoError::malformed(format!(
+            "bad frame magic {:02x?} (expected {:02x?})",
+            &header[..4],
+            MAGIC
+        )));
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if len > MAX_BODY_BYTES {
+        return Err(ProtoError::too_large(format!(
+            "frame body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    if len < 3 {
+        return Err(ProtoError::malformed(format!(
+            "frame body of {len} bytes is shorter than the version+kind prefix"
+        )));
+    }
+    Ok(len)
+}
+
+/// Parse a request frame body (everything after the 8-byte prefix).
+pub fn parse_request(body: &[u8]) -> Result<Request, ProtoError> {
+    let mut r = Reader::new(body);
+    check_version(&mut r)?;
+    let kind = r.u8("kind")?;
+    if kind != KIND_REQUEST {
+        return Err(ProtoError::malformed(format!(
+            "frame kind {kind} is not a request (expected {KIND_REQUEST})"
+        )));
+    }
+    let name_len = r.u16("name_len")? as usize;
+    if name_len == 0 || name_len > MAX_NAME_LEN {
+        return Err(ProtoError::too_large(format!(
+            "model name of {name_len} bytes outside 1..={MAX_NAME_LEN}"
+        )));
+    }
+    let name = r.take(name_len, "model name")?;
+    let model = std::str::from_utf8(name)
+        .map_err(|_| ProtoError::malformed("model name is not UTF-8"))?
+        .to_string();
+    let batch = r.u16("batch")?;
+    if batch != 1 {
+        return Err(ProtoError::malformed(format!(
+            "batch {batch} unsupported: protocol v1 carries one sample per request"
+        )));
+    }
+    let (dims, elems) = parse_dims(&mut r)?;
+    let data = r.f32s(elems, "payload")?;
+    r.done("request")?;
+    Ok(Request { model, dims, data })
+}
+
+/// Parse a response frame body.
+pub fn parse_response(body: &[u8]) -> Result<Response, ProtoError> {
+    let mut r = Reader::new(body);
+    check_version(&mut r)?;
+    let kind = r.u8("kind")?;
+    match kind {
+        KIND_OUTPUT => {
+            let (dims, elems) = parse_dims(&mut r)?;
+            let data = r.f32s(elems, "payload")?;
+            r.done("output response")?;
+            Ok(Response::Output { dims, data })
+        }
+        KIND_ERROR => {
+            let wire = r.u16("error code")?;
+            let code = ErrorCode::from_wire(wire)
+                .ok_or_else(|| ProtoError::malformed(format!("unknown error code {wire}")))?;
+            let msg_len = r.u16("msg_len")? as usize;
+            if msg_len > MAX_ERROR_MSG {
+                return Err(ProtoError::too_large(format!(
+                    "error message of {msg_len} bytes exceeds the {MAX_ERROR_MSG}-byte cap"
+                )));
+            }
+            let msg = r.take(msg_len, "error message")?;
+            let message = String::from_utf8_lossy(msg).into_owned();
+            r.done("error response")?;
+            Ok(Response::Error { code, message })
+        }
+        other => Err(ProtoError::malformed(format!(
+            "frame kind {other} is not a response (expected {KIND_OUTPUT} or {KIND_ERROR})"
+        ))),
+    }
+}
+
+/// Read one frame body from a blocking reader (prefix validated, body
+/// allocation bounded by [`MAX_BODY_BYTES`]).
+pub fn read_frame_body(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let len = parse_frame_header(&header)?;
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Read and parse one request frame.
+pub fn read_request(r: &mut impl Read) -> Result<Request, FrameError> {
+    Ok(parse_request(&read_frame_body(r)?)?)
+}
+
+/// Read and parse one response frame.
+pub fn read_response(r: &mut impl Read) -> Result<Response, FrameError> {
+    Ok(parse_response(&read_frame_body(r)?)?)
+}
+
+// --------------------------------------------------------------- write
+
+fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+fn push_dims(body: &mut Vec<u8>, dims: &[usize]) -> Result<(), ProtoError> {
+    if dims.is_empty() || dims.len() > MAX_DIMS {
+        return Err(ProtoError::malformed(format!(
+            "tensor rank {} outside 1..={MAX_DIMS}",
+            dims.len()
+        )));
+    }
+    body.push(dims.len() as u8);
+    for &d in dims {
+        if d == 0 || d > u32::MAX as usize {
+            return Err(ProtoError::malformed(format!("dim {d} not encodable as u32")));
+        }
+        body.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    Ok(())
+}
+
+fn push_payload(body: &mut Vec<u8>, dims: &[usize], data: &[f32]) -> Result<(), ProtoError> {
+    let elems: usize = dims.iter().product();
+    if elems != data.len() {
+        return Err(ProtoError::malformed(format!(
+            "shape {dims:?} holds {elems} elements, payload has {}",
+            data.len()
+        )));
+    }
+    body.reserve(4 * data.len());
+    for v in data {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+fn check_body_cap(body: &[u8], what: &str) -> Result<(), ProtoError> {
+    if body.len() > MAX_BODY_BYTES as usize {
+        return Err(ProtoError::too_large(format!(
+            "{what} of {} bytes exceeds the {MAX_BODY_BYTES}-byte frame cap",
+            body.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Encode a complete request frame (prefix included).
+pub fn encode_request(model: &str, dims: &[usize], data: &[f32]) -> Result<Vec<u8>, ProtoError> {
+    if model.is_empty() || model.len() > MAX_NAME_LEN {
+        return Err(ProtoError::too_large(format!(
+            "model name of {} bytes outside 1..={MAX_NAME_LEN}",
+            model.len()
+        )));
+    }
+    let mut body = Vec::with_capacity(16 + model.len() + 4 * dims.len() + 4 * data.len());
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.push(KIND_REQUEST);
+    body.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    body.extend_from_slice(model.as_bytes());
+    body.extend_from_slice(&1u16.to_le_bytes()); // batch (v1: always 1)
+    push_dims(&mut body, dims)?;
+    push_payload(&mut body, dims, data)?;
+    check_body_cap(&body, "request body")?;
+    Ok(frame(body))
+}
+
+/// Encode a complete response frame (prefix included). Error messages
+/// are truncated to [`MAX_ERROR_MSG`] bytes (on a char boundary).
+pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtoError> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    match resp {
+        Response::Output { dims, data } => {
+            body.push(KIND_OUTPUT);
+            push_dims(&mut body, dims)?;
+            push_payload(&mut body, dims, data)?;
+        }
+        Response::Error { code, message } => {
+            body.push(KIND_ERROR);
+            body.extend_from_slice(&code.wire().to_le_bytes());
+            let mut cut = message.len().min(MAX_ERROR_MSG);
+            while cut > 0 && !message.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            let msg = &message.as_bytes()[..cut];
+            body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+            body.extend_from_slice(msg);
+        }
+    }
+    check_body_cap(&body, "response body")?;
+    Ok(frame(body))
+}
+
+/// Encode and write one request frame.
+pub fn write_request(
+    w: &mut impl Write,
+    model: &str,
+    dims: &[usize],
+    data: &[f32],
+) -> Result<(), FrameError> {
+    let bytes = encode_request(model, dims, data)?;
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Encode and write one response frame. A response too large to encode
+/// (an oversized output) degrades to an `INTERNAL` error frame, so the
+/// client always receives *something* well-formed.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> std::io::Result<()> {
+    let bytes = match encode_response(resp) {
+        Ok(b) => b,
+        Err(e) => encode_response(&Response::Error {
+            code: ErrorCode::Internal,
+            message: format!("response not encodable: {e}"),
+        })
+        .expect("error responses are bounded"),
+    };
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips() {
+        let frame = encode_request("MN", &[3, 2], &[1.0, -2.5, 0.0, 4.0, 5.0, -0.125]).unwrap();
+        assert_eq!(frame[..4], MAGIC);
+        let req = read_request(&mut frame.as_slice()).unwrap();
+        assert_eq!(req.model, "MN");
+        assert_eq!(req.dims, vec![3, 2]);
+        assert_eq!(req.data, vec![1.0, -2.5, 0.0, 4.0, 5.0, -0.125]);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let out = Response::Output { dims: vec![4], data: vec![0.5, 1.5, -2.0, 3.25] };
+        let bytes = encode_response(&out).unwrap();
+        assert_eq!(read_response(&mut bytes.as_slice()).unwrap(), out);
+
+        let err = Response::Error { code: ErrorCode::Busy, message: "queue full".into() };
+        let bytes = encode_response(&err).unwrap();
+        assert_eq!(read_response(&mut bytes.as_slice()).unwrap(), err);
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_unknown_codes_fail() {
+        for code in [
+            ErrorCode::Malformed,
+            ErrorCode::TooLarge,
+            ErrorCode::UnknownModel,
+            ErrorCode::BadShape,
+            ErrorCode::Busy,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+            ErrorCode::Timeout,
+        ] {
+            assert_eq!(ErrorCode::from_wire(code.wire()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_wire(0), None);
+        assert_eq!(ErrorCode::from_wire(999), None);
+    }
+
+    #[test]
+    fn bad_magic_is_malformed() {
+        let mut frame = encode_request("MN", &[1], &[1.0]).unwrap();
+        frame[0] = b'X';
+        match read_request(&mut frame.as_slice()) {
+            Err(FrameError::Proto(p)) => assert_eq!(p.code, ErrorCode::Malformed),
+            other => panic!("expected a malformed error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_len_is_refused_at_the_header() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC);
+        frame.extend_from_slice(&(MAX_BODY_BYTES + 1).to_le_bytes());
+        match read_request(&mut frame.as_slice()) {
+            Err(FrameError::Proto(p)) => assert_eq!(p.code, ErrorCode::TooLarge),
+            other => panic!("expected a too-large error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_io_errors() {
+        let frame = encode_request("MN", &[2], &[1.0, 2.0]).unwrap();
+        let cut = &frame[..frame.len() - 3];
+        match read_request(&mut &cut[..]) {
+            Err(FrameError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+            }
+            other => panic!("expected an io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn name_and_rank_caps_are_enforced_both_ways() {
+        let long = "x".repeat(MAX_NAME_LEN + 1);
+        assert!(encode_request(&long, &[1], &[0.0]).is_err());
+        assert!(encode_request("", &[1], &[0.0]).is_err());
+        let dims = vec![1usize; MAX_DIMS + 1];
+        assert!(encode_request("m", &dims, &[0.0]).is_err());
+
+        // A hand-built body with a name_len above the cap parses to
+        // TOO_LARGE without allocating the claimed length.
+        let mut body = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.push(KIND_REQUEST);
+        body.extend_from_slice(&u16::MAX.to_le_bytes());
+        let err = parse_request(&body).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+    }
+
+    #[test]
+    fn payload_shape_mismatches_are_malformed() {
+        assert!(encode_request("m", &[3], &[1.0, 2.0]).is_err());
+        // Declared dims larger than the carried payload.
+        let good = encode_request("m", &[2], &[1.0, 2.0]).unwrap();
+        let mut body = good[HEADER_LEN..].to_vec();
+        // dims live after version(2)+kind(1)+name_len(2)+name(1)+batch(2)
+        // at offset 8: ndims byte, then the u32 extent — bump it to 3.
+        body[9] = 3;
+        let err = parse_request(&body).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn batch_other_than_one_is_rejected() {
+        let good = encode_request("m", &[1], &[1.0]).unwrap();
+        let mut body = good[HEADER_LEN..].to_vec();
+        // batch u16 sits after version(2)+kind(1)+name_len(2)+name(1).
+        body[6] = 2;
+        let err = parse_request(&body).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Malformed);
+        assert!(err.msg.contains("batch"), "{}", err.msg);
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut frame = encode_request("m", &[1], &[1.0]).unwrap();
+        // Grow the body by one byte and fix up the declared length.
+        frame.push(0xAB);
+        let body_len = (frame.len() - HEADER_LEN) as u32;
+        frame[4..8].copy_from_slice(&body_len.to_le_bytes());
+        match read_request(&mut frame.as_slice()) {
+            Err(FrameError::Proto(p)) => {
+                assert_eq!(p.code, ErrorCode::Malformed);
+                assert!(p.msg.contains("trailing"), "{}", p.msg);
+            }
+            other => panic!("expected a malformed error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn long_error_messages_truncate_on_the_wire() {
+        let long = "é".repeat(MAX_ERROR_MSG); // 2 bytes per char
+        let bytes = encode_response(&Response::Error {
+            code: ErrorCode::Internal,
+            message: long,
+        })
+        .unwrap();
+        match read_response(&mut bytes.as_slice()).unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::Internal);
+                assert!(message.len() <= MAX_ERROR_MSG);
+                assert!(message.chars().all(|c| c == 'é'), "truncation split a char");
+            }
+            other => panic!("expected an error response, got {other:?}"),
+        }
+    }
+}

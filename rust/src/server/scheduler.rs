@@ -1,0 +1,376 @@
+//! Bounded submission queue between connection threads and the one
+//! engine driver thread.
+//!
+//! [`crate::exec::serve::Engine`] is deliberately single-owner —
+//! `submit` and `step` take `&mut self` so the micro-batch coalescing
+//! queue needs no locks. The scheduler keeps that shape under
+//! concurrent connections: every connection thread holds a cloned
+//! [`SchedulerHandle`] whose [`SchedulerHandle::submit`] performs
+//! *admission control* (a per-model in-flight cap) and then a
+//! non-blocking push onto a bounded `sync_channel`. Both limits reject
+//! with a structured `BUSY` instead of buffering unboundedly — the
+//! queue depth is the whole memory bound of the serving front.
+//!
+//! The driver thread owns the [`Engine`]: it blocks on the queue,
+//! greedily drains whatever else is already waiting (one *wave*),
+//! submits the wave to the engine — which coalesces same-model
+//! single-sample requests into micro-batches, bit-identically — and
+//! routes each [`EngineResponse`] back through its job's reply
+//! channel. When every handle clone is dropped (listener and
+//! connection threads have exited) the driver finishes the remaining
+//! queue and returns the engine, so shutdown *drains* in-flight work
+//! rather than dropping it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::exec::serve::{Engine, SubmitError};
+
+use super::protocol::ErrorCode;
+
+/// Reply to one scheduled job: the flat output, or the structured
+/// error the connection reports to its client.
+pub type JobReply = Result<Vec<f32>, (ErrorCode, String)>;
+
+/// One queued request.
+struct Job {
+    model: String,
+    data: Vec<f32>,
+    reply: SyncSender<JobReply>,
+}
+
+/// Shared monotonic counters of the serving front (atomics — read at
+/// any time, snapshot in the final report).
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Jobs accepted into the queue.
+    pub submitted: AtomicU64,
+    /// Jobs answered with an output frame.
+    pub completed: AtomicU64,
+    /// Submissions rejected with `BUSY` (queue full or per-model cap).
+    pub rejected_busy: AtomicU64,
+    /// Jobs answered with a non-`BUSY` error frame.
+    pub errored: AtomicU64,
+    /// Requests whose reply wait exceeded the request timeout.
+    pub timeouts: AtomicU64,
+    /// Frames refused as malformed/oversized.
+    pub malformed: AtomicU64,
+    /// Connections dropped for blowing a mid-frame read deadline.
+    pub slow_clients: AtomicU64,
+    /// Connections accepted.
+    pub conns_accepted: AtomicU64,
+    /// Connections refused at the connection cap.
+    pub conns_rejected: AtomicU64,
+    /// Current queue depth.
+    pub queue_depth: AtomicUsize,
+    /// High-water mark of the queue depth (must stay ≤ the configured
+    /// bound — the no-unbounded-buffering invariant).
+    pub max_queue_depth: AtomicUsize,
+}
+
+/// Cloneable submission side of the scheduler, one clone per
+/// connection thread plus the listener's own.
+pub struct SchedulerHandle {
+    tx: SyncSender<Job>,
+    inflight: Arc<Mutex<HashMap<String, usize>>>,
+    per_model_cap: usize,
+    counters: Arc<Counters>,
+}
+
+impl Clone for SchedulerHandle {
+    fn clone(&self) -> SchedulerHandle {
+        SchedulerHandle {
+            tx: self.tx.clone(),
+            inflight: self.inflight.clone(),
+            per_model_cap: self.per_model_cap,
+            counters: self.counters.clone(),
+        }
+    }
+}
+
+impl SchedulerHandle {
+    /// Try to enqueue one single-sample request. On success the job is
+    /// owned by the driver and the returned receiver yields exactly one
+    /// [`JobReply`]. On failure nothing was enqueued and the error maps
+    /// directly to a wire error frame.
+    pub fn submit(
+        &self,
+        model: &str,
+        data: Vec<f32>,
+    ) -> Result<Receiver<JobReply>, (ErrorCode, String)> {
+        // Admission: cap the number of in-flight requests per model.
+        {
+            let mut inflight = self.inflight.lock().expect("inflight lock");
+            let n = inflight.entry(model.to_string()).or_insert(0);
+            if *n >= self.per_model_cap {
+                self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                let cap = self.per_model_cap;
+                return Err((
+                    ErrorCode::Busy,
+                    format!("model {model:?} has {n} requests in flight (cap {cap})"),
+                ));
+            }
+            *n += 1;
+        }
+        let (reply, rx) = sync_channel(1);
+        let job = Job { model: model.to_string(), data, reply };
+        match self.tx.try_send(job) {
+            Ok(()) => {
+                let depth = self.counters.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+                self.counters.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+                self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(e) => {
+                self.release(model);
+                match e {
+                    TrySendError::Full(_) => {
+                        self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                        Err((ErrorCode::Busy, "submission queue is full — retry later".into()))
+                    }
+                    TrySendError::Disconnected(_) => Err((
+                        ErrorCode::ShuttingDown,
+                        "server is shutting down and accepts no new work".into(),
+                    )),
+                }
+            }
+        }
+    }
+
+    fn release(&self, model: &str) {
+        release(&self.inflight, model);
+    }
+}
+
+fn release(inflight: &Mutex<HashMap<String, usize>>, model: &str) {
+    let mut inflight = inflight.lock().expect("inflight lock");
+    if let Some(n) = inflight.get_mut(model) {
+        *n = n.saturating_sub(1);
+    }
+}
+
+/// Map an [`Engine::submit`] failure to its wire error code.
+fn map_engine_error(e: &anyhow::Error) -> (ErrorCode, String) {
+    let code = match e.downcast_ref::<SubmitError>() {
+        Some(SubmitError::UnknownModel { .. }) => ErrorCode::UnknownModel,
+        Some(SubmitError::ShapeMismatch { .. }) => ErrorCode::BadShape,
+        None => ErrorCode::Internal,
+    };
+    (code, format!("{e:#}"))
+}
+
+/// Spawn the driver thread over `engine` and return the submission
+/// handle plus the driver's join handle (it yields the engine back for
+/// the final stats report).
+pub fn start(
+    engine: Engine,
+    queue_depth: usize,
+    per_model_cap: usize,
+    counters: Arc<Counters>,
+) -> std::io::Result<(SchedulerHandle, JoinHandle<Engine>)> {
+    let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
+    let handle = SchedulerHandle {
+        tx,
+        inflight: Arc::new(Mutex::new(HashMap::new())),
+        per_model_cap: per_model_cap.max(1),
+        counters: counters.clone(),
+    };
+    // The driver must NOT hold a `SchedulerHandle` (its `tx` clone
+    // would keep the channel connected forever and `recv` would never
+    // disconnect at shutdown) — it shares only the map and counters.
+    let inflight = handle.inflight.clone();
+    let driver = std::thread::Builder::new()
+        .name("gconv-serve-driver".into())
+        .spawn(move || drive(engine, rx, inflight, counters))?;
+    Ok((handle, driver))
+}
+
+/// The driver loop: wave in, micro-batches through the engine, replies
+/// out. Exits (returning the engine) when every submission handle is
+/// gone and the queue is empty.
+fn drive(
+    mut engine: Engine,
+    rx: Receiver<Job>,
+    inflight: Arc<Mutex<HashMap<String, usize>>>,
+    counters: Arc<Counters>,
+) -> Engine {
+    let mut next_id: u64 = 0;
+    while let Ok(first) = rx.recv() {
+        // Greedy wave: everything already queued rides this drain, so
+        // concurrent same-model requests coalesce into micro-batches.
+        let mut wave = vec![first];
+        while let Ok(job) = rx.try_recv() {
+            wave.push(job);
+        }
+        counters.queue_depth.fetch_sub(wave.len(), Ordering::Relaxed);
+
+        let mut pending: HashMap<u64, (String, SyncSender<JobReply>)> = HashMap::new();
+        for job in wave {
+            let id = next_id;
+            next_id += 1;
+            match engine.submit(&job.model, id, job.data) {
+                Ok(()) => {
+                    pending.insert(id, (job.model, job.reply));
+                }
+                Err(e) => {
+                    counters.errored.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(map_engine_error(&e)));
+                    release(&inflight, &job.model);
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        match engine.drain() {
+            Ok(responses) => {
+                for r in responses {
+                    if let Some((model, reply)) = pending.remove(&r.id) {
+                        counters.completed.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Ok(r.data));
+                        release(&inflight, &model);
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine drain failed: {e:#}");
+                for (_, (model, reply)) in pending.drain() {
+                    counters.errored.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Err((ErrorCode::Internal, msg.clone())));
+                    release(&inflight, &model);
+                }
+            }
+        }
+        // A request the engine accepted but never answered would be a
+        // coalescing bug — fail it loudly rather than hanging clients.
+        for (_, (model, reply)) in pending.drain() {
+            counters.errored.fetch_add(1, Ordering::Relaxed);
+            let _ = reply
+                .send(Err((ErrorCode::Internal, "engine dropped an accepted request".into())));
+            release(&inflight, &model);
+        }
+    }
+    engine
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::time::Duration;
+
+    use crate::ir::{Layer, Network, Shape};
+
+    fn tiny_net(batch: usize) -> Network {
+        let mut net = Network::new("tiny");
+        let i = net.add("data", Layer::Input { shape: Shape::bchw(batch, 2, 4, 4) }, &[]);
+        let r = net.add("relu", Layer::Relu, &[i]);
+        net.add("fc", Layer::FullyConnected { out_features: 3 }, &[r]);
+        net
+    }
+
+    fn engine() -> Engine {
+        let mut e = Engine::new(4);
+        e.register("tiny", tiny_net);
+        e
+    }
+
+    #[test]
+    fn jobs_round_trip_through_the_driver() {
+        let counters = Arc::new(Counters::default());
+        let (handle, driver) = start(engine(), 8, 8, counters.clone()).unwrap();
+        let rx = handle.submit("tiny", vec![0.5; 32]).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let out = reply.expect("job must succeed");
+        assert_eq!(out.len(), 3);
+        assert_eq!(counters.completed.load(Ordering::Relaxed), 1);
+        drop(handle);
+        let _ = driver.join().unwrap();
+    }
+
+    #[test]
+    fn queue_overflow_rejects_busy_without_blocking() {
+        // No driver consumes: the queue deterministically fills at its
+        // configured depth and the next submit must reject, not block.
+        let counters = Arc::new(Counters::default());
+        let (tx, _rx) = sync_channel::<Job>(2);
+        let handle = SchedulerHandle {
+            tx,
+            inflight: Arc::new(Mutex::new(HashMap::new())),
+            per_model_cap: 100,
+            counters: counters.clone(),
+        };
+        let _a = handle.submit("tiny", vec![0.0; 32]).unwrap();
+        let _b = handle.submit("tiny", vec![0.0; 32]).unwrap();
+        let err = handle.submit("tiny", vec![0.0; 32]).unwrap_err();
+        assert_eq!(err.0, ErrorCode::Busy);
+        assert_eq!(counters.rejected_busy.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.max_queue_depth.load(Ordering::Relaxed), 2);
+        // The rejected submission must not leak an in-flight slot.
+        assert_eq!(*handle.inflight.lock().unwrap().get("tiny").unwrap(), 2);
+    }
+
+    #[test]
+    fn per_model_cap_rejects_busy_and_releases_on_completion() {
+        let counters = Arc::new(Counters::default());
+        let (tx, _rx) = sync_channel::<Job>(64);
+        let handle = SchedulerHandle {
+            tx,
+            inflight: Arc::new(Mutex::new(HashMap::new())),
+            per_model_cap: 1,
+            counters: counters.clone(),
+        };
+        let _a = handle.submit("tiny", vec![0.0; 32]).unwrap();
+        let err = handle.submit("tiny", vec![0.0; 32]).unwrap_err();
+        assert_eq!(err.0, ErrorCode::Busy);
+        // Another model is admitted independently.
+        assert!(handle.submit("other", vec![0.0; 32]).is_ok());
+        handle.release("tiny");
+        assert!(handle.submit("tiny", vec![0.0; 32]).is_ok());
+    }
+
+    #[test]
+    fn unknown_models_map_to_the_unknown_model_code() {
+        let counters = Arc::new(Counters::default());
+        let (handle, driver) = start(engine(), 8, 8, counters.clone()).unwrap();
+        let rx = handle.submit("no-such-model", vec![0.0; 32]).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let (code, msg) = reply.expect_err("unknown model must fail");
+        assert_eq!(code, ErrorCode::UnknownModel);
+        assert!(msg.contains("no-such-model"), "{msg}");
+        // Bad shape maps to BAD_SHAPE.
+        let rx = handle.submit("tiny", vec![0.0; 3]).unwrap();
+        let (code, _) = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect_err("bad shape must fail");
+        assert_eq!(code, ErrorCode::BadShape);
+        assert_eq!(counters.errored.load(Ordering::Relaxed), 2);
+        // Failed jobs release their admission slots.
+        assert_eq!(*handle.inflight.lock().unwrap().get("tiny").unwrap(), 0);
+        drop(handle);
+        let _ = driver.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_before_the_driver_exits() {
+        let counters = Arc::new(Counters::default());
+        let (handle, driver) = start(engine(), 8, 8, counters.clone()).unwrap();
+        let receivers: Vec<_> =
+            (0..4).map(|_| handle.submit("tiny", vec![0.25; 32]).unwrap()).collect();
+        // Drop the last submission handle immediately: the driver must
+        // still answer everything already queued.
+        drop(handle);
+        for rx in receivers {
+            let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(reply.expect("queued job must drain").len(), 3);
+        }
+        let engine = driver.join().unwrap();
+        assert_eq!(engine.stats().requests, 4);
+        assert_eq!(counters.completed.load(Ordering::Relaxed), 4);
+        assert_eq!(counters.queue_depth.load(Ordering::Relaxed), 0);
+    }
+}

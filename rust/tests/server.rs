@@ -1,0 +1,392 @@
+//! Integration suite for the TCP serving front (`gconv_chain::server`).
+//!
+//! Three concerns, mirroring the conformance discipline of the
+//! in-process engine:
+//!
+//! * **Wire conformance** — concurrent TCP clients must receive
+//!   responses bit-identical to in-process `Engine::submit`/`drain`
+//!   over the same deterministically synthesized weights.
+//! * **Protocol hardening** — malformed, truncated, and oversized
+//!   frames, unknown models, bad shapes, slow clients, and mid-frame
+//!   disconnects must be answered with structured errors (or a clean
+//!   close) without taking the server down.
+//! * **Backpressure + shutdown** — a request flood must be rejected
+//!   with `BUSY` at the bounded queue (never buffered unboundedly),
+//!   while admitted requests complete bit-identically; graceful
+//!   shutdown must drain in-flight work.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use gconv_chain::exec::serve::Engine;
+use gconv_chain::exec::Tensor;
+use gconv_chain::ir::{Layer, Network, Shape};
+use gconv_chain::server::protocol::{self, ErrorCode, Response, HEADER_LEN, MAGIC};
+use gconv_chain::server::{serve, Client, ServerConfig, ServerHandle};
+
+const SAMPLE_DIMS: [usize; 3] = [2, 4, 4];
+const SAMPLE_LEN: usize = 2 * 4 * 4;
+
+/// conv → ReLU → FC at 2×4×4 — small enough for tight test loops, deep
+/// enough to exercise real numerics.
+fn tiny_net(batch: usize) -> Network {
+    let mut net = Network::new("tiny");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(batch, 2, 4, 4) }, &[]);
+    let c = net.add(
+        "conv",
+        Layer::Conv { out_channels: 3, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[i],
+    );
+    let r = net.add("relu", Layer::Relu, &[c]);
+    net.add("fc", Layer::FullyConnected { out_features: 5 }, &[r]);
+    net
+}
+
+fn tiny_engine(max_batch: usize) -> Engine {
+    let mut engine = Engine::new(max_batch);
+    engine.register("tiny", tiny_net);
+    engine
+}
+
+fn sample(seed: u64) -> Vec<f32> {
+    Tensor::rand(&[SAMPLE_LEN], seed, 1.0).into_data()
+}
+
+/// In-process reference outputs for `inputs`, in order — the oracle
+/// every wire response is pinned against.
+fn reference_outputs(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut engine = tiny_engine(1);
+    for (id, x) in inputs.iter().enumerate() {
+        engine.submit("tiny", id as u64, x.clone()).unwrap();
+    }
+    let mut responses = engine.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    responses.into_iter().map(|r| r.data).collect()
+}
+
+fn start(engine: Engine, config: ServerConfig) -> ServerHandle {
+    serve("127.0.0.1:0", engine, config).expect("server must bind an ephemeral port")
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+// ------------------------------------------------------ conformance
+
+#[test]
+fn concurrent_clients_are_bit_identical_to_the_in_process_engine() {
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 4;
+    let inputs: Vec<Vec<f32>> =
+        (0..CLIENTS * PER_CLIENT).map(|i| sample(0xA11CE ^ i as u64)).collect();
+    let reference = reference_outputs(&inputs);
+
+    let handle = start(tiny_engine(4), ServerConfig::default());
+    let addr = handle.addr().to_string();
+    std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            let inputs = &inputs;
+            let reference = &reference;
+            workers.push(scope.spawn(move || {
+                let mut client =
+                    Client::connect_retry(&addr, Duration::from_secs(10)).expect("connect");
+                for i in (c..inputs.len()).step_by(CLIENTS) {
+                    let out = client
+                        .infer("tiny", &SAMPLE_DIMS, &inputs[i])
+                        .expect("inference over the wire");
+                    assert!(bits_eq(&out, &reference[i]), "request {i} diverged over the wire");
+                }
+            }));
+        }
+        for w in workers {
+            w.join().expect("client thread");
+        }
+    });
+    let report = handle.shutdown().expect("clean shutdown");
+    assert_eq!(report.served, (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(report.conns_accepted, CLIENTS as u64);
+    assert_eq!(report.errored, 0);
+    assert_eq!(report.engine.requests, CLIENTS * PER_CLIENT);
+}
+
+#[test]
+fn one_connection_can_issue_many_requests_and_survive_request_errors() {
+    let inputs: Vec<Vec<f32>> = (0..3).map(|i| sample(7 ^ i as u64)).collect();
+    let reference = reference_outputs(&inputs);
+    let handle = start(tiny_engine(2), ServerConfig::default());
+    let mut client =
+        Client::connect_retry(&handle.addr().to_string(), Duration::from_secs(10)).unwrap();
+
+    // Unknown model: structured error, connection stays usable.
+    match client.request("no-such-model", &SAMPLE_DIMS, &inputs[0]).unwrap() {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::UnknownModel);
+            assert!(message.contains("no-such-model"), "{message}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // Wrong element count: BAD_SHAPE, connection stays usable.
+    match client.request("tiny", &[3], &[0.0; 3]).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadShape),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // The same connection then serves real requests bit-identically.
+    for (i, x) in inputs.iter().enumerate() {
+        let out = client.infer("tiny", &SAMPLE_DIMS, x).unwrap();
+        assert!(bits_eq(&out, &reference[i]));
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.served, inputs.len() as u64);
+    assert_eq!(report.errored, 2);
+}
+
+// -------------------------------------------------------- hardening
+
+#[test]
+fn bad_magic_gets_a_malformed_error_and_the_server_survives() {
+    let handle = start(tiny_engine(2), ServerConfig::default());
+    let addr = handle.addr();
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    let resp = protocol::read_response(&mut raw).expect("server answers before closing");
+    match resp {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::Malformed),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // Framing was lost, so that connection is closed…
+    let mut probe = [0u8; 1];
+    assert_eq!(raw.read(&mut probe).unwrap_or(0), 0, "connection must be closed");
+    // …but the listener keeps serving fresh connections.
+    let x = sample(11);
+    let reference = reference_outputs(std::slice::from_ref(&x));
+    let mut client =
+        Client::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+    let out = client.infer("tiny", &SAMPLE_DIMS, &x).unwrap();
+    assert!(bits_eq(&out, &reference[0]));
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.malformed, 1);
+}
+
+#[test]
+fn oversized_frames_are_refused_before_allocation() {
+    let handle = start(tiny_engine(2), ServerConfig::default());
+    let mut raw = TcpStream::connect(handle.addr()).unwrap();
+    let mut header = Vec::from(MAGIC);
+    header.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert_eq!(header.len(), HEADER_LEN);
+    raw.write_all(&header).unwrap();
+    match protocol::read_response(&mut raw).expect("server answers before closing") {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::TooLarge),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.malformed, 1);
+    assert_eq!(report.served, 0);
+}
+
+#[test]
+fn mid_frame_disconnect_does_not_take_the_server_down() {
+    let handle = start(tiny_engine(2), ServerConfig::default());
+    let addr = handle.addr();
+    {
+        // A valid header promising 64 bytes, then half a body, then gone.
+        let frame = protocol::encode_request("tiny", &SAMPLE_DIMS, &sample(3)).unwrap();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&frame[..frame.len() / 2]).unwrap();
+    } // dropped mid-frame
+    let x = sample(4);
+    let reference = reference_outputs(std::slice::from_ref(&x));
+    let mut client =
+        Client::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+    let out = client.infer("tiny", &SAMPLE_DIMS, &x).unwrap();
+    assert!(bits_eq(&out, &reference[0]));
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.served, 1);
+}
+
+#[test]
+fn slow_clients_are_dropped_at_the_frame_deadline() {
+    let config = ServerConfig { read_timeout: Duration::from_millis(200), ..Default::default() };
+    let handle = start(tiny_engine(2), config);
+    let mut raw = TcpStream::connect(handle.addr()).unwrap();
+    // First header byte arrives, then the client stalls past the
+    // deadline.
+    raw.write_all(&MAGIC[..1]).unwrap();
+    raw.flush().unwrap();
+    match protocol::read_response(&mut raw).expect("server answers before dropping") {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::Timeout),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.slow_clients, 1);
+}
+
+#[test]
+fn connection_cap_refuses_with_busy_and_keeps_existing_conns_working() {
+    let config = ServerConfig { max_conns: 1, ..Default::default() };
+    let handle = start(tiny_engine(2), config);
+    let addr = handle.addr().to_string();
+    let x = sample(21);
+    let reference = reference_outputs(std::slice::from_ref(&x));
+    let mut first = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    // Prime the connection so the accept loop has registered it.
+    let out = first.infer("tiny", &SAMPLE_DIMS, &x).unwrap();
+    assert!(bits_eq(&out, &reference[0]));
+    // The second connection is refused with a structured BUSY frame.
+    let mut second = TcpStream::connect(handle.addr()).unwrap();
+    match protocol::read_response(&mut second).expect("refused conn still gets an answer") {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::Busy),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // The first connection keeps serving.
+    let out = first.infer("tiny", &SAMPLE_DIMS, &x).unwrap();
+    assert!(bits_eq(&out, &reference[0]));
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.conns_rejected, 1);
+    assert_eq!(report.conns_accepted, 1);
+}
+
+// ------------------------------------------- backpressure + shutdown
+
+/// `tiny_net` behind a builder that sleeps: session construction (which
+/// runs on the engine driver thread at first use) holds requests
+/// in-flight long enough for concurrent submissions to hit the
+/// admission caps deterministically.
+fn slow_engine(max_batch: usize, delay: Duration) -> Engine {
+    let mut engine = Engine::new(max_batch);
+    engine.register("tiny", move |batch| {
+        std::thread::sleep(delay);
+        tiny_net(batch)
+    });
+    engine
+}
+
+#[test]
+fn request_flood_is_rejected_busy_while_admitted_requests_complete() {
+    const FLOOD: usize = 6;
+    let config = ServerConfig {
+        queue_depth: 2,
+        per_model_inflight: 1,
+        ..Default::default()
+    };
+    let handle = start(slow_engine(4, Duration::from_millis(300)), config);
+    let addr = handle.addr().to_string();
+    let inputs: Vec<Vec<f32>> = (0..FLOOD).map(|i| sample(0xF100D ^ i as u64)).collect();
+    let reference = reference_outputs(&inputs);
+
+    let (outputs, busy_total) = std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for x in &inputs {
+            let addr = addr.clone();
+            workers.push(scope.spawn(move || {
+                let mut client =
+                    Client::connect_retry(&addr, Duration::from_secs(10)).expect("connect");
+                // Everyone floods at once; `BUSY` rejections are
+                // retried until the request is admitted.
+                client
+                    .infer_retry_busy("tiny", &SAMPLE_DIMS, x, 10_000, Duration::from_millis(2))
+                    .expect("flooded request must eventually complete")
+            }));
+        }
+        let mut outputs = Vec::new();
+        let mut busy_total = 0u64;
+        for w in workers {
+            let (out, busy) = w.join().expect("client thread");
+            outputs.push(out);
+            busy_total += u64::from(busy);
+        }
+        (outputs, busy_total)
+    });
+
+    for (i, out) in outputs.iter().enumerate() {
+        assert!(bits_eq(out, &reference[i]), "flooded request {i} diverged");
+    }
+    let report = handle.shutdown().unwrap();
+    // The flood was rejected at the admission/queue bound at least
+    // once (six concurrent requests, one admitted at a time), clients
+    // absorbed exactly those rejections, and the queue never grew past
+    // its configured depth.
+    assert!(report.rejected_busy > 0, "a six-way flood must hit BUSY backpressure");
+    assert_eq!(report.rejected_busy, busy_total);
+    assert!(report.max_queue_depth <= 2, "queue depth {} exceeded bound", report.max_queue_depth);
+    assert_eq!(report.served, FLOOD as u64);
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let handle = start(slow_engine(2, Duration::from_millis(400)), ServerConfig::default());
+    let addr = handle.addr().to_string();
+    let x = sample(0x5D01);
+    let reference = reference_outputs(std::slice::from_ref(&x));
+
+    let worker = {
+        let addr = addr.clone();
+        let x = x.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+            client.infer("tiny", &SAMPLE_DIMS, &x)
+        })
+    };
+    // Let the request reach the engine (the slow builder holds it
+    // in-flight), then shut down mid-request.
+    std::thread::sleep(Duration::from_millis(200));
+    let report = handle.shutdown().expect("graceful shutdown");
+    // The in-flight request was drained, not dropped…
+    let out = worker.join().expect("client thread").expect("drained response");
+    assert!(bits_eq(&out, &reference[0]), "drained request must stay bit-identical");
+    assert_eq!(report.served, 1);
+    assert_eq!(report.timeouts, 0);
+}
+
+#[test]
+fn max_requests_stops_the_server_after_a_clean_drain() {
+    const REQUESTS: usize = 3;
+    let config = ServerConfig { max_requests: Some(REQUESTS as u64), ..Default::default() };
+    let handle = start(tiny_engine(2), config);
+    let addr = handle.addr().to_string();
+    let inputs: Vec<Vec<f32>> = (0..REQUESTS).map(|i| sample(0xCAFE ^ i as u64)).collect();
+    let reference = reference_outputs(&inputs);
+
+    let worker = std::thread::spawn(move || {
+        let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        inputs
+            .iter()
+            .map(|x| client.infer("tiny", &SAMPLE_DIMS, x).expect("inference"))
+            .collect::<Vec<_>>()
+    });
+    // `wait` returns on its own once the request budget is served.
+    let report = handle.wait().expect("self-stop");
+    let outputs = worker.join().expect("client thread");
+    for (i, out) in outputs.iter().enumerate() {
+        assert!(bits_eq(out, &reference[i]));
+    }
+    assert_eq!(report.served, REQUESTS as u64);
+}
+
+// ---------------------------------------------------- protocol edges
+
+#[test]
+fn frames_round_trip_through_raw_sockets() {
+    // encode/parse symmetry at the byte level, independent of the
+    // server: what `Client` writes is what `conn` reads.
+    let frame = protocol::encode_request("tiny", &SAMPLE_DIMS, &sample(1)).unwrap();
+    assert_eq!(&frame[..4], &MAGIC);
+    let body_len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+    assert_eq!(body_len, frame.len() - HEADER_LEN);
+    let parsed = protocol::parse_request(&frame[HEADER_LEN..]).unwrap();
+    assert_eq!(parsed.model, "tiny");
+    assert_eq!(parsed.dims, SAMPLE_DIMS.to_vec());
+    assert_eq!(parsed.data.len(), SAMPLE_LEN);
+}
+
+#[test]
+fn error_codes_survive_the_wire() {
+    let resp = Response::Error { code: ErrorCode::Busy, message: "queue full".into() };
+    let frame = protocol::encode_response(&resp).unwrap();
+    let parsed = protocol::parse_response(&frame[HEADER_LEN..]).unwrap();
+    assert_eq!(parsed, resp);
+}
