@@ -32,6 +32,9 @@
 //! concurrent-load leg driving the same stream over loopback TCP
 //! through `gconv_chain::server`, reporting wire rps, p50/p99 latency,
 //! the coalescing rate, and `BUSY` backpressure rejections.
+//! `--degraded` adds one more TCP leg with the fault-injection
+//! registry armed at a 1% wave-failure rate, reporting how much
+//! rps/p99 the self-healing path costs versus the clean load leg.
 
 use gconv_chain::args::{take_flag, take_required_string, take_string, take_usize};
 use gconv_chain::exec::bench::{
@@ -73,6 +76,7 @@ fn main() {
             std::process::exit(2);
         }),
     };
+    let degraded = take_flag(&mut args, "--degraded");
     let model = take_required_string(&mut args, "--model").unwrap_or_else(|e| {
         eprintln!("{e} (a spec-file path)");
         std::process::exit(2);
@@ -85,7 +89,7 @@ fn main() {
                 eprintln!("--model is only supported for the naive-vs-fast bench (not --serve)");
                 std::process::exit(2);
             }
-            run_serve(&args, requests, max_batch, clients, threads, &json_path);
+            run_serve(&args, requests, max_batch, clients, degraded, threads, &json_path);
         } else {
             run(&args, batch, runs, threads, &json_path, model.as_deref());
         }
@@ -118,6 +122,7 @@ fn run_serve(
     requests: usize,
     max_batch: usize,
     clients: usize,
+    degraded: bool,
     requested: usize,
     json: &str,
 ) {
@@ -129,9 +134,12 @@ fn run_serve(
     for code in select_codes(codes) {
         eprintln!(
             "serve-benchmarking {code} (batch 1, {requests} requests, micro-batch ≤ \
-             {max_batch}, {clients} load client(s), {threads} threads)…"
+             {max_batch}, {clients} load client(s), degraded={degraded}, {threads} threads)…"
         );
-        results.push(bench_serve(code, requests, max_batch, clients).expect("serve bench failed"));
+        results.push(
+            bench_serve(code, requests, max_batch, clients, degraded)
+                .expect("serve bench failed"),
+        );
     }
     let rows: Vec<Vec<String>> = results.iter().map(serve_row).collect();
     print_table(
@@ -149,15 +157,18 @@ fn run_serve(
             "load r/s",
             "load p99",
             "busy",
+            "deg r/s",
             "bit-id",
         ],
         &rows,
     );
     write_serve_json(json, &results, threads).expect("writing serve JSON failed");
     println!("wrote {json}");
-    let wire_diverged = results
-        .iter()
-        .any(|b| !b.bit_identical || !b.load.as_ref().is_none_or(|l| l.bit_identical));
+    let wire_diverged = results.iter().any(|b| {
+        !b.bit_identical
+            || !b.load.as_ref().is_none_or(|l| l.bit_identical)
+            || !b.degraded.as_ref().is_none_or(|d| d.bit_identical)
+    });
     if wire_diverged {
         eprintln!("FAIL: a serving path diverged from the per-request outputs");
         std::process::exit(1);
@@ -187,7 +198,14 @@ fn serve_row(b: &ServeBench) -> Vec<String> {
             Some(l) => l.busy_rejections.to_string(),
             None => "n/a".to_string(),
         },
-        (b.bit_identical && b.load.as_ref().is_none_or(|l| l.bit_identical)).to_string(),
+        match &b.degraded {
+            Some(d) => format!("{:.2}", d.rps()),
+            None => "n/a".to_string(),
+        },
+        (b.bit_identical
+            && b.load.as_ref().is_none_or(|l| l.bit_identical)
+            && b.degraded.as_ref().is_none_or(|d| d.bit_identical))
+        .to_string(),
     ]
 }
 

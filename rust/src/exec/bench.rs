@@ -25,9 +25,10 @@ use crate::gconv::lower::{lower_network, Mode};
 use crate::ir::{Layer, Network};
 use crate::mapping::fuse_executable;
 use crate::networks::benchmark_with_batch;
-use crate::server::{self, Client, ServerConfig};
+use crate::server::{self, Backoff, Client, ErrorCode, Response, ServerConfig};
 
 use super::chain_exec::{ChainExec, RunReport};
+use super::faults::{self, FaultKind, FaultPlan, FaultRule, Trigger};
 use super::serve::{Engine, Session};
 use super::tensor::Tensor;
 
@@ -290,6 +291,51 @@ pub struct ServeBench {
     /// over loopback TCP from concurrent clients (`None` when the
     /// load leg was skipped with `clients == 0`).
     pub load: Option<LoadBench>,
+    /// The degraded-mode leg: the load stream once more with the
+    /// fault-injection registry armed at [`DEGRADED_FAULT_RATE`]
+    /// (`None` unless requested).
+    pub degraded: Option<DegradedBench>,
+}
+
+/// Injected-failure probability of the degraded serving leg: each
+/// per-model wave group fails (gracefully, `INTERNAL`) with this
+/// probability.
+pub const DEGRADED_FAULT_RATE: f64 = 0.01;
+
+/// Throughput/latency of the serving front *while faults are being
+/// injected* — the self-healing overhead measured against the clean
+/// [`LoadBench`]: how much rps/p99 degrade when
+/// [`DEGRADED_FAULT_RATE`] of wave groups fail and the supervisor
+/// purges/rebuilds engine state.
+#[derive(Clone, Debug)]
+pub struct DegradedBench {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests attempted across all clients.
+    pub requests: usize,
+    /// Requests answered with an output frame.
+    pub completed: usize,
+    /// Requests absorbed as injected `INTERNAL` failures.
+    pub injected_errors: u64,
+    /// `BUSY` rejections absorbed (and retried) by the clients.
+    pub busy_rejections: u64,
+    /// Wall seconds from first connect to last response.
+    pub seconds: f64,
+    /// Median end-to-end latency of *successful* requests (seconds).
+    pub p50_s: f64,
+    /// 99th-percentile end-to-end latency of successful requests.
+    pub p99_s: f64,
+    /// Whether every successful response matched the per-request path
+    /// bit-for-bit (injection must never corrupt numerics, only fail
+    /// requests).
+    pub bit_identical: bool,
+}
+
+impl DegradedBench {
+    /// Successful requests per second across all clients.
+    pub fn rps(&self) -> f64 {
+        rps(self.completed, self.seconds)
+    }
 }
 
 /// Concurrent-load measurement over the TCP serving front
@@ -374,12 +420,15 @@ fn rps(requests: usize, seconds: f64) -> f64 {
 /// [`ServeBench`]). All paths see the same deterministic request
 /// stream and synthesized weights; outputs are gated bit-identical.
 /// With `clients > 0` a fourth leg drives the stream over loopback TCP
-/// from that many concurrent connections (see [`LoadBench`]).
+/// from that many concurrent connections (see [`LoadBench`]); with
+/// `degraded` also set, a fifth leg repeats it with the fault registry
+/// armed at [`DEGRADED_FAULT_RATE`] (see [`DegradedBench`]).
 pub fn bench_serve(
     code: &str,
     requests: usize,
     max_batch: usize,
     clients: usize,
+    degraded: bool,
 ) -> Result<ServeBench> {
     ensure!(requests > 0, "serve bench needs at least one request");
     let net = benchmark_with_batch(code, 1);
@@ -460,6 +509,14 @@ pub fn bench_serve(
         None
     };
 
+    // (e) degraded serving: the load stream again with the fault
+    // registry armed — measures what self-healing costs under load.
+    let deg = if degraded && clients > 0 {
+        Some(bench_degraded(code, clients, &inputs, &dims, &per_outputs, max_batch)?)
+    } else {
+        None
+    };
+
     Ok(ServeBench {
         net: net.name.clone(),
         requests,
@@ -473,6 +530,7 @@ pub fn bench_serve(
         engine_batches: engine.stats().batches - warm_batches,
         bit_identical,
         load,
+        degraded: deg,
     })
 }
 
@@ -564,6 +622,135 @@ fn bench_load(
     })
 }
 
+/// The degraded-mode leg of [`bench_serve`]: the same loopback load
+/// pattern as [`bench_load`], but with the fault registry armed so
+/// [`DEGRADED_FAULT_RATE`] of per-model wave groups fail gracefully.
+/// Clients absorb injected `INTERNAL` failures (counted, not retried)
+/// and retry `BUSY` with jittered backoff; successful responses must
+/// still be bit-identical — injection degrades availability, never
+/// numerics.
+fn bench_degraded(
+    code: &str,
+    clients: usize,
+    inputs: &[Tensor],
+    dims: &[usize],
+    reference: &[Tensor],
+    max_batch: usize,
+) -> Result<DegradedBench> {
+    let requests = inputs.len();
+    let mut engine = Engine::new(max_batch);
+    engine.submit(code, u64::MAX, inputs[0].data().to_vec())?;
+    ensure!(engine.drain()?.len() == 1, "degraded warm-up dropped its request");
+    faults::silence_injected_panics();
+    let _faults = FaultPlan::new(0xDE6_AD)
+        .with(FaultRule {
+            site: faults::SITE_SCHEDULER_WAVE.to_string(),
+            scope: None,
+            kind: FaultKind::Err,
+            trigger: Trigger::Prob(DEGRADED_FAULT_RATE),
+        })
+        .arm();
+    let config = ServerConfig {
+        queue_depth: max_batch.max(clients),
+        ..ServerConfig::default()
+    };
+    let handle = server::serve("127.0.0.1:0", engine, config)?;
+    let addr = handle.addr().to_string();
+    let sample_dims = &dims[1..];
+    let t0 = Instant::now();
+    let joined = std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let addr = addr.clone();
+            workers.push(scope.spawn(
+                move || -> Result<(Vec<(usize, Vec<f32>, f64)>, u64, u64)> {
+                    let mut client = Client::connect_retry(&addr, Duration::from_secs(10))?;
+                    let mut done = Vec::new();
+                    let mut busy = 0u64;
+                    let mut injected = 0u64;
+                    for i in (c..requests).step_by(clients) {
+                        let mut backoff = Backoff::new(
+                            c as u64,
+                            Duration::from_millis(1),
+                            Duration::from_millis(16),
+                        );
+                        let t = Instant::now();
+                        loop {
+                            match client.request(code, sample_dims, inputs[i].data())? {
+                                Response::Output { data, .. } => {
+                                    done.push((i, data, t.elapsed().as_secs_f64()));
+                                    break;
+                                }
+                                Response::Error { code: ErrorCode::Busy, .. } => {
+                                    busy += 1;
+                                    backoff.sleep();
+                                }
+                                // An injected failure: absorbed, not
+                                // retried — the leg measures the front
+                                // staying up, not retry loops.
+                                Response::Error { .. } => {
+                                    injected += 1;
+                                    break;
+                                }
+                                Response::Health(_) => {
+                                    anyhow::bail!("unexpected health frame in the degraded leg")
+                                }
+                            }
+                        }
+                    }
+                    Ok((done, busy, injected))
+                },
+            ));
+        }
+        workers
+            .into_iter()
+            .map(|w| w.join().map_err(|_| anyhow!("degraded client thread panicked"))?)
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let seconds = t0.elapsed().as_secs_f64();
+    let _report = handle.shutdown()?;
+
+    let mut bit_identical = true;
+    let mut latencies = Vec::with_capacity(requests);
+    let mut completed = 0usize;
+    let mut busy_rejections = 0u64;
+    let mut injected_errors = 0u64;
+    for (done, busy, injected) in joined {
+        busy_rejections += busy;
+        injected_errors += injected;
+        for (i, out, lat) in done {
+            completed += 1;
+            latencies.push(lat);
+            let want = reference[i].data();
+            bit_identical &= out.len() == want.len()
+                && out.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+        }
+    }
+    ensure!(
+        completed as u64 + injected_errors == requests as u64,
+        "degraded leg lost requests: {completed} completed + {injected_errors} failed != {requests}"
+    );
+    latencies.sort_by(f64::total_cmp);
+    let pct = |p: usize| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            latencies[(latencies.len() * p / 100).min(latencies.len() - 1)]
+        }
+    };
+    Ok(DegradedBench {
+        clients,
+        requests,
+        completed,
+        injected_errors,
+        busy_rejections,
+        seconds,
+        p50_s: pct(50),
+        p99_s: pct(99),
+        bit_identical,
+    })
+}
+
 /// Render serve measurements as the `BENCH_serve.json` document.
 pub fn serve_to_json(benches: &[ServeBench], threads: usize) -> String {
     let mut s = String::new();
@@ -616,6 +803,28 @@ pub fn serve_to_json(benches: &[ServeBench], threads: usize) -> String {
                     l.busy_rejections,
                     l.max_queue_depth,
                     l.bit_identical
+                ));
+            }
+        }
+        match &b.degraded {
+            None => s.push_str("      \"degraded\": null,\n"),
+            Some(d) => {
+                s.push_str(&format!(
+                    "      \"degraded\": {{\"fault_rate\": {}, \"clients\": {}, \
+                     \"requests\": {}, \"completed\": {}, \"injected_errors\": {}, \
+                     \"busy_rejected\": {}, \"seconds\": {}, \"rps\": {}, \"p50_ms\": {}, \
+                     \"p99_ms\": {}, \"bit_identical\": {}}},\n",
+                    jnum(DEGRADED_FAULT_RATE, 4),
+                    d.clients,
+                    d.requests,
+                    d.completed,
+                    d.injected_errors,
+                    d.busy_rejections,
+                    jnum(d.seconds, 6),
+                    jnum(d.rps(), 3),
+                    jnum(d.p50_s * 1e3, 4),
+                    jnum(d.p99_s * 1e3, 4),
+                    d.bit_identical
                 ));
             }
         }
@@ -809,6 +1018,7 @@ mod tests {
             engine_batches: 4,
             bit_identical: true,
             load: None,
+            degraded: None,
         };
         assert_eq!(b.speedup(), Some(2.0));
         assert_eq!(b.bind_amortization(), Some(4.0));
@@ -819,6 +1029,7 @@ mod tests {
         assert!(json.contains("\"p50_ms\": 250.0000"));
         assert!(json.contains("\"bit_identical\": true"));
         assert!(json.contains("\"load\": null"));
+        assert!(json.contains("\"degraded\": null"));
         assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
 
         let mut b = b;
@@ -834,18 +1045,34 @@ mod tests {
             max_queue_depth: 3,
             bit_identical: true,
         });
+        b.degraded = Some(DegradedBench {
+            clients: 3,
+            requests: 4,
+            completed: 3,
+            injected_errors: 1,
+            busy_rejections: 0,
+            seconds: 2.0,
+            p50_s: 0.25,
+            p99_s: 0.5,
+            bit_identical: true,
+        });
+        assert_eq!(b.degraded.as_ref().unwrap().rps(), 1.5);
         let json = serve_to_json(&[b], 2);
         assert!(json.contains("\"load\": {\"clients\": 3"));
         assert!(json.contains("\"coalescing_rate\": 0.5000"));
         assert!(json.contains("\"busy_rejected\": 2"));
         assert!(json.contains("\"max_queue_depth\": 3"));
+        assert!(json.contains("\"degraded\": {\"fault_rate\": 0.0100"));
+        assert!(json.contains("\"injected_errors\": 1"));
         assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
     }
 
     #[test]
     #[ignore = "full MobileNet serve loop; CI runs it in release via `-- --ignored`"]
     fn serve_bench_mobilenet_is_bit_identical_and_amortizes_binds() {
-        let b = bench_serve("MN", 4, 4, 2).unwrap();
+        // Degraded leg off: the armed fault registry is process-global
+        // and other `--ignored` lib tests may run concurrently.
+        let b = bench_serve("MN", 4, 4, 2, false).unwrap();
         assert!(b.bit_identical, "session/engine outputs must match per-request");
         assert!(b.session_binds > 0);
         assert_eq!(b.per_request_binds, b.requests * b.session_binds);

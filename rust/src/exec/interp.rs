@@ -72,6 +72,7 @@ use crate::gconv::op::{
     GconvOp, MainOp, PostOp, PreOp, ReduceOp, ScalarStage, StageStack, MAX_FUSED_STAGES,
 };
 
+use super::faults;
 use super::kernels::{self, GEMM_MIN_REDUCTION, KernelTier};
 use super::pool::BufferPool;
 use super::tensor::{row_major_strides, Tensor};
@@ -806,6 +807,7 @@ pub(super) fn eval_bound(
     pool: Option<&BufferPool>,
     force_naive: bool,
 ) -> Result<Tensor> {
+    faults::trip(faults::SITE_KERNELS_EVAL)?;
     bound.check_operands(input, kernel)?;
     if bound.out_total == 0 {
         bail!("{}: empty output", bound.name);

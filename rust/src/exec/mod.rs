@@ -49,6 +49,12 @@
 //! * [`bench`] — the naive-vs-fast and fused-vs-unfused measurement
 //!   harness behind `cargo bench --bench native_exec` and
 //!   `BENCH_native_exec.json`.
+//! * [`faults`] — deterministic fault injection: named sites threaded
+//!   through the hot path (`pool.alloc`, `kernels.eval`, `serve.step`,
+//!   `scheduler.wave`, `conn.read`), armed by a seeded [`FaultPlan`]
+//!   from tests or `serve --faults`; a single relaxed atomic check when
+//!   disarmed. The chaos suite (`rust/tests/chaos.rs`) drives the
+//!   server's panic isolation, quarantine, and deadline paths with it.
 //!
 //! The [`crate::coordinator`] exposes this engine as the default
 //! [`crate::coordinator::Backend`] behind its batching request API; the
@@ -71,6 +77,7 @@ use anyhow::Result;
 
 pub mod bench;
 pub mod chain_exec;
+pub mod faults;
 pub mod interp;
 mod kernels;
 mod pool;
@@ -79,6 +86,7 @@ mod special;
 pub mod tensor;
 
 pub use chain_exec::{ChainExec, EntryRun, RunReport, TrimPolicy};
+pub use faults::{FaultGuard, FaultKind, FaultPlan, FaultRule, Trigger};
 pub use interp::{eval_gconv, eval_gconv_naive, lut_apply, lut_known, plan_tier, LutFn};
 pub use kernels::{GEMM_MIN_REDUCTION, KernelTier};
 pub use pool::{BufferPool, PoolStats};

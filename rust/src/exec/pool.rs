@@ -31,6 +31,8 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use super::faults;
+
 /// Bytes the default pool will shelve before dropping returned buffers.
 const DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
 
@@ -90,7 +92,12 @@ impl BufferPool {
     /// (contents stale — the caller overwrites every element), freshly
     /// zero-initialized otherwise.
     pub fn take(&self, n: usize) -> Vec<f32> {
-        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        // Before the lock: an injected panic can never poison the shelf
+        // mid-update (and the recovery below keeps even a poisoned
+        // guard usable — every critical section leaves the shelf
+        // consistent).
+        faults::trip_panic(faults::SITE_POOL_ALLOC);
+        let mut guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         let shelf = &mut *guard;
         if let Some(bucket) = shelf.buckets.get_mut(&n) {
             if let Some((_, buf)) = bucket.pop() {
@@ -112,7 +119,7 @@ impl BufferPool {
         if n == 0 {
             return;
         }
-        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let mut guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         let shelf = &mut *guard;
         if shelf.held_bytes + n * 4 > self.capacity_bytes {
             shelf.stats.dropped += 1;
@@ -127,7 +134,7 @@ impl BufferPool {
     /// Open a new run epoch: buffers recycled from now on are considered
     /// part of the current working set by [`BufferPool::trim_stale`].
     pub fn begin_run(&self) {
-        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let mut guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         guard.epoch += 1;
     }
 
@@ -136,7 +143,7 @@ impl BufferPool {
     /// cycled through stays, leftovers from earlier, differently-shaped
     /// workloads are released.
     pub fn trim_stale(&self) {
-        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let mut guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         let shelf = &mut *guard;
         let cur = shelf.epoch;
         let mut freed = 0usize;
@@ -155,7 +162,7 @@ impl BufferPool {
 
     /// Drop every shelved buffer (counted as trimmed).
     pub fn trim_all(&self) {
-        let mut guard = self.shelf.lock().expect("buffer pool poisoned");
+        let mut guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         let shelf = &mut *guard;
         let count: usize = shelf.buckets.values().map(Vec::len).sum();
         shelf.buckets.clear();
@@ -165,13 +172,13 @@ impl BufferPool {
 
     /// Cumulative allocation counters.
     pub fn stats(&self) -> PoolStats {
-        let guard = self.shelf.lock().expect("buffer pool poisoned");
+        let guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         guard.stats
     }
 
     /// Bytes currently shelved.
     pub fn held_bytes(&self) -> usize {
-        let guard = self.shelf.lock().expect("buffer pool poisoned");
+        let guard = self.shelf.lock().unwrap_or_else(|e| e.into_inner());
         guard.held_bytes
     }
 

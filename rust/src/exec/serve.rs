@@ -53,6 +53,7 @@ use crate::mapping::fuse_executable;
 use crate::networks::{benchmark_with_batch, BENCHMARK_CODES};
 
 use super::bench::input_spec;
+use super::faults;
 use super::chain_exec::{
     build_levels, collect_outputs, deps, external_specs, materialize_externals, reachable,
     use_counts, validate_chain, EntryRun, RunReport, TrimPolicy, SYNTH_SCALE, SYNTH_SEED,
@@ -726,6 +727,7 @@ impl Engine {
             return Ok(Vec::new());
         };
         let code = front.net.clone();
+        faults::trip_scoped(faults::SITE_SERVE_STEP, &code)?;
         let cap = if self.nets[&code].per_sample { self.max_batch } else { 1 };
         let picked: Vec<usize> = self
             .queue
@@ -758,6 +760,22 @@ impl Engine {
     /// Engine counters.
     pub fn stats(&self) -> EngineStats {
         self.stats
+    }
+
+    /// Drop every trace of `code` except its registered builder: queued
+    /// requests (returning how many were discarded — the caller answers
+    /// them), cached sessions, and the resolved [`NetEntry`]. This is
+    /// the server supervisor's recovery hook: after a panic inside a
+    /// wave the model's engine state may be mid-update, so it is
+    /// rebuilt from the builder on the next request — other models'
+    /// sessions are untouched and keep serving bit-identically.
+    pub fn purge(&mut self, code: &str) -> usize {
+        let before = self.queue.len();
+        self.queue.retain(|p| p.net != code);
+        let dropped = before - self.queue.len();
+        self.sessions.retain(|k, _| k.net != code);
+        self.nets.remove(code);
+        dropped
     }
 
     /// Allocation counters of the shared buffer pool.

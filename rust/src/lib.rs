@@ -31,8 +31,10 @@
 //!   kernels), special-op routines, parallel chain scheduler with
 //!   up-front operand validation and buffer-pool trim policies,
 //!   bind-once/run-many serving (`exec::serve`: pre-bound `Session`s,
-//!   the chain-caching and request-coalescing `Engine`), and the
-//!   naive-vs-fast-vs-fused + serve bench harnesses.
+//!   the chain-caching and request-coalescing `Engine`), seeded
+//!   fault injection with named sites through the serving hot path
+//!   (`exec::faults`), and the naive-vs-fast-vs-fused + serve bench
+//!   harnesses.
 //! * [`accel`] — accelerator structures (Table 4) and baseline modes.
 //! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion
 //!   (analytical *and* executable policies over shared legality).
@@ -46,7 +48,10 @@
 //! * [`server`] — TCP serving front over `exec::serve::Engine`:
 //!   length-prefixed binary protocol with hard frame caps, bounded
 //!   submission queue with `BUSY` backpressure, per-connection read
-//!   deadlines, graceful drain on shutdown, and a blocking client.
+//!   deadlines, graceful drain on shutdown, and a blocking client with
+//!   jittered `BUSY` backoff. The driver doubles as a supervisor:
+//!   panics are caught per wave, repeat offenders are quarantined, and
+//!   a `health` frame exposes the counters + quarantine list.
 //! * [`coordinator`] — batches request streams onto a pluggable
 //!   execution backend (native by default, PJRT with `pjrt`).
 //! * [`report`] — table/figure printers used by benches and the CLI.

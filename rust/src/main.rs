@@ -29,6 +29,8 @@ USAGE:
     gconv-chain client ADDR [NET] [REQUESTS] drive a TCP serving front; verify
                                              responses bit-identical to a local
                                              in-process engine
+    gconv-chain stats ADDR                   fetch a serving front's live health
+                                             snapshot (counters + quarantine)
     gconv-chain specs                        list + validate bundled model specs
 
 OPTIONS:
@@ -45,6 +47,11 @@ OPTIONS:
     --max-requests N
                    with --listen: serve N requests, then shut down
                    gracefully (smoke-test mode; default: run until killed)
+    --faults SPEC  with --listen: arm the seeded fault-injection registry
+                   for the server's lifetime, e.g.
+                   \"seed=7,serve.step[MN]=panic@nth:3,conn.read=delay:5@p:0.1\"
+                   (sites: pool.alloc kernels.eval serve.step
+                   scheduler.wave conn.read; chaos/soak testing only)
 
     NET   = AN GLN DN MN ZFFR C3D CapNN, a bundled spec name, or (with
             --model) a spec file path
@@ -61,6 +68,7 @@ fn main() {
             Some("run") => cmd_run(&args[1..]),
             Some("serve") => cmd_serve(&args[1..]),
             Some("client") => cmd_client(&args[1..]),
+            Some("stats") => cmd_stats(&args[1..]),
             Some("specs") => cmd_specs(),
             _ => {
                 println!("{USAGE}");
@@ -282,6 +290,7 @@ struct ServeOpts {
     fuse: bool,
     listen: Option<String>,
     max_requests: Option<u64>,
+    faults: Option<gconv_chain::exec::FaultPlan>,
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
@@ -299,7 +308,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         0 => 8,
         n => n,
     };
-    let opts = ServeOpts { max_batch, fuse, listen, max_requests };
+    let faults = gconv_chain::args::take_required_string(&mut args, "--faults")
+        .map_err(|e| anyhow::anyhow!("{e} (a fault spec, e.g. conn.read=delay:5@p:0.1)"))?
+        .map(|spec| {
+            gconv_chain::exec::FaultPlan::parse(&spec)
+                .map_err(|e| anyhow::anyhow!("--faults {spec:?}: {e}"))
+        })
+        .transpose()?;
+    anyhow::ensure!(
+        faults.is_none() || listen.is_some(),
+        "--faults requires --listen (it arms the serving front's injection sites)"
+    );
+    let opts = ServeOpts { max_batch, fuse, listen, max_requests, faults };
     let mut engine = Engine::new(max_batch).with_fuse(fuse);
     // The served network: a `--model` spec, a benchmark code, a spec
     // file path, or a bundled spec stem (default MN). Specs register
@@ -340,8 +360,8 @@ fn serve_dispatch(
     net1: Network,
     opts: ServeOpts,
 ) -> Result<()> {
-    match opts.listen {
-        Some(addr) => serve_network(engine, args, code, addr, opts.max_requests),
+    match opts.listen.clone() {
+        Some(addr) => serve_network(engine, args, code, addr, opts),
         None => serve_requests(&mut engine, args, code, net1, opts.max_batch, opts.fuse),
     }
 }
@@ -353,13 +373,22 @@ fn serve_network(
     args: Vec<String>,
     code: String,
     addr: String,
-    max_requests: Option<u64>,
+    opts: ServeOpts,
 ) -> Result<()> {
     use gconv_chain::server::{serve, ServerConfig};
 
     if let Some(extra) = args.first() {
         anyhow::bail!("unexpected argument {extra:?} with --listen (requests come over TCP)");
     }
+    let max_requests = opts.max_requests;
+    // Armed for the whole server lifetime; the guard disarms on exit.
+    // Injected panics are expected (and caught by the supervisor), so
+    // suppress their backtrace noise.
+    let _fault_guard = opts.faults.map(|plan| {
+        gconv_chain::exec::faults::silence_injected_panics();
+        println!("fault injection armed: {} rule(s), seed {}", plan.rules.len(), plan.seed);
+        plan.arm()
+    });
     let config = ServerConfig { max_requests, ..ServerConfig::default() };
     let handle = serve(&addr, engine, config)?;
     match max_requests {
@@ -368,18 +397,34 @@ fn serve_network(
     }
     let report = handle.wait()?;
     println!(
-        "served {} request(s) ({} busy-rejected, {} error(s), {} timeout(s), {} malformed, \
-         {} slow client(s)); {} connection(s) accepted ({} refused), peak queue depth {}",
+        "served {} request(s) ({} busy-rejected, {} error(s), {} timeout(s), {} expired, \
+         {} malformed, {} slow client(s)); {} connection(s) accepted ({} refused), \
+         peak queue depth {}",
         report.served,
         report.rejected_busy,
         report.errored,
         report.timeouts,
+        report.expired,
         report.malformed,
         report.slow_clients,
         report.conns_accepted,
         report.conns_rejected,
         report.max_queue_depth
     );
+    if report.panics > 0 || !report.quarantined.is_empty() {
+        let names: Vec<String> = report
+            .quarantined
+            .iter()
+            .map(|q| format!("{} ({} strike(s))", q.model, q.strikes))
+            .collect();
+        println!(
+            "supervisor: {} panic(s) caught, {} submit(s) refused while quarantined, \
+             quarantined: [{}]",
+            report.panics,
+            report.quarantine_rejected,
+            names.join(", ")
+        );
+    }
     let e = report.engine;
     println!(
         "engine: {} micro-batch(es), {} coalesced, {} session(s) built, {} cache hit(s), \
@@ -489,6 +534,50 @@ fn cmd_client(args: &[String]) -> Result<()> {
         pct(50) * 1e3,
         pct(99) * 1e3
     );
+    Ok(())
+}
+
+/// `stats ADDR`: fetch and print a serving front's health snapshot.
+fn cmd_stats(args: &[String]) -> Result<()> {
+    use gconv_chain::server::Client;
+    use std::time::Duration;
+
+    let Some(addr) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    if let Some(extra) = args.get(1) {
+        anyhow::bail!("unexpected argument {extra:?} (stats takes only ADDR)");
+    }
+    let mut client = Client::connect_retry(addr, Duration::from_secs(10))?;
+    client.set_timeouts(Duration::from_secs(10), Duration::from_secs(10))?;
+    let h = client.health()?;
+    println!("health of {addr}:");
+    for (name, v) in [
+        ("submitted", h.submitted),
+        ("completed", h.completed),
+        ("rejected_busy", h.rejected_busy),
+        ("errored", h.errored),
+        ("timeouts", h.timeouts),
+        ("expired", h.expired),
+        ("quarantine_rejected", h.quarantine_rejected),
+        ("malformed", h.malformed),
+        ("slow_clients", h.slow_clients),
+        ("conns_accepted", h.conns_accepted),
+        ("conns_rejected", h.conns_rejected),
+        ("panics", h.panics),
+        ("queue_depth", h.queue_depth),
+        ("max_queue_depth", h.max_queue_depth),
+    ] {
+        println!("  {name:<20} {v}");
+    }
+    if h.quarantined.is_empty() {
+        println!("  quarantined          (none)");
+    } else {
+        for q in &h.quarantined {
+            println!("  quarantined          {} ({} strike(s))", q.model, q.strikes);
+        }
+    }
     Ok(())
 }
 

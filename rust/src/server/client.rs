@@ -4,15 +4,67 @@
 //! sequentially: write a request frame, read one response frame.
 //! [`Client::infer_retry_busy`] layers the retry discipline the
 //! backpressure design expects — a `BUSY` rejection means "the bounded
-//! queue is full right now", so the client backs off and resends, and
-//! reports how many rejections it absorbed.
+//! queue is full right now", so the client backs off with seeded,
+//! jittered exponential delays ([`Backoff`]) and resends, and reports
+//! how many rejections it absorbed. [`Client::health`] fetches the
+//! server's live counter/quarantine snapshot.
 
+use std::io::Write;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::protocol::{read_response, write_request, ErrorCode, Response};
+use crate::prop::Rng;
+
+use super::protocol::{
+    encode_health_request, read_response, write_request, ErrorCode, HealthSnapshot, Response,
+};
+
+/// Seeded equal-jitter exponential backoff schedule.
+///
+/// Delay `i` (0-based) is drawn uniformly from `[base·2^i / 2,
+/// base·2^i)`, capped at `cap` — the standard "equal jitter" variant:
+/// enough spread to decorrelate a thundering herd of retriers, while
+/// keeping at least half the exponential spacing. The schedule is a
+/// pure function of `(seed, attempt sequence)`: [`Backoff::next_delay`]
+/// never sleeps, so tests assert the exact schedule without waiting on
+/// wall-clock time.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Schedule starting at `base`, never exceeding `cap` per delay.
+    pub fn new(seed: u64, base: Duration, cap: Duration) -> Backoff {
+        Backoff { base, cap, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// The next delay in the schedule (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << self.attempt.min(16));
+        let ceil = exp.min(self.cap);
+        if self.attempt < u32::MAX {
+            self.attempt += 1;
+        }
+        let half = ceil / 2;
+        half + Duration::from_secs_f64((ceil - half).as_secs_f64() * self.rng.f64())
+    }
+
+    /// Delays handed out so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Sleep for the next delay in the schedule.
+    pub fn sleep(&mut self) {
+        std::thread::sleep(self.next_delay());
+    }
+}
 
 /// A connected protocol client.
 pub struct Client {
@@ -76,12 +128,29 @@ impl Client {
             Response::Error { code, message } => {
                 bail!("server error {}: {message}", code.name())
             }
+            Response::Health(_) => bail!("unexpected health frame answering an inference"),
         }
     }
 
-    /// Send one request, retrying `BUSY` rejections with a fixed
-    /// backoff. Returns the output and how many `BUSY` responses were
-    /// absorbed along the way.
+    /// Fetch the server's live health snapshot (counters + quarantine).
+    pub fn health(&mut self) -> Result<HealthSnapshot> {
+        self.stream
+            .write_all(&encode_health_request())
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| anyhow!("sending health request: {e}"))?;
+        match read_response(&mut self.stream).map_err(|e| anyhow!("reading response: {e}"))? {
+            Response::Health(h) => Ok(h),
+            Response::Error { code, message } => {
+                bail!("server error {}: {message}", code.name())
+            }
+            Response::Output { .. } => bail!("unexpected output frame answering a health probe"),
+        }
+    }
+
+    /// Send one request, retrying `BUSY` rejections with seeded,
+    /// jittered exponential backoff starting at `backoff` (capped at
+    /// 16× and bounded to at most two minutes of cumulative sleeping).
+    /// Returns the output and how many `BUSY` responses were absorbed.
     pub fn infer_retry_busy(
         &mut self,
         model: &str,
@@ -91,17 +160,68 @@ impl Client {
         backoff: Duration,
     ) -> Result<(Vec<f32>, u32)> {
         let mut busy = 0;
+        let mut schedule = Backoff::new(0x9e3779b97f4a7c15, backoff, backoff.saturating_mul(16));
+        let mut slept = Duration::ZERO;
+        const MAX_ELAPSED: Duration = Duration::from_secs(120);
         loop {
             match self.request(model, dims, data)? {
                 Response::Output { data, .. } => return Ok((data, busy)),
-                Response::Error { code: ErrorCode::Busy, .. } if busy < retries => {
+                Response::Error { code: ErrorCode::Busy, .. }
+                    if busy < retries && slept < MAX_ELAPSED =>
+                {
                     busy += 1;
-                    std::thread::sleep(backoff);
+                    let delay = schedule.next_delay();
+                    slept += delay;
+                    std::thread::sleep(delay);
                 }
                 Response::Error { code, message } => {
                     bail!("server error {}: {message}", code.name())
                 }
+                Response::Health(_) => bail!("unexpected health frame answering an inference"),
             }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedules_deterministically_from_the_seed() {
+        // Pure schedule — no sleeping: two instances with one seed
+        // agree delay-for-delay, a different seed diverges somewhere.
+        let base = Duration::from_millis(2);
+        let cap = Duration::from_millis(32);
+        let mut a = Backoff::new(42, base, cap);
+        let mut b = Backoff::new(42, base, cap);
+        let mut c = Backoff::new(43, base, cap);
+        let sa: Vec<Duration> = (0..12).map(|_| a.next_delay()).collect();
+        let sb: Vec<Duration> = (0..12).map(|_| b.next_delay()).collect();
+        let sc: Vec<Duration> = (0..12).map(|_| c.next_delay()).collect();
+        assert_eq!(sa, sb);
+        assert_ne!(sa, sc);
+        assert_eq!(a.attempts(), 12);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_within_jitter_bounds_and_caps() {
+        let base = Duration::from_millis(2);
+        let cap = Duration::from_millis(32);
+        let mut b = Backoff::new(7, base, cap);
+        for i in 0..12u32 {
+            let ceil = (base * 2u32.pow(i.min(16))).min(cap);
+            let d = b.next_delay();
+            assert!(d >= ceil / 2, "delay {i}: {d:?} below the equal-jitter floor {:?}", ceil / 2);
+            assert!(d < ceil + Duration::from_micros(1), "delay {i}: {d:?} above ceiling {ceil:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_never_overflows_on_deep_attempts() {
+        let mut b = Backoff::new(1, Duration::from_secs(1), Duration::from_secs(30));
+        for _ in 0..100 {
+            assert!(b.next_delay() <= Duration::from_secs(30));
         }
     }
 }

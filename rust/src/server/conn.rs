@@ -17,8 +17,11 @@ use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::exec::faults;
+
 use super::protocol::{
-    parse_frame_header, parse_request, write_response, ErrorCode, ProtoError, Response, HEADER_LEN,
+    parse_frame_header, parse_incoming, write_response, ErrorCode, Incoming, ProtoError, Response,
+    HEADER_LEN,
 };
 use super::scheduler::{Counters, SchedulerHandle};
 
@@ -155,10 +158,25 @@ pub fn handle_conn(
             }
             Err(ReadStop::Io) => break,
         };
+        // Fault site `conn.read`: fires once per complete frame. An
+        // injected `Err` degrades exactly like a transport fault — a
+        // structured INTERNAL answer on a still-framed connection.
+        if let Err(e) = faults::trip(faults::SITE_CONN_READ) {
+            if send_error(&mut stream, ErrorCode::Internal, e.to_string()) {
+                continue;
+            }
+            break;
+        }
         // A complete-but-invalid body keeps its framing, so the
         // connection stays usable after the error response.
-        let request = match parse_request(&body) {
-            Ok(req) => req,
+        let request = match parse_incoming(&body) {
+            Ok(Incoming::Request(req)) => req,
+            Ok(Incoming::Health) => {
+                if write_response(&mut stream, &Response::Health(sched.health())).is_err() {
+                    break;
+                }
+                continue;
+            }
             Err(e) => {
                 counters.malformed.fetch_add(1, Ordering::Relaxed);
                 if send_error(&mut stream, e.code, e.msg) {

@@ -23,8 +23,8 @@ use anyhow::{anyhow, Context, Result};
 use crate::exec::serve::{Engine, EngineStats};
 
 use super::conn::{handle_conn, ConnConfig};
-use super::protocol::{write_response, ErrorCode, Response};
-use super::scheduler::{self, Counters};
+use super::protocol::{write_response, ErrorCode, QuarantinedModel, Response};
+use super::scheduler::{self, Counters, SchedulerConfig};
 
 /// Tunables of the serving front. Every limit is a hard bound — the
 /// server never buffers past `queue_depth` or threads past
@@ -46,6 +46,10 @@ pub struct ServerConfig {
     /// Serve this many requests, then shut down gracefully (used by
     /// smoke tests and `--max-requests`); `None` serves forever.
     pub max_requests: Option<u64>,
+    /// Driver panics a model may accumulate before it is quarantined
+    /// (`0` disables quarantine; panics are still caught and answered
+    /// `INTERNAL`).
+    pub quarantine_after: u32,
 }
 
 impl Default for ServerConfig {
@@ -58,12 +62,13 @@ impl Default for ServerConfig {
             write_timeout: Duration::from_secs(2),
             request_timeout: Duration::from_secs(30),
             max_requests: None,
+            quarantine_after: 1,
         }
     }
 }
 
 /// Final tally of one server run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerReport {
     /// Requests answered with an output frame.
     pub served: u64,
@@ -73,6 +78,14 @@ pub struct ServerReport {
     pub errored: u64,
     /// Requests that timed out waiting for the engine.
     pub timeouts: u64,
+    /// Requests whose driver-side deadline expired before evaluation.
+    pub expired: u64,
+    /// Submissions refused because their model was quarantined.
+    pub quarantine_rejected: u64,
+    /// Driver panics caught by the supervisor.
+    pub panics: u64,
+    /// Models quarantined at shutdown.
+    pub quarantined: Vec<QuarantinedModel>,
     /// Frames refused as malformed/oversized.
     pub malformed: u64,
     /// Connections dropped for blowing the mid-frame read deadline.
@@ -95,6 +108,7 @@ pub struct ServerHandle {
     accept: JoinHandle<()>,
     driver: JoinHandle<Engine>,
     counters: Arc<Counters>,
+    quarantine: Arc<scheduler::Quarantine>,
 }
 
 impl ServerHandle {
@@ -124,6 +138,10 @@ impl ServerHandle {
             rejected_busy: c.rejected_busy.load(Ordering::Relaxed),
             errored: c.errored.load(Ordering::Relaxed),
             timeouts: c.timeouts.load(Ordering::Relaxed),
+            expired: c.expired.load(Ordering::Relaxed),
+            quarantine_rejected: c.quarantine_rejected.load(Ordering::Relaxed),
+            panics: c.panics.load(Ordering::Relaxed),
+            quarantined: self.quarantine.snapshot(),
             malformed: c.malformed.load(Ordering::Relaxed),
             slow_clients: c.slow_clients.load(Ordering::Relaxed),
             conns_accepted: c.conns_accepted.load(Ordering::Relaxed),
@@ -146,11 +164,19 @@ pub fn serve(addr: &str, engine: Engine, config: ServerConfig) -> Result<ServerH
     let shutdown = Arc::new(AtomicBool::new(false));
     let (sched, driver) = scheduler::start(
         engine,
-        config.queue_depth,
-        config.per_model_inflight,
+        SchedulerConfig {
+            queue_depth: config.queue_depth,
+            per_model_cap: config.per_model_inflight,
+            // The driver enforces the same deadline the connection
+            // waits out, so a job the client has given up on is never
+            // evaluated.
+            deadline: Some(config.request_timeout),
+            quarantine_after: config.quarantine_after,
+        },
         counters.clone(),
     )
     .context("spawning the engine driver thread")?;
+    let quarantine = sched.quarantine_arc();
 
     let accept_shutdown = shutdown.clone();
     let accept_counters = counters.clone();
@@ -161,7 +187,7 @@ pub fn serve(addr: &str, engine: Engine, config: ServerConfig) -> Result<ServerH
         })
         .context("spawning the accept thread")?;
 
-    Ok(ServerHandle { addr: local, shutdown, accept, driver, counters })
+    Ok(ServerHandle { addr: local, shutdown, accept, driver, counters, quarantine })
 }
 
 fn accept_loop(

@@ -15,14 +15,24 @@
 //! * `scheduler` — a bounded submission queue bridging connection
 //!   threads to the single engine driver thread; per-model admission
 //!   control and queue-depth backpressure reject with `BUSY` rather
-//!   than buffering unboundedly.
+//!   than buffering unboundedly. The driver doubles as a *supervisor*:
+//!   panics are caught per per-model wave group (structured `INTERNAL`
+//!   replies, engine state purged and rebuilt), repeat offenders are
+//!   quarantined (`QUARANTINED` at admission, other models unaffected),
+//!   and queued jobs past their driver-side deadline answer `TIMEOUT`
+//!   without being evaluated.
 //! * `listener` — accept loop with a connection cap and graceful
 //!   shutdown that drains in-flight micro-batches before closing.
-//! * [`client`] — blocking client with `BUSY`-retry discipline, used
-//!   by the CLI `client` subcommand, the load benchmark, and tests.
+//! * [`client`] — blocking client with seeded jittered-exponential
+//!   `BUSY`-retry discipline and a `health` probe, used by the CLI
+//!   `client`/`stats` subcommands, the load benchmark, and tests.
 //!
 //! Responses are bit-identical to in-process `Engine::submit`/`drain`
 //! for the same inputs: the server adds routing, never arithmetic.
+//! Failure paths are testable deterministically via the seeded
+//! injection sites in [`crate::exec::faults`] (armed by the `--faults`
+//! CLI flag or a test's `FaultPlan`); disarmed, every site is a single
+//! relaxed atomic load.
 
 pub mod client;
 mod conn;
@@ -30,7 +40,7 @@ mod listener;
 pub mod protocol;
 mod scheduler;
 
-pub use client::Client;
+pub use client::{Backoff, Client};
 pub use listener::{serve, ServerConfig, ServerHandle, ServerReport};
-pub use protocol::{ErrorCode, Request, Response};
-pub use scheduler::Counters;
+pub use protocol::{ErrorCode, HealthSnapshot, QuarantinedModel, Request, Response};
+pub use scheduler::{Counters, Quarantine, SchedulerConfig};

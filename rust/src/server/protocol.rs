@@ -2,7 +2,7 @@
 //! front.
 //!
 //! Every frame is `MAGIC (4 bytes) ++ body_len (u32 LE) ++ body`, and
-//! every body starts with `version (u16 LE) ++ kind (u8)`. The three
+//! every body starts with `version (u16 LE) ++ kind (u8)`. The five
 //! kinds:
 //!
 //! | kind | body after the common prefix |
@@ -10,6 +10,8 @@
 //! | request (1) | `name_len: u16`, `name: UTF-8`, `batch: u16` (must be 1 in v1), `ndims: u8`, `dims: ndims × u32`, `payload: ∏dims × f32` |
 //! | output (2) | `ndims: u8`, `dims: ndims × u32`, `payload: ∏dims × f32` |
 //! | error (3) | `code: u16` (see [`ErrorCode`]), `msg_len: u16`, `msg: UTF-8` |
+//! | health request (4) | *(empty)* |
+//! | health (5) | 14 × `u64` counters in [`HealthSnapshot`] field order, `nq: u16`, `nq` × (`strikes: u32`, `name_len: u16`, `name: UTF-8`) |
 //!
 //! All integers and floats are little-endian. The hard caps
 //! ([`MAX_BODY_BYTES`], [`MAX_NAME_LEN`], [`MAX_DIMS`],
@@ -38,10 +40,15 @@ pub const MAX_NAME_LEN: usize = 64;
 pub const MAX_DIMS: usize = 8;
 /// Error messages are truncated to this many bytes on the wire.
 pub const MAX_ERROR_MSG: usize = 256;
+/// Hard cap on the quarantine entries a health frame carries (encoders
+/// truncate, parsers refuse above it).
+pub const MAX_QUARANTINE: usize = 64;
 
 const KIND_REQUEST: u8 = 1;
 const KIND_OUTPUT: u8 = 2;
 const KIND_ERROR: u8 = 3;
+const KIND_HEALTH_REQ: u8 = 4;
+const KIND_HEALTH: u8 = 5;
 
 /// Structured error codes of the error-response frame. The numeric
 /// wire value is stable protocol surface; names are for humans.
@@ -64,8 +71,13 @@ pub enum ErrorCode {
     ShuttingDown = 6,
     /// The engine failed internally while serving the request.
     Internal = 7,
-    /// A deadline expired (mid-frame read, or the in-engine wait).
+    /// A deadline expired (mid-frame read, the reply wait, or the
+    /// driver-side request deadline).
     Timeout = 8,
+    /// The model is quarantined after panicking inside the driver;
+    /// other models keep serving. Submits are refused until the server
+    /// restarts.
+    Quarantined = 9,
 }
 
 impl ErrorCode {
@@ -85,6 +97,7 @@ impl ErrorCode {
             6 => Some(ErrorCode::ShuttingDown),
             7 => Some(ErrorCode::Internal),
             8 => Some(ErrorCode::Timeout),
+            9 => Some(ErrorCode::Quarantined),
             _ => None,
         }
     }
@@ -100,6 +113,7 @@ impl ErrorCode {
             ErrorCode::ShuttingDown => "SHUTTING_DOWN",
             ErrorCode::Internal => "INTERNAL",
             ErrorCode::Timeout => "TIMEOUT",
+            ErrorCode::Quarantined => "QUARANTINED",
         }
     }
 }
@@ -188,6 +202,52 @@ pub struct Request {
     pub data: Vec<f32>,
 }
 
+/// One quarantined model in a [`HealthSnapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuarantinedModel {
+    /// The model code refused at admission.
+    pub model: String,
+    /// Driver panics attributed to the model.
+    pub strikes: u32,
+}
+
+/// The body of a health frame: a point-in-time copy of the server's
+/// counters plus the quarantine list. Field order is the wire order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HealthSnapshot {
+    /// Jobs accepted into the queue.
+    pub submitted: u64,
+    /// Jobs answered with an output frame.
+    pub completed: u64,
+    /// Submissions rejected with `BUSY`.
+    pub rejected_busy: u64,
+    /// Jobs answered with a non-`BUSY` error frame.
+    pub errored: u64,
+    /// Requests whose reply wait exceeded the request timeout.
+    pub timeouts: u64,
+    /// Jobs whose driver-side deadline expired before evaluation.
+    pub expired: u64,
+    /// Submissions refused because the model is quarantined.
+    pub quarantine_rejected: u64,
+    /// Frames refused as malformed/oversized.
+    pub malformed: u64,
+    /// Connections dropped for blowing a mid-frame read deadline.
+    pub slow_clients: u64,
+    /// Connections accepted.
+    pub conns_accepted: u64,
+    /// Connections refused at the connection cap.
+    pub conns_rejected: u64,
+    /// Driver panics caught by the supervisor.
+    pub panics: u64,
+    /// Current queue depth.
+    pub queue_depth: u64,
+    /// High-water mark of the queue depth.
+    pub max_queue_depth: u64,
+    /// Models currently refused at admission (truncated to
+    /// [`MAX_QUARANTINE`] on the wire).
+    pub quarantined: Vec<QuarantinedModel>,
+}
+
 /// A decoded response frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
@@ -207,6 +267,18 @@ pub enum Response {
         /// Detail (truncated to [`MAX_ERROR_MSG`] on the wire).
         message: String,
     },
+    /// Counters + quarantine snapshot answering a health request.
+    Health(HealthSnapshot),
+}
+
+/// A decoded client-to-server frame (see [`parse_incoming`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Incoming {
+    /// An inference request.
+    Request(Request),
+    /// A health probe: answer with [`Response::Health`], never through
+    /// the scheduler queue.
+    Health,
 }
 
 // ---------------------------------------------------------------- read
@@ -247,6 +319,11 @@ impl<'a> Reader<'a> {
     fn u32(&mut self, what: &str) -> Result<u32, ProtoError> {
         let b = self.take(4, what)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ProtoError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>, ProtoError> {
@@ -338,6 +415,28 @@ pub fn parse_request(body: &[u8]) -> Result<Request, ProtoError> {
             "frame kind {kind} is not a request (expected {KIND_REQUEST})"
         )));
     }
+    parse_request_fields(&mut r)
+}
+
+/// Parse any client-to-server frame body: an inference request or a
+/// health probe.
+pub fn parse_incoming(body: &[u8]) -> Result<Incoming, ProtoError> {
+    let mut r = Reader::new(body);
+    check_version(&mut r)?;
+    let kind = r.u8("kind")?;
+    match kind {
+        KIND_REQUEST => Ok(Incoming::Request(parse_request_fields(&mut r)?)),
+        KIND_HEALTH_REQ => {
+            r.done("health request")?;
+            Ok(Incoming::Health)
+        }
+        other => Err(ProtoError::malformed(format!(
+            "frame kind {other} is not a request (expected {KIND_REQUEST} or {KIND_HEALTH_REQ})"
+        ))),
+    }
+}
+
+fn parse_request_fields(r: &mut Reader<'_>) -> Result<Request, ProtoError> {
     let name_len = r.u16("name_len")? as usize;
     if name_len == 0 || name_len > MAX_NAME_LEN {
         return Err(ProtoError::too_large(format!(
@@ -387,8 +486,52 @@ pub fn parse_response(body: &[u8]) -> Result<Response, ProtoError> {
             r.done("error response")?;
             Ok(Response::Error { code, message })
         }
+        KIND_HEALTH => {
+            let mut h = HealthSnapshot::default();
+            for (field, slot) in [
+                ("submitted", &mut h.submitted),
+                ("completed", &mut h.completed),
+                ("rejected_busy", &mut h.rejected_busy),
+                ("errored", &mut h.errored),
+                ("timeouts", &mut h.timeouts),
+                ("expired", &mut h.expired),
+                ("quarantine_rejected", &mut h.quarantine_rejected),
+                ("malformed", &mut h.malformed),
+                ("slow_clients", &mut h.slow_clients),
+                ("conns_accepted", &mut h.conns_accepted),
+                ("conns_rejected", &mut h.conns_rejected),
+                ("panics", &mut h.panics),
+                ("queue_depth", &mut h.queue_depth),
+                ("max_queue_depth", &mut h.max_queue_depth),
+            ] {
+                *slot = r.u64(field)?;
+            }
+            let nq = r.u16("quarantine count")? as usize;
+            if nq > MAX_QUARANTINE {
+                return Err(ProtoError::too_large(format!(
+                    "{nq} quarantine entries exceed the {MAX_QUARANTINE}-entry cap"
+                )));
+            }
+            for i in 0..nq {
+                let strikes = r.u32(&format!("quarantine {i} strikes"))?;
+                let name_len = r.u16(&format!("quarantine {i} name_len"))? as usize;
+                if name_len == 0 || name_len > MAX_NAME_LEN {
+                    return Err(ProtoError::too_large(format!(
+                        "quarantine {i} name of {name_len} bytes outside 1..={MAX_NAME_LEN}"
+                    )));
+                }
+                let name = r.take(name_len, &format!("quarantine {i} name"))?;
+                let model = std::str::from_utf8(name)
+                    .map_err(|_| ProtoError::malformed("quarantined model name is not UTF-8"))?
+                    .to_string();
+                h.quarantined.push(QuarantinedModel { model, strikes });
+            }
+            r.done("health response")?;
+            Ok(Response::Health(h))
+        }
         other => Err(ProtoError::malformed(format!(
-            "frame kind {other} is not a response (expected {KIND_OUTPUT} or {KIND_ERROR})"
+            "frame kind {other} is not a response (expected {KIND_OUTPUT}, {KIND_ERROR}, or \
+             {KIND_HEALTH})"
         ))),
     }
 }
@@ -486,8 +629,17 @@ pub fn encode_request(model: &str, dims: &[usize], data: &[f32]) -> Result<Vec<u
     Ok(frame(body))
 }
 
+/// Encode a complete health-request frame (prefix included).
+pub fn encode_health_request() -> Vec<u8> {
+    let mut body = Vec::with_capacity(3);
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.push(KIND_HEALTH_REQ);
+    frame(body)
+}
+
 /// Encode a complete response frame (prefix included). Error messages
-/// are truncated to [`MAX_ERROR_MSG`] bytes (on a char boundary).
+/// are truncated to [`MAX_ERROR_MSG`] bytes (on a char boundary);
+/// quarantine lists are truncated to [`MAX_QUARANTINE`] entries.
 pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtoError> {
     let mut body = Vec::new();
     body.extend_from_slice(&VERSION.to_le_bytes());
@@ -507,6 +659,39 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtoError> {
             let msg = &message.as_bytes()[..cut];
             body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
             body.extend_from_slice(msg);
+        }
+        Response::Health(h) => {
+            body.push(KIND_HEALTH);
+            for v in [
+                h.submitted,
+                h.completed,
+                h.rejected_busy,
+                h.errored,
+                h.timeouts,
+                h.expired,
+                h.quarantine_rejected,
+                h.malformed,
+                h.slow_clients,
+                h.conns_accepted,
+                h.conns_rejected,
+                h.panics,
+                h.queue_depth,
+                h.max_queue_depth,
+            ] {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            let entries: Vec<&QuarantinedModel> = h
+                .quarantined
+                .iter()
+                .filter(|q| !q.model.is_empty() && q.model.len() <= MAX_NAME_LEN)
+                .take(MAX_QUARANTINE)
+                .collect();
+            body.extend_from_slice(&(entries.len() as u16).to_le_bytes());
+            for q in entries {
+                body.extend_from_slice(&q.strikes.to_le_bytes());
+                body.extend_from_slice(&(q.model.len() as u16).to_le_bytes());
+                body.extend_from_slice(q.model.as_bytes());
+            }
         }
     }
     check_body_cap(&body, "response body")?;
@@ -578,11 +763,64 @@ mod tests {
             ErrorCode::ShuttingDown,
             ErrorCode::Internal,
             ErrorCode::Timeout,
+            ErrorCode::Quarantined,
         ] {
             assert_eq!(ErrorCode::from_wire(code.wire()), Some(code));
         }
         assert_eq!(ErrorCode::from_wire(0), None);
         assert_eq!(ErrorCode::from_wire(999), None);
+    }
+
+    #[test]
+    fn health_frames_roundtrip() {
+        let probe = encode_health_request();
+        assert_eq!(parse_incoming(&probe[HEADER_LEN..]).unwrap(), Incoming::Health);
+
+        let snap = HealthSnapshot {
+            submitted: 10,
+            completed: 7,
+            rejected_busy: 1,
+            errored: 2,
+            timeouts: 1,
+            expired: 3,
+            quarantine_rejected: 4,
+            malformed: 5,
+            slow_clients: 6,
+            conns_accepted: 8,
+            conns_rejected: 9,
+            panics: 2,
+            queue_depth: 0,
+            max_queue_depth: 12,
+            quarantined: vec![QuarantinedModel { model: "bad".into(), strikes: 3 }],
+        };
+        let bytes = encode_response(&Response::Health(snap.clone())).unwrap();
+        assert_eq!(read_response(&mut bytes.as_slice()).unwrap(), Response::Health(snap));
+    }
+
+    #[test]
+    fn incoming_dispatches_requests_and_rejects_response_kinds() {
+        let req = encode_request("MN", &[2], &[1.0, 2.0]).unwrap();
+        match parse_incoming(&req[HEADER_LEN..]).unwrap() {
+            Incoming::Request(r) => assert_eq!(r.model, "MN"),
+            other => panic!("expected a request, got {other:?}"),
+        }
+        // An output frame is not a valid incoming kind.
+        let out = encode_response(&Response::Output { dims: vec![1], data: vec![0.5] }).unwrap();
+        let err = parse_incoming(&out[HEADER_LEN..]).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn oversized_quarantine_lists_truncate_on_the_wire() {
+        let quarantined: Vec<QuarantinedModel> = (0..MAX_QUARANTINE + 10)
+            .map(|i| QuarantinedModel { model: format!("m{i}"), strikes: 1 })
+            .collect();
+        let snap = HealthSnapshot { quarantined, ..HealthSnapshot::default() };
+        let bytes = encode_response(&Response::Health(snap)).unwrap();
+        match read_response(&mut bytes.as_slice()).unwrap() {
+            Response::Health(h) => assert_eq!(h.quarantined.len(), MAX_QUARANTINE),
+            other => panic!("expected a health response, got {other:?}"),
+        }
     }
 
     #[test]

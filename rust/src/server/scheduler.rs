@@ -1,45 +1,126 @@
 //! Bounded submission queue between connection threads and the one
-//! engine driver thread.
+//! engine driver thread, plus the driver's *supervisor loop*.
 //!
 //! [`crate::exec::serve::Engine`] is deliberately single-owner —
 //! `submit` and `step` take `&mut self` so the micro-batch coalescing
 //! queue needs no locks. The scheduler keeps that shape under
 //! concurrent connections: every connection thread holds a cloned
 //! [`SchedulerHandle`] whose [`SchedulerHandle::submit`] performs
-//! *admission control* (a per-model in-flight cap) and then a
-//! non-blocking push onto a bounded `sync_channel`. Both limits reject
-//! with a structured `BUSY` instead of buffering unboundedly — the
-//! queue depth is the whole memory bound of the serving front.
+//! *admission control* (a per-model in-flight cap, tracked by an RAII
+//! [`InflightSlot`] owned by the job so abandoned replies can never
+//! leak a slot) and then a non-blocking push onto a bounded
+//! `sync_channel`. Both limits reject with a structured `BUSY` instead
+//! of buffering unboundedly — the queue depth is the whole memory
+//! bound of the serving front.
 //!
-//! The driver thread owns the [`Engine`]: it blocks on the queue,
-//! greedily drains whatever else is already waiting (one *wave*),
-//! submits the wave to the engine — which coalesces same-model
-//! single-sample requests into micro-batches, bit-identically — and
-//! routes each [`EngineResponse`] back through its job's reply
-//! channel. When every handle clone is dropped (listener and
-//! connection threads have exited) the driver finishes the remaining
-//! queue and returns the engine, so shutdown *drains* in-flight work
-//! rather than dropping it.
+//! The driver thread owns the [`Engine`] and is also its supervisor:
+//! each wave is grouped per model and every group's engine work runs
+//! under `catch_unwind`. A panic does not kill the thread — the group
+//! is answered with structured `INTERNAL` errors, the model's engine
+//! state is purged (rebuilt from its registered builder on next use),
+//! and the model collects a *strike*; at
+//! [`SchedulerConfig::quarantine_after`] strikes the model is
+//! quarantined and later submits are refused with `QUARANTINED` while
+//! every other model keeps serving bit-identically. Jobs whose
+//! [`SchedulerConfig::deadline`] expired while queued are answered
+//! `TIMEOUT` *before* evaluation. When every handle clone is dropped
+//! the driver finishes the remaining queue and returns the engine, so
+//! shutdown *drains* in-flight work rather than dropping it.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use crate::exec::serve::{Engine, SubmitError};
+use crate::exec::faults;
+use crate::exec::serve::{Engine, EngineResponse, SubmitError};
 
-use super::protocol::ErrorCode;
+use super::protocol::{ErrorCode, HealthSnapshot, QuarantinedModel};
 
 /// Reply to one scheduled job: the flat output, or the structured
 /// error the connection reports to its client.
 pub type JobReply = Result<Vec<f32>, (ErrorCode, String)>;
 
-/// One queued request.
+/// Scheduler tunables (split out of `ServerConfig` so the scheduler is
+/// testable without a listener).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Bounded submission queue depth.
+    pub queue_depth: usize,
+    /// Per-model in-flight admission cap.
+    pub per_model_cap: usize,
+    /// Driver-side request deadline, measured from submit: jobs still
+    /// queued past it are answered `TIMEOUT` and skipped before eval.
+    /// `None` disables the driver-side check.
+    pub deadline: Option<Duration>,
+    /// Driver panics a model may accumulate before it is quarantined.
+    /// `0` disables quarantine entirely (panics are still caught and
+    /// answered `INTERNAL` — the reply-channel recovery contract holds
+    /// with no supervision policy on top).
+    pub quarantine_after: u32,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            queue_depth: 64,
+            per_model_cap: 64,
+            deadline: None,
+            quarantine_after: 1,
+        }
+    }
+}
+
+/// An acquired per-model admission slot. Dropping it releases the
+/// slot, so every exit path — completion, error reply, an abandoned
+/// reply receiver, a panic unwinding the wave — decrements exactly
+/// once.
+struct InflightSlot {
+    inflight: Arc<Mutex<HashMap<String, usize>>>,
+    model: String,
+}
+
+impl InflightSlot {
+    /// Acquire a slot under the cap, or return the current in-flight
+    /// count.
+    fn acquire(
+        inflight: &Arc<Mutex<HashMap<String, usize>>>,
+        model: &str,
+        cap: usize,
+    ) -> Result<InflightSlot, usize> {
+        let mut map = inflight.lock().unwrap_or_else(|e| e.into_inner());
+        let n = map.entry(model.to_string()).or_insert(0);
+        if *n >= cap {
+            return Err(*n);
+        }
+        *n += 1;
+        Ok(InflightSlot {
+            inflight: inflight.clone(),
+            model: model.to_string(),
+        })
+    }
+}
+
+impl Drop for InflightSlot {
+    fn drop(&mut self) {
+        let mut map = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(n) = map.get_mut(&self.model) {
+            *n = n.saturating_sub(1);
+        }
+    }
+}
+
+/// One queued request. The job owns its admission slot: wherever the
+/// job is dropped, the slot releases.
 struct Job {
     model: String,
     data: Vec<f32>,
     reply: SyncSender<JobReply>,
+    deadline: Option<Instant>,
+    _slot: InflightSlot,
 }
 
 /// Shared monotonic counters of the serving front (atomics — read at
@@ -52,10 +133,18 @@ pub struct Counters {
     pub completed: AtomicU64,
     /// Submissions rejected with `BUSY` (queue full or per-model cap).
     pub rejected_busy: AtomicU64,
-    /// Jobs answered with a non-`BUSY` error frame.
+    /// Jobs answered with a non-`BUSY` error frame. Accepted jobs
+    /// always resolve: `submitted == completed + errored + expired`.
     pub errored: AtomicU64,
     /// Requests whose reply wait exceeded the request timeout.
     pub timeouts: AtomicU64,
+    /// Jobs whose driver-side deadline expired before evaluation
+    /// (answered `TIMEOUT`, never evaluated).
+    pub expired: AtomicU64,
+    /// Submissions refused because the model is quarantined.
+    pub quarantine_rejected: AtomicU64,
+    /// Driver panics caught by the supervisor.
+    pub panics: AtomicU64,
     /// Frames refused as malformed/oversized.
     pub malformed: AtomicU64,
     /// Connections dropped for blowing a mid-frame read deadline.
@@ -71,13 +160,63 @@ pub struct Counters {
     pub max_queue_depth: AtomicUsize,
 }
 
+/// Per-model panic strikes and the quarantine policy. Shared between
+/// admission (handles) and the driver (which assigns strikes).
+pub struct Quarantine {
+    strikes: Mutex<HashMap<String, u32>>,
+    threshold: u32,
+}
+
+impl Quarantine {
+    /// Quarantine after `threshold` strikes; `0` disables quarantine.
+    pub fn new(threshold: u32) -> Quarantine {
+        Quarantine { strikes: Mutex::new(HashMap::new()), threshold }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, HashMap<String, u32>> {
+        self.strikes.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one driver panic against `model`; returns its strikes.
+    pub fn strike(&self, model: &str) -> u32 {
+        let mut map = self.lock();
+        let n = map.entry(model.to_string()).or_insert(0);
+        *n += 1;
+        *n
+    }
+
+    /// Whether submits for `model` are refused.
+    pub fn is_quarantined(&self, model: &str) -> bool {
+        self.threshold > 0
+            && self.lock().get(model).is_some_and(|&n| n >= self.threshold)
+    }
+
+    /// The quarantined models (sorted by name, for deterministic
+    /// health frames).
+    pub fn snapshot(&self) -> Vec<QuarantinedModel> {
+        if self.threshold == 0 {
+            return Vec::new();
+        }
+        let map = self.lock();
+        let mut out: Vec<QuarantinedModel> = map
+            .iter()
+            .filter(|(_, &n)| n >= self.threshold)
+            .map(|(m, &n)| QuarantinedModel { model: m.clone(), strikes: n })
+            .collect();
+        out.sort_by(|a, b| a.model.cmp(&b.model));
+        out
+    }
+}
+
 /// Cloneable submission side of the scheduler, one clone per
 /// connection thread plus the listener's own.
 pub struct SchedulerHandle {
     tx: SyncSender<Job>,
     inflight: Arc<Mutex<HashMap<String, usize>>>,
     per_model_cap: usize,
+    deadline: Option<Duration>,
     counters: Arc<Counters>,
+    quarantine: Arc<Quarantine>,
 }
 
 impl Clone for SchedulerHandle {
@@ -86,7 +225,9 @@ impl Clone for SchedulerHandle {
             tx: self.tx.clone(),
             inflight: self.inflight.clone(),
             per_model_cap: self.per_model_cap,
+            deadline: self.deadline,
             counters: self.counters.clone(),
+            quarantine: self.quarantine.clone(),
         }
     }
 }
@@ -101,11 +242,20 @@ impl SchedulerHandle {
         model: &str,
         data: Vec<f32>,
     ) -> Result<Receiver<JobReply>, (ErrorCode, String)> {
+        if self.quarantine.is_quarantined(model) {
+            self.counters.quarantine_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err((
+                ErrorCode::Quarantined,
+                format!(
+                    "model {model:?} is quarantined after panicking in the driver — \
+                     other models keep serving"
+                ),
+            ));
+        }
         // Admission: cap the number of in-flight requests per model.
-        {
-            let mut inflight = self.inflight.lock().expect("inflight lock");
-            let n = inflight.entry(model.to_string()).or_insert(0);
-            if *n >= self.per_model_cap {
+        let slot = match InflightSlot::acquire(&self.inflight, model, self.per_model_cap) {
+            Ok(slot) => slot,
+            Err(n) => {
                 self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
                 let cap = self.per_model_cap;
                 return Err((
@@ -113,10 +263,15 @@ impl SchedulerHandle {
                     format!("model {model:?} has {n} requests in flight (cap {cap})"),
                 ));
             }
-            *n += 1;
-        }
+        };
         let (reply, rx) = sync_channel(1);
-        let job = Job { model: model.to_string(), data, reply };
+        let job = Job {
+            model: model.to_string(),
+            data,
+            reply,
+            deadline: self.deadline.map(|d| Instant::now() + d),
+            _slot: slot,
+        };
         match self.tx.try_send(job) {
             Ok(()) => {
                 let depth = self.counters.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
@@ -124,31 +279,44 @@ impl SchedulerHandle {
                 self.counters.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(rx)
             }
-            Err(e) => {
-                self.release(model);
-                match e {
-                    TrySendError::Full(_) => {
-                        self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                        Err((ErrorCode::Busy, "submission queue is full — retry later".into()))
-                    }
-                    TrySendError::Disconnected(_) => Err((
-                        ErrorCode::ShuttingDown,
-                        "server is shutting down and accepts no new work".into(),
-                    )),
-                }
+            // The unsent job (and its slot) drops here — no leak.
+            Err(TrySendError::Full(_)) => {
+                self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                Err((ErrorCode::Busy, "submission queue is full — retry later".into()))
             }
+            Err(TrySendError::Disconnected(_)) => Err((
+                ErrorCode::ShuttingDown,
+                "server is shutting down and accepts no new work".into(),
+            )),
         }
     }
 
-    fn release(&self, model: &str) {
-        release(&self.inflight, model);
+    /// Point-in-time health snapshot: every counter plus the
+    /// quarantine list (the body of a `health` wire frame).
+    pub fn health(&self) -> HealthSnapshot {
+        let c = &self.counters;
+        HealthSnapshot {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            rejected_busy: c.rejected_busy.load(Ordering::Relaxed),
+            errored: c.errored.load(Ordering::Relaxed),
+            timeouts: c.timeouts.load(Ordering::Relaxed),
+            expired: c.expired.load(Ordering::Relaxed),
+            quarantine_rejected: c.quarantine_rejected.load(Ordering::Relaxed),
+            malformed: c.malformed.load(Ordering::Relaxed),
+            slow_clients: c.slow_clients.load(Ordering::Relaxed),
+            conns_accepted: c.conns_accepted.load(Ordering::Relaxed),
+            conns_rejected: c.conns_rejected.load(Ordering::Relaxed),
+            panics: c.panics.load(Ordering::Relaxed),
+            queue_depth: c.queue_depth.load(Ordering::Relaxed) as u64,
+            max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed) as u64,
+            quarantined: self.quarantine.snapshot(),
+        }
     }
-}
 
-fn release(inflight: &Mutex<HashMap<String, usize>>, model: &str) {
-    let mut inflight = inflight.lock().expect("inflight lock");
-    if let Some(n) = inflight.get_mut(model) {
-        *n = n.saturating_sub(1);
+    /// The shared quarantine state (for the final server report).
+    pub fn quarantine_arc(&self) -> Arc<Quarantine> {
+        self.quarantine.clone()
     }
 }
 
@@ -162,40 +330,50 @@ fn map_engine_error(e: &anyhow::Error) -> (ErrorCode, String) {
     (code, format!("{e:#}"))
 }
 
+/// Answer one accepted job with a structured error (its slot releases
+/// as the job drops).
+fn fail(job: Job, code: ErrorCode, message: String, counters: &Counters) {
+    counters.errored.fetch_add(1, Ordering::Relaxed);
+    let _ = job.reply.send(Err((code, message)));
+}
+
 /// Spawn the driver thread over `engine` and return the submission
 /// handle plus the driver's join handle (it yields the engine back for
 /// the final stats report).
 pub fn start(
     engine: Engine,
-    queue_depth: usize,
-    per_model_cap: usize,
+    cfg: SchedulerConfig,
     counters: Arc<Counters>,
 ) -> std::io::Result<(SchedulerHandle, JoinHandle<Engine>)> {
-    let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
+    let (tx, rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
     let handle = SchedulerHandle {
         tx,
         inflight: Arc::new(Mutex::new(HashMap::new())),
-        per_model_cap: per_model_cap.max(1),
+        per_model_cap: cfg.per_model_cap.max(1),
+        deadline: cfg.deadline,
         counters: counters.clone(),
+        quarantine: Arc::new(Quarantine::new(cfg.quarantine_after)),
     };
     // The driver must NOT hold a `SchedulerHandle` (its `tx` clone
     // would keep the channel connected forever and `recv` would never
-    // disconnect at shutdown) — it shares only the map and counters.
-    let inflight = handle.inflight.clone();
+    // disconnect at shutdown) — it shares only the counters and the
+    // quarantine state.
+    let quarantine = handle.quarantine.clone();
     let driver = std::thread::Builder::new()
         .name("gconv-serve-driver".into())
-        .spawn(move || drive(engine, rx, inflight, counters))?;
+        .spawn(move || drive(engine, rx, counters, quarantine))?;
     Ok((handle, driver))
 }
 
-/// The driver loop: wave in, micro-batches through the engine, replies
-/// out. Exits (returning the engine) when every submission handle is
-/// gone and the queue is empty.
+/// The supervisor/driver loop: wave in, per-model groups through the
+/// engine under `catch_unwind`, replies out. Survives injected and
+/// organic panics alike; exits (returning the engine) only when every
+/// submission handle is gone and the queue is empty.
 fn drive(
     mut engine: Engine,
     rx: Receiver<Job>,
-    inflight: Arc<Mutex<HashMap<String, usize>>>,
     counters: Arc<Counters>,
+    quarantine: Arc<Quarantine>,
 ) -> Engine {
     let mut next_id: u64 = 0;
     while let Ok(first) = rx.recv() {
@@ -206,62 +384,152 @@ fn drive(
             wave.push(job);
         }
         counters.queue_depth.fetch_sub(wave.len(), Ordering::Relaxed);
-
-        let mut pending: HashMap<u64, (String, SyncSender<JobReply>)> = HashMap::new();
-        for job in wave {
-            let id = next_id;
-            next_id += 1;
-            match engine.submit(&job.model, id, job.data) {
-                Ok(()) => {
-                    pending.insert(id, (job.model, job.reply));
-                }
-                Err(e) => {
-                    counters.errored.fetch_add(1, Ordering::Relaxed);
-                    let _ = job.reply.send(Err(map_engine_error(&e)));
-                    release(&inflight, &job.model);
-                }
-            }
-        }
-        if pending.is_empty() {
-            continue;
-        }
-        match engine.drain() {
-            Ok(responses) => {
-                for r in responses {
-                    if let Some((model, reply)) = pending.remove(&r.id) {
-                        counters.completed.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply.send(Ok(r.data));
-                        release(&inflight, &model);
-                    }
-                }
-            }
-            Err(e) => {
-                let msg = format!("engine drain failed: {e:#}");
-                for (_, (model, reply)) in pending.drain() {
-                    counters.errored.fetch_add(1, Ordering::Relaxed);
-                    let _ = reply.send(Err((ErrorCode::Internal, msg.clone())));
-                    release(&inflight, &model);
-                }
-            }
-        }
-        // A request the engine accepted but never answered would be a
-        // coalescing bug — fail it loudly rather than hanging clients.
-        for (_, (model, reply)) in pending.drain() {
-            counters.errored.fetch_add(1, Ordering::Relaxed);
-            let _ = reply
-                .send(Err((ErrorCode::Internal, "engine dropped an accepted request".into())));
-            release(&inflight, &model);
+        for (model, jobs) in group_by_model(wave) {
+            serve_group(&mut engine, &model, jobs, &mut next_id, &counters, &quarantine);
         }
     }
     engine
+}
+
+/// Split a wave into per-model groups, preserving arrival order within
+/// each group and across first appearances. Per-model grouping is what
+/// lets a panic be *attributed*: when a group's engine work unwinds,
+/// the offending model is known by construction.
+fn group_by_model(wave: Vec<Job>) -> Vec<(String, VecDeque<Job>)> {
+    let mut order: Vec<String> = Vec::new();
+    let mut groups: HashMap<String, VecDeque<Job>> = HashMap::new();
+    for job in wave {
+        if !groups.contains_key(&job.model) {
+            order.push(job.model.clone());
+        }
+        groups.entry(job.model.clone()).or_default().push_back(job);
+    }
+    order
+        .into_iter()
+        .map(|m| {
+            let jobs = groups.remove(&m).expect("grouped by model");
+            (m, jobs)
+        })
+        .collect()
+}
+
+/// Serve one per-model group: quarantine check, deadline sweep, then
+/// the engine work under `catch_unwind`. Every job in the group is
+/// answered exactly once on every path.
+fn serve_group(
+    engine: &mut Engine,
+    model: &str,
+    jobs: VecDeque<Job>,
+    next_id: &mut u64,
+    counters: &Counters,
+    quarantine: &Quarantine,
+) {
+    // Jobs accepted before the model was quarantined still get the
+    // structured refusal, without touching the engine.
+    if quarantine.is_quarantined(model) {
+        let msg = format!("model {model:?} is quarantined after panicking in the driver");
+        for job in jobs {
+            fail(job, ErrorCode::Quarantined, msg.clone(), counters);
+        }
+        return;
+    }
+    // Driver-side deadline: a job that waited out its budget in the
+    // queue is answered `TIMEOUT` and never evaluated — expired work
+    // must not displace live work.
+    let now = Instant::now();
+    let mut live: VecDeque<Job> = VecDeque::with_capacity(jobs.len());
+    for job in jobs {
+        match job.deadline {
+            Some(d) if now >= d => {
+                counters.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err((
+                    ErrorCode::Timeout,
+                    "request deadline expired before evaluation".into(),
+                )));
+            }
+            _ => live.push_back(job),
+        }
+    }
+    let mut todo = live;
+    let mut pending: HashMap<u64, Job> = HashMap::new();
+    let drained = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<Vec<EngineResponse>> {
+        faults::trip_scoped(faults::SITE_SCHEDULER_WAVE, model)?;
+        while let Some(mut job) = todo.pop_front() {
+            let id = *next_id;
+            *next_id += 1;
+            let data = std::mem::take(&mut job.data);
+            match engine.submit(model, id, data) {
+                Ok(()) => {
+                    pending.insert(id, job);
+                }
+                Err(e) => {
+                    let (code, msg) = map_engine_error(&e);
+                    fail(job, code, msg, counters);
+                }
+            }
+        }
+        engine.drain()
+    }));
+    match drained {
+        Ok(Ok(responses)) => {
+            for r in responses {
+                if let Some(job) = pending.remove(&r.id) {
+                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Ok(r.data));
+                }
+            }
+        }
+        Ok(Err(e)) => {
+            // The engine failed gracefully mid-group. Purge the model's
+            // queued/cached engine state so a persistent failure cannot
+            // wedge later waves, and answer the whole group.
+            engine.purge(model);
+            let msg = format!("engine drain failed: {e:#}");
+            for job in todo {
+                fail(job, ErrorCode::Internal, msg.clone(), counters);
+            }
+            for (_, job) in pending.drain() {
+                fail(job, ErrorCode::Internal, msg.clone(), counters);
+            }
+        }
+        Err(_) => {
+            // Panic isolation: the supervisor survives, the group is
+            // answered `INTERNAL`, the model's engine state is rebuilt
+            // from its registered builder on next use, and repeated
+            // panics quarantine the model.
+            counters.panics.fetch_add(1, Ordering::Relaxed);
+            let strikes = quarantine.strike(model);
+            engine.purge(model);
+            let msg = if quarantine.is_quarantined(model) {
+                format!("engine panicked serving {model:?} (strike {strikes}) — quarantined")
+            } else {
+                format!("engine panicked serving {model:?} (strike {strikes})")
+            };
+            for job in todo {
+                fail(job, ErrorCode::Internal, msg.clone(), counters);
+            }
+            for (_, job) in pending.drain() {
+                fail(job, ErrorCode::Internal, msg.clone(), counters);
+            }
+        }
+    }
+    // A request the engine accepted but never answered would be a
+    // coalescing bug — fail it loudly rather than hanging clients.
+    for (_, job) in pending.drain() {
+        fail(
+            job,
+            ErrorCode::Internal,
+            "engine dropped an accepted request".into(),
+            counters,
+        );
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    use std::time::Duration;
-
+    use crate::exec::faults::{FaultKind, FaultPlan, FaultRule, Trigger};
     use crate::ir::{Layer, Network, Shape};
 
     fn tiny_net(batch: usize) -> Network {
@@ -272,16 +540,57 @@ mod tests {
         net
     }
 
-    fn engine() -> Engine {
+    fn engine_with(codes: &[&str]) -> Engine {
         let mut e = Engine::new(4);
-        e.register("tiny", tiny_net);
+        for code in codes {
+            e.register(code, tiny_net);
+        }
         e
+    }
+
+    fn engine() -> Engine {
+        engine_with(&["tiny"])
+    }
+
+    fn cfg(queue_depth: usize, per_model_cap: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            queue_depth,
+            per_model_cap,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    fn step_panic_rule(model: &str) -> FaultRule {
+        FaultRule {
+            site: faults::SITE_SERVE_STEP.to_string(),
+            scope: Some(model.to_string()),
+            kind: FaultKind::Panic,
+            trigger: Trigger::Nth(1),
+        }
+    }
+
+    fn inflight_of(handle: &SchedulerHandle, model: &str) -> usize {
+        *handle.inflight.lock().unwrap().get(model).unwrap()
+    }
+
+    fn wait_for_drained_inflight(handle: &SchedulerHandle, model: &str) {
+        let t0 = Instant::now();
+        loop {
+            if inflight_of(handle, model) == 0 {
+                return;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "in-flight slots for {model} never released"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     #[test]
     fn jobs_round_trip_through_the_driver() {
         let counters = Arc::new(Counters::default());
-        let (handle, driver) = start(engine(), 8, 8, counters.clone()).unwrap();
+        let (handle, driver) = start(engine(), cfg(8, 8), counters.clone()).unwrap();
         let rx = handle.submit("tiny", vec![0.5; 32]).unwrap();
         let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         let out = reply.expect("job must succeed");
@@ -301,7 +610,9 @@ mod tests {
             tx,
             inflight: Arc::new(Mutex::new(HashMap::new())),
             per_model_cap: 100,
+            deadline: None,
             counters: counters.clone(),
+            quarantine: Arc::new(Quarantine::new(1)),
         };
         let _a = handle.submit("tiny", vec![0.0; 32]).unwrap();
         let _b = handle.submit("tiny", vec![0.0; 32]).unwrap();
@@ -310,32 +621,54 @@ mod tests {
         assert_eq!(counters.rejected_busy.load(Ordering::Relaxed), 1);
         assert_eq!(counters.max_queue_depth.load(Ordering::Relaxed), 2);
         // The rejected submission must not leak an in-flight slot.
-        assert_eq!(*handle.inflight.lock().unwrap().get("tiny").unwrap(), 2);
+        assert_eq!(inflight_of(&handle, "tiny"), 2);
     }
 
     #[test]
-    fn per_model_cap_rejects_busy_and_releases_on_completion() {
+    fn per_model_cap_rejects_busy_and_releases_on_job_drop() {
         let counters = Arc::new(Counters::default());
-        let (tx, _rx) = sync_channel::<Job>(64);
+        let (tx, rx) = sync_channel::<Job>(64);
         let handle = SchedulerHandle {
             tx,
             inflight: Arc::new(Mutex::new(HashMap::new())),
             per_model_cap: 1,
+            deadline: None,
             counters: counters.clone(),
+            quarantine: Arc::new(Quarantine::new(1)),
         };
         let _a = handle.submit("tiny", vec![0.0; 32]).unwrap();
         let err = handle.submit("tiny", vec![0.0; 32]).unwrap_err();
         assert_eq!(err.0, ErrorCode::Busy);
         // Another model is admitted independently.
         assert!(handle.submit("other", vec![0.0; 32]).is_ok());
-        handle.release("tiny");
+        // Dropping the queued job releases its RAII slot.
+        drop(rx.try_recv().unwrap());
         assert!(handle.submit("tiny", vec![0.0; 32]).is_ok());
+    }
+
+    #[test]
+    fn abandoned_replies_still_release_inflight_slots() {
+        // Regression for the in-flight leak: flood up to the cap, drop
+        // every reply receiver immediately (a disconnecting client),
+        // and the cap must recover once the driver finishes the jobs.
+        let counters = Arc::new(Counters::default());
+        let (handle, driver) = start(engine(), cfg(8, 2), counters.clone()).unwrap();
+        for _ in 0..2 {
+            drop(handle.submit("tiny", vec![0.5; 32]).unwrap());
+        }
+        wait_for_drained_inflight(&handle, "tiny");
+        // The cap is fully available again.
+        let _a = handle.submit("tiny", vec![0.5; 32]).unwrap();
+        let _b = handle.submit("tiny", vec![0.5; 32]).unwrap();
+        drop(handle);
+        let _ = driver.join().unwrap();
+        assert_eq!(counters.completed.load(Ordering::Relaxed), 4);
     }
 
     #[test]
     fn unknown_models_map_to_the_unknown_model_code() {
         let counters = Arc::new(Counters::default());
-        let (handle, driver) = start(engine(), 8, 8, counters.clone()).unwrap();
+        let (handle, driver) = start(engine(), cfg(8, 8), counters.clone()).unwrap();
         let rx = handle.submit("no-such-model", vec![0.0; 32]).unwrap();
         let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         let (code, msg) = reply.expect_err("unknown model must fail");
@@ -350,7 +683,7 @@ mod tests {
         assert_eq!(code, ErrorCode::BadShape);
         assert_eq!(counters.errored.load(Ordering::Relaxed), 2);
         // Failed jobs release their admission slots.
-        assert_eq!(*handle.inflight.lock().unwrap().get("tiny").unwrap(), 0);
+        wait_for_drained_inflight(&handle, "tiny");
         drop(handle);
         let _ = driver.join().unwrap();
     }
@@ -358,7 +691,7 @@ mod tests {
     #[test]
     fn shutdown_drains_queued_jobs_before_the_driver_exits() {
         let counters = Arc::new(Counters::default());
-        let (handle, driver) = start(engine(), 8, 8, counters.clone()).unwrap();
+        let (handle, driver) = start(engine(), cfg(8, 8), counters.clone()).unwrap();
         let receivers: Vec<_> =
             (0..4).map(|_| handle.submit("tiny", vec![0.25; 32]).unwrap()).collect();
         // Drop the last submission handle immediately: the driver must
@@ -372,5 +705,114 @@ mod tests {
         assert_eq!(engine.stats().requests, 4);
         assert_eq!(counters.completed.load(Ordering::Relaxed), 4);
         assert_eq!(counters.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn expired_deadlines_answer_timeout_before_eval() {
+        let counters = Arc::new(Counters::default());
+        let cfg = SchedulerConfig {
+            deadline: Some(Duration::ZERO),
+            ..cfg(8, 8)
+        };
+        let (handle, driver) = start(engine(), cfg, counters.clone()).unwrap();
+        let rx = handle.submit("tiny", vec![0.5; 32]).unwrap();
+        let (code, msg) = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect_err("a zero deadline must expire in the queue");
+        assert_eq!(code, ErrorCode::Timeout);
+        assert!(msg.contains("deadline"), "{msg}");
+        drop(handle);
+        let engine = driver.join().unwrap();
+        assert_eq!(engine.stats().requests, 0, "expired jobs are skipped before eval");
+        assert_eq!(counters.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.completed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn injected_panic_yields_internal_replies_without_supervision() {
+        // The recovery contract at the reply-channel level: even with
+        // quarantine (the supervision policy) disabled, a panic inside
+        // the wave must surface as structured INTERNAL replies — never
+        // a dead driver and hanging clients.
+        faults::silence_injected_panics();
+        let counters = Arc::new(Counters::default());
+        let cfg = SchedulerConfig {
+            quarantine_after: 0,
+            ..cfg(8, 8)
+        };
+        let (handle, driver) = start(engine_with(&["panicky"]), cfg, counters.clone()).unwrap();
+        let guard = FaultPlan::new(11).with(step_panic_rule("panicky")).arm();
+        let rx = handle.submit("panicky", vec![0.5; 32]).unwrap();
+        let (code, msg) = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect_err("the panicked wave must fail structurally");
+        assert_eq!(code, ErrorCode::Internal);
+        assert!(msg.contains("panicked"), "{msg}");
+        assert_eq!(counters.panics.load(Ordering::Relaxed), 1);
+        // No supervision: the model is NOT quarantined, and the purged
+        // engine state rebuilds on the next request (the one-shot
+        // trigger has already fired).
+        let rx = handle.submit("panicky", vec![0.5; 32]).unwrap();
+        let out = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect("the driver must have survived the panic");
+        assert_eq!(out.len(), 3);
+        assert!(handle.health().quarantined.is_empty());
+        drop(guard);
+        drop(handle);
+        let _ = driver.join().unwrap();
+    }
+
+    #[test]
+    fn panics_quarantine_the_model_and_isolate_others() {
+        faults::silence_injected_panics();
+        let counters = Arc::new(Counters::default());
+        let (handle, driver) =
+            start(engine_with(&["flaky", "stable"]), cfg(8, 8), counters.clone()).unwrap();
+        let guard = FaultPlan::new(5).with(step_panic_rule("flaky")).arm();
+        // First flaky request: the wave panics, strike 1 quarantines
+        // (threshold 1 by default).
+        let rx = handle.submit("flaky", vec![0.5; 32]).unwrap();
+        let (code, _) = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect_err("injected panic must fail the job");
+        assert_eq!(code, ErrorCode::Internal);
+        // Later submits are refused at admission with QUARANTINED.
+        let t0 = Instant::now();
+        loop {
+            match handle.submit("flaky", vec![0.5; 32]) {
+                Err((ErrorCode::Quarantined, msg)) => {
+                    assert!(msg.contains("flaky"), "{msg}");
+                    break;
+                }
+                // The strike lands when the driver unwinds the wave; a
+                // submit racing it is answered INTERNAL by the driver.
+                Ok(rx) => {
+                    let _ = rx.recv_timeout(Duration::from_secs(30));
+                }
+                Err(other) => panic!("expected QUARANTINED, got {other:?}"),
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "model never quarantined");
+        }
+        // Other models keep serving.
+        let rx = handle.submit("stable", vec![0.5; 32]).unwrap();
+        let out = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect("healthy models must keep serving");
+        assert_eq!(out.len(), 3);
+        // The health snapshot names the quarantined model.
+        let health = handle.health();
+        assert_eq!(health.panics, 1);
+        assert!(health.quarantine_rejected >= 1);
+        assert_eq!(health.quarantined.len(), 1);
+        assert_eq!(health.quarantined[0].model, "flaky");
+        drop(guard);
+        drop(handle);
+        let _ = driver.join().unwrap();
     }
 }

@@ -1,0 +1,332 @@
+//! Chaos suite for the self-healing serving front.
+//!
+//! Drives concurrent TCP clients against a server whose fault-injection
+//! registry (`gconv_chain::exec::faults`) is armed with a seeded plan,
+//! and asserts the robustness contract end to end:
+//!
+//! * **No deadlock** — every request is answered within its socket
+//!   timeout, even while waves panic, error, and stall.
+//! * **Exactly one reply per accepted request** — accounting closes:
+//!   `submitted == completed + errored + expired` on the health frame.
+//! * **Bounded queue** — the high-water mark never exceeds the
+//!   configured depth, faults or not.
+//! * **Quarantine isolation** — a panicking model is refused with
+//!   `QUARANTINED` while every other model keeps serving responses
+//!   bit-identical to an in-process reference engine.
+//! * **Numerics are sacred** — injection fails requests; it never
+//!   corrupts a successful response.
+//!
+//! Arming is process-global, so the tests serialize on a local mutex
+//! (the registry's own arm-lock would serialize the arming itself, but
+//! the *disarmed* control test must not overlap an armed soak either).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use gconv_chain::exec::faults::{self, FaultKind, FaultPlan, FaultRule, Trigger};
+use gconv_chain::exec::serve::Engine;
+use gconv_chain::exec::Tensor;
+use gconv_chain::ir::{Layer, Network, Shape};
+use gconv_chain::server::{serve, Client, ErrorCode, Response, ServerConfig, ServerHandle};
+
+/// Serializes the whole suite: the fault registry is process-global.
+static SEQ: Mutex<()> = Mutex::new(());
+
+const SAMPLE_DIMS: [usize; 3] = [2, 4, 4];
+const SAMPLE_LEN: usize = 2 * 4 * 4;
+const MODELS: [&str; 3] = ["good", "flaky", "bad"];
+
+fn tiny_net(batch: usize) -> Network {
+    let mut net = Network::new("tiny");
+    let i = net.add("data", Layer::Input { shape: Shape::bchw(batch, 2, 4, 4) }, &[]);
+    let c = net.add(
+        "conv",
+        Layer::Conv { out_channels: 3, kernel: (3, 3), stride: 1, pad: 1, groups: 1 },
+        &[i],
+    );
+    let r = net.add("relu", Layer::Relu, &[c]);
+    net.add("fc", Layer::FullyConnected { out_features: 5 }, &[r]);
+    net
+}
+
+/// An engine with every chaos model registered (all share one builder,
+/// so one reference output covers any model given the same input).
+fn chaos_engine(max_batch: usize) -> Engine {
+    let mut engine = Engine::new(max_batch);
+    for code in MODELS {
+        engine.register(code, tiny_net);
+    }
+    engine
+}
+
+fn sample(seed: u64) -> Vec<f32> {
+    Tensor::rand(&[SAMPLE_LEN], seed, 1.0).into_data()
+}
+
+/// In-process reference for `(model, input)` pairs, keyed by request
+/// index — the oracle every successful wire response is pinned to.
+fn reference_outputs(traffic: &[(usize, &'static str, Vec<f32>)]) -> Vec<Vec<f32>> {
+    let mut engine = chaos_engine(1);
+    for (id, model, x) in traffic {
+        engine.submit(model, *id as u64, x.clone()).unwrap();
+    }
+    let mut responses = engine.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), traffic.len(), "reference engine dropped requests");
+    responses.into_iter().map(|r| r.data).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn connect(handle: &ServerHandle) -> Client {
+    let mut client = Client::connect_retry(&handle.addr().to_string(), Duration::from_secs(10))
+        .expect("connect to the chaos server");
+    // The no-deadlock bound: a swallowed reply fails the read loudly
+    // instead of hanging the suite.
+    client.set_timeouts(Duration::from_secs(30), Duration::from_secs(10)).expect("timeouts");
+    client
+}
+
+fn rule(site: &str, scope: Option<&str>, kind: FaultKind, trigger: Trigger) -> FaultRule {
+    FaultRule {
+        site: site.to_string(),
+        scope: scope.map(str::to_string),
+        kind,
+        trigger,
+    }
+}
+
+/// What one wire exchange produced, for the accounting asserts.
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum Outcome {
+    Output,
+    Internal,
+    Quarantined,
+    Busy,
+}
+
+fn classify(resp: Response) -> (Outcome, Option<Vec<f32>>) {
+    match resp {
+        Response::Output { data, .. } => (Outcome::Output, Some(data)),
+        Response::Error { code: ErrorCode::Internal, .. } => (Outcome::Internal, None),
+        Response::Error { code: ErrorCode::Quarantined, .. } => (Outcome::Quarantined, None),
+        Response::Error { code: ErrorCode::Busy, .. } => (Outcome::Busy, None),
+        other => panic!("unexpected response under chaos: {other:?}"),
+    }
+}
+
+// ------------------------------------------------------ control
+
+#[test]
+fn disarmed_registry_serves_bit_identically() {
+    let _seq = SEQ.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(!faults::armed(), "no plan may leak into the control test");
+    let traffic: Vec<(usize, &'static str, Vec<f32>)> = (0..12)
+        .map(|i| (i, MODELS[i % MODELS.len()], sample(0xC0_FFEE ^ i as u64)))
+        .collect();
+    let reference = reference_outputs(&traffic);
+
+    let handle = serve("127.0.0.1:0", chaos_engine(4), ServerConfig::default())
+        .expect("bind an ephemeral port");
+    let mut client = connect(&handle);
+    for (i, model, x) in &traffic {
+        let out = client.infer(model, &SAMPLE_DIMS, x).expect("disarmed inference");
+        assert!(bits_eq(&out, &reference[*i]), "request {i} diverged with the registry off");
+    }
+    let report = handle.shutdown().expect("clean shutdown");
+    assert_eq!(report.served, traffic.len() as u64);
+    assert_eq!(report.errored, 0);
+    assert_eq!(report.panics, 0);
+    assert!(report.quarantined.is_empty());
+}
+
+// ------------------------------------------------------ quarantine
+
+#[test]
+fn panicking_model_is_quarantined_while_others_keep_serving() {
+    let _seq = SEQ.lock().unwrap_or_else(|e| e.into_inner());
+    faults::silence_injected_panics();
+    let traffic: Vec<(usize, &'static str, Vec<f32>)> =
+        (0..4).map(|i| (i, "good", sample(0xBAD ^ i as u64))).collect();
+    let reference = reference_outputs(&traffic);
+
+    let guard = FaultPlan::new(21)
+        .with(rule(faults::SITE_SERVE_STEP, Some("bad"), FaultKind::Panic, Trigger::Nth(1)))
+        .arm();
+    let handle = serve("127.0.0.1:0", chaos_engine(4), ServerConfig::default())
+        .expect("bind an ephemeral port");
+
+    let mut bad_client = connect(&handle);
+    // First request: the wave panics, the supervisor answers INTERNAL
+    // and quarantines (threshold 1).
+    let x = sample(0xDEAD);
+    let (outcome, _) = classify(bad_client.request("bad", &SAMPLE_DIMS, &x).expect("reply 1"));
+    assert_eq!(outcome, Outcome::Internal, "the panicked wave must fail structurally");
+    // Second request: refused at admission.
+    let (outcome, _) = classify(bad_client.request("bad", &SAMPLE_DIMS, &x).expect("reply 2"));
+    assert_eq!(outcome, Outcome::Quarantined, "strike 1 must quarantine the model");
+
+    // The other model keeps serving bit-identically on a second
+    // connection, concurrent with the quarantined one.
+    let mut good_client = connect(&handle);
+    for (i, _, x) in &traffic {
+        let out = good_client.infer("good", &SAMPLE_DIMS, x).expect("good model inference");
+        assert!(bits_eq(&out, &reference[*i]), "good request {i} diverged after the panic");
+    }
+    let health = good_client.health().expect("health frame");
+    assert_eq!(health.panics, 1);
+    assert_eq!(health.quarantined.len(), 1);
+    assert_eq!(health.quarantined[0].model, "bad");
+    assert_eq!(health.quarantined[0].strikes, 1);
+
+    drop(bad_client);
+    drop(good_client);
+    let report = handle.shutdown().expect("clean shutdown");
+    assert_eq!(report.served, traffic.len() as u64);
+    assert_eq!(report.panics, 1);
+    assert_eq!(report.quarantine_rejected, 1);
+    assert_eq!(report.quarantined.len(), 1);
+    drop(guard);
+}
+
+// ------------------------------------------------------ soak
+
+/// The full randomized soak: three concurrent clients, mixed traffic
+/// across three models, four armed fault rules over three sites
+/// (panic, graceful error, and delays at two layers). Fixed seed; CI
+/// runs it in release via `--ignored`.
+#[test]
+#[ignore = "multi-second chaos soak; CI runs it in release via `-- --ignored`"]
+fn chaos_soak_under_randomized_faults() {
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 30;
+    const QUEUE_DEPTH: usize = 8;
+
+    let _seq = SEQ.lock().unwrap_or_else(|e| e.into_inner());
+    faults::silence_injected_panics();
+
+    // Client `c` takes indices `c, c+CLIENTS, …`, so the model is keyed
+    // on `i / CLIENTS`: every client cycles through all three models
+    // (keyed on `i` it would be model-homogeneous — CLIENTS ≡ MODELS).
+    let traffic: Vec<(usize, &'static str, Vec<f32>)> = (0..CLIENTS * PER_CLIENT)
+        .map(|i| (i, MODELS[(i / CLIENTS) % MODELS.len()], sample(0x50AC ^ i as u64)))
+        .collect();
+    let reference = reference_outputs(&traffic);
+
+    let guard = FaultPlan::new(4242)
+        // `bad` panics on its second wave: one strike → quarantined.
+        .with(rule(faults::SITE_SERVE_STEP, Some("bad"), FaultKind::Panic, Trigger::Nth(2)))
+        // `flaky` waves fail gracefully one time in five.
+        .with(rule(faults::SITE_SCHEDULER_WAVE, Some("flaky"), FaultKind::Err, Trigger::Prob(0.2)))
+        // `flaky` steps stall a little, one in three.
+        .with(rule(
+            faults::SITE_SERVE_STEP,
+            Some("flaky"),
+            FaultKind::Delay(Duration::from_millis(1)),
+            Trigger::Prob(0.3),
+        ))
+        // Every connection's frames are randomly delayed.
+        .with(rule(
+            faults::SITE_CONN_READ,
+            None,
+            FaultKind::Delay(Duration::from_millis(2)),
+            Trigger::Prob(0.1),
+        ))
+        .arm();
+
+    let config = ServerConfig { queue_depth: QUEUE_DEPTH, ..ServerConfig::default() };
+    let handle =
+        serve("127.0.0.1:0", chaos_engine(4), config).expect("bind an ephemeral port");
+
+    // Each client drives its slice of the traffic and records one
+    // outcome per request — a missing or doubled reply would corrupt
+    // the accounting below.
+    let outcomes = std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(CLIENTS);
+        for c in 0..CLIENTS {
+            let handle = &handle;
+            let traffic = &traffic;
+            workers.push(scope.spawn(move || {
+                let mut client = connect(handle);
+                let mut got: Vec<(usize, Outcome, Option<Vec<f32>>)> = Vec::new();
+                for (i, model, x) in traffic.iter().skip(c).step_by(CLIENTS) {
+                    loop {
+                        let resp =
+                            client.request(model, &SAMPLE_DIMS, x).expect("one reply per request");
+                        let (outcome, data) = classify(resp);
+                        if outcome == Outcome::Busy {
+                            std::thread::sleep(Duration::from_millis(2));
+                            continue;
+                        }
+                        got.push((*i, outcome, data));
+                        break;
+                    }
+                }
+                got
+            }));
+        }
+        let mut all = Vec::new();
+        for w in workers {
+            all.extend(w.join().expect("chaos client thread"));
+        }
+        all
+    });
+
+    // Exactly one terminal outcome per request.
+    assert_eq!(outcomes.len(), traffic.len());
+
+    let mut internal = 0u64;
+    let mut quarantined = 0u64;
+    for (i, outcome, data) in &outcomes {
+        let model = traffic[*i].1;
+        match outcome {
+            // Injection never corrupts a success, whatever the model.
+            Outcome::Output => {
+                let out = data.as_ref().expect("output carries data");
+                assert!(bits_eq(out, &reference[*i]), "successful request {i} diverged");
+            }
+            Outcome::Internal => {
+                assert_ne!(model, "good", "the clean model must never fail internally");
+                internal += 1;
+            }
+            Outcome::Quarantined => {
+                assert_eq!(model, "bad", "only the panicking model may be quarantined");
+                quarantined += 1;
+            }
+            Outcome::Busy => unreachable!("BUSY is retried in the client loop"),
+        }
+    }
+
+    // The health frame closes the books while the server still runs.
+    let mut probe = connect(&handle);
+    let health = probe.health().expect("health frame");
+    assert_eq!(
+        health.submitted,
+        health.completed + health.errored + health.expired,
+        "accepted requests must all resolve: {health:?}"
+    );
+    assert_eq!(health.queue_depth, 0, "nothing may linger in the queue after the soak");
+    assert!(health.max_queue_depth <= QUEUE_DEPTH as u64, "queue bound violated: {health:?}");
+    assert_eq!(health.panics, 1, "the Nth(2) panic rule fires exactly once");
+    assert_eq!(health.quarantined.len(), 1);
+    assert_eq!(health.quarantined[0].model, "bad");
+    drop(probe);
+
+    let report = handle.shutdown().expect("clean shutdown under chaos");
+    assert!(report.max_queue_depth <= QUEUE_DEPTH);
+    assert_eq!(report.panics, 1);
+    // A QUARANTINED reply is either an admission reject
+    // (`quarantine_rejected`) or a wave-time fail for a job accepted
+    // just before the strike landed (`errored`); together with the
+    // INTERNAL replies the books close exactly against what the
+    // clients saw.
+    assert_eq!(
+        report.errored + report.quarantine_rejected,
+        internal + quarantined,
+        "every error frame the clients saw must be accounted: {report:?}"
+    );
+    assert!(report.quarantine_rejected <= quarantined);
+    drop(guard);
+}
