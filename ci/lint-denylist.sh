@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Repo lint deny-list (blocking in CI, runnable locally from anywhere):
+#
+#   1. No `.lock()/.read()/.write()` followed by a raw `.unwrap()` in
+#      the Rust tree — poisoned-lock recovery must use
+#      `unwrap_or_else(|e| e.into_inner())` so one panicked worker
+#      cannot cascade through the serving path.
+#   2. No `unsafe` code outside `rust/src/exec/kernels.rs` — the raw
+#      output-pointer GEMM fan-out is the single unsafe island, and its
+#      disjointness justification is machine-checked by
+#      `analysis::disjoint`. New unsafe goes there or not at all.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+
+if matches=$(grep -RnE '\.(lock|read|write)\(\)[[:space:]]*\.unwrap\(\)' rust/src rust/tests); then
+  echo "deny-list: raw .unwrap() on a lock guard — use unwrap_or_else(|e| e.into_inner()):"
+  echo "$matches"
+  status=1
+fi
+
+if matches=$(grep -RnE 'unsafe([[:space:]]+(impl|fn|trait)|[[:space:]]*\{)' \
+    --include='*.rs' rust/src | grep -v '^rust/src/exec/kernels.rs:'); then
+  echo "deny-list: unsafe outside rust/src/exec/kernels.rs:"
+  echo "$matches"
+  status=1
+fi
+
+if [ "$status" -eq 0 ]; then
+  echo "deny-list: clean"
+fi
+exit "$status"

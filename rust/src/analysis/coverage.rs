@@ -1,0 +1,193 @@
+//! Operand-coverage pass: every loop-nest read of a chain-internal
+//! operand falls inside the extents its producer emits, under the
+//! same reshape / rank-aligned / squeezed-broadcast rules the
+//! interpreter's binder applies — re-derived here so the audit proves
+//! the bind will succeed instead of asking it.
+
+use super::{operand_extents, params_ok, AuditReport, Rule};
+use crate::exec::interp::MAX_DIMS;
+use crate::gconv::chain::GconvChain;
+use crate::gconv::op::{DataRef, GconvOp, MainOp, ReduceOp};
+
+pub(crate) fn run(chain: &GconvChain, rep: &mut AuditReport) {
+    let entries = chain.entries();
+    for (i, e) in entries.iter().enumerate() {
+        let op = &e.op;
+
+        // --- Parameter sanity (everything below divides by Ng). ---
+        rep.check(Rule::CoverageParams);
+        let mut ok = params_ok(op);
+        if !ok {
+            for &(d, p) in &op.dims {
+                for (what, v) in
+                    [("Ng", p.ng), ("Nop", p.nop), ("Nopc", p.nopc), ("Nks", p.nks), ("s", p.s)]
+                {
+                    if v == 0 {
+                        rep.flag(
+                            Rule::CoverageParams,
+                            i,
+                            &op.name,
+                            format!("dimension {d} {what}"),
+                            ">= 1",
+                            "0",
+                        );
+                    }
+                }
+            }
+        }
+        if op.dims.len() > MAX_DIMS {
+            rep.flag(
+                Rule::CoverageParams,
+                i,
+                &op.name,
+                "dimension count",
+                format!("<= {MAX_DIMS}"),
+                op.dims.len().to_string(),
+            );
+            ok = false;
+        }
+        if ok && op.reduce == ReduceOp::None {
+            let red_total = op.dims.iter().map(|&(_, p)| p.nks).product::<usize>().max(1);
+            if red_total > 1 {
+                rep.flag(
+                    Rule::CoverageParams,
+                    i,
+                    &op.name,
+                    "reduce operator",
+                    "a reduction (Nks loops present)",
+                    format!("None with {red_total} reduction steps"),
+                );
+            }
+        }
+        if !ok || e.special.is_some() {
+            // Special-op operand sizing is proven by the disjointness
+            // pass alongside its partition facts.
+            continue;
+        }
+
+        // --- Input operand coverage (chain-internal producers only:
+        // external/weight operands are materialized to fit). ---
+        if let DataRef::Gconv(p) = op.input {
+            if p < i && params_ok(&entries[p].op) {
+                rep.check(Rule::CoverageInput);
+                let dims = operand_extents(&entries[p].op);
+                if let Err((subject, expected, found)) = input_covers(op, &dims) {
+                    rep.flag(Rule::CoverageInput, i, &op.name, subject, expected, found);
+                }
+            }
+            // Forward references are the acyclicity pass's finding.
+        }
+
+        // --- Kernel operand: exact element count. ---
+        if !matches!(op.main, MainOp::Pass) {
+            rep.check(Rule::CoverageKernel);
+            match &op.kernel {
+                None => rep.flag(
+                    Rule::CoverageKernel,
+                    i,
+                    &op.name,
+                    "kernel operand",
+                    format!("an operand ({:?} consumes parameters)", op.main),
+                    "none",
+                ),
+                Some(DataRef::Gconv(p)) if *p < i => {
+                    let have: usize = operand_extents(&entries[*p].op).iter().product();
+                    let want = op.kernel_elements();
+                    if have != want {
+                        rep.flag(
+                            Rule::CoverageKernel,
+                            i,
+                            &op.name,
+                            format!("kernel operand #{p} elements"),
+                            want.to_string(),
+                            have.to_string(),
+                        );
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+/// Would the binder accept `in_dims` as `op`'s input? Mirrors the
+/// three acceptance modes of `exec::interp`'s `bind_input` (exact
+/// element count, rank-aligned with broadcasts, squeezed positional)
+/// plus its final layout-product check, returning the first failing
+/// `(subject, expected, found)` instead of an executor error.
+fn input_covers(op: &GconvOp, in_dims: &[usize]) -> Result<(), (String, String, String)> {
+    let nd = op.dims.len();
+    let mut ngs = Vec::with_capacity(nd);
+    let mut group_in = Vec::with_capacity(nd);
+    let mut exp_in = Vec::with_capacity(nd);
+    for &(_, p) in &op.dims {
+        let covered = p.input_extent() / p.ng;
+        ngs.push(p.ng);
+        group_in.push(covered);
+        exp_in.push(p.ng * covered);
+    }
+
+    let Some(elements) = checked_product(in_dims) else {
+        return Err(overflow("input extent product", in_dims));
+    };
+    let Some(expected) = checked_product(&exp_in) else {
+        return Err(overflow("expected extent product", &exp_in));
+    };
+
+    // Mode 1: exact element count — reshape semantics.
+    if elements == expected {
+        return Ok(());
+    }
+
+    // Mode 2: rank-aligned — larger extents (stride-discarded tails)
+    // and extent-1 broadcasts accepted per dimension.
+    if in_dims.len() == nd {
+        let aligned = in_dims
+            .iter()
+            .zip(ngs.iter().zip(&group_in))
+            .all(|(&a, (&ng, &gi))| (a % ng == 0 && a / ng >= gi) || a == 1);
+        if aligned {
+            return Ok(());
+        }
+    }
+
+    // Mode 3: squeezed — non-unit extents matched positionally against
+    // the dimensions that expect more than one element.
+    let kept: Vec<usize> = (0..nd).filter(|&i| exp_in[i] > 1).collect();
+    let sq: Vec<usize> = in_dims.iter().copied().filter(|&d| d > 1).collect();
+    if sq.len() != kept.len() {
+        return Err((
+            "input shape".to_string(),
+            format!("extents covering {exp_in:?}"),
+            format!("{in_dims:?}"),
+        ));
+    }
+    let mut bound = 1usize;
+    for (&k, &a) in kept.iter().zip(&sq) {
+        if a % ngs[k] != 0 || a / ngs[k] < group_in[k] {
+            return Err((
+                format!("input dimension {}", op.dims[k].0),
+                format!(">= {} (Ng {} x per-group {})", exp_in[k], ngs[k], group_in[k]),
+                a.to_string(),
+            ));
+        }
+        bound = match bound.checked_mul(a) {
+            Some(b) => b,
+            None => return Err(overflow("bound extent product", &sq)),
+        };
+    }
+    // Final layout check: the bound extents must account for every
+    // element (zero-extent inputs land here).
+    if bound != elements {
+        return Err(("bound input elements".to_string(), bound.to_string(), elements.to_string()));
+    }
+    Ok(())
+}
+
+fn checked_product(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}
+
+fn overflow(what: &str, dims: &[usize]) -> (String, String, String) {
+    (what.to_string(), "within usize".to_string(), format!("overflow over {dims:?}"))
+}

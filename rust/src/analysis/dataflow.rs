@@ -1,0 +1,153 @@
+//! Dataflow-soundness pass: the chain is a DAG, the re-derived level
+//! schedule is monotone, replaying the executor's refcounted free
+//! protocol never reads a released buffer, and every scalar-pipeline
+//! LUT name resolves.
+//!
+//! The schedule and use counts are recomputed here (see the shared
+//! helpers in the parent module) rather than taken from
+//! `exec::chain_exec` — the replay below is an independent derivation
+//! the executor's scheduler is checked against.
+
+use super::{producer_deps, schedule, AuditConfig, AuditReport, Rule, Schedule};
+use crate::exec::lut_known;
+use crate::gconv::chain::GconvChain;
+use crate::gconv::op::{DataRef, ScalarStage};
+
+pub(crate) fn run(chain: &GconvChain, cfg: &AuditConfig, rep: &mut AuditReport) {
+    let n = chain.len();
+    let entries = chain.entries();
+
+    // --- Acyclicity: operand references point strictly backwards. ---
+    let mut acyclic = true;
+    for (i, e) in entries.iter().enumerate() {
+        rep.check(Rule::DataflowAcyclic);
+        let refs = [("input", Some(&e.op.input)), ("kernel", e.op.kernel.as_ref())];
+        for (what, r) in refs {
+            if let Some(DataRef::Gconv(p)) = r {
+                if *p >= i {
+                    acyclic = false;
+                    rep.flag(
+                        Rule::DataflowAcyclic,
+                        i,
+                        &e.op.name,
+                        format!("{what} operand"),
+                        format!("a producer index < {i}"),
+                        format!("#{p}"),
+                    );
+                }
+            }
+        }
+    }
+
+    // --- LUT resolvability over every pre/post pipeline stage. ---
+    for (i, e) in entries.iter().enumerate() {
+        for (slot, stack) in [("pre", e.op.pre.stages()), ("post", e.op.post.stages())] {
+            for s in stack.as_slice() {
+                if let ScalarStage::Lut(name) = s {
+                    rep.check(Rule::DataflowLut);
+                    if !lut_known(name) {
+                        rep.flag(
+                            Rule::DataflowLut,
+                            i,
+                            &e.op.name,
+                            format!("{slot} LUT {name:?}"),
+                            "a name the interpreter resolves",
+                            "unknown",
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // --- Wanted outputs must exist. ---
+    rep.check(Rule::DataflowSchedule);
+    if let Some(w) = &cfg.wanted {
+        for &x in w {
+            if x >= n {
+                rep.flag_chain(
+                    Rule::DataflowSchedule,
+                    format!("wanted output #{x}"),
+                    format!("an entry index < {n}"),
+                    x.to_string(),
+                );
+            }
+        }
+    }
+    if !acyclic {
+        return; // the schedule replay is undefined on cyclic chains
+    }
+
+    let Schedule { needed, levels, mut uses, wanted } = schedule(chain, cfg);
+
+    // --- Schedule monotonicity: every dep of a scheduled entry is
+    // itself scheduled, at a strictly earlier level. ---
+    let mut level_of = vec![usize::MAX; n];
+    for (l, lv) in levels.iter().enumerate() {
+        for &i in lv {
+            level_of[i] = l;
+        }
+    }
+    for (l, lv) in levels.iter().enumerate() {
+        for &i in lv {
+            rep.check(Rule::DataflowSchedule);
+            for p in producer_deps(&entries[i].op) {
+                if !needed[p] || level_of[p] >= l {
+                    rep.flag(
+                        Rule::DataflowSchedule,
+                        i,
+                        &entries[i].op.name,
+                        format!("operand #{p} level"),
+                        format!("scheduled before level {l}"),
+                        if needed[p] {
+                            format!("level {}", level_of[p])
+                        } else {
+                            "not scheduled".to_string()
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    // --- Refcount replay: decrement per reference after each level,
+    // as the executor does; a read of an exhausted operand is a
+    // read-after-free. ---
+    for lv in &levels {
+        for &i in lv {
+            rep.check(Rule::DataflowRefcount);
+            for p in producer_deps(&entries[i].op) {
+                if uses[p] == 0 {
+                    rep.flag(
+                        Rule::DataflowRefcount,
+                        i,
+                        &entries[i].op.name,
+                        format!("operand #{p}"),
+                        "a live buffer",
+                        "freed before this read",
+                    );
+                }
+            }
+        }
+        for &i in lv {
+            for p in producer_deps(&entries[i].op) {
+                uses[p] = uses[p].saturating_sub(1);
+            }
+        }
+    }
+    // The extra wanted use must survive the whole replay — that is
+    // what hands the output buffers to the caller.
+    for &w in &wanted {
+        rep.check(Rule::DataflowRefcount);
+        if uses[w] == 0 {
+            rep.flag(
+                Rule::DataflowRefcount,
+                w,
+                &entries[w].op.name,
+                "wanted output buffer",
+                "held through the run",
+                "released by a consumer",
+            );
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Write-disjointness pass: prove that every parallel write site in
+//! the native executor partitions its output exactly.
+//!
+//! The packed-GEMM path (`exec::kernels`) fans one entry out into
+//! (group, column-block) jobs that write through a shared raw output
+//! pointer; each job owns the rows of its group slice and the columns
+//! of its block. That is sound iff the mixed-radix output index
+//! `sum_d ((g_d * Nop_d + op_d) * Nopc_d + opc_d) * stride_d` is a
+//! bijection from (group, row, column) digits onto `[0, out_total)` —
+//! which holds exactly when every per-dimension extent is positive and
+//! `prod(Ng) * prod(Nop) * prod(Nopc) = prod(Ng*Nop*Nopc)` without
+//! overflow, with fixed-width column blocks tiling `[0, n_cols)`.
+//! This pass discharges those obligations per entry, plus the
+//! equivalent partition facts for the special-op routines
+//! (`exec::special`): max-pool BP scatter stays inside one window set
+//! and concat block copies tile the output.
+
+use super::{operand_extents, params_ok, static_tier, AuditReport, Rule};
+use crate::exec::interp::MAX_DIMS;
+use crate::exec::{KernelTier, GEMM_COL_BLOCK};
+use crate::gconv::chain::{GconvChain, SpecialOp};
+use crate::gconv::op::{DataRef, DimParams, GconvOp};
+use crate::ir::Dim;
+
+pub(crate) fn run(chain: &GconvChain, rep: &mut AuditReport) {
+    // The kernel's column-block width is a compile-time constant; the
+    // tiling argument below needs it positive. Proven once per audit.
+    rep.check(Rule::DisjointGemm);
+    if GEMM_COL_BLOCK == 0 {
+        rep.flag_chain(Rule::DisjointGemm, "GEMM column block width", ">= 1", "0");
+    }
+
+    for (i, e) in chain.entries().iter().enumerate() {
+        if !params_ok(&e.op) {
+            continue; // flagged by the coverage pass
+        }
+        match &e.special {
+            None => check_gemm_partition(i, &e.op, rep),
+            Some(SpecialOp::MaxPoolBp { fwd, in_extents }) => {
+                rep.scatter_sites += 1;
+                check_scatter(chain, i, fwd, in_extents, rep);
+            }
+            Some(SpecialOp::Concat { axis, pre_extent, branch_extent }) => {
+                rep.scatter_sites += 1;
+                check_concat(chain, i, *axis, *pre_extent, *branch_extent, rep);
+            }
+        }
+    }
+}
+
+/// The (group, row, column) job partition of one loop-nest entry is a
+/// bijection onto its output — the disjointness proof for the raw
+/// output pointer the GEMM tier shares across jobs. The same identity
+/// underwrites the safe tiers (their chunked writes partition the
+/// same index space), so it is discharged for every entry; entries
+/// the static tier model places on the GEMM path are counted as
+/// proven parallel write sites.
+fn check_gemm_partition(i: usize, op: &GconvOp, rep: &mut AuditReport) {
+    rep.check(Rule::DisjointGemm);
+    let mut n_groups = 1usize;
+    let mut n_rows = 1usize;
+    let mut n_cols = 1usize;
+    let mut out_total = 1usize;
+    for &(d, p) in &op.dims {
+        let ext = p.ng.checked_mul(p.nop).and_then(|x| x.checked_mul(p.nopc));
+        let acc = ext.and_then(|ext| {
+            n_groups = n_groups.checked_mul(p.ng)?;
+            n_rows = n_rows.checked_mul(p.nop)?;
+            n_cols = n_cols.checked_mul(p.nopc)?;
+            out_total = out_total.checked_mul(ext)?;
+            Some(())
+        });
+        if acc.is_none() {
+            rep.flag(
+                Rule::DisjointGemm,
+                i,
+                &op.name,
+                format!("dimension {d} job index arithmetic"),
+                "products within usize",
+                "overflow",
+            );
+            return;
+        }
+    }
+    // With every factor positive (params_ok) the mixed-radix digit map
+    // is onto iff the factored job count equals the output count.
+    let jobs = n_groups.checked_mul(n_rows).and_then(|x| x.checked_mul(n_cols));
+    if jobs != Some(out_total) {
+        rep.flag(
+            Rule::DisjointGemm,
+            i,
+            &op.name,
+            "job partition (groups x rows x cols)",
+            format!("{out_total} outputs"),
+            format!("{jobs:?} jobs"),
+        );
+        return;
+    }
+    if static_tier(op) == KernelTier::Gemm {
+        rep.gemm_sites += 1;
+    }
+}
+
+/// Max-pool BP scatter: the routine walks forward windows and
+/// accumulates each window's gradient onto the argmax position inside
+/// that window. Window positions are derived per forward dimension,
+/// so routing stays inside one window set only when no forward
+/// dimension multiplexes groups or parallel kernels.
+fn check_scatter(
+    chain: &GconvChain,
+    i: usize,
+    fwd: &[(Dim, DimParams)],
+    in_extents: &[usize],
+    rep: &mut AuditReport,
+) {
+    let e = &chain.entries()[i];
+    let name = &e.op.name;
+    rep.check(Rule::CoverageSpecial);
+    if fwd.len() != in_extents.len() || fwd.len() > MAX_DIMS {
+        rep.flag(
+            Rule::CoverageSpecial,
+            i,
+            name,
+            "forward geometry",
+            format!("matching dims within {MAX_DIMS}"),
+            format!("{} fwd dims, {} input extents", fwd.len(), in_extents.len()),
+        );
+        return;
+    }
+    if fwd.iter().any(|&(_, p)| p.nopc == 0 || p.nks == 0 || p.s == 0) {
+        rep.flag(
+            Rule::CoverageSpecial,
+            i,
+            name,
+            "forward loop parameters",
+            ">= 1",
+            "a zero window parameter",
+        );
+        return;
+    }
+
+    rep.check(Rule::DisjointScatter);
+    for &(d, p) in fwd {
+        if p.ng != 1 || p.nop != 1 {
+            rep.flag(
+                Rule::DisjointScatter,
+                i,
+                name,
+                format!("forward dimension {d}"),
+                "Ng = 1 and Nop = 1 (scatter routes within one window set)",
+                format!("Ng = {}, Nop = {}", p.ng, p.nop),
+            );
+        }
+    }
+
+    // Operand sizing: the gradient operand carries one value per
+    // forward window; the saved-input operand (and the output) carry
+    // the forward input.
+    let windows = checked_product(fwd.iter().map(|&(_, p)| p.output_extent()));
+    let fwd_in = checked_product(in_extents.iter().copied());
+    let out = checked_product(e.op.output_extents().into_iter());
+    let (Some(windows), Some(fwd_in), Some(out)) = (windows, fwd_in, out) else {
+        rep.flag(Rule::CoverageSpecial, i, name, "extent products", "within usize", "overflow");
+        return;
+    };
+    if out != fwd_in {
+        rep.flag(
+            Rule::CoverageSpecial,
+            i,
+            name,
+            "output elements",
+            format!("{fwd_in} (the forward input)"),
+            out.to_string(),
+        );
+    }
+    check_operand_elements(chain, i, "input (gradient)", &e.op.input, windows, rep);
+    if let Some(k) = &e.op.kernel {
+        check_operand_elements(chain, i, "kernel (saved input)", k, fwd_in, rep);
+    } else {
+        rep.flag(Rule::CoverageSpecial, i, name, "kernel operand", "the saved input", "none");
+    }
+}
+
+/// Concat step: the routine copies the `input` block then the `kernel`
+/// block side by side along the axis — an exact partition of the
+/// output iff `pre + branch` tiles the axis extent and both operands
+/// carry exactly their block's elements.
+fn check_concat(
+    chain: &GconvChain,
+    i: usize,
+    axis: usize,
+    pre: usize,
+    branch: usize,
+    rep: &mut AuditReport,
+) {
+    let e = &chain.entries()[i];
+    let name = &e.op.name;
+    let dims = operand_extents(&e.op);
+    rep.check(Rule::DisjointConcat);
+    if axis >= dims.len() {
+        rep.flag(
+            Rule::DisjointConcat,
+            i,
+            name,
+            "concat axis",
+            format!("< {} (output rank)", dims.len()),
+            axis.to_string(),
+        );
+        return;
+    }
+    if pre.checked_add(branch) != Some(dims[axis]) || pre == 0 || branch == 0 {
+        rep.flag(
+            Rule::DisjointConcat,
+            i,
+            name,
+            "axis partition (pre + branch)",
+            format!("{} with both blocks non-empty", dims[axis]),
+            format!("{pre} + {branch}"),
+        );
+        return;
+    }
+    let mut rest = dims;
+    rest.remove(axis);
+    let Some(outer_inner) = checked_product(rest.into_iter()) else {
+        rep.flag(Rule::DisjointConcat, i, name, "extent products", "within usize", "overflow");
+        return;
+    };
+    rep.check(Rule::CoverageSpecial);
+    let want_in = outer_inner.checked_mul(pre);
+    let want_ker = outer_inner.checked_mul(branch);
+    let (Some(want_in), Some(want_ker)) = (want_in, want_ker) else {
+        rep.flag(Rule::CoverageSpecial, i, name, "block products", "within usize", "overflow");
+        return;
+    };
+    check_operand_elements(chain, i, "input (pre block)", &e.op.input, want_in, rep);
+    if let Some(k) = &e.op.kernel {
+        check_operand_elements(chain, i, "kernel (branch)", k, want_ker, rep);
+    } else {
+        rep.flag(Rule::CoverageSpecial, i, name, "kernel operand", "a branch block", "none");
+    }
+}
+
+/// Element-count obligation for a special-op operand: provable only
+/// for well-formed chain-internal producers (externals are
+/// materialized to fit; forward references are the acyclicity pass's
+/// finding).
+fn check_operand_elements(
+    chain: &GconvChain,
+    i: usize,
+    what: &str,
+    operand: &DataRef,
+    want: usize,
+    rep: &mut AuditReport,
+) {
+    let DataRef::Gconv(p) = operand else {
+        return;
+    };
+    if *p >= i || !params_ok(&chain.entries()[*p].op) {
+        return;
+    }
+    let have: usize = operand_extents(&chain.entries()[*p].op).iter().product();
+    if have != want {
+        rep.flag(
+            Rule::CoverageSpecial,
+            i,
+            &chain.entries()[i].op.name,
+            format!("{what} operand #{p} elements"),
+            want.to_string(),
+            have.to_string(),
+        );
+    }
+}
+
+fn checked_product(vals: impl Iterator<Item = usize>) -> Option<usize> {
+    let mut acc = 1usize;
+    for v in vals {
+        acc = acc.checked_mul(v)?;
+    }
+    Some(acc)
+}

@@ -1,0 +1,89 @@
+//! Fusion-legality re-audit: re-derive the refusal rules of
+//! `mapping::fusion` on the (possibly fused) chain and check its
+//! decisions, instead of trusting them.
+//!
+//! Executable fusion only rewrites scalar pipelines, so the statically
+//! checkable post-conditions are: special entries never absorbed
+//! anything ([`Rule::FusionSpecial`]), every provenance record names a
+//! known operator slot ([`Rule::FusionSlot`]), and — the one rule
+//! whose violation silently corrupts numerics — a padded host that
+//! absorbed a producer into `pre` still maps the padding value +0.0
+//! to +0.0 bit-exactly ([`Rule::FusionPadding`]). The padding rule is
+//! exact for chains this repo lowers: every padded op the lowering
+//! emits with its own `pre` uses a zero-preserving stage that never
+//! maps a non-zero to zero, so evaluating the *composed* pipeline at
+//! +0.0 accepts exactly the fusions `executable_pre` accepts.
+
+use super::{AuditReport, Rule};
+use crate::exec::lut_apply;
+use crate::gconv::chain::GconvChain;
+use crate::gconv::op::{ScalarStage, StageStack};
+
+pub(crate) fn run(chain: &GconvChain, rep: &mut AuditReport) {
+    for (i, e) in chain.entries().iter().enumerate() {
+        rep.check(Rule::FusionSpecial);
+        if e.special.is_some() && !e.fused.is_empty() {
+            rep.flag(
+                Rule::FusionSpecial,
+                i,
+                &e.op.name,
+                "fusion records",
+                "none (special entries never fuse)",
+                format!("{} absorbed op(s)", e.fused.len()),
+            );
+        }
+
+        for f in &e.fused {
+            rep.check(Rule::FusionSlot);
+            if !matches!(f.slot, "pre" | "post" | "main" | "elided") {
+                rep.flag(
+                    Rule::FusionSlot,
+                    i,
+                    &e.op.name,
+                    format!("fused op {:?} slot", f.name),
+                    "one of pre/post/main/elided",
+                    format!("{:?}", f.slot),
+                );
+            }
+        }
+
+        let padded = e.op.dims.iter().any(|&(_, p)| p.ps > 0 || p.pe > 0);
+        let fused_pre = e.fused.iter().any(|f| f.slot == "pre");
+        if padded && fused_pre {
+            rep.check(Rule::FusionPadding);
+            match stack_at_zero(&e.op.pre.stages()) {
+                Some(v) if v.to_bits() == 0.0f32.to_bits() => {}
+                Some(v) => rep.flag(
+                    Rule::FusionPadding,
+                    i,
+                    &e.op.name,
+                    "composed pre pipeline at +0.0",
+                    "+0.0 bit-exactly",
+                    format!("{v:e}"),
+                ),
+                None => rep.flag(
+                    Rule::FusionPadding,
+                    i,
+                    &e.op.name,
+                    "composed pre pipeline at +0.0",
+                    "a resolvable pipeline",
+                    "an unresolvable LUT stage",
+                ),
+            }
+        }
+    }
+}
+
+/// The composed pipeline evaluated at +0.0 (`None` when a LUT stage
+/// does not resolve — separately flagged by [`Rule::DataflowLut`]).
+fn stack_at_zero(stack: &StageStack) -> Option<f32> {
+    let mut x = 0.0f32;
+    for s in stack.as_slice() {
+        x = match *s {
+            ScalarStage::Square => x * x,
+            ScalarStage::Mul(c) => c * x,
+            ScalarStage::Lut(n) => lut_apply(n, x).ok()?,
+        };
+    }
+    Some(x)
+}

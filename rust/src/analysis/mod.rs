@@ -1,0 +1,577 @@
+//! Static chain auditor: prove a lowered (optionally fused) GCONV
+//! chain safe to execute — without executing it.
+//!
+//! The paper's whole-life-cost argument (§2, §6) rests on the GCONV
+//! chain being a *uniform, analyzable* representation. This module
+//! turns that claim into checked invariants: [`audit_chain`] walks a
+//! chain and either proves a set of named rules or emits structured
+//! [`Diagnostic`]s (rule id, chain entry, operand/dimension,
+//! expected-vs-found). Nothing here evaluates numerics; every pass is
+//! pure shape/graph arithmetic re-derived independently from the
+//! executor, so the audit cross-checks `exec` rather than quoting it.
+//!
+//! Passes (one submodule each):
+//! - [`coverage`] — operand coverage: every loop-nest read of an
+//!   input/kernel operand falls inside the producer's bound extents
+//!   under the stride/padding/broadcast rules of `exec::interp`'s
+//!   binder (re-derived here, not called).
+//! - [`disjoint`] — write disjointness: the (group, column-block)
+//!   parallel GEMM jobs of `exec::kernels` write non-overlapping
+//!   output ranges (the machine-checked justification for the raw
+//!   output-pointer jobs there), and special-op scatter/concat steps
+//!   partition their outputs exactly.
+//! - [`fusion_audit`] — fusion legality re-audit: re-derives the
+//!   refusal rules of `mapping::fusion` on the fused chain (padding
+//!   zero-preservation, specials never fuse, slot provenance).
+//! - [`dataflow`] — dataflow soundness: acyclicity, level-schedule
+//!   monotonicity and use-count/refcount consistency with
+//!   `exec::chain_exec`'s scheduler (no read-after-free under buffer
+//!   recycling), LUT names resolvable.
+//! - [`resources`] — resource bounds: peak live bytes under the level
+//!   schedule vs a configurable budget (`BufferPool` capacity scale).
+//!
+//! Wired in three layers: a debug-mode assertion in
+//! `exec::serve::SessionBuilder::build`, import rejection in
+//! `Engine::register_spec` + the `specs` subcommand, and the
+//! `gconv-chain audit` CLI (per-rule report over the benchmark
+//! networks and bundled specs).
+
+pub mod coverage;
+pub mod dataflow;
+pub mod disjoint;
+pub mod fusion_audit;
+pub mod resources;
+
+use crate::exec::{KernelTier, GEMM_MIN_REDUCTION};
+use crate::gconv::chain::GconvChain;
+use crate::gconv::op::{DataRef, GconvOp, MainOp, ReduceOp};
+use std::fmt;
+
+/// A named invariant the auditor proves (or flags). Rule ids are
+/// stable strings (`pass.check`) — tests and CI match on them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Every loop parameter (`Ng`/`Nop`/`Nopc`/`Nks`/stride) is >= 1,
+    /// the dimension count fits the interpreter, and `reduce: None`
+    /// has no reduction loops.
+    CoverageParams,
+    /// A chain-internal input operand covers the consumer's expected
+    /// extents under the binder's reshape/rank-aligned/squeezed rules.
+    CoverageInput,
+    /// A main operator that consumes parameters has a kernel operand
+    /// of exactly the expected element count.
+    CoverageKernel,
+    /// Special entries (max-pool BP, concat) have both operands with
+    /// the element counts their dedicated routines require.
+    CoverageSpecial,
+    /// The (group, row, column) GEMM job partition is a bijection onto
+    /// the output: extent products match and index arithmetic cannot
+    /// overflow, so parallel jobs write disjoint ranges.
+    DisjointGemm,
+    /// Max-pool BP scatter routes each window's gradient inside a
+    /// single window set (`Ng = Nop = 1` per forward dimension).
+    DisjointScatter,
+    /// Concat block copies partition the output exactly
+    /// (`pre + branch` extents tile the concatenation axis).
+    DisjointConcat,
+    /// A padded entry that absorbed a producer into `pre` keeps the
+    /// padding value: the composed pipeline maps +0.0 to +0.0
+    /// bit-exactly (the `mapping::fusion` refusal rule, re-derived).
+    FusionPadding,
+    /// Special entries never participate in operation fusion.
+    FusionSpecial,
+    /// Fusion provenance records name a known operator slot.
+    FusionSlot,
+    /// Operand references point strictly backwards (the chain is a
+    /// DAG in execution order).
+    DataflowAcyclic,
+    /// The level schedule is monotone: every producer's level precedes
+    /// its consumers', and wanted outputs are in range.
+    DataflowSchedule,
+    /// Replaying the executor's refcounted free protocol never reads a
+    /// buffer after its last consumer released it.
+    DataflowRefcount,
+    /// Every LUT name in a pre/post pipeline resolves.
+    DataflowLut,
+    /// Peak live bytes under the level schedule stay within the
+    /// configured budget.
+    ResourcePeak,
+    /// Element/byte size arithmetic stays within `usize`.
+    ResourceOverflow,
+}
+
+impl Rule {
+    /// All rules, in declaration order (the per-rule report order).
+    pub const ALL: [Rule; 16] = [
+        Rule::CoverageParams,
+        Rule::CoverageInput,
+        Rule::CoverageKernel,
+        Rule::CoverageSpecial,
+        Rule::DisjointGemm,
+        Rule::DisjointScatter,
+        Rule::DisjointConcat,
+        Rule::FusionPadding,
+        Rule::FusionSpecial,
+        Rule::FusionSlot,
+        Rule::DataflowAcyclic,
+        Rule::DataflowSchedule,
+        Rule::DataflowRefcount,
+        Rule::DataflowLut,
+        Rule::ResourcePeak,
+        Rule::ResourceOverflow,
+    ];
+
+    /// Stable rule id (`pass.check`).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::CoverageParams => "coverage.params",
+            Rule::CoverageInput => "coverage.input",
+            Rule::CoverageKernel => "coverage.kernel",
+            Rule::CoverageSpecial => "coverage.special",
+            Rule::DisjointGemm => "disjoint.gemm",
+            Rule::DisjointScatter => "disjoint.scatter",
+            Rule::DisjointConcat => "disjoint.concat",
+            Rule::FusionPadding => "fusion.padding",
+            Rule::FusionSpecial => "fusion.special",
+            Rule::FusionSlot => "fusion.slot",
+            Rule::DataflowAcyclic => "dataflow.acyclic",
+            Rule::DataflowSchedule => "dataflow.schedule",
+            Rule::DataflowRefcount => "dataflow.refcount",
+            Rule::DataflowLut => "dataflow.lut",
+            Rule::ResourcePeak => "resource.peak",
+            Rule::ResourceOverflow => "resource.overflow",
+        }
+    }
+
+    /// One-line description for the per-rule report table.
+    pub fn describes(self) -> &'static str {
+        match self {
+            Rule::CoverageParams => "loop parameters >= 1, dims bounded, reduce consistent",
+            Rule::CoverageInput => "input operand covers expected extents (bind rules)",
+            Rule::CoverageKernel => "kernel operand present with exact element count",
+            Rule::CoverageSpecial => "special-op operands sized for their native routines",
+            Rule::DisjointGemm => "parallel GEMM jobs partition the output (bijection)",
+            Rule::DisjointScatter => "max-pool BP scatter stays inside its window set",
+            Rule::DisjointConcat => "concat block copies tile the output exactly",
+            Rule::FusionPadding => "fused pre pipeline preserves padding zeros bit-exactly",
+            Rule::FusionSpecial => "special entries never absorb fused ops",
+            Rule::FusionSlot => "fusion records name a known operator slot",
+            Rule::DataflowAcyclic => "operand references point strictly backwards",
+            Rule::DataflowSchedule => "level schedule monotone, wanted outputs in range",
+            Rule::DataflowRefcount => "no read-after-free under refcounted recycling",
+            Rule::DataflowLut => "every pre/post LUT name resolves",
+            Rule::ResourcePeak => "peak live bytes within the configured budget",
+            Rule::ResourceOverflow => "size arithmetic within usize",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One failed proof obligation: which rule, where, and the
+/// expected-vs-found mismatch.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// The violated rule.
+    pub rule: Rule,
+    /// Chain entry index (`None` for whole-chain findings).
+    pub entry: Option<usize>,
+    /// Op name of the entry (empty for whole-chain findings).
+    pub name: String,
+    /// The dimension/operand/quantity the rule inspected.
+    pub subject: String,
+    /// What the rule requires.
+    pub expected: String,
+    /// What the chain carries.
+    pub found: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.entry {
+            Some(i) => write!(
+                f,
+                "{}: entry #{i} ({}) {}: expected {}, found {}",
+                self.rule, self.name, self.subject, self.expected, self.found
+            ),
+            None => write!(
+                f,
+                "{}: {}: expected {}, found {}",
+                self.rule, self.subject, self.expected, self.found
+            ),
+        }
+    }
+}
+
+/// Auditor configuration.
+#[derive(Clone, Debug)]
+pub struct AuditConfig {
+    /// Peak-live-bytes budget for [`Rule::ResourcePeak`] (default:
+    /// unlimited — the peak is still computed and reported).
+    pub budget_bytes: usize,
+    /// Output entries the schedule must retain (default: the last
+    /// entry, matching `ChainExec::run_last` and session defaults).
+    pub wanted: Option<Vec<usize>>,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig { budget_bytes: usize::MAX, wanted: None }
+    }
+}
+
+impl AuditConfig {
+    /// Default config with `GCONV_AUDIT_BUDGET` (bytes) applied when
+    /// set and parseable — the test lever the `specs` gate uses.
+    pub fn from_env() -> Self {
+        let mut cfg = AuditConfig::default();
+        if let Ok(v) = std::env::var("GCONV_AUDIT_BUDGET") {
+            if let Ok(bytes) = v.trim().parse::<usize>() {
+                cfg.budget_bytes = bytes;
+            }
+        }
+        cfg
+    }
+}
+
+/// The result of auditing one chain: per-rule obligation counts, the
+/// diagnostics, and the derived resource peak.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    /// Network the chain was lowered from.
+    pub network: String,
+    /// Chain length.
+    pub entries: usize,
+    /// Peak live bytes under the level schedule (computed by the
+    /// resource pass even when no budget is set).
+    pub peak_live_bytes: usize,
+    /// Entries the static tier model places on the packed-GEMM path —
+    /// the parallel write sites the disjointness proof covers.
+    pub gemm_sites: usize,
+    /// Special entries (scatter/concat) covered by the disjointness
+    /// proof.
+    pub scatter_sites: usize,
+    checked: [usize; Rule::ALL.len()],
+    diagnostics: Vec<Diagnostic>,
+}
+
+impl AuditReport {
+    fn new(network: &str, entries: usize) -> Self {
+        AuditReport {
+            network: network.to_string(),
+            entries,
+            peak_live_bytes: 0,
+            gemm_sites: 0,
+            scatter_sites: 0,
+            checked: [0; Rule::ALL.len()],
+            diagnostics: Vec::new(),
+        }
+    }
+
+    /// True when every obligation was proven.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// All diagnostics, in pass order.
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        &self.diagnostics
+    }
+
+    /// Obligations discharged under `rule`.
+    pub fn checked(&self, rule: Rule) -> usize {
+        self.checked[rule.index()]
+    }
+
+    /// Total obligations discharged.
+    pub fn total_checked(&self) -> usize {
+        self.checked.iter().sum()
+    }
+
+    /// Diagnostics emitted under `rule`.
+    pub fn flagged(&self, rule: Rule) -> usize {
+        self.diagnostics.iter().filter(|d| d.rule == rule).count()
+    }
+
+    /// True when `rule` emitted at least one diagnostic.
+    pub fn has(&self, rule: Rule) -> bool {
+        self.diagnostics.iter().any(|d| d.rule == rule)
+    }
+
+    pub(crate) fn check(&mut self, rule: Rule) {
+        self.checked[rule.index()] += 1;
+    }
+
+    pub(crate) fn flag(
+        &mut self,
+        rule: Rule,
+        entry: usize,
+        name: &str,
+        subject: impl Into<String>,
+        expected: impl Into<String>,
+        found: impl Into<String>,
+    ) {
+        self.diagnostics.push(Diagnostic {
+            rule,
+            entry: Some(entry),
+            name: name.to_string(),
+            subject: subject.into(),
+            expected: expected.into(),
+            found: found.into(),
+        });
+    }
+
+    pub(crate) fn flag_chain(
+        &mut self,
+        rule: Rule,
+        subject: impl Into<String>,
+        expected: impl Into<String>,
+        found: impl Into<String>,
+    ) {
+        self.diagnostics.push(Diagnostic {
+            rule,
+            entry: None,
+            name: String::new(),
+            subject: subject.into(),
+            expected: expected.into(),
+            found: found.into(),
+        });
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "audit {}: {} entries, {} obligations, {} diagnostic(s), peak live {} bytes \
+             ({} GEMM + {} scatter parallel write sites proven disjoint)",
+            self.network,
+            self.entries,
+            self.total_checked(),
+            self.diagnostics.len(),
+            self.peak_live_bytes,
+            self.gemm_sites,
+            self.scatter_sites
+        )?;
+        for d in &self.diagnostics {
+            writeln!(f, "  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Audit `chain` with default configuration (no resource budget, the
+/// last entry as the wanted output).
+pub fn audit_chain(chain: &GconvChain) -> AuditReport {
+    audit_chain_with(chain, &AuditConfig::default())
+}
+
+/// Audit `chain` under `cfg`, running every pass regardless of earlier
+/// findings (one report names every violated rule, not just the first).
+pub fn audit_chain_with(chain: &GconvChain, cfg: &AuditConfig) -> AuditReport {
+    let mut rep = AuditReport::new(&chain.network, chain.len());
+    coverage::run(chain, &mut rep);
+    disjoint::run(chain, &mut rep);
+    fusion_audit::run(chain, &mut rep);
+    dataflow::run(chain, cfg, &mut rep);
+    resources::run(chain, cfg, &mut rep);
+    rep
+}
+
+// ------------------------------------------------------------------
+// Shared graph/shape derivations. These deliberately re-derive what
+// `exec::chain_exec` computes (levels, reachability, use counts)
+// rather than calling it: the audit is an independent implementation
+// the executor is checked against. Unlike the executor, every helper
+// here guards against corrupted chains (forward/out-of-range operand
+// references) instead of assuming `GconvChain::push` validated them —
+// mutation tests feed exactly such chains.
+// ------------------------------------------------------------------
+
+/// Producer indices `op` reads (duplicates kept: an entry using the
+/// same producer as input and kernel holds two uses, matching the
+/// executor's per-reference accounting).
+pub(crate) fn producer_deps(op: &GconvOp) -> Vec<usize> {
+    let mut out = Vec::with_capacity(2);
+    if let DataRef::Gconv(p) = op.input {
+        out.push(p);
+    }
+    if let Some(DataRef::Gconv(p)) = op.kernel {
+        out.push(p);
+    }
+    out
+}
+
+/// `producer_deps` restricted to well-formed backward references
+/// (`p < i`) — the safe subset every pass except the acyclicity check
+/// (which reports the rest) operates on.
+pub(crate) fn backward_deps(op: &GconvOp, i: usize) -> Vec<usize> {
+    let mut out = producer_deps(op);
+    out.retain(|&p| p < i);
+    out
+}
+
+/// Are all loop parameters of `op` positive? Derivations below divide
+/// by `Ng` and multiply extents, so passes skip entries that fail this
+/// (the coverage pass flags them).
+pub(crate) fn params_ok(op: &GconvOp) -> bool {
+    op.dims
+        .iter()
+        .all(|&(_, p)| p.ng >= 1 && p.nop >= 1 && p.nopc >= 1 && p.nks >= 1 && p.s >= 1)
+}
+
+/// The extents a chain-internal operand presents to its consumer —
+/// the producer's output extents, `[1]` for zero-dimension producers
+/// (mirrors the executor's operand shaping).
+pub(crate) fn operand_extents(op: &GconvOp) -> Vec<usize> {
+    let d = op.output_extents();
+    if d.is_empty() {
+        vec![1]
+    } else {
+        d
+    }
+}
+
+/// The execution tier the planner selects for `op`, re-derived from
+/// shape/operator properties alone (the planner needs bound tensors;
+/// the audit must not).
+pub(crate) fn static_tier(op: &GconvOp) -> KernelTier {
+    if op.dims.is_empty() {
+        return KernelTier::Naive;
+    }
+    let need_kernel = !matches!(op.main, MainOp::Pass);
+    let ker_elements: usize =
+        if need_kernel { op.dims.iter().map(|&(_, p)| p.kernel_extent()).product() } else { 0 };
+    let red_total = op.dims.iter().map(|&(_, p)| p.nks).product::<usize>().max(1);
+    if op.main == MainOp::Mul
+        && op.reduce == ReduceOp::Add
+        && ker_elements > 0
+        && red_total >= GEMM_MIN_REDUCTION
+    {
+        KernelTier::Gemm
+    } else {
+        KernelTier::Odometer
+    }
+}
+
+/// The level schedule the dataflow and resource passes replay:
+/// reachability from `wanted`, per-entry levels, and per-entry use
+/// counts — all over guarded backward deps only.
+pub(crate) struct Schedule {
+    /// Entries reachable from `wanted`.
+    pub(crate) needed: Vec<bool>,
+    /// Needed entries grouped by level, ascending.
+    pub(crate) levels: Vec<Vec<usize>>,
+    /// Consumer counts within the needed subgraph, plus one per
+    /// `wanted` occurrence.
+    pub(crate) uses: Vec<usize>,
+    /// The wanted set actually used (in-range entries only).
+    pub(crate) wanted: Vec<usize>,
+}
+
+pub(crate) fn schedule(chain: &GconvChain, cfg: &AuditConfig) -> Schedule {
+    let n = chain.len();
+    let mut wanted = cfg
+        .wanted
+        .clone()
+        .unwrap_or_else(|| if n > 0 { vec![n - 1] } else { Vec::new() });
+    wanted.retain(|&w| w < n);
+
+    let mut needed = vec![false; n];
+    for &w in &wanted {
+        needed[w] = true;
+    }
+    for i in (0..n).rev() {
+        if needed[i] {
+            for p in backward_deps(&chain.entries()[i].op, i) {
+                needed[p] = true;
+            }
+        }
+    }
+
+    let mut level = vec![0usize; n];
+    for i in 0..n {
+        for p in backward_deps(&chain.entries()[i].op, i) {
+            level[i] = level[i].max(level[p] + 1);
+        }
+    }
+    let depth = level.iter().copied().max().map_or(0, |m| m + 1);
+    let mut levels = vec![Vec::new(); depth];
+    for (i, &l) in level.iter().enumerate() {
+        if needed[i] {
+            levels[l].push(i);
+        }
+    }
+    levels.retain(|l| !l.is_empty());
+
+    let mut uses = vec![0usize; n];
+    for i in 0..n {
+        if needed[i] {
+            for p in backward_deps(&chain.entries()[i].op, i) {
+                uses[p] += 1;
+            }
+        }
+    }
+    for &w in &wanted {
+        uses[w] += 1;
+    }
+
+    Schedule { needed, levels, uses, wanted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gconv::lower::{lower_network, Mode};
+    use crate::mapping::fuse_executable;
+    use crate::networks::mobilenet_block;
+
+    #[test]
+    fn rule_ids_are_unique_and_indexed() {
+        for (i, r) in Rule::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i);
+        }
+        let mut ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), Rule::ALL.len());
+    }
+
+    #[test]
+    fn mobilenet_block_audits_clean_all_modes() {
+        let net = mobilenet_block(2, 8, 16);
+        for mode in [Mode::Inference, Mode::Training] {
+            for fuse in [false, true] {
+                let mut chain = lower_network(&net, mode);
+                if fuse {
+                    fuse_executable(&mut chain);
+                }
+                let rep = audit_chain(&chain);
+                assert!(rep.is_clean(), "mode {mode:?} fuse {fuse}:\n{rep}");
+                assert!(rep.total_checked() > 0);
+                assert!(rep.peak_live_bytes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn diagnostics_render_rule_entry_and_mismatch() {
+        let mut rep = AuditReport::new("t", 3);
+        rep.flag(Rule::CoverageInput, 2, "conv1.fp", "input dimension H", ">= 10", "8");
+        rep.flag_chain(Rule::DataflowSchedule, "wanted output #9", "< 3", "9");
+        let text = format!("{rep}");
+        assert!(text.contains("coverage.input: entry #2 (conv1.fp) input dimension H"));
+        assert!(text.contains("expected >= 10, found 8"));
+        assert!(text.contains("dataflow.schedule: wanted output #9"));
+        assert!(!rep.is_clean());
+        assert_eq!(rep.flagged(Rule::CoverageInput), 1);
+    }
+}

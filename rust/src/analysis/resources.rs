@@ -1,0 +1,90 @@
+//! Resource-bounds pass: replay the level schedule with the
+//! executor's allocate-then-release protocol and derive the peak live
+//! bytes; flag it against the configured budget and keep every size
+//! computation in checked arithmetic.
+//!
+//! "Live" means exactly what `exec::chain_exec` keeps: every buffer
+//! produced in a level is allocated before any operand of that level
+//! is released, wanted outputs are held to the end, and a buffer is
+//! released when its last scheduled consumer has run. The derived
+//! peak is the high-water mark a `BufferPool` sized to the chain must
+//! absorb.
+
+use super::{backward_deps, schedule, AuditConfig, AuditReport, Rule, Schedule};
+use crate::gconv::chain::GconvChain;
+
+pub(crate) fn run(chain: &GconvChain, cfg: &AuditConfig, rep: &mut AuditReport) {
+    let entries = chain.entries();
+    let Schedule { needed, levels, mut uses, wanted: _ } = schedule(chain, cfg);
+
+    // Output-buffer size of every scheduled entry, in f32 bytes.
+    let mut bytes = vec![0usize; chain.len()];
+    for (i, e) in entries.iter().enumerate() {
+        if !needed[i] {
+            continue;
+        }
+        rep.check(Rule::ResourceOverflow);
+        let elems = e.op.output_extents().into_iter().try_fold(1usize, |a, x| a.checked_mul(x));
+        match elems.and_then(|n| n.checked_mul(4)) {
+            Some(b) => bytes[i] = b,
+            None => {
+                rep.flag(
+                    Rule::ResourceOverflow,
+                    i,
+                    &e.op.name,
+                    "output buffer bytes",
+                    "within usize",
+                    "overflow",
+                );
+                return;
+            }
+        }
+    }
+
+    let mut live = 0usize;
+    let mut peak = 0usize;
+    let mut over: Option<usize> = None; // first allocation past the budget
+    for lv in &levels {
+        for &i in lv {
+            live = match live.checked_add(bytes[i]) {
+                Some(l) => l,
+                None => {
+                    rep.flag(
+                        Rule::ResourceOverflow,
+                        i,
+                        &entries[i].op.name,
+                        "live byte total",
+                        "within usize",
+                        "overflow",
+                    );
+                    return;
+                }
+            };
+            if live > cfg.budget_bytes && over.is_none() {
+                over = Some(i);
+            }
+        }
+        peak = peak.max(live);
+        for &i in lv {
+            for p in backward_deps(&entries[i].op, i) {
+                uses[p] = uses[p].saturating_sub(1);
+                if uses[p] == 0 {
+                    live = live.saturating_sub(bytes[p]);
+                }
+            }
+        }
+    }
+
+    rep.peak_live_bytes = peak;
+    rep.check(Rule::ResourcePeak);
+    if let Some(i) = over {
+        rep.flag(
+            Rule::ResourcePeak,
+            i,
+            &entries[i].op.name,
+            "peak live bytes",
+            format!("<= {} (the configured budget)", cfg.budget_bytes),
+            format!("{peak}, first exceeded at this entry's allocation"),
+        );
+    }
+}

@@ -87,7 +87,7 @@ pub const LRN_BETA: f32 = 0.75;
 
 /// Most loop-nest dimensions a plan can carry (the execution tiers use
 /// fixed-size index state of this width).
-pub(super) const MAX_DIMS: usize = 8;
+pub const MAX_DIMS: usize = 8;
 
 /// A look-up-table function resolved from its lowering name. In the
 /// paper's accelerator these are literal lookup tables (§3.1

@@ -40,7 +40,7 @@ const PAR_CHUNK: usize = 2048;
 /// Columns per packed GEMM panel block. The panel is `red_total × NC`
 /// `f32`s — small enough to stay cache-resident while every kernel row
 /// streams over it; the `f64` accumulator tile is `NC` wide.
-const NC: usize = 64;
+pub const NC: usize = 64;
 
 /// How a bound plan is evaluated (see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -88,7 +88,7 @@ pub mod tensor;
 pub use chain_exec::{ChainExec, EntryRun, RunReport, TrimPolicy};
 pub use faults::{FaultGuard, FaultKind, FaultPlan, FaultRule, Trigger};
 pub use interp::{eval_gconv, eval_gconv_naive, lut_apply, lut_known, plan_tier, LutFn};
-pub use kernels::{GEMM_MIN_REDUCTION, KernelTier};
+pub use kernels::{KernelTier, GEMM_MIN_REDUCTION, NC as GEMM_COL_BLOCK};
 pub use pool::{BufferPool, PoolStats};
 pub use serve::{
     ChainKey, Engine, EngineResponse, EngineStats, Session, SessionBuilder, SessionStats,

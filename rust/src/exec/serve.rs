@@ -189,6 +189,17 @@ impl SessionBuilder {
         }
         let needed = reachable(&chain, &wanted);
         validate_chain(&chain, &needed)?;
+        // Debug builds also discharge the full static audit up front —
+        // a chain the auditor cannot prove safe never reaches bind.
+        #[cfg(debug_assertions)]
+        {
+            let cfg = crate::analysis::AuditConfig {
+                wanted: Some(wanted.clone()),
+                ..Default::default()
+            };
+            let report = crate::analysis::audit_chain_with(&chain, &cfg);
+            ensure!(report.is_clean(), "static chain audit failed:\n{report}");
+        }
         let mut externals = self.externals;
         materialize_externals(
             &chain,
@@ -682,8 +693,21 @@ impl Engine {
     pub fn register_spec(&mut self, spec: ModelSpec) -> Result<String> {
         let code = spec.name.clone();
         for b in [1usize, 2] {
-            build_with_batch(&spec, Some(b))
+            let net = build_with_batch(&spec, Some(b))
                 .with_context(|| format!("validating model spec {code:?} at batch {b}"))?;
+            // The spec must also survive the static chain audit on the
+            // exact chain the engine will execute (fusion included) —
+            // shape inference proves the layers compose; the audit
+            // proves the lowered loop nests are safe to run.
+            let mut chain = lower_network(&net, Mode::Inference);
+            if self.fuse {
+                fuse_executable(&mut chain);
+            }
+            let report = crate::analysis::audit_chain(&chain);
+            ensure!(
+                report.is_clean(),
+                "model spec {code:?} failed the static chain audit at batch {b}:\n{report}"
+            );
         }
         self.register(&code, move |b| {
             build_with_batch(&spec, Some(b)).expect("spec validated at registration")

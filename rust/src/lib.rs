@@ -35,6 +35,12 @@
 //!   fault injection with named sites through the serving hot path
 //!   (`exec::faults`), and the naive-vs-fast-vs-fused + serve bench
 //!   harnesses.
+//! * [`analysis`] — static chain auditor: proves operand coverage,
+//!   parallel write disjointness, fusion legality, dataflow soundness
+//!   and resource bounds over a lowered chain *without executing it*,
+//!   or emits structured rule-id diagnostics. Wired into
+//!   `SessionBuilder::build` (debug), `Engine::register_spec`, and the
+//!   `audit` / `specs` CLI subcommands.
 //! * [`accel`] — accelerator structures (Table 4) and baseline modes.
 //! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion
 //!   (analytical *and* executable policies over shared legality).
@@ -58,6 +64,7 @@
 //! * [`args`] — shared CLI flag helpers (`--threads` etc.).
 
 pub mod accel;
+pub mod analysis;
 pub mod args;
 pub mod coordinator;
 pub mod cost;

@@ -32,6 +32,11 @@ USAGE:
     gconv-chain stats ADDR                   fetch a serving front's live health
                                              snapshot (counters + quarantine)
     gconv-chain specs                        list + validate bundled model specs
+    gconv-chain audit [NET] [--fuse] [--budget BYTES]
+                                             statically audit lowered chains:
+                                             prove the rule set or exit non-zero
+                                             with named diagnostics (default:
+                                             all seven benchmarks + tinycnn)
 
 OPTIONS:
     --model PATH   import the network from a model spec file instead of
@@ -70,6 +75,7 @@ fn main() {
             Some("client") => cmd_client(&args[1..]),
             Some("stats") => cmd_stats(&args[1..]),
             Some("specs") => cmd_specs(),
+            Some("audit") => cmd_audit(&args[1..]),
             _ => {
                 println!("{USAGE}");
                 Ok(())
@@ -635,15 +641,20 @@ fn serve_requests(
     Ok(())
 }
 
-/// List every bundled spec file, import + lower each one, and fail
-/// (non-zero exit) if any is invalid — the CI spec-validation gate.
+/// List every bundled spec file, import + lower each one, and run the
+/// static chain audit over the lowered chain; fail (non-zero exit) if
+/// any is invalid — the CI spec-validation gate. The audit honours
+/// `GCONV_AUDIT_BUDGET` (bytes), the lever the frontend tests pull.
 fn cmd_specs() -> Result<()> {
+    use gconv_chain::analysis::{audit_chain_with, AuditConfig};
+
     let dir = frontend::spec_dir();
     let files = frontend::discover_specs();
     if files.is_empty() {
         println!("no .json spec files found under {}", dir.display());
         return Ok(());
     }
+    let cfg = AuditConfig::from_env();
     let mut rows: Vec<Vec<String>> = Vec::new();
     let mut failures = 0usize;
     for path in &files {
@@ -651,26 +662,109 @@ fn cmd_specs() -> Result<()> {
         match frontend::load_spec(path).and_then(|s| frontend::build_network(&s)) {
             Ok(net) => {
                 let chain = lower_network(&net, Mode::Inference);
+                let rep = audit_chain_with(&chain, &cfg);
+                let audit = if rep.is_clean() {
+                    format!("clean ({} obligations)", rep.total_checked())
+                } else {
+                    failures += 1;
+                    eprint!("{}: static chain audit failed:\n{rep}", path.display());
+                    format!("{} DIAGNOSTIC(S)", rep.diagnostics().len())
+                };
                 rows.push(vec![
                     stem,
                     net.name.clone(),
                     net.len().to_string(),
                     chain.len().to_string(),
                     format!("{:.3e}", chain.total_work() as f64),
+                    audit,
                 ]);
             }
             Err(e) => {
                 failures += 1;
                 eprintln!("{}: {e:#}", path.display());
-                rows.push(vec![stem, "IMPORT FAILED".into(), "-".into(), "-".into(), "-".into()]);
+                rows.push(vec![
+                    stem,
+                    "IMPORT FAILED".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
             }
         }
     }
     print_table(
         &format!("Bundled model specs ({})", dir.display()),
-        &["spec", "network", "layers", "chain ops", "FP work"],
+        &["spec", "network", "layers", "chain ops", "FP work", "audit"],
         &rows,
     );
-    anyhow::ensure!(failures == 0, "{failures} spec file(s) failed to import");
+    anyhow::ensure!(failures == 0, "{failures} spec file(s) failed import or audit");
+    Ok(())
+}
+
+/// Statically audit lowered chains against the full rule set and print
+/// a per-rule obligation report — the CLI face of
+/// `analysis::audit_chain`. With no NET, audits all seven benchmark
+/// networks plus the bundled `tinycnn` spec, each in both inference
+/// and training lowering. Exits non-zero on any diagnostic.
+fn cmd_audit(args: &[String]) -> Result<()> {
+    use gconv_chain::analysis::{audit_chain_with, AuditConfig, Rule};
+
+    let mut args = args.to_vec();
+    let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
+    let budget = gconv_chain::args::take_usize(&mut args, "--budget");
+    let model = take_model(&mut args)?;
+
+    let mut cfg = AuditConfig::from_env();
+    if budget > 0 {
+        cfg.budget_bytes = budget;
+    }
+
+    let mut nets: Vec<Network> = Vec::new();
+    match (model, args.first()) {
+        (Some(net), _) => nets.push(net),
+        (None, Some(code)) => nets.push(resolve(code)?),
+        (None, None) => {
+            for code in BENCHMARK_CODES {
+                nets.push(resolve(code)?);
+            }
+            nets.push(resolve("tinycnn").context("resolving the bundled tinycnn spec")?);
+        }
+    }
+
+    let mut checked = vec![0usize; Rule::ALL.len()];
+    let mut flagged = vec![0usize; Rule::ALL.len()];
+    let mut diagnostics = 0usize;
+    for net in &nets {
+        for mode in [Mode::Inference, Mode::Training] {
+            let mut chain = lower_network(net, mode);
+            if fuse {
+                fuse_executable(&mut chain);
+            }
+            let rep = audit_chain_with(&chain, &cfg);
+            let tag = if fuse { "fused" } else { "unfused" };
+            print!("[{mode:?}/{tag}] {rep}");
+            diagnostics += rep.diagnostics().len();
+            for (k, r) in Rule::ALL.iter().enumerate() {
+                checked[k] += rep.checked(*r);
+                flagged[k] += rep.flagged(*r);
+            }
+        }
+    }
+
+    let rows: Vec<Vec<String>> = Rule::ALL
+        .iter()
+        .zip(checked.iter().zip(&flagged))
+        .map(|(r, (&c, &f))| {
+            vec![r.id().to_string(), r.describes().to_string(), c.to_string(), f.to_string()]
+        })
+        .collect();
+    print_table(
+        "Static chain audit (per rule)",
+        &["rule", "invariant", "obligations", "diagnostics"],
+        &rows,
+    );
+    anyhow::ensure!(diagnostics == 0, "{diagnostics} audit diagnostic(s) — see the report above");
+    println!("every chain audited clean");
     Ok(())
 }

@@ -570,7 +570,7 @@ mod tests {
     }
 
     fn inflight_of(handle: &SchedulerHandle, model: &str) -> usize {
-        *handle.inflight.lock().unwrap().get(model).unwrap()
+        *handle.inflight.lock().unwrap_or_else(|e| e.into_inner()).get(model).unwrap()
     }
 
     fn wait_for_drained_inflight(handle: &SchedulerHandle, model: &str) {

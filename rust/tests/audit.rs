@@ -1,0 +1,307 @@
+//! Mutation tests for the static chain auditor: corrupt a valid
+//! lowered chain in targeted ways and assert the audit rejects it with
+//! the *named* rule id — plus clean-audit coverage over the benchmark
+//! networks (MN + AN in tier-1, all seven + the bundled `tinycnn` spec
+//! in the release `--ignored` run).
+//!
+//! Corruptions go through `GconvChain::entries_mut` deliberately:
+//! `push` asserts backward references at build time, and the point of
+//! these tests is a chain that *bypassed* construction-time checks.
+
+use gconv_chain::analysis::{audit_chain, audit_chain_with, AuditConfig, Rule};
+use gconv_chain::gconv::chain::{FusedOp, GconvChain, SpecialOp};
+use gconv_chain::gconv::lower::{lower_network, Mode};
+use gconv_chain::gconv::op::{DataRef, MainOp, PostOp, PreOp};
+use gconv_chain::mapping::fuse_executable;
+use gconv_chain::networks::{mobilenet_block, resolve, resolve_with_batch, BENCHMARK_CODES};
+use gconv_chain::prop::{prop_check, Rng};
+
+/// The clean baseline every corruption starts from.
+fn block_chain(fuse: bool) -> GconvChain {
+    let mut chain = lower_network(&mobilenet_block(2, 8, 16), Mode::Inference);
+    if fuse {
+        fuse_executable(&mut chain);
+    }
+    chain
+}
+
+fn pick_site(rng: &mut Rng, sites: &[usize]) -> Option<usize> {
+    if sites.is_empty() {
+        None
+    } else {
+        Some(sites[rng.int(0, sites.len() - 1)])
+    }
+}
+
+/// One corruption class: mutate the chain, return the rule that must
+/// flag it (`None` when the chain offers no applicable site).
+type Corrupt = fn(&mut GconvChain, &mut Rng) -> Option<Rule>;
+
+/// Class 1 — a zero loop parameter (stride 0 divides the audit's own
+/// derivations, so everything downstream keys off this rule).
+fn corrupt_zero_stride(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    let sites: Vec<usize> = chain
+        .entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.special.is_none() && !e.op.dims.is_empty())
+        .map(|(i, _)| i)
+        .collect();
+    let i = pick_site(rng, &sites)?;
+    chain.entries_mut()[i].op.dims[0].1.s = 0;
+    Some(Rule::CoverageParams)
+}
+
+/// Class 2 — a reduction window inflated past everything its producer
+/// emits: the loop nest would read out of bounds.
+fn corrupt_window_overrun(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    let mut sites: Vec<(usize, usize)> = Vec::new();
+    let entries = chain.entries();
+    for (i, e) in entries.iter().enumerate() {
+        if e.special.is_some() || e.op.dims.is_empty() {
+            continue;
+        }
+        let DataRef::Gconv(p) = e.op.input else {
+            continue;
+        };
+        if p >= i {
+            continue;
+        }
+        let prod = entries[p].op.output_extents();
+        // A rank-aligned extent-1 first dimension is a legal broadcast
+        // no window size can violate — not a corruption site.
+        if prod.len() == e.op.dims.len() && prod.first().copied().unwrap_or(1) == 1 {
+            continue;
+        }
+        let elements: usize = prod.iter().product();
+        sites.push((i, elements.max(1)));
+    }
+    if sites.is_empty() {
+        return None;
+    }
+    let (i, elements) = sites[rng.int(0, sites.len() - 1)];
+    chain.entries_mut()[i].op.dims[0].1.nks += elements + 7;
+    Some(Rule::CoverageInput)
+}
+
+/// Class 3 — a self/forward operand reference (the executor's level
+/// scheduler would deadlock or read uninitialized data).
+fn corrupt_forward_reference(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    if chain.is_empty() {
+        return None;
+    }
+    let i = rng.int(0, chain.len() - 1);
+    chain.entries_mut()[i].op.input = DataRef::Gconv(i);
+    Some(Rule::DataflowAcyclic)
+}
+
+/// Class 4 — a scalar-pipeline LUT name the interpreter cannot
+/// resolve (a guaranteed bind error at run time).
+fn corrupt_unknown_lut(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    if chain.is_empty() {
+        return None;
+    }
+    let i = rng.int(0, chain.len() - 1);
+    chain.entries_mut()[i].op.post = PostOp::Lut("definitely_not_a_lut");
+    Some(Rule::DataflowLut)
+}
+
+/// Class 5 — a padded host carrying a fused `pre` that maps the
+/// padding value +0.0 to 0.5 (sigmoid): the silent-corruption case the
+/// fusion pass must refuse.
+fn corrupt_poisoned_fused_pre(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    let sites: Vec<usize> = chain
+        .entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| {
+            e.special.is_none() && e.op.dims.iter().any(|&(_, p)| p.ps > 0 || p.pe > 0)
+        })
+        .map(|(i, _)| i)
+        .collect();
+    let i = pick_site(rng, &sites)?;
+    let e = &mut chain.entries_mut()[i];
+    e.op.pre = PreOp::Lut("sigmoid");
+    e.fused.push(FusedOp { name: "poison".into(), slot: "pre", param_elements: 0 });
+    Some(Rule::FusionPadding)
+}
+
+/// Class 6 — a fusion provenance record naming an operator slot that
+/// does not exist.
+fn corrupt_alien_slot(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    if chain.is_empty() {
+        return None;
+    }
+    let i = rng.int(0, chain.len() - 1);
+    chain.entries_mut()[i]
+        .fused
+        .push(FusedOp { name: "alien".into(), slot: "sideways", param_elements: 0 });
+    Some(Rule::FusionSlot)
+}
+
+/// Class 7 — a parameter-consuming main operator with its kernel
+/// operand stripped.
+fn corrupt_missing_kernel(chain: &mut GconvChain, rng: &mut Rng) -> Option<Rule> {
+    let sites: Vec<usize> = chain
+        .entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.special.is_none() && !matches!(e.op.main, MainOp::Pass))
+        .map(|(i, _)| i)
+        .collect();
+    let i = pick_site(rng, &sites)?;
+    chain.entries_mut()[i].op.kernel = None;
+    Some(Rule::CoverageKernel)
+}
+
+const CLASSES: &[(&str, Corrupt)] = &[
+    ("zero-stride", corrupt_zero_stride),
+    ("window-overrun", corrupt_window_overrun),
+    ("forward-reference", corrupt_forward_reference),
+    ("unknown-lut", corrupt_unknown_lut),
+    ("poisoned-fused-pre", corrupt_poisoned_fused_pre),
+    ("alien-fusion-slot", corrupt_alien_slot),
+    ("missing-kernel", corrupt_missing_kernel),
+];
+
+/// Every corruption class, applied to a random site of a random
+/// (fused or unfused) clean chain, must be rejected with its rule id —
+/// and each class must actually fire during the run.
+#[test]
+fn mutated_chains_are_rejected_with_the_named_rule() {
+    let mut fired = vec![false; CLASSES.len()];
+    prop_check(64, |rng| {
+        let k = rng.int(0, CLASSES.len() - 1);
+        let (label, apply) = CLASSES[k];
+        let mut chain = block_chain(rng.bool(0.5));
+        let Some(rule) = apply(&mut chain, rng) else {
+            return Ok(()); // no applicable site in this variant
+        };
+        fired[k] = true;
+        let rep = audit_chain(&chain);
+        if !rep.has(rule) {
+            return Err(format!("{label}: expected rule {} to fire; report:\n{rep}", rule.id()));
+        }
+        Ok(())
+    });
+    for (hit, (label, _)) in fired.iter().zip(CLASSES) {
+        assert!(*hit, "corruption class {label} never found an applicable site");
+    }
+}
+
+/// Each class rejected deterministically too (one fixed seed), so a
+/// single failing class names itself without replaying the property.
+#[test]
+fn each_corruption_class_is_rejected() {
+    for (label, apply) in CLASSES {
+        let mut rng = Rng::new(7);
+        let mut chain = block_chain(false);
+        let rule = apply(&mut chain, &mut rng)
+            .unwrap_or_else(|| panic!("{label}: no applicable site in the unfused block chain"));
+        let rep = audit_chain(&chain);
+        assert!(rep.has(rule), "{label}: expected {}; report:\n{rep}", rule.id());
+    }
+}
+
+/// A max-pool BP scatter whose forward geometry multiplexes groups
+/// would route gradients across window sets — the write-disjointness
+/// rule for `exec::special`'s scatter site.
+#[test]
+fn scatter_group_corruption_flags_disjoint_scatter() {
+    let net = resolve_with_batch("AN", Some(1)).unwrap();
+    let mut chain = lower_network(&net, Mode::Training);
+    let site = chain.entries_mut().iter_mut().find_map(|e| {
+        if let Some(SpecialOp::MaxPoolBp { fwd, .. }) = &mut e.special {
+            fwd[0].1.ng = 2;
+            return Some(e.op.name.clone());
+        }
+        None
+    });
+    assert!(site.is_some(), "AN training chain should hold a max-pool BP entry");
+    let rep = audit_chain(&chain);
+    assert!(rep.has(Rule::DisjointScatter), "{rep}");
+}
+
+/// A concat step whose axis points past the output rank cannot tile
+/// the output — the disjointness rule for the concat copy site.
+#[test]
+fn concat_axis_corruption_flags_disjoint_concat() {
+    let net = resolve_with_batch("GLN", Some(1)).unwrap();
+    let mut chain = lower_network(&net, Mode::Inference);
+    let mut hit = false;
+    for e in chain.entries_mut().iter_mut() {
+        if let Some(SpecialOp::Concat { axis, .. }) = &mut e.special {
+            *axis = 99;
+            hit = true;
+            break;
+        }
+    }
+    assert!(hit, "GLN inference chain should hold a concat entry");
+    let rep = audit_chain(&chain);
+    assert!(rep.has(Rule::DisjointConcat), "{rep}");
+}
+
+/// The resource pass reports the peak and flags it against a budget.
+#[test]
+fn tiny_budget_flags_resource_peak() {
+    let chain = block_chain(false);
+    let cfg = AuditConfig { budget_bytes: 1, ..Default::default() };
+    let rep = audit_chain_with(&chain, &cfg);
+    assert!(rep.has(Rule::ResourcePeak), "{rep}");
+    assert!(rep.peak_live_bytes > 1);
+    // The same chain under no budget is clean and reports the same peak.
+    let clean = audit_chain(&chain);
+    assert!(clean.is_clean(), "{clean}");
+    assert_eq!(clean.peak_live_bytes, rep.peak_live_bytes);
+}
+
+/// A wanted output past the end of the chain is a schedule finding,
+/// not a panic.
+#[test]
+fn out_of_range_wanted_flags_schedule() {
+    let chain = block_chain(false);
+    let cfg = AuditConfig { wanted: Some(vec![chain.len() + 5]), ..Default::default() };
+    let rep = audit_chain_with(&chain, &cfg);
+    assert!(rep.has(Rule::DataflowSchedule), "{rep}");
+}
+
+fn assert_network_clean(code: &str, batch: Option<usize>) {
+    let net = resolve_with_batch(code, batch).expect("benchmark network resolves");
+    for mode in [Mode::Inference, Mode::Training] {
+        for fuse in [false, true] {
+            let mut chain = lower_network(&net, mode);
+            if fuse {
+                fuse_executable(&mut chain);
+            }
+            let rep = audit_chain(&chain);
+            assert!(rep.is_clean(), "{code} {mode:?} fuse={fuse}:\n{rep}");
+            assert!(rep.total_checked() > 0, "{code}: no obligations discharged");
+        }
+    }
+}
+
+/// Tier-1 clean-audit coverage: MN + AN, both modes, fused + unfused.
+#[test]
+fn mn_and_an_audit_clean() {
+    assert_network_clean("MN", Some(1));
+    assert_network_clean("AN", Some(1));
+}
+
+/// Release tier: every benchmark network plus the spec-only custom CNN
+/// audits clean in every mode/fusion combination.
+#[test]
+#[ignore = "release tier: lowers all seven full networks"]
+fn all_benchmarks_and_tinycnn_audit_clean() {
+    for code in BENCHMARK_CODES {
+        assert_network_clean(code, None);
+    }
+    let net = resolve("tinycnn").unwrap();
+    for fuse in [false, true] {
+        let mut chain = lower_network(&net, Mode::Inference);
+        if fuse {
+            fuse_executable(&mut chain);
+        }
+        let rep = audit_chain(&chain);
+        assert!(rep.is_clean(), "tinycnn fuse={fuse}:\n{rep}");
+    }
+}

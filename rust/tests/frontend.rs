@@ -17,7 +17,10 @@
 //!   oracle, fast tiers, fused chain, session reuse} — and through the
 //!   serving engine;
 //! * malformed specs must produce targeted errors naming the offending
-//!   layer, never panics.
+//!   layer, never panics;
+//! * specs that pass shape inference must additionally pass the static
+//!   chain audit (`analysis::audit_chain`) — the `specs` CLI gate
+//!   exits non-zero with the named rule when one does not.
 
 use std::fs;
 
@@ -350,4 +353,54 @@ fn resolve_finds_bundled_specs_by_stem_and_path() {
     // And typos list what would have worked.
     let err = gconv_chain::networks::resolve("tinycn").unwrap_err().to_string();
     assert!(err.contains("tinycnn"), "{err}");
+}
+
+/// Shape inference alone is not the safety gate: a spec that imports
+/// and infers cleanly can still fail the static chain audit (forced
+/// here via the resource-budget rule), and the diagnostic names the
+/// chain entry — i.e. the layer — that violated it.
+#[test]
+fn audit_rejects_an_inference_clean_spec_under_budget() {
+    use gconv_chain::analysis::{audit_chain_with, AuditConfig, Rule};
+
+    let spec = load_spec(&spec_dir().join("tinycnn.json")).unwrap();
+    let net = build_network(&spec).unwrap(); // shape inference passes
+    let chain = lower_network(&net, Mode::Inference);
+    let cfg = AuditConfig { budget_bytes: 16, ..Default::default() };
+    let rep = audit_chain_with(&chain, &cfg);
+    assert!(rep.has(Rule::ResourcePeak), "{rep}");
+    let diag = rep.diagnostics().iter().find(|d| d.rule == Rule::ResourcePeak).unwrap();
+    assert!(diag.entry.is_some(), "{diag}");
+    assert!(!diag.name.is_empty(), "diagnostic should name the layer: {diag}");
+    assert!(diag.to_string().contains("resource.peak"), "{diag}");
+}
+
+/// The `specs` CLI gate audits every bundled spec and exits non-zero
+/// with the violated rule on stderr when one fails (spec dir pinned to
+/// a one-spec copy so the failure is attributable; budget forced down
+/// via the `GCONV_AUDIT_BUDGET` env lever).
+#[test]
+fn specs_subcommand_fails_on_audit_diagnostics() {
+    let dir = std::env::temp_dir().join(format!("gconv_audit_specs_{}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    fs::copy(spec_dir().join("tinycnn.json"), dir.join("tinycnn.json")).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_gconv-chain"))
+        .arg("specs")
+        .env("GCONV_SPEC_DIR", &dir)
+        .env("GCONV_AUDIT_BUDGET", "16")
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "specs should exit non-zero; stderr:\n{stderr}");
+    assert!(stderr.contains("resource.peak"), "stderr should name the rule:\n{stderr}");
+
+    // With no budget pressure the same spec dir passes the gate.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_gconv-chain"))
+        .arg("specs")
+        .env("GCONV_SPEC_DIR", &dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    fs::remove_dir_all(&dir).ok();
 }
