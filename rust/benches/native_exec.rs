@@ -3,11 +3,12 @@
 //!
 //! Measures benchmark inference chains end-to-end on the naive
 //! per-element oracle, on the tiered fast paths (blocked dot/GEMM +
-//! odometer indexing + buffer pooling), and on the executable-fused
-//! chain (§4.3); checks the outputs stay bit-identical on every path,
-//! prints per-net and per-layer tables, and writes
-//! `BENCH_native_exec.json` (CI uploads it as the repo's performance
-//! trajectory).
+//! odometer indexing + buffer pooling), on the executable-fused
+//! chain (§4.3), and on the `Precision::Fast` SIMD GEMM microkernel;
+//! checks the outputs stay bit-identical on every bit-exact path and
+//! within the relative-error tolerance on the Fast leg, prints per-net
+//! and per-layer tables, and writes `BENCH_native_exec.json` (CI
+//! uploads it as the repo's performance trajectory).
 //!
 //! Run:
 //!   cargo bench --bench native_exec
@@ -254,9 +255,11 @@ fn run(
         "naive s",
         "fast s",
         "fused s",
+        "simd s",
         "fast Gops/s",
         "speedup",
         "fuse x",
+        "simd x",
         "Δchain",
         "bit-id",
     ];
@@ -277,8 +280,14 @@ fn run(
     write_json(json_path, &results, threads).expect("writing bench JSON failed");
     println!("wrote {json_path}");
 
-    if results.iter().any(|b| !b.bit_identical || !b.fused_bit_identical) {
-        eprintln!("FAIL: a fast or fused path diverged from the naive oracle");
+    if results
+        .iter()
+        .any(|b| !b.bit_identical || !b.fused_bit_identical || !b.fastp_within_tol)
+    {
+        eprintln!(
+            "FAIL: a fast or fused path diverged from the naive oracle, or the \
+             Precision::Fast leg drifted past tolerance"
+        );
         std::process::exit(1);
     }
 }
@@ -298,11 +307,13 @@ fn net_row(b: &NetBench) -> Vec<String> {
         format!("{:.3}", b.naive_s),
         format!("{:.3}", b.fast_s),
         format!("{:.3}", b.fused_s),
+        format!("{:.3}", b.fastp_s),
         format!("{:.3}", b.fast_gops()),
         ratio(b.speedup()),
         ratio(b.fusion_speedup()),
+        ratio(b.fastp_speedup()),
         format!("-{:.0}%", b.chain_reduction() * 100.0),
-        (b.bit_identical && b.fused_bit_identical).to_string(),
+        (b.bit_identical && b.fused_bit_identical && b.fastp_within_tol).to_string(),
     ]
 }
 

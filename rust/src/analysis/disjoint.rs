@@ -13,7 +13,10 @@
 //! This pass discharges those obligations per entry, plus the
 //! equivalent partition facts for the special-op routines
 //! (`exec::special`): max-pool BP scatter stays inside one window set
-//! and concat block copies tile the output.
+//! and concat block copies tile the output. GEMM-tier entries carry
+//! one more obligation: the bind-time prepacked weight slab is
+//! `groups × rows × k_total` elements, and that size arithmetic must
+//! stay within `usize` or the pack loop's row offsets would wrap.
 
 use super::{operand_extents, params_ok, static_tier, AuditReport, Rule};
 use crate::exec::interp::MAX_DIMS;
@@ -97,6 +100,23 @@ fn check_gemm_partition(i: usize, op: &GconvOp, rep: &mut AuditReport) {
         return;
     }
     if static_tier(op) == KernelTier::Gemm {
+        // Bind-time prepack: the plan-owned weight slab holds
+        // `groups × rows × k_total` packed elements, and `fill_wpack`
+        // offsets rows by `(g·rows + op)·k_total` — sound only when
+        // that product does not wrap.
+        let slab = checked_product(op.dims.iter().map(|&(_, p)| p.nks))
+            .and_then(|k| n_groups.checked_mul(n_rows)?.checked_mul(k));
+        if slab.is_none() {
+            rep.flag(
+                Rule::DisjointGemm,
+                i,
+                &op.name,
+                "prepacked weight slab (groups x rows x k_total)",
+                "within usize",
+                "overflow",
+            );
+            return;
+        }
         rep.gemm_sites += 1;
     }
 }

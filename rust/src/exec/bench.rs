@@ -1,13 +1,16 @@
 //! Naive-vs-fast and fused-vs-unfused measurement harness for the
 //! native execution engine.
 //!
-//! Runs a network's inference chain three ways — the naive per-element
-//! oracle, the tiered fast paths, and the fast paths on the chain
+//! Runs a network's inference chain four ways — the naive per-element
+//! oracle, the tiered fast paths, the fast paths on the chain
 //! rewritten by *executable operation fusion* (§4.3,
-//! [`crate::mapping::fuse_executable`]) — and aggregates per-layer and
-//! end-to-end timings plus bit-identity gates: the unfused fast tiers
-//! must match the oracle on every entry, and the fused chain must match
-//! the unfused final output bit-for-bit.
+//! [`crate::mapping::fuse_executable`]), and the fast paths again
+//! under [`Precision::Fast`] (the unrolled SIMD GEMM microkernel) —
+//! and aggregates per-layer and end-to-end timings plus the gates: the
+//! unfused fast tiers must match the oracle on every entry, the fused
+//! chain must match the unfused final output bit-for-bit, and the
+//! `Precision::Fast` output must stay within the [`FAST_REL_TOL`]
+//! relative-error differential of the bit-exact output.
 //! `rust/benches/native_exec.rs` and the `--bench-json` mode of
 //! `examples/native_inference.rs` both drive this module and emit the
 //! result as `BENCH_native_exec.json`, the repo's performance-trajectory
@@ -29,6 +32,7 @@ use crate::server::{self, Backoff, Client, ErrorCode, Response, ServerConfig};
 
 use super::chain_exec::{ChainExec, RunReport};
 use super::faults::{self, FaultKind, FaultPlan, FaultRule, Trigger};
+use super::kernels::{Precision, FAST_REL_TOL};
 use super::serve::{Engine, Session};
 use super::tensor::Tensor;
 
@@ -94,6 +98,15 @@ pub struct NetBench {
     /// Whether the fused chain's final output matched the unfused one
     /// bit-for-bit.
     pub fused_bit_identical: bool,
+    /// End-to-end seconds, unfused chain under [`Precision::Fast`]
+    /// (best measured run).
+    pub fastp_s: f64,
+    /// Max per-element relative error of the `Precision::Fast` output
+    /// against the bit-exact fast output (guarded by
+    /// `max(|exact|, 1)`).
+    pub fastp_max_rel_err: f64,
+    /// Whether `fastp_max_rel_err` stayed within [`FAST_REL_TOL`].
+    pub fastp_within_tol: bool,
     /// Per-layer breakdown (unfused chain).
     pub layers: Vec<LayerBench>,
 }
@@ -129,6 +142,17 @@ impl NetBench {
     /// executes it in fewer ops).
     pub fn fused_gops(&self) -> f64 {
         gops(self.work, self.fused_s)
+    }
+
+    /// Giga `main`-operations per second under [`Precision::Fast`].
+    pub fn fastp_gops(&self) -> f64 {
+        gops(self.work, self.fastp_s)
+    }
+
+    /// Speedup of the `Precision::Fast` microkernel over the bit-exact
+    /// fast tiers on the same unfused chain.
+    pub fn fastp_speedup(&self) -> Option<f64> {
+        finite_ratio(self.fast_s, self.fastp_s)
     }
 }
 
@@ -187,7 +211,7 @@ pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
     let mut fused_chain = lower_network(net, Mode::Inference);
     fuse_executable(&mut fused_chain);
     let mut fused = ChainExec::new(fused_chain);
-    fused.set_input(&input_name, x);
+    fused.set_input(&input_name, x.clone());
     let mut fused_report = fused.run_last()?;
     for _ in 1..fast_runs.max(1) {
         let r = fused.run_last()?;
@@ -196,6 +220,27 @@ pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
         }
     }
     let fused_bit_identical = fused_report.outputs[0].bit_eq(&fast_report.outputs[0]);
+
+    // Precision::Fast: the unfused chain once more on the unrolled SIMD
+    // GEMM microkernel. Timed like the fast leg; gated by the
+    // relative-error differential against the bit-exact output instead
+    // of bit identity (the lane split changes summation order).
+    let mut fastp = ChainExec::new(lower_network(net, Mode::Inference))
+        .with_precision(Precision::Fast);
+    fastp.set_input(&input_name, x);
+    let mut fastp_report = fastp.run_last()?;
+    for _ in 1..fast_runs.max(1) {
+        let r = fastp.run_last()?;
+        if r.total_s < fastp_report.total_s {
+            fastp_report = r;
+        }
+    }
+    let mut fastp_max_rel_err = 0.0f64;
+    for (a, b) in fastp_report.outputs[0].data().iter().zip(fast_report.outputs[0].data()) {
+        let rel = f64::from((a - b).abs()) / f64::from(b.abs()).max(1.0);
+        fastp_max_rel_err = fastp_max_rel_err.max(rel);
+    }
+    let fastp_within_tol = fastp_max_rel_err <= f64::from(FAST_REL_TOL);
 
     // Untimed differential gate: *every* chain entry must match the
     // oracle bit-for-bit, not just the final network output.
@@ -216,6 +261,9 @@ pub fn bench_network(net: &Network, fast_runs: usize) -> Result<NetBench> {
         fused_s: fused_report.total_s,
         bit_identical,
         fused_bit_identical,
+        fastp_s: fastp_report.total_s,
+        fastp_max_rel_err,
+        fastp_within_tol,
         layers: layer_rows(&naive_report, &fast_report),
     })
 }
@@ -416,6 +464,18 @@ fn rps(requests: usize, seconds: f64) -> f64 {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted latency slice:
+/// `sorted[len * p / 100]`, clamped to the last element; `0.0` on an
+/// empty slice. Every serving leg (session, load, degraded) reports
+/// through this one convention.
+fn percentile(sorted: &[f64], p: usize) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        sorted[(sorted.len() * p / 100).min(sorted.len() - 1)]
+    }
+}
+
 /// Measure steady-state serving of `code`'s FP chain at batch 1 (see
 /// [`ServeBench`]). All paths see the same deterministic request
 /// stream and synthesized weights; outputs are gated bit-identical.
@@ -476,8 +536,8 @@ pub fn bench_serve(
     let session_s = t1.elapsed().as_secs_f64();
     let session_binds = session.stats().plan_binds;
     latencies.sort_by(f64::total_cmp);
-    let p50_s = latencies[requests / 2];
-    let p99_s = latencies[(requests * 99 / 100).min(requests - 1)];
+    let p50_s = percentile(&latencies, 50);
+    let p99_s = percentile(&latencies, 99);
 
     // (c) engine: same stream through the queue/cache front end. The
     // one-time costs (network resolution, the batch-2 coalescing
@@ -613,8 +673,8 @@ fn bench_load(
         requests,
         busy_rejections,
         seconds,
-        p50_s: latencies[requests / 2],
-        p99_s: latencies[(requests * 99 / 100).min(requests - 1)],
+        p50_s: percentile(&latencies, 50),
+        p99_s: percentile(&latencies, 99),
         coalesced: report.engine.coalesced.saturating_sub(warm.coalesced),
         batches: report.engine.batches.saturating_sub(warm.batches),
         max_queue_depth: report.max_queue_depth,
@@ -731,13 +791,6 @@ fn bench_degraded(
         "degraded leg lost requests: {completed} completed + {injected_errors} failed != {requests}"
     );
     latencies.sort_by(f64::total_cmp);
-    let pct = |p: usize| {
-        if latencies.is_empty() {
-            0.0
-        } else {
-            latencies[(latencies.len() * p / 100).min(latencies.len() - 1)]
-        }
-    };
     Ok(DegradedBench {
         clients,
         requests,
@@ -745,8 +798,8 @@ fn bench_degraded(
         injected_errors,
         busy_rejections,
         seconds,
-        p50_s: pct(50),
-        p99_s: pct(99),
+        p50_s: percentile(&latencies, 50),
+        p99_s: percentile(&latencies, 99),
         bit_identical,
     })
 }
@@ -899,6 +952,15 @@ pub fn to_json(benches: &[NetBench], threads: usize) -> String {
             b.fused_bit_identical
         ));
         s.push_str(&format!(
+            "      \"precision_fast\": {{\"seconds\": {}, \"gops\": {}, \
+             \"speedup_vs_fast\": {}, \"max_rel_err\": {}, \"within_tol\": {}}},\n",
+            jnum(b.fastp_s, 6),
+            jnum(b.fastp_gops(), 3),
+            jopt(b.fastp_speedup(), 3),
+            jnum(b.fastp_max_rel_err, 9),
+            b.fastp_within_tol
+        ));
+        s.push_str(&format!(
             "      \"chain_reduction\": {},\n",
             jnum(b.chain_reduction(), 3)
         ));
@@ -952,6 +1014,11 @@ mod tests {
         let b = bench_network(&net, 2).unwrap();
         assert!(b.bit_identical, "fast paths must match the oracle");
         assert!(b.fused_bit_identical, "fusion must preserve the final output");
+        assert!(
+            b.fastp_within_tol,
+            "Precision::Fast drifted past tolerance: {}",
+            b.fastp_max_rel_err
+        );
         assert!(b.fused_entries < b.entries, "the block's ReLUs must fuse away");
         assert!(b.chain_reduction() > 0.0);
         assert_eq!(b.batch, 2);
@@ -964,6 +1031,8 @@ mod tests {
         assert!(json.contains("\"net\": \"MobileNetBlock\""));
         assert!(json.contains("\"bit_identical\": true"));
         assert!(json.contains("\"fused\""));
+        assert!(json.contains("\"precision_fast\""));
+        assert!(json.contains("\"within_tol\": true"));
         assert!(json.contains("\"chain_reduction\""));
         assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
         assert!(json.trim_end().ends_with('}'));
@@ -982,6 +1051,9 @@ mod tests {
             fused_s: 0.0,
             bit_identical: true,
             fused_bit_identical: true,
+            fastp_s: 0.0,
+            fastp_max_rel_err: 0.0,
+            fastp_within_tol: true,
             layers: vec![LayerBench {
                 layer: "l".into(),
                 gconvs: 1,
@@ -992,6 +1064,7 @@ mod tests {
         };
         assert_eq!(b.speedup(), None);
         assert_eq!(b.fusion_speedup(), None);
+        assert_eq!(b.fastp_speedup(), None);
         assert_eq!(b.layers[0].speedup(), None);
         let json = to_json(&[b], 1);
         assert!(json.contains("\"speedup\": null"));
@@ -1001,6 +1074,26 @@ mod tests {
     #[test]
     fn esc_escapes_quotes_and_backslashes() {
         assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_and_zero_guarded() {
+        assert_eq!(percentile(&[], 50), 0.0);
+        assert_eq!(percentile(&[], 99), 0.0);
+        let one = [7.0];
+        assert_eq!(percentile(&one, 0), 7.0);
+        assert_eq!(percentile(&one, 50), 7.0);
+        assert_eq!(percentile(&one, 99), 7.0);
+        let ten: Vec<f64> = (1..=10).map(f64::from).collect();
+        assert_eq!(percentile(&ten, 0), 1.0);
+        // Nearest-rank over 10 samples: index 10·50/100 = 5.
+        assert_eq!(percentile(&ten, 50), 6.0);
+        assert_eq!(percentile(&ten, 99), 10.0);
+        // p == 100 would index one past the end: clamped.
+        assert_eq!(percentile(&ten, 100), 10.0);
+        let hundred: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&hundred, 50), 51.0);
+        assert_eq!(percentile(&hundred, 99), 100.0);
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::gconv::chain::{GconvChain, Phase, SpecialOp};
 use crate::gconv::op::{DataRef, GconvOp, MainOp};
 
 use super::interp::{bind_input, eval_counted};
+use super::kernels::Precision;
 use super::pool::{BufferPool, PoolStats};
 use super::special;
 use super::tensor::Tensor;
@@ -124,6 +125,7 @@ pub struct ChainExec {
     pool: BufferPool,
     force_naive: bool,
     trim: TrimPolicy,
+    precision: Precision,
     /// `BoundPlan::bind` calls attributed to this executor — the
     /// one-shot calling convention binds every entry's plan on every
     /// run; the serve bench reads this to report how much of that work
@@ -146,6 +148,7 @@ impl ChainExec {
             pool: BufferPool::new(),
             force_naive: false,
             trim: TrimPolicy::Keep,
+            precision: Precision::BitExact,
             bind_calls: AtomicUsize::new(0),
         }
     }
@@ -177,6 +180,15 @@ impl ChainExec {
     /// either way.
     pub fn with_naive_oracle(mut self) -> Self {
         self.force_naive = true;
+        self
+    }
+
+    /// Numeric mode of the GEMM microkernel (default
+    /// [`Precision::BitExact`]). [`Precision::Fast`] trades the
+    /// bit-exactness guarantee for unrolled multi-lane accumulation,
+    /// bounded by the [`super::kernels::FAST_REL_TOL`] differential.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 
@@ -278,6 +290,7 @@ impl ChainExec {
                             kernel,
                             pool,
                             self.force_naive,
+                            self.precision,
                             Some(&self.bind_calls),
                         ),
                     }

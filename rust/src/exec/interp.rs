@@ -28,8 +28,13 @@
 //! odometer-indexed generic fast path for everything else, and the naive
 //! per-element oracle (`Plan::eval_one`, reachable via
 //! [`eval_gconv_naive`]) kept for differential testing. All tiers are
-//! bit-identical. Because a `BoundPlan` owns no tensor data, the serving
-//! layer ([`super::serve`]) binds each chain entry once and re-runs the
+//! bit-identical under the default [`Precision::BitExact`]; the GEMM
+//! tier additionally offers [`Precision::Fast`], a SIMD-friendly
+//! reordered accumulation gated by a tolerance differential instead
+//! (see `super::kernels`). A `BoundPlan` owns no operand tensors — at
+//! most a prepacked copy of its frozen kernel rows
+//! ([`BoundPlan::prepack`]) — so the serving layer ([`super::serve`])
+//! binds each chain entry once, packs its weights once, and re-runs the
 //! stored plans against fresh buffers on every request.
 //!
 //! ## Index semantics
@@ -73,7 +78,7 @@ use crate::gconv::op::{
 };
 
 use super::faults;
-use super::kernels::{self, GEMM_MIN_REDUCTION, KernelTier};
+use super::kernels::{self, KernelTier, Precision, PrepackedWeights, GEMM_MIN_REDUCTION};
 use super::pool::BufferPool;
 use super::tensor::{row_major_strides, Tensor};
 
@@ -355,13 +360,15 @@ pub(super) struct LoopDim {
 
 /// A [`GconvOp`] bound to a concrete *input layout*: validated shapes,
 /// precomputed strides, scalar operators resolved, execution tier
-/// chosen. A `BoundPlan` owns no tensor data, so it outlives the call
-/// that created it — the serving layer ([`super::serve::Session`])
-/// binds every chain entry once at construction and re-runs the stored
-/// plans against fresh buffers on every request, paying the shape
-/// validation, LUT resolution and stride precomputation exactly once.
-/// [`Plan`] is the per-call view pairing a bound plan with the operand
-/// slices of one evaluation.
+/// chosen. A `BoundPlan` owns no operand tensors — at most a prepacked
+/// copy of its frozen kernel rows ([`BoundPlan::prepack`]) — so it
+/// outlives the call that created it: the serving layer
+/// ([`super::serve::Session`]) binds every chain entry once at
+/// construction and re-runs the stored plans against fresh buffers on
+/// every request, paying the shape validation, LUT resolution, stride
+/// precomputation *and weight packing* exactly once. [`Plan`] is the
+/// per-call view pairing a bound plan with the operand slices of one
+/// evaluation.
 pub(super) struct BoundPlan {
     /// Op name, kept for error messages.
     pub(super) name: String,
@@ -381,6 +388,10 @@ pub(super) struct BoundPlan {
     /// Execution tier, fixed at bind time (a pure shape/operator
     /// property).
     tier: KernelTier,
+    /// Bind-time packed kernel rows (GEMM tier only, populated by
+    /// [`BoundPlan::prepack`]): when present, `eval_bound` never packs
+    /// or even reads the raw kernel tensor again.
+    pub(super) prepacked: Option<PrepackedWeights>,
 }
 
 /// Per-call view of a bound plan plus the operand slices of this
@@ -622,6 +633,7 @@ impl BoundPlan {
             in_elements,
             ker_elements,
             tier,
+            prepacked: None,
         })
     }
 
@@ -632,6 +644,36 @@ impl BoundPlan {
         } else {
             self.tier
         }
+    }
+
+    /// Pack the (frozen) kernel operand into a plan-owned slab so no
+    /// subsequent eval repacks it. A no-op off the GEMM tier — only
+    /// that tier consumes packed rows. Re-invoking replaces the slab
+    /// (how `Session::set_weights` keeps a plan in sync when weights
+    /// are swapped). Every pack is counted into `prepacks` when a
+    /// counter is given; the "steady-state runs never repack" test
+    /// hangs off that counter staying flat across `Session::run`s.
+    pub(super) fn prepack(
+        &mut self,
+        kernel: &Tensor,
+        prepacks: Option<&AtomicUsize>,
+    ) -> Result<()> {
+        if self.tier != KernelTier::Gemm {
+            return Ok(());
+        }
+        ensure!(
+            kernel.elements() == self.ker_elements,
+            "{}: kernel has {} elements, the bound layout needs {}",
+            self.name,
+            kernel.elements(),
+            self.ker_elements
+        );
+        if let Some(c) = prepacks {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        let packed = kernels::pack_weights(self, kernel.data());
+        self.prepacked = Some(packed);
+        Ok(())
     }
 
     /// Check concrete operand tensors against the bound layout. Only
@@ -749,14 +791,26 @@ impl Plan<'_> {
 /// order. Independent output elements are computed in parallel with
 /// rayon.
 pub fn eval_gconv(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<Tensor> {
-    eval_in(op, input, kernel, None, false)
+    eval_in(op, input, kernel, None, false, Precision::BitExact)
 }
 
 /// Evaluate one GCONV with the naive per-element oracle, bypassing the
 /// fast tiers. Retained for differential testing: the property tests
 /// assert the fast paths match this bit-for-bit.
 pub fn eval_gconv_naive(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Result<Tensor> {
-    eval_in(op, input, kernel, None, true)
+    eval_in(op, input, kernel, None, true, Precision::BitExact)
+}
+
+/// [`eval_gconv`] under an explicit [`Precision`]. Only the GEMM tier
+/// reacts to the knob; every other tier is bit-exact regardless. The
+/// Fast-vs-BitExact differential property test drives this entry point.
+pub fn eval_gconv_with_precision(
+    op: &GconvOp,
+    input: &Tensor,
+    kernel: Option<&Tensor>,
+    precision: Precision,
+) -> Result<Tensor> {
+    eval_in(op, input, kernel, None, false, precision)
 }
 
 /// Which execution tier [`eval_gconv`] would pick for this op/tensor
@@ -768,15 +822,17 @@ pub fn plan_tier(op: &GconvOp, input: &Tensor, kernel: Option<&Tensor>) -> Resul
 }
 
 /// Full-control evaluation entry point: optional buffer pool for the
-/// output allocation, optional forcing of the naive oracle tier.
+/// output allocation and GEMM scratch, optional forcing of the naive
+/// oracle tier, explicit GEMM precision.
 pub(super) fn eval_in(
     op: &GconvOp,
     input: &Tensor,
     kernel: Option<&Tensor>,
     pool: Option<&BufferPool>,
     force_naive: bool,
+    precision: Precision,
 ) -> Result<Tensor> {
-    eval_counted(op, input, kernel, pool, force_naive, None)
+    eval_counted(op, input, kernel, pool, force_naive, precision, None)
 }
 
 /// [`eval_in`] with an attributed bind counter: the one-shot path binds
@@ -789,15 +845,17 @@ pub(super) fn eval_counted(
     kernel: Option<&Tensor>,
     pool: Option<&BufferPool>,
     force_naive: bool,
+    precision: Precision,
     binds: Option<&AtomicUsize>,
 ) -> Result<Tensor> {
     let bound = BoundPlan::bind(op, input.dims(), input.elements(), binds)?;
-    eval_bound(&bound, input, kernel, pool, force_naive)
+    eval_bound(&bound, input, kernel, pool, force_naive, precision)
 }
 
 /// Evaluate a *pre-bound* plan against concrete operand tensors: the
 /// bind-once/run-many half of the calling convention. No shape
-/// analysis, no LUT resolution, no stride computation — only an
+/// analysis, no LUT resolution, no stride computation, no weight
+/// packing when the plan carries a prepacked slab — only an
 /// element-count check, an output buffer (pooled when available) and
 /// the tier dispatch.
 pub(super) fn eval_bound(
@@ -806,6 +864,7 @@ pub(super) fn eval_bound(
     kernel: Option<&Tensor>,
     pool: Option<&BufferPool>,
     force_naive: bool,
+    precision: Precision,
 ) -> Result<Tensor> {
     faults::trip(faults::SITE_KERNELS_EVAL)?;
     bound.check_operands(input, kernel)?;
@@ -824,7 +883,7 @@ pub(super) fn eval_bound(
     };
     let plan = Plan { bound, xs: input.data(), ws };
     match bound.tier(force_naive) {
-        KernelTier::Gemm => kernels::eval_gemm(&plan, &mut data),
+        KernelTier::Gemm => kernels::eval_gemm(&plan, pool, precision, &mut data),
         KernelTier::Odometer => kernels::eval_odometer(&plan, &mut data),
         KernelTier::Naive => kernels::eval_naive(&plan, &mut data),
     }

@@ -22,7 +22,13 @@
 //!   ([`KernelTier::Gemm`]), an odometer-indexed generic fast path
 //!   ([`KernelTier::Odometer`]), and the naive per-element oracle
 //!   ([`KernelTier::Naive`], reachable via [`eval_gconv_naive`]) kept
-//!   for differential testing. All tiers are bit-identical.
+//!   for differential testing. All tiers are bit-identical under the
+//!   default [`Precision::BitExact`]; [`Precision::Fast`] swaps the
+//!   GEMM microkernel for hand-unrolled per-lane `f32` accumulation
+//!   bounded by a tolerance differential ([`FAST_REL_TOL`]). GEMM
+//!   kernel rows are packed once per bind into a plan-owned slab
+//!   (`BoundPlan::prepack`), so steady-state serving never repacks
+//!   frozen weights.
 //! * `special` (internal) — dedicated routines for chain entries the
 //!   loop nest cannot express ([`crate::gconv::chain::SpecialOp`]):
 //!   max-pool BP argmax routing (recomputed from the saved forward
@@ -87,8 +93,11 @@ pub mod tensor;
 
 pub use chain_exec::{ChainExec, EntryRun, RunReport, TrimPolicy};
 pub use faults::{FaultGuard, FaultKind, FaultPlan, FaultRule, Trigger};
-pub use interp::{eval_gconv, eval_gconv_naive, lut_apply, lut_known, plan_tier, LutFn};
-pub use kernels::{KernelTier, GEMM_MIN_REDUCTION, NC as GEMM_COL_BLOCK};
+pub use interp::{
+    eval_gconv, eval_gconv_naive, eval_gconv_with_precision, lut_apply, lut_known, plan_tier,
+    LutFn,
+};
+pub use kernels::{KernelTier, Precision, FAST_REL_TOL, GEMM_MIN_REDUCTION, NC as GEMM_COL_BLOCK};
 pub use pool::{BufferPool, PoolStats};
 pub use serve::{
     ChainKey, Engine, EngineResponse, EngineStats, Session, SessionBuilder, SessionStats,

@@ -5,8 +5,10 @@
 //! batch) would otherwise allocate and free the identical set of buffers
 //! each step. The pool shelves freed buffers by exact element count and
 //! hands them back on the next request, so a warmed-up chain run
-//! allocates no fresh intermediate *output* buffers. (The GEMM tier's
-//! per-job packing scratch is separate and short-lived.)
+//! allocates no fresh intermediate buffers. The GEMM tier's eval
+//! scratch (on-the-fly weight packs and the per-shard input panels)
+//! rides the same shelf; its bind-time weight slabs do not — they are
+//! owned by the plan and live for the plan's whole life.
 //!
 //! Recycled buffers come back with **stale contents**: every execution
 //! tier writes all of its output elements exactly once, which is why

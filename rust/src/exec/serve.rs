@@ -15,9 +15,14 @@
 //!   every chain-internal operand, materializes (or synthesizes)
 //!   externals, and **pre-binds an owned plan for every entry** (shape
 //!   validation, LUT resolution, stride precomputation, tier choice —
-//!   see `super::interp::BoundPlan`). [`Session::run`] then executes
+//!   see `super::interp::BoundPlan`). GEMM-tier entries with frozen
+//!   kernel operands also **prepack their weight panels at build**
+//!   (`BoundPlan::prepack`), so [`Session::run`] never repacks
+//!   weights — only [`Session::set_weights`] does, once per
+//!   replacement. [`Session::run`] then executes
 //!   the stored plans against fresh buffers: zero `Plan` binds after
-//!   construction, pinned by the bind counter in [`SessionStats`].
+//!   construction, pinned by the bind and prepack counters in
+//!   [`SessionStats`].
 //!   Special entries (argmax routing, concat) are validated up front
 //!   the same way and dispatch straight to their dedicated routines.
 //!   Sessions can share one [`BufferPool`] (and, via `Arc`, their
@@ -59,6 +64,7 @@ use super::chain_exec::{
     use_counts, validate_chain, EntryRun, RunReport, TrimPolicy, SYNTH_SCALE, SYNTH_SEED,
 };
 use super::interp::{eval_bound, BoundPlan};
+use super::kernels::Precision;
 use super::pool::{BufferPool, PoolStats};
 use super::special;
 use super::tensor::Tensor;
@@ -74,6 +80,12 @@ pub struct SessionStats {
     /// `Plan::bind` calls performed for this session. Fixed at
     /// construction; [`Session::run`] never adds to it.
     pub plan_binds: usize,
+    /// Weight-panel prepacks performed on the session's behalf: one per
+    /// GEMM-tier entry with a frozen kernel operand at construction,
+    /// plus one per touched plan on [`Session::set_weights`].
+    /// [`Session::run`] never adds to it — the repack-free invariant
+    /// the conformance tests pin.
+    pub weight_prepacks: usize,
     /// Completed [`Session::run`] calls.
     pub runs: usize,
     /// Allocation counters of the session's buffer pool (shared
@@ -95,6 +107,7 @@ pub struct SessionBuilder {
     force_naive: bool,
     trim: TrimPolicy,
     pool: Option<Arc<BufferPool>>,
+    precision: Precision,
 }
 
 impl SessionBuilder {
@@ -109,6 +122,7 @@ impl SessionBuilder {
             force_naive: false,
             trim: TrimPolicy::Keep,
             pool: None,
+            precision: Precision::BitExact,
         }
     }
 
@@ -176,6 +190,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Numeric mode of the GEMM microkernel (default
+    /// [`Precision::BitExact`]). [`Precision::Fast`] trades the
+    /// bit-exactness guarantee for unrolled multi-lane accumulation,
+    /// bounded by the [`super::kernels::FAST_REL_TOL`] differential.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Validate, materialize and pre-bind: everything `ChainExec::run`
     /// redoes per call happens exactly once, here.
     pub fn build(self) -> Result<Session> {
@@ -220,9 +243,13 @@ impl SessionBuilder {
         let base_uses = use_counts(&chain, &needed, &wanted);
 
         // Pre-bind every needed loop-nest entry against its operand
-        // extents; every bind is counted. Special entries were
-        // validated by `validate_chain` and need no plan.
+        // extents; every bind is counted. GEMM-tier entries with frozen
+        // (non-chain-produced) kernel operands also prepack their
+        // weight panels here — the eval path then never repacks.
+        // Special entries were validated by `validate_chain` and need
+        // no plan.
         let binds = AtomicUsize::new(0);
+        let prepacks = AtomicUsize::new(0);
         let operand_shape = |r: &DataRef| -> Result<(Vec<usize>, usize)> {
             match r {
                 DataRef::Gconv(p) => {
@@ -250,7 +277,7 @@ impl SessionBuilder {
             }
             let (in_dims, in_elems) = operand_shape(&e.op.input)
                 .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
-            let bp = BoundPlan::bind(&e.op, &in_dims, in_elems, Some(&binds))
+            let mut bp = BoundPlan::bind(&e.op, &in_dims, in_elems, Some(&binds))
                 .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
             if bp.ker_elements > 0 {
                 let k = e.op.kernel.as_ref().with_context(|| {
@@ -264,6 +291,14 @@ impl SessionBuilder {
                     e.op.name,
                     bp.ker_elements
                 );
+                // Chain-produced kernels change every run and cannot be
+                // prepacked; the naive oracle never reads the packed
+                // slab at all.
+                if !self.force_naive && !matches!(k, DataRef::Gconv(_)) {
+                    let t = externals.get(k).expect("checked by operand_shape above");
+                    bp.prepack(t, Some(&prepacks))
+                        .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+                }
             }
             if !matches!(e.op.input, DataRef::Gconv(_)) {
                 input_like.push(e.op.input.clone());
@@ -283,7 +318,9 @@ impl SessionBuilder {
             pool: self.pool.unwrap_or_else(|| Arc::new(BufferPool::new())),
             trim: self.trim,
             force_naive: self.force_naive,
+            precision: self.precision,
             binds,
+            prepacks,
             runs: 0,
             entries,
         })
@@ -307,7 +344,9 @@ pub struct Session {
     pool: Arc<BufferPool>,
     trim: TrimPolicy,
     force_naive: bool,
+    precision: Precision,
     binds: AtomicUsize,
+    prepacks: AtomicUsize,
     runs: usize,
     entries: usize,
 }
@@ -362,7 +401,22 @@ impl Session {
                 t.dims()
             );
         }
-        self.externals.insert(r, t);
+        self.externals.insert(r.clone(), t.clone());
+        // Plans whose kernel operand was just replaced hold a packed
+        // copy of the old weights — repack them now (a per-replacement
+        // cost, never a per-run one). `prepack` is a no-op off the
+        // GEMM tier.
+        if !self.force_naive {
+            for (i, e) in self.chain.entries().iter().enumerate() {
+                if e.op.kernel.as_ref() != Some(&r) {
+                    continue;
+                }
+                if let Some(plan) = self.plans[i].as_mut() {
+                    plan.prepack(&t, Some(&self.prepacks))
+                        .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -393,7 +447,7 @@ impl Session {
                         Some(sp) => special::eval_special(&e.op, sp, input, kernel, pool),
                         None => {
                             let bp = self.plans[i].as_ref().expect("needed entries pre-bind");
-                            eval_bound(bp, input, kernel, pool, self.force_naive)
+                            eval_bound(bp, input, kernel, pool, self.force_naive, self.precision)
                         }
                     }
                     .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
@@ -450,7 +504,8 @@ impl Session {
         let mut builder = SessionBuilder::new(self.chain)
             .wanted(wanted)
             .trim(self.trim)
-            .pool(self.pool);
+            .pool(self.pool)
+            .precision(self.precision);
         if self.force_naive {
             builder = builder.naive_oracle();
         }
@@ -480,6 +535,7 @@ impl Session {
         SessionStats {
             entries: self.entries,
             plan_binds: self.binds.load(Ordering::Relaxed),
+            weight_prepacks: self.prepacks.load(Ordering::Relaxed),
             runs: self.runs,
             pool: self.pool.stats(),
         }
@@ -637,6 +693,7 @@ pub struct Engine {
     max_batch: usize,
     fuse: bool,
     trim: TrimPolicy,
+    precision: Precision,
     builders: HashMap<String, NetBuilder>,
     nets: HashMap<String, NetEntry>,
     sessions: HashMap<ChainKey, Session>,
@@ -654,6 +711,7 @@ impl Engine {
             max_batch: max_batch.max(1),
             fuse: false,
             trim: TrimPolicy::Keep,
+            precision: Precision::BitExact,
             builders: HashMap::new(),
             nets: HashMap::new(),
             sessions: HashMap::new(),
@@ -672,6 +730,16 @@ impl Engine {
     /// Shelf-retention policy of the shared buffer pool.
     pub fn with_trim(mut self, trim: TrimPolicy) -> Self {
         self.trim = trim;
+        self
+    }
+
+    /// Numeric mode every session of this engine serves with (default
+    /// [`Precision::BitExact`]; see [`SessionBuilder::precision`]).
+    /// Coalescing stays sample-stable under either mode — the
+    /// microkernel's accumulation order per output element does not
+    /// depend on the batch size.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 
@@ -899,7 +967,8 @@ impl Engine {
         let mut builder = Session::builder(chain)
             .input(&info.input_name, Tensor::zeros(&dims))
             .trim(self.trim)
-            .pool(self.pool.clone());
+            .pool(self.pool.clone())
+            .precision(self.precision);
         for (r, t) in &info.weights {
             builder = builder.shared(r.clone(), t.clone());
         }
@@ -1025,7 +1094,8 @@ fn chain_is_per_sample(chain: &GconvChain, batch: usize) -> bool {
 mod tests {
     use super::*;
 
-    use crate::exec::ChainExec;
+    use crate::analysis::static_tier;
+    use crate::exec::{ChainExec, KernelTier, FAST_REL_TOL};
     use crate::ir::{Layer, Shape};
     use crate::networks::mobilenet_block;
 
@@ -1093,6 +1163,135 @@ mod tests {
         let one = exec.bind_calls();
         exec.run_last().unwrap();
         assert_eq!(exec.bind_calls(), 2 * one, "one-shot path rebinds per run");
+    }
+
+    #[test]
+    fn session_prepacks_weights_once_at_build_and_never_on_run() {
+        let chain = block_chain();
+        let needed = reachable(&chain, &[chain.len() - 1]);
+        let expected = chain
+            .entries()
+            .iter()
+            .enumerate()
+            .filter(|(i, e)| {
+                needed[*i]
+                    && e.special.is_none()
+                    && e.op.kernel.as_ref().is_some_and(|k| !matches!(k, DataRef::Gconv(_)))
+                    && static_tier(&e.op) == KernelTier::Gemm
+            })
+            .count();
+        assert!(expected > 0, "block chain must bind GEMM entries with frozen weights");
+
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let built = session.stats();
+        assert_eq!(built.weight_prepacks, expected, "one prepack per bound GEMM entry");
+        for _ in 0..3 {
+            let report = session.run().unwrap();
+            session.recycle(report);
+        }
+        assert_eq!(
+            session.stats().weight_prepacks,
+            built.weight_prepacks,
+            "run() must never repack frozen weights"
+        );
+
+        // The naive oracle never reads the packed layout at all.
+        let naive = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .naive_oracle()
+            .build()
+            .unwrap();
+        assert_eq!(naive.stats().weight_prepacks, 0);
+    }
+
+    #[test]
+    fn replacing_weights_repacks_touched_plans_and_serves_the_new_weights() {
+        let chain = block_chain();
+        let needed = reachable(&chain, &[chain.len() - 1]);
+        let mut found: Option<(String, usize)> = None;
+        let mut touched = 0usize;
+        for (i, e) in chain.entries().iter().enumerate() {
+            let Some(DataRef::Weights(n)) = &e.op.kernel else { continue };
+            if !needed[i] || static_tier(&e.op) != KernelTier::Gemm {
+                continue;
+            }
+            if found.is_none() {
+                found = Some((n.clone(), e.op.kernel_elements()));
+            }
+            if found.as_ref().is_some_and(|(f, _)| f == n) {
+                touched += 1;
+            }
+        }
+        let (name, elems) = found.expect("block chain has a GEMM entry with frozen weights");
+        // Kernel operands bind by element count, so a flat replacement
+        // of the right size is accepted.
+        let replacement = Tensor::rand(&[elems], 99, 1.0);
+
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let base = session.stats().weight_prepacks;
+        session.set_weights(&name, replacement.clone()).unwrap();
+        assert_eq!(
+            session.stats().weight_prepacks,
+            base + touched,
+            "set_weights repacks exactly the plans reading the replaced operand"
+        );
+        let got = session.run().unwrap();
+
+        // The repacked slab must actually serve the new weights: a
+        // session built with the replacement from scratch (identical
+        // synthesized externals otherwise) matches bit-for-bit.
+        let mut fresh = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .weights(&name, replacement)
+            .build()
+            .unwrap();
+        let want = fresh.run().unwrap();
+        assert!(got.outputs[0].bit_eq(&want.outputs[0]));
+    }
+
+    #[test]
+    fn fast_precision_session_stays_within_tolerance() {
+        let mut exact = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let want = exact.run().unwrap();
+        let mut fast = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .precision(Precision::Fast)
+            .build()
+            .unwrap();
+        let got = fast.run().unwrap();
+        let tol = f64::from(FAST_REL_TOL);
+        for (a, b) in got.outputs[0].data().iter().zip(want.outputs[0].data()) {
+            let rel = f64::from((a - b).abs()) / f64::from(b.abs()).max(1.0);
+            assert!(rel <= tol, "fast={a} exact={b} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn engine_precision_fast_stays_close_to_bitexact() {
+        let sample = Tensor::rand(&[2 * 4 * 4], 77, 1.0).into_data();
+        let run = |precision: Precision| {
+            let mut engine = Engine::new(1).with_precision(precision);
+            engine.register("ps", per_sample_net);
+            engine.submit("ps", 0, sample.clone()).unwrap();
+            let mut responses = engine.drain().unwrap();
+            responses.remove(0).data
+        };
+        let exact = run(Precision::BitExact);
+        let fast = run(Precision::Fast);
+        let tol = f64::from(FAST_REL_TOL);
+        for (a, b) in fast.iter().zip(&exact) {
+            let rel = f64::from((a - b).abs()) / f64::from(b.abs()).max(1.0);
+            assert!(rel <= tol, "fast={a} exact={b} rel={rel}");
+        }
     }
 
     #[test]

@@ -28,7 +28,9 @@
 //!   executable fusion.
 //! * [`exec`] — native execution engine: tensor type, tiered GCONV
 //!   loop-nest interpreter (§3.1's four operators; GEMM/odometer/naive
-//!   kernels), special-op routines, parallel chain scheduler with
+//!   kernels, bind-time weight prepacking, and the opt-in
+//!   `Precision::Fast` lane microkernel vs the default bit-exact
+//!   path), special-op routines, parallel chain scheduler with
 //!   up-front operand validation and buffer-pool trim policies,
 //!   bind-once/run-many serving (`exec::serve`: pre-bound `Session`s,
 //!   the chain-caching and request-coalescing `Engine`), seeded

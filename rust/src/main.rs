@@ -47,6 +47,10 @@ OPTIONS:
                    (§4.3) first: fewer entries, bit-identical outputs
     --max-batch N  serve: coalesce up to N single-sample requests into
                    one micro-batch session run (default 8)
+    --precision P  serve: GEMM-tier numerics, P = bitexact (default) or
+                   fast (SIMD lane microkernel; outputs land within the
+                   documented relative tolerance instead of bit-exact —
+                   the `client` bit-identity check assumes bitexact)
     --listen ADDR  serve: bind a TCP serving front (e.g. 127.0.0.1:4461)
                    instead of running the in-process demo stream
     --max-requests N
@@ -301,9 +305,18 @@ struct ServeOpts {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     use gconv_chain::exec::serve::Engine;
+    use gconv_chain::exec::Precision;
 
     let mut args = args.to_vec();
     let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
+    let precision = match gconv_chain::args::take_required_string(&mut args, "--precision")
+        .map_err(|e| anyhow::anyhow!("{e} (bitexact or fast)"))?
+        .as_deref()
+    {
+        None | Some("bitexact") => Precision::BitExact,
+        Some("fast") => Precision::Fast,
+        Some(other) => anyhow::bail!("--precision expects bitexact or fast, got {other:?}"),
+    };
     let listen = gconv_chain::args::take_required_string(&mut args, "--listen")
         .map_err(|e| anyhow::anyhow!("{e} (an ADDR:PORT to bind)"))?;
     let max_requests = match gconv_chain::args::take_usize(&mut args, "--max-requests") {
@@ -326,7 +339,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "--faults requires --listen (it arms the serving front's injection sites)"
     );
     let opts = ServeOpts { max_batch, fuse, listen, max_requests, faults };
-    let mut engine = Engine::new(max_batch).with_fuse(fuse);
+    let mut engine = Engine::new(max_batch).with_fuse(fuse).with_precision(precision);
     // The served network: a `--model` spec, a benchmark code, a spec
     // file path, or a bundled spec stem (default MN). Specs register
     // with the engine so it can relower at every micro-batch size;

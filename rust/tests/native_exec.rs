@@ -13,8 +13,8 @@
 //! pooling and softmax those coincide with the textbook operators.
 
 use gconv_chain::exec::{
-    eval_gconv, eval_gconv_naive, lut_apply, plan_tier, ChainExec, KernelTier, Tensor,
-    GEMM_MIN_REDUCTION,
+    eval_gconv, eval_gconv_naive, eval_gconv_with_precision, lut_apply, plan_tier, ChainExec,
+    KernelTier, Precision, Tensor, FAST_REL_TOL, GEMM_MIN_REDUCTION,
 };
 use gconv_chain::gconv::chain::{ChainEntry, GconvChain, Phase};
 use gconv_chain::gconv::lower::{lower_network, Mode};
@@ -459,6 +459,44 @@ fn fast_paths_match_naive_oracle_bitwise() {
                 x.dims(),
                 fast.max_abs_diff(&naive)
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_precision_matches_bitexact_within_tolerance() {
+    // Property: `Precision::Fast` (the lane-parallel GEMM microkernel)
+    // stays within FAST_REL_TOL of the bit-exact path on every
+    // randomized shape. Only the GEMM tier reacts to the knob, so on
+    // every other tier Fast must stay bit-identical.
+    prop_check(150, |rng| {
+        let (op, x, w) = loop {
+            let cand = random_gconv(rng);
+            if cand.0.work() <= 200_000 {
+                break cand;
+            }
+        };
+        let exact = eval_gconv(&op, &x, w.as_ref())
+            .map_err(|e| format!("bitexact: {op} over {:?}: {e:#}", x.dims()))?;
+        let fast = eval_gconv_with_precision(&op, &x, w.as_ref(), Precision::Fast)
+            .map_err(|e| format!("fast: {op} over {:?}: {e:#}", x.dims()))?;
+        let tier = plan_tier(&op, &x, w.as_ref()).unwrap();
+        if tier != KernelTier::Gemm && !fast.bit_eq(&exact) {
+            return Err(format!(
+                "{op} (tier {tier:?}) over {:?}: Precision::Fast changed a non-GEMM tier",
+                x.dims()
+            ));
+        }
+        let tol = f64::from(FAST_REL_TOL);
+        for (i, (a, b)) in fast.data().iter().zip(exact.data()).enumerate() {
+            let rel = f64::from((a - b).abs()) / f64::from(b.abs()).max(1.0);
+            if rel > tol {
+                return Err(format!(
+                    "{op} (tier {tier:?}) over {:?}: element {i} rel err {rel:e} > {tol:e}",
+                    x.dims()
+                ));
+            }
         }
         Ok(())
     });
