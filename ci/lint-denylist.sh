@@ -9,6 +9,9 @@
 #      output-pointer GEMM fan-out is the single unsafe island, and its
 #      disjointness justification is machine-checked by
 #      `analysis::disjoint`. New unsafe goes there or not at all.
+#   3. No `SystemTime` in `rust/src/obs` — all span/latency math must
+#      be monotonic (`Instant`); wall-clock steps (NTP, suspend) would
+#      corrupt recorded deltas.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -23,6 +26,13 @@ fi
 if matches=$(grep -RnE 'unsafe([[:space:]]+(impl|fn|trait)|[[:space:]]*\{)' \
     --include='*.rs' rust/src | grep -v '^rust/src/exec/kernels.rs:'); then
   echo "deny-list: unsafe outside rust/src/exec/kernels.rs:"
+  echo "$matches"
+  status=1
+fi
+
+# Comment lines are exempt: the module documents the ban itself.
+if matches=$(grep -RnE 'SystemTime' rust/src/obs | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'); then
+  echo "deny-list: SystemTime in rust/src/obs — span math must be monotonic (Instant):"
   echo "$matches"
   status=1
 fi

@@ -386,6 +386,33 @@ impl DegradedBench {
     }
 }
 
+/// Nearest-rank p50/p99 of one per-request serving stage, in
+/// nanoseconds (bucket upper bounds of the server's log-scale stage
+/// histograms).
+#[derive(Clone, Copy, Debug)]
+pub struct StageQuantiles {
+    /// Median stage latency (bucket-quantized nanoseconds).
+    pub p50_ns: u64,
+    /// 99th-percentile stage latency (bucket-quantized nanoseconds).
+    pub p99_ns: u64,
+}
+
+/// Where a request's time went during the load leg, stage by stage:
+/// socket read (first byte to full frame), scheduler queue wait,
+/// engine evaluation, reply write. Read from the server's live
+/// registry before shutdown.
+#[derive(Clone, Copy, Debug)]
+pub struct StageProfile {
+    /// Frame read stage (`gconv_read_ns`).
+    pub read: StageQuantiles,
+    /// Queue wait stage (`gconv_queue_wait_ns`).
+    pub queue: StageQuantiles,
+    /// Engine evaluation stage (`gconv_eval_ns`).
+    pub eval: StageQuantiles,
+    /// Reply write stage (`gconv_write_ns`).
+    pub write: StageQuantiles,
+}
+
 /// Concurrent-load measurement over the TCP serving front
 /// ([`crate::server::serve`]): `clients` connections on loopback send
 /// the bench request stream through the bounded scheduler queue and
@@ -413,6 +440,9 @@ pub struct LoadBench {
     /// Whether every wire response matched the per-request path
     /// bit-for-bit.
     pub bit_identical: bool,
+    /// Per-stage latency quantiles of the leg (read / queue wait /
+    /// eval / write), from the server's stage histograms.
+    pub profile: StageProfile,
 }
 
 impl LoadBench {
@@ -650,6 +680,7 @@ fn bench_load(
             .collect::<Result<Vec<_>>>()
     })?;
     let seconds = t0.elapsed().as_secs_f64();
+    let profile = stage_profile(handle.counters());
     let report = handle.shutdown()?;
 
     let mut bit_identical = true;
@@ -679,7 +710,23 @@ fn bench_load(
         batches: report.engine.batches.saturating_sub(warm.batches),
         max_queue_depth: report.max_queue_depth,
         bit_identical,
+        profile,
     })
+}
+
+/// Snapshot the four stage histograms of a live server into a
+/// [`StageProfile`].
+fn stage_profile(c: &crate::server::Counters) -> StageProfile {
+    let q = |h: &crate::obs::Hist| StageQuantiles {
+        p50_ns: h.percentile(50),
+        p99_ns: h.percentile(99),
+    };
+    StageProfile {
+        read: q(&c.read_ns),
+        queue: q(&c.queue_wait_ns),
+        eval: q(&c.eval_ns),
+        write: q(&c.write_ns),
+    }
 }
 
 /// The degraded-mode leg of [`bench_serve`]: the same loopback load
@@ -752,8 +799,8 @@ fn bench_degraded(
                                     injected += 1;
                                     break;
                                 }
-                                Response::Health(_) => {
-                                    anyhow::bail!("unexpected health frame in the degraded leg")
+                                Response::Health(_) | Response::Metrics(_) => {
+                                    anyhow::bail!("unexpected status frame in the degraded leg")
                                 }
                             }
                         }
@@ -856,6 +903,22 @@ pub fn serve_to_json(benches: &[ServeBench], threads: usize) -> String {
                     l.busy_rejections,
                     l.max_queue_depth,
                     l.bit_identical
+                ));
+            }
+        }
+        match b.load.as_ref().map(|l| &l.profile) {
+            None => s.push_str("      \"profile\": null,\n"),
+            Some(p) => {
+                let stage = |q: &StageQuantiles| {
+                    format!("{{\"p50_ns\": {}, \"p99_ns\": {}}}", q.p50_ns, q.p99_ns)
+                };
+                s.push_str(&format!(
+                    "      \"profile\": {{\"read\": {}, \"queue\": {}, \"eval\": {}, \
+                     \"write\": {}}},\n",
+                    stage(&p.read),
+                    stage(&p.queue),
+                    stage(&p.eval),
+                    stage(&p.write)
                 ));
             }
         }
@@ -1122,6 +1185,7 @@ mod tests {
         assert!(json.contains("\"p50_ms\": 250.0000"));
         assert!(json.contains("\"bit_identical\": true"));
         assert!(json.contains("\"load\": null"));
+        assert!(json.contains("\"profile\": null"));
         assert!(json.contains("\"degraded\": null"));
         assert!(!json.contains("inf") && !json.to_lowercase().contains("nan"));
 
@@ -1137,6 +1201,12 @@ mod tests {
             batches: 3,
             max_queue_depth: 3,
             bit_identical: true,
+            profile: StageProfile {
+                read: StageQuantiles { p50_ns: 1023, p99_ns: 4095 },
+                queue: StageQuantiles { p50_ns: 2047, p99_ns: 8191 },
+                eval: StageQuantiles { p50_ns: 65535, p99_ns: 131071 },
+                write: StageQuantiles { p50_ns: 511, p99_ns: 2047 },
+            },
         });
         b.degraded = Some(DegradedBench {
             clients: 3,
@@ -1152,6 +1222,8 @@ mod tests {
         assert_eq!(b.degraded.as_ref().unwrap().rps(), 1.5);
         let json = serve_to_json(&[b], 2);
         assert!(json.contains("\"load\": {\"clients\": 3"));
+        assert!(json.contains("\"profile\": {\"read\": {\"p50_ns\": 1023, \"p99_ns\": 4095}"));
+        assert!(json.contains("\"eval\": {\"p50_ns\": 65535, \"p99_ns\": 131071}"));
         assert!(json.contains("\"coalescing_rate\": 0.5000"));
         assert!(json.contains("\"busy_rejected\": 2"));
         assert!(json.contains("\"max_queue_depth\": 3"));

@@ -882,12 +882,37 @@ pub(super) fn eval_bound(
         None
     };
     let plan = Plan { bound, xs: input.data(), ws };
-    match bound.tier(force_naive) {
+    let tier = bound.tier(force_naive);
+    // Disarmed (the default), this profiling hook costs exactly one
+    // relaxed load; armed, it times the kernel dispatch and feeds the
+    // per-tier histogram in the global registry. Either way the kernel
+    // sees identical operands and buffers — output bits cannot change.
+    let span = crate::obs::profiling().then(crate::obs::Span::start);
+    match tier {
         KernelTier::Gemm => kernels::eval_gemm(&plan, pool, precision, &mut data),
         KernelTier::Odometer => kernels::eval_odometer(&plan, &mut data),
         KernelTier::Naive => kernels::eval_naive(&plan, &mut data),
     }
+    if let Some(span) = span {
+        kernel_hist(tier).record(span.elapsed_ns());
+    }
     Tensor::new(&bound.out_dims, data)
+}
+
+/// Cached global-registry handles for the per-tier kernel histograms,
+/// so the armed profiling path never re-locks the registry.
+fn kernel_hist(tier: KernelTier) -> &'static crate::obs::Hist {
+    use std::sync::OnceLock;
+    static GEMM: OnceLock<std::sync::Arc<crate::obs::Hist>> = OnceLock::new();
+    static ODOMETER: OnceLock<std::sync::Arc<crate::obs::Hist>> = OnceLock::new();
+    static NAIVE: OnceLock<std::sync::Arc<crate::obs::Hist>> = OnceLock::new();
+    match tier {
+        KernelTier::Gemm => GEMM.get_or_init(|| crate::obs::hist("gconv_kernel_gemm_ns")),
+        KernelTier::Odometer => {
+            ODOMETER.get_or_init(|| crate::obs::hist("gconv_kernel_odometer_ns"))
+        }
+        KernelTier::Naive => NAIVE.get_or_init(|| crate::obs::hist("gconv_kernel_naive_ns")),
+    }
 }
 
 #[cfg(test)]

@@ -62,6 +62,15 @@
 //!   disarmed. The chaos suite (`rust/tests/chaos.rs`) drives the
 //!   server's panic isolation, quarantine, and deadline paths with it.
 //!
+//! Observability ([`crate::obs`]): the engine mirrors its counters into
+//! the process-global registry — `gconv_kernel_*_ns` per-tier kernel
+//! histograms (armed by `obs::profile()`, one relaxed load when
+//! disarmed), `gconv_engine_*` request/batch/coalescing counters and
+//! queue-wait histogram, `gconv_session_*` bind/prepack/run counters,
+//! and `gconv_pool_*` allocation counters. The per-struct stats
+//! ([`EngineStats`], [`SessionStats`], [`PoolStats`]) remain the
+//! authoritative per-instance counters.
+//!
 //! The [`crate::coordinator`] exposes this engine as the default
 //! [`crate::coordinator::Backend`] behind its batching request API; the
 //! optional PJRT/XLA path (cargo feature `pjrt`) plugs into the same

@@ -31,9 +31,33 @@
 //! session's shelf instead of holding it forever.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::faults;
+
+/// Global-registry mirrors of the pool counters (`gconv_pool_*`),
+/// summed across every pool in the process. [`PoolStats`] stays the
+/// per-pool truth the conformance tests assert on; the mirrors feed
+/// the metrics frame. Handles are cached so the hot path stays one
+/// relaxed `fetch_add` per event.
+struct PoolMetrics {
+    hits: Arc<crate::obs::Counter>,
+    misses: Arc<crate::obs::Counter>,
+    recycled: Arc<crate::obs::Counter>,
+    dropped: Arc<crate::obs::Counter>,
+    trimmed: Arc<crate::obs::Counter>,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static M: OnceLock<PoolMetrics> = OnceLock::new();
+    M.get_or_init(|| PoolMetrics {
+        hits: crate::obs::counter("gconv_pool_hits"),
+        misses: crate::obs::counter("gconv_pool_misses"),
+        recycled: crate::obs::counter("gconv_pool_recycled"),
+        dropped: crate::obs::counter("gconv_pool_dropped"),
+        trimmed: crate::obs::counter("gconv_pool_trimmed"),
+    })
+}
 
 /// Bytes the default pool will shelve before dropping returned buffers.
 const DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
@@ -105,11 +129,14 @@ impl BufferPool {
             if let Some((_, buf)) = bucket.pop() {
                 shelf.held_bytes -= n * 4;
                 shelf.stats.hits += 1;
+                drop(guard);
+                pool_metrics().hits.inc();
                 return buf;
             }
         }
         shelf.stats.misses += 1;
         drop(guard);
+        pool_metrics().misses.inc();
         vec![0.0; n]
     }
 
@@ -125,12 +152,16 @@ impl BufferPool {
         let shelf = &mut *guard;
         if shelf.held_bytes + n * 4 > self.capacity_bytes {
             shelf.stats.dropped += 1;
+            drop(guard);
+            pool_metrics().dropped.inc();
             return;
         }
         shelf.held_bytes += n * 4;
         shelf.stats.recycled += 1;
         let epoch = shelf.epoch;
         shelf.buckets.entry(n).or_default().push((epoch, buf));
+        drop(guard);
+        pool_metrics().recycled.inc();
     }
 
     /// Open a new run epoch: buffers recycled from now on are considered
@@ -160,6 +191,8 @@ impl BufferPool {
         shelf.buckets.retain(|_, b| !b.is_empty());
         shelf.held_bytes -= freed;
         shelf.stats.trimmed += count;
+        drop(guard);
+        pool_metrics().trimmed.add(count as u64);
     }
 
     /// Drop every shelved buffer (counted as trimmed).
@@ -170,6 +203,8 @@ impl BufferPool {
         shelf.buckets.clear();
         shelf.held_bytes = 0;
         shelf.stats.trimmed += count;
+        drop(guard);
+        pool_metrics().trimmed.add(count as u64);
     }
 
     /// Cumulative allocation counters.

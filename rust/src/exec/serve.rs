@@ -64,10 +64,54 @@ use super::chain_exec::{
     use_counts, validate_chain, EntryRun, RunReport, TrimPolicy, SYNTH_SCALE, SYNTH_SEED,
 };
 use super::interp::{eval_bound, BoundPlan};
-use super::kernels::Precision;
+use super::kernels::{KernelTier, Precision};
 use super::pool::{BufferPool, PoolStats};
 use super::special;
 use super::tensor::Tensor;
+
+/// Global-registry mirrors of the session counters, summed across
+/// every session in the process (`gconv_session_*`). The per-session
+/// [`SessionStats`] stay authoritative for conformance assertions;
+/// these feed the metrics frame and the `profile` CLI.
+struct SessionMetrics {
+    binds: Arc<crate::obs::Counter>,
+    prepacks: Arc<crate::obs::Counter>,
+    runs: Arc<crate::obs::Counter>,
+}
+
+fn session_metrics() -> &'static SessionMetrics {
+    static M: std::sync::OnceLock<SessionMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| SessionMetrics {
+        binds: crate::obs::counter("gconv_session_binds"),
+        prepacks: crate::obs::counter("gconv_session_prepacks"),
+        runs: crate::obs::counter("gconv_session_runs"),
+    })
+}
+
+/// Global-registry mirrors of [`EngineStats`] plus the queue-wait
+/// histogram (`gconv_engine_*`), summed across every engine in the
+/// process.
+struct EngineMetrics {
+    requests: Arc<crate::obs::Counter>,
+    batches: Arc<crate::obs::Counter>,
+    coalesced: Arc<crate::obs::Counter>,
+    sessions_built: Arc<crate::obs::Counter>,
+    cache_hits: Arc<crate::obs::Counter>,
+    /// Nanoseconds a request sat queued before its wave formed.
+    queue_ns: Arc<crate::obs::Hist>,
+}
+
+fn engine_metrics() -> &'static EngineMetrics {
+    static M: std::sync::OnceLock<EngineMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| EngineMetrics {
+        requests: crate::obs::counter("gconv_engine_requests"),
+        batches: crate::obs::counter("gconv_engine_batches"),
+        coalesced: crate::obs::counter("gconv_engine_coalesced"),
+        sessions_built: crate::obs::counter("gconv_engine_sessions_built"),
+        cache_hits: crate::obs::counter("gconv_engine_cache_hits"),
+        queue_ns: crate::obs::hist("gconv_engine_queue_ns"),
+    })
+}
 
 /// Counters of one [`Session`]. `plan_binds` is incremented by every
 /// `Plan` bind performed on the session's behalf — all of them happen
@@ -307,6 +351,9 @@ impl SessionBuilder {
         }
 
         let entries = needed.iter().filter(|&&x| x).count();
+        let metrics = session_metrics();
+        metrics.binds.add(binds.load(Ordering::Relaxed) as u64);
+        metrics.prepacks.add(prepacks.load(Ordering::Relaxed) as u64);
         Ok(Session {
             chain,
             externals,
@@ -407,6 +454,7 @@ impl Session {
         // cost, never a per-run one). `prepack` is a no-op off the
         // GEMM tier.
         if !self.force_naive {
+            let before = self.prepacks.load(Ordering::Relaxed);
             for (i, e) in self.chain.entries().iter().enumerate() {
                 if e.op.kernel.as_ref() != Some(&r) {
                     continue;
@@ -416,6 +464,8 @@ impl Session {
                         .with_context(|| format!("chain entry #{i} ({})", e.op.name))?;
                 }
             }
+            let repacked = self.prepacks.load(Ordering::Relaxed) - before;
+            session_metrics().prepacks.add(repacked as u64);
         }
         Ok(())
     }
@@ -488,11 +538,20 @@ impl Session {
             TrimPolicy::Clear => self.pool.trim_all(),
         }
         self.runs += 1;
+        session_metrics().runs.inc();
         Ok(RunReport {
             outputs,
             entries: records,
             total_s: t_total.elapsed().as_secs_f64(),
         })
+    }
+
+    /// The kernel tier each chain entry dispatches to: `None` for
+    /// special entries and entries outside the needed set. Indexed by
+    /// chain position, like [`EntryRun::index`] — the `profile` CLI
+    /// joins the two to tag its per-layer table.
+    pub fn tiers(&self) -> Vec<Option<KernelTier>> {
+        self.plans.iter().map(|p| p.as_ref().map(|bp| bp.tier(self.force_naive))).collect()
     }
 
     /// Rebuild this session around a different `wanted` set, keeping
@@ -977,6 +1036,7 @@ impl Engine {
             .with_context(|| format!("building session for {key:?}"))?;
         self.sessions.insert(key.clone(), session);
         self.stats.sessions_built += 1;
+        engine_metrics().sessions_built.inc();
         Ok(())
     }
 
@@ -984,12 +1044,20 @@ impl Engine {
     /// responses back out (order preserved).
     fn run_group(&mut self, code: &str, group: Vec<Pending>) -> Result<Vec<EngineResponse>> {
         let batch = group.len();
+        // The wave has formed: each rider's queue wait ends here.
+        let metrics = engine_metrics();
+        let formed = Instant::now();
+        for p in &group {
+            let waited = formed.saturating_duration_since(p.t0);
+            metrics.queue_ns.record(u64::try_from(waited.as_nanos()).unwrap_or(u64::MAX));
+        }
         let info = self.nets[code].clone();
         let key = ChainKey { net: code.to_string(), batch, fused: self.fuse };
         let cached = self.sessions.contains_key(&key);
         self.ensure_session(&key, &info)?;
         if cached {
             self.stats.cache_hits += batch;
+            metrics.cache_hits.add(batch as u64);
         }
 
         let mut data = Vec::with_capacity(batch * info.sample_len);
@@ -1026,8 +1094,11 @@ impl Engine {
         session.recycle(report);
         self.stats.requests += batch;
         self.stats.batches += 1;
+        metrics.requests.add(batch as u64);
+        metrics.batches.inc();
         if batch > 1 {
             self.stats.coalesced += batch;
+            metrics.coalesced.add(batch as u64);
         }
         self.stats.exec_s += exec_s;
         Ok(responses)
@@ -1292,6 +1363,52 @@ mod tests {
             let rel = f64::from((a - b).abs()) / f64::from(b.abs()).max(1.0);
             assert!(rel <= tol, "fast={a} exact={b} rel={rel}");
         }
+    }
+
+    #[test]
+    fn profiling_arm_is_output_invariant_and_allocation_free() {
+        // Arming the per-entry kernel timing hooks must change nothing
+        // observable about serving: outputs stay bit-identical and the
+        // warmed pool still serves every buffer (no fresh allocations).
+        let mut session = Session::builder(block_chain())
+            .input("data.data", block_input())
+            .build()
+            .unwrap();
+        let disarmed = session.run().unwrap();
+        let want = disarmed.outputs[0].clone();
+        session.recycle(disarmed);
+        let after_warmup = session.stats().pool;
+
+        let guard = crate::obs::profile();
+        let armed = session.run().unwrap();
+        assert!(want.bit_eq(&armed.outputs[0]), "armed profiling changed the output bits");
+        session.recycle(armed);
+        let s = session.stats().pool;
+        assert_eq!(s.misses, after_warmup.misses, "armed run allocated fresh buffers: {s:?}");
+        // The armed run fed the kernel histograms.
+        let hist_count = |name: &str| -> u64 {
+            crate::obs::global()
+                .snapshot()
+                .into_iter()
+                .find_map(|m| match m {
+                    crate::obs::MetricSnapshot::Hist { name: n, count, .. } if n == name => {
+                        Some(count)
+                    }
+                    _ => None,
+                })
+                .unwrap_or(0)
+        };
+        let timed = hist_count("gconv_kernel_gemm_ns")
+            + hist_count("gconv_kernel_odometer_ns")
+            + hist_count("gconv_kernel_naive_ns");
+        assert!(timed > 0, "armed run recorded no kernel samples");
+        drop(guard);
+
+        // Disarmed again: still bit-identical, still allocation-free.
+        let again = session.run().unwrap();
+        assert!(want.bit_eq(&again.outputs[0]));
+        session.recycle(again);
+        assert_eq!(session.stats().pool.misses, after_warmup.misses);
     }
 
     #[test]

@@ -43,6 +43,12 @@
 //!   or emits structured rule-id diagnostics. Wired into
 //!   `SessionBuilder::build` (debug), `Engine::register_spec`, and the
 //!   `audit` / `specs` CLI subcommands.
+//! * [`obs`] — observability spine: lock-light metrics registry
+//!   (counters, gauges, log-bucket latency histograms with
+//!   nearest-rank p50/p99), disarmed-by-default kernel profiling
+//!   hooks, monotonic span stamps, and export surfaces (Prometheus
+//!   text exposition for the wire metrics frame, chrome://tracing
+//!   JSON for `profile --trace-out`).
 //! * [`accel`] — accelerator structures (Table 4) and baseline modes.
 //! * [`mapping`] — Algorithm 1, consistent mapping, operation fusion
 //!   (analytical *and* executable policies over shared legality).
@@ -79,6 +85,7 @@ pub mod isa;
 pub mod mapping;
 pub mod model;
 pub mod networks;
+pub mod obs;
 pub mod prop;
 pub mod report;
 #[cfg(feature = "pjrt")]

@@ -29,8 +29,14 @@ USAGE:
     gconv-chain client ADDR [NET] [REQUESTS] drive a TCP serving front; verify
                                              responses bit-identical to a local
                                              in-process engine
-    gconv-chain stats ADDR                   fetch a serving front's live health
-                                             snapshot (counters + quarantine)
+    gconv-chain stats ADDR [--metrics]       fetch a serving front's live health
+                                             snapshot (counters + quarantine);
+                                             --metrics prints the raw Prometheus
+                                             exposition (wire kind 6/7) instead
+    gconv-chain profile [NET] [--fuse] [--trace-out PATH]
+                                             time one request through a bound
+                                             session and print the per-layer
+                                             breakdown (time, share, tier, GOP/s)
     gconv-chain specs                        list + validate bundled model specs
     gconv-chain audit [NET] [--fuse] [--budget BYTES]
                                              statically audit lowered chains:
@@ -61,6 +67,10 @@ OPTIONS:
                    \"seed=7,serve.step[MN]=panic@nth:3,conn.read=delay:5@p:0.1\"
                    (sites: pool.alloc kernels.eval serve.step
                    scheduler.wave conn.read; chaos/soak testing only)
+    --trace-out PATH
+                   profile: also write the per-layer timeline as
+                   chrome://tracing JSON (openable in chrome://tracing
+                   or Perfetto)
 
     NET   = AN GLN DN MN ZFFR C3D CapNN, a bundled spec name, or (with
             --model) a spec file path
@@ -78,6 +88,7 @@ fn main() {
             Some("serve") => cmd_serve(&args[1..]),
             Some("client") => cmd_client(&args[1..]),
             Some("stats") => cmd_stats(&args[1..]),
+            Some("profile") => cmd_profile(&args[1..]),
             Some("specs") => cmd_specs(),
             Some("audit") => cmd_audit(&args[1..]),
             _ => {
@@ -556,39 +567,31 @@ fn cmd_client(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `stats ADDR`: fetch and print a serving front's health snapshot.
+/// `stats ADDR [--metrics]`: fetch and print a serving front's health
+/// snapshot, or (with `--metrics`) its raw Prometheus exposition.
 fn cmd_stats(args: &[String]) -> Result<()> {
-    use gconv_chain::server::Client;
+    use gconv_chain::server::{Client, HEALTH_FIELDS};
     use std::time::Duration;
 
+    let mut args = args.to_vec();
+    let metrics = gconv_chain::args::take_flag(&mut args, "--metrics");
     let Some(addr) = args.first() else {
         println!("{USAGE}");
         return Ok(());
     };
     if let Some(extra) = args.get(1) {
-        anyhow::bail!("unexpected argument {extra:?} (stats takes only ADDR)");
+        anyhow::bail!("unexpected argument {extra:?} (stats takes only ADDR and --metrics)");
     }
     let mut client = Client::connect_retry(addr, Duration::from_secs(10))?;
     client.set_timeouts(Duration::from_secs(10), Duration::from_secs(10))?;
+    if metrics {
+        print!("{}", client.metrics()?);
+        return Ok(());
+    }
     let h = client.health()?;
     println!("health of {addr}:");
-    for (name, v) in [
-        ("submitted", h.submitted),
-        ("completed", h.completed),
-        ("rejected_busy", h.rejected_busy),
-        ("errored", h.errored),
-        ("timeouts", h.timeouts),
-        ("expired", h.expired),
-        ("quarantine_rejected", h.quarantine_rejected),
-        ("malformed", h.malformed),
-        ("slow_clients", h.slow_clients),
-        ("conns_accepted", h.conns_accepted),
-        ("conns_rejected", h.conns_rejected),
-        ("panics", h.panics),
-        ("queue_depth", h.queue_depth),
-        ("max_queue_depth", h.max_queue_depth),
-    ] {
-        println!("  {name:<20} {v}");
+    for field in HEALTH_FIELDS {
+        println!("  {:<20} {}", field.name, (field.get)(&h));
     }
     if h.quarantined.is_empty() {
         println!("  quarantined          (none)");
@@ -596,6 +599,113 @@ fn cmd_stats(args: &[String]) -> Result<()> {
         for q in &h.quarantined {
             println!("  quarantined          {} ({} strike(s))", q.model, q.strikes);
         }
+    }
+    Ok(())
+}
+
+/// `profile [NET]`: bind one serving session, run it once to warm the
+/// buffer pool, then run one profiled request (kernel histograms armed)
+/// on a single worker and print the per-layer breakdown — wall time,
+/// share of end-to-end latency, kernel tier, effective GOP/s.
+/// `--trace-out PATH` additionally writes the timeline as
+/// chrome://tracing JSON.
+fn cmd_profile(args: &[String]) -> Result<()> {
+    use gconv_chain::exec::bench::input_spec;
+    use gconv_chain::exec::serve::Session;
+    use gconv_chain::exec::{KernelTier, Tensor};
+    use gconv_chain::networks::mobilenet_block;
+    use gconv_chain::obs::TraceEvent;
+
+    let mut args = args.to_vec();
+    let fuse = gconv_chain::args::take_flag(&mut args, "--fuse");
+    let trace_out = gconv_chain::args::take_required_string(&mut args, "--trace-out")
+        .map_err(|e| anyhow::anyhow!("{e} (a path for the chrome://tracing JSON)"))?;
+    let model = take_model(&mut args)?;
+    let net = match (model, args.first().cloned()) {
+        (Some(net), _) => net,
+        (None, None) => mobilenet_block(8, 16, 14),
+        (None, Some(code)) => {
+            args.remove(0);
+            resolve(&code)?
+        }
+    };
+    if let Some(extra) = args.first() {
+        anyhow::bail!("unexpected argument {extra:?} (profile takes NET and flags only)");
+    }
+    let mut chain = lower_network(&net, Mode::Inference);
+    if fuse {
+        let stats = fuse_executable(&mut chain);
+        println!(
+            "executable operation fusion: {} → {} entries (-{:.0}%)",
+            stats.before,
+            stats.after,
+            stats.length_reduction() * 100.0
+        );
+    }
+    let (input_name, dims) = input_spec(&net)?;
+    let x = Tensor::rand(&dims, 0x9_0F11E, 1.0);
+    // One worker, so per-entry wall times add up to the end-to-end
+    // latency instead of overlapping across rayon workers; the timed
+    // run profiles a warmed session (pool filled, weights prepacked).
+    let (report, tiers) = gconv_chain::exec::with_threads(1, || -> Result<_> {
+        let mut session = Session::builder(chain).input(&input_name, x).build()?;
+        let warm = session.run()?;
+        session.recycle(warm);
+        let _guard = gconv_chain::obs::profile();
+        Ok((session.run()?, session.tiers()))
+    })??;
+
+    let tier_name = |t: Option<KernelTier>| match t {
+        Some(KernelTier::Gemm) => "gemm",
+        Some(KernelTier::Odometer) => "odometer",
+        Some(KernelTier::Naive) => "naive",
+        None => "special",
+    };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    let mut ts_us = 0.0;
+    let mut covered = 0.0;
+    for e in &report.entries {
+        let tier = tier_name(tiers.get(e.index).copied().flatten());
+        let share = if report.total_s > 0.0 { 100.0 * e.seconds / report.total_s } else { 0.0 };
+        let gops = if e.seconds > 0.0 { e.work as f64 / e.seconds / 1e9 } else { 0.0 };
+        covered += e.seconds;
+        rows.push(vec![
+            e.index.to_string(),
+            e.name.clone(),
+            tier.to_string(),
+            format!("{:.3}", e.seconds * 1e3),
+            format!("{share:.1}"),
+            format!("{gops:.2}"),
+        ]);
+        events.push(TraceEvent {
+            name: e.name.clone(),
+            cat: tier.to_string(),
+            ts_us,
+            dur_us: e.seconds * 1e6,
+            tid: 0,
+            args: vec![
+                ("work".to_string(), e.work.to_string()),
+                ("gops".to_string(), format!("{gops:.2}")),
+            ],
+        });
+        ts_us += e.seconds * 1e6;
+    }
+    print_table(
+        &format!("{} per-layer profile (1 thread, warmed session)", net.name),
+        &["#", "entry", "tier", "ms", "%", "GOP/s"],
+        &rows,
+    );
+    let coverage = if report.total_s > 0.0 { 100.0 * covered / report.total_s } else { 0.0 };
+    println!(
+        "total {:.3} ms end-to-end; per-entry sum {:.3} ms ({coverage:.1}% coverage)",
+        report.total_s * 1e3,
+        covered * 1e3
+    );
+    if let Some(path) = trace_out {
+        let json = gconv_chain::obs::export::trace_json(&events);
+        std::fs::write(&path, json).with_context(|| format!("writing trace to {path}"))?;
+        println!("wrote chrome://tracing JSON ({} event(s)) to {path}", events.len());
     }
     Ok(())
 }

@@ -1,0 +1,165 @@
+//! Export surfaces: Prometheus-style text exposition and
+//! chrome://tracing JSON.
+//!
+//! Both renderers are pure functions over snapshots — no registry
+//! locks are held while formatting, and the wire layer can cap the
+//! exposition with [`truncate_text`] without re-rendering.
+
+use super::registry::{snapshot_name, MetricSnapshot};
+use super::span::TraceEvent;
+
+/// Render metric snapshots in the Prometheus text format. Counters and
+/// gauges emit `# TYPE` + one sample line; histograms emit the summary
+/// form (`{quantile="0.5"}`, `{quantile="0.99"}`, `_sum`, `_count`)
+/// with nanosecond-quantized quantiles.
+pub fn render_text(snapshots: &[MetricSnapshot]) -> String {
+    let mut out = String::new();
+    for s in snapshots {
+        let name = snapshot_name(s);
+        match s {
+            MetricSnapshot::Counter { value, .. } => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+            }
+            MetricSnapshot::Gauge { value, .. } => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+            }
+            MetricSnapshot::Hist { count, sum, p50, p99, .. } => {
+                out.push_str(&format!(
+                    "# TYPE {name} summary\n\
+                     {name}{{quantile=\"0.5\"}} {p50}\n\
+                     {name}{{quantile=\"0.99\"}} {p99}\n\
+                     {name}_sum {sum}\n\
+                     {name}_count {count}\n"
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Cap an exposition at `max_bytes`, cutting at a line boundary so the
+/// result stays parseable (the wire layer applies the metrics-frame
+/// cap with this before framing).
+pub fn truncate_text(text: &str, max_bytes: usize) -> &str {
+    if text.len() <= max_bytes {
+        return text;
+    }
+    match text[..max_bytes].rfind('\n') {
+        Some(cut) => &text[..=cut],
+        None => "",
+    }
+}
+
+/// Pull one sample value out of an exposition: the `u64` on the line
+/// whose first token is exactly `name`. Tests and smoke scripts use
+/// this instead of a real Prometheus parser.
+pub fn scrape(text: &str, name: &str) -> Option<u64> {
+    text.lines().find_map(|line| {
+        let mut toks = line.split_whitespace();
+        if toks.next() != Some(name) {
+            return None;
+        }
+        toks.next().and_then(|v| v.parse().ok())
+    })
+}
+
+/// Render trace events as chrome://tracing JSON (the
+/// `{"traceEvents": [...]}` object form, complete `"ph": "X"` events)
+/// — openable directly in chrome://tracing or Perfetto.
+pub fn trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{:.3},\"dur\":{:.3},\"args\":{{",
+            esc(&e.name),
+            esc(&e.cat),
+            e.tid,
+            e.ts_us,
+            e.dur_us
+        ));
+        for (j, (k, v)) in e.args.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":\"{}\"", esc(k), esc(v)));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    #[test]
+    fn exposition_renders_all_three_kinds_and_scrapes_back() {
+        let reg = Registry::new();
+        reg.counter("gconv_reqs").add(6);
+        reg.gauge("gconv_depth").set(2);
+        let h = reg.hist("gconv_lat_ns");
+        h.record(1000);
+        h.record(3000);
+        let text = reg.render_text();
+        assert!(text.contains("# TYPE gconv_reqs counter\n"), "{text}");
+        assert!(text.contains("# TYPE gconv_depth gauge\n"), "{text}");
+        assert!(text.contains("# TYPE gconv_lat_ns summary\n"), "{text}");
+        assert_eq!(scrape(&text, "gconv_reqs"), Some(6));
+        assert_eq!(scrape(&text, "gconv_depth"), Some(2));
+        assert_eq!(scrape(&text, "gconv_lat_ns_count"), Some(2));
+        assert_eq!(scrape(&text, "gconv_lat_ns_sum"), Some(4000));
+        assert_eq!(
+            scrape(&text, "gconv_lat_ns{quantile=\"0.5\"}"),
+            Some(crate::obs::hist::quantize(1000))
+        );
+        assert_eq!(scrape(&text, "gconv_missing"), None);
+    }
+
+    #[test]
+    fn truncation_cuts_at_line_boundaries() {
+        let text = "aaa 1\nbbb 2\nccc 3\n";
+        assert_eq!(truncate_text(text, text.len()), text);
+        let cut = truncate_text(text, 13);
+        assert_eq!(cut, "aaa 1\nbbb 2\n");
+        assert_eq!(truncate_text(text, 3), "");
+    }
+
+    #[test]
+    fn trace_json_is_well_formed_and_escaped() {
+        let events = vec![TraceEvent {
+            name: "conv\"1".into(),
+            cat: "gemm".into(),
+            ts_us: 0.0,
+            dur_us: 12.5,
+            tid: 0,
+            args: vec![("tier".into(), "Gemm".into()), ("gops".into(), "3.2".into())],
+        }];
+        let json = trace_json(&events);
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.contains("\\\"1"), "quote must be escaped: {json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"dur\":12.500"), "{json}");
+        assert!(json.trim_end().ends_with("\"displayTimeUnit\":\"ms\"}"), "{json}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Fixed-bucket log-scale latency histogram with nearest-rank
+//! percentile extraction.
+//!
+//! Values (nanoseconds by convention) are quantized to power-of-two
+//! buckets: bucket `i` holds the values whose bit length is `i` — the
+//! range `[2^(i-1), 2^i)` — with bucket 0 reserved for zero and the top
+//! bucket absorbing everything from `2^63` up (recording *saturates*
+//! into it; nothing is ever dropped). Recording is one relaxed
+//! `fetch_add` per atomic — no locks, no allocation — so it is safe on
+//! the kernel hot path once profiling is armed.
+//!
+//! Percentiles use the same nearest-rank convention as
+//! `exec::bench::percentile` (rank = `count * p / 100`, clamped to the
+//! last sample; 0 when empty): the reported value is the *upper bound*
+//! of the bucket holding the nearest-rank sample. Rank selection is
+//! exact — never interpolated — and the value is exact up to the
+//! log-bucket quantization, which [`quantize`] exposes so tests can pin
+//! the histogram against a sorted-vector oracle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One bucket per possible bit length of a `u64` (1..=64), plus bucket
+/// 0 for the value zero.
+pub const NUM_BUCKETS: usize = 65;
+
+/// The quantization applied by [`Hist::record`]: the upper bound of
+/// the bucket that `v` lands in. Monotonic, so the nearest-rank sample
+/// of the quantized multiset is the quantization of the nearest-rank
+/// raw sample — the property the oracle tests lean on.
+pub fn quantize(v: u64) -> u64 {
+    bound(index(v))
+}
+
+/// Bucket index of `v`: its bit length (0 for zero, 64 for the top).
+fn index(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i`.
+fn bound(i: usize) -> u64 {
+    if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Log-scale latency histogram. All state is `AtomicU64`; construction
+/// is the only allocation-ish moment (it is `const`-free but heap-free),
+/// and every operation after that is wait-free.
+pub struct Hist {
+    counts: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation: three relaxed `fetch_add`s, zero
+    /// allocation, no lock. Values past the top bucket bound saturate
+    /// into the top bucket.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all raw (unquantized) observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100): the bucket upper bound
+    /// of sample number `count * p / 100` (clamped to the last sample),
+    /// or 0 with no observations — the convention of
+    /// `exec::bench::percentile`.
+    pub fn percentile(&self, p: u64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total as u128 * p as u128 / 100) as u64).min(total - 1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen = seen.saturating_add(c.load(Ordering::Relaxed));
+            if seen > rank {
+                return bound(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_quantize_to_power_of_two_upper_bounds() {
+        assert_eq!(quantize(0), 0);
+        assert_eq!(quantize(1), 1);
+        assert_eq!(quantize(2), 3);
+        assert_eq!(quantize(3), 3);
+        assert_eq!(quantize(4), 7);
+        assert_eq!(quantize(7), 7);
+        assert_eq!(quantize(8), 15);
+        assert_eq!(quantize(1023), 1023);
+        assert_eq!(quantize(1024), 2047);
+        assert_eq!(quantize((1 << 62) + 1), (1 << 63) - 1);
+    }
+
+    #[test]
+    fn top_bucket_saturates_instead_of_dropping() {
+        let h = Hist::new();
+        h.record(1 << 63);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(50), u64::MAX);
+        assert_eq!(h.percentile(99), u64::MAX);
+        assert_eq!(quantize(1 << 63), u64::MAX);
+        assert_eq!(quantize(u64::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero_everywhere() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.percentile(50), 0);
+        assert_eq!(h.percentile(99), 0);
+    }
+
+    #[test]
+    fn single_sample_is_its_own_p50_and_p99() {
+        let h = Hist::new();
+        h.record(300);
+        assert_eq!(h.percentile(50), quantize(300));
+        assert_eq!(h.percentile(99), quantize(300));
+        assert_eq!(h.sum(), 300);
+    }
+
+    /// The acceptance oracle: on random samples, nearest-rank p50/p99
+    /// out of the histogram must equal the quantization of the
+    /// nearest-rank element of the sorted raw samples — the exact
+    /// convention `exec::bench::percentile` uses, bucket-quantized.
+    #[test]
+    fn percentiles_match_a_sorted_vec_oracle_on_random_samples() {
+        let mut rng = crate::prop::Rng::new(0x0B5_CAFE);
+        for round in 0..8u64 {
+            let n = 10 + (rng.f64() * 500.0) as usize;
+            let h = Hist::new();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Span many decades so every bucket scale gets hit.
+                let v = (rng.f64() * rng.f64() * 1.0e12) as u64;
+                samples.push(v);
+                h.record(v);
+            }
+            samples.sort_unstable();
+            for p in [0u64, 50, 90, 99, 100] {
+                let rank = ((n as u64 * p / 100) as usize).min(n - 1);
+                let expect = quantize(samples[rank]);
+                assert_eq!(
+                    h.percentile(p),
+                    expect,
+                    "round {round}: p{p} over {n} samples diverged from the oracle"
+                );
+            }
+            assert_eq!(h.count(), n as u64);
+            assert_eq!(h.sum(), samples.iter().sum::<u64>());
+        }
+    }
+}

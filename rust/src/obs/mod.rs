@@ -1,0 +1,101 @@
+//! Observability spine: metrics registry, latency histograms, span
+//! stamps, and export surfaces (Prometheus text, chrome://tracing
+//! JSON).
+//!
+//! Design rules, in the style of [`crate::exec::faults`]:
+//!
+//! * **Lock-light** — registration takes a mutex once; every handle
+//!   after that is a relaxed atomic with zero allocation.
+//! * **Disarmed by default** — the per-entry kernel timing hooks in
+//!   `exec::interp::eval_bound` cost exactly one relaxed load
+//!   ([`profiling`]) until a [`profile`] guard arms them; serving
+//!   output is bit-identical armed or disarmed.
+//! * **Monotonic spans** — all span math uses `Instant`
+//!   ([`span::Span`]); `SystemTime` is denied by `ci/lint-denylist.sh`.
+//!
+//! Layering: `obs` is a leaf — it depends only on `std`. The exec
+//! engine mirrors kernel/session/pool/engine metrics into the
+//! process-[`global`] registry; the TCP server owns one registry per
+//! listener (`server::Counters`) so concurrent servers never
+//! co-mingle, and answers wire kind-6 requests with a capped kind-7
+//! Prometheus exposition.
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+pub use hist::Hist;
+pub use registry::{global, Counter, Gauge, MetricSnapshot, Registry};
+pub use span::{Span, TraceEvent};
+
+/// Get-or-register a counter in the process-global registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    global().counter(name)
+}
+
+/// Get-or-register a gauge in the process-global registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    global().gauge(name)
+}
+
+/// Get-or-register a histogram in the process-global registry.
+pub fn hist(name: &str) -> Arc<Hist> {
+    global().hist(name)
+}
+
+static PROFILING: AtomicBool = AtomicBool::new(false);
+
+fn arm_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Whether per-entry kernel profiling is armed. This single relaxed
+/// load is the *entire* disarmed-path cost of the `eval_bound` hooks.
+#[inline]
+pub fn profiling() -> bool {
+    PROFILING.load(Ordering::Relaxed)
+}
+
+/// RAII guard returned by [`profile`]; dropping it disarms the
+/// per-entry kernel timing hooks.
+pub struct ProfileGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ProfileGuard {
+    fn drop(&mut self) {
+        PROFILING.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Arm per-entry kernel profiling for the lifetime of the returned
+/// guard. The guard holds an exclusive process-wide arm lock (the
+/// discipline of `faults::FaultPlan::arm`), so concurrent tests that
+/// arm profiling serialize instead of trampling each other.
+pub fn profile() -> ProfileGuard {
+    let lock = arm_lock().lock().unwrap_or_else(|e| e.into_inner());
+    PROFILING.store(true, Ordering::SeqCst);
+    ProfileGuard { _lock: lock }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiling_is_disarmed_by_default_and_guard_scoped() {
+        let guard = profile();
+        assert!(profiling());
+        drop(guard);
+        // Whenever the arm lock is free, profiling is disarmed (the
+        // guard stores `false` before releasing the lock) — so holding
+        // the lock makes this assertion race-free against other tests.
+        let _lock = arm_lock().lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!profiling());
+    }
+}

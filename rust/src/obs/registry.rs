@@ -1,0 +1,289 @@
+//! Lock-light metric registry: named monotonic counters, gauges, and
+//! latency histograms.
+//!
+//! Registration (a name lookup under one mutex) may allocate; the
+//! handles it returns are `Arc`s whose operations are single relaxed
+//! atomic ops with **zero allocation and zero locking** — the registry
+//! is only locked again to take a snapshot. Two deployment shapes:
+//!
+//! * [`global()`] — one process-wide registry carrying engine-side
+//!   metrics (kernel/session/pool/engine). The `profile` CLI and the
+//!   bench harness read it directly.
+//! * Instance registries ([`Registry::new`]) — the TCP server gives
+//!   each listener its own registry (inside `server::Counters`) so
+//!   concurrent servers (tests, multi-tenant processes) never
+//!   co-mingle counts, and a health snapshot equals its registry by
+//!   construction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::hist::Hist;
+
+/// Monotonic counter. `inc`/`add` are single relaxed `fetch_add`s.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge: a value that moves both ways (queue depths, high-water
+/// marks). `dec` saturates at zero rather than wrapping.
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment and return the post-increment value (race-exact, for
+    /// high-water tracking: `max.maximize(depth.inc_and_get())`).
+    #[inline]
+    pub fn inc_and_get(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.sub(1);
+    }
+
+    /// Subtract `n`, saturating at zero rather than wrapping.
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(n)));
+    }
+
+    /// Ratchet the gauge up to `v` if `v` is larger (high-water marks).
+    #[inline]
+    pub fn maximize(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+/// A point-in-time reading of one metric, for rendering and tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MetricSnapshot {
+    Counter { name: String, value: u64 },
+    Gauge { name: String, value: u64 },
+    Hist { name: String, count: u64, sum: u64, p50: u64, p99: u64 },
+}
+
+/// Named metric store. Hot-path cost lives entirely in the handles;
+/// the registry itself is only touched at registration and snapshot
+/// time.
+pub struct Registry {
+    entries: Mutex<Vec<(String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Get-or-register the counter `name`. If `name` is already
+    /// registered as a *different* kind (a programming error), a
+    /// detached handle is returned so the caller still never panics
+    /// and the rendered output stays unambiguous.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut entries = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((_, metric)) = entries.iter().find(|(n, _)| n == name) {
+            if let Metric::Counter(c) = metric {
+                return Arc::clone(c);
+            }
+            return Arc::new(Counter::new());
+        }
+        let c = Arc::new(Counter::new());
+        entries.push((name.to_string(), Metric::Counter(Arc::clone(&c))));
+        c
+    }
+
+    /// Get-or-register the gauge `name` (same kind-mismatch rule as
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut entries = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((_, metric)) = entries.iter().find(|(n, _)| n == name) {
+            if let Metric::Gauge(g) = metric {
+                return Arc::clone(g);
+            }
+            return Arc::new(Gauge::new());
+        }
+        let g = Arc::new(Gauge::new());
+        entries.push((name.to_string(), Metric::Gauge(Arc::clone(&g))));
+        g
+    }
+
+    /// Get-or-register the histogram `name` (same kind-mismatch rule
+    /// as [`Registry::counter`]).
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut entries = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((_, metric)) = entries.iter().find(|(n, _)| n == name) {
+            if let Metric::Hist(h) = metric {
+                return Arc::clone(h);
+            }
+            return Arc::new(Hist::new());
+        }
+        let h = Arc::new(Hist::new());
+        entries.push((name.to_string(), Metric::Hist(Arc::clone(&h))));
+        h
+    }
+
+    /// Current value of the counter or gauge `name`, if registered.
+    pub fn value(&self, name: &str) -> Option<u64> {
+        let entries = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        entries.iter().find(|(n, _)| n == name).and_then(|(_, m)| match m {
+            Metric::Counter(c) => Some(c.get()),
+            Metric::Gauge(g) => Some(g.get()),
+            Metric::Hist(_) => None,
+        })
+    }
+
+    /// Point-in-time readings of every registered metric, sorted by
+    /// name for deterministic rendering.
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        let entries = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<MetricSnapshot> = entries
+            .iter()
+            .map(|(name, metric)| match metric {
+                Metric::Counter(c) => {
+                    MetricSnapshot::Counter { name: name.clone(), value: c.get() }
+                }
+                Metric::Gauge(g) => MetricSnapshot::Gauge { name: name.clone(), value: g.get() },
+                Metric::Hist(h) => MetricSnapshot::Hist {
+                    name: name.clone(),
+                    count: h.count(),
+                    sum: h.sum(),
+                    p50: h.percentile(50),
+                    p99: h.percentile(99),
+                },
+            })
+            .collect();
+        out.sort_by(|a, b| snapshot_name(a).cmp(snapshot_name(b)));
+        out
+    }
+
+    /// Prometheus-style text exposition of [`Registry::snapshot`].
+    pub fn render_text(&self) -> String {
+        super::export::render_text(&self.snapshot())
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub(crate) fn snapshot_name(s: &MetricSnapshot) -> &str {
+    match s {
+        MetricSnapshot::Counter { name, .. }
+        | MetricSnapshot::Gauge { name, .. }
+        | MetricSnapshot::Hist { name, .. } => name,
+    }
+}
+
+/// The process-global registry carrying engine-side metrics.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_and_handles_share_storage() {
+        let reg = Registry::new();
+        let a = reg.counter("reqs");
+        let b = reg.counter("reqs");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.value("reqs"), Some(3));
+        assert_eq!(a.get(), 3);
+    }
+
+    #[test]
+    fn kind_mismatch_returns_a_detached_handle_without_panicking() {
+        let reg = Registry::new();
+        let c = reg.counter("x");
+        c.inc();
+        let g = reg.gauge("x");
+        g.set(99);
+        // The registered metric keeps its original kind and value.
+        assert_eq!(reg.value("x"), Some(1));
+        assert_eq!(reg.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn gauges_move_both_ways_and_saturate_at_zero() {
+        let reg = Registry::new();
+        let g = reg.gauge("depth");
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0, "dec must saturate, not wrap");
+        g.maximize(7);
+        g.maximize(3);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_covers_all_kinds() {
+        let reg = Registry::new();
+        reg.hist("z_lat").record(100);
+        reg.counter("a_reqs").inc();
+        reg.gauge("m_depth").set(4);
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.iter().map(snapshot_name).collect();
+        assert_eq!(names, ["a_reqs", "m_depth", "z_lat"]);
+        match &snap[2] {
+            MetricSnapshot::Hist { count, sum, p50, .. } => {
+                assert_eq!((*count, *sum), (1, 100));
+                assert_eq!(*p50, crate::obs::hist::quantize(100));
+            }
+            other => panic!("expected a hist snapshot, got {other:?}"),
+        }
+    }
+}

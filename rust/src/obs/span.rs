@@ -1,0 +1,63 @@
+//! Monotonic span stamps and chrome://tracing trace events.
+//!
+//! All span math is `Instant`-based (monotonic) — `SystemTime` is
+//! banned from this module by `ci/lint-denylist.sh` because wall-clock
+//! steps (NTP, suspend) would corrupt latency deltas.
+
+use std::time::{Duration, Instant};
+
+/// A started span: one monotonic stamp, measured on demand. The
+/// typical shape is `let s = Span::start(); ...; hist.record(s.elapsed_ns())`.
+pub struct Span(Instant);
+
+impl Span {
+    #[inline]
+    pub fn start() -> Span {
+        Span(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    /// Elapsed nanoseconds, saturated into `u64` (584 years — the cast
+    /// can only truncate on a clock that has left the building).
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        u64::try_from(self.0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+/// One complete event (`"ph": "X"`) in the chrome://tracing JSON
+/// format — `export::trace_json` renders a slice of these into a file
+/// chrome://tracing / Perfetto can open directly.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event label (layer name, stage name).
+    pub name: String,
+    /// Category — groups related events in the trace UI (e.g. a
+    /// kernel tier or a pipeline stage).
+    pub cat: String,
+    /// Start offset in microseconds from the beginning of the trace.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Track (thread lane) the event renders on.
+    pub tid: u64,
+    /// Free-form key/value annotations (tier, gops, phase, ...).
+    pub args: Vec<(String, String)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_measure_forward_time() {
+        let s = Span::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let ns = s.elapsed_ns();
+        assert!(ns >= 2_000_000, "span measured {ns} ns for a 2 ms sleep");
+        assert!(s.elapsed_ns() >= ns, "spans are monotonic");
+    }
+}

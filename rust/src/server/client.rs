@@ -7,7 +7,8 @@
 //! queue is full right now", so the client backs off with seeded,
 //! jittered exponential delays ([`Backoff`]) and resends, and reports
 //! how many rejections it absorbed. [`Client::health`] fetches the
-//! server's live counter/quarantine snapshot.
+//! server's live counter/quarantine snapshot; [`Client::metrics`]
+//! fetches the Prometheus-style text exposition (wire kinds 6/7).
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -18,7 +19,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::prop::Rng;
 
 use super::protocol::{
-    encode_health_request, read_response, write_request, ErrorCode, HealthSnapshot, Response,
+    encode_health_request, encode_metrics_request, read_response, write_request, ErrorCode,
+    HealthSnapshot, Response,
 };
 
 /// Seeded equal-jitter exponential backoff schedule.
@@ -128,7 +130,9 @@ impl Client {
             Response::Error { code, message } => {
                 bail!("server error {}: {message}", code.name())
             }
-            Response::Health(_) => bail!("unexpected health frame answering an inference"),
+            Response::Health(_) | Response::Metrics(_) => {
+                bail!("unexpected status frame answering an inference")
+            }
         }
     }
 
@@ -143,7 +147,23 @@ impl Client {
             Response::Error { code, message } => {
                 bail!("server error {}: {message}", code.name())
             }
-            Response::Output { .. } => bail!("unexpected output frame answering a health probe"),
+            other => bail!("unexpected {} frame answering a health probe", frame_name(&other)),
+        }
+    }
+
+    /// Fetch the server's metrics as Prometheus-style text (counters,
+    /// gauges, and stage-latency histogram quantiles).
+    pub fn metrics(&mut self) -> Result<String> {
+        self.stream
+            .write_all(&encode_metrics_request())
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| anyhow!("sending metrics request: {e}"))?;
+        match read_response(&mut self.stream).map_err(|e| anyhow!("reading response: {e}"))? {
+            Response::Metrics(text) => Ok(text),
+            Response::Error { code, message } => {
+                bail!("server error {}: {message}", code.name())
+            }
+            other => bail!("unexpected {} frame answering a metrics probe", frame_name(&other)),
         }
     }
 
@@ -177,9 +197,20 @@ impl Client {
                 Response::Error { code, message } => {
                     bail!("server error {}: {message}", code.name())
                 }
-                Response::Health(_) => bail!("unexpected health frame answering an inference"),
+                Response::Health(_) | Response::Metrics(_) => {
+                    bail!("unexpected status frame answering an inference")
+                }
             }
         }
+    }
+}
+
+fn frame_name(resp: &Response) -> &'static str {
+    match resp {
+        Response::Output { .. } => "output",
+        Response::Error { .. } => "error",
+        Response::Health(_) => "health",
+        Response::Metrics(_) => "metrics",
     }
 }
 

@@ -56,8 +56,9 @@ enum ReadStop {
 enum ReadOutcome {
     /// Poll tick expired with no bytes — re-check shutdown and retry.
     Idle,
-    /// One complete frame body.
-    Frame(Vec<u8>),
+    /// One complete frame body, plus the read-stage span (first byte to
+    /// full frame) in nanoseconds for the `gconv_read_ns` histogram.
+    Frame(Vec<u8>, u64),
 }
 
 /// Read exactly `buf.len()` bytes with an absolute deadline, using the
@@ -101,12 +102,15 @@ fn poll_frame(stream: &mut TcpStream, cfg: &ConnConfig) -> Result<ReadOutcome, R
         }
         Err(_) => return Err(ReadStop::Io),
     }
+    // The read span starts at the first byte so idle poll ticks never
+    // pollute the histogram.
+    let span = crate::obs::Span::start();
     let deadline = Instant::now() + cfg.frame_deadline;
     read_exact_deadline(stream, &mut header[1..], deadline)?;
     let body_len = parse_frame_header(&header).map_err(ReadStop::Proto)?;
     let mut body = vec![0u8; body_len as usize];
     read_exact_deadline(stream, &mut body, deadline)?;
-    Ok(ReadOutcome::Frame(body))
+    Ok(ReadOutcome::Frame(body, span.elapsed_ns()))
 }
 
 fn send_error(stream: &mut TcpStream, code: ErrorCode, message: String) -> bool {
@@ -138,10 +142,13 @@ pub fn handle_conn(
         }
         let body = match poll_frame(&mut stream, &cfg) {
             Ok(ReadOutcome::Idle) => continue,
-            Ok(ReadOutcome::Frame(body)) => body,
+            Ok(ReadOutcome::Frame(body, read_ns)) => {
+                counters.read_ns.record(read_ns);
+                body
+            }
             Err(ReadStop::Disconnected) => break,
             Err(ReadStop::SlowClient) => {
-                counters.slow_clients.fetch_add(1, Ordering::Relaxed);
+                counters.slow_clients.inc();
                 let _ = send_error(
                     &mut stream,
                     ErrorCode::Timeout,
@@ -152,7 +159,7 @@ pub fn handle_conn(
             Err(ReadStop::Proto(e)) => {
                 // Framing is unrecoverable after a bad header: answer
                 // once, then close.
-                counters.malformed.fetch_add(1, Ordering::Relaxed);
+                counters.malformed.inc();
                 let _ = send_error(&mut stream, e.code, e.msg);
                 break;
             }
@@ -177,8 +184,18 @@ pub fn handle_conn(
                 }
                 continue;
             }
+            Ok(Incoming::Metrics) => {
+                // Answered inline like health frames: metrics requests
+                // never enter the queue and never consume a request
+                // budget slot.
+                let text = counters.metrics_text();
+                if write_response(&mut stream, &Response::Metrics(text)).is_err() {
+                    break;
+                }
+                continue;
+            }
             Err(e) => {
-                counters.malformed.fetch_add(1, Ordering::Relaxed);
+                counters.malformed.inc();
                 if send_error(&mut stream, e.code, e.msg) {
                     continue;
                 }
@@ -191,7 +208,7 @@ pub fn handle_conn(
                 Ok(Ok(data)) => Response::Output { dims: vec![data.len()], data },
                 Ok(Err((code, message))) => Response::Error { code, message },
                 Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                    counters.timeouts.inc();
                     Response::Error {
                         code: ErrorCode::Timeout,
                         message: "request timed out waiting for the engine".into(),
@@ -199,9 +216,11 @@ pub fn handle_conn(
                 }
             },
         };
+        let write_span = crate::obs::Span::start();
         if write_response(&mut stream, &response).is_err() {
             break;
         }
+        counters.write_ns.record(write_span.elapsed_ns());
     }
     let _ = stream.shutdown(Shutdown::Both);
 }

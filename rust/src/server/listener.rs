@@ -129,24 +129,31 @@ impl ServerHandle {
         self.join()
     }
 
+    /// The live counter set (registry-backed), for reading stage
+    /// latency histograms mid-run — used by the serve bench's profile
+    /// block before shutdown.
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
     fn join(self) -> Result<ServerReport> {
         self.accept.join().map_err(|_| anyhow!("server accept thread panicked"))?;
         let engine = self.driver.join().map_err(|_| anyhow!("engine driver thread panicked"))?;
         let c = &self.counters;
         Ok(ServerReport {
-            served: c.completed.load(Ordering::Relaxed),
-            rejected_busy: c.rejected_busy.load(Ordering::Relaxed),
-            errored: c.errored.load(Ordering::Relaxed),
-            timeouts: c.timeouts.load(Ordering::Relaxed),
-            expired: c.expired.load(Ordering::Relaxed),
-            quarantine_rejected: c.quarantine_rejected.load(Ordering::Relaxed),
-            panics: c.panics.load(Ordering::Relaxed),
+            served: c.completed.get(),
+            rejected_busy: c.rejected_busy.get(),
+            errored: c.errored.get(),
+            timeouts: c.timeouts.get(),
+            expired: c.expired.get(),
+            quarantine_rejected: c.quarantine_rejected.get(),
+            panics: c.panics.get(),
             quarantined: self.quarantine.snapshot(),
-            malformed: c.malformed.load(Ordering::Relaxed),
-            slow_clients: c.slow_clients.load(Ordering::Relaxed),
-            conns_accepted: c.conns_accepted.load(Ordering::Relaxed),
-            conns_rejected: c.conns_rejected.load(Ordering::Relaxed),
-            max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed),
+            malformed: c.malformed.get(),
+            slow_clients: c.slow_clients.get(),
+            conns_accepted: c.conns_accepted.get(),
+            conns_rejected: c.conns_rejected.get(),
+            max_queue_depth: c.max_queue_depth.get() as usize,
             engine: engine.stats(),
         })
     }
@@ -209,7 +216,7 @@ fn accept_loop(
             break;
         }
         if let Some(cap) = config.max_requests {
-            if counters.completed.load(Ordering::Relaxed) >= cap {
+            if counters.completed.get() >= cap {
                 shutdown.store(true, Ordering::SeqCst);
                 break;
             }
@@ -218,11 +225,11 @@ fn accept_loop(
             Ok((stream, peer)) => {
                 conns.retain(|_, h| !h.is_finished());
                 if conns.len() >= config.max_conns {
-                    counters.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    counters.conns_rejected.inc();
                     refuse(stream, config);
                     continue;
                 }
-                counters.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                counters.conns_accepted.inc();
                 let id = next_conn;
                 next_conn += 1;
                 let sched = sched.clone();
@@ -237,7 +244,7 @@ fn accept_loop(
                     Ok(handle) => {
                         conns.insert(id, handle);
                     }
-                    Err(_) => counters.conns_rejected.fetch_add(1, Ordering::Relaxed),
+                    Err(_) => counters.conns_rejected.inc(),
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {

@@ -24,8 +24,17 @@
 //! * `listener` — accept loop with a connection cap and graceful
 //!   shutdown that drains in-flight micro-batches before closing.
 //! * [`client`] — blocking client with seeded jittered-exponential
-//!   `BUSY`-retry discipline and a `health` probe, used by the CLI
-//!   `client`/`stats` subcommands, the load benchmark, and tests.
+//!   `BUSY`-retry discipline and `health`/`metrics` probes, used by
+//!   the CLI `client`/`stats` subcommands, the load benchmark, and
+//!   tests.
+//!
+//! Observability: `server::Counters` is backed by a per-listener
+//! [`crate::obs::Registry`] (concurrent servers never co-mingle
+//! counts) plus per-request stage histograms (read / queue-wait /
+//! eval / write). A kind-6 metrics request is answered inline with a
+//! kind-7 Prometheus-style text frame — the listener's registry
+//! concatenated with the process-global engine-side registry — without
+//! consuming the request budget, exactly like health frames.
 //!
 //! Responses are bit-identical to in-process `Engine::submit`/`drain`
 //! for the same inputs: the server adds routing, never arithmetic.
@@ -42,5 +51,7 @@ mod scheduler;
 
 pub use client::{Backoff, Client};
 pub use listener::{serve, ServerConfig, ServerHandle, ServerReport};
-pub use protocol::{ErrorCode, HealthSnapshot, QuarantinedModel, Request, Response};
+pub use protocol::{
+    ErrorCode, HealthField, HealthSnapshot, QuarantinedModel, Request, Response, HEALTH_FIELDS,
+};
 pub use scheduler::{Counters, Quarantine, SchedulerConfig};

@@ -2,7 +2,7 @@
 //! front.
 //!
 //! Every frame is `MAGIC (4 bytes) ++ body_len (u32 LE) ++ body`, and
-//! every body starts with `version (u16 LE) ++ kind (u8)`. The five
+//! every body starts with `version (u16 LE) ++ kind (u8)`. The seven
 //! kinds:
 //!
 //! | kind | body after the common prefix |
@@ -11,7 +11,9 @@
 //! | output (2) | `ndims: u8`, `dims: ndims × u32`, `payload: ∏dims × f32` |
 //! | error (3) | `code: u16` (see [`ErrorCode`]), `msg_len: u16`, `msg: UTF-8` |
 //! | health request (4) | *(empty)* |
-//! | health (5) | 14 × `u64` counters in [`HealthSnapshot`] field order, `nq: u16`, `nq` × (`strikes: u32`, `name_len: u16`, `name: UTF-8`) |
+//! | health (5) | 14 × `u64` counters in [`HealthSnapshot`] field order (the one [`HEALTH_FIELDS`] table drives both codec directions), `nq: u16`, `nq` × (`strikes: u32`, `name_len: u16`, `name: UTF-8`) |
+//! | metrics request (6) | *(empty)* |
+//! | metrics (7) | `text_len: u32`, `text: UTF-8` — a Prometheus-style exposition, capped at [`MAX_METRICS_TEXT`] |
 //!
 //! All integers and floats are little-endian. The hard caps
 //! ([`MAX_BODY_BYTES`], [`MAX_NAME_LEN`], [`MAX_DIMS`],
@@ -43,12 +45,17 @@ pub const MAX_ERROR_MSG: usize = 256;
 /// Hard cap on the quarantine entries a health frame carries (encoders
 /// truncate, parsers refuse above it).
 pub const MAX_QUARANTINE: usize = 64;
+/// Hard cap on the metrics-frame exposition text (encoders truncate at
+/// a line boundary, parsers refuse above it).
+pub const MAX_METRICS_TEXT: usize = 1 << 16;
 
 const KIND_REQUEST: u8 = 1;
 const KIND_OUTPUT: u8 = 2;
 const KIND_ERROR: u8 = 3;
 const KIND_HEALTH_REQ: u8 = 4;
 const KIND_HEALTH: u8 = 5;
+const KIND_METRICS_REQ: u8 = 6;
+const KIND_METRICS: u8 = 7;
 
 /// Structured error codes of the error-response frame. The numeric
 /// wire value is stable protocol surface; names are for humans.
@@ -248,6 +255,64 @@ pub struct HealthSnapshot {
     pub quarantined: Vec<QuarantinedModel>,
 }
 
+/// One row of [`HEALTH_FIELDS`]: the field's stable name plus shared
+/// read/write accessors.
+pub struct HealthField {
+    /// Stable field name — also the suffix of the `gconv_*` metric the
+    /// obs registry mirrors the counter under.
+    pub name: &'static str,
+    /// Read the field out of a snapshot.
+    pub get: fn(&HealthSnapshot) -> u64,
+    /// Mutable slot of the field in a snapshot (decode side).
+    pub slot: fn(&mut HealthSnapshot) -> &mut u64,
+}
+
+/// The single field-order table both codec directions (and every other
+/// field-by-field consumer: `stats` printing, the registry pinning
+/// test) iterate. Wire order **is** this table's order — reordering a
+/// row changes the protocol in one place instead of silently
+/// corrupting every counter after a hand-matched line.
+pub const HEALTH_FIELDS: [HealthField; 14] = [
+    HealthField { name: "submitted", get: |h| h.submitted, slot: |h| &mut h.submitted },
+    HealthField { name: "completed", get: |h| h.completed, slot: |h| &mut h.completed },
+    HealthField {
+        name: "rejected_busy",
+        get: |h| h.rejected_busy,
+        slot: |h| &mut h.rejected_busy,
+    },
+    HealthField { name: "errored", get: |h| h.errored, slot: |h| &mut h.errored },
+    HealthField { name: "timeouts", get: |h| h.timeouts, slot: |h| &mut h.timeouts },
+    HealthField { name: "expired", get: |h| h.expired, slot: |h| &mut h.expired },
+    HealthField {
+        name: "quarantine_rejected",
+        get: |h| h.quarantine_rejected,
+        slot: |h| &mut h.quarantine_rejected,
+    },
+    HealthField { name: "malformed", get: |h| h.malformed, slot: |h| &mut h.malformed },
+    HealthField {
+        name: "slow_clients",
+        get: |h| h.slow_clients,
+        slot: |h| &mut h.slow_clients,
+    },
+    HealthField {
+        name: "conns_accepted",
+        get: |h| h.conns_accepted,
+        slot: |h| &mut h.conns_accepted,
+    },
+    HealthField {
+        name: "conns_rejected",
+        get: |h| h.conns_rejected,
+        slot: |h| &mut h.conns_rejected,
+    },
+    HealthField { name: "panics", get: |h| h.panics, slot: |h| &mut h.panics },
+    HealthField { name: "queue_depth", get: |h| h.queue_depth, slot: |h| &mut h.queue_depth },
+    HealthField {
+        name: "max_queue_depth",
+        get: |h| h.max_queue_depth,
+        slot: |h| &mut h.max_queue_depth,
+    },
+];
+
 /// A decoded response frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
@@ -269,6 +334,9 @@ pub enum Response {
     },
     /// Counters + quarantine snapshot answering a health request.
     Health(HealthSnapshot),
+    /// Prometheus-style text exposition answering a metrics request
+    /// (truncated to [`MAX_METRICS_TEXT`] on the wire).
+    Metrics(String),
 }
 
 /// A decoded client-to-server frame (see [`parse_incoming`]).
@@ -279,6 +347,10 @@ pub enum Incoming {
     /// A health probe: answer with [`Response::Health`], never through
     /// the scheduler queue.
     Health,
+    /// A metrics probe: answer with [`Response::Metrics`], never
+    /// through the scheduler queue (and never against the request
+    /// budget).
+    Metrics,
 }
 
 // ---------------------------------------------------------------- read
@@ -430,8 +502,13 @@ pub fn parse_incoming(body: &[u8]) -> Result<Incoming, ProtoError> {
             r.done("health request")?;
             Ok(Incoming::Health)
         }
+        KIND_METRICS_REQ => {
+            r.done("metrics request")?;
+            Ok(Incoming::Metrics)
+        }
         other => Err(ProtoError::malformed(format!(
-            "frame kind {other} is not a request (expected {KIND_REQUEST} or {KIND_HEALTH_REQ})"
+            "frame kind {other} is not a request (expected {KIND_REQUEST}, {KIND_HEALTH_REQ}, \
+             or {KIND_METRICS_REQ})"
         ))),
     }
 }
@@ -488,23 +565,8 @@ pub fn parse_response(body: &[u8]) -> Result<Response, ProtoError> {
         }
         KIND_HEALTH => {
             let mut h = HealthSnapshot::default();
-            for (field, slot) in [
-                ("submitted", &mut h.submitted),
-                ("completed", &mut h.completed),
-                ("rejected_busy", &mut h.rejected_busy),
-                ("errored", &mut h.errored),
-                ("timeouts", &mut h.timeouts),
-                ("expired", &mut h.expired),
-                ("quarantine_rejected", &mut h.quarantine_rejected),
-                ("malformed", &mut h.malformed),
-                ("slow_clients", &mut h.slow_clients),
-                ("conns_accepted", &mut h.conns_accepted),
-                ("conns_rejected", &mut h.conns_rejected),
-                ("panics", &mut h.panics),
-                ("queue_depth", &mut h.queue_depth),
-                ("max_queue_depth", &mut h.max_queue_depth),
-            ] {
-                *slot = r.u64(field)?;
+            for field in &HEALTH_FIELDS {
+                *(field.slot)(&mut h) = r.u64(field.name)?;
             }
             let nq = r.u16("quarantine count")? as usize;
             if nq > MAX_QUARANTINE {
@@ -529,9 +591,23 @@ pub fn parse_response(body: &[u8]) -> Result<Response, ProtoError> {
             r.done("health response")?;
             Ok(Response::Health(h))
         }
+        KIND_METRICS => {
+            let text_len = r.u32("text_len")? as usize;
+            if text_len > MAX_METRICS_TEXT {
+                return Err(ProtoError::too_large(format!(
+                    "metrics text of {text_len} bytes exceeds the {MAX_METRICS_TEXT}-byte cap"
+                )));
+            }
+            let text = r.take(text_len, "metrics text")?;
+            let text = std::str::from_utf8(text)
+                .map_err(|_| ProtoError::malformed("metrics text is not UTF-8"))?
+                .to_string();
+            r.done("metrics response")?;
+            Ok(Response::Metrics(text))
+        }
         other => Err(ProtoError::malformed(format!(
-            "frame kind {other} is not a response (expected {KIND_OUTPUT}, {KIND_ERROR}, or \
-             {KIND_HEALTH})"
+            "frame kind {other} is not a response (expected {KIND_OUTPUT}, {KIND_ERROR}, \
+             {KIND_HEALTH}, or {KIND_METRICS})"
         ))),
     }
 }
@@ -637,9 +713,19 @@ pub fn encode_health_request() -> Vec<u8> {
     frame(body)
 }
 
+/// Encode a complete metrics-request frame (prefix included).
+pub fn encode_metrics_request() -> Vec<u8> {
+    let mut body = Vec::with_capacity(3);
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.push(KIND_METRICS_REQ);
+    frame(body)
+}
+
 /// Encode a complete response frame (prefix included). Error messages
 /// are truncated to [`MAX_ERROR_MSG`] bytes (on a char boundary);
-/// quarantine lists are truncated to [`MAX_QUARANTINE`] entries.
+/// quarantine lists are truncated to [`MAX_QUARANTINE`] entries;
+/// metrics text is truncated to [`MAX_METRICS_TEXT`] bytes at a line
+/// boundary.
 pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtoError> {
     let mut body = Vec::new();
     body.extend_from_slice(&VERSION.to_le_bytes());
@@ -662,23 +748,8 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtoError> {
         }
         Response::Health(h) => {
             body.push(KIND_HEALTH);
-            for v in [
-                h.submitted,
-                h.completed,
-                h.rejected_busy,
-                h.errored,
-                h.timeouts,
-                h.expired,
-                h.quarantine_rejected,
-                h.malformed,
-                h.slow_clients,
-                h.conns_accepted,
-                h.conns_rejected,
-                h.panics,
-                h.queue_depth,
-                h.max_queue_depth,
-            ] {
-                body.extend_from_slice(&v.to_le_bytes());
+            for field in &HEALTH_FIELDS {
+                body.extend_from_slice(&(field.get)(h).to_le_bytes());
             }
             let entries: Vec<&QuarantinedModel> = h
                 .quarantined
@@ -692,6 +763,12 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtoError> {
                 body.extend_from_slice(&(q.model.len() as u16).to_le_bytes());
                 body.extend_from_slice(q.model.as_bytes());
             }
+        }
+        Response::Metrics(text) => {
+            body.push(KIND_METRICS);
+            let text = crate::obs::export::truncate_text(text, MAX_METRICS_TEXT);
+            body.extend_from_slice(&(text.len() as u32).to_le_bytes());
+            body.extend_from_slice(text.as_bytes());
         }
     }
     check_body_cap(&body, "response body")?;
@@ -795,6 +872,80 @@ mod tests {
         };
         let bytes = encode_response(&Response::Health(snap.clone())).unwrap();
         assert_eq!(read_response(&mut bytes.as_slice()).unwrap(), Response::Health(snap));
+    }
+
+    /// Satellite of the shared-table refactor: random snapshots must
+    /// survive encode → parse bit-for-bit. With both directions driven
+    /// by [`HEALTH_FIELDS`] a reordered row still round-trips (order
+    /// is defined once), and a dropped row fails here immediately.
+    #[test]
+    fn health_frames_roundtrip_over_random_snapshots() {
+        let mut rng = crate::prop::Rng::new(0x6EA_17B);
+        for round in 0..64 {
+            let mut snap = HealthSnapshot::default();
+            for field in &HEALTH_FIELDS {
+                *(field.slot)(&mut snap) = (rng.f64() * u32::MAX as f64) as u64;
+            }
+            let nq = (rng.f64() * 4.0) as usize;
+            snap.quarantined = (0..nq)
+                .map(|i| QuarantinedModel {
+                    model: format!("m{i}"),
+                    strikes: (rng.f64() * 9.0) as u32 + 1,
+                })
+                .collect();
+            let bytes = encode_response(&Response::Health(snap.clone())).unwrap();
+            let parsed = read_response(&mut bytes.as_slice()).unwrap();
+            assert_eq!(parsed, Response::Health(snap), "round {round} diverged");
+        }
+    }
+
+    #[test]
+    fn health_field_table_covers_every_counter_exactly_once() {
+        // Writing distinct values through the slots must read back the
+        // same values through the getters — two rows aliasing one
+        // field (or a field missing from the table) breaks this.
+        let mut snap = HealthSnapshot::default();
+        for (i, field) in HEALTH_FIELDS.iter().enumerate() {
+            *(field.slot)(&mut snap) = 100 + i as u64;
+        }
+        for (i, field) in HEALTH_FIELDS.iter().enumerate() {
+            assert_eq!((field.get)(&snap), 100 + i as u64, "field {} aliased", field.name);
+        }
+    }
+
+    #[test]
+    fn metrics_frames_roundtrip() {
+        let probe = encode_metrics_request();
+        assert_eq!(parse_incoming(&probe[HEADER_LEN..]).unwrap(), Incoming::Metrics);
+
+        let text = "# TYPE gconv_completed counter\ngconv_completed 6\n".to_string();
+        let resp = Response::Metrics(text);
+        let bytes = encode_response(&resp).unwrap();
+        assert_eq!(read_response(&mut bytes.as_slice()).unwrap(), resp);
+    }
+
+    #[test]
+    fn oversized_metrics_text_truncates_at_a_line_boundary() {
+        let line = "gconv_metric_with_a_rather_long_name 123456789\n";
+        let n = MAX_METRICS_TEXT / line.len() + 2;
+        let resp = Response::Metrics(line.repeat(n));
+        let bytes = encode_response(&resp).unwrap();
+        match read_response(&mut bytes.as_slice()).unwrap() {
+            Response::Metrics(text) => {
+                assert!(text.len() <= MAX_METRICS_TEXT);
+                assert!(text.ends_with('\n'), "truncation must cut at a line boundary");
+                assert!(text.lines().all(|l| l == line.trim_end()));
+            }
+            other => panic!("expected a metrics response, got {other:?}"),
+        }
+        // A hand-built body claiming more than the cap is refused
+        // before the text is read.
+        let mut body = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.push(KIND_METRICS);
+        body.extend_from_slice(&((MAX_METRICS_TEXT + 1) as u32).to_le_bytes());
+        let err = parse_response(&body).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
     }
 
     #[test]

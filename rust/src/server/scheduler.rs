@@ -29,7 +29,6 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -120,44 +119,117 @@ struct Job {
     data: Vec<f32>,
     reply: SyncSender<JobReply>,
     deadline: Option<Instant>,
+    /// Monotonic submit stamp: the driver records the queue-wait span
+    /// (`gconv_queue_wait_ns`) from it when the job is picked up.
+    submitted_at: Instant,
     _slot: InflightSlot,
 }
 
-/// Shared monotonic counters of the serving front (atomics — read at
-/// any time, snapshot in the final report).
-#[derive(Debug, Default)]
+/// Shared monotonic counters of the serving front. Since the obs
+/// migration every field is a handle into a per-server
+/// [`crate::obs::Registry`] (each listener gets its own, so concurrent
+/// servers in one process never co-mingle counts): the health snapshot
+/// and the kind-7 metrics exposition read the *same* storage, which is
+/// what the registry-pinning test leans on. The registry also carries
+/// the per-stage latency histograms (`read`/`queue_wait`/`eval`/
+/// `write`) the span stamps in `conn`/`scheduler` record into.
 pub struct Counters {
-    /// Jobs accepted into the queue.
-    pub submitted: AtomicU64,
-    /// Jobs answered with an output frame.
-    pub completed: AtomicU64,
-    /// Submissions rejected with `BUSY` (queue full or per-model cap).
-    pub rejected_busy: AtomicU64,
+    /// Jobs accepted into the queue (`gconv_submitted`).
+    pub submitted: Arc<crate::obs::Counter>,
+    /// Jobs answered with an output frame (`gconv_completed`).
+    pub completed: Arc<crate::obs::Counter>,
+    /// Submissions rejected with `BUSY` — queue full or per-model cap
+    /// (`gconv_rejected_busy`).
+    pub rejected_busy: Arc<crate::obs::Counter>,
     /// Jobs answered with a non-`BUSY` error frame. Accepted jobs
-    /// always resolve: `submitted == completed + errored + expired`.
-    pub errored: AtomicU64,
-    /// Requests whose reply wait exceeded the request timeout.
-    pub timeouts: AtomicU64,
-    /// Jobs whose driver-side deadline expired before evaluation
-    /// (answered `TIMEOUT`, never evaluated).
-    pub expired: AtomicU64,
-    /// Submissions refused because the model is quarantined.
-    pub quarantine_rejected: AtomicU64,
-    /// Driver panics caught by the supervisor.
-    pub panics: AtomicU64,
-    /// Frames refused as malformed/oversized.
-    pub malformed: AtomicU64,
-    /// Connections dropped for blowing a mid-frame read deadline.
-    pub slow_clients: AtomicU64,
-    /// Connections accepted.
-    pub conns_accepted: AtomicU64,
-    /// Connections refused at the connection cap.
-    pub conns_rejected: AtomicU64,
-    /// Current queue depth.
-    pub queue_depth: AtomicUsize,
-    /// High-water mark of the queue depth (must stay ≤ the configured
-    /// bound — the no-unbounded-buffering invariant).
-    pub max_queue_depth: AtomicUsize,
+    /// always resolve: `submitted == completed + errored + expired`
+    /// (`gconv_errored`).
+    pub errored: Arc<crate::obs::Counter>,
+    /// Requests whose reply wait exceeded the request timeout
+    /// (`gconv_timeouts`).
+    pub timeouts: Arc<crate::obs::Counter>,
+    /// Jobs whose driver-side deadline expired before evaluation —
+    /// answered `TIMEOUT`, never evaluated (`gconv_expired`).
+    pub expired: Arc<crate::obs::Counter>,
+    /// Submissions refused because the model is quarantined
+    /// (`gconv_quarantine_rejected`).
+    pub quarantine_rejected: Arc<crate::obs::Counter>,
+    /// Driver panics caught by the supervisor (`gconv_panics`).
+    pub panics: Arc<crate::obs::Counter>,
+    /// Frames refused as malformed/oversized (`gconv_malformed`).
+    pub malformed: Arc<crate::obs::Counter>,
+    /// Connections dropped for blowing a mid-frame read deadline
+    /// (`gconv_slow_clients`).
+    pub slow_clients: Arc<crate::obs::Counter>,
+    /// Connections accepted (`gconv_conns_accepted`).
+    pub conns_accepted: Arc<crate::obs::Counter>,
+    /// Connections refused at the connection cap
+    /// (`gconv_conns_rejected`).
+    pub conns_rejected: Arc<crate::obs::Counter>,
+    /// Current queue depth (`gconv_queue_depth`).
+    pub queue_depth: Arc<crate::obs::Gauge>,
+    /// High-water mark of the queue depth — must stay ≤ the configured
+    /// bound, the no-unbounded-buffering invariant
+    /// (`gconv_max_queue_depth`).
+    pub max_queue_depth: Arc<crate::obs::Gauge>,
+    /// Frame-read time, first byte to full frame (`gconv_read_ns`).
+    pub read_ns: Arc<crate::obs::Hist>,
+    /// Submit-to-driver-pickup queue wait (`gconv_queue_wait_ns`).
+    pub queue_wait_ns: Arc<crate::obs::Hist>,
+    /// Engine-side per-request evaluation latency (`gconv_eval_ns`).
+    pub eval_ns: Arc<crate::obs::Hist>,
+    /// Reply-write time (`gconv_write_ns`).
+    pub write_ns: Arc<crate::obs::Hist>,
+    registry: Arc<crate::obs::Registry>,
+}
+
+impl Counters {
+    /// Build the counter set over a fresh per-server registry. Metric
+    /// names are `gconv_` + the [`super::protocol::HEALTH_FIELDS`]
+    /// field name, so the snapshot and the exposition line up by
+    /// construction.
+    pub fn new() -> Counters {
+        let registry = Arc::new(crate::obs::Registry::new());
+        Counters {
+            submitted: registry.counter("gconv_submitted"),
+            completed: registry.counter("gconv_completed"),
+            rejected_busy: registry.counter("gconv_rejected_busy"),
+            errored: registry.counter("gconv_errored"),
+            timeouts: registry.counter("gconv_timeouts"),
+            expired: registry.counter("gconv_expired"),
+            quarantine_rejected: registry.counter("gconv_quarantine_rejected"),
+            panics: registry.counter("gconv_panics"),
+            malformed: registry.counter("gconv_malformed"),
+            slow_clients: registry.counter("gconv_slow_clients"),
+            conns_accepted: registry.counter("gconv_conns_accepted"),
+            conns_rejected: registry.counter("gconv_conns_rejected"),
+            queue_depth: registry.gauge("gconv_queue_depth"),
+            max_queue_depth: registry.gauge("gconv_max_queue_depth"),
+            read_ns: registry.hist("gconv_read_ns"),
+            queue_wait_ns: registry.hist("gconv_queue_wait_ns"),
+            eval_ns: registry.hist("gconv_eval_ns"),
+            write_ns: registry.hist("gconv_write_ns"),
+            registry,
+        }
+    }
+
+    /// The per-server registry backing these counters.
+    pub fn registry(&self) -> &crate::obs::Registry {
+        &self.registry
+    }
+
+    /// The kind-7 metrics-frame body: this server's registry followed
+    /// by the process-global engine-side registry (kernel, session,
+    /// pool, engine metrics). Name sets are disjoint by convention.
+    pub fn metrics_text(&self) -> String {
+        format!("{}{}", self.registry.render_text(), crate::obs::global().render_text())
+    }
+}
+
+impl Default for Counters {
+    fn default() -> Counters {
+        Counters::new()
+    }
 }
 
 /// Per-model panic strikes and the quarantine policy. Shared between
@@ -243,7 +315,7 @@ impl SchedulerHandle {
         data: Vec<f32>,
     ) -> Result<Receiver<JobReply>, (ErrorCode, String)> {
         if self.quarantine.is_quarantined(model) {
-            self.counters.quarantine_rejected.fetch_add(1, Ordering::Relaxed);
+            self.counters.quarantine_rejected.inc();
             return Err((
                 ErrorCode::Quarantined,
                 format!(
@@ -256,7 +328,7 @@ impl SchedulerHandle {
         let slot = match InflightSlot::acquire(&self.inflight, model, self.per_model_cap) {
             Ok(slot) => slot,
             Err(n) => {
-                self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                self.counters.rejected_busy.inc();
                 let cap = self.per_model_cap;
                 return Err((
                     ErrorCode::Busy,
@@ -270,18 +342,19 @@ impl SchedulerHandle {
             data,
             reply,
             deadline: self.deadline.map(|d| Instant::now() + d),
+            submitted_at: Instant::now(),
             _slot: slot,
         };
         match self.tx.try_send(job) {
             Ok(()) => {
-                let depth = self.counters.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
-                self.counters.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
-                self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                let depth = self.counters.queue_depth.inc_and_get();
+                self.counters.max_queue_depth.maximize(depth);
+                self.counters.submitted.inc();
                 Ok(rx)
             }
             // The unsent job (and its slot) drops here — no leak.
             Err(TrySendError::Full(_)) => {
-                self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                self.counters.rejected_busy.inc();
                 Err((ErrorCode::Busy, "submission queue is full — retry later".into()))
             }
             Err(TrySendError::Disconnected(_)) => Err((
@@ -296,20 +369,20 @@ impl SchedulerHandle {
     pub fn health(&self) -> HealthSnapshot {
         let c = &self.counters;
         HealthSnapshot {
-            submitted: c.submitted.load(Ordering::Relaxed),
-            completed: c.completed.load(Ordering::Relaxed),
-            rejected_busy: c.rejected_busy.load(Ordering::Relaxed),
-            errored: c.errored.load(Ordering::Relaxed),
-            timeouts: c.timeouts.load(Ordering::Relaxed),
-            expired: c.expired.load(Ordering::Relaxed),
-            quarantine_rejected: c.quarantine_rejected.load(Ordering::Relaxed),
-            malformed: c.malformed.load(Ordering::Relaxed),
-            slow_clients: c.slow_clients.load(Ordering::Relaxed),
-            conns_accepted: c.conns_accepted.load(Ordering::Relaxed),
-            conns_rejected: c.conns_rejected.load(Ordering::Relaxed),
-            panics: c.panics.load(Ordering::Relaxed),
-            queue_depth: c.queue_depth.load(Ordering::Relaxed) as u64,
-            max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed) as u64,
+            submitted: c.submitted.get(),
+            completed: c.completed.get(),
+            rejected_busy: c.rejected_busy.get(),
+            errored: c.errored.get(),
+            timeouts: c.timeouts.get(),
+            expired: c.expired.get(),
+            quarantine_rejected: c.quarantine_rejected.get(),
+            malformed: c.malformed.get(),
+            slow_clients: c.slow_clients.get(),
+            conns_accepted: c.conns_accepted.get(),
+            conns_rejected: c.conns_rejected.get(),
+            panics: c.panics.get(),
+            queue_depth: c.queue_depth.get(),
+            max_queue_depth: c.max_queue_depth.get(),
             quarantined: self.quarantine.snapshot(),
         }
     }
@@ -330,10 +403,23 @@ fn map_engine_error(e: &anyhow::Error) -> (ErrorCode, String) {
     (code, format!("{e:#}"))
 }
 
+/// Record a failed wave against the model's error histogram
+/// (`gconv_model_error_ns_<model>`, registered lazily on the server's
+/// registry — the error path is cold, so the name lookup is fine
+/// here). The histogram's `_count` is the per-model error count the
+/// chaos suite asserts on; the recorded value is the wave duration at
+/// failure.
+fn record_model_error(counters: &Counters, model: &str, wave_span: &crate::obs::Span) {
+    counters
+        .registry()
+        .hist(&format!("gconv_model_error_ns_{model}"))
+        .record(wave_span.elapsed_ns());
+}
+
 /// Answer one accepted job with a structured error (its slot releases
 /// as the job drops).
 fn fail(job: Job, code: ErrorCode, message: String, counters: &Counters) {
-    counters.errored.fetch_add(1, Ordering::Relaxed);
+    counters.errored.inc();
     let _ = job.reply.send(Err((code, message)));
 }
 
@@ -383,7 +469,7 @@ fn drive(
         while let Ok(job) = rx.try_recv() {
             wave.push(job);
         }
-        counters.queue_depth.fetch_sub(wave.len(), Ordering::Relaxed);
+        counters.queue_depth.sub(wave.len() as u64);
         for (model, jobs) in group_by_model(wave) {
             serve_group(&mut engine, &model, jobs, &mut next_id, &counters, &quarantine);
         }
@@ -441,7 +527,7 @@ fn serve_group(
     for job in jobs {
         match job.deadline {
             Some(d) if now >= d => {
-                counters.expired.fetch_add(1, Ordering::Relaxed);
+                counters.expired.inc();
                 let _ = job.reply.send(Err((
                     ErrorCode::Timeout,
                     "request deadline expired before evaluation".into(),
@@ -450,8 +536,14 @@ fn serve_group(
             _ => live.push_back(job),
         }
     }
+    // Queue-wait span: submit stamp to driver pickup, per live job.
+    for job in &live {
+        let waited = now.saturating_duration_since(job.submitted_at);
+        counters.queue_wait_ns.record(u64::try_from(waited.as_nanos()).unwrap_or(u64::MAX));
+    }
     let mut todo = live;
     let mut pending: HashMap<u64, Job> = HashMap::new();
+    let wave_span = crate::obs::Span::start();
     let drained = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<Vec<EngineResponse>> {
         faults::trip_scoped(faults::SITE_SCHEDULER_WAVE, model)?;
         while let Some(mut job) = todo.pop_front() {
@@ -474,7 +566,8 @@ fn serve_group(
         Ok(Ok(responses)) => {
             for r in responses {
                 if let Some(job) = pending.remove(&r.id) {
-                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                    counters.completed.inc();
+                    counters.eval_ns.record((r.latency_s * 1e9) as u64);
                     let _ = job.reply.send(Ok(r.data));
                 }
             }
@@ -483,6 +576,7 @@ fn serve_group(
             // The engine failed gracefully mid-group. Purge the model's
             // queued/cached engine state so a persistent failure cannot
             // wedge later waves, and answer the whole group.
+            record_model_error(counters, model, &wave_span);
             engine.purge(model);
             let msg = format!("engine drain failed: {e:#}");
             for job in todo {
@@ -497,7 +591,8 @@ fn serve_group(
             // answered `INTERNAL`, the model's engine state is rebuilt
             // from its registered builder on next use, and repeated
             // panics quarantine the model.
-            counters.panics.fetch_add(1, Ordering::Relaxed);
+            counters.panics.inc();
+            record_model_error(counters, model, &wave_span);
             let strikes = quarantine.strike(model);
             engine.purge(model);
             let msg = if quarantine.is_quarantined(model) {
@@ -595,7 +690,7 @@ mod tests {
         let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         let out = reply.expect("job must succeed");
         assert_eq!(out.len(), 3);
-        assert_eq!(counters.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.completed.get(), 1);
         drop(handle);
         let _ = driver.join().unwrap();
     }
@@ -618,8 +713,8 @@ mod tests {
         let _b = handle.submit("tiny", vec![0.0; 32]).unwrap();
         let err = handle.submit("tiny", vec![0.0; 32]).unwrap_err();
         assert_eq!(err.0, ErrorCode::Busy);
-        assert_eq!(counters.rejected_busy.load(Ordering::Relaxed), 1);
-        assert_eq!(counters.max_queue_depth.load(Ordering::Relaxed), 2);
+        assert_eq!(counters.rejected_busy.get(), 1);
+        assert_eq!(counters.max_queue_depth.get(), 2);
         // The rejected submission must not leak an in-flight slot.
         assert_eq!(inflight_of(&handle, "tiny"), 2);
     }
@@ -662,7 +757,7 @@ mod tests {
         let _b = handle.submit("tiny", vec![0.5; 32]).unwrap();
         drop(handle);
         let _ = driver.join().unwrap();
-        assert_eq!(counters.completed.load(Ordering::Relaxed), 4);
+        assert_eq!(counters.completed.get(), 4);
     }
 
     #[test]
@@ -681,7 +776,7 @@ mod tests {
             .unwrap()
             .expect_err("bad shape must fail");
         assert_eq!(code, ErrorCode::BadShape);
-        assert_eq!(counters.errored.load(Ordering::Relaxed), 2);
+        assert_eq!(counters.errored.get(), 2);
         // Failed jobs release their admission slots.
         wait_for_drained_inflight(&handle, "tiny");
         drop(handle);
@@ -703,8 +798,8 @@ mod tests {
         }
         let engine = driver.join().unwrap();
         assert_eq!(engine.stats().requests, 4);
-        assert_eq!(counters.completed.load(Ordering::Relaxed), 4);
-        assert_eq!(counters.queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(counters.completed.get(), 4);
+        assert_eq!(counters.queue_depth.get(), 0);
     }
 
     #[test]
@@ -725,8 +820,8 @@ mod tests {
         drop(handle);
         let engine = driver.join().unwrap();
         assert_eq!(engine.stats().requests, 0, "expired jobs are skipped before eval");
-        assert_eq!(counters.expired.load(Ordering::Relaxed), 1);
-        assert_eq!(counters.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(counters.expired.get(), 1);
+        assert_eq!(counters.completed.get(), 0);
     }
 
     #[test]
@@ -750,7 +845,7 @@ mod tests {
             .expect_err("the panicked wave must fail structurally");
         assert_eq!(code, ErrorCode::Internal);
         assert!(msg.contains("panicked"), "{msg}");
-        assert_eq!(counters.panics.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.panics.get(), 1);
         // No supervision: the model is NOT quarantined, and the purged
         // engine state rebuilds on the next request (the one-shot
         // trigger has already fired).

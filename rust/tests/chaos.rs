@@ -191,6 +191,38 @@ fn panicking_model_is_quarantined_while_others_keep_serving() {
     drop(guard);
 }
 
+// ------------------------------------------------------ metrics
+
+#[test]
+fn injected_panics_surface_in_the_metrics_frame() {
+    let _seq = SEQ.lock().unwrap_or_else(|e| e.into_inner());
+    faults::silence_injected_panics();
+
+    let guard = FaultPlan::new(33)
+        .with(rule(faults::SITE_SERVE_STEP, Some("bad"), FaultKind::Panic, Trigger::Nth(1)))
+        .arm();
+    let handle = serve("127.0.0.1:0", chaos_engine(4), ServerConfig::default())
+        .expect("bind an ephemeral port");
+    let mut client = connect(&handle);
+    let x = sample(0x0B5_BAD);
+    let (outcome, _) = classify(client.request("bad", &SAMPLE_DIMS, &x).expect("reply"));
+    assert_eq!(outcome, Outcome::Internal, "the panicked wave must fail structurally");
+
+    // The caught panic is visible on the kind-7 exposition: the panic
+    // and error counters tick, and the per-model error histogram names
+    // the model whose wave died.
+    let text = client.metrics().expect("metrics frame");
+    let scraped = |name: &str| gconv_chain::obs::export::scrape(&text, name);
+    assert_eq!(scraped("gconv_panics"), Some(1), "{text}");
+    assert_eq!(scraped("gconv_errored"), Some(1), "{text}");
+    assert_eq!(scraped("gconv_model_error_ns_bad_count"), Some(1), "{text}");
+
+    drop(client);
+    let report = handle.shutdown().expect("clean shutdown");
+    assert_eq!(report.panics, 1);
+    drop(guard);
+}
+
 // ------------------------------------------------------ soak
 
 /// The full randomized soak: three concurrent clients, mixed traffic

@@ -144,6 +144,49 @@ fn one_connection_can_issue_many_requests_and_survive_request_errors() {
     assert_eq!(report.errored, 2);
 }
 
+#[test]
+fn metrics_frame_matches_the_health_snapshot_field_for_field() {
+    use gconv_chain::obs::export::scrape;
+    use gconv_chain::server::protocol::HEALTH_FIELDS;
+
+    let inputs: Vec<Vec<f32>> = (0..3).map(|i| sample(0x0B5 ^ i as u64)).collect();
+    let reference = reference_outputs(&inputs);
+    let handle = start(tiny_engine(2), ServerConfig::default());
+    let mut client =
+        Client::connect_retry(&handle.addr().to_string(), Duration::from_secs(10)).unwrap();
+    // A known workload: three served requests and one structured error.
+    for (i, x) in inputs.iter().enumerate() {
+        let out = client.infer("tiny", &SAMPLE_DIMS, x).unwrap();
+        assert!(bits_eq(&out, &reference[i]));
+    }
+    match client.request("no-such-model", &SAMPLE_DIMS, &inputs[0]).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::UnknownModel),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // The kind-7 exposition and the health snapshot are two views of
+    // one registry: every wire health field must scrape back
+    // identically under its `gconv_` metric name.
+    let text = client.metrics().expect("metrics frame");
+    let h = client.health().expect("health frame");
+    for field in HEALTH_FIELDS {
+        assert_eq!(
+            scrape(&text, &format!("gconv_{}", field.name)),
+            Some((field.get)(&h)),
+            "field {} diverged between the exposition and the snapshot:\n{text}",
+            field.name
+        );
+    }
+    // The stage histograms observed the served requests: one eval span
+    // per completion, one read span per inbound frame (4 requests plus
+    // the metrics probe itself).
+    assert_eq!(scrape(&text, "gconv_eval_ns_count"), Some(3));
+    assert!(scrape(&text, "gconv_read_ns_count").unwrap_or(0) >= 4, "{text}");
+    let report = handle.shutdown().unwrap();
+    // Status frames are budget-exempt: the report counts inferences.
+    assert_eq!(report.served, 3);
+    assert_eq!(report.errored, 1);
+}
+
 // -------------------------------------------------------- hardening
 
 #[test]
